@@ -1,0 +1,58 @@
+//! Bench: regenerate Figure 1 (DIANA+ importance vs DIANA+ uniform vs
+//! DIANA uniform, τ = 1) and report rounds/coords-to-target plus wall
+//! time per method — the end-to-end series the paper plots.
+//!
+//!     cargo bench --bench fig1_variance_reduction
+//!     SMX_BENCH_DATASETS=a1a,mushrooms cargo bench --bench fig1_variance_reduction
+
+use smx::config::ExperimentConfig;
+use smx::experiments::runner;
+use smx::sampling::SamplingKind;
+use smx::util::bench::bench_once;
+
+fn main() -> anyhow::Result<()> {
+    let datasets = std::env::var("SMX_BENCH_DATASETS")
+        .unwrap_or_else(|_| "phishing,mushrooms".to_string());
+    println!("== Figure 1 bench: variance reduction + matrix-aware sparsification (τ=1) ==\n");
+    for ds in datasets.split(',') {
+        let cfg = ExperimentConfig {
+            dataset: ds.trim().to_string(),
+            tau: 1.0,
+            max_rounds: 40_000,
+            target_residual: 1e-10,
+            record_every: 50,
+            out_dir: "results/bench".into(),
+            ..Default::default()
+        };
+        let (prep, _) = bench_once(&format!("[{ds}] prepare + x*"), || {
+            runner::prepare(&cfg).unwrap()
+        });
+        println!(
+            "[{ds}] d={} n={} | variant                      rounds→1e-8      coords→1e-8     wall",
+            prep.sm.dim,
+            prep.sm.n()
+        );
+        for (label, method, sampling) in [
+            ("diana+-importance", "diana+", SamplingKind::ImportanceDiana),
+            ("diana+-uniform", "diana+", SamplingKind::Uniform),
+            ("diana-uniform", "diana", SamplingKind::Uniform),
+        ] {
+            let (r, secs) = bench_once(&format!("[{ds}] {label}"), || {
+                runner::run_one(&prep, &cfg, method, sampling, 1.0).unwrap()
+            });
+            let eps = 1e-8;
+            match (r.rounds_to(eps), r.coords_to(eps)) {
+                (Some(it), Some(c)) => println!(
+                    "    {label:<28} {it:>10}   {c:>14}   {secs:>8.2}s"
+                ),
+                _ => println!(
+                    "    {label:<28} not reached ({:.2e} after {})",
+                    r.final_residual(),
+                    r.rounds_run
+                ),
+            }
+        }
+        println!();
+    }
+    Ok(())
+}

@@ -1,0 +1,52 @@
+//! Bench: regenerate Figures 3 & 4 (effect of τ on DIANA+ convergence, in
+//! rounds and in coordinates sent). The paper's claim: iteration count is
+//! flat until τ crosses a threshold (smaller for importance sampling), so
+//! total uplink communication *decreases* as τ shrinks.
+//!
+//!     cargo bench --bench fig34_tau_sweep
+
+use smx::config::ExperimentConfig;
+use smx::experiments::runner;
+use smx::sampling::SamplingKind;
+use smx::util::bench::bench_once;
+
+fn main() -> anyhow::Result<()> {
+    let ds = std::env::var("SMX_BENCH_DATASETS").unwrap_or_else(|_| "phishing".to_string());
+    let ds = ds.split(',').next().unwrap().trim().to_string();
+    let cfg = ExperimentConfig {
+        dataset: ds.clone(),
+        max_rounds: 60_000,
+        target_residual: 1e-9,
+        record_every: 100,
+        out_dir: "results/bench".into(),
+        ..Default::default()
+    };
+    let (prep, _) = bench_once(&format!("[{ds}] prepare + x*"), || {
+        runner::prepare(&cfg).unwrap()
+    });
+    let d = prep.sm.dim as f64;
+    let eps = 1e-8;
+
+    println!("\n== Figures 3+4 bench: τ-sweep on {ds} (d = {}) ==", prep.sm.dim);
+    println!("tau      sampling     rounds→{eps:.0e}   coords→{eps:.0e}     wall");
+    for tau in [1.0, 2.0, 4.0, 8.0, (d / 4.0).max(1.0).floor(), d] {
+        for (sname, skind) in [
+            ("importance", SamplingKind::ImportanceDiana),
+            ("uniform", SamplingKind::Uniform),
+        ] {
+            let (r, secs) = bench_once(&format!("[{ds}] tau={tau} {sname}"), || {
+                runner::run_one(&prep, &cfg, "diana+", skind, tau).unwrap()
+            });
+            match (r.rounds_to(eps), r.coords_to(eps)) {
+                (Some(it), Some(c)) =>
+
+                    println!("{tau:<8} {sname:<12} {it:>10}   {c:>14}   {secs:>7.2}s"),
+                _ => println!(
+                    "{tau:<8} {sname:<12} not reached ({:.2e})",
+                    r.final_residual()
+                ),
+            }
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,47 @@
+//! Bench: regenerate Figure 5 (Appendix C lower bounds) — measure the
+//! (α, bits) trade-off points for random and top-k sparsification on
+//! Gaussian vectors, check Theorem 14 empirically, and time the
+//! compressors themselves.
+//!
+//!     cargo bench --bench fig5_lower_bounds
+
+use smx::compress::{lowerbound, topk_compress, SparseMsg};
+use smx::util::bench::{bench, black_box};
+use smx::util::rng::Rng;
+
+fn main() {
+    let d = 1000;
+    let mut rng = Rng::new(55);
+
+    println!("== Figure 5 bench: linear-compressor lower bound ==\n");
+    println!("scheme   param   alpha     beta      alpha+beta  alpha*4^(b/d)");
+    let mut min_linear = f64::MAX;
+    for &q in &[0.05, 0.1, 0.2, 0.3, 0.5, 0.7, 0.9] {
+        let p = lowerbound::random_sparsification_point(d, q, &mut rng);
+        min_linear = min_linear.min(p.linear_lb);
+        println!(
+            "random   {q:<6.2} {:<9.4} {:<9.4} {:<11.4} {:<12.4}",
+            p.alpha, p.beta, p.linear_lb, p.general_up
+        );
+    }
+    for &k in &[50usize, 100, 200, 400, 700, 900] {
+        let p = lowerbound::topk_point(d, k, &mut rng);
+        println!(
+            "topk     {:<6.2} {:<9.4} {:<9.4} {:<11.4} {:<12.4}",
+            p.param, p.alpha, p.beta, p.linear_lb, p.general_up
+        );
+    }
+    println!("\nTheorem 14 check: min(α+β) over linear points = {min_linear:.4} (must be ≳ 1)");
+    assert!(min_linear > 0.95, "linear lower bound violated");
+
+    println!("\ncompressor micro-benches (d = {d}):");
+    let x: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+    let mut msg = SparseMsg::new();
+    bench("topk_compress k=100", 200, || {
+        topk_compress(black_box(&x), 100, &mut msg);
+    });
+    let s = smx::sampling::IndependentSampling::uniform(d, 100.0);
+    bench("sketch_compress tau=100", 200, || {
+        smx::compress::sketch_compress(black_box(&x), &s, &mut rng, &mut msg);
+    });
+}

@@ -1,0 +1,112 @@
+//! Hot-path micro-benches (§Perf): the per-round cost centers of the
+//! three-layer stack, native and PJRT.
+//!
+//!   worker:  grad (native CSR)  |  grad (PJRT artifact)  |  whiten L^{†1/2}v
+//!   server:  sparse decompress L^{1/2}Δ  |  full server apply
+//!   sampling: Bernoulli draw + water-filling solve
+//!
+//!     cargo bench --bench hotpath
+
+use smx::compress::{MatrixAware, SparseMsg};
+use smx::data::synth;
+use smx::objective::smoothness::build_local;
+use smx::runtime::artifact::Manifest;
+use smx::runtime::native::NativeEngine;
+use smx::runtime::pjrt::PjrtEngine;
+use smx::runtime::GradEngine;
+use smx::sampling::{solvers, IndependentSampling};
+use smx::util::bench::{bench, black_box};
+use smx::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Rng::new(7);
+
+    // a8a-scale shard: m=2837, d=123 (the e2e workload)
+    let spec = synth::spec_by_name("a8a").unwrap();
+    let ds = synth::generate(spec, 1);
+    let (_, shards) = ds.prepare(spec.n, 1);
+    let shard = &shards[0];
+    let (m, d) = (shard.num_points(), shard.dim());
+    println!("== hot path micro-benches (a8a shard: m={m}, d={d}) ==\n");
+
+    let x: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+    let mut g = vec![0.0; d];
+
+    // L1/L2 gradient: native vs PJRT
+    let mut native = NativeEngine::from_shard(shard, 1e-3);
+    bench("grad native (CSR fused)", 300, || {
+        native.grad_into(black_box(&x), &mut g);
+    });
+    match Manifest::load(&smx::runtime::artifact::default_dir()) {
+        Ok(manifest) => {
+            let mut pjrt = PjrtEngine::from_shard(&manifest, shard, 1e-3)?;
+            bench("grad pjrt (AOT JAX/Pallas artifact)", 300, || {
+                pjrt.grad_into(black_box(&x), &mut g);
+            });
+        }
+        Err(e) => println!("(skipping pjrt: {e})"),
+    }
+
+    // smoothness root application (worker whiten + server decompress)
+    let loc = build_local(&shard.a, 1e-3);
+    let mut w = vec![0.0; d];
+    bench("whiten L^(-1/2) v (dense root, d=123)", 200, || {
+        loc.root.apply_pow_into(-0.5, black_box(&x), &mut w);
+    });
+    // §Perf reference: the pre-optimization column-strided V access,
+    // re-materialized here so before/after stays measurable
+    if let smx::linalg::PsdRoot::Dense { eig, dim, .. } = &loc.root {
+        let n = *dim;
+        let mut coeff = vec![0.0; n];
+        bench("whiten strided (pre-opt reference)", 200, || {
+            let xb = black_box(&x);
+            for c in 0..n {
+                let mut s = 0.0;
+                for r in 0..n {
+                    s += eig.v[(r, c)] * xb[r];
+                }
+                coeff[c] = s * eig.w[c].max(0.0).powf(-0.5);
+            }
+            for r in 0..n {
+                let mut s = 0.0;
+                for c in 0..n {
+                    s += eig.v[(r, c)] * coeff[c];
+                }
+                w[r] = s;
+            }
+        });
+    }
+
+    let sampling = IndependentSampling::uniform(d, 4.0);
+    let mut ma = MatrixAware::new(sampling.clone());
+    let mut msg = SparseMsg::new();
+    bench("worker compress (whiten + sketch, tau=4)", 200, || {
+        ma.compress(&loc.root, black_box(&x), &mut rng, &mut msg);
+    });
+    bench("server decompress L^(1/2) Δ (sparse, tau=4)", 200, || {
+        loc.root
+            .apply_pow_sparse_into(0.5, black_box(&msg.idx), &msg.val, &mut g);
+    });
+
+    // duke-scale low-rank root (d=7129, k=11)
+    let duke = synth::spec_by_name("duke").unwrap();
+    let dds = synth::generate(duke, 1);
+    let (_, dshards) = dds.prepare(duke.n, 1);
+    let dloc = build_local(&dshards[0].a, 1e-3);
+    let dx: Vec<f64> = (0..dshards[0].dim()).map(|_| rng.normal()).collect();
+    let mut dw = vec![0.0; dshards[0].dim()];
+    bench("whiten low-rank root (duke d=7129 k~11)", 200, || {
+        dloc.root.apply_pow_into(-0.5, black_box(&dx), &mut dw);
+    });
+
+    // sampling machinery
+    let mut buf = Vec::new();
+    bench("bernoulli sample d=123 tau=4", 100, || {
+        sampling.sample_into(&mut rng, &mut buf);
+    });
+    bench("water-filling solve (eq.19, d=123)", 100, || {
+        black_box(solvers::probs_diana_plus(&loc.diag, 4.0, 1e-3, 8));
+    });
+
+    Ok(())
+}

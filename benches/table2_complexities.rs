@@ -1,0 +1,54 @@
+//! Bench: regenerate Table 2 — compute every constant (L, L_max, ν, ν₁,
+//! ν₂, ω, 𝓛̃_max uniform/importance) and the predicted iteration
+//! complexities of all six methods per dataset, then verify the headline
+//! prediction (the "+" speedup factor up to min(n, d)) against a measured
+//! run on one dataset.
+//!
+//!     cargo bench --bench table2_complexities
+
+use smx::config::ExperimentConfig;
+use smx::experiments::{runner, tables};
+use smx::sampling::SamplingKind;
+use smx::util::bench::bench_once;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = ExperimentConfig {
+        out_dir: "results/bench".into(),
+        ..Default::default()
+    };
+    let datasets: Vec<String> = std::env::var("SMX_BENCH_DATASETS")
+        .unwrap_or_else(|_| "a1a,mushrooms,phishing,madelon,duke,a8a".to_string())
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .collect();
+
+    println!("== Table 2 bench: constants + predicted complexities ==\n");
+    let (_, secs) = bench_once("table2 (all constants, all datasets)", || {
+        tables::table2(&cfg, &datasets).unwrap()
+    });
+    println!("\n(constants computed in {secs:.1}s — includes 𝓛̃ water-filling per worker)\n");
+
+    // measured sanity: predicted DIANA+ >~1 speedup should materialize
+    let mut c = cfg.clone();
+    c.dataset = "phishing".into();
+    c.tau = 1.0;
+    c.max_rounds = 40_000;
+    c.target_residual = 1e-10;
+    c.record_every = 100;
+    let prep = runner::prepare(&c)?;
+    let (r_base, _) = bench_once("measured: diana (uniform)", || {
+        runner::run_one(&prep, &c, "diana", SamplingKind::Uniform, 1.0).unwrap()
+    });
+    let (r_plus, _) = bench_once("measured: diana+ (importance)", || {
+        runner::run_one(&prep, &c, "diana+", SamplingKind::ImportanceDiana, 1.0).unwrap()
+    });
+    let eps = 1e-8;
+    if let (Some(b), Some(p)) = (r_base.rounds_to(eps), r_plus.rounds_to(eps)) {
+        println!(
+            "\nmeasured speedup on phishing: {:.2}x (predicted up to min(n,d) = {})",
+            b as f64 / p as f64,
+            prep.sm.n().min(prep.sm.dim)
+        );
+    }
+    Ok(())
+}

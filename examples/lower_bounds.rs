@@ -1,0 +1,46 @@
+//! Lower-bound laboratory (Appendix C / Figure 5): measure the
+//! variance-vs-communication trade-off of linear sparsifiers on Gaussian
+//! vectors and verify Theorem 14's bound α + β ≥ 1 empirically.
+//!
+//!     cargo run --release --example lower_bounds
+
+use smx::compress::lowerbound;
+use smx::util::rng::Rng;
+
+fn main() {
+    let d = 1000;
+    let mut rng = Rng::new(2026);
+
+    println!("random q-sparsification of N(0,1)^{d} (optimal linear scheme, Thm 15):");
+    println!("  q      α (≈1−q)   β          α+β (≥1)   α·4^(b/d)");
+    let mut worst_linear = f64::MAX;
+    for &q in &[0.05, 0.1, 0.25, 0.5, 0.75, 0.9] {
+        let p = lowerbound::random_sparsification_point(d, q, &mut rng);
+        worst_linear = worst_linear.min(p.linear_lb);
+        println!(
+            "  {:<5.2} {:<10.4} {:<10.4} {:<10.4} {:<12.4}",
+            q, p.alpha, p.beta, p.linear_lb, p.general_up
+        );
+    }
+    println!("  ⇒ min(α+β) = {worst_linear:.4} — Theorem 14 demands ≥ 1 for linear compressors");
+    println!(
+        "  ⇒ and stays ≤ 1 + H₂(q)/32 ≈ {:.4} at worst (near-optimality, §C.5)",
+        1.0 + lowerbound::h2(0.5) / 32.0
+    );
+
+    println!("\ngreedy top-k (nonlinear comparator):");
+    println!("  k/d    α          β          α+β        α·4^(b/d)");
+    for &k in &[50usize, 150, 300, 500, 800] {
+        let p = lowerbound::topk_point(d, k, &mut rng);
+        println!(
+            "  {:<5.2} {:<10.4} {:<10.4} {:<10.4} {:<12.4}",
+            p.param, p.alpha, p.beta, p.linear_lb, p.general_up
+        );
+    }
+    println!(
+        "\nreading: top-k dips *below* α+β = 1 (it adapts the sketch to x, so the\n\
+         linear bound does not apply), while every random-sparsification point\n\
+         sits on/above it — exactly the separation Figure 5 plots. The general\n\
+         uncertainty principle α·4^(b/d) ≥ 1 is far looser for both."
+    );
+}

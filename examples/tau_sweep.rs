@@ -1,0 +1,48 @@
+//! τ-sweep demo (the Figure-3/4 story): sparsification is free until τ
+//! drops below a threshold; DIANA+ keeps the iteration complexity while
+//! slashing worker→server communication.
+//!
+//!     cargo run --release --example tau_sweep [-- --dataset phishing]
+
+use smx::config::ExperimentConfig;
+use smx::experiments::runner;
+use smx::sampling::SamplingKind;
+use smx::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    smx::util::log::init_from_env();
+    let args = Args::from_env(false);
+    let cfg = ExperimentConfig {
+        dataset: args.str_or("dataset", "phishing"),
+        max_rounds: args.usize_or("rounds", 60_000),
+        target_residual: 1e-9,
+        record_every: 100,
+        ..Default::default()
+    };
+    let prep = runner::prepare(&cfg)?;
+    let d = prep.sm.dim as f64;
+
+    let taus = [1.0, 2.0, 4.0, 8.0, (d / 4.0).floor(), d];
+    let eps = 1e-8;
+    println!(
+        "DIANA+ on {} (d = {}, n = {}): rounds & uplink coords to residual ≤ {eps:.0e}\n",
+        cfg.dataset, prep.sm.dim, prep.sm.n()
+    );
+    println!("tau        importance: rounds / coords        uniform: rounds / coords");
+    for &tau in &taus {
+        let tau = tau.max(1.0);
+        let imp = runner::run_one(&prep, &cfg, "diana+", SamplingKind::ImportanceDiana, tau)?;
+        let uni = runner::run_one(&prep, &cfg, "diana+", SamplingKind::Uniform, tau)?;
+        let fmt = |r: &smx::coordinator::RunResult| match (r.rounds_to(eps), r.coords_to(eps)) {
+            (Some(it), Some(c)) => format!("{it:>7} / {c:>11}"),
+            _ => format!("   — ({:.1e})", r.final_residual()),
+        };
+        println!("{tau:<8}   {:<32}   {}", fmt(&imp), fmt(&uni));
+    }
+    println!(
+        "\nreading: rounds should stay ~flat down to a τ threshold (smaller for\n\
+         importance sampling), so coords-to-target *decreases* as τ shrinks —\n\
+         the paper's 'communication is almost free' regime (Figures 3-4)."
+    );
+    Ok(())
+}

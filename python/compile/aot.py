@@ -1,0 +1,91 @@
+"""AOT pipeline: lower the L2 model (with L1 Pallas kernels) to HLO text.
+
+Run by `make artifacts`:
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Shapes come from `python/compile/shapes.json` (one entry per shard shape
+used by the Rust tests/examples/benches) or `--shapes m:d,m:d,...`.
+
+HLO **text** is the interchange format: jax ≥ 0.5 serializes
+HloModuleProto with 64-bit instruction ids which the `xla` crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser on
+the Rust side reassigns ids (see /opt/xla-example/README.md).
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(fn, specs) -> str:
+    lowered = jax.jit(fn).lower(*specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def default_shapes():
+    here = os.path.dirname(os.path.abspath(__file__))
+    path = os.path.join(here, "shapes.json")
+    with open(path) as f:
+        spec = json.load(f)
+    return [(e["m"], e["d"]) for e in spec["shapes"]], spec.get(
+        "kinds", ["grad", "loss"]
+    )
+
+
+def parse_shapes(arg: str):
+    out = []
+    for tok in arg.split(","):
+        m, d = tok.strip().split(":")
+        out.append((int(m), int(d)))
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--shapes", default=None, help="m:d,m:d,... (overrides shapes.json)")
+    ap.add_argument("--kinds", default=None, help="comma list from grad,loss,wgrad")
+    args = ap.parse_args()
+
+    shapes, kinds = default_shapes()
+    if args.shapes:
+        shapes = parse_shapes(args.shapes)
+    if args.kinds:
+        kinds = [k.strip() for k in args.kinds.split(",")]
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    entries = []
+    for m, d in shapes:
+        for kind in kinds:
+            fn = model.ENTRY_POINTS[kind]
+            specs = model.specs_for(kind, m, d)
+            text = to_hlo_text(fn, specs)
+            fname = f"{kind}_m{m}_d{d}.hlo.txt"
+            with open(os.path.join(args.out_dir, fname), "w") as f:
+                f.write(text)
+            entries.append({"kind": kind, "m": m, "d": d, "file": fname})
+            print(f"  lowered {kind} m={m} d={d} -> {fname} ({len(text)} chars)")
+
+    manifest = {"version": 1, "dtype": "f64", "entries": entries}
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {len(entries)} artifacts + manifest.json to {args.out_dir}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

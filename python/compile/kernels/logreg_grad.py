@@ -1,0 +1,105 @@
+"""L1 Pallas kernel: fused logistic-regression gradient data term.
+
+Computes g = (1/m) Aᵀ(b ∘ σ(b ∘ Ax)) with the data matrix streamed through
+VMEM in (block_m × d) row tiles. Both phases of each tile are matmuls
+(A_blk·x and A_blkᵀ·s), i.e. MXU work on a real TPU; the sigmoid is a VPU
+elementwise pass over the block's margins.
+
+TPU adaptation notes (DESIGN.md §Hardware-Adaptation):
+  * BlockSpec tiles A by rows so each grid step holds one
+    (block_m × d) f64 tile in VMEM (≤ 4 MiB for the paper's shapes);
+  * the output accumulates across grid steps in the same (d,) VMEM block —
+    the canonical Pallas reduction pattern (zero-init at step 0);
+  * `interpret=True` everywhere here: the CPU PJRT plugin cannot execute
+    Mosaic custom-calls, and correctness/artifacts are the goal; VMEM/MXU
+    behaviour is *estimated* analytically in EXPERIMENTS.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+jax.config.update("jax_enable_x64", True)
+
+# Row-tile size. The wrapper zero-pads A/b up to a multiple of the tile —
+# zero rows contribute nothing to Aᵀs, so the result is exact — which
+# keeps the Pallas grid short (the interpret lowering emits one loop
+# iteration per grid step; an awkward m like 2837 (prime) would otherwise
+# degenerate to a 2837-step loop).
+MAX_BLOCK_M = 512
+
+
+def pick_block_m(m: int, cap: int = MAX_BLOCK_M) -> int:
+    """Tile size for m rows: min(m, cap) — the wrapper pads m up to a
+    multiple of this."""
+    return max(1, min(m, cap))
+
+
+def pad_rows(m: int, bm: int) -> int:
+    """Padded row count: smallest multiple of bm ≥ m."""
+    return ((m + bm - 1) // bm) * bm
+
+
+def _kernel(x_ref, a_ref, b_ref, o_ref, *, m_total: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a_blk = a_ref[...]          # (bm, d) tile in VMEM
+    z = a_blk @ x_ref[...]      # MXU: (bm, d) x (d,)
+    s = b_ref[...] * jax.nn.sigmoid(b_ref[...] * z) / m_total  # VPU
+    o_ref[...] += a_blk.T @ s   # MXU: (d, bm) x (bm,)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m",))
+def logreg_data_grad(x, a, b, block_m=None):
+    """Pallas data-term gradient. x: [d], a: [m, d], b: [m] → [d].
+
+    Pads (A, b) with zero rows up to a multiple of the tile: a zero row
+    contributes `0ᵀ·s_j = 0` to the accumulated Aᵀs whatever its label, so
+    the padded result is bit-exact while the grid stays short.
+    """
+    m, d = a.shape
+    bm = block_m or pick_block_m(m)
+    mp = pad_rows(m, bm)
+    if mp != m:
+        a = jnp.pad(a, ((0, mp - m), (0, 0)))
+        b = jnp.pad(b, (0, mp - m), constant_values=1.0)
+    grid = (mp // bm,)
+    return pl.pallas_call(
+        functools.partial(_kernel, m_total=m),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((d,), lambda i: (0,)),        # x: whole vector
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),   # a: row tile
+            pl.BlockSpec((bm,), lambda i: (i,)),       # b: row tile
+        ],
+        out_specs=pl.BlockSpec((d,), lambda i: (0,)),  # accumulate in place
+        out_shape=jax.ShapeDtypeStruct((d,), x.dtype),
+        interpret=True,
+    )(x, a, b)
+
+
+def logreg_grad(x, a, b, mu, block_m=None):
+    """Full local gradient ∇f_i(x): Pallas data term + μx (fused by XLA)."""
+    return logreg_data_grad(x, a, b, block_m=block_m) + mu * x
+
+
+def vmem_bytes(m: int, d: int, block_m=None, bytes_per_elem: int = 8) -> int:
+    """Estimated VMEM residency per grid step: A tile + x + s + out."""
+    bm = block_m or pick_block_m(m)
+    return bytes_per_elem * (bm * d + d + 2 * bm + d)
+
+
+def grid_steps(m: int, block_m=None) -> int:
+    bm = block_m or pick_block_m(m)
+    return pad_rows(m, bm) // bm
+
+
+def mxu_flops(m: int, d: int) -> int:
+    """MXU flops per full gradient: two m×d matvecs."""
+    return 4 * m * d

@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness reference).
+
+Everything is f64: the optimizer's residual curves go down to 1e-12, so the
+whole pipeline (python build time + rust run time) runs in double
+precision.
+"""
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+
+def sigmoid(t):
+    return jax.nn.sigmoid(t)
+
+
+def logreg_data_grad_ref(x, a, b):
+    """(1/m) Aᵀ(b ∘ σ(b ∘ Ax)) — the data term of ∇f_i (paper §6.1 loss).
+
+    x: [d], a: [m, d], b: [m] (±1 labels). Returns [d].
+    """
+    m = a.shape[0]
+    z = a @ x
+    s = b * sigmoid(b * z) / m
+    return a.T @ s
+
+
+def logreg_grad_ref(x, a, b, mu):
+    """Full local gradient ∇f_i(x) = data term + μx."""
+    return logreg_data_grad_ref(x, a, b) + mu * x
+
+
+def logreg_loss_ref(x, a, b, mu):
+    """f_i(x) = (1/m) Σ softplus(b_j · a_jᵀx) + (μ/2)‖x‖²."""
+    z = a @ x
+    return jnp.mean(jax.nn.softplus(b * z)) + 0.5 * mu * jnp.dot(x, x)
+
+
+def whiten_ref(r, v):
+    """Dense matvec r @ v (r = L^{†1/2}, the whitening operator)."""
+    return r @ v
+
+
+def whitened_diff_ref(x, a, b, mu, r, h):
+    """L^{†1/2}(∇f_i(x) − h) — the worker-side compress input of eq. (7)."""
+    return whiten_ref(r, logreg_grad_ref(x, a, b, mu) - h)

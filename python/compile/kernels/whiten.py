@@ -1,0 +1,58 @@
+"""L1 Pallas kernel: whitening matvec w = R v with R = L_i^{†1/2}.
+
+This is the worker-side half of the paper's protocol (7): before
+sketching, the gradient difference is multiplied by the pseudo-inverse
+root of the local smoothness matrix. R is a dense d×d operator; the
+kernel tiles it by (block × d) row panels so each grid step is one MXU
+panel-matvec with the full v resident in VMEM.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+jax.config.update("jax_enable_x64", True)
+
+MAX_BLOCK_ROWS = 256
+
+
+def pick_block(d: int, cap: int = MAX_BLOCK_ROWS) -> int:
+    best = 1
+    for k in range(1, min(d, cap) + 1):
+        if d % k == 0:
+            best = k
+    return best
+
+
+def _kernel(r_ref, v_ref, o_ref):
+    o_ref[...] = r_ref[...] @ v_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def whiten(r, v, block_rows=None):
+    """w = r @ v. r: [d, d], v: [d] → [d]."""
+    d = r.shape[0]
+    assert r.shape == (d, d) and v.shape == (d,)
+    br = block_rows or pick_block(d)
+    assert d % br == 0
+    return pl.pallas_call(
+        _kernel,
+        grid=(d // br,),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),  # R row panel
+            pl.BlockSpec((d,), lambda i: (0,)),       # v resident
+        ],
+        out_specs=pl.BlockSpec((br,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((d,), v.dtype),
+        interpret=True,
+    )(r, v)
+
+
+def whitened_diff(x, a, b, mu, r, h, block_rows=None):
+    """L^{†1/2}(∇f_i(x) − h) — the full worker-side compress input."""
+    from . import logreg_grad as lk
+
+    g = lk.logreg_grad(x, a, b, mu)
+    return whiten(r, g - h, block_rows=block_rows)

@@ -1,0 +1,56 @@
+"""L2: the per-worker JAX compute graph, calling the L1 Pallas kernels.
+
+Three entry points, each lowered to one HLO artifact per shard shape by
+`aot.py`:
+
+  grad(x, a, b, mu)                → (∇f_i(x),)
+  loss(x, a, b, mu)                → (f_i(x),)
+  wgrad(x, a, b, mu, r, h)         → (L^{†1/2}(∇f_i(x) − h),)
+
+All f64; Python never runs at request time — the Rust runtime executes
+these artifacts through PJRT.
+"""
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+from .kernels import logreg_grad as lk
+from .kernels import whiten as wk
+
+
+def grad(x, a, b, mu):
+    """∇f_i(x) — the hot path (Pallas data term + μx)."""
+    return (lk.logreg_grad(x, a, b, mu),)
+
+
+def loss(x, a, b, mu):
+    """f_i(x) — metrics path (pure jnp; not performance critical)."""
+    z = a @ x
+    val = jnp.mean(jax.nn.softplus(b * z)) + 0.5 * mu * jnp.dot(x, x)
+    return (val,)
+
+
+def wgrad(x, a, b, mu, r, h):
+    """Whitened gradient difference L^{†1/2}(∇f_i(x) − h) (protocol (7))."""
+    return (wk.whitened_diff(x, a, b, mu, r, h),)
+
+
+def specs_for(kind: str, m: int, d: int):
+    """Input ShapeDtypeStructs for a given artifact kind and shard shape."""
+    f64 = jnp.float64
+    x = jax.ShapeDtypeStruct((d,), f64)
+    a = jax.ShapeDtypeStruct((m, d), f64)
+    b = jax.ShapeDtypeStruct((m,), f64)
+    mu = jax.ShapeDtypeStruct((), f64)
+    if kind in ("grad", "loss"):
+        return (x, a, b, mu)
+    if kind == "wgrad":
+        r = jax.ShapeDtypeStruct((d, d), f64)
+        h = jax.ShapeDtypeStruct((d,), f64)
+        return (x, a, b, mu, r, h)
+    raise ValueError(f"unknown artifact kind {kind!r}")
+
+
+ENTRY_POINTS = {"grad": grad, "loss": loss, "wgrad": wgrad}

@@ -1,0 +1,135 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle.
+
+Hypothesis sweeps shapes (m, d), block sizes and input scales; every case
+asserts allclose against ref.py — the core correctness signal for the
+compute hot path that the Rust runtime will execute via PJRT.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+jax.config.update("jax_enable_x64", True)
+
+from compile.kernels import logreg_grad as lk
+from compile.kernels import ref
+from compile.kernels import whiten as wk
+
+
+def make_problem(m, d, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=d) * scale)
+    a = jnp.asarray(rng.normal(size=(m, d)) * 0.5)
+    b = jnp.asarray(rng.choice([-1.0, 1.0], size=m))
+    return x, a, b
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    m=st.integers(min_value=1, max_value=64),
+    d=st.integers(min_value=1, max_value=48),
+    seed=st.integers(min_value=0, max_value=2**31),
+    scale=st.sampled_from([1e-3, 1.0, 50.0]),
+)
+def test_logreg_grad_matches_ref(m, d, seed, scale):
+    x, a, b = make_problem(m, d, seed, scale)
+    mu = 1e-3
+    got = lk.logreg_grad(x, a, b, mu)
+    want = ref.logreg_grad_ref(x, a, b, mu)
+    np.testing.assert_allclose(got, want, rtol=1e-12, atol=1e-12)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    m=st.integers(min_value=2, max_value=48),
+    d=st.integers(min_value=1, max_value=32),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_blocking_is_invisible(m, d, seed):
+    """Any valid block size gives identical results."""
+    x, a, b = make_problem(m, d, seed)
+    full = lk.logreg_data_grad(x, a, b, block_m=m)
+    for bm in sorted({k for k in range(1, m + 1) if m % k == 0}):
+        blocked = lk.logreg_data_grad(x, a, b, block_m=bm)
+        np.testing.assert_allclose(blocked, full, rtol=1e-12, atol=1e-13)
+
+
+def test_pick_block_m_and_padding():
+    assert lk.pick_block_m(15) == 15
+    assert lk.pick_block_m(2837) == 512  # prime m handled by zero-padding
+    assert lk.pad_rows(2837, 512) == 3072
+    assert lk.grid_steps(2837) == 6
+    assert lk.pad_rows(512, 512) == 512
+    assert lk.pick_block_m(30) == 30
+
+
+def test_padding_is_exact_on_awkward_m():
+    """m prime (no divisors): padded path must equal the unpadded one."""
+    for m in [7, 13, 61]:
+        x, a, b = make_problem(m, 9, m)
+        padded = lk.logreg_data_grad(x, a, b, block_m=4)  # forces padding
+        exact = lk.logreg_data_grad(x, a, b, block_m=m)   # single block
+        np.testing.assert_allclose(padded, exact, rtol=1e-13, atol=1e-14)
+
+
+def test_extreme_margins_are_stable():
+    """Saturated sigmoids must not produce NaN/Inf."""
+    m, d = 8, 4
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=d) * 1e4)
+    a = jnp.asarray(rng.normal(size=(m, d)))
+    b = jnp.asarray(rng.choice([-1.0, 1.0], size=m))
+    g = lk.logreg_grad(x, a, b, 1e-3)
+    assert np.all(np.isfinite(np.asarray(g)))
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    d=st.integers(min_value=1, max_value=64),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_whiten_matches_ref(d, seed):
+    rng = np.random.default_rng(seed)
+    r = jnp.asarray(rng.normal(size=(d, d)))
+    v = jnp.asarray(rng.normal(size=d))
+    np.testing.assert_allclose(wk.whiten(r, v), ref.whiten_ref(r, v), rtol=1e-12, atol=1e-12)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(min_value=1, max_value=24),
+    d=st.integers(min_value=1, max_value=24),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_whitened_diff_matches_ref(m, d, seed):
+    x, a, b = make_problem(m, d, seed)
+    rng = np.random.default_rng(seed + 1)
+    r = jnp.asarray(rng.normal(size=(d, d)))
+    h = jnp.asarray(rng.normal(size=d))
+    mu = 1e-3
+    got = wk.whitened_diff(x, a, b, mu, r, h)
+    want = ref.whitened_diff_ref(x, a, b, mu, r, h)
+    np.testing.assert_allclose(got, want, rtol=1e-11, atol=1e-11)
+
+
+def test_grad_is_derivative_of_loss():
+    """Cross-check the kernel against jax.grad of the loss oracle."""
+    m, d = 16, 10
+    x, a, b = make_problem(m, d, 7)
+    mu = 1e-3
+    want = jax.grad(lambda xx: ref.logreg_loss_ref(xx, a, b, mu))(x)
+    got = lk.logreg_grad(x, a, b, mu)
+    np.testing.assert_allclose(got, want, rtol=1e-11, atol=1e-12)
+
+
+def test_f64_dtype_end_to_end():
+    x, a, b = make_problem(4, 3, 1)
+    g = lk.logreg_grad(x, a, b, 1e-3)
+    assert g.dtype == jnp.float64
+
+
+def test_vmem_estimate_monotone():
+    assert lk.vmem_bytes(128, 128) < lk.vmem_bytes(256, 256)
+    assert lk.mxu_flops(10, 20) == 800

@@ -1,0 +1,65 @@
+"""L2 model tests: entry points, shapes, and loss/grad consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", True)
+
+from compile import model
+from compile.kernels import ref
+
+
+def problem(m=12, d=7, seed=3):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=d))
+    a = jnp.asarray(rng.normal(size=(m, d)) * 0.5)
+    b = jnp.asarray(rng.choice([-1.0, 1.0], size=m))
+    return x, a, b
+
+
+def test_grad_entry_point_returns_tuple():
+    x, a, b = problem()
+    (g,) = model.grad(x, a, b, 1e-3)
+    assert g.shape == x.shape
+    np.testing.assert_allclose(g, ref.logreg_grad_ref(x, a, b, 1e-3), rtol=1e-12)
+
+
+def test_loss_entry_point_matches_ref():
+    x, a, b = problem()
+    (v,) = model.loss(x, a, b, 1e-3)
+    np.testing.assert_allclose(v, ref.logreg_loss_ref(x, a, b, 1e-3), rtol=1e-12)
+
+
+def test_loss_grad_consistency():
+    """model.grad == d(model.loss)/dx."""
+    x, a, b = problem()
+    want = jax.grad(lambda xx: model.loss(xx, a, b, 1e-3)[0])(x)
+    (got,) = model.grad(x, a, b, 1e-3)
+    np.testing.assert_allclose(got, want, rtol=1e-11, atol=1e-12)
+
+
+def test_wgrad_entry_point():
+    x, a, b = problem()
+    d = x.shape[0]
+    rng = np.random.default_rng(5)
+    r = jnp.asarray(rng.normal(size=(d, d)))
+    h = jnp.asarray(rng.normal(size=d))
+    (w,) = model.wgrad(x, a, b, 1e-3, r, h)
+    np.testing.assert_allclose(
+        w, ref.whitened_diff_ref(x, a, b, 1e-3, r, h), rtol=1e-11, atol=1e-11
+    )
+
+
+def test_specs_for_shapes():
+    specs = model.specs_for("grad", 9, 4)
+    assert [s.shape for s in specs] == [(4,), (9, 4), (9,), ()]
+    specs = model.specs_for("wgrad", 9, 4)
+    assert [s.shape for s in specs] == [(4,), (9, 4), (9,), (), (4, 4), (4,)]
+    with pytest.raises(ValueError):
+        model.specs_for("nope", 1, 1)
+
+
+def test_entry_points_registry():
+    assert set(model.ENTRY_POINTS) == {"grad", "loss", "wgrad"}

@@ -1,0 +1,162 @@
+//! Sparse wire message + communication accounting.
+//!
+//! Workers send `(index, value)` pairs; the paper's Figure 4 x-axis counts
+//! *coordinates sent to the server*, and Appendix C.5 counts bits
+//! (32 bits/float there; we default to 64 since the pipeline is f64, and
+//! expose both). Index cost is ⌈log₂ d⌉ bits per coordinate.
+
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SparseMsg {
+    pub idx: Vec<u32>,
+    pub val: Vec<f64>,
+}
+
+impl SparseMsg {
+    pub fn new() -> SparseMsg {
+        SparseMsg::default()
+    }
+
+    pub fn with_capacity(cap: usize) -> SparseMsg {
+        SparseMsg {
+            idx: Vec::with_capacity(cap),
+            val: Vec::with_capacity(cap),
+        }
+    }
+
+    pub fn clear(&mut self) {
+        self.idx.clear();
+        self.val.clear();
+    }
+
+    pub fn push(&mut self, i: u32, v: f64) {
+        self.idx.push(i);
+        self.val.push(v);
+    }
+
+    /// Number of coordinates carried (Figure 4's unit).
+    pub fn coords(&self) -> usize {
+        self.idx.len()
+    }
+
+    /// Bits on the wire: one value (float_bits) + one index (⌈log₂ d⌉)
+    /// per coordinate.
+    pub fn bits(&self, dim: usize, float_bits: u32) -> u64 {
+        let idx_bits = index_bits(dim);
+        self.coords() as u64 * (float_bits as u64 + idx_bits as u64)
+    }
+
+    /// Densify into a zeroed output buffer.
+    pub fn scatter_into(&self, out: &mut [f64]) {
+        out.fill(0.0);
+        for (k, &i) in self.idx.iter().enumerate() {
+            out[i as usize] = self.val[k];
+        }
+    }
+
+    pub fn to_dense(&self, dim: usize) -> Vec<f64> {
+        let mut out = vec![0.0; dim];
+        self.scatter_into(&mut out);
+        out
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.idx.is_empty()
+    }
+}
+
+/// Bits to address one coordinate of a d-dimensional vector: ⌈log₂ d⌉.
+pub fn index_bits(dim: usize) -> u32 {
+    if dim <= 2 {
+        1
+    } else {
+        usize::BITS - (dim - 1).leading_zeros()
+    }
+}
+
+/// Running totals for an experiment (per worker or aggregated).
+#[derive(Clone, Debug, Default)]
+pub struct CommStats {
+    pub coords_up: u64,
+    pub bits_up: u64,
+    pub msgs_up: u64,
+    /// dense broadcast volume (server→workers), coords
+    pub coords_down: u64,
+}
+
+impl CommStats {
+    pub fn record_up(&mut self, msg: &SparseMsg, dim: usize, float_bits: u32) {
+        self.coords_up += msg.coords() as u64;
+        self.bits_up += msg.bits(dim, float_bits);
+        self.msgs_up += 1;
+    }
+
+    pub fn record_down(&mut self, dim: usize) {
+        self.coords_down += dim as u64;
+    }
+
+    pub fn merge(&mut self, other: &CommStats) {
+        self.coords_up += other.coords_up;
+        self.bits_up += other.bits_up;
+        self.msgs_up += other.msgs_up;
+        self.coords_down += other.coords_down;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_and_scatter() {
+        let mut m = SparseMsg::new();
+        m.push(1, 2.0);
+        m.push(4, -1.0);
+        assert_eq!(m.coords(), 2);
+        assert_eq!(m.to_dense(6), vec![0.0, 2.0, 0.0, 0.0, -1.0, 0.0]);
+    }
+
+    #[test]
+    fn index_bits_values() {
+        assert_eq!(index_bits(2), 1);
+        assert_eq!(index_bits(123), 7);
+        assert_eq!(index_bits(128), 7);
+        assert_eq!(index_bits(129), 8);
+        assert_eq!(index_bits(7129), 13);
+    }
+
+    #[test]
+    fn bits_accounting() {
+        let mut m = SparseMsg::new();
+        m.push(0, 1.0);
+        m.push(1, 1.0);
+        m.push(2, 1.0);
+        // 3 coords, d=123 ⇒ 3·(64+7) bits
+        assert_eq!(m.bits(123, 64), 3 * 71);
+        assert_eq!(m.bits(123, 32), 3 * 39);
+    }
+
+    #[test]
+    fn comm_stats_accumulate_and_merge() {
+        let mut s = CommStats::default();
+        let mut m = SparseMsg::new();
+        m.push(0, 1.0);
+        s.record_up(&m, 16, 64);
+        s.record_up(&m, 16, 64);
+        s.record_down(16);
+        assert_eq!(s.coords_up, 2);
+        assert_eq!(s.msgs_up, 2);
+        assert_eq!(s.coords_down, 16);
+        let mut t = CommStats::default();
+        t.merge(&s);
+        t.merge(&s);
+        assert_eq!(t.coords_up, 4);
+    }
+
+    #[test]
+    fn clear_resets() {
+        let mut m = SparseMsg::with_capacity(4);
+        m.push(3, 1.0);
+        m.clear();
+        assert!(m.is_empty());
+    }
+}

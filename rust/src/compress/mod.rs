@@ -1,0 +1,13 @@
+//! Compression: sparse messages with communication accounting, the
+//! standard diagonal sketch, the paper's matrix-smoothness-aware protocol
+//! (Definition 3 / eq. 7), greedy top-k, and the Appendix-C lower-bound
+//! laboratory.
+
+pub mod lowerbound;
+pub mod message;
+pub mod ops;
+pub mod topk;
+
+pub use message::{index_bits, CommStats, SparseMsg};
+pub use ops::{sketch_apply, sketch_compress, MatrixAware};
+pub use topk::{topk_alpha, topk_compress};

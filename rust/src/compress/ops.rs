@@ -1,0 +1,219 @@
+//! Compression operators.
+//!
+//! * [`sketch_compress`] — the unbiased diagonal sketch `C x` (eq. 6):
+//!   keep sampled coordinates scaled by 1/p_j. This is the *standard*
+//!   sparsification the original DCGD/DIANA/ADIANA baselines use.
+//! * [`MatrixAware`] — the paper's data-dependent protocol (Def. 3):
+//!   the worker sends `C L^{†1/2} x` (sparse), the server decompresses
+//!   with `L^{1/2}·`, so the estimator `g = L^{1/2} C L^{†1/2} x` is
+//!   unbiased (eq. 7).
+
+use crate::compress::message::SparseMsg;
+use crate::linalg::psd::PsdRoot;
+use crate::sampling::IndependentSampling;
+use crate::util::rng::Rng;
+
+/// Standard sketch: sample S ~ sampling, emit (j, x_j/p_j) for j ∈ S.
+pub fn sketch_compress(
+    x: &[f64],
+    sampling: &IndependentSampling,
+    rng: &mut Rng,
+    out: &mut SparseMsg,
+) {
+    out.clear();
+    for (j, &pj) in sampling.p.iter().enumerate() {
+        if pj >= 1.0 || rng.bernoulli(pj) {
+            out.push(j as u32, x[j] / pj);
+        }
+    }
+}
+
+/// Apply a pre-drawn sample (when the sketch must be reused on two vectors
+/// with the *same* C, e.g. ADIANA's Δ and δ use independent draws but
+/// DIANA++'s reconstruction must match the server's draw).
+pub fn sketch_apply(x: &[f64], sample: &[u32], p: &[f64], out: &mut SparseMsg) {
+    out.clear();
+    for &j in sample {
+        out.push(j, x[j as usize] / p[j as usize]);
+    }
+}
+
+/// The matrix-smoothness-aware compressor for one worker: owns the
+/// whitening scratch and exposes the two halves of protocol (7).
+#[derive(Clone, Debug)]
+pub struct MatrixAware {
+    pub sampling: IndependentSampling,
+    whiten_scratch: Vec<f64>,
+}
+
+impl MatrixAware {
+    pub fn new(sampling: IndependentSampling) -> MatrixAware {
+        let d = sampling.dim();
+        MatrixAware {
+            sampling,
+            whiten_scratch: vec![0.0; d],
+        }
+    }
+
+    /// Worker side: msg = C L^{†1/2} x (sparse, *not* unbiased on its own).
+    pub fn compress(&mut self, root: &PsdRoot, x: &[f64], rng: &mut Rng, out: &mut SparseMsg) {
+        root.apply_pow_into(-0.5, x, &mut self.whiten_scratch);
+        sketch_compress(&self.whiten_scratch, &self.sampling, rng, out);
+    }
+
+    /// Server side: g = L^{1/2} · msg (dense). Unbiased: E[g] = x.
+    pub fn decompress_into(root: &PsdRoot, msg: &SparseMsg, out: &mut [f64]) {
+        root.apply_pow_sparse_into(0.5, &msg.idx, &msg.val, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::dense::Mat;
+    use crate::linalg::vector;
+
+    fn toy_root(d: usize, seed: u64) -> PsdRoot {
+        let mut rng = Rng::new(seed);
+        let b = Mat::from_rows(
+            (0..d + 2)
+                .map(|_| (0..d).map(|_| rng.normal()).collect())
+                .collect(),
+        );
+        let mut l = b.gram();
+        l.scale(0.1);
+        l.add_diag(1e-3);
+        PsdRoot::from_dense(&l)
+    }
+
+    #[test]
+    fn sketch_is_unbiased() {
+        let d = 12;
+        let mut rng = Rng::new(1);
+        let x: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        let s = IndependentSampling::uniform(d, 3.0);
+        let trials = 60_000;
+        let mut mean = vec![0.0; d];
+        let mut msg = SparseMsg::new();
+        for _ in 0..trials {
+            sketch_compress(&x, &s, &mut rng, &mut msg);
+            for (k, &i) in msg.idx.iter().enumerate() {
+                mean[i as usize] += msg.val[k];
+            }
+        }
+        for j in 0..d {
+            let m = mean[j] / trials as f64;
+            assert!((m - x[j]).abs() < 0.05 * (1.0 + x[j].abs()), "E[Cx]_{j}={m} x_{j}={}", x[j]);
+        }
+    }
+
+    #[test]
+    fn sketch_variance_bound() {
+        // E‖Cx − x‖² ≤ ω‖x‖² (eq. 25)
+        let d = 10;
+        let mut rng = Rng::new(2);
+        let x: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        let s = IndependentSampling::uniform(d, 2.0);
+        let omega = s.omega();
+        let trials = 40_000;
+        let mut acc = 0.0;
+        let mut msg = SparseMsg::new();
+        let mut dense = vec![0.0; d];
+        for _ in 0..trials {
+            sketch_compress(&x, &s, &mut rng, &mut msg);
+            msg.scatter_into(&mut dense);
+            acc += vector::dist2(&dense, &x);
+        }
+        let emp = acc / trials as f64;
+        assert!(
+            emp <= omega * vector::norm2(&x) * 1.05,
+            "emp={emp} bound={}",
+            omega * vector::norm2(&x)
+        );
+    }
+
+    #[test]
+    fn matrix_aware_is_unbiased() {
+        let d = 8;
+        let root = toy_root(d, 3);
+        let mut rng = Rng::new(4);
+        // x in Range(L) — guaranteed here since L is PD
+        let x: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        let mut ma = MatrixAware::new(IndependentSampling::uniform(d, 2.0));
+        let trials = 60_000;
+        let mut mean = vec![0.0; d];
+        let mut msg = SparseMsg::new();
+        let mut g = vec![0.0; d];
+        for _ in 0..trials {
+            ma.compress(&root, &x, &mut rng, &mut msg);
+            MatrixAware::decompress_into(&root, &msg, &mut g);
+            vector::axpy(1.0, &g, &mut mean);
+        }
+        for j in 0..d {
+            let m = mean[j] / trials as f64;
+            assert!(
+                (m - x[j]).abs() < 0.06 * (1.0 + x[j].abs()),
+                "E[g]_{j}={m} x_{j}={}",
+                x[j]
+            );
+        }
+    }
+
+    #[test]
+    fn matrix_aware_variance_decomposition() {
+        // E‖g − x‖²  =  ‖L^{†1/2}x‖²_{P̃∘L}  =  Σ_j (1/p_j − 1) L_jj w_j²
+        // for independent samplings, where w = L^{†1/2}x (eq. 11 inner term).
+        let d = 6;
+        let root = toy_root(d, 5);
+        let mut rng = Rng::new(6);
+        let x: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        let s = IndependentSampling::new(vec![0.3, 0.5, 0.9, 0.2, 0.7, 1.0]);
+        let mut ma = MatrixAware::new(s.clone());
+        let w = root.apply_pow(-0.5, &x);
+        let ldiag = root.diag_pow(1.0);
+        let mut expected = 0.0;
+        for j in 0..d {
+            expected += (1.0 / s.p[j] - 1.0) * ldiag[j] * w[j] * w[j];
+        }
+        let trials = 60_000;
+        let mut acc = 0.0;
+        let mut msg = SparseMsg::new();
+        let mut g = vec![0.0; d];
+        for _ in 0..trials {
+            ma.compress(&root, &x, &mut rng, &mut msg);
+            MatrixAware::decompress_into(&root, &msg, &mut g);
+            acc += vector::dist2(&g, &x);
+        }
+        let emp = acc / trials as f64;
+        assert!(
+            (emp - expected).abs() < 0.08 * expected.max(1e-12),
+            "emp={emp} expected={expected}"
+        );
+    }
+
+    #[test]
+    fn full_sampling_is_lossless() {
+        let d = 7;
+        let root = toy_root(d, 7);
+        let mut rng = Rng::new(8);
+        let x: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        let mut ma = MatrixAware::new(IndependentSampling::uniform(d, d as f64));
+        let mut msg = SparseMsg::new();
+        let mut g = vec![0.0; d];
+        ma.compress(&root, &x, &mut rng, &mut msg);
+        MatrixAware::decompress_into(&root, &msg, &mut g);
+        for j in 0..d {
+            assert!((g[j] - x[j]).abs() < 1e-9, "lossless failed at {j}");
+        }
+    }
+
+    #[test]
+    fn sketch_apply_uses_given_sample() {
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let p = [0.5, 0.5, 0.5, 0.5];
+        let mut msg = SparseMsg::new();
+        sketch_apply(&x, &[1, 3], &p, &mut msg);
+        assert_eq!(msg.idx, vec![1, 3]);
+        assert_eq!(msg.val, vec![4.0, 8.0]);
+    }
+}

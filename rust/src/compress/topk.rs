@@ -1,0 +1,90 @@
+//! Greedy (Top-k) sparsification — a *biased* contractive compressor.
+//!
+//! Used by the Appendix C lower-bound experiment (Figure 5) as the greedy
+//! comparator, and available as the "greedy sparsification" the paper's
+//! §7 lists as future work.
+
+use crate::compress::message::SparseMsg;
+
+/// Keep the k largest-magnitude coordinates (unscaled).
+pub fn topk_compress(x: &[f64], k: usize, out: &mut SparseMsg) {
+    out.clear();
+    if k == 0 {
+        return;
+    }
+    let k = k.min(x.len());
+    // Partial selection: indices sorted by |x| descending, take k.
+    let mut order: Vec<u32> = (0..x.len() as u32).collect();
+    order.select_nth_unstable_by(k - 1, |&a, &b| {
+        x[b as usize]
+            .abs()
+            .partial_cmp(&x[a as usize].abs())
+            .unwrap()
+    });
+    let mut sel: Vec<u32> = order[..k].to_vec();
+    sel.sort_unstable();
+    for &j in &sel {
+        out.push(j, x[j as usize]);
+    }
+}
+
+/// Squared relative error 1 − ‖x_S‖²/‖x‖² of the top-k approximation.
+pub fn topk_alpha(x: &[f64], k: usize) -> f64 {
+    let mut msg = SparseMsg::new();
+    topk_compress(x, k, &mut msg);
+    let kept: f64 = msg.val.iter().map(|v| v * v).sum();
+    let total: f64 = x.iter().map(|v| v * v).sum();
+    if total == 0.0 {
+        0.0
+    } else {
+        (1.0 - kept / total).max(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn selects_largest_magnitudes() {
+        let x = [0.1, -5.0, 3.0, 0.0, 4.0];
+        let mut m = SparseMsg::new();
+        topk_compress(&x, 2, &mut m);
+        assert_eq!(m.idx, vec![1, 4]);
+        assert_eq!(m.val, vec![-5.0, 4.0]);
+    }
+
+    #[test]
+    fn k_zero_and_k_full() {
+        let x = [1.0, 2.0];
+        let mut m = SparseMsg::new();
+        topk_compress(&x, 0, &mut m);
+        assert!(m.is_empty());
+        topk_compress(&x, 5, &mut m);
+        assert_eq!(m.coords(), 2);
+    }
+
+    #[test]
+    fn alpha_decreases_with_k() {
+        let x: Vec<f64> = (0..50).map(|i| ((i * 7919) % 101) as f64 - 50.0).collect();
+        let mut prev = 1.0;
+        for k in [1, 5, 10, 25, 50] {
+            let a = topk_alpha(&x, k);
+            assert!(a <= prev + 1e-12);
+            assert!((0.0..=1.0).contains(&a));
+            prev = a;
+        }
+        assert_eq!(topk_alpha(&x, 50), 0.0);
+    }
+
+    #[test]
+    fn contraction_property() {
+        // ‖C(x) − x‖² ≤ (1 − k/d)‖x‖² holds for top-k
+        let x: Vec<f64> = (0..20).map(|i| (i as f64 * 1.3).sin()).collect();
+        let d = x.len();
+        for k in [1usize, 4, 10, 19] {
+            let a = topk_alpha(&x, k);
+            assert!(a <= 1.0 - k as f64 / d as f64 + 1e-12, "k={k} alpha={a}");
+        }
+    }
+}

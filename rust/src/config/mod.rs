@@ -1,0 +1,278 @@
+//! Experiment configuration: JSON files + CLI overrides, shared by the
+//! `smx` binary, the examples and the bench harness.
+//!
+//! Example config (see `configs/` at the repo root):
+//!
+//! ```json
+//! {
+//!   "dataset": "a1a",
+//!   "workers": 0,
+//!   "mu": 1e-3,
+//!   "tau": 1.0,
+//!   "methods": ["diana", "diana+"],
+//!   "sampling": "importance-diana",
+//!   "max_rounds": 20000,
+//!   "target_residual": 1e-12,
+//!   "seed": 42,
+//!   "engine": "native"
+//! }
+//! ```
+//!
+//! `workers: 0` means "use the dataset's Table-3 default".
+
+use crate::data::{spec_by_name, synth};
+use crate::runtime::EngineKind;
+use crate::sampling::SamplingKind;
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub dataset: String,
+    /// 0 ⇒ dataset default (Table 3)
+    pub workers: usize,
+    pub mu: f64,
+    pub tau: f64,
+    pub methods: Vec<String>,
+    pub sampling: SamplingKind,
+    pub max_rounds: usize,
+    pub target_residual: f64,
+    pub record_every: usize,
+    pub seed: u64,
+    pub engine: EngineKind,
+    pub data_dir: Option<std::path::PathBuf>,
+    pub out_dir: std::path::PathBuf,
+    /// start near the optimum (Figure 2's setup)
+    pub start_near_opt: bool,
+    pub practical_adiana: bool,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            dataset: "a1a".to_string(),
+            workers: 0,
+            mu: 1e-3,
+            tau: 1.0,
+            methods: vec!["diana".into(), "diana+".into()],
+            sampling: SamplingKind::Uniform,
+            max_rounds: 10_000,
+            target_residual: 1e-12,
+            record_every: 10,
+            seed: 42,
+            engine: EngineKind::Native,
+            data_dir: None,
+            out_dir: std::path::PathBuf::from("results"),
+            start_near_opt: false,
+            practical_adiana: true,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Effective worker count: explicit or the dataset's Table-3 default.
+    pub fn effective_workers(&self) -> usize {
+        if self.workers > 0 {
+            return self.workers;
+        }
+        spec_by_name(&self.dataset)
+            .map(|s| s.n)
+            .unwrap_or(synth::tiny_spec().n)
+    }
+
+    pub fn from_json(j: &Json) -> Result<ExperimentConfig> {
+        let mut c = ExperimentConfig::default();
+        let obj = j.as_obj().context("config must be a JSON object")?;
+        for (k, v) in obj {
+            match k.as_str() {
+                "dataset" => c.dataset = v.as_str().context("dataset")?.to_string(),
+                "workers" => c.workers = v.as_usize().context("workers")?,
+                "mu" => c.mu = v.as_f64().context("mu")?,
+                "tau" => c.tau = v.as_f64().context("tau")?,
+                "methods" => {
+                    c.methods = v
+                        .as_arr()
+                        .context("methods")?
+                        .iter()
+                        .map(|m| m.as_str().map(|s| s.to_string()))
+                        .collect::<Option<Vec<_>>>()
+                        .context("methods must be strings")?
+                }
+                "sampling" => {
+                    let s = v.as_str().context("sampling")?;
+                    c.sampling =
+                        SamplingKind::parse(s).with_context(|| format!("bad sampling '{s}'"))?
+                }
+                "max_rounds" => c.max_rounds = v.as_usize().context("max_rounds")?,
+                "target_residual" => c.target_residual = v.as_f64().context("target_residual")?,
+                "record_every" => c.record_every = v.as_usize().context("record_every")?,
+                "seed" => c.seed = v.as_f64().context("seed")? as u64,
+                "engine" => {
+                    let s = v.as_str().context("engine")?;
+                    c.engine = EngineKind::parse(s).with_context(|| format!("bad engine '{s}'"))?
+                }
+                "data_dir" => c.data_dir = Some(v.as_str().context("data_dir")?.into()),
+                "out_dir" => c.out_dir = v.as_str().context("out_dir")?.into(),
+                "start_near_opt" => c.start_near_opt = v.as_bool().context("start_near_opt")?,
+                "practical_adiana" => {
+                    c.practical_adiana = v.as_bool().context("practical_adiana")?
+                }
+                other => bail!("unknown config key '{other}'"),
+            }
+        }
+        c.validate()?;
+        Ok(c)
+    }
+
+    pub fn from_file(path: &std::path::Path) -> Result<ExperimentConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        let j = Json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+        Self::from_json(&j)
+    }
+
+    /// Apply CLI overrides on top (flags win over file values).
+    pub fn apply_args(&mut self, args: &Args) -> Result<()> {
+        if let Some(v) = args.get("dataset") {
+            self.dataset = v.to_string();
+        }
+        if args.has("workers") {
+            self.workers = args.usize_or("workers", self.workers);
+        }
+        if args.has("mu") {
+            self.mu = args.f64_or("mu", self.mu);
+        }
+        if args.has("tau") {
+            self.tau = args.f64_or("tau", self.tau);
+        }
+        if args.has("methods") {
+            self.methods = args.list_or("methods", &[]);
+        }
+        if let Some(s) = args.get("sampling") {
+            self.sampling = SamplingKind::parse(s).with_context(|| format!("bad sampling '{s}'"))?;
+        }
+        if args.has("max-rounds") {
+            self.max_rounds = args.usize_or("max-rounds", self.max_rounds);
+        }
+        if args.has("target-residual") {
+            self.target_residual = args.f64_or("target-residual", self.target_residual);
+        }
+        if args.has("record-every") {
+            self.record_every = args.usize_or("record-every", self.record_every);
+        }
+        if args.has("seed") {
+            self.seed = args.u64_or("seed", self.seed);
+        }
+        if let Some(s) = args.get("engine") {
+            self.engine = EngineKind::parse(s).with_context(|| format!("bad engine '{s}'"))?;
+        }
+        if let Some(s) = args.get("data-dir") {
+            self.data_dir = Some(s.into());
+        }
+        if let Some(s) = args.get("out-dir") {
+            self.out_dir = s.into();
+        }
+        if args.has("start-near-opt") {
+            self.start_near_opt = args.bool_or("start-near-opt", self.start_near_opt);
+        }
+        self.validate()
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.mu <= 0.0 {
+            bail!("mu must be positive (strong convexity)");
+        }
+        if self.tau <= 0.0 {
+            bail!("tau must be positive");
+        }
+        if self.methods.is_empty() {
+            bail!("at least one method required");
+        }
+        for m in &self.methods {
+            if !crate::methods::METHOD_NAMES.contains(&m.as_str()) {
+                bail!(
+                    "unknown method '{m}' (expected one of {:?})",
+                    crate::methods::METHOD_NAMES
+                );
+            }
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("dataset", Json::Str(self.dataset.clone())),
+            ("workers", Json::Num(self.workers as f64)),
+            ("mu", Json::Num(self.mu)),
+            ("tau", Json::Num(self.tau)),
+            (
+                "methods",
+                Json::Arr(self.methods.iter().map(|m| Json::Str(m.clone())).collect()),
+            ),
+            ("sampling", Json::Str(self.sampling.name().to_string())),
+            ("max_rounds", Json::Num(self.max_rounds as f64)),
+            ("target_residual", Json::Num(self.target_residual)),
+            ("record_every", Json::Num(self.record_every as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("engine", Json::Str(self.engine.name().to_string())),
+            ("start_near_opt", Json::Bool(self.start_near_opt)),
+            ("practical_adiana", Json::Bool(self.practical_adiana)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        ExperimentConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let c = ExperimentConfig::default();
+        let j = c.to_json();
+        let c2 = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(c2.dataset, c.dataset);
+        assert_eq!(c2.methods, c.methods);
+        assert_eq!(c2.tau, c.tau);
+    }
+
+    #[test]
+    fn rejects_unknown_keys_and_bad_values() {
+        assert!(ExperimentConfig::from_json(&Json::parse(r#"{"nope": 1}"#).unwrap()).is_err());
+        assert!(
+            ExperimentConfig::from_json(&Json::parse(r#"{"methods": ["bogus"]}"#).unwrap())
+                .is_err()
+        );
+        assert!(ExperimentConfig::from_json(&Json::parse(r#"{"mu": -1}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let mut c = ExperimentConfig::default();
+        let args = Args::parse(
+            "--dataset mushrooms --tau 4 --methods dcgd,dcgd+ --sampling importance-dcgd"
+                .split_whitespace()
+                .map(String::from),
+            false,
+        );
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.dataset, "mushrooms");
+        assert_eq!(c.tau, 4.0);
+        assert_eq!(c.methods, vec!["dcgd", "dcgd+"]);
+        assert_eq!(c.sampling, SamplingKind::ImportanceDcgd);
+    }
+
+    #[test]
+    fn effective_workers_uses_table3() {
+        let mut c = ExperimentConfig::default();
+        c.dataset = "a1a".into();
+        assert_eq!(c.effective_workers(), 107);
+        c.workers = 5;
+        assert_eq!(c.effective_workers(), 5);
+    }
+}

@@ -1,0 +1,124 @@
+//! Run metrics: per-round residual and communication curves — the data
+//! behind every figure.
+
+use crate::util::timer::PhaseTimer;
+
+#[derive(Clone, Debug)]
+pub struct RoundRecord {
+    pub round: usize,
+    /// ‖x^k − x*‖² / ‖x⁰ − x*‖²  (the figures' "Residual")
+    pub residual: f64,
+    /// cumulative coordinates sent worker→server (all workers)
+    pub coords_up: u64,
+    /// cumulative bits worker→server
+    pub bits_up: u64,
+    /// cumulative coordinates sent server→workers
+    pub coords_down: u64,
+    pub wall_secs: f64,
+}
+
+#[derive(Debug)]
+pub struct RunResult {
+    pub method: String,
+    pub records: Vec<RoundRecord>,
+    pub final_x: Vec<f64>,
+    pub rounds_run: usize,
+    pub reached_target: bool,
+    pub phases: PhaseTimer,
+}
+
+impl RunResult {
+    /// Rounds needed to first reach `residual ≤ eps` (None if never).
+    pub fn rounds_to(&self, eps: f64) -> Option<usize> {
+        self.records
+            .iter()
+            .find(|r| r.residual <= eps)
+            .map(|r| r.round)
+    }
+
+    /// Uplink coordinates needed to first reach `residual ≤ eps`.
+    pub fn coords_to(&self, eps: f64) -> Option<u64> {
+        self.records
+            .iter()
+            .find(|r| r.residual <= eps)
+            .map(|r| r.coords_up)
+    }
+
+    pub fn final_residual(&self) -> f64 {
+        self.records.last().map(|r| r.residual).unwrap_or(f64::NAN)
+    }
+
+    /// CSV rows (for `util::write_csv`).
+    pub fn csv_rows(&self) -> Vec<Vec<String>> {
+        self.records
+            .iter()
+            .map(|r| {
+                vec![
+                    self.method.clone(),
+                    r.round.to_string(),
+                    format!("{:.6e}", r.residual),
+                    r.coords_up.to_string(),
+                    r.bits_up.to_string(),
+                    r.coords_down.to_string(),
+                    format!("{:.6}", r.wall_secs),
+                ]
+            })
+            .collect()
+    }
+
+    pub fn csv_header() -> [&'static str; 7] {
+        [
+            "method",
+            "round",
+            "residual",
+            "coords_up",
+            "bits_up",
+            "coords_down",
+            "wall_secs",
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn result_with(residuals: &[f64]) -> RunResult {
+        RunResult {
+            method: "test".into(),
+            records: residuals
+                .iter()
+                .enumerate()
+                .map(|(i, &r)| RoundRecord {
+                    round: i,
+                    residual: r,
+                    coords_up: (i * 10) as u64,
+                    bits_up: (i * 640) as u64,
+                    coords_down: (i * 100) as u64,
+                    wall_secs: i as f64 * 0.1,
+                })
+                .collect(),
+            final_x: vec![],
+            rounds_run: residuals.len(),
+            reached_target: false,
+            phases: PhaseTimer::new(),
+        }
+    }
+
+    #[test]
+    fn rounds_to_and_coords_to() {
+        let r = result_with(&[1.0, 0.5, 0.05, 0.001]);
+        assert_eq!(r.rounds_to(0.1), Some(2));
+        assert_eq!(r.coords_to(0.1), Some(20));
+        assert_eq!(r.rounds_to(1e-9), None);
+        assert_eq!(r.final_residual(), 0.001);
+    }
+
+    #[test]
+    fn csv_shape() {
+        let r = result_with(&[1.0, 0.1]);
+        let rows = r.csv_rows();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].len(), RunResult::csv_header().len());
+    }
+}

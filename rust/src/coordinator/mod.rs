@@ -1,0 +1,415 @@
+//! L3 coordinator: drives a [`Method`] (server + n workers) against
+//! gradient engines, with exact communication accounting and per-phase
+//! timing.
+//!
+//! Two drivers share the protocol:
+//!
+//! * [`run_sim`] — deterministic in-process loop (workers execute
+//!   sequentially on the calling thread). Used by the figure sweeps,
+//!   benches and tests: zero scheduling noise, exact reproducibility.
+//! * [`run_threaded`] — one OS thread per worker connected by mpsc
+//!   channels, mirroring a real parameter-server deployment. Engines are
+//!   constructed *inside* each worker thread via an [`EngineFactory`]
+//!   (the PJRT client is not `Send`). Used by the e2e example and the
+//!   throughput benches.
+//!
+//! Both drivers seed workers identically, so given the same method +
+//! engines they produce *bitwise identical* trajectories — an invariant
+//! checked in the tests below.
+
+pub mod metrics;
+
+pub use metrics::{RoundRecord, RunResult};
+
+use crate::linalg::vector;
+use crate::methods::{Downlink, Method, Uplink};
+use crate::runtime::GradEngine;
+use crate::util::rng::Rng;
+use crate::util::timer::PhaseTimer;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Stopping / recording policy for one run.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub max_rounds: usize,
+    /// stop as soon as residual ≤ target (0.0 disables)
+    pub target_residual: f64,
+    /// record a metric point every k rounds (round 0 and the final round
+    /// are always kept)
+    pub record_every: usize,
+    pub seed: u64,
+    /// float width used for bit accounting (64 for the f64 pipeline)
+    pub float_bits: u32,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            max_rounds: 1000,
+            target_residual: 0.0,
+            record_every: 1,
+            seed: 0xC0FFEE,
+            float_bits: 64,
+        }
+    }
+}
+
+impl RunConfig {
+    pub fn new(max_rounds: usize) -> RunConfig {
+        RunConfig {
+            max_rounds,
+            ..Default::default()
+        }
+    }
+}
+
+/// Builds a worker's engine inside its own thread.
+pub type EngineFactory = Arc<dyn Fn(usize) -> Box<dyn GradEngine> + Send + Sync>;
+
+struct Accounting {
+    coords_up: u64,
+    bits_up: u64,
+    coords_down: u64,
+}
+
+fn residual(x: &[f64], x_star: &[f64], denom: f64) -> f64 {
+    vector::dist2(x, x_star) / denom
+}
+
+fn bits_of(up: &Uplink, dim: usize, float_bits: u32) -> u64 {
+    let mut b = up.delta.bits(dim, float_bits);
+    if let Some(d2) = &up.delta2 {
+        b += d2.bits(dim, float_bits);
+    }
+    b
+}
+
+/// Deterministic in-process driver.
+pub fn run_sim(
+    method: &mut Method,
+    engines: &mut [Box<dyn GradEngine>],
+    x_star: &[f64],
+    cfg: &RunConfig,
+) -> RunResult {
+    assert_eq!(method.workers.len(), engines.len());
+    let n = method.workers.len();
+    let dim = method.server.dim();
+    let record_every = cfg.record_every.max(1);
+    let base = Rng::new(cfg.seed);
+    let mut server_rng = base.derive(u64::MAX);
+    let mut worker_rngs: Vec<Rng> = (0..n).map(|i| base.derive(i as u64)).collect();
+
+    let denom = vector::dist2(method.server.iterate(), x_star).max(1e-300);
+    let mut acc = Accounting {
+        coords_up: 0,
+        bits_up: 0,
+        coords_down: 0,
+    };
+    let mut phases = PhaseTimer::new();
+    let mut records = vec![RoundRecord {
+        round: 0,
+        residual: 1.0,
+        coords_up: 0,
+        bits_up: 0,
+        coords_down: 0,
+        wall_secs: 0.0,
+    }];
+    let t0 = Instant::now();
+    let mut reached = false;
+    let mut rounds_run = 0;
+
+    for round in 1..=cfg.max_rounds {
+        rounds_run = round;
+        let down = phases.time("server_downlink", || method.server.downlink());
+        acc.coords_down += (down.coords() * n) as u64;
+
+        let mut ups: Vec<Uplink> = Vec::with_capacity(n);
+        for i in 0..n {
+            let up = phases.time("worker_round", || {
+                method.workers[i].round(&down, engines[i].as_mut(), &mut worker_rngs[i])
+            });
+            acc.coords_up += up.coords() as u64;
+            acc.bits_up += bits_of(&up, dim, cfg.float_bits);
+            ups.push(up);
+        }
+
+        phases.time("server_apply", || method.server.apply(&ups, &mut server_rng));
+
+        let res = residual(method.server.iterate(), x_star, denom);
+        let hit_target = cfg.target_residual > 0.0 && res <= cfg.target_residual;
+        if round % record_every == 0 || round == cfg.max_rounds || hit_target {
+            records.push(RoundRecord {
+                round,
+                residual: res,
+                coords_up: acc.coords_up,
+                bits_up: acc.bits_up,
+                coords_down: acc.coords_down,
+                wall_secs: t0.elapsed().as_secs_f64(),
+            });
+        }
+        if hit_target {
+            reached = true;
+            break;
+        }
+    }
+
+    RunResult {
+        method: method.name.clone(),
+        records,
+        final_x: method.server.iterate().to_vec(),
+        rounds_run,
+        reached_target: reached,
+        phases,
+    }
+}
+
+enum ToWorker {
+    Round(Arc<Downlink>),
+    Stop,
+}
+
+/// Threaded parameter-server driver: one thread per worker, synchronous
+/// rounds. Consumes the method (worker halves move into their threads).
+pub fn run_threaded(
+    mut method: Method,
+    engine_factory: EngineFactory,
+    x_star: &[f64],
+    cfg: &RunConfig,
+) -> RunResult {
+    let n = method.workers.len();
+    let dim = method.server.dim();
+    let record_every = cfg.record_every.max(1);
+    let base = Rng::new(cfg.seed);
+    let mut server_rng = base.derive(u64::MAX);
+
+    // spawn workers
+    let mut to_workers: Vec<mpsc::Sender<ToWorker>> = Vec::with_capacity(n);
+    let (up_tx, up_rx) = mpsc::channel::<(usize, Uplink)>();
+    let mut handles = Vec::with_capacity(n);
+    for (i, mut algo) in method.workers.drain(..).enumerate() {
+        let (tx, rx) = mpsc::channel::<ToWorker>();
+        to_workers.push(tx);
+        let up_tx = up_tx.clone();
+        let factory = engine_factory.clone();
+        let mut rng = base.derive(i as u64);
+        handles.push(std::thread::spawn(move || {
+            let mut engine = factory(i);
+            while let Ok(msg) = rx.recv() {
+                match msg {
+                    ToWorker::Round(down) => {
+                        let up = algo.round(&down, engine.as_mut(), &mut rng);
+                        if up_tx.send((i, up)).is_err() {
+                            break;
+                        }
+                    }
+                    ToWorker::Stop => break,
+                }
+            }
+        }));
+    }
+    drop(up_tx);
+
+    let denom = vector::dist2(method.server.iterate(), x_star).max(1e-300);
+    let mut acc = Accounting {
+        coords_up: 0,
+        bits_up: 0,
+        coords_down: 0,
+    };
+    let mut phases = PhaseTimer::new();
+    let mut records = vec![RoundRecord {
+        round: 0,
+        residual: 1.0,
+        coords_up: 0,
+        bits_up: 0,
+        coords_down: 0,
+        wall_secs: 0.0,
+    }];
+    let t0 = Instant::now();
+    let mut reached = false;
+    let mut rounds_run = 0;
+    let mut ups_buf: Vec<Option<Uplink>> = (0..n).map(|_| None).collect();
+
+    for round in 1..=cfg.max_rounds {
+        rounds_run = round;
+        let down = Arc::new(phases.time("server_downlink", || method.server.downlink()));
+        acc.coords_down += (down.coords() * n) as u64;
+        phases.time("scatter", || {
+            for tx in &to_workers {
+                tx.send(ToWorker::Round(down.clone())).expect("worker died");
+            }
+        });
+        phases.time("gather", || {
+            for _ in 0..n {
+                let (i, up) = up_rx.recv().expect("worker channel closed");
+                acc.coords_up += up.coords() as u64;
+                acc.bits_up += bits_of(&up, dim, cfg.float_bits);
+                ups_buf[i] = Some(up);
+            }
+        });
+        let ups: Vec<Uplink> = ups_buf.iter_mut().map(|u| u.take().unwrap()).collect();
+        phases.time("server_apply", || method.server.apply(&ups, &mut server_rng));
+
+        let res = residual(method.server.iterate(), x_star, denom);
+        let hit_target = cfg.target_residual > 0.0 && res <= cfg.target_residual;
+        if round % record_every == 0 || round == cfg.max_rounds || hit_target {
+            records.push(RoundRecord {
+                round,
+                residual: res,
+                coords_up: acc.coords_up,
+                bits_up: acc.bits_up,
+                coords_down: acc.coords_down,
+                wall_secs: t0.elapsed().as_secs_f64(),
+            });
+        }
+        if hit_target {
+            reached = true;
+            break;
+        }
+    }
+
+    for tx in &to_workers {
+        let _ = tx.send(ToWorker::Stop);
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+
+    RunResult {
+        method: method.name.clone(),
+        records,
+        final_x: method.server.iterate().to_vec(),
+        rounds_run,
+        reached_target: reached,
+        phases,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::methods::{build, MethodSpec};
+    use crate::objective::{Problem, Smoothness};
+    use crate::runtime::native::NativeEngine;
+    use crate::sampling::SamplingKind;
+
+    fn setup() -> (Vec<crate::data::Shard>, Smoothness, Vec<f64>) {
+        let ds = synth::generate(&synth::tiny_spec(), 11);
+        let (_, shards) = ds.prepare(4, 11);
+        let sm = Smoothness::build(&shards, 1e-3);
+        let problem = Problem::from_shards(&shards, 1e-3);
+        let sol = crate::methods::solve::solve_opt(&problem, &sm, 1e-13, 20_000);
+        (shards, sm, sol.x_star)
+    }
+
+    fn engines(shards: &[crate::data::Shard]) -> Vec<Box<dyn GradEngine>> {
+        shards
+            .iter()
+            .map(|s| Box::new(NativeEngine::from_shard(s, 1e-3)) as Box<dyn GradEngine>)
+            .collect()
+    }
+
+    #[test]
+    fn sim_driver_dgd_converges() {
+        let (shards, sm, x_star) = setup();
+        let spec = MethodSpec::new("dgd", 1.0, SamplingKind::Uniform, 1e-3, vec![0.0; sm.dim]);
+        let mut m = build(&spec, &sm).unwrap();
+        let mut eng = engines(&shards);
+        let cfg = RunConfig {
+            max_rounds: 1000,
+            target_residual: 1e-8,
+            ..Default::default()
+        };
+        let r = run_sim(&mut m, &mut eng, &x_star, &cfg);
+        assert!(r.reached_target, "final residual {}", r.final_residual());
+    }
+
+    #[test]
+    fn sim_and_threaded_agree_bitwise() {
+        let (shards, sm, x_star) = setup();
+        let spec = MethodSpec::new(
+            "diana+",
+            2.0,
+            SamplingKind::ImportanceDiana,
+            1e-3,
+            vec![0.0; sm.dim],
+        );
+        let cfg = RunConfig {
+            max_rounds: 50,
+            ..Default::default()
+        };
+
+        let mut m1 = build(&spec, &sm).unwrap();
+        let mut eng = engines(&shards);
+        let r1 = run_sim(&mut m1, &mut eng, &x_star, &cfg);
+
+        let m2 = build(&spec, &sm).unwrap();
+        let shards2 = shards.clone();
+        let factory: EngineFactory = Arc::new(move |i| {
+            Box::new(NativeEngine::from_shard(&shards2[i], 1e-3)) as Box<dyn GradEngine>
+        });
+        let r2 = run_threaded(m2, factory, &x_star, &cfg);
+
+        assert_eq!(r1.final_x, r2.final_x, "drivers diverged");
+        assert_eq!(
+            r1.records.last().unwrap().coords_up,
+            r2.records.last().unwrap().coords_up
+        );
+    }
+
+    #[test]
+    fn record_every_thins_records() {
+        let (shards, sm, x_star) = setup();
+        let spec = MethodSpec::new("dcgd", 1.0, SamplingKind::Uniform, 1e-3, vec![0.0; sm.dim]);
+        let mut m = build(&spec, &sm).unwrap();
+        let mut eng = engines(&shards);
+        let cfg = RunConfig {
+            max_rounds: 100,
+            record_every: 10,
+            ..Default::default()
+        };
+        let r = run_sim(&mut m, &mut eng, &x_star, &cfg);
+        assert_eq!(r.records.len(), 11); // round 0 + 10 checkpoints
+    }
+
+    #[test]
+    fn communication_accounting_dgd_dense() {
+        let (shards, sm, x_star) = setup();
+        let n = shards.len() as u64;
+        let d = sm.dim as u64;
+        let spec = MethodSpec::new("dgd", 1.0, SamplingKind::Uniform, 1e-3, vec![0.0; sm.dim]);
+        let mut m = build(&spec, &sm).unwrap();
+        let mut eng = engines(&shards);
+        let cfg = RunConfig {
+            max_rounds: 5,
+            ..Default::default()
+        };
+        let r = run_sim(&mut m, &mut eng, &x_star, &cfg);
+        let last = r.records.last().unwrap();
+        assert_eq!(last.coords_up, 5 * n * d);
+        assert_eq!(last.coords_down, 5 * n * d);
+    }
+
+    #[test]
+    fn tau_one_sends_about_one_coordinate_per_worker() {
+        let (shards, sm, x_star) = setup();
+        let spec = MethodSpec::new("dcgd+", 1.0, SamplingKind::Uniform, 1e-3, vec![0.0; sm.dim]);
+        let mut m = build(&spec, &sm).unwrap();
+        let mut eng = engines(&shards);
+        let rounds = 200;
+        let cfg = RunConfig {
+            max_rounds: rounds,
+            record_every: rounds,
+            ..Default::default()
+        };
+        let r = run_sim(&mut m, &mut eng, &x_star, &cfg);
+        let per_round_per_worker =
+            r.records.last().unwrap().coords_up as f64 / (rounds as f64 * shards.len() as f64);
+        assert!(
+            (per_round_per_worker - 1.0).abs() < 0.3,
+            "E|S| drifted: {per_round_per_worker}"
+        );
+    }
+}

@@ -1,0 +1,193 @@
+//! Dataset container: sparse feature matrix + ±1 labels, with the paper's
+//! preprocessing (row normalization to ‖a_j‖ = 1/2, random reshuffle,
+//! equal-chunk sharding across `n` workers; §6.1).
+
+use crate::linalg::sparse::Csr;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub a: Csr,
+    pub b: Vec<f64>, // labels in {−1, +1}
+}
+
+/// One worker's shard.
+#[derive(Clone, Debug)]
+pub struct Shard {
+    pub worker: usize,
+    pub a: Csr,
+    pub b: Vec<f64>,
+}
+
+impl Dataset {
+    pub fn new(name: String, a: Csr, b: Vec<f64>) -> Dataset {
+        assert_eq!(a.rows, b.len(), "labels/rows mismatch");
+        assert!(b.iter().all(|&l| l == 1.0 || l == -1.0), "labels must be ±1");
+        Dataset { name, a, b }
+    }
+
+    pub fn num_points(&self) -> usize {
+        self.a.rows
+    }
+
+    pub fn dim(&self) -> usize {
+        self.a.cols
+    }
+
+    /// Normalize every datapoint to norm `target` (paper uses 1/2).
+    /// Rows that are entirely zero are left untouched.
+    pub fn normalize_rows(&mut self, target: f64) {
+        let factors: Vec<f64> = (0..self.a.rows)
+            .map(|r| {
+                let n2 = self.a.row_norm2(r);
+                if n2 > 0.0 {
+                    target / n2.sqrt()
+                } else {
+                    1.0
+                }
+            })
+            .collect();
+        self.a.scale_rows(&factors);
+    }
+
+    /// Randomly reshuffle the datapoints (paper: "randomly reshuffled
+    /// datasets ... split into equal chunks").
+    pub fn shuffle(&mut self, rng: &mut Rng) {
+        let perm = rng.permutation(self.a.rows);
+        self.a = self.a.permute_rows(&perm);
+        self.b = perm.iter().map(|&i| self.b[i]).collect();
+    }
+
+    /// Split into `n` equal shards of `m_i = floor(N/n)` points each;
+    /// trailing remainder points are dropped so that `m_i = m_j` exactly
+    /// as in the paper's setup.
+    pub fn split_equal(&self, n: usize) -> Vec<Shard> {
+        assert!(n >= 1);
+        let m = self.a.rows / n;
+        assert!(m >= 1, "not enough points ({}) for {} workers", self.a.rows, n);
+        (0..n)
+            .map(|i| Shard {
+                worker: i,
+                a: self.a.slice_rows(i * m, (i + 1) * m),
+                b: self.b[i * m..(i + 1) * m].to_vec(),
+            })
+            .collect()
+    }
+
+    /// Full preprocessing pipeline used by all experiments.
+    pub fn prepare(mut self, n: usize, seed: u64) -> (Dataset, Vec<Shard>) {
+        let mut rng = Rng::new(seed);
+        self.shuffle(&mut rng);
+        self.normalize_rows(0.5);
+        // keep only the points that survive equal sharding so the "global"
+        // objective f = (1/n)Σ f_i matches the shards exactly
+        let m = self.a.rows / n;
+        let kept = Dataset {
+            name: self.name.clone(),
+            a: self.a.slice_rows(0, m * n),
+            b: self.b[..m * n].to_vec(),
+        };
+        let shards = kept.split_equal(n);
+        (kept, shards)
+    }
+}
+
+impl Shard {
+    pub fn num_points(&self) -> usize {
+        self.a.rows
+    }
+
+    pub fn dim(&self) -> usize {
+        self.a.cols
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::sparse::Csr;
+
+    fn toy(n_rows: usize, d: usize) -> Dataset {
+        let mut t = Vec::new();
+        for r in 0..n_rows {
+            t.push((r, r % d, 1.0 + r as f64));
+            t.push((r, (r + 1) % d, 0.5));
+        }
+        // dedup when d small enough that the two columns collide
+        t.sort_unstable_by_key(|&(r, c, _)| (r, c));
+        t.dedup_by_key(|&mut (r, c, _)| (r, c));
+        let b = (0..n_rows).map(|r| if r % 2 == 0 { 1.0 } else { -1.0 }).collect();
+        Dataset::new("toy".into(), Csr::from_triplets(n_rows, d, t), b)
+    }
+
+    #[test]
+    fn normalize_rows_to_half() {
+        let mut ds = toy(6, 5);
+        ds.normalize_rows(0.5);
+        for r in 0..6 {
+            assert!((ds.a.row_norm2(r).sqrt() - 0.5).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn shuffle_preserves_pairing() {
+        let mut ds = toy(10, 7);
+        let before: Vec<(f64, f64)> = (0..10)
+            .map(|r| (ds.a.row_norm2(r), ds.b[r]))
+            .collect();
+        let mut rng = Rng::new(3);
+        ds.shuffle(&mut rng);
+        let mut after: Vec<(f64, f64)> = (0..10)
+            .map(|r| (ds.a.row_norm2(r), ds.b[r]))
+            .collect();
+        let mut b_sorted = before.clone();
+        b_sorted.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        after.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        assert_eq!(b_sorted, after);
+    }
+
+    #[test]
+    fn split_equal_shapes() {
+        let ds = toy(10, 4);
+        let shards = ds.split_equal(3);
+        assert_eq!(shards.len(), 3);
+        for s in &shards {
+            assert_eq!(s.num_points(), 3);
+            assert_eq!(s.dim(), 4);
+        }
+    }
+
+    #[test]
+    fn prepare_consistency() {
+        let ds = toy(11, 4);
+        let (global, shards) = ds.prepare(3, 42);
+        assert_eq!(global.num_points(), 9);
+        let total: usize = shards.iter().map(|s| s.num_points()).sum();
+        assert_eq!(total, 9);
+        // rows normalized
+        for r in 0..9 {
+            assert!((global.a.row_norm2(r).sqrt() - 0.5).abs() < 1e-12);
+        }
+        // shard rows equal global rows
+        let g = global.a.to_dense();
+        let mut row = 0;
+        for s in &shards {
+            let sd = s.a.to_dense();
+            for r in 0..s.num_points() {
+                for c in 0..4 {
+                    assert_eq!(sd[(r, c)], g[(row, c)]);
+                }
+                assert_eq!(s.b[r], global.b[row]);
+                row += 1;
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_labels_rejected() {
+        let a = Csr::from_triplets(1, 1, vec![(0, 0, 1.0)]);
+        Dataset::new("bad".into(), a, vec![0.5]);
+    }
+}

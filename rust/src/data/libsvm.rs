@@ -1,0 +1,150 @@
+//! LibSVM text format parser.
+//!
+//! The paper's experiments use LibSVM binary-classification datasets
+//! (Chang & Lin, 2011). This image has no network access, so experiments
+//! default to the synthetic generators in [`crate::data::synth`] — but any
+//! genuine LibSVM file dropped under `data/` is parsed by this module and
+//! used instead (`smx ... --data-dir data/`).
+//!
+//! Format: one example per line, `label idx:val idx:val ...` with 1-based
+//! feature indices; labels are mapped to ±1.
+
+use crate::data::dataset::Dataset;
+use crate::linalg::sparse::Csr;
+use anyhow::{bail, Context, Result};
+
+/// Parse LibSVM text. `num_features` may force a dimension (otherwise the
+/// max index seen defines it).
+pub fn parse_libsvm(text: &str, num_features: Option<usize>) -> Result<Dataset> {
+    let mut triplets: Vec<(usize, usize, f64)> = Vec::new();
+    let mut labels: Vec<f64> = Vec::new();
+    let mut max_idx = 0usize;
+
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let row = labels.len();
+        let mut parts = line.split_whitespace();
+        let label_tok = parts.next().context("missing label")?;
+        let label: f64 = label_tok
+            .parse()
+            .with_context(|| format!("line {}: bad label '{label_tok}'", lineno + 1))?;
+        labels.push(normalize_label(label)?);
+
+        let mut last_idx = 0usize;
+        for tok in parts {
+            let (i_str, v_str) = tok
+                .split_once(':')
+                .with_context(|| format!("line {}: bad feature '{tok}'", lineno + 1))?;
+            let idx: usize = i_str
+                .parse()
+                .with_context(|| format!("line {}: bad index '{i_str}'", lineno + 1))?;
+            if idx == 0 {
+                bail!("line {}: libsvm indices are 1-based", lineno + 1);
+            }
+            if idx <= last_idx {
+                bail!("line {}: indices must be strictly increasing", lineno + 1);
+            }
+            last_idx = idx;
+            let val: f64 = v_str
+                .parse()
+                .with_context(|| format!("line {}: bad value '{v_str}'", lineno + 1))?;
+            max_idx = max_idx.max(idx);
+            if val != 0.0 {
+                triplets.push((row, idx - 1, val));
+            }
+        }
+    }
+
+    let d = match num_features {
+        Some(d) => {
+            if max_idx > d {
+                bail!("feature index {max_idx} exceeds forced dimension {d}");
+            }
+            d
+        }
+        None => max_idx,
+    };
+    let rows = labels.len();
+    if rows == 0 {
+        bail!("empty libsvm file");
+    }
+    let a = Csr::from_triplets(rows, d, triplets);
+    Ok(Dataset::new("libsvm".to_string(), a, labels))
+}
+
+/// Map arbitrary binary labels to ±1 (LibSVM files use {−1,+1}, {0,1} or
+/// {1,2} depending on the dataset).
+fn normalize_label(l: f64) -> Result<f64> {
+    match l {
+        x if x == 1.0 => Ok(1.0),
+        x if x == -1.0 => Ok(-1.0),
+        x if x == 0.0 => Ok(-1.0),
+        x if x == 2.0 => Ok(-1.0),
+        other => bail!("unsupported label {other}"),
+    }
+}
+
+pub fn load_file(path: &std::path::Path, num_features: Option<usize>) -> Result<Dataset> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading libsvm file {}", path.display()))?;
+    let mut ds = parse_libsvm(&text, num_features)?;
+    ds.name = path
+        .file_stem()
+        .map(|s| s.to_string_lossy().to_string())
+        .unwrap_or_else(|| "libsvm".to_string());
+    Ok(ds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
++1 1:0.5 3:1.0
+-1 2:2.0
++1 1:1.0 2:-1.0 3:0.25
+";
+
+    #[test]
+    fn parses_basic() {
+        let ds = parse_libsvm(SAMPLE, None).unwrap();
+        assert_eq!(ds.a.rows, 3);
+        assert_eq!(ds.a.cols, 3);
+        assert_eq!(ds.b, vec![1.0, -1.0, 1.0]);
+        assert_eq!(ds.a.to_dense()[(0, 0)], 0.5);
+        assert_eq!(ds.a.to_dense()[(1, 1)], 2.0);
+        assert_eq!(ds.a.to_dense()[(2, 2)], 0.25);
+    }
+
+    #[test]
+    fn forced_dimension() {
+        let ds = parse_libsvm(SAMPLE, Some(10)).unwrap();
+        assert_eq!(ds.a.cols, 10);
+        assert!(parse_libsvm(SAMPLE, Some(2)).is_err());
+    }
+
+    #[test]
+    fn label_normalization() {
+        let ds = parse_libsvm("0 1:1\n1 1:1\n2 1:1\n", None).unwrap();
+        assert_eq!(ds.b, vec![-1.0, 1.0, -1.0]);
+        assert!(parse_libsvm("3 1:1\n", None).is_err());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse_libsvm("+1 0:1\n", None).is_err()); // 0-based index
+        assert!(parse_libsvm("+1 2:1 1:1\n", None).is_err()); // decreasing
+        assert!(parse_libsvm("+1 a:b\n", None).is_err());
+        assert!(parse_libsvm("", None).is_err());
+        assert!(parse_libsvm("+1 1\n", None).is_err()); // no colon
+    }
+
+    #[test]
+    fn skips_comments_and_blanks() {
+        let ds = parse_libsvm("# header\n\n+1 1:1\n", None).unwrap();
+        assert_eq!(ds.a.rows, 1);
+    }
+}

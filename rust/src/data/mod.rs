@@ -1,0 +1,52 @@
+//! Datasets: LibSVM parsing, synthetic LibSVM-like generation (Table 3
+//! shapes), normalization and sharding.
+
+pub mod dataset;
+pub mod libsvm;
+pub mod synth;
+
+pub use dataset::{Dataset, Shard};
+pub use synth::{generate, spec_by_name, SynthSpec, PAPER_DATASETS};
+
+use anyhow::{bail, Result};
+
+/// Load dataset `name`: if `data_dir` contains a genuine LibSVM file named
+/// `name` (or `name.txt`), parse it; otherwise fall back to the synthetic
+/// generator with the paper's Table 3 shape.
+pub fn load_or_synth(name: &str, data_dir: Option<&std::path::Path>, seed: u64) -> Result<Dataset> {
+    if let Some(dir) = data_dir {
+        for cand in [dir.join(name), dir.join(format!("{name}.txt"))] {
+            if cand.is_file() {
+                let forced_dim = spec_by_name(name).map(|s| s.d);
+                return libsvm::load_file(&cand, forced_dim);
+            }
+        }
+    }
+    match spec_by_name(name) {
+        Some(spec) => Ok(synth::generate(spec, seed)),
+        None if name == "tiny" => Ok(synth::generate(&synth::tiny_spec(), seed)),
+        None => bail!("unknown dataset '{name}' and no file found"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synth_fallback_works() {
+        let ds = load_or_synth("tiny", None, 1).unwrap();
+        assert_eq!(ds.name, "tiny");
+        assert!(load_or_synth("nonexistent", None, 1).is_err());
+    }
+
+    #[test]
+    fn file_takes_precedence() {
+        let dir = std::env::temp_dir().join("smx_data_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("tiny.txt"), "+1 1:1.0\n-1 2:0.5\n").unwrap();
+        let ds = load_or_synth("tiny", Some(&dir), 1).unwrap();
+        assert_eq!(ds.num_points(), 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,223 @@
+//! Figure drivers — one per paper figure (see DESIGN.md §3).
+//!
+//! Each driver writes long-format CSV curves under `out_dir` and prints a
+//! compact summary comparing the *shape* of the result against the
+//! paper's qualitative claims (who wins, by how much).
+
+use crate::compress::lowerbound;
+use crate::config::ExperimentConfig;
+use crate::experiments::runner::{self, Variant};
+use crate::sampling::SamplingKind;
+use crate::util::rng::Rng;
+use anyhow::Result;
+
+/// Figure 1: DIANA+ importance vs DIANA+ uniform vs DIANA uniform (τ = 1).
+pub fn fig1(cfg: &ExperimentConfig) -> Result<()> {
+    let mut c = cfg.clone();
+    c.methods = vec!["diana+".into(), "diana".into()];
+    let prep = runner::prepare(&c)?;
+    let variants = vec![
+        Variant {
+            label: "diana+-importance".into(),
+            method: "diana+",
+            sampling: SamplingKind::ImportanceDiana,
+            tau: c.tau,
+        },
+        Variant {
+            label: "diana+-uniform".into(),
+            method: "diana+",
+            sampling: SamplingKind::Uniform,
+            tau: c.tau,
+        },
+        Variant {
+            label: "diana-uniform".into(),
+            method: "diana",
+            sampling: SamplingKind::Uniform,
+            tau: c.tau,
+        },
+    ];
+    let results = runner::run_variants(&prep, &c, &variants, &format!("fig1_{}", c.dataset))?;
+    summarize_ordering(
+        &c.dataset,
+        &results,
+        1e-6,
+        &["diana+-importance", "diana+-uniform", "diana-uniform"],
+    );
+    Ok(())
+}
+
+/// Figure 2: the 3 originals vs the 3 "+" methods, uniform τ = 1, started
+/// near the optimum.
+pub fn fig2(cfg: &ExperimentConfig) -> Result<()> {
+    let mut c = cfg.clone();
+    c.start_near_opt = true;
+    c.methods = vec![
+        "dcgd".into(),
+        "dcgd+".into(),
+        "diana".into(),
+        "diana+".into(),
+        "adiana".into(),
+        "adiana+".into(),
+    ];
+    let prep = runner::prepare(&c)?;
+    let variants: Vec<Variant> = c
+        .methods
+        .iter()
+        .map(|m| Variant {
+            label: m.clone(),
+            method: match m.as_str() {
+                "dcgd" => "dcgd",
+                "dcgd+" => "dcgd+",
+                "diana" => "diana",
+                "diana+" => "diana+",
+                "adiana" => "adiana",
+                "adiana+" => "adiana+",
+                _ => unreachable!(),
+            },
+            sampling: SamplingKind::Uniform,
+            tau: c.tau,
+        })
+        .collect();
+    let results = runner::run_variants(&prep, &c, &variants, &format!("fig2_{}", c.dataset))?;
+    // paper claim (i): each + method beats its baseline
+    for (plus, base) in [("dcgd+", "dcgd"), ("diana+", "diana"), ("adiana+", "adiana")] {
+        compare_pair(&c.dataset, &results, plus, base);
+    }
+    Ok(())
+}
+
+/// Figures 3 & 4: τ-sweep for DIANA+ (importance and uniform sampling).
+/// One CSV serves both figures (Figure 4 re-plots vs `coords_up`).
+pub fn fig34(cfg: &ExperimentConfig) -> Result<()> {
+    let mut c = cfg.clone();
+    c.methods = vec!["diana+".into()];
+    let prep = runner::prepare(&c)?;
+    let d = prep.sm.dim as f64;
+    let mut taus: Vec<f64> = vec![1.0, 2.0, 4.0, 8.0]
+        .into_iter()
+        .filter(|&t| t < d)
+        .collect();
+    for frac in [d / 16.0, d / 4.0, d] {
+        let t = frac.max(1.0).floor();
+        if !taus.iter().any(|&x| (x - t).abs() < 0.5) {
+            taus.push(t);
+        }
+    }
+    taus.sort_by(|a, b| a.partial_cmp(b).unwrap());
+
+    let mut variants = Vec::new();
+    for &tau in &taus {
+        for (skind, sname) in [
+            (SamplingKind::ImportanceDiana, "importance"),
+            (SamplingKind::Uniform, "uniform"),
+        ] {
+            variants.push(Variant {
+                label: format!("tau{}-{}", tau as usize, sname),
+                method: "diana+",
+                sampling: skind,
+                tau,
+            });
+        }
+    }
+    let results = runner::run_variants(&prep, &c, &variants, &format!("fig34_{}", c.dataset))?;
+
+    // paper claim: sparsification hurts iteration complexity only below a
+    // threshold; report rounds-to-target per τ
+    println!("\n[fig3/4 {}] rounds (coords) to residual ≤ {:.0e}:", c.dataset, 1e-6);
+    for (label, r) in &results {
+        match (r.rounds_to(1e-6), r.coords_to(1e-6)) {
+            (Some(it), Some(cc)) => println!("  {label:<22} {it:>8} rounds  {cc:>12} coords"),
+            _ => println!("  {label:<22} (target not reached in {} rounds)", r.rounds_run),
+        }
+    }
+    Ok(())
+}
+
+/// Figure 5: variance-vs-communication trade-off for linear compressors
+/// (Appendix C): random q-sparsification and greedy top-k on Gaussian
+/// vectors, against both lower bounds.
+pub fn fig5(cfg: &ExperimentConfig) -> Result<()> {
+    let d = 1000;
+    let mut rng = Rng::new(cfg.seed);
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    let mut violations = 0usize;
+
+    for rep in 0..8 {
+        for &q in &[0.02, 0.05, 0.1, 0.2, 0.3, 0.5, 0.7, 0.9] {
+            let p = lowerbound::random_sparsification_point(d, q, &mut rng);
+            if p.linear_lb < 1.0 - 0.05 {
+                violations += 1;
+            }
+            rows.push(point_row(rep, &p));
+        }
+        for &k in &[10usize, 30, 100, 200, 300, 500, 700, 900] {
+            let p = lowerbound::topk_point(d, k, &mut rng);
+            rows.push(point_row(rep, &p));
+        }
+    }
+    let path = cfg.out_dir.join("fig5.csv");
+    crate::util::write_csv(
+        &path,
+        &["rep", "scheme", "param", "alpha", "bits", "beta", "general_up", "linear_lb"],
+        &rows,
+    )?;
+    println!(
+        "[fig5] wrote {} ({} points, {} linear-bound violations for the linear scheme — expect 0)",
+        path.display(),
+        rows.len(),
+        violations
+    );
+    Ok(())
+}
+
+fn point_row(rep: usize, p: &lowerbound::TradeoffPoint) -> Vec<String> {
+    vec![
+        rep.to_string(),
+        p.scheme.to_string(),
+        format!("{:.4}", p.param),
+        format!("{:.6}", p.alpha),
+        format!("{:.1}", p.bits),
+        format!("{:.6}", p.beta),
+        format!("{:.6}", p.general_up),
+        format!("{:.6}", p.linear_lb),
+    ]
+}
+
+/// Print "A beats B" style summary using rounds-to-threshold (falls back
+/// to final residual if neither reaches it).
+fn compare_pair(ds: &str, results: &[(String, crate::coordinator::RunResult)], a: &str, b: &str) {
+    let ra = results.iter().find(|(l, _)| l == a);
+    let rb = results.iter().find(|(l, _)| l == b);
+    if let (Some((_, ra)), Some((_, rb))) = (ra, rb) {
+        let eps = 1e-6;
+        match (ra.rounds_to(eps), rb.rounds_to(eps)) {
+            (Some(ia), Some(ib)) => println!(
+                "[{ds}] {a} vs {b}: {ia} vs {ib} rounds to {eps:.0e} ({}x)",
+                ib as f64 / ia as f64
+            ),
+            _ => println!(
+                "[{ds}] {a} vs {b}: final residual {:.3e} vs {:.3e}",
+                ra.final_residual(),
+                rb.final_residual()
+            ),
+        }
+    }
+}
+
+fn summarize_ordering(
+    ds: &str,
+    results: &[(String, crate::coordinator::RunResult)],
+    eps: f64,
+    expected_order: &[&str],
+) {
+    println!("\n[{ds}] rounds to residual ≤ {eps:.0e} (expected fastest → slowest: {expected_order:?}):");
+    for (label, r) in results {
+        match r.rounds_to(eps) {
+            Some(it) => println!("  {label:<22} {it:>8}"),
+            None => println!(
+                "  {label:<22} not reached (final {:.3e})",
+                r.final_residual()
+            ),
+        }
+    }
+}

@@ -1,0 +1,6 @@
+//! Experiment drivers regenerating every table and figure of the paper's
+//! evaluation (see DESIGN.md §3 for the index).
+
+pub mod figures;
+pub mod runner;
+pub mod tables;

@@ -1,0 +1,242 @@
+//! Shared experiment runner: dataset preparation, x* solving, method
+//! construction and execution, CSV output.
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::{run_sim, run_threaded, EngineFactory, RunConfig, RunResult};
+use crate::data::{self, Dataset, Shard};
+use crate::methods::{build, solve, MethodSpec};
+use crate::objective::{Problem, Smoothness};
+use crate::runtime::native::NativeEngine;
+use crate::runtime::{EngineKind, GradEngine};
+use crate::sampling::SamplingKind;
+use crate::util::rng::Rng;
+use anyhow::{Context, Result};
+use std::sync::Arc;
+
+/// A fully prepared problem instance, reused across methods of one figure.
+pub struct Prepared {
+    pub dataset: Dataset,
+    pub shards: Vec<Shard>,
+    pub sm: Smoothness,
+    pub problem: Problem,
+    pub x_star: Vec<f64>,
+    pub f_star: f64,
+}
+
+pub fn prepare(cfg: &ExperimentConfig) -> Result<Prepared> {
+    prepare_with(cfg, cfg.methods.iter().any(|m| m == "diana++"))
+}
+
+pub fn prepare_with(cfg: &ExperimentConfig, need_global: bool) -> Result<Prepared> {
+    let n = cfg.effective_workers();
+    let raw = data::load_or_synth(&cfg.dataset, cfg.data_dir.as_deref(), cfg.seed)
+        .with_context(|| format!("loading dataset {}", cfg.dataset))?;
+    let (global, shards) = raw.prepare(n, cfg.seed);
+    let mut sm = Smoothness::build(&shards, cfg.mu);
+    if need_global {
+        sm = sm.with_global(&global.a);
+    }
+    let problem = Problem::from_shards(&shards, cfg.mu);
+    let sol = solve::solve_opt(&problem, &sm, 1e-14, 50_000);
+    crate::info!(
+        "runner",
+        "prepared {}: N={} d={} n={} m_i={} | L={:.4e} L_max={:.4e} ‖∇f(x*)‖={:.2e}",
+        cfg.dataset,
+        global.num_points(),
+        global.dim(),
+        n,
+        shards[0].num_points(),
+        sm.l,
+        sm.l_max,
+        sol.grad_norm
+    );
+    Ok(Prepared {
+        dataset: global,
+        shards,
+        sm,
+        problem,
+        x_star: sol.x_star,
+        f_star: sol.f_star,
+    })
+}
+
+impl Prepared {
+    /// Starting point: zero, or a small perturbation of x* (Figure 2).
+    pub fn x0(&self, cfg: &ExperimentConfig) -> Vec<f64> {
+        if !cfg.start_near_opt {
+            return vec![0.0; self.sm.dim];
+        }
+        let mut rng = Rng::new(cfg.seed ^ 0x57A7);
+        let scale = 1e-3 * (crate::linalg::vector::norm(&self.x_star) + 1.0)
+            / (self.sm.dim as f64).sqrt();
+        self.x_star
+            .iter()
+            .map(|&v| v + scale * rng.normal())
+            .collect()
+    }
+
+    pub fn native_engines(&self, mu: f64) -> Vec<Box<dyn GradEngine>> {
+        self.shards
+            .iter()
+            .map(|s| Box::new(NativeEngine::from_shard(s, mu)) as Box<dyn GradEngine>)
+            .collect()
+    }
+}
+
+/// Run one method on a prepared problem. `sampling`/`tau` override the
+/// config (figures sweep them).
+pub fn run_one(
+    prep: &Prepared,
+    cfg: &ExperimentConfig,
+    method_name: &str,
+    sampling: SamplingKind,
+    tau: f64,
+) -> Result<RunResult> {
+    let mut spec = MethodSpec::new(method_name, tau, sampling, cfg.mu, prep.x0(cfg));
+    spec.practical_adiana = cfg.practical_adiana;
+    let mut method = build(&spec, &prep.sm)?;
+    let run_cfg = RunConfig {
+        max_rounds: cfg.max_rounds,
+        target_residual: cfg.target_residual,
+        record_every: cfg.record_every,
+        seed: cfg.seed,
+        float_bits: 64,
+    };
+    let result = match cfg.engine {
+        EngineKind::Native => {
+            let mut engines = prep.native_engines(cfg.mu);
+            run_sim(&mut method, &mut engines, &prep.x_star, &run_cfg)
+        }
+        EngineKind::Pjrt => {
+            let manifest = Arc::new(crate::runtime::artifact::Manifest::load(
+                &crate::runtime::artifact::default_dir(),
+            )?);
+            let shards = prep.shards.clone();
+            let mu = cfg.mu;
+            let factory: EngineFactory = Arc::new(move |i| {
+                Box::new(
+                    crate::runtime::pjrt::PjrtEngine::from_shard(&manifest, &shards[i], mu)
+                        .expect("building PJRT engine"),
+                ) as Box<dyn GradEngine>
+            });
+            run_threaded(method, factory, &prep.x_star, &run_cfg)
+        }
+    };
+    Ok(result)
+}
+
+/// A labeled variant in a figure sweep.
+pub struct Variant {
+    pub label: String,
+    pub method: &'static str,
+    pub sampling: SamplingKind,
+    pub tau: f64,
+}
+
+/// Run a set of variants and write one CSV (long format with a `label`
+/// column) to `out_dir/name.csv`. Returns (label, result) pairs.
+pub fn run_variants(
+    prep: &Prepared,
+    cfg: &ExperimentConfig,
+    variants: &[Variant],
+    out_name: &str,
+) -> Result<Vec<(String, RunResult)>> {
+    let mut results = Vec::new();
+    for v in variants {
+        crate::info!("runner", "  running {} ({})", v.label, v.method);
+        let r = run_one(prep, cfg, v.method, v.sampling, v.tau)?;
+        crate::info!(
+            "runner",
+            "    {} rounds, final residual {:.3e}",
+            r.rounds_run,
+            r.final_residual()
+        );
+        results.push((v.label.clone(), r));
+    }
+
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    for (label, r) in &results {
+        for rec in &r.records {
+            rows.push(vec![
+                label.clone(),
+                rec.round.to_string(),
+                format!("{:.6e}", rec.residual),
+                rec.coords_up.to_string(),
+                rec.bits_up.to_string(),
+                rec.coords_down.to_string(),
+                format!("{:.6}", rec.wall_secs),
+            ]);
+        }
+    }
+    let path = cfg.out_dir.join(format!("{out_name}.csv"));
+    crate::util::write_csv(
+        &path,
+        &[
+            "label",
+            "round",
+            "residual",
+            "coords_up",
+            "bits_up",
+            "coords_down",
+            "wall_secs",
+        ],
+        &rows,
+    )?;
+    crate::info!("runner", "wrote {}", path.display());
+    Ok(results)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> ExperimentConfig {
+        ExperimentConfig {
+            dataset: "tiny".into(),
+            workers: 4,
+            max_rounds: 300,
+            target_residual: 1e-6,
+            record_every: 10,
+            out_dir: std::env::temp_dir().join("smx_runner_test"),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn prepare_and_run_diana_plus() {
+        let cfg = tiny_cfg();
+        let prep = prepare(&cfg).unwrap();
+        assert!(prep.f_star.is_finite());
+        let r = run_one(&prep, &cfg, "diana+", SamplingKind::ImportanceDiana, 2.0).unwrap();
+        assert!(r.final_residual() < 1.0, "no progress");
+    }
+
+    #[test]
+    fn start_near_opt_starts_close() {
+        let mut cfg = tiny_cfg();
+        cfg.start_near_opt = true;
+        let prep = prepare(&cfg).unwrap();
+        let x0 = prep.x0(&cfg);
+        let rel = crate::linalg::vector::dist2(&x0, &prep.x_star).sqrt()
+            / crate::linalg::vector::norm(&prep.x_star).max(1e-9);
+        assert!(rel < 0.1, "x0 too far: rel={rel}");
+    }
+
+    #[test]
+    fn run_variants_writes_csv() {
+        let cfg = tiny_cfg();
+        let prep = prepare(&cfg).unwrap();
+        let variants = vec![Variant {
+            label: "dcgd-uniform".into(),
+            method: "dcgd",
+            sampling: SamplingKind::Uniform,
+            tau: 1.0,
+        }];
+        let results = run_variants(&prep, &cfg, &variants, "test_out").unwrap();
+        assert_eq!(results.len(), 1);
+        let csv = std::fs::read_to_string(cfg.out_dir.join("test_out.csv")).unwrap();
+        assert!(csv.starts_with("label,round,residual"));
+        assert!(csv.lines().count() > 2);
+        std::fs::remove_dir_all(&cfg.out_dir).ok();
+    }
+}

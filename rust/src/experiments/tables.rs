@@ -1,0 +1,186 @@
+//! Table drivers: Table 2 (complexity constants + predicted iteration
+//! complexities), Table 3 (dataset statistics), Table 6 (single-node
+//! complexities).
+
+use crate::config::ExperimentConfig;
+use crate::experiments::runner;
+use crate::methods::single::eso_lambda;
+use crate::objective::smoothness::build_local;
+use crate::sampling::SamplingKind;
+use anyhow::Result;
+
+/// Table 2: per-dataset constants and the predicted iteration complexities
+/// of all six methods (original vs "+"), with τ = d/n as in the paper's
+/// ω = 𝒪(n) regime, plus the ν/ν₁/ν₂ distribution parameters of eq. (14).
+pub fn table2(cfg: &ExperimentConfig, datasets: &[String]) -> Result<Vec<Vec<String>>> {
+    let header = [
+        "dataset", "n", "d", "mu", "L", "L_max", "nu", "nu1", "nu2", "omega", "omega_max_imp",
+        "tilde_l_max_uni", "tilde_l_max_imp", "k_dcgd", "k_dcgd+", "k_diana", "k_diana+",
+        "k_adiana", "k_adiana+", "speedup_dcgd", "speedup_diana",
+    ];
+    println!("{}", header.join(","));
+    let mut rows = Vec::new();
+
+    for ds in datasets {
+        let mut c = cfg.clone();
+        c.dataset = ds.clone();
+        let prep = runner::prepare_with(&c, false)?;
+        let sm = &prep.sm;
+        let n = sm.n() as f64;
+        let d = sm.dim as f64;
+        let mu = sm.mu;
+        // paper regime: τ = d/n ⇒ ω = d/τ − 1 = n − 1
+        let tau = (d / n).max(1.0);
+        let omega = d / tau - 1.0;
+
+        let mut tilde_uni: f64 = 0.0;
+        let mut tilde_imp: f64 = 0.0;
+        let mut omega_imp: f64 = 0.0;
+        for loc in &sm.locals {
+            let s_uni = SamplingKind::Uniform.build(&loc.diag, tau, mu, sm.n());
+            let s_imp = SamplingKind::ImportanceDiana.build(&loc.diag, tau, mu, sm.n());
+            tilde_uni = tilde_uni.max(s_uni.tilde_l(&loc.diag));
+            tilde_imp = tilde_imp.max(s_imp.tilde_l(&loc.diag));
+            omega_imp = omega_imp.max(s_imp.omega());
+        }
+
+        // predicted iteration complexities (Table 2 rows, log factors dropped)
+        let k_dcgd = sm.l / mu + omega * sm.l_max / (n * mu);
+        let k_dcgd_p = sm.l / mu + tilde_imp / (n * mu);
+        let k_diana = omega + sm.l_max / mu + omega * sm.l_max / (n * mu);
+        let k_diana_p = omega_imp + sm.l / mu + tilde_imp / (n * mu);
+        let k_adiana = adiana_complexity(n, mu, sm.l, omega, omega * sm.l_max);
+        let k_adiana_p = adiana_complexity(n, mu, sm.l, omega_imp, tilde_imp);
+
+        let row = vec![
+            ds.clone(),
+            format!("{}", sm.n()),
+            format!("{}", sm.dim),
+            format!("{mu:.0e}"),
+            format!("{:.4e}", sm.l),
+            format!("{:.4e}", sm.l_max),
+            format!("{:.2}", sm.nu()),
+            format!("{:.2}", sm.nu_s(1.0)),
+            format!("{:.2}", sm.nu_s(2.0)),
+            format!("{omega:.1}"),
+            format!("{omega_imp:.1}"),
+            format!("{tilde_uni:.4e}"),
+            format!("{tilde_imp:.4e}"),
+            format!("{k_dcgd:.3e}"),
+            format!("{k_dcgd_p:.3e}"),
+            format!("{k_diana:.3e}"),
+            format!("{k_diana_p:.3e}"),
+            format!("{k_adiana:.3e}"),
+            format!("{k_adiana_p:.3e}"),
+            format!("{:.2}", k_dcgd / k_dcgd_p),
+            format!("{:.2}", k_diana / k_diana_p),
+        ];
+        println!("{}", row.join(","));
+        rows.push(row);
+    }
+    crate::util::write_csv(
+        &cfg.out_dir.join("table2.csv"),
+        &header,
+        &rows,
+    )?;
+    Ok(rows)
+}
+
+/// Predicted ADIANA complexity (eq. 13 shape, constants dropped).
+fn adiana_complexity(n: f64, mu: f64, l: f64, omega: f64, variance: f64) -> f64 {
+    if n * l <= variance {
+        omega + (omega * variance / (mu * n)).sqrt()
+    } else {
+        omega + (l / mu).sqrt() + (omega * (variance / (mu * n)).sqrt() * (l / mu).sqrt()).sqrt()
+    }
+}
+
+/// Table 3: dataset statistics (ours vs the paper's shapes — identical by
+/// construction for the synthetic generators).
+pub fn table3(cfg: &ExperimentConfig, datasets: &[String]) -> Result<Vec<Vec<String>>> {
+    let header = ["dataset", "points", "d", "n", "m_i", "nnz_frac"];
+    println!("{}", header.join(","));
+    let mut rows = Vec::new();
+    for ds in datasets {
+        let raw = crate::data::load_or_synth(ds, cfg.data_dir.as_deref(), cfg.seed)?;
+        let n = crate::data::spec_by_name(ds).map(|s| s.n).unwrap_or(4);
+        let row = vec![
+            ds.clone(),
+            raw.num_points().to_string(),
+            raw.dim().to_string(),
+            n.to_string(),
+            (raw.num_points() / n).to_string(),
+            format!("{:.4}", raw.a.density()),
+        ];
+        println!("{}", row.join(","));
+        rows.push(row);
+    }
+    crate::util::write_csv(&cfg.out_dir.join("table3.csv"), &header, &rows)?;
+    Ok(rows)
+}
+
+/// Table 6: single-node complexity constants — 𝓛̄ = λ_max(P̄∘L) (SkGD/CGD+)
+/// and 𝓛̃ for uniform and serial-optimal samplings.
+pub fn table6(cfg: &ExperimentConfig, datasets: &[String]) -> Result<Vec<Vec<String>>> {
+    let header = [
+        "dataset", "d", "L", "k_skgd_uni", "k_cgd+_uni", "k_nsync_serial", "k_gd",
+    ];
+    println!("{}", header.join(","));
+    let mut rows = Vec::new();
+    for ds in datasets {
+        let mut c = cfg.clone();
+        c.dataset = ds.clone();
+        c.workers = 1;
+        let raw = crate::data::load_or_synth(ds, c.data_dir.as_deref(), c.seed)?;
+        let (global, _) = raw.prepare(1, c.seed);
+        let loc = build_local(&global.a, c.mu);
+        let d = global.dim();
+        let tau = (d as f64 / 8.0).max(1.0);
+        let p_uni = vec![(tau / d as f64).min(1.0); d];
+        let lbar = eso_lambda(&loc.root, &loc.diag, &p_uni);
+        // complexities (Table 6): SkGD 𝓛̄/μ ; CGD+ 𝓛̄/μ (+ neighborhood);
+        // 'NSync serial ΣL_jj/μ ; GD L/μ
+        let k_skgd = lbar / c.mu;
+        let k_nsync = loc.diag.iter().sum::<f64>() / c.mu;
+        let k_gd = loc.root.lambda_max() / c.mu;
+        let row = vec![
+            ds.clone(),
+            d.to_string(),
+            format!("{:.4e}", loc.root.lambda_max()),
+            format!("{k_skgd:.3e}"),
+            format!("{:.3e}", 2.0 * k_skgd),
+            format!("{k_nsync:.3e}"),
+            format!("{k_gd:.3e}"),
+        ];
+        println!("{}", row.join(","));
+        rows.push(row);
+    }
+    crate::util::write_csv(&cfg.out_dir.join("table6.csv"), &header, &rows)?;
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tables_run_on_tiny() {
+        let cfg = ExperimentConfig {
+            dataset: "tiny".into(),
+            workers: 4,
+            out_dir: std::env::temp_dir().join("smx_tables_test"),
+            ..Default::default()
+        };
+        let ds = vec!["tiny".to_string()];
+        let t2 = table2(&cfg, &ds).unwrap();
+        assert_eq!(t2.len(), 1);
+        // speedup factors must be ≥ 1 (the + methods never lose in theory)
+        let speedup_dcgd: f64 = t2[0][t2[0].len() - 2].parse().unwrap();
+        assert!(speedup_dcgd >= 0.99, "speedup {speedup_dcgd}");
+        let t3 = table3(&cfg, &ds).unwrap();
+        assert_eq!(t3[0][1], "120");
+        let t6 = table6(&cfg, &ds).unwrap();
+        assert_eq!(t6.len(), 1);
+        std::fs::remove_dir_all(&cfg.out_dir).ok();
+    }
+}

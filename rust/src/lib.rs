@@ -1,0 +1,30 @@
+//! # smx — Smoothness Matrices Beat Smoothness Constants
+//!
+//! A three-layer Rust + JAX + Pallas reproduction of
+//! *"Smoothness Matrices Beat Smoothness Constants: Better Communication
+//! Compression Techniques for Distributed Optimization"* (Safaryan,
+//! Hanzely, Richtárik — NeurIPS 2021).
+//!
+//! The library implements the paper's data-dependent sparsification
+//! protocol (Definition 3 / eq. (7)) and the matrix-smoothness-aware
+//! redesigns DCGD+, DIANA+, ADIANA+ (Algorithms 1–3), the appendix
+//! methods ISEGA+ and DIANA++ (Algorithms 7–8), the single-node family
+//! SkGD/CGD+/'NSync (Algorithms 4–6), and all original baselines —
+//! running on a parameter-server coordinator whose per-worker gradient
+//! computation executes AOT-compiled JAX/Pallas artifacts through the
+//! PJRT CPU client.
+//!
+//! See `DESIGN.md` for the system inventory and the experiment index, and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod compress;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod linalg;
+pub mod methods;
+pub mod objective;
+pub mod runtime;
+pub mod sampling;
+pub mod util;

@@ -1,0 +1,288 @@
+//! Row-major dense matrices.
+//!
+//! Used for the smoothness-root operators (`L_i^{1/2}`, `L_i^{†1/2}`),
+//! eigendecomposition workspaces, and the server-side decompression
+//! algebra. Sizes are moderate (≤ a few thousand), so a straightforward
+//! cache-friendly row-major kernel set suffices; the only hot routine is
+//! `matvec`, which the decompressor calls per round.
+
+use crate::linalg::vector;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>, // row-major: data[r * cols + c]
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn eye(n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: Vec<Vec<f64>>) -> Mat {
+        let r = rows.len();
+        let c = rows.first().map(|x| x.len()).unwrap_or(0);
+        assert!(rows.iter().all(|x| x.len() == c), "ragged rows");
+        Mat {
+            rows: r,
+            cols: c,
+            data: rows.into_iter().flatten().collect(),
+        }
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f64] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f64] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// out = A x
+    pub fn matvec_into(&self, x: &[f64], out: &mut [f64]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(out.len(), self.rows);
+        for r in 0..self.rows {
+            out[r] = vector::dot(self.row(r), x);
+        }
+    }
+
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; self.rows];
+        self.matvec_into(x, &mut out);
+        out
+    }
+
+    /// out = Aᵀ x (x has length rows)
+    pub fn tmatvec_into(&self, x: &[f64], out: &mut [f64]) {
+        assert_eq!(x.len(), self.rows);
+        assert_eq!(out.len(), self.cols);
+        out.fill(0.0);
+        for r in 0..self.rows {
+            vector::axpy(x[r], self.row(r), out);
+        }
+    }
+
+    pub fn tmatvec(&self, x: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; self.cols];
+        self.tmatvec_into(x, &mut out);
+        out
+    }
+
+    /// C = A * B
+    pub fn matmul(&self, b: &Mat) -> Mat {
+        assert_eq!(self.cols, b.rows);
+        let mut c = Mat::zeros(self.rows, b.cols);
+        // ikj loop order: stream B rows, accumulate into C rows.
+        for i in 0..self.rows {
+            let arow = self.row(i);
+            let crow = c.row_mut(i);
+            for (k, &aik) in arow.iter().enumerate() {
+                if aik == 0.0 {
+                    continue;
+                }
+                vector::axpy(aik, b.row(k), crow);
+            }
+        }
+        c
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                t[(c, r)] = self[(r, c)];
+            }
+        }
+        t
+    }
+
+    /// AᵀA (cols × cols), exploiting symmetry of the result.
+    pub fn gram(&self) -> Mat {
+        let n = self.cols;
+        let mut g = Mat::zeros(n, n);
+        for r in 0..self.rows {
+            let row = self.row(r);
+            for i in 0..n {
+                let ri = row[i];
+                if ri == 0.0 {
+                    continue;
+                }
+                // only upper triangle
+                for j in i..n {
+                    g.data[i * n + j] += ri * row[j];
+                }
+            }
+        }
+        for i in 0..n {
+            for j in 0..i {
+                g.data[i * n + j] = g.data[j * n + i];
+            }
+        }
+        g
+    }
+
+    /// AAᵀ (rows × rows).
+    pub fn gram_t(&self) -> Mat {
+        let n = self.rows;
+        let mut g = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in i..n {
+                let v = vector::dot(self.row(i), self.row(j));
+                g.data[i * n + j] = v;
+                g.data[j * n + i] = v;
+            }
+        }
+        g
+    }
+
+    pub fn scale(&mut self, alpha: f64) {
+        for v in self.data.iter_mut() {
+            *v *= alpha;
+        }
+    }
+
+    /// self += alpha * I (square only)
+    pub fn add_diag(&mut self, alpha: f64) {
+        assert_eq!(self.rows, self.cols);
+        for i in 0..self.rows {
+            self.data[i * self.cols + i] += alpha;
+        }
+    }
+
+    pub fn diag(&self) -> Vec<f64> {
+        let n = self.rows.min(self.cols);
+        (0..n).map(|i| self[(i, i)]).collect()
+    }
+
+    pub fn frobenius_norm(&self) -> f64 {
+        vector::norm(&self.data)
+    }
+
+    /// Max |a_ij − b_ij|.
+    pub fn max_abs_diff(&self, other: &Mat) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .fold(0.0, |m, (a, b)| m.max((a - b).abs()))
+    }
+
+    pub fn is_symmetric(&self, tol: f64) -> bool {
+        if self.rows != self.cols {
+            return false;
+        }
+        for i in 0..self.rows {
+            for j in 0..i {
+                if (self[(i, j)] - self[(j, i)]).abs() > tol {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Quadratic form xᵀ A x.
+    pub fn quad_form(&self, x: &[f64]) -> f64 {
+        vector::dot(&self.matvec(x), x)
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (r, c): (usize, usize)) -> &f64 {
+        &self.data[r * self.cols + c]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut f64 {
+        &mut self.data[r * self.cols + c]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Mat {
+        Mat::from_rows(vec![vec![1.0, 2.0, 3.0], vec![4.0, 5.0, 6.0]])
+    }
+
+    #[test]
+    fn indexing_row_major() {
+        let m = sample();
+        assert_eq!(m[(0, 2)], 3.0);
+        assert_eq!(m[(1, 0)], 4.0);
+        assert_eq!(m.row(1), &[4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn matvec_and_transpose_matvec() {
+        let m = sample();
+        assert_eq!(m.matvec(&[1.0, 1.0, 1.0]), vec![6.0, 15.0]);
+        assert_eq!(m.tmatvec(&[1.0, 1.0]), vec![5.0, 7.0, 9.0]);
+    }
+
+    #[test]
+    fn matmul_matches_manual() {
+        let a = sample(); // 2x3
+        let b = a.transpose(); // 3x2
+        let c = a.matmul(&b); // 2x2 = A Aᵀ
+        assert_eq!(c[(0, 0)], 14.0);
+        assert_eq!(c[(0, 1)], 32.0);
+        assert_eq!(c[(1, 0)], 32.0);
+        assert_eq!(c[(1, 1)], 77.0);
+        assert_eq!(c, a.gram_t());
+    }
+
+    #[test]
+    fn gram_is_ata() {
+        let a = sample();
+        let g = a.gram();
+        let expected = a.transpose().matmul(&a);
+        assert!(g.max_abs_diff(&expected) < 1e-12);
+        assert!(g.is_symmetric(0.0));
+    }
+
+    #[test]
+    fn eye_and_add_diag() {
+        let mut m = Mat::eye(3);
+        m.add_diag(2.0);
+        assert_eq!(m.diag(), vec![3.0, 3.0, 3.0]);
+        assert_eq!(m[(0, 1)], 0.0);
+    }
+
+    #[test]
+    fn quad_form_psd() {
+        let a = sample();
+        let g = a.gram();
+        // Gram matrices are PSD: xᵀGx ≥ 0
+        for x in [[1.0, -2.0, 0.5], [0.0, 1.0, -1.0]] {
+            assert!(g.quad_form(&x) >= 0.0);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn ragged_rows_panic() {
+        Mat::from_rows(vec![vec![1.0], vec![1.0, 2.0]]);
+    }
+}

@@ -1,0 +1,279 @@
+//! Symmetric eigensolvers.
+//!
+//! * [`eigh`] — cyclic Jacobi rotations: full eigendecomposition of a
+//!   symmetric matrix. O(d³) per sweep with a handful of sweeps; used for
+//!   the smoothness roots where the relevant dimension is min(m_i, d)
+//!   (≤ ~700 for all paper datasets).
+//! * [`power_lambda_max`] — power iteration for the top eigenvalue of an
+//!   implicitly-applied symmetric PSD operator (used for λ_max(L) with
+//!   L = (1/4M)AᵀA + μI without forming d×d).
+
+use crate::linalg::dense::Mat;
+use crate::linalg::vector;
+use crate::util::rng::Rng;
+
+/// Result of a symmetric eigendecomposition: `a = V diag(w) Vᵀ`,
+/// eigenvalues ascending, eigenvectors as *columns* of `v`.
+#[derive(Clone, Debug)]
+pub struct Eigh {
+    pub w: Vec<f64>,
+    pub v: Mat,
+}
+
+/// Cyclic Jacobi eigensolver for symmetric matrices.
+///
+/// Converges to machine precision for the well-conditioned PSD matrices we
+/// feed it (Gram matrices + ridge). Panics if `a` is not square.
+pub fn eigh(a: &Mat) -> Eigh {
+    assert_eq!(a.rows, a.cols, "eigh needs a square matrix");
+    let n = a.rows;
+    let mut m = a.clone();
+    let mut v = Mat::eye(n);
+    if n == 0 {
+        return Eigh { w: vec![], v };
+    }
+    if n == 1 {
+        return Eigh {
+            w: vec![m[(0, 0)]],
+            v,
+        };
+    }
+
+    let max_sweeps = 64;
+    for _sweep in 0..max_sweeps {
+        // off-diagonal Frobenius norm
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += m[(i, j)] * m[(i, j)];
+            }
+        }
+        if off.sqrt() <= 1e-14 * (1.0 + m.frobenius_norm()) {
+            break;
+        }
+        for p in 0..n - 1 {
+            for q in (p + 1)..n {
+                let apq = m[(p, q)];
+                if apq == 0.0 {
+                    continue;
+                }
+                let app = m[(p, p)];
+                let aqq = m[(q, q)];
+                // Stable rotation computation (Golub & Van Loan §8.5.2).
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = if tau >= 0.0 {
+                    1.0 / (tau + (1.0 + tau * tau).sqrt())
+                } else {
+                    -1.0 / (-tau + (1.0 + tau * tau).sqrt())
+                };
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = t * c;
+
+                // Apply rotation J(p,q,θ): M ← JᵀMJ, V ← VJ.
+                for k in 0..n {
+                    let mkp = m[(k, p)];
+                    let mkq = m[(k, q)];
+                    m[(k, p)] = c * mkp - s * mkq;
+                    m[(k, q)] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[(p, k)];
+                    let mqk = m[(q, k)];
+                    m[(p, k)] = c * mpk - s * mqk;
+                    m[(q, k)] = s * mpk + c * mqk;
+                }
+                for k in 0..n {
+                    let vkp = v[(k, p)];
+                    let vkq = v[(k, q)];
+                    v[(k, p)] = c * vkp - s * vkq;
+                    v[(k, q)] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+
+    // Collect eigenvalues and sort ascending with eigenvector columns.
+    let mut order: Vec<usize> = (0..n).collect();
+    let w_raw: Vec<f64> = (0..n).map(|i| m[(i, i)]).collect();
+    order.sort_by(|&i, &j| w_raw[i].partial_cmp(&w_raw[j]).unwrap());
+    let w: Vec<f64> = order.iter().map(|&i| w_raw[i]).collect();
+    let mut vs = Mat::zeros(n, n);
+    for (new_c, &old_c) in order.iter().enumerate() {
+        for r in 0..n {
+            vs[(r, new_c)] = v[(r, old_c)];
+        }
+    }
+    Eigh { w, v: vs }
+}
+
+/// Power iteration for λ_max of a symmetric PSD operator given by `apply`.
+/// Deterministic given the seed; runs until relative change < tol or
+/// max_iter.
+pub fn power_lambda_max(
+    dim: usize,
+    mut apply: impl FnMut(&[f64], &mut [f64]),
+    tol: f64,
+    max_iter: usize,
+    seed: u64,
+) -> f64 {
+    assert!(dim > 0);
+    let mut rng = Rng::new(seed);
+    let mut x: Vec<f64> = (0..dim).map(|_| rng.normal()).collect();
+    let nrm = vector::norm(&x);
+    vector::scale(1.0 / nrm, &mut x);
+    let mut y = vec![0.0; dim];
+    let mut lambda = 0.0;
+    for _ in 0..max_iter {
+        apply(&x, &mut y);
+        let new_lambda = vector::dot(&x, &y);
+        let ny = vector::norm(&y);
+        if ny == 0.0 {
+            return 0.0;
+        }
+        for i in 0..dim {
+            x[i] = y[i] / ny;
+        }
+        if (new_lambda - lambda).abs() <= tol * new_lambda.abs().max(1e-300) {
+            return new_lambda;
+        }
+        lambda = new_lambda;
+    }
+    lambda
+}
+
+/// λ_max of an explicit symmetric matrix via power iteration.
+pub fn lambda_max(a: &Mat, tol: f64) -> f64 {
+    power_lambda_max(a.rows, |x, y| a.matvec_into(x, y), tol, 10_000, 0xE16)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn reconstruct(e: &Eigh) -> Mat {
+        // V diag(w) Vᵀ
+        let n = e.w.len();
+        let mut d = Mat::zeros(n, n);
+        for i in 0..n {
+            d[(i, i)] = e.w[i];
+        }
+        e.v.matmul(&d).matmul(&e.v.transpose())
+    }
+
+    fn random_sym(n: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        let mut a = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in i..n {
+                let v = rng.normal();
+                a[(i, j)] = v;
+                a[(j, i)] = v;
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn eigh_diagonal() {
+        let mut a = Mat::zeros(3, 3);
+        a[(0, 0)] = 3.0;
+        a[(1, 1)] = 1.0;
+        a[(2, 2)] = 2.0;
+        let e = eigh(&a);
+        assert_eq!(e.w, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn eigh_2x2_analytic() {
+        let a = Mat::from_rows(vec![vec![2.0, 1.0], vec![1.0, 2.0]]);
+        let e = eigh(&a);
+        assert!((e.w[0] - 1.0).abs() < 1e-12);
+        assert!((e.w[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eigh_reconstructs_random() {
+        for seed in [1u64, 2, 3] {
+            let a = random_sym(12, seed);
+            let e = eigh(&a);
+            let r = reconstruct(&e);
+            assert!(
+                r.max_abs_diff(&a) < 1e-10,
+                "reconstruction error {}",
+                r.max_abs_diff(&a)
+            );
+        }
+    }
+
+    #[test]
+    fn eigh_orthonormal_eigenvectors() {
+        let a = random_sym(10, 7);
+        let e = eigh(&a);
+        let vtv = e.v.transpose().matmul(&e.v);
+        assert!(vtv.max_abs_diff(&Mat::eye(10)) < 1e-11);
+    }
+
+    #[test]
+    fn eigh_psd_gram() {
+        let mut rng = Rng::new(42);
+        let b = Mat::from_rows(
+            (0..6)
+                .map(|_| (0..4).map(|_| rng.normal()).collect())
+                .collect(),
+        );
+        let g = b.gram(); // 4x4 PSD
+        let e = eigh(&g);
+        assert!(e.w.iter().all(|&w| w > -1e-10), "eigs {:?}", e.w);
+    }
+
+    #[test]
+    fn eigh_trace_and_det_invariants() {
+        let a = random_sym(8, 11);
+        let e = eigh(&a);
+        let trace: f64 = (0..8).map(|i| a[(i, i)]).sum();
+        let wsum: f64 = e.w.iter().sum();
+        assert!((trace - wsum).abs() < 1e-10);
+    }
+
+    #[test]
+    fn power_iteration_matches_eigh() {
+        let a = random_sym(15, 3);
+        // shift to PSD so power iteration targets the top eigenvalue robustly
+        let e = eigh(&a);
+        let shift = -e.w[0] + 1.0;
+        let mut b = a.clone();
+        b.add_diag(shift);
+        let lm = lambda_max(&b, 1e-12);
+        let expected = e.w[14] + shift;
+        assert!(
+            (lm - expected).abs() < 1e-6 * expected.abs(),
+            "power {lm} vs eigh {expected}"
+        );
+    }
+
+    #[test]
+    fn power_on_implicit_operator() {
+        // operator: diag(1, 2, 5) applied implicitly
+        let lm = power_lambda_max(
+            3,
+            |x, y| {
+                y[0] = x[0];
+                y[1] = 2.0 * x[1];
+                y[2] = 5.0 * x[2];
+            },
+            1e-14,
+            10_000,
+            1,
+        );
+        assert!((lm - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn eigh_size_one_and_zero() {
+        let e = eigh(&Mat::from_rows(vec![vec![4.0]]));
+        assert_eq!(e.w, vec![4.0]);
+        let e0 = eigh(&Mat::zeros(0, 0));
+        assert!(e0.w.is_empty());
+    }
+}

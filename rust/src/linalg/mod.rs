@@ -1,0 +1,14 @@
+//! Dense/sparse linear algebra substrate: vectors, row-major matrices,
+//! CSR sparse matrices, symmetric eigensolvers, and PSD root operators
+//! (`L^{1/2}`, `L^{†1/2}`) used by the matrix-smoothness-aware
+//! compression protocol.
+
+pub mod dense;
+pub mod eigen;
+pub mod psd;
+pub mod sparse;
+pub mod vector;
+
+pub use dense::Mat;
+pub use psd::PsdRoot;
+pub use sparse::Csr;

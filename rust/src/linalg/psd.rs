@@ -1,0 +1,473 @@
+//! PSD root operators: matrix functions `L^s` for `s ∈ {±1, ±1/2}` of a
+//! positive-semidefinite smoothness matrix, with two representations:
+//!
+//! * **Dense** — full eigendecomposition of a `d×d` matrix; pseudo-inverse
+//!   semantics (eigenvalues ≤ tol are treated as 0 and excluded from
+//!   negative powers), matching `L^{†1/2}` in the paper.
+//! * **Low-rank + ridge** — `L = B Bᵀ + μ I` with `B ∈ ℝ^{d×k}`, `k ≪ d`.
+//!   Never forms the `d×d` matrix: from the `k×k` Gram eigendecomposition
+//!   we get an orthonormal `Q ∈ ℝ^{d×k}` with
+//!   `L^s v = Q ((λ+μ)^s − μ^s) Qᵀ v + μ^s v`.
+//!   This is how duke (d = 7129, m_i = 11) stays cheap, and with μ > 0 the
+//!   operator is positive definite so pinv = inv and Range(L) = ℝ^d.
+
+use crate::linalg::dense::Mat;
+use crate::linalg::eigen::{eigh, Eigh};
+use crate::linalg::vector;
+
+const PINV_TOL: f64 = 1e-12;
+
+#[derive(Clone, Debug)]
+pub enum PsdRoot {
+    Dense {
+        /// eigendecomposition of L (ascending eigenvalues)
+        eig: Eigh,
+        /// Vᵀ cached row-major — the `Vᵀx` half of every apply walks rows
+        /// sequentially instead of striding down columns (§Perf: ~3x on
+        /// the whiten hot path at d=123..500)
+        vt: Mat,
+        dim: usize,
+    },
+    LowRankRidge {
+        /// orthonormal columns spanning Range(B), d×k
+        q: Mat,
+        /// Qᵀ cached row-major (same access-pattern rationale as `vt`)
+        qt: Mat,
+        /// eigenvalues of BBᵀ restricted to Range(B) (ascending, > 0)
+        lam: Vec<f64>,
+        /// ridge μ ≥ 0
+        mu: f64,
+        dim: usize,
+    },
+}
+
+impl PsdRoot {
+    /// Build from an explicit symmetric PSD matrix.
+    pub fn from_dense(l: &Mat) -> PsdRoot {
+        assert!(l.is_symmetric(1e-9), "PsdRoot requires symmetric input");
+        let eig = eigh(l);
+        let vt = eig.v.transpose();
+        PsdRoot::Dense {
+            eig,
+            vt,
+            dim: l.rows,
+        }
+    }
+
+    /// Build from the factored form `L = c · AᵀA + μI`, where `A` is m×d
+    /// given as a dense matrix of its rows (each row a data point). Uses
+    /// the m×m Gram path; requires m ≤ d to be worthwhile but is correct
+    /// for any m.
+    ///
+    /// `gram_t = A Aᵀ` must be precomputed by the caller (it may come from
+    /// a sparse matrix).
+    pub fn from_lowrank_ridge(a_rows: &Mat, gram_t: &Mat, c: f64, mu: f64) -> PsdRoot {
+        let d = a_rows.cols;
+        let m = a_rows.rows;
+        assert_eq!(gram_t.rows, m);
+        // B = √c · Aᵀ  (d×m), BᵀB = c·AAᵀ = c·gram_t  (m×m)
+        let mut btb = gram_t.clone();
+        btb.scale(c);
+        let e = eigh(&btb);
+        // Keep strictly positive eigenvalues; columns of Q = B W / √λ.
+        let mut keep: Vec<usize> = Vec::new();
+        let lmax = e.w.last().copied().unwrap_or(0.0).max(0.0);
+        for (i, &w) in e.w.iter().enumerate() {
+            if w > PINV_TOL * lmax.max(1.0) {
+                keep.push(i);
+            }
+        }
+        let k = keep.len();
+        let mut q = Mat::zeros(d, k);
+        let mut lam = Vec::with_capacity(k);
+        for (col, &ei) in keep.iter().enumerate() {
+            let w = e.w[ei];
+            lam.push(w);
+            // q_col = √c Aᵀ v / √w
+            let vcol: Vec<f64> = (0..m).map(|r| e.v[(r, ei)]).collect();
+            let mut qcol = a_rows.tmatvec(&vcol);
+            let scale = c.sqrt() / w.sqrt();
+            for (r, qv) in qcol.iter_mut().enumerate() {
+                q[(r, col)] = *qv * scale;
+                let _ = qv;
+            }
+        }
+        let qt = q.transpose();
+        PsdRoot::LowRankRidge {
+            q,
+            qt,
+            lam,
+            mu,
+            dim: d,
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        match self {
+            PsdRoot::Dense { dim, .. } => *dim,
+            PsdRoot::LowRankRidge { dim, .. } => *dim,
+        }
+    }
+
+    pub fn lambda_max(&self) -> f64 {
+        match self {
+            PsdRoot::Dense { eig, .. } => eig.w.last().copied().unwrap_or(0.0).max(0.0),
+            PsdRoot::LowRankRidge { lam, mu, .. } => {
+                lam.last().copied().unwrap_or(0.0).max(0.0) + mu
+            }
+        }
+    }
+
+    pub fn lambda_min(&self) -> f64 {
+        match self {
+            PsdRoot::Dense { eig, .. } => eig.w.first().copied().unwrap_or(0.0).max(0.0),
+            PsdRoot::LowRankRidge { lam, mu, dim, .. } => {
+                if lam.len() < *dim {
+                    *mu
+                } else {
+                    lam.first().copied().unwrap_or(0.0) + mu
+                }
+            }
+        }
+    }
+
+    /// `out = L^p · x` with pseudo-inverse semantics for p < 0.
+    pub fn apply_pow_into(&self, p: f64, x: &[f64], out: &mut [f64]) {
+        match self {
+            PsdRoot::Dense { eig, vt, dim } => {
+                assert_eq!(x.len(), *dim);
+                // out = V f(w) Vᵀ x   (Vᵀx via sequential rows of vt)
+                let n = *dim;
+                let lmax = self.lambda_max();
+                let mut coeff = vec![0.0; n];
+                for c in 0..n {
+                    coeff[c] =
+                        crate::linalg::vector::dot(vt.row(c), x) * pinv_pow(eig.w[c], p, lmax);
+                }
+                for r in 0..n {
+                    out[r] = crate::linalg::vector::dot(eig.v.row(r), &coeff);
+                }
+            }
+            PsdRoot::LowRankRidge { q, qt, lam, mu, dim } => {
+                assert_eq!(x.len(), *dim);
+                let mus = ridge_pow(*mu, p);
+                // out = μ^p x + Q ((λ+μ)^p − μ^p) Qᵀ x
+                let k = lam.len();
+                let mut qx = vec![0.0; k];
+                for c in 0..k {
+                    qx[c] = crate::linalg::vector::dot(qt.row(c), x)
+                        * (ridge_pow(lam[c] + *mu, p) - mus);
+                }
+                for r in 0..*dim {
+                    out[r] = mus * x[r] + crate::linalg::vector::dot(q.row(r), &qx);
+                }
+            }
+        }
+    }
+
+    pub fn apply_pow(&self, p: f64, x: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; self.dim()];
+        self.apply_pow_into(p, x, &mut out);
+        out
+    }
+
+    /// `out = L^p · x` where `x` is sparse (indices + values). Cost
+    /// O(dim · nnz) dense-path / O(k · nnz + dim · k) low-rank path — the
+    /// decompression hot path at the server.
+    pub fn apply_pow_sparse_into(&self, p: f64, idx: &[u32], val: &[f64], out: &mut [f64]) {
+        match self {
+            PsdRoot::Dense { eig, dim, .. } => {
+                let n = *dim;
+                let lmax = self.lambda_max();
+                // coeff[c] = Σ_t V[i_t, c]·val_t — accumulate rows of V
+                // sequentially (each row is the eigen-coordinates of e_i),
+                // then scale by f(w) (§Perf: no column striding)
+                let mut coeff = vec![0.0; n];
+                for (t, &i) in idx.iter().enumerate() {
+                    crate::linalg::vector::axpy(val[t], eig.v.row(i as usize), &mut coeff);
+                }
+                for c in 0..n {
+                    coeff[c] *= pinv_pow(eig.w[c], p, lmax);
+                }
+                for r in 0..n {
+                    out[r] = crate::linalg::vector::dot(eig.v.row(r), &coeff);
+                }
+            }
+            PsdRoot::LowRankRidge { q, lam, mu, dim, .. } => {
+                let mus = ridge_pow(*mu, p);
+                let k = lam.len();
+                // Qᵀ x_sparse: for each nonzero, walk row i of Q (len k,
+                // sequential)
+                let mut qx = vec![0.0; k];
+                for (t, &i) in idx.iter().enumerate() {
+                    crate::linalg::vector::axpy(val[t], q.row(i as usize), &mut qx);
+                }
+                for c in 0..k {
+                    qx[c] *= ridge_pow(lam[c] + *mu, p) - mus;
+                }
+                out.fill(0.0);
+                for (t, &i) in idx.iter().enumerate() {
+                    out[i as usize] = mus * val[t];
+                }
+                for r in 0..*dim {
+                    out[r] += crate::linalg::vector::dot(q.row(r), &qx);
+                }
+            }
+        }
+    }
+
+    /// ‖x‖²_{L^p} = xᵀ L^p x (e.g. p = −1 for the paper's ‖·‖²_{L†}).
+    pub fn wnorm2(&self, p: f64, x: &[f64]) -> f64 {
+        vector::dot(&self.apply_pow(p, x), x)
+    }
+
+    /// Materialize L^p as a dense matrix (test/diagnostic use only).
+    pub fn to_dense_pow(&self, p: f64) -> Mat {
+        let n = self.dim();
+        let mut m = Mat::zeros(n, n);
+        let mut e = vec![0.0; n];
+        let mut col = vec![0.0; n];
+        for j in 0..n {
+            e[j] = 1.0;
+            self.apply_pow_into(p, &e, &mut col);
+            for r in 0..n {
+                m[(r, j)] = col[r];
+            }
+            e[j] = 0.0;
+        }
+        m
+    }
+
+    /// diag(L^p) without materializing the full matrix.
+    pub fn diag_pow(&self, p: f64) -> Vec<f64> {
+        match self {
+            PsdRoot::Dense { eig, dim, .. } => {
+                let n = *dim;
+                let lmax = self.lambda_max();
+                let mut d = vec![0.0; n];
+                for r in 0..n {
+                    let mut s = 0.0;
+                    for c in 0..n {
+                        let v = eig.v[(r, c)];
+                        s += v * v * pinv_pow(eig.w[c], p, lmax);
+                    }
+                    d[r] = s;
+                }
+                d
+            }
+            PsdRoot::LowRankRidge { q, lam, mu, dim, .. } => {
+                let mus = ridge_pow(*mu, p);
+                let mut d = vec![mus; *dim];
+                for r in 0..*dim {
+                    for (c, &l) in lam.iter().enumerate() {
+                        let v = q[(r, c)];
+                        d[r] += v * v * (ridge_pow(l + *mu, p) - mus);
+                    }
+                }
+                d
+            }
+        }
+    }
+}
+
+#[inline]
+fn pinv_pow(w: f64, p: f64, scale: f64) -> f64 {
+    let w = w.max(0.0);
+    if w <= PINV_TOL * scale.max(1.0) {
+        // pseudo-inverse: zero eigenvalues map to zero for any power
+        // (including negative); for positive powers 0^p = 0 anyway.
+        0.0
+    } else {
+        w.powf(p)
+    }
+}
+
+#[inline]
+fn ridge_pow(w: f64, p: f64) -> f64 {
+    if w <= 0.0 {
+        0.0
+    } else {
+        w.powf(p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_psd(n: usize, seed: u64, ridge: f64) -> Mat {
+        let mut rng = Rng::new(seed);
+        let b = Mat::from_rows(
+            (0..n)
+                .map(|_| (0..n).map(|_| rng.normal()).collect())
+                .collect(),
+        );
+        let mut g = b.gram();
+        g.add_diag(ridge);
+        g
+    }
+
+    #[test]
+    fn dense_sqrt_squares_back() {
+        let l = random_psd(8, 1, 0.1);
+        let root = PsdRoot::from_dense(&l);
+        let s = root.to_dense_pow(0.5);
+        let back = s.matmul(&s);
+        assert!(back.max_abs_diff(&l) < 1e-9);
+    }
+
+    #[test]
+    fn dense_inverse_is_inverse() {
+        let l = random_psd(6, 2, 0.5);
+        let root = PsdRoot::from_dense(&l);
+        let inv = root.to_dense_pow(-1.0);
+        let prod = inv.matmul(&l);
+        assert!(prod.max_abs_diff(&Mat::eye(6)) < 1e-9);
+    }
+
+    #[test]
+    fn dense_pinv_on_singular() {
+        // L = vvᵀ has rank 1; L^{1/2} L^{†1/2} should be the projector onto v.
+        let v = [1.0, 2.0, 2.0];
+        let mut l = Mat::zeros(3, 3);
+        for i in 0..3 {
+            for j in 0..3 {
+                l[(i, j)] = v[i] * v[j];
+            }
+        }
+        let root = PsdRoot::from_dense(&l);
+        let half = root.to_dense_pow(0.5);
+        let phalf = root.to_dense_pow(-0.5);
+        let proj = half.matmul(&phalf);
+        // projector: proj * v = v, proj * (orth) = 0
+        let pv = proj.matvec(&v);
+        for i in 0..3 {
+            assert!((pv[i] - v[i]).abs() < 1e-9);
+        }
+        let orth = [2.0, -1.0, 0.0]; // orthogonal to v
+        let po = proj.matvec(&orth);
+        assert!(vector::norm(&po) < 1e-9);
+    }
+
+    #[test]
+    fn lowrank_matches_dense() {
+        // L = c AᵀA + μI with m < d, compare both paths.
+        let mut rng = Rng::new(5);
+        let (m, d) = (4, 9);
+        let a = Mat::from_rows(
+            (0..m)
+                .map(|_| (0..d).map(|_| rng.normal()).collect())
+                .collect(),
+        );
+        let (c, mu) = (0.25, 1e-3);
+        let mut l = a.gram();
+        l.scale(c);
+        l.add_diag(mu);
+
+        let dense = PsdRoot::from_dense(&l);
+        let lr = PsdRoot::from_lowrank_ridge(&a, &a.gram_t(), c, mu);
+
+        for p in [1.0, 0.5, -0.5, -1.0] {
+            let md = dense.to_dense_pow(p);
+            let ml = lr.to_dense_pow(p);
+            assert!(
+                md.max_abs_diff(&ml) < 1e-8,
+                "p={p} diff={}",
+                md.max_abs_diff(&ml)
+            );
+        }
+        assert!((dense.lambda_max() - lr.lambda_max()).abs() < 1e-9);
+        assert!((dense.lambda_min() - lr.lambda_min()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lowrank_lambda_min_is_mu_when_rank_deficient() {
+        let mut rng = Rng::new(6);
+        let (m, d) = (3, 7);
+        let a = Mat::from_rows(
+            (0..m)
+                .map(|_| (0..d).map(|_| rng.normal()).collect())
+                .collect(),
+        );
+        let lr = PsdRoot::from_lowrank_ridge(&a, &a.gram_t(), 1.0, 0.01);
+        assert!((lr.lambda_min() - 0.01).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sparse_apply_matches_dense_apply() {
+        let l = random_psd(10, 3, 0.2);
+        let root = PsdRoot::from_dense(&l);
+        let idx = [2u32, 5, 9];
+        let val = [1.5, -0.5, 2.0];
+        let mut x = vec![0.0; 10];
+        for (t, &i) in idx.iter().enumerate() {
+            x[i as usize] = val[t];
+        }
+        for p in [0.5, -0.5] {
+            let dense_out = root.apply_pow(p, &x);
+            let mut sparse_out = vec![0.0; 10];
+            root.apply_pow_sparse_into(p, &idx, &val, &mut sparse_out);
+            for i in 0..10 {
+                assert!((dense_out[i] - sparse_out[i]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_apply_lowrank_matches() {
+        let mut rng = Rng::new(8);
+        let (m, d) = (5, 12);
+        let a = Mat::from_rows(
+            (0..m)
+                .map(|_| (0..d).map(|_| rng.normal()).collect())
+                .collect(),
+        );
+        let lr = PsdRoot::from_lowrank_ridge(&a, &a.gram_t(), 0.25, 1e-3);
+        let idx = [0u32, 7, 11];
+        let val = [2.0, 1.0, -3.0];
+        let mut x = vec![0.0; d];
+        for (t, &i) in idx.iter().enumerate() {
+            x[i as usize] = val[t];
+        }
+        let dense_out = lr.apply_pow(0.5, &x);
+        let mut sparse_out = vec![0.0; d];
+        lr.apply_pow_sparse_into(0.5, &idx, &val, &mut sparse_out);
+        for i in 0..d {
+            assert!((dense_out[i] - sparse_out[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn wnorm2_linv_positive() {
+        let l = random_psd(5, 9, 0.3);
+        let root = PsdRoot::from_dense(&l);
+        let x = [1.0, -1.0, 0.5, 2.0, 0.0];
+        assert!(root.wnorm2(-1.0, &x) > 0.0);
+        // identity: ‖x‖²_{L} with L = I is ‖x‖²
+        let id = PsdRoot::from_dense(&Mat::eye(5));
+        assert!((id.wnorm2(1.0, &x) - vector::norm2(&x)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn diag_pow_matches_materialized() {
+        let l = random_psd(7, 10, 0.1);
+        let root = PsdRoot::from_dense(&l);
+        for p in [1.0, 0.5, -1.0] {
+            let d1 = root.diag_pow(p);
+            let d2 = root.to_dense_pow(p).diag();
+            for i in 0..7 {
+                assert!((d1[i] - d2[i]).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn half_times_pinvhalf_is_identity_on_range() {
+        // With ridge, L is PD so L^{1/2} L^{-1/2} = I exactly.
+        let l = random_psd(6, 12, 0.05);
+        let root = PsdRoot::from_dense(&l);
+        let prod = root.to_dense_pow(0.5).matmul(&root.to_dense_pow(-0.5));
+        assert!(prod.max_abs_diff(&Mat::eye(6)) < 1e-9);
+    }
+}

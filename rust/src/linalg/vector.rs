@@ -1,0 +1,172 @@
+//! Dense vector operations used throughout the optimizer hot paths.
+//!
+//! All routines are allocation-free where possible; the coordinator's
+//! steady-state round loop relies on the `*_into` / in-place variants.
+
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    // 4-way unrolled accumulation: measurably faster than naive sum at the
+    // d~1e2..1e4 sizes we run, and deterministic.
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for i in 0..chunks {
+        let j = i * 4;
+        s0 += a[j] * b[j];
+        s1 += a[j + 1] * b[j + 1];
+        s2 += a[j + 2] * b[j + 2];
+        s3 += a[j + 3] * b[j + 3];
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    for j in chunks * 4..n {
+        s += a[j] * b[j];
+    }
+    s
+}
+
+#[inline]
+pub fn norm2(a: &[f64]) -> f64 {
+    dot(a, a)
+}
+
+#[inline]
+pub fn norm(a: &[f64]) -> f64 {
+    norm2(a).sqrt()
+}
+
+/// Squared distance ‖a − b‖².
+#[inline]
+pub fn dist2(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0.0;
+    for i in 0..a.len() {
+        let d = a[i] - b[i];
+        s += d * d;
+    }
+    s
+}
+
+/// y += alpha * x
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for i in 0..x.len() {
+        y[i] += alpha * x[i];
+    }
+}
+
+/// y = x
+#[inline]
+pub fn copy(x: &[f64], y: &mut [f64]) {
+    y.copy_from_slice(x);
+}
+
+/// x *= alpha
+#[inline]
+pub fn scale(alpha: f64, x: &mut [f64]) {
+    for v in x.iter_mut() {
+        *v *= alpha;
+    }
+}
+
+/// out = a + b
+#[inline]
+pub fn add_into(a: &[f64], b: &[f64], out: &mut [f64]) {
+    for i in 0..a.len() {
+        out[i] = a[i] + b[i];
+    }
+}
+
+/// out = a - b
+#[inline]
+pub fn sub_into(a: &[f64], b: &[f64], out: &mut [f64]) {
+    for i in 0..a.len() {
+        out[i] = a[i] - b[i];
+    }
+}
+
+/// out = alpha*a + beta*b
+#[inline]
+pub fn lincomb_into(alpha: f64, a: &[f64], beta: f64, b: &[f64], out: &mut [f64]) {
+    for i in 0..a.len() {
+        out[i] = alpha * a[i] + beta * b[i];
+    }
+}
+
+/// Weighted squared norm ‖x‖²_w = Σ w_i x_i² for a diagonal weight.
+#[inline]
+pub fn wnorm2_diag(x: &[f64], w: &[f64]) -> f64 {
+    debug_assert_eq!(x.len(), w.len());
+    let mut s = 0.0;
+    for i in 0..x.len() {
+        s += w[i] * x[i] * x[i];
+    }
+    s
+}
+
+/// max_i |a_i|
+#[inline]
+pub fn inf_norm(a: &[f64]) -> f64 {
+    a.iter().fold(0.0, |m, &v| m.max(v.abs()))
+}
+
+pub fn zeros(n: usize) -> Vec<f64> {
+    vec![0.0; n]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_matches_naive() {
+        let a: Vec<f64> = (0..37).map(|i| i as f64 * 0.5).collect();
+        let b: Vec<f64> = (0..37).map(|i| (i as f64).sin()).collect();
+        let naive: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot(&a, &b) - naive).abs() < 1e-12 * naive.abs().max(1.0));
+    }
+
+    #[test]
+    fn norms() {
+        let v = [3.0, 4.0];
+        assert_eq!(norm2(&v), 25.0);
+        assert_eq!(norm(&v), 5.0);
+        assert_eq!(inf_norm(&[-7.0, 2.0]), 7.0);
+    }
+
+    #[test]
+    fn axpy_and_lincomb() {
+        let x = [1.0, 2.0, 3.0];
+        let mut y = [10.0, 10.0, 10.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, [12.0, 14.0, 16.0]);
+        let mut out = [0.0; 3];
+        lincomb_into(0.5, &x, 2.0, &[1.0, 1.0, 1.0], &mut out);
+        assert_eq!(out, [2.5, 3.0, 3.5]);
+    }
+
+    #[test]
+    fn dist2_basic() {
+        assert_eq!(dist2(&[1.0, 2.0], &[4.0, 6.0]), 25.0);
+    }
+
+    #[test]
+    fn weighted_norm() {
+        assert_eq!(wnorm2_diag(&[1.0, 2.0], &[3.0, 0.5]), 3.0 + 2.0);
+    }
+
+    #[test]
+    fn add_sub_scale() {
+        let a = [1.0, 2.0];
+        let b = [3.0, 5.0];
+        let mut out = [0.0; 2];
+        add_into(&a, &b, &mut out);
+        assert_eq!(out, [4.0, 7.0]);
+        sub_into(&a, &b, &mut out);
+        assert_eq!(out, [-2.0, -3.0]);
+        let mut c = [2.0, 4.0];
+        scale(0.5, &mut c);
+        assert_eq!(c, [1.0, 2.0]);
+    }
+}

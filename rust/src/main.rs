@@ -1,0 +1,183 @@
+//! `smx` — CLI for the Smoothness-Matrices distributed optimization
+//! framework.
+//!
+//! Subcommands:
+//!   train    run method(s) on one dataset, write residual curves
+//!   figures  regenerate a paper figure (--figure 1|2|3|4|5)
+//!   tables   regenerate a paper table (--table 2|3|6)
+//!   solve    compute x* and problem constants for a dataset
+//!   info     print dataset/smoothness diagnostics
+//!
+//! Common flags: --dataset --workers --tau --methods --sampling
+//! --max-rounds --target-residual --seed --engine native|pjrt
+//! --config file.json --out-dir results/ --data-dir data/
+
+use anyhow::{bail, Result};
+use smx::config::ExperimentConfig;
+use smx::experiments::{figures, runner, tables};
+use smx::sampling::SamplingKind;
+use smx::util::cli::Args;
+
+const USAGE: &str = "usage: smx <train|figures|tables|solve|info> [flags]
+  smx train   --dataset a1a --methods diana,diana+ --tau 1 --sampling uniform
+  smx figures --figure 1 --datasets a1a,mushrooms
+  smx tables  --table 2 --datasets a1a,mushrooms,phishing
+  smx solve   --dataset mushrooms
+  smx info    --dataset duke
+flags: --workers N --mu F --max-rounds N --target-residual F --seed N
+       --engine native|pjrt --config FILE --out-dir DIR --data-dir DIR
+       --record-every N --start-near-opt";
+
+fn main() {
+    smx::util::log::init_from_env();
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn config_from(args: &Args) -> Result<ExperimentConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => ExperimentConfig::from_file(std::path::Path::new(path))?,
+        None => ExperimentConfig::default(),
+    };
+    cfg.apply_args(args)?;
+    Ok(cfg)
+}
+
+fn datasets_from(args: &Args) -> Vec<String> {
+    args.list_or(
+        "datasets",
+        &["a1a", "mushrooms", "phishing", "madelon", "duke", "a8a"],
+    )
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env(true);
+    let sub = match &args.subcommand {
+        Some(s) => s.clone(),
+        None => {
+            println!("{USAGE}");
+            return Ok(());
+        }
+    };
+
+    match sub.as_str() {
+        "train" => {
+            let cfg = config_from(&args)?;
+            let prep = runner::prepare(&cfg)?;
+            let variants: Vec<runner::Variant> = cfg
+                .methods
+                .iter()
+                .map(|m| {
+                    let method: &'static str = smx::methods::METHOD_NAMES
+                        .iter()
+                        .find(|n| *n == m)
+                        .copied()
+                        .unwrap();
+                    runner::Variant {
+                        label: format!("{m}-{}", cfg.sampling.name()),
+                        method,
+                        sampling: cfg.sampling,
+                        tau: cfg.tau,
+                    }
+                })
+                .collect();
+            let results =
+                runner::run_variants(&prep, &cfg, &variants, &format!("train_{}", cfg.dataset))?;
+            println!("\nmethod                     rounds   final residual   coords_up");
+            for (label, r) in &results {
+                let last = r.records.last().unwrap();
+                println!(
+                    "{label:<26} {:>6}   {:>14.4e}   {:>9}",
+                    r.rounds_run,
+                    r.final_residual(),
+                    last.coords_up
+                );
+            }
+        }
+        "figures" => {
+            let cfg = config_from(&args)?;
+            let fig = args.str_or("figure", "1");
+            let datasets = datasets_from(&args);
+            match fig.as_str() {
+                "1" | "2" | "3" | "4" | "34" => {
+                    for ds in &datasets {
+                        let mut c = cfg.clone();
+                        c.dataset = ds.clone();
+                        match fig.as_str() {
+                            "1" => figures::fig1(&c)?,
+                            "2" => figures::fig2(&c)?,
+                            _ => figures::fig34(&c)?,
+                        }
+                    }
+                }
+                "5" => figures::fig5(&cfg)?,
+                other => bail!("unknown figure '{other}' (1|2|3|4|5)"),
+            }
+        }
+        "tables" => {
+            let cfg = config_from(&args)?;
+            let datasets = datasets_from(&args);
+            match args.str_or("table", "2").as_str() {
+                "2" => {
+                    tables::table2(&cfg, &datasets)?;
+                }
+                "3" => {
+                    tables::table3(&cfg, &datasets)?;
+                }
+                "6" => {
+                    tables::table6(&cfg, &datasets)?;
+                }
+                other => bail!("unknown table '{other}' (2|3|6)"),
+            }
+        }
+        "solve" => {
+            let cfg = config_from(&args)?;
+            let prep = runner::prepare(&cfg)?;
+            println!(
+                "dataset={} d={} n={} f*={:.12e}",
+                cfg.dataset,
+                prep.sm.dim,
+                prep.sm.n(),
+                prep.f_star
+            );
+        }
+        "info" => {
+            let cfg = config_from(&args)?;
+            let prep = runner::prepare_with(&cfg, false)?;
+            let sm = &prep.sm;
+            println!("dataset          {}", cfg.dataset);
+            println!("points           {}", prep.dataset.num_points());
+            println!("d                {}", sm.dim);
+            println!("n (workers)      {}", sm.n());
+            println!("m_i              {}", prep.shards[0].num_points());
+            println!("density          {:.4}", prep.dataset.a.density());
+            println!("mu               {:.3e}", sm.mu);
+            println!("L                {:.6e}", sm.l);
+            println!("L_max            {:.6e}", sm.l_max);
+            println!("kappa=L_max/mu   {:.3e}", sm.kappa_max());
+            println!("nu               {:.3}  (∈ [1, n])", sm.nu());
+            println!("nu_1             {:.3}  (∈ [1, d])", sm.nu_s(1.0));
+            println!("nu_2             {:.3}  (∈ [1, d])", sm.nu_s(2.0));
+            let tau = cfg.tau;
+            for (kind, label) in [
+                (SamplingKind::Uniform, "uniform"),
+                (SamplingKind::ImportanceDiana, "importance(19)"),
+            ] {
+                let mut tilde: f64 = 0.0;
+                let mut om: f64 = 0.0;
+                for loc in &sm.locals {
+                    let s = kind.build(&loc.diag, tau, sm.mu, sm.n());
+                    tilde = tilde.max(s.tilde_l(&loc.diag));
+                    om = om.max(s.omega());
+                }
+                println!("tau={tau} {label:<15} omega_max={om:<12.3} tilde_L_max={tilde:.6e}");
+            }
+        }
+        other => {
+            bail!("unknown subcommand '{other}'\n{USAGE}");
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,15 @@
+//! ADIANA (Li et al., 2020) — the original accelerated baseline: DIANA
+//! shift-learning + Nesterov acceleration with *standard* (smoothness-
+//! unaware) sparsification. Shares the accelerated machinery with
+//! [`crate::methods::adiana_plus`]; the only differences are identity
+//! decompression and the ωL_max variance scale in the parameters.
+
+use crate::methods::{adiana_plus, MethodSpec, ServerAlgo, WorkerAlgo};
+use crate::objective::Smoothness;
+
+pub fn build(
+    spec: &MethodSpec,
+    sm: &Smoothness,
+) -> (Box<dyn ServerAlgo>, Vec<Box<dyn WorkerAlgo + Send>>) {
+    adiana_plus::build_accel(spec, sm, false, "adiana")
+}

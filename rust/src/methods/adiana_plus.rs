@@ -1,0 +1,288 @@
+//! ADIANA+ (Algorithm 3) — accelerated DIANA with matrix-smoothness-aware
+//! sparsification. Also hosts the shared accelerated server/worker
+//! machinery reused by the original-ADIANA baseline (identity smoothness,
+//! standard sketches).
+//!
+//! Per round (server): broadcast `x^k = θ₁z^k + θ₂w^k + (1−θ₁−θ₂)y^k` and
+//! `w^k`; on uplinks compute
+//!   `g^k = (1/n)Σ L_i^{1/2}Δ_i + h^k`,   `h^{k+1} = h^k + α(1/n)Σ L_i^{1/2}δ_i`,
+//!   `y^{k+1} = prox_{ηR}(x^k − ηg^k)`,
+//!   `z^{k+1} = βz^k + (1−β)x^k + (γ/η)(y^{k+1} − x^k)`,
+//!   `w^{k+1} = y^k  w.p. q, else w^k`.
+//! Workers send `Δ_i = C_i L_i^{†1/2}(∇f_i(x^k) − h_i)` and
+//! `δ_i = C_i' L_i^{†1/2}(∇f_i(w^k) − h_i)` (independent sketches), and
+//! shift `h_i ← h_i + α L_i^{1/2} δ_i`.
+
+use crate::compress::{sketch_compress, MatrixAware, SparseMsg};
+use crate::linalg::psd::PsdRoot;
+use crate::methods::prox::Prox;
+use crate::methods::stepsize::{self, AdianaParams};
+use crate::methods::{Downlink, MethodSpec, ServerAlgo, Uplink, WorkerAlgo};
+use crate::objective::Smoothness;
+use crate::runtime::GradEngine;
+use crate::sampling::IndependentSampling;
+use crate::util::rng::Rng;
+use std::sync::Arc;
+
+/// Worker: matrix-aware if `root` is Some, standard sketch otherwise.
+pub struct AccelWorker {
+    sampling: IndependentSampling,
+    root: Option<Arc<PsdRoot>>,
+    alpha: f64,
+    h: Vec<f64>,
+    grad_x: Vec<f64>,
+    grad_w: Vec<f64>,
+    diff: Vec<f64>,
+    dbar: Vec<f64>,
+    compressor: Option<MatrixAware>,
+}
+
+impl AccelWorker {
+    fn compress(&mut self, v_is_x: bool, rng: &mut Rng, out: &mut SparseMsg) {
+        // self.diff already holds (∇f(·) − h)
+        let _ = v_is_x;
+        match (&mut self.compressor, &self.root) {
+            (Some(c), Some(root)) => c.compress(root, &self.diff, rng, out),
+            _ => sketch_compress(&self.diff, &self.sampling, rng, out),
+        }
+    }
+}
+
+impl WorkerAlgo for AccelWorker {
+    fn round(&mut self, down: &Downlink, engine: &mut dyn GradEngine, rng: &mut Rng) -> Uplink {
+        let (x, w) = match down {
+            Downlink::Dense { x, w: Some(w) } => (x, w),
+            _ => unreachable!("adiana needs dense downlink with anchor w"),
+        };
+        engine.grad_into(x, &mut self.grad_x);
+        engine.grad_into(w, &mut self.grad_w);
+
+        // Δ_i from x^k
+        for j in 0..self.diff.len() {
+            self.diff[j] = self.grad_x[j] - self.h[j];
+        }
+        let mut delta = SparseMsg::new();
+        self.compress(true, rng, &mut delta);
+
+        // δ_i from w^k (independent sketch draw)
+        for j in 0..self.diff.len() {
+            self.diff[j] = self.grad_w[j] - self.h[j];
+        }
+        let mut delta2 = SparseMsg::new();
+        self.compress(false, rng, &mut delta2);
+
+        // h_i ← h_i + α·decompress(δ_i)
+        match &self.root {
+            Some(root) => {
+                root.apply_pow_sparse_into(0.5, &delta2.idx, &delta2.val, &mut self.dbar);
+                for j in 0..self.h.len() {
+                    self.h[j] += self.alpha * self.dbar[j];
+                }
+            }
+            None => {
+                for (k, &i) in delta2.idx.iter().enumerate() {
+                    self.h[i as usize] += self.alpha * delta2.val[k];
+                }
+            }
+        }
+
+        Uplink {
+            delta,
+            delta2: Some(delta2),
+        }
+    }
+
+    fn dim(&self) -> usize {
+        self.h.len()
+    }
+}
+
+pub struct AccelServer {
+    params: AdianaParams,
+    prox: Prox,
+    x: Vec<f64>,
+    y: Vec<f64>,
+    z: Vec<f64>,
+    w: Vec<f64>,
+    h: Vec<f64>,
+    /// None ⇒ standard sketches (original ADIANA)
+    roots: Option<Vec<Arc<PsdRoot>>>,
+    dbar: Vec<f64>,
+    delta_bar: Vec<f64>,
+    scratch: Vec<f64>,
+    name: &'static str,
+}
+
+impl AccelServer {
+    fn aggregate(&mut self, ups: &[Uplink], second: bool) {
+        // accumulate into self.dbar (Δ̄ or δ̄)
+        self.dbar.fill(0.0);
+        for (i, u) in ups.iter().enumerate() {
+            let msg = if second {
+                u.delta2.as_ref().expect("adiana uplink needs δ")
+            } else {
+                &u.delta
+            };
+            match &self.roots {
+                Some(roots) => {
+                    roots[i].apply_pow_sparse_into(0.5, &msg.idx, &msg.val, &mut self.scratch);
+                    for j in 0..self.dbar.len() {
+                        self.dbar[j] += self.scratch[j];
+                    }
+                }
+                None => {
+                    for (k, &idx) in msg.idx.iter().enumerate() {
+                        self.dbar[idx as usize] += msg.val[k];
+                    }
+                }
+            }
+        }
+        let inv_n = 1.0 / ups.len() as f64;
+        for v in self.dbar.iter_mut() {
+            *v *= inv_n;
+        }
+    }
+}
+
+impl ServerAlgo for AccelServer {
+    fn downlink(&mut self) -> Downlink {
+        let p = &self.params;
+        for j in 0..self.x.len() {
+            self.x[j] = p.theta1 * self.z[j]
+                + p.theta2 * self.w[j]
+                + (1.0 - p.theta1 - p.theta2) * self.y[j];
+        }
+        Downlink::Dense {
+            x: self.x.clone(),
+            w: Some(self.w.clone()),
+        }
+    }
+
+    fn apply(&mut self, ups: &[Uplink], rng: &mut Rng) {
+        let p = self.params;
+
+        // g^k = Δ̄ + h ; y^{k+1} = prox_η(x − ηg)
+        self.aggregate(ups, false);
+        for j in 0..self.dbar.len() {
+            self.delta_bar[j] = self.dbar[j];
+        }
+        // δ̄ for the shift update
+        self.aggregate(ups, true);
+
+        let y_old = self.y.clone();
+        for j in 0..self.x.len() {
+            let g = self.delta_bar[j] + self.h[j];
+            self.y[j] = self.x[j] - p.eta * g;
+        }
+        self.prox.apply(p.eta, &mut self.y);
+
+        // z^{k+1} = βz + (1−β)x + (γ/η)(y^{k+1} − x)
+        for j in 0..self.z.len() {
+            self.z[j] = p.beta * self.z[j]
+                + (1.0 - p.beta) * self.x[j]
+                + (p.gamma / p.eta) * (self.y[j] - self.x[j]);
+        }
+
+        // h^{k+1} = h + αδ̄
+        for j in 0..self.h.len() {
+            self.h[j] += p.alpha * self.dbar[j];
+        }
+
+        // w^{k+1} = y^k with probability q
+        if rng.bernoulli(p.q) {
+            self.w.copy_from_slice(&y_old);
+        }
+    }
+
+    fn iterate(&self) -> &[f64] {
+        &self.y
+    }
+
+    fn dim(&self) -> usize {
+        self.x.len()
+    }
+
+    fn name(&self) -> &'static str {
+        self.name
+    }
+}
+
+/// Shared constructor for ADIANA / ADIANA+.
+pub fn build_accel(
+    spec: &MethodSpec,
+    sm: &Smoothness,
+    matrix_aware: bool,
+    name: &'static str,
+) -> (Box<dyn ServerAlgo>, Vec<Box<dyn WorkerAlgo + Send>>) {
+    let dim = sm.dim;
+    let n = sm.n();
+
+    let (samplings, roots): (Vec<IndependentSampling>, Option<Vec<Arc<PsdRoot>>>) =
+        if matrix_aware {
+            let roots: Vec<Arc<PsdRoot>> =
+                sm.locals.iter().map(|l| Arc::new(l.root.clone())).collect();
+            let samplings = sm
+                .locals
+                .iter()
+                .map(|loc| spec.sampling.build(&loc.diag, spec.tau, spec.mu, n))
+                .collect();
+            (samplings, Some(roots))
+        } else {
+            let s = IndependentSampling::uniform(dim, spec.tau);
+            ((0..n).map(|_| s.clone()).collect(), None)
+        };
+
+    let omega_max = samplings.iter().map(|s| s.omega()).fold(0.0, f64::max);
+    let variance_scale = if matrix_aware {
+        samplings
+            .iter()
+            .zip(&sm.locals)
+            .map(|(s, loc)| s.tilde_l(&loc.diag))
+            .fold(0.0, f64::max)
+    } else {
+        omega_max * sm.l_max
+    };
+    let params = stepsize::adiana_params(sm, omega_max, variance_scale, spec.practical_adiana);
+
+    let workers: Vec<Box<dyn WorkerAlgo + Send>> = samplings
+        .into_iter()
+        .enumerate()
+        .map(|(i, s)| {
+            let root = roots.as_ref().map(|r| r[i].clone());
+            Box::new(AccelWorker {
+                compressor: root.as_ref().map(|_| MatrixAware::new(s.clone())),
+                sampling: s,
+                root,
+                alpha: params.alpha,
+                h: vec![0.0; dim],
+                grad_x: vec![0.0; dim],
+                grad_w: vec![0.0; dim],
+                diff: vec![0.0; dim],
+                dbar: vec![0.0; dim],
+            }) as Box<dyn WorkerAlgo + Send>
+        })
+        .collect();
+
+    let server = Box::new(AccelServer {
+        params,
+        prox: Prox::None,
+        x: spec.x0.clone(),
+        y: spec.x0.clone(),
+        z: spec.x0.clone(),
+        w: spec.x0.clone(),
+        h: vec![0.0; dim],
+        roots,
+        dbar: vec![0.0; dim],
+        delta_bar: vec![0.0; dim],
+        scratch: vec![0.0; dim],
+        name,
+    });
+    (server, workers)
+}
+
+pub fn build(
+    spec: &MethodSpec,
+    sm: &Smoothness,
+) -> (Box<dyn ServerAlgo>, Vec<Box<dyn WorkerAlgo + Send>>) {
+    build_accel(spec, sm, true, "adiana+")
+}

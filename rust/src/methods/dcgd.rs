@@ -1,0 +1,105 @@
+//! DCGD — Distributed Compressed Gradient Descent (Khirirat et al., 2018):
+//! the original baseline with *standard* (smoothness-unaware) unbiased
+//! sparsification `C_i ∇f_i(x^k)`. Converges linearly only to a
+//! neighborhood of x* (Theorem 2 analogue with 𝓛̃ → ωL_max).
+
+use crate::compress::{sketch_compress, SparseMsg};
+use crate::methods::prox::Prox;
+use crate::methods::{stepsize, Downlink, MethodSpec, ServerAlgo, Uplink, WorkerAlgo};
+use crate::objective::Smoothness;
+use crate::runtime::GradEngine;
+use crate::sampling::IndependentSampling;
+use crate::util::rng::Rng;
+
+pub struct DcgdWorker {
+    sampling: IndependentSampling,
+    grad: Vec<f64>,
+}
+
+impl WorkerAlgo for DcgdWorker {
+    fn round(&mut self, down: &Downlink, engine: &mut dyn GradEngine, rng: &mut Rng) -> Uplink {
+        let x = match down {
+            Downlink::Dense { x, .. } => x,
+            _ => unreachable!("dcgd uses dense downlinks"),
+        };
+        engine.grad_into(x, &mut self.grad);
+        let mut delta = SparseMsg::new();
+        sketch_compress(&self.grad, &self.sampling, rng, &mut delta);
+        Uplink {
+            delta,
+            delta2: None,
+        }
+    }
+
+    fn dim(&self) -> usize {
+        self.grad.len()
+    }
+}
+
+pub struct DcgdServer {
+    x: Vec<f64>,
+    gamma: f64,
+    prox: Prox,
+    g: Vec<f64>,
+}
+
+impl ServerAlgo for DcgdServer {
+    fn downlink(&mut self) -> Downlink {
+        Downlink::Dense {
+            x: self.x.clone(),
+            w: None,
+        }
+    }
+
+    fn apply(&mut self, ups: &[Uplink], _rng: &mut Rng) {
+        self.g.fill(0.0);
+        for u in ups {
+            for (k, &i) in u.delta.idx.iter().enumerate() {
+                self.g[i as usize] += u.delta.val[k];
+            }
+        }
+        let step = self.gamma / ups.len() as f64;
+        for j in 0..self.x.len() {
+            self.x[j] -= step * self.g[j];
+        }
+        self.prox.apply(self.gamma, &mut self.x);
+    }
+
+    fn iterate(&self) -> &[f64] {
+        &self.x
+    }
+
+    fn dim(&self) -> usize {
+        self.x.len()
+    }
+
+    fn name(&self) -> &'static str {
+        "dcgd"
+    }
+}
+
+pub fn build(
+    spec: &MethodSpec,
+    sm: &Smoothness,
+) -> (Box<dyn ServerAlgo>, Vec<Box<dyn WorkerAlgo + Send>>) {
+    let dim = sm.dim;
+    // the original method always uses uniform (smoothness-unaware) sampling
+    let sampling = IndependentSampling::uniform(dim, spec.tau);
+    let omega = sampling.omega();
+    let gamma = stepsize::dcgd_gamma(sm, omega);
+    let server = Box::new(DcgdServer {
+        x: spec.x0.clone(),
+        gamma,
+        prox: Prox::None,
+        g: vec![0.0; dim],
+    });
+    let workers = (0..sm.n())
+        .map(|_| {
+            Box::new(DcgdWorker {
+                sampling: sampling.clone(),
+                grad: vec![0.0; dim],
+            }) as Box<dyn WorkerAlgo + Send>
+        })
+        .collect();
+    (server, workers)
+}

@@ -1,0 +1,128 @@
+//! DCGD+ (Algorithm 1) — DCGD with the matrix-smoothness-aware
+//! sparsification protocol (Definition 3 / eq. 7):
+//!
+//! * worker i sends `Δ_i = C_i L_i^{†1/2} ∇f_i(x^k)` (sparse);
+//! * the server decompresses `L_i^{1/2} Δ_i`, averages, prox-steps.
+//!
+//! Theory step size γ = 1/(L + 2𝓛̃_max/n) (Theorem 2).
+
+use crate::compress::{MatrixAware, SparseMsg};
+use crate::linalg::psd::PsdRoot;
+use crate::methods::prox::Prox;
+use crate::methods::{stepsize, Downlink, MethodSpec, ServerAlgo, Uplink, WorkerAlgo};
+use crate::objective::Smoothness;
+use crate::runtime::GradEngine;
+use crate::util::rng::Rng;
+use std::sync::Arc;
+
+pub struct DcgdPlusWorker {
+    compressor: MatrixAware,
+    root: Arc<PsdRoot>,
+    grad: Vec<f64>,
+}
+
+impl WorkerAlgo for DcgdPlusWorker {
+    fn round(&mut self, down: &Downlink, engine: &mut dyn GradEngine, rng: &mut Rng) -> Uplink {
+        let x = match down {
+            Downlink::Dense { x, .. } => x,
+            _ => unreachable!("dcgd+ uses dense downlinks"),
+        };
+        engine.grad_into(x, &mut self.grad);
+        let mut delta = SparseMsg::new();
+        self.compressor.compress(&self.root, &self.grad, rng, &mut delta);
+        Uplink {
+            delta,
+            delta2: None,
+        }
+    }
+
+    fn dim(&self) -> usize {
+        self.grad.len()
+    }
+}
+
+pub struct DcgdPlusServer {
+    x: Vec<f64>,
+    gamma: f64,
+    prox: Prox,
+    roots: Vec<Arc<PsdRoot>>,
+    g: Vec<f64>,
+    scratch: Vec<f64>,
+}
+
+impl ServerAlgo for DcgdPlusServer {
+    fn downlink(&mut self) -> Downlink {
+        Downlink::Dense {
+            x: self.x.clone(),
+            w: None,
+        }
+    }
+
+    fn apply(&mut self, ups: &[Uplink], _rng: &mut Rng) {
+        self.g.fill(0.0);
+        for (i, u) in ups.iter().enumerate() {
+            // decompress: L_i^{1/2} Δ_i
+            self.roots[i].apply_pow_sparse_into(
+                0.5,
+                &u.delta.idx,
+                &u.delta.val,
+                &mut self.scratch,
+            );
+            for j in 0..self.g.len() {
+                self.g[j] += self.scratch[j];
+            }
+        }
+        let step = self.gamma / ups.len() as f64;
+        for j in 0..self.x.len() {
+            self.x[j] -= step * self.g[j];
+        }
+        self.prox.apply(self.gamma, &mut self.x);
+    }
+
+    fn iterate(&self) -> &[f64] {
+        &self.x
+    }
+
+    fn dim(&self) -> usize {
+        self.x.len()
+    }
+
+    fn name(&self) -> &'static str {
+        "dcgd+"
+    }
+}
+
+pub fn build(
+    spec: &MethodSpec,
+    sm: &Smoothness,
+) -> (Box<dyn ServerAlgo>, Vec<Box<dyn WorkerAlgo + Send>>) {
+    let dim = sm.dim;
+    let roots: Vec<Arc<PsdRoot>> = sm.locals.iter().map(|l| Arc::new(l.root.clone())).collect();
+
+    let mut tilde_l_max: f64 = 0.0;
+    let workers: Vec<Box<dyn WorkerAlgo + Send>> = sm
+        .locals
+        .iter()
+        .zip(&roots)
+        .map(|(loc, root)| {
+            let sampling = spec.sampling.build(&loc.diag, spec.tau, spec.mu, sm.n());
+            tilde_l_max = tilde_l_max.max(sampling.tilde_l(&loc.diag));
+            Box::new(DcgdPlusWorker {
+                compressor: MatrixAware::new(sampling),
+                root: root.clone(),
+                grad: vec![0.0; dim],
+            }) as Box<dyn WorkerAlgo + Send>
+        })
+        .collect();
+
+    let gamma = stepsize::dcgd_plus_gamma(sm, tilde_l_max);
+    let server = Box::new(DcgdPlusServer {
+        x: spec.x0.clone(),
+        gamma,
+        prox: Prox::None,
+        roots,
+        g: vec![0.0; dim],
+        scratch: vec![0.0; dim],
+    });
+    (server, workers)
+}

@@ -1,0 +1,101 @@
+//! DGD — uncompressed Distributed Gradient Descent baseline (Remark 7).
+//! Workers send dense gradients; the server averages and takes a proximal
+//! step with γ = 2/(L+μ).
+
+use crate::compress::SparseMsg;
+use crate::linalg::vector;
+use crate::methods::prox::Prox;
+use crate::methods::{stepsize, Downlink, MethodSpec, ServerAlgo, Uplink, WorkerAlgo};
+use crate::objective::Smoothness;
+use crate::runtime::GradEngine;
+use crate::util::rng::Rng;
+
+pub struct DgdWorker {
+    dim: usize,
+    grad: Vec<f64>,
+}
+
+impl WorkerAlgo for DgdWorker {
+    fn round(&mut self, down: &Downlink, engine: &mut dyn GradEngine, _rng: &mut Rng) -> Uplink {
+        let x = match down {
+            Downlink::Dense { x, .. } => x,
+            _ => unreachable!("dgd uses dense downlinks"),
+        };
+        engine.grad_into(x, &mut self.grad);
+        let mut delta = SparseMsg::with_capacity(self.dim);
+        for (j, &v) in self.grad.iter().enumerate() {
+            delta.push(j as u32, v);
+        }
+        Uplink {
+            delta,
+            delta2: None,
+        }
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+}
+
+pub struct DgdServer {
+    x: Vec<f64>,
+    gamma: f64,
+    prox: Prox,
+    g: Vec<f64>,
+}
+
+impl ServerAlgo for DgdServer {
+    fn downlink(&mut self) -> Downlink {
+        Downlink::Dense {
+            x: self.x.clone(),
+            w: None,
+        }
+    }
+
+    fn apply(&mut self, ups: &[Uplink], _rng: &mut Rng) {
+        self.g.fill(0.0);
+        for u in ups {
+            for (k, &i) in u.delta.idx.iter().enumerate() {
+                self.g[i as usize] += u.delta.val[k];
+            }
+        }
+        let inv_n = 1.0 / ups.len() as f64;
+        vector::axpy(-self.gamma * inv_n, &self.g.clone(), &mut self.x);
+        self.prox.apply(self.gamma, &mut self.x);
+    }
+
+    fn iterate(&self) -> &[f64] {
+        &self.x
+    }
+
+    fn dim(&self) -> usize {
+        self.x.len()
+    }
+
+    fn name(&self) -> &'static str {
+        "dgd"
+    }
+}
+
+pub fn build(
+    spec: &MethodSpec,
+    sm: &Smoothness,
+) -> (Box<dyn ServerAlgo>, Vec<Box<dyn WorkerAlgo + Send>>) {
+    let dim = sm.dim;
+    let gamma = stepsize::dgd_gamma(sm);
+    let server = Box::new(DgdServer {
+        x: spec.x0.clone(),
+        gamma,
+        prox: Prox::None,
+        g: vec![0.0; dim],
+    });
+    let workers = (0..sm.n())
+        .map(|_| {
+            Box::new(DgdWorker {
+                dim,
+                grad: vec![0.0; dim],
+            }) as Box<dyn WorkerAlgo + Send>
+        })
+        .collect();
+    (server, workers)
+}

@@ -1,0 +1,199 @@
+//! Distributed optimization methods (the paper's Algorithms 1–3, 7, 8 and
+//! their baselines), expressed as *server/worker state machines* so the
+//! same implementation runs under both coordinator drivers (in-process
+//! simulator and threaded runtime).
+//!
+//! Per round:
+//! 1. the server produces a [`Downlink`] (dense model broadcast, or the
+//!    sparse δ message for bidirectionally-compressed DIANA++);
+//! 2. every worker consumes it, evaluates its local gradient through a
+//!    [`GradEngine`] (native or PJRT), compresses, and returns an
+//!    [`Uplink`];
+//! 3. the server aggregates the uplinks, decompresses with the stored
+//!    `L_i^{1/2}` roots, and advances the model.
+//!
+//! Method catalogue:
+//!
+//! | method    | compression      | variance reduction | acceleration |
+//! |-----------|------------------|--------------------|--------------|
+//! | `dgd`     | none             | –                  | –            |
+//! | `dcgd`    | standard sketch  | –                  | –            |
+//! | `dcgd+`   | matrix-aware (7) | –                  | –            |
+//! | `diana`   | standard sketch  | DIANA shifts       | –            |
+//! | `diana+`  | matrix-aware (7) | DIANA shifts       | –            |
+//! | `isega+`  | matrix-aware (7) | ISEGA projection   | –            |
+//! | `adiana`  | standard sketch  | DIANA shifts       | Nesterov     |
+//! | `adiana+` | matrix-aware (7) | DIANA shifts       | Nesterov     |
+//! | `diana++` | matrix-aware, both directions | twofold | –          |
+
+pub mod adiana;
+pub mod adiana_plus;
+pub mod dcgd;
+pub mod dcgd_plus;
+pub mod dgd;
+pub mod diana;
+pub mod diana_plus;
+pub mod diana_pp;
+pub mod isega_plus;
+pub mod prox;
+pub mod single;
+pub mod solve;
+pub mod stepsize;
+
+use crate::compress::SparseMsg;
+use crate::runtime::GradEngine;
+use crate::util::rng::Rng;
+
+/// Server → workers payload.
+#[derive(Clone, Debug)]
+pub enum Downlink {
+    /// Dense broadcast of the current model (and ADIANA's anchor w).
+    Dense { x: Vec<f64>, w: Option<Vec<f64>> },
+    /// DIANA++: sparse server message δ; workers maintain model replicas.
+    Sparse { delta: SparseMsg },
+    /// Initial round of DIANA++: dense model to seed replicas.
+    Init { x: Vec<f64> },
+}
+
+impl Downlink {
+    /// Coordinates carried server→worker (communication accounting).
+    pub fn coords(&self) -> usize {
+        match self {
+            Downlink::Dense { x, w } => x.len() + w.as_ref().map(|v| v.len()).unwrap_or(0),
+            Downlink::Sparse { delta } => delta.coords(),
+            Downlink::Init { x } => x.len(),
+        }
+    }
+}
+
+/// Worker → server payload.
+#[derive(Clone, Debug, Default)]
+pub struct Uplink {
+    /// primary sparse update (Δ_i in the paper's notation)
+    pub delta: SparseMsg,
+    /// ADIANA's second sparse update (δ_i, the shift-learning message)
+    pub delta2: Option<SparseMsg>,
+}
+
+impl Uplink {
+    pub fn coords(&self) -> usize {
+        self.delta.coords() + self.delta2.as_ref().map(|m| m.coords()).unwrap_or(0)
+    }
+}
+
+/// Worker-side half of a method: owns local state (h_i, sampling, roots)
+/// and the gradient engine is passed in per call.
+pub trait WorkerAlgo {
+    /// Process one round: consume the downlink, produce the uplink.
+    fn round(&mut self, down: &Downlink, engine: &mut dyn GradEngine, rng: &mut Rng) -> Uplink;
+
+    fn dim(&self) -> usize;
+}
+
+/// Server-side half of a method.
+pub trait ServerAlgo {
+    /// Produce this round's downlink.
+    fn downlink(&mut self) -> Downlink;
+
+    /// Consume all workers' uplinks, advance the model.
+    fn apply(&mut self, ups: &[Uplink], rng: &mut Rng);
+
+    /// Current iterate the convergence metric is computed on
+    /// (`z^k` for ADIANA per Theorem 4; `x^k` otherwise).
+    fn iterate(&self) -> &[f64];
+
+    fn dim(&self) -> usize;
+
+    fn name(&self) -> &'static str;
+}
+
+/// A constructed method: one server + n workers.
+pub struct Method {
+    pub server: Box<dyn ServerAlgo>,
+    pub workers: Vec<Box<dyn WorkerAlgo + Send>>,
+    pub name: String,
+}
+
+/// Names accepted by [`build`], in paper order.
+pub const METHOD_NAMES: [&str; 9] = [
+    "dgd", "dcgd", "dcgd+", "diana", "diana+", "adiana", "adiana+", "isega+", "diana++",
+];
+
+pub use builder::{build, MethodSpec};
+
+mod builder {
+    use super::*;
+    use crate::objective::Smoothness;
+    use crate::sampling::SamplingKind;
+
+    /// Everything needed to instantiate a method.
+    #[derive(Clone, Debug)]
+    pub struct MethodSpec {
+        pub name: String,
+        /// expected sampling size τ
+        pub tau: f64,
+        pub sampling: SamplingKind,
+        pub mu: f64,
+        pub x0: Vec<f64>,
+        /// relax ADIANA(+) constants as the paper's §6.1 does
+        pub practical_adiana: bool,
+    }
+
+    impl MethodSpec {
+        pub fn new(name: &str, tau: f64, sampling: SamplingKind, mu: f64, x0: Vec<f64>) -> Self {
+            MethodSpec {
+                name: name.to_string(),
+                tau,
+                sampling,
+                mu,
+                x0,
+                practical_adiana: true,
+            }
+        }
+    }
+
+    /// Build a method instance from its spec and the problem smoothness.
+    pub fn build(spec: &MethodSpec, sm: &Smoothness) -> anyhow::Result<Method> {
+        let name = spec.name.as_str();
+        let (server, workers): (Box<dyn ServerAlgo>, Vec<Box<dyn WorkerAlgo + Send>>) = match name
+        {
+            "dgd" => dgd::build(spec, sm),
+            "dcgd" => dcgd::build(spec, sm),
+            "dcgd+" => dcgd_plus::build(spec, sm),
+            "diana" => diana::build(spec, sm),
+            "diana+" => diana_plus::build(spec, sm),
+            "adiana" => adiana::build(spec, sm),
+            "adiana+" => adiana_plus::build(spec, sm),
+            "isega+" => isega_plus::build(spec, sm),
+            "diana++" => diana_pp::build(spec, sm),
+            other => anyhow::bail!("unknown method '{other}' (expected one of {METHOD_NAMES:?})"),
+        };
+        Ok(Method {
+            server,
+            workers,
+            name: spec.name.clone(),
+        })
+    }
+}
+
+/// Drive a method for one synchronous round against in-process engines.
+/// Returns coordinates sent up (Σ over workers) and down.
+pub fn sync_round(
+    method: &mut Method,
+    engines: &mut [Box<dyn GradEngine>],
+    server_rng: &mut Rng,
+    worker_rngs: &mut [Rng],
+) -> (usize, usize) {
+    let down = method.server.downlink();
+    let down_coords = down.coords() * method.workers.len();
+    let ups: Vec<Uplink> = method
+        .workers
+        .iter_mut()
+        .zip(engines.iter_mut())
+        .zip(worker_rngs.iter_mut())
+        .map(|((w, e), rng)| w.round(&down, e.as_mut(), rng))
+        .collect();
+    let up_coords: usize = ups.iter().map(|u| u.coords()).sum();
+    method.server.apply(&ups, server_rng);
+    (up_coords, down_coords)
+}

@@ -1,0 +1,132 @@
+//! Proximal operators for the regularizer R in problem (1).
+//!
+//! The paper's experiments use R ≡ 0 (the ℓ2 term is folded into the
+//! smooth part), but all "+" methods are proximal (Table 1), so we
+//! implement the standard proximable choices.
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Prox {
+    /// R ≡ 0
+    None,
+    /// R(x) = λ‖x‖₁ → soft thresholding
+    L1 { lambda: f64 },
+    /// R(x) = (λ/2)‖x‖² → shrinkage
+    L2 { lambda: f64 },
+}
+
+impl Prox {
+    /// x ← prox_{γR}(x) in place.
+    pub fn apply(&self, gamma: f64, x: &mut [f64]) {
+        match *self {
+            Prox::None => {}
+            Prox::L1 { lambda } => {
+                let t = gamma * lambda;
+                for v in x.iter_mut() {
+                    *v = if *v > t {
+                        *v - t
+                    } else if *v < -t {
+                        *v + t
+                    } else {
+                        0.0
+                    };
+                }
+            }
+            Prox::L2 { lambda } => {
+                let c = 1.0 / (1.0 + gamma * lambda);
+                for v in x.iter_mut() {
+                    *v *= c;
+                }
+            }
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Prox> {
+        if s == "none" {
+            return Some(Prox::None);
+        }
+        if let Some(rest) = s.strip_prefix("l1:") {
+            return rest.parse().ok().map(|lambda| Prox::L1 { lambda });
+        }
+        if let Some(rest) = s.strip_prefix("l2:") {
+            return rest.parse().ok().map(|lambda| Prox::L2 { lambda });
+        }
+        None
+    }
+
+    /// R(x) for metrics.
+    pub fn value(&self, x: &[f64]) -> f64 {
+        match *self {
+            Prox::None => 0.0,
+            Prox::L1 { lambda } => lambda * x.iter().map(|v| v.abs()).sum::<f64>(),
+            Prox::L2 { lambda } => 0.5 * lambda * crate::linalg::vector::norm2(x),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_is_identity() {
+        let mut x = [1.0, -2.0];
+        Prox::None.apply(0.5, &mut x);
+        assert_eq!(x, [1.0, -2.0]);
+    }
+
+    #[test]
+    fn l1_soft_threshold() {
+        let mut x = [3.0, -3.0, 0.5, -0.5];
+        Prox::L1 { lambda: 2.0 }.apply(0.5, &mut x); // t = 1
+        assert_eq!(x, [2.0, -2.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn l2_shrinkage() {
+        let mut x = [2.0, -4.0];
+        Prox::L2 { lambda: 1.0 }.apply(1.0, &mut x);
+        assert_eq!(x, [1.0, -2.0]);
+    }
+
+    #[test]
+    fn prox_minimizes_objective() {
+        // prox_{γR}(v) = argmin_u R(u) + (1/2γ)‖u−v‖²: check optimality for L1
+        // by comparing against small perturbations.
+        let v = [1.5, -0.3, 0.0, 4.0];
+        let gamma = 0.7;
+        let p = Prox::L1 { lambda: 1.0 };
+        let mut u = v;
+        p.apply(gamma, &mut u);
+        let obj = |u: &[f64]| {
+            p.value(u)
+                + u.iter()
+                    .zip(&v)
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum::<f64>()
+                    / (2.0 * gamma)
+        };
+        let base = obj(&u);
+        for j in 0..4 {
+            for eps in [-1e-4, 1e-4] {
+                let mut u2 = u;
+                u2[j] += eps;
+                assert!(obj(&u2) >= base - 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn parsing() {
+        assert_eq!(Prox::parse("none"), Some(Prox::None));
+        assert_eq!(Prox::parse("l1:0.5"), Some(Prox::L1 { lambda: 0.5 }));
+        assert_eq!(Prox::parse("l2:2"), Some(Prox::L2 { lambda: 2.0 }));
+        assert_eq!(Prox::parse("huh"), None);
+    }
+
+    #[test]
+    fn values() {
+        assert_eq!(Prox::L1 { lambda: 2.0 }.value(&[1.0, -3.0]), 8.0);
+        assert_eq!(Prox::L2 { lambda: 2.0 }.value(&[3.0, 4.0]), 25.0);
+        assert_eq!(Prox::None.value(&[9.9]), 0.0);
+    }
+}

@@ -1,0 +1,84 @@
+//! Single-node methods (Appendix B): randomized coordinate descent viewed
+//! as sketched compressed gradient descent.
+//!
+//! * `'NSync` (Algorithm 4, Richtárik & Takáč 2016a) — arbitrary-sampling
+//!   coordinate descent with ESO stepsizes `v = λ·p`;
+//! * `SkGD` (Algorithm 5) — x⁺ = x − γC∇f(x) with the unbiased diagonal
+//!   sketch, γ = 1/λ_max(P̄∘L) (Theorem 8);
+//! * `CGD+` (Algorithm 6) — x⁺ = prox_{γR}(x − γ C̄∇f(x)) with the
+//!   matrix-aware sketch C̄ = L^{1/2}CL^{†1/2}, γ = 1/(2𝓛̄) (Theorem 12).
+//!
+//! Lemma 9: 'NSync and SkGD share the same ESO constant
+//! λ = λ_max(P̄∘L); for an independent sampling
+//! `P̄∘L = L + Diag((1/p_j − 1)L_jj)`, computed here by power iteration.
+
+pub mod cgd_plus;
+pub mod greedy;
+pub mod nsync;
+pub mod skgd;
+
+use crate::linalg::psd::PsdRoot;
+use crate::objective::logreg::LogReg;
+use crate::util::rng::Rng;
+
+/// Common interface: one stochastic step; `x` is the iterate.
+pub trait SingleMethod {
+    fn step(&mut self, obj: &LogReg, rng: &mut Rng);
+    fn x(&self) -> &[f64];
+    fn name(&self) -> &'static str;
+}
+
+/// λ_max(P̄ ∘ L) = λ_max(L + Diag((1/p − 1) ∘ diag L)) for an independent
+/// sampling (ESO constant shared by 'NSync/SkGD/CGD+; Lemma 9 / Lemma 11).
+pub fn eso_lambda(root: &PsdRoot, diag: &[f64], p: &[f64]) -> f64 {
+    let d = diag.len();
+    let add: Vec<f64> = p
+        .iter()
+        .zip(diag)
+        .map(|(&pj, &lj)| (1.0 / pj - 1.0) * lj)
+        .collect();
+    let mut tmp = vec![0.0; d];
+    crate::linalg::eigen::power_lambda_max(
+        d,
+        |x, y| {
+            root.apply_pow_into(1.0, x, &mut tmp);
+            for j in 0..d {
+                y[j] = tmp[j] + add[j] * x[j];
+            }
+        },
+        1e-12,
+        20_000,
+        0xE50,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::objective::smoothness::build_local;
+
+    #[test]
+    fn eso_lambda_bounds_lemma11() {
+        // L ≤ 𝓛̄ ≤ L + 𝓛̃ (Lemma 11)
+        let ds = synth::generate(&synth::tiny_spec(), 1);
+        let (global, _) = ds.prepare(1, 1);
+        let loc = build_local(&global.a, 1e-3);
+        let p = vec![0.25; global.dim()];
+        let lam = eso_lambda(&loc.root, &loc.diag, &p);
+        let l = loc.root.lambda_max();
+        let tilde = crate::objective::smoothness::tilde_l_independent(&p, &loc.diag);
+        assert!(lam >= l * 0.999, "lambda={lam} < L={l}");
+        assert!(lam <= l + tilde + 1e-9, "lambda={lam} > L+tilde={}", l + tilde);
+    }
+
+    #[test]
+    fn eso_lambda_full_sampling_is_l() {
+        let ds = synth::generate(&synth::tiny_spec(), 2);
+        let (global, _) = ds.prepare(1, 2);
+        let loc = build_local(&global.a, 1e-3);
+        let p = vec![1.0; global.dim()];
+        let lam = eso_lambda(&loc.root, &loc.diag, &p);
+        assert!((lam - loc.root.lambda_max()).abs() < 1e-8 * lam);
+    }
+}

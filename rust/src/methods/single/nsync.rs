@@ -1,0 +1,109 @@
+//! 'NSync (Algorithm 4, Richtárik & Takáč 2016a): arbitrary-sampling
+//! coordinate descent `x⁺ = x − (1/v) ∘ ∇f(x)_S` with ESO parameters
+//! `v = λ·p` (Lemma 9 shows this matches SkGD's rate), or the classical
+//! serial choice `v_j = L_jj` when |S| = 1.
+
+use crate::methods::single::{eso_lambda, SingleMethod};
+use crate::objective::logreg::LogReg;
+use crate::objective::smoothness::LocalSmoothness;
+use crate::sampling::IndependentSampling;
+use crate::util::rng::Rng;
+
+pub struct NSync {
+    pub x: Vec<f64>,
+    /// per-coordinate ESO stepsizes 1/v_j
+    pub inv_v: Vec<f64>,
+    sampling: IndependentSampling,
+    grad: Vec<f64>,
+}
+
+impl NSync {
+    /// Generic arbitrary-sampling variant with v = λ·p (Lemma 9).
+    pub fn new(sm: &LocalSmoothness, sampling: IndependentSampling, x0: Vec<f64>) -> NSync {
+        let lam = eso_lambda(&sm.root, &sm.diag, &sampling.p);
+        let inv_v = sampling.p.iter().map(|&pj| 1.0 / (lam * pj)).collect();
+        NSync {
+            grad: vec![0.0; x0.len()],
+            x: x0,
+            inv_v,
+            sampling,
+        }
+    }
+
+    /// Serial variant (|S| = 1 in expectation structure): v_j = L_jj with
+    /// the optimal probabilities p_j = L_jj / Σ_l L_ll (Appendix B.1).
+    pub fn serial_optimal(sm: &LocalSmoothness, x0: Vec<f64>) -> NSync {
+        let total: f64 = sm.diag.iter().sum();
+        let p: Vec<f64> = sm.diag.iter().map(|&l| (l / total).max(1e-12)).collect();
+        let inv_v = sm.diag.iter().map(|&l| 1.0 / l).collect();
+        NSync {
+            grad: vec![0.0; x0.len()],
+            x: x0,
+            inv_v,
+            sampling: IndependentSampling::new(p),
+        }
+    }
+}
+
+impl SingleMethod for NSync {
+    fn step(&mut self, obj: &LogReg, rng: &mut Rng) {
+        obj.grad_into(&self.x, &mut self.grad);
+        for (j, &pj) in self.sampling.p.iter().enumerate() {
+            if pj >= 1.0 || rng.bernoulli(pj) {
+                // biased direction: no 1/p_j rescale (contrast with SkGD)
+                self.x[j] -= self.inv_v[j] * self.grad[j];
+            }
+        }
+    }
+
+    fn x(&self) -> &[f64] {
+        &self.x
+    }
+
+    fn name(&self) -> &'static str {
+        "nsync"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::objective::smoothness::build_local;
+
+    fn setup() -> (LogReg, LocalSmoothness, usize) {
+        let ds = synth::generate(&synth::tiny_spec(), 5);
+        let (global, _) = ds.prepare(1, 5);
+        let d = global.dim();
+        let obj = LogReg::new(global.a.clone(), global.b.clone(), 1e-3);
+        let loc = build_local(&global.a, 1e-3);
+        (obj, loc, d)
+    }
+
+    #[test]
+    fn nsync_converges() {
+        let (obj, loc, d) = setup();
+        let sampling = IndependentSampling::uniform(d, 4.0);
+        let mut m = NSync::new(&loc, sampling, vec![0.0; d]);
+        let f0 = obj.loss(&m.x);
+        let mut rng = Rng::new(1);
+        for _ in 0..4000 {
+            m.step(&obj, &mut rng);
+        }
+        assert!(obj.loss(&m.x) < f0, "no descent");
+        let g = obj.grad(&m.x);
+        assert!(crate::linalg::vector::norm(&g) < 0.2 * crate::linalg::vector::norm(&obj.grad(&vec![0.0; d])));
+    }
+
+    #[test]
+    fn serial_optimal_converges() {
+        let (obj, loc, d) = setup();
+        let mut m = NSync::serial_optimal(&loc, vec![0.0; d]);
+        let f0 = obj.loss(&m.x);
+        let mut rng = Rng::new(2);
+        for _ in 0..6000 {
+            m.step(&obj, &mut rng);
+        }
+        assert!(obj.loss(&m.x) < f0);
+    }
+}

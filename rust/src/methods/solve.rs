@@ -1,0 +1,115 @@
+//! High-precision solver for x\* (the residual reference point of all
+//! figures): Nesterov's accelerated gradient method for μ-strongly-convex
+//! L-smooth objectives, run until ‖∇f(x)‖ ≤ tol. With the paper's setup
+//! (rows normalized to ‖a‖ = 1/2, μ = 1e-3) the condition number is small
+//! (≲ 100) and this converges to f64 precision in a few hundred
+//! iterations.
+
+use crate::linalg::vector;
+use crate::objective::logreg::Problem;
+use crate::objective::Smoothness;
+
+pub struct Solution {
+    pub x_star: Vec<f64>,
+    pub f_star: f64,
+    pub grad_norm: f64,
+    pub iterations: usize,
+}
+
+pub fn solve_opt(problem: &Problem, sm: &Smoothness, tol: f64, max_iter: usize) -> Solution {
+    let d = problem.dim;
+    let l = sm.l;
+    let mu = sm.mu;
+    let kappa = (l / mu).max(1.0);
+    let sq = kappa.sqrt();
+    let momentum = (sq - 1.0) / (sq + 1.0);
+    let step = 1.0 / l;
+
+    let mut x = vec![0.0; d];
+    let mut y = vec![0.0; d];
+    let mut x_prev = vec![0.0; d];
+    let mut g = vec![0.0; d];
+    let mut iterations = 0;
+
+    for it in 0..max_iter {
+        iterations = it + 1;
+        g = problem.grad(&y);
+        let gn = vector::norm(&g);
+        if gn <= tol {
+            // y is our converged point
+            x.copy_from_slice(&y);
+            break;
+        }
+        x_prev.copy_from_slice(&x);
+        for j in 0..d {
+            x[j] = y[j] - step * g[j];
+        }
+        for j in 0..d {
+            y[j] = x[j] + momentum * (x[j] - x_prev[j]);
+        }
+        if it == max_iter - 1 {
+            // fall back to last x
+        }
+    }
+
+    // polish with a few plain gradient steps (kills momentum overshoot)
+    for _ in 0..50 {
+        g = problem.grad(&x);
+        if vector::norm(&g) <= tol {
+            break;
+        }
+        for j in 0..d {
+            x[j] -= step * g[j];
+        }
+    }
+
+    let g_final = problem.grad(&x);
+    Solution {
+        f_star: problem.loss(&x),
+        grad_norm: vector::norm(&g_final),
+        x_star: x,
+        iterations,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::objective::Smoothness;
+
+    #[test]
+    fn solves_tiny_problem_to_high_precision() {
+        let ds = synth::generate(&synth::tiny_spec(), 1);
+        let (_, shards) = ds.prepare(4, 1);
+        let problem = Problem::from_shards(&shards, 1e-3);
+        let sm = Smoothness::build(&shards, 1e-3);
+        let sol = solve_opt(&problem, &sm, 1e-13, 20_000);
+        assert!(
+            sol.grad_norm <= 1e-12,
+            "grad norm {} too large",
+            sol.grad_norm
+        );
+        // optimality: f(x*) ≤ f(x* + εv) for random perturbations
+        let f0 = sol.f_star;
+        let mut rng = crate::util::rng::Rng::new(2);
+        for _ in 0..5 {
+            let mut xp = sol.x_star.clone();
+            for v in xp.iter_mut() {
+                *v += 1e-4 * rng.normal();
+            }
+            assert!(problem.loss(&xp) >= f0 - 1e-12);
+        }
+    }
+
+    #[test]
+    fn solution_is_deterministic() {
+        let ds = synth::generate(&synth::tiny_spec(), 3);
+        let (_, shards) = ds.prepare(3, 3);
+        let problem = Problem::from_shards(&shards, 1e-3);
+        let sm = Smoothness::build(&shards, 1e-3);
+        let s1 = solve_opt(&problem, &sm, 1e-12, 10_000);
+        let s2 = solve_opt(&problem, &sm, 1e-12, 10_000);
+        assert_eq!(s1.x_star, s2.x_star);
+    }
+}

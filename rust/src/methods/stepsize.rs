@@ -1,0 +1,244 @@
+//! Theory-dictated step sizes and parameters (paper §6.1 runs everything
+//! "with stepsizes as dictated by theory").
+//!
+//! * DCGD:    γ = 1/(L + 2ωL_max/n)           (unified theory, Khirirat et al.)
+//! * DCGD+:   γ = 1/(L + 2𝓛̃_max/n)            (Theorem 2)
+//! * DIANA:   γ = 1/(L + 6ωL_max/n), α = 1/(1+ω)
+//! * DIANA+:  γ = 1/(L + 6𝓛̃_max/n), α = 1/(1+ω_max)   (Theorem 3)
+//! * ADIANA(+): the Theorem-4 parameter system, with the variance scale
+//!   V = ωL_max (original) or V = 𝓛̃_max (+); the `practical` flag drops
+//!   the large constants exactly as the paper's experiments do ("we have
+//!   omitted several constant factors for the sake of practicality").
+//! * ISEGA+:  γ = 1/(4𝓛̃_max/n + 2L + μ(ω_max+1))      (Theorem 22)
+//! * DIANA++: the Theorem-23 parameter system.
+
+use crate::objective::Smoothness;
+
+/// DGD on a μ-strongly-convex L-smooth f: γ = 2/(L + μ).
+pub fn dgd_gamma(sm: &Smoothness) -> f64 {
+    2.0 / (sm.l + sm.mu)
+}
+
+pub fn dcgd_gamma(sm: &Smoothness, omega: f64) -> f64 {
+    1.0 / (sm.l + 2.0 * omega * sm.l_max / sm.n() as f64)
+}
+
+/// Theorem 2.
+pub fn dcgd_plus_gamma(sm: &Smoothness, tilde_l_max: f64) -> f64 {
+    1.0 / (sm.l + 2.0 * tilde_l_max / sm.n() as f64)
+}
+
+pub fn diana_gamma(sm: &Smoothness, omega: f64) -> f64 {
+    1.0 / (sm.l + 6.0 * omega * sm.l_max / sm.n() as f64)
+}
+
+/// Theorem 3.
+pub fn diana_plus_gamma(sm: &Smoothness, tilde_l_max: f64) -> f64 {
+    1.0 / (sm.l + 6.0 * tilde_l_max / sm.n() as f64)
+}
+
+pub fn diana_alpha(omega_max: f64) -> f64 {
+    1.0 / (1.0 + omega_max)
+}
+
+/// Theorem 22 (ISEGA+).
+pub fn isega_plus_gamma(sm: &Smoothness, tilde_l_max: f64, omega_max: f64) -> f64 {
+    1.0 / (4.0 * tilde_l_max / sm.n() as f64 + 2.0 * sm.l + sm.mu * (omega_max + 1.0))
+}
+
+/// The ADIANA parameter system (proof of Theorem 4).
+#[derive(Clone, Copy, Debug)]
+pub struct AdianaParams {
+    pub eta: f64,
+    pub gamma: f64,
+    pub alpha: f64,
+    pub beta: f64,
+    pub theta1: f64,
+    pub theta2: f64,
+    pub q: f64,
+}
+
+/// `variance_scale` V = 𝓛̃_max for ADIANA+ (Theorem 4) or ωL_max for the
+/// original ADIANA baseline. `practical` drops the 64(2q(ω+1)+1)² constant
+/// to 8(1+ω) — the paper's own experimental relaxation.
+pub fn adiana_params(
+    sm: &Smoothness,
+    omega_max: f64,
+    variance_scale: f64,
+    practical: bool,
+) -> AdianaParams {
+    let n = sm.n() as f64;
+    let (l, mu) = (sm.l, sm.mu);
+    let v = variance_scale.max(f64::MIN_POSITIVE);
+
+    // q from the proof of Theorem 4
+    let q = (1.0f64)
+        .min(((n * l / (32.0 * v)).sqrt() - 1.0).max(1.0) / (2.0 * (1.0 + omega_max)));
+
+    // η from the proof (64·V·(2q(ω+1)+1)²); the practical mode keeps the
+    // structure but drops the constant 64 → 8, mirroring the paper's
+    // "omitted several constant factors for the sake of practicality"
+    let c = 2.0 * q * (omega_max + 1.0) + 1.0;
+    let denom_const = if practical { 8.0 } else { 64.0 };
+    let eta = (1.0 / (2.0 * l)).min(n / (denom_const * v * c * c));
+
+    let theta2 = 0.5;
+    let theta1 = (0.25f64).min((eta * mu / q).sqrt());
+    let gamma = eta / (2.0 * (theta1 + eta * mu));
+    let beta = 1.0 - gamma * mu;
+    let alpha = 1.0 / (1.0 + omega_max);
+
+    AdianaParams {
+        eta,
+        gamma,
+        alpha,
+        beta,
+        theta1,
+        theta2,
+        q,
+    }
+}
+
+/// The DIANA++ parameter system (Theorem 23).
+#[derive(Clone, Copy, Debug)]
+pub struct DianaPpParams {
+    pub gamma: f64,
+    /// worker shift step
+    pub alpha: f64,
+    /// server shift step
+    pub beta: f64,
+}
+
+/// `tilde_l_server` = 𝓛̃ = λ_max(P̃∘L) for the server sketch;
+/// `tilde_l_prime_max` = 𝓛̃'_max = max_i λ_max(P̃_i∘(L_i^{1/2}L†L_i^{1/2}));
+/// `omega_server` = server sketch variance; `tilde_l_max`, `omega_max` as
+/// usual.
+pub fn diana_pp_params(
+    sm: &Smoothness,
+    tilde_l_max: f64,
+    omega_max: f64,
+    tilde_l_server: f64,
+    tilde_l_prime_max: f64,
+    omega_server: f64,
+) -> DianaPpParams {
+    let n = sm.n() as f64;
+    let (l, mu) = (sm.l, sm.mu);
+    let _ = mu;
+    let alpha = 1.0 / (1.0 + omega_max);
+    let mut beta = 1.0 / (1.0 + omega_server);
+
+    let b = (4.0 * tilde_l_server * tilde_l_prime_max + 2.0 * tilde_l_max) / n;
+    let a = l + 2.0 * tilde_l_server + b;
+    // θ, θ' (guarding the no-server-compression limit 𝓛̃ → 0)
+    let denom = tilde_l_max + 2.0 * tilde_l_server * tilde_l_prime_max;
+    let theta = if denom > 0.0 {
+        n * tilde_l_server / denom
+    } else {
+        0.0
+    };
+    let theta_p = 2.0 * theta * tilde_l_prime_max / n;
+    // ensure ρ = min(α − βθ', β) > 0
+    if theta_p > 0.0 && beta * theta_p >= alpha {
+        beta = 0.5 * alpha / theta_p;
+    }
+    let rho = (alpha - beta * theta_p).min(beta).max(f64::MIN_POSITIVE);
+    let c = alpha + beta * theta + beta * theta_p;
+    let m = 2.0 * b / rho;
+    let gamma = 1.0 / (a + c * m);
+
+    DianaPpParams { gamma, alpha, beta }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::objective::Smoothness;
+
+    fn sm() -> Smoothness {
+        let ds = synth::generate(&synth::tiny_spec(), 1);
+        let (_, shards) = ds.prepare(4, 1);
+        Smoothness::build(&shards, 1e-3)
+    }
+
+    #[test]
+    fn plus_stepsize_dominates_baseline() {
+        // 𝓛̃_max ≤ ω·max_j L_jj ≤ ω·L_max ⇒ DCGD+ allows γ at least as large.
+        let s = sm();
+        let d = s.dim as f64;
+        let tau = 1.0;
+        let omega = d / tau - 1.0;
+        // uniform sampling tilde value
+        let tilde: f64 = s
+            .locals
+            .iter()
+            .map(|l| omega * l.diag.iter().cloned().fold(0.0, f64::max))
+            .fold(0.0, f64::max);
+        assert!(dcgd_plus_gamma(&s, tilde) >= dcgd_gamma(&s, omega) * 0.999);
+        assert!(diana_plus_gamma(&s, tilde) >= diana_gamma(&s, omega) * 0.999);
+    }
+
+    #[test]
+    fn gamma_mu_below_one() {
+        let s = sm();
+        for g in [
+            dgd_gamma(&s),
+            dcgd_gamma(&s, 19.0),
+            dcgd_plus_gamma(&s, 1.0),
+            diana_gamma(&s, 19.0),
+            diana_plus_gamma(&s, 1.0),
+            isega_plus_gamma(&s, 1.0, 19.0),
+        ] {
+            assert!(g > 0.0 && g * s.mu < 1.0, "gamma={g}");
+        }
+    }
+
+    #[test]
+    fn adiana_params_sane() {
+        let s = sm();
+        for practical in [false, true] {
+            let p = adiana_params(&s, 19.0, 0.5, practical);
+            assert!(p.eta > 0.0 && p.eta <= 1.0 / (2.0 * s.l) + 1e-15);
+            assert!(p.q > 0.0 && p.q <= 1.0);
+            assert!(p.alpha > 0.0 && p.alpha <= 1.0);
+            assert!(p.theta1 > 0.0 && p.theta1 <= 0.25);
+            assert!((p.theta2 - 0.5).abs() < 1e-15);
+            assert!(p.beta < 1.0 && p.beta > 0.0);
+            assert!(p.gamma > 0.0);
+            // 1 − θ1 − θ2 ≥ 0 so the x-combination is convex
+            assert!(1.0 - p.theta1 - p.theta2 >= -1e-12);
+        }
+    }
+
+    #[test]
+    fn adiana_practical_at_least_as_large_eta() {
+        let s = sm();
+        let strict = adiana_params(&s, 19.0, 0.5, false);
+        let practical = adiana_params(&s, 19.0, 0.5, true);
+        assert!(practical.eta >= strict.eta * 0.999);
+    }
+
+    #[test]
+    fn diana_pp_reduces_to_diana_plus_without_server_compression() {
+        let s = sm();
+        let tilde_max = 0.3;
+        let p = diana_pp_params(&s, tilde_max, 19.0, 0.0, 0.0, 0.0);
+        // γ = 1/(L + 6𝓛̃_max/n) exactly in this limit (A + CM telescopes)
+        let expected = diana_plus_gamma(&s, tilde_max);
+        assert!(
+            (p.gamma - expected).abs() < 1e-12 * expected,
+            "{} vs {expected}",
+            p.gamma
+        );
+        assert!((p.beta - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn diana_pp_params_positive_with_compression() {
+        let s = sm();
+        let p = diana_pp_params(&s, 0.3, 19.0, 0.1, 2.0, 9.0);
+        assert!(p.gamma > 0.0);
+        assert!(p.alpha > 0.0 && p.alpha <= 1.0);
+        assert!(p.beta > 0.0 && p.beta <= 1.0);
+    }
+}

@@ -1,0 +1,9 @@
+//! Objectives and their smoothness structure: the paper's regularized
+//! logistic regression (§6.1) plus the smoothness-matrix machinery
+//! (Definition 1, Lemma 1, eqs. 8/9/14/15).
+
+pub mod logreg;
+pub mod smoothness;
+
+pub use logreg::{LogReg, Problem};
+pub use smoothness::{build_local, omega, tilde_l_independent, LocalSmoothness, Smoothness};

@@ -1,0 +1,151 @@
+//! AOT artifact manifest.
+//!
+//! `make artifacts` runs `python/compile/aot.py`, which lowers the L2 JAX
+//! model (calling the L1 Pallas kernels) to **HLO text** — one module per
+//! shard shape — and writes `artifacts/manifest.json` describing them:
+//!
+//! ```json
+//! {
+//!   "version": 1,
+//!   "dtype": "f64",
+//!   "entries": [
+//!     {"kind": "grad", "m": 15, "d": 123, "file": "grad_m15_d123.hlo.txt"},
+//!     {"kind": "loss", "m": 15, "d": 123, "file": "loss_m15_d123.hlo.txt"}
+//!   ]
+//! }
+//! ```
+//!
+//! HLO *text* (not serialized proto) is the interchange format: jax ≥ 0.5
+//! emits protos with 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids (see /opt/xla-example/README).
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactEntry {
+    pub kind: String,
+    pub m: usize,
+    pub d: usize,
+    pub file: PathBuf,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dtype: String,
+    pub entries: Vec<ArtifactEntry>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        Manifest::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let j = Json::parse(text).context("parsing manifest.json")?;
+        let version = j.get("version").as_usize().context("manifest version")?;
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let dtype = j
+            .get("dtype")
+            .as_str()
+            .context("manifest dtype")?
+            .to_string();
+        if dtype != "f64" {
+            bail!("runtime expects f64 artifacts, manifest says {dtype}");
+        }
+        let mut entries = Vec::new();
+        for e in j.get("entries").as_arr().context("manifest entries")? {
+            entries.push(ArtifactEntry {
+                kind: e.get("kind").as_str().context("entry kind")?.to_string(),
+                m: e.get("m").as_usize().context("entry m")?,
+                d: e.get("d").as_usize().context("entry d")?,
+                file: dir.join(e.get("file").as_str().context("entry file")?),
+            });
+        }
+        Ok(Manifest {
+            dtype,
+            entries,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    /// Find the artifact for a given kind and shard shape.
+    pub fn find(&self, kind: &str, m: usize, d: usize) -> Result<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.kind == kind && e.m == m && e.d == d)
+            .with_context(|| {
+                format!(
+                    "no '{kind}' artifact for shape m={m} d={d} in {} — \
+                     re-run `make artifacts` (shapes come from python/compile/shapes.json)",
+                    self.dir.display()
+                )
+            })
+    }
+
+    pub fn shapes(&self) -> Vec<(usize, usize)> {
+        let mut v: Vec<(usize, usize)> = self.entries.iter().map(|e| (e.m, e.d)).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+}
+
+/// Default artifacts directory: `$SMX_ARTIFACTS` or `artifacts/` relative
+/// to the repo root / current dir.
+pub fn default_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("SMX_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    // prefer CARGO_MANIFEST_DIR (tests/examples) then cwd
+    if let Ok(root) = std::env::var("CARGO_MANIFEST_DIR") {
+        let p = Path::new(&root).join("artifacts");
+        if p.is_dir() {
+            return p;
+        }
+    }
+    PathBuf::from("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "dtype": "f64",
+      "entries": [
+        {"kind": "grad", "m": 15, "d": 123, "file": "grad_m15_d123.hlo.txt"},
+        {"kind": "loss", "m": 15, "d": 123, "file": "loss_m15_d123.hlo.txt"},
+        {"kind": "grad", "m": 30, "d": 20, "file": "grad_m30_d20.hlo.txt"}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_and_finds() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.entries.len(), 3);
+        let e = m.find("grad", 15, 123).unwrap();
+        assert_eq!(e.file, Path::new("/tmp/a/grad_m15_d123.hlo.txt"));
+        assert!(m.find("grad", 99, 1).is_err());
+        assert_eq!(m.shapes(), vec![(15, 123), (30, 20)]);
+    }
+
+    #[test]
+    fn rejects_bad_version_and_dtype() {
+        assert!(Manifest::parse(r#"{"version": 2, "dtype": "f64", "entries": []}"#, Path::new(".")).is_err());
+        assert!(Manifest::parse(r#"{"version": 1, "dtype": "f32", "entries": []}"#, Path::new(".")).is_err());
+        assert!(Manifest::parse("not json", Path::new(".")).is_err());
+    }
+}

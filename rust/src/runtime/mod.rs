@@ -1,0 +1,55 @@
+//! Runtime engines: how a worker evaluates its local gradient ∇f_i(x).
+//!
+//! * [`native::NativeEngine`] — pure-Rust CSR evaluation (reference and
+//!   default for large sweep experiments);
+//! * [`pjrt::PjrtEngine`] — executes the AOT-compiled JAX/Pallas artifact
+//!   (`artifacts/*.hlo.txt`, produced by `make artifacts`) through the
+//!   PJRT CPU client (`xla` crate). This is the paper's three-layer hot
+//!   path: Python never runs at request time.
+//!
+//! Engines are cross-validated against each other in `tests/parity.rs`.
+
+pub mod artifact;
+pub mod native;
+pub mod pjrt;
+
+/// A worker's gradient oracle.
+///
+/// Deliberately *not* `Send`: the PJRT client wraps an `Rc`, so the
+/// threaded coordinator constructs each worker's engine inside its own
+/// thread (see [`crate::coordinator::EngineFactory`]).
+pub trait GradEngine {
+    /// out = ∇f_i(x)
+    fn grad_into(&mut self, x: &[f64], out: &mut [f64]);
+
+    /// f_i(x) (used by metrics / loss curves, not on the optimizer path)
+    fn loss(&mut self, x: &[f64]) -> f64;
+
+    fn dim(&self) -> usize;
+
+    fn name(&self) -> &'static str;
+}
+
+/// Engine selection for experiment configs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    Native,
+    Pjrt,
+}
+
+impl EngineKind {
+    pub fn parse(s: &str) -> Option<EngineKind> {
+        match s {
+            "native" => Some(EngineKind::Native),
+            "pjrt" => Some(EngineKind::Pjrt),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            EngineKind::Native => "native",
+            EngineKind::Pjrt => "pjrt",
+        }
+    }
+}

@@ -1,0 +1,60 @@
+//! Native (pure-Rust) gradient engine: wraps [`LogReg`] as a
+//! [`GradEngine`]. This is the reference oracle for PJRT parity tests and
+//! the default engine for the large figure sweeps, where millions of
+//! rounds make per-call PJRT literal marshalling the dominant cost.
+
+use crate::data::Shard;
+use crate::objective::logreg::LogReg;
+use crate::runtime::GradEngine;
+
+pub struct NativeEngine {
+    pub obj: LogReg,
+}
+
+impl NativeEngine {
+    pub fn new(obj: LogReg) -> NativeEngine {
+        NativeEngine { obj }
+    }
+
+    pub fn from_shard(s: &Shard, mu: f64) -> NativeEngine {
+        NativeEngine::new(LogReg::from_shard(s, mu))
+    }
+}
+
+impl GradEngine for NativeEngine {
+    fn grad_into(&mut self, x: &[f64], out: &mut [f64]) {
+        self.obj.grad_into(x, out);
+    }
+
+    fn loss(&mut self, x: &[f64]) -> f64 {
+        self.obj.loss(x)
+    }
+
+    fn dim(&self) -> usize {
+        self.obj.dim()
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    #[test]
+    fn engine_delegates() {
+        let ds = synth::generate(&synth::tiny_spec(), 1);
+        let (_, shards) = ds.prepare(3, 1);
+        let mut e = NativeEngine::from_shard(&shards[0], 1e-3);
+        let x = vec![0.1; e.dim()];
+        let mut g = vec![0.0; e.dim()];
+        e.grad_into(&x, &mut g);
+        let direct = LogReg::from_shard(&shards[0], 1e-3).grad(&x);
+        assert_eq!(g, direct);
+        assert_eq!(e.name(), "native");
+        assert!(e.loss(&x).is_finite());
+    }
+}

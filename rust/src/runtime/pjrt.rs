@@ -1,0 +1,158 @@
+//! PJRT gradient engine — the three-layer hot path.
+//!
+//! Loads the HLO-text artifact produced by `python/compile/aot.py`
+//! (L2 JAX model calling the L1 Pallas kernel, lowered once at build
+//! time), compiles it on the PJRT CPU client, and executes it per round.
+//!
+//! Artifact signatures (all f64, row-major):
+//!   grad:  (x[d], a[m,d], b[m], mu[])  -> (grad[d],)
+//!   loss:  (x[d], a[m,d], b[m], mu[])  -> (loss[],)
+//!
+//! The shard data `a`, `b` are uploaded to device buffers **once** at
+//! engine construction (`execute_b` path); per round only `x` is
+//! transferred. This buffer-residency optimization is part of the §Perf
+//! pass (see EXPERIMENTS.md).
+//!
+//! Note: `xla::PjRtClient` wraps an `Rc`, so engines are not `Send`; the
+//! threaded coordinator constructs each worker's engine inside its own
+//! thread via an engine factory.
+
+use crate::data::Shard;
+use crate::runtime::artifact::Manifest;
+use crate::runtime::GradEngine;
+use anyhow::{Context, Result};
+use xla::{Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+
+pub struct PjrtEngine {
+    client: PjRtClient,
+    exe_grad: PjRtLoadedExecutable,
+    exe_loss: PjRtLoadedExecutable,
+    /// device-resident shard data (a, b, mu) reused across rounds
+    a_buf: PjRtBuffer,
+    b_buf: PjRtBuffer,
+    mu_buf: PjRtBuffer,
+    /// host backing for the device buffers — the CPU PJRT client's
+    /// host-to-device path is zero-copy, so these literals MUST outlive
+    /// the buffers (dropping them is a use-after-free that manifests as
+    /// shape-check aborts deep inside XLA)
+    _host_literals: Vec<Literal>,
+    /// reusable host staging for x (same lifetime rule)
+    x_host: Vec<f64>,
+    dim: usize,
+    m: usize,
+}
+
+impl PjrtEngine {
+    /// Build an engine for one shard, loading the matching artifacts.
+    /// `client` is created internally (one per engine; cheap for CPU).
+    pub fn from_shard(manifest: &Manifest, shard: &Shard, mu: f64) -> Result<PjrtEngine> {
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Self::with_client(client, manifest, shard, mu)
+    }
+
+    pub fn with_client(
+        client: PjRtClient,
+        manifest: &Manifest,
+        shard: &Shard,
+        mu: f64,
+    ) -> Result<PjrtEngine> {
+        let (m, d) = (shard.num_points(), shard.dim());
+        let exe_grad = compile_artifact(&client, manifest, "grad", m, d)?;
+        let exe_loss = compile_artifact(&client, manifest, "loss", m, d)?;
+
+        let a_dense = shard.a.to_dense_buffer();
+        let a_lit = Literal::vec1(a_dense.as_slice())
+            .reshape(&[m as i64, d as i64])
+            .context("reshaping shard data literal")?;
+        let b_lit = Literal::vec1(shard.b.as_slice());
+        let mu_lit = Literal::scalar(mu);
+        let device = client.devices().into_iter().next().context("no device")?;
+        let a_buf = client
+            .buffer_from_host_literal(Some(&device), &a_lit)
+            .context("uploading shard matrix")?;
+        let b_buf = client
+            .buffer_from_host_literal(Some(&device), &b_lit)
+            .context("uploading labels")?;
+        let mu_buf = client
+            .buffer_from_host_literal(Some(&device), &mu_lit)
+            .context("uploading mu")?;
+
+        Ok(PjrtEngine {
+            client,
+            exe_grad,
+            exe_loss,
+            a_buf,
+            b_buf,
+            mu_buf,
+            _host_literals: vec![a_lit, b_lit, mu_lit],
+            x_host: vec![0.0; d],
+            dim: d,
+            m,
+        })
+    }
+
+    pub fn num_points(&self) -> usize {
+        self.m
+    }
+
+    fn run1(&mut self, grad: bool, x: &[f64]) -> Result<Literal> {
+        // stage x into engine-owned memory (zero-copy transfer: the host
+        // slice must stay valid until execution completes)
+        self.x_host.copy_from_slice(x);
+        let device = self.client.devices().into_iter().next().context("no device")?;
+        let x_buf = self
+            .client
+            .buffer_from_host_buffer(self.x_host.as_slice(), &[self.dim], Some(&device))
+            .context("uploading x")?;
+        let exe = if grad { &self.exe_grad } else { &self.exe_loss };
+        let outs = exe
+            .execute_b(&[&x_buf, &self.a_buf, &self.b_buf, &self.mu_buf])
+            .context("executing artifact")?;
+        let lit = outs[0][0].to_literal_sync().context("fetching result")?;
+        lit.to_tuple1().context("unwrapping 1-tuple result")
+    }
+}
+
+fn compile_artifact(
+    client: &PjRtClient,
+    manifest: &Manifest,
+    kind: &str,
+    m: usize,
+    d: usize,
+) -> Result<PjRtLoadedExecutable> {
+    let entry = manifest.find(kind, m, d)?;
+    let proto = xla::HloModuleProto::from_text_file(
+        entry
+            .file
+            .to_str()
+            .context("artifact path not valid UTF-8")?,
+    )
+    .with_context(|| format!("parsing HLO text {}", entry.file.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .with_context(|| format!("compiling {}", entry.file.display()))
+}
+
+impl GradEngine for PjrtEngine {
+    fn grad_into(&mut self, x: &[f64], out: &mut [f64]) {
+        let lit = self.run1(true, x).expect("pjrt grad execution failed");
+        lit.copy_raw_to(out).expect("copying grad result");
+    }
+
+    fn loss(&mut self, x: &[f64]) -> f64 {
+        let lit = self.run1(false, x).expect("pjrt loss execution failed");
+        lit.to_vec::<f64>().expect("reading loss result")[0]
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+// PJRT engine integration tests live in `tests/parity.rs` (they need the
+// artifacts built by `make artifacts`).

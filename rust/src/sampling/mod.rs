@@ -1,0 +1,217 @@
+//! Samplings (paper §3.1, §5): proper random subsets S ⊆ [d] driving the
+//! diagonal sketches C (eq. 6).
+//!
+//! All paper experiments use *independent* samplings (`p_{jl} = p_j p_l`),
+//! for which `𝓛̃_i = max_j (1/p_{i;j} − 1) L_{i;jj}` (eq. 15) and the
+//! optimal probabilities have the water-filling form solved here:
+//!
+//! * eq. (16) — DCGD+:   `p_j = L_j/(L_j + ρ)`,
+//! * eq. (19) — DIANA+:  `p_j = L'_j/(L'_j + ρ')`, `L'_j = L_j/(μn) + 1`,
+//! * eq. (21) — ADIANA+: `p_j = √(L'_j/(L'_j + ρ''))`,
+//!
+//! with ρ ≥ 0 the unique root of `Σ_j p_j(ρ) = τ` (strictly monotone; no
+//! closed form — we bisect, as the paper prescribes "one dimensional
+//! solvers").
+
+pub mod solvers;
+
+use crate::util::rng::Rng;
+
+/// An independent Bernoulli sampling: coordinate j enters S with
+/// probability `p[j]`, independently.
+#[derive(Clone, Debug)]
+pub struct IndependentSampling {
+    pub p: Vec<f64>,
+}
+
+impl IndependentSampling {
+    pub fn new(p: Vec<f64>) -> IndependentSampling {
+        assert!(
+            p.iter().all(|&x| x > 0.0 && x <= 1.0),
+            "sampling must be proper: p ∈ (0,1]"
+        );
+        IndependentSampling { p }
+    }
+
+    /// Uniform sampling with expected size τ: p_j = τ/d (clamped to 1).
+    pub fn uniform(d: usize, tau: f64) -> IndependentSampling {
+        assert!(tau > 0.0);
+        let p = (tau / d as f64).min(1.0);
+        IndependentSampling::new(vec![p; d])
+    }
+
+    pub fn dim(&self) -> usize {
+        self.p.len()
+    }
+
+    /// E|S| = Σ p_j
+    pub fn expected_size(&self) -> f64 {
+        self.p.iter().sum()
+    }
+
+    /// ω = max_j 1/p_j − 1 — the compression variance of the sketch.
+    pub fn omega(&self) -> f64 {
+        crate::objective::smoothness::omega(&self.p)
+    }
+
+    /// 𝓛̃ for this sampling against a smoothness diagonal (eq. 15).
+    pub fn tilde_l(&self, diag: &[f64]) -> f64 {
+        crate::objective::smoothness::tilde_l_independent(&self.p, diag)
+    }
+
+    /// Draw S: sorted coordinate indices.
+    pub fn sample(&self, rng: &mut Rng) -> Vec<u32> {
+        let mut s = Vec::new();
+        self.sample_into(rng, &mut s);
+        s
+    }
+
+    /// Draw S into a reusable buffer (hot path).
+    pub fn sample_into(&self, rng: &mut Rng, out: &mut Vec<u32>) {
+        out.clear();
+        for (j, &pj) in self.p.iter().enumerate() {
+            if pj >= 1.0 || rng.bernoulli(pj) {
+                out.push(j as u32);
+            }
+        }
+    }
+}
+
+/// Which probability rule a method uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SamplingKind {
+    /// p_j = τ/d
+    Uniform,
+    /// eq. (16) — minimizes 𝓛̃ (DCGD+; Proposition 5)
+    ImportanceDcgd,
+    /// eq. (19) — minimizes ω + 𝓛̃/(μn) (DIANA+; Proposition 6)
+    ImportanceDiana,
+    /// eq. (21) — ADIANA+ (Remark 5)
+    ImportanceAdiana,
+}
+
+impl SamplingKind {
+    pub fn parse(s: &str) -> Option<SamplingKind> {
+        match s {
+            "uniform" => Some(SamplingKind::Uniform),
+            "importance-dcgd" => Some(SamplingKind::ImportanceDcgd),
+            "importance" | "importance-diana" => Some(SamplingKind::ImportanceDiana),
+            "importance-adiana" => Some(SamplingKind::ImportanceAdiana),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SamplingKind::Uniform => "uniform",
+            SamplingKind::ImportanceDcgd => "importance-dcgd",
+            SamplingKind::ImportanceDiana => "importance-diana",
+            SamplingKind::ImportanceAdiana => "importance-adiana",
+        }
+    }
+
+    /// Build the sampling for one worker from its smoothness diagonal.
+    pub fn build(self, diag: &[f64], tau: f64, mu: f64, n: usize) -> IndependentSampling {
+        let d = diag.len();
+        match self {
+            SamplingKind::Uniform => IndependentSampling::uniform(d, tau),
+            SamplingKind::ImportanceDcgd => {
+                IndependentSampling::new(solvers::probs_dcgd_plus(diag, tau))
+            }
+            SamplingKind::ImportanceDiana => {
+                IndependentSampling::new(solvers::probs_diana_plus(diag, tau, mu, n))
+            }
+            SamplingKind::ImportanceAdiana => {
+                IndependentSampling::new(solvers::probs_adiana_plus(diag, tau, mu, n))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_probs() {
+        let s = IndependentSampling::uniform(10, 2.0);
+        assert!((s.expected_size() - 2.0).abs() < 1e-12);
+        assert!((s.omega() - 4.0).abs() < 1e-12); // 1/(0.2) − 1
+    }
+
+    #[test]
+    fn uniform_tau_ge_d_clamps() {
+        let s = IndependentSampling::uniform(5, 10.0);
+        assert!(s.p.iter().all(|&p| p == 1.0));
+        assert_eq!(s.omega(), 0.0);
+    }
+
+    #[test]
+    fn sample_expected_size() {
+        let s = IndependentSampling::uniform(100, 20.0);
+        let mut rng = Rng::new(1);
+        let trials = 2000;
+        let total: usize = (0..trials).map(|_| s.sample(&mut rng).len()).sum();
+        let avg = total as f64 / trials as f64;
+        assert!((avg - 20.0).abs() < 0.5, "avg={avg}");
+    }
+
+    #[test]
+    fn sample_sorted_and_in_range() {
+        let s = IndependentSampling::uniform(50, 10.0);
+        let mut rng = Rng::new(2);
+        for _ in 0..20 {
+            let v = s.sample(&mut rng);
+            for w in v.windows(2) {
+                assert!(w[0] < w[1]);
+            }
+            assert!(v.iter().all(|&j| (j as usize) < 50));
+        }
+    }
+
+    #[test]
+    fn per_coordinate_rates() {
+        let s = IndependentSampling::new(vec![0.9, 0.1, 0.5]);
+        let mut rng = Rng::new(3);
+        let mut counts = [0usize; 3];
+        let trials = 20_000;
+        for _ in 0..trials {
+            for j in s.sample(&mut rng) {
+                counts[j as usize] += 1;
+            }
+        }
+        for (j, &pj) in s.p.iter().enumerate() {
+            let emp = counts[j] as f64 / trials as f64;
+            assert!((emp - pj).abs() < 0.02, "coord {j}: {emp} vs {pj}");
+        }
+    }
+
+    #[test]
+    fn kind_parsing() {
+        assert_eq!(SamplingKind::parse("uniform"), Some(SamplingKind::Uniform));
+        assert_eq!(
+            SamplingKind::parse("importance"),
+            Some(SamplingKind::ImportanceDiana)
+        );
+        assert_eq!(SamplingKind::parse("bogus"), None);
+    }
+
+    #[test]
+    #[should_panic]
+    fn improper_sampling_rejected() {
+        IndependentSampling::new(vec![0.5, 0.0]);
+    }
+
+    #[test]
+    fn sample_into_matches_sample() {
+        let s = IndependentSampling::uniform(30, 5.0);
+        let mut r1 = Rng::new(7);
+        let mut r2 = Rng::new(7);
+        let mut buf = Vec::new();
+        for _ in 0..10 {
+            let a = s.sample(&mut r1);
+            s.sample_into(&mut r2, &mut buf);
+            assert_eq!(a, buf);
+        }
+    }
+}

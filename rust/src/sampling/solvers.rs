@@ -1,0 +1,257 @@
+//! Water-filling probability solvers for importance sampling
+//! (paper eqs. (16), (19), (21) and Appendix E).
+//!
+//! Each rule has the form `p_j = g(L_j, ρ)` with `Σ_j p_j(ρ) = τ` and
+//! `p_j` strictly decreasing in ρ, so ρ is found by bisection on a
+//! bracketing interval derived from the paper's own bounds
+//! (eq. 53: ρ ≤ Σ_j L_j / τ; eq. 64 for the ADIANA+ variant).
+
+/// Generic bisection for a strictly decreasing `f` with `f(0) ≥ 0` and a
+/// bracketing `hi` with `f(hi) ≤ 0`. Returns ρ with |f(ρ)| ≤ tol.
+fn bisect(mut f: impl FnMut(f64) -> f64, mut hi: f64, tol: f64) -> f64 {
+    let mut lo = 0.0_f64;
+    let f0 = f(0.0);
+    if f0 <= 0.0 {
+        // already at or below target with ρ = 0 ⇒ all p at their max
+        return 0.0;
+    }
+    // ensure bracketing (hi may be slightly under due to rounding)
+    let mut fh = f(hi);
+    let mut guard = 0;
+    while fh > 0.0 {
+        hi *= 2.0;
+        fh = f(hi);
+        guard += 1;
+        assert!(guard < 200, "failed to bracket water-filling root");
+    }
+    for _ in 0..200 {
+        let mid = 0.5 * (lo + hi);
+        let fm = f(mid);
+        if fm.abs() <= tol {
+            return mid;
+        }
+        if fm > 0.0 {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+        if (hi - lo) <= 1e-15 * hi.max(1.0) {
+            break;
+        }
+    }
+    0.5 * (lo + hi)
+}
+
+/// eq. (16): `p_j = L_j/(L_j + ρ)` with `Σ p_j = τ`.
+/// `diag` are the diagonal entries `L_{i;jj}` (all > 0 thanks to the μ
+/// ridge). If τ ≥ d, all probabilities are 1.
+pub fn probs_dcgd_plus(diag: &[f64], tau: f64) -> Vec<f64> {
+    water_fill(diag, tau, |l, rho| l / (l + rho))
+}
+
+/// eq. (19): `p_j = L'_j/(L'_j + ρ)` with `L'_j = L_j/(μn) + 1`.
+pub fn probs_diana_plus(diag: &[f64], tau: f64, mu: f64, n: usize) -> Vec<f64> {
+    let lp: Vec<f64> = diag.iter().map(|&l| l / (mu * n as f64) + 1.0).collect();
+    water_fill(&lp, tau, |l, rho| l / (l + rho))
+}
+
+/// eq. (21): `p_j = √(L'_j/(L'_j + ρ))` with `L'_j = L_j/(μn) + 1`.
+pub fn probs_adiana_plus(diag: &[f64], tau: f64, mu: f64, n: usize) -> Vec<f64> {
+    let lp: Vec<f64> = diag.iter().map(|&l| l / (mu * n as f64) + 1.0).collect();
+    water_fill(&lp, tau, |l, rho| (l / (l + rho)).sqrt())
+}
+
+/// Shared water-filling: find ρ ≥ 0 with Σ_j shape(L_j, ρ) = τ, return the
+/// per-coordinate probabilities. `shape(·, 0) = 1` and `shape` is strictly
+/// decreasing in ρ for L > 0.
+fn water_fill(vals: &[f64], tau: f64, shape: impl Fn(f64, f64) -> f64 + Copy) -> Vec<f64> {
+    let d = vals.len();
+    assert!(d > 0);
+    assert!(tau > 0.0, "expected batch size must be positive");
+    assert!(
+        vals.iter().all(|&l| l > 0.0),
+        "water-filling requires strictly positive diagonal (μ ridge guarantees this)"
+    );
+    if tau >= d as f64 {
+        return vec![1.0; d];
+    }
+    // Bracket: for the rational shapes used here, Σ shape(L_j, ρ) ≤ Σ L_j/ρ
+    // (eq. 53) and ≤ Σ √(L_j/ρ) (eq. 64) respectively, so
+    // hi = max(Σ L_j/τ, (Σ √L_j / τ)²) brackets both; bisect() doubles if not.
+    let sum: f64 = vals.iter().sum();
+    let sum_sqrt: f64 = vals.iter().map(|l| l.sqrt()).sum();
+    let hi = (sum / tau).max((sum_sqrt / tau) * (sum_sqrt / tau)) + 1.0;
+    let rho = bisect(
+        |rho| vals.iter().map(|&l| shape(l, rho)).sum::<f64>() - tau,
+        hi,
+        1e-12 * tau,
+    );
+    vals.iter()
+        .map(|&l| shape(l, rho).clamp(f64::MIN_POSITIVE, 1.0))
+        .collect()
+}
+
+/// ρ for eq. (16) — exposed for tests/diagnostics (`𝓛̃_i = ρ_i` at the
+/// optimum, eq. 54).
+pub fn rho_dcgd_plus(diag: &[f64], tau: f64) -> f64 {
+    let p = probs_dcgd_plus(diag, tau);
+    // (1/p_j − 1) L_j is constant = ρ across non-saturated coordinates
+    p.iter()
+        .zip(diag)
+        .filter(|(p, _)| **p < 1.0)
+        .map(|(&pj, &lj)| (1.0 / pj - 1.0) * lj)
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_diag(d: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        (0..d)
+            .map(|_| 1e-3 + rng.uniform() * rng.uniform() * 2.0)
+            .collect()
+    }
+
+    #[test]
+    fn dcgd_probs_sum_to_tau() {
+        for seed in [1, 2, 3] {
+            let diag = rand_diag(40, seed);
+            for tau in [1.0, 4.0, 20.0] {
+                let p = probs_dcgd_plus(&diag, tau);
+                let sum: f64 = p.iter().sum();
+                assert!((sum - tau).abs() < 1e-8, "sum={sum} tau={tau}");
+                assert!(p.iter().all(|&x| x > 0.0 && x <= 1.0));
+            }
+        }
+    }
+
+    #[test]
+    fn dcgd_equalizes_tilde_terms() {
+        // at the optimum (1/p_j − 1) L_j = ρ for all j (eq. 16)
+        let diag = rand_diag(25, 4);
+        let p = probs_dcgd_plus(&diag, 5.0);
+        let terms: Vec<f64> = p
+            .iter()
+            .zip(&diag)
+            .map(|(&pj, &lj)| (1.0 / pj - 1.0) * lj)
+            .collect();
+        let max = terms.iter().cloned().fold(0.0, f64::max);
+        let min = terms.iter().cloned().fold(f64::MAX, f64::min);
+        assert!((max - min) < 1e-8 * max.max(1e-30), "max={max} min={min}");
+    }
+
+    #[test]
+    fn dcgd_importance_beats_uniform_tilde_l() {
+        // Proposition 5: the optimal probabilities minimize 𝓛̃.
+        use crate::objective::smoothness::tilde_l_independent;
+        let diag = rand_diag(30, 5);
+        let tau = 3.0;
+        let p_imp = probs_dcgd_plus(&diag, tau);
+        let p_uni = vec![tau / 30.0; 30];
+        let t_imp = tilde_l_independent(&p_imp, &diag);
+        let t_uni = tilde_l_independent(&p_uni, &diag);
+        assert!(t_imp <= t_uni + 1e-12, "imp={t_imp} uni={t_uni}");
+    }
+
+    #[test]
+    fn dcgd_rho_bound_eq53() {
+        let diag = rand_diag(20, 6);
+        let tau = 4.0;
+        let rho = rho_dcgd_plus(&diag, tau);
+        let bound: f64 = diag.iter().sum::<f64>() / tau;
+        assert!(rho <= bound + 1e-9, "rho={rho} bound={bound}");
+    }
+
+    #[test]
+    fn diana_probs_sum_to_tau_and_exceed_dcgd_floor() {
+        let diag = rand_diag(40, 7);
+        let (mu, n) = (1e-3, 10);
+        let p = probs_diana_plus(&diag, 2.0, mu, n);
+        let sum: f64 = p.iter().sum();
+        assert!((sum - 2.0).abs() < 1e-8);
+        // L' ≥ 1 uniformly ⇒ no probability can be arbitrarily small
+        // relative to the largest (ratio bounded by L'_max/L'_min · 1)
+        assert!(p.iter().all(|&x| x > 0.0 && x <= 1.0));
+    }
+
+    #[test]
+    fn diana_equalizes_modified_terms() {
+        // (1/p_j − 1) L'_j constant (eq. 18/19)
+        let diag = rand_diag(15, 8);
+        let (mu, n) = (1e-3, 5);
+        let p = probs_diana_plus(&diag, 3.0, mu, n);
+        let lp: Vec<f64> = diag.iter().map(|&l| l / (mu * n as f64) + 1.0).collect();
+        let terms: Vec<f64> = p
+            .iter()
+            .zip(&lp)
+            .map(|(&pj, &lj)| (1.0 / pj - 1.0) * lj)
+            .collect();
+        let max = terms.iter().cloned().fold(0.0, f64::max);
+        let min = terms.iter().cloned().fold(f64::MAX, f64::min);
+        assert!((max - min) < 1e-7 * max.max(1e-30));
+    }
+
+    #[test]
+    fn adiana_probs_sum_to_tau() {
+        let diag = rand_diag(35, 9);
+        let p = probs_adiana_plus(&diag, 4.0, 1e-3, 8);
+        let sum: f64 = p.iter().sum();
+        assert!((sum - 4.0).abs() < 1e-8);
+        assert!(p.iter().all(|&x| x > 0.0 && x <= 1.0));
+    }
+
+    #[test]
+    fn adiana_sqrt_shape() {
+        // p_j² (L'_j + ρ) = L'_j ⇒ (1/p_j² − 1)·L'_j = ρ constant
+        let diag = rand_diag(12, 10);
+        let (mu, n) = (1e-3, 4);
+        let p = probs_adiana_plus(&diag, 3.0, mu, n);
+        let lp: Vec<f64> = diag.iter().map(|&l| l / (mu * n as f64) + 1.0).collect();
+        let terms: Vec<f64> = p
+            .iter()
+            .zip(&lp)
+            .map(|(&pj, &lj)| (1.0 / (pj * pj) - 1.0) * lj)
+            .collect();
+        let max = terms.iter().cloned().fold(0.0, f64::max);
+        let min = terms.iter().cloned().fold(f64::MAX, f64::min);
+        assert!((max - min) < 1e-6 * max.max(1e-30));
+    }
+
+    #[test]
+    fn tau_ge_d_gives_all_ones() {
+        let diag = rand_diag(6, 11);
+        for p in [
+            probs_dcgd_plus(&diag, 6.0),
+            probs_diana_plus(&diag, 10.0, 1e-3, 3),
+            probs_adiana_plus(&diag, 7.0, 1e-3, 3),
+        ] {
+            assert!(p.iter().all(|&x| x == 1.0));
+        }
+    }
+
+    #[test]
+    fn higher_smoothness_gets_higher_probability() {
+        let diag = vec![0.001, 0.01, 0.1, 1.0];
+        let p = probs_dcgd_plus(&diag, 1.0);
+        for w in p.windows(2) {
+            assert!(w[0] <= w[1] + 1e-12);
+        }
+    }
+
+    #[test]
+    fn uniform_diag_gives_uniform_probs() {
+        let diag = vec![0.25; 10];
+        for p in [
+            probs_dcgd_plus(&diag, 2.0),
+            probs_diana_plus(&diag, 2.0, 1e-3, 4),
+            probs_adiana_plus(&diag, 2.0, 1e-3, 4),
+        ] {
+            for &x in &p {
+                assert!((x - 0.2).abs() < 1e-9, "p={x}");
+            }
+        }
+    }
+}

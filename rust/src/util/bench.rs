@@ -1,0 +1,112 @@
+//! Minimal benchmarking harness (criterion is unavailable offline):
+//! warmup + timed iterations, reporting min/median/p95/mean. Used by the
+//! `benches/` targets (`cargo bench`, harness = false).
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub min_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+    pub mean_ns: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>10} iters  min {:>12}  med {:>12}  p95 {:>12}",
+            self.name,
+            self.iters,
+            fmt_ns(self.min_ns),
+            fmt_ns(self.median_ns),
+            fmt_ns(self.p95_ns),
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.2}s", ns / 1e9)
+    }
+}
+
+/// Time `f` with automatic iteration count targeting ~`budget_ms` total.
+pub fn bench(name: &str, budget_ms: u64, mut f: impl FnMut()) -> BenchResult {
+    // warmup + calibration
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().as_nanos().max(1) as f64;
+    let budget_ns = budget_ms as f64 * 1e6;
+    let iters = ((budget_ns / once) as usize).clamp(3, 10_000);
+
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let result = BenchResult {
+        name: name.to_string(),
+        iters,
+        min_ns: samples[0],
+        median_ns: samples[samples.len() / 2],
+        p95_ns: samples[(samples.len() * 95 / 100).min(samples.len() - 1)],
+        mean_ns: samples.iter().sum::<f64>() / samples.len() as f64,
+    };
+    println!("{}", result.report());
+    result
+}
+
+/// Time a single long-running closure (end-to-end benches) and report.
+pub fn bench_once<T>(name: &str, f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    let secs = t0.elapsed().as_secs_f64();
+    println!("{name:<44} {secs:>10.3}s");
+    (out, secs)
+}
+
+/// Prevent the optimizer from discarding a value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_ordered_stats() {
+        let mut acc = 0u64;
+        let r = bench("noop-ish", 5, || {
+            acc = acc.wrapping_add(black_box(1));
+        });
+        assert!(r.min_ns <= r.median_ns && r.median_ns <= r.p95_ns);
+        assert!(r.iters >= 3);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(500.0).ends_with("ns"));
+        assert!(fmt_ns(5e4).ends_with("us"));
+        assert!(fmt_ns(5e7).ends_with("ms"));
+        assert!(fmt_ns(5e9).ends_with('s'));
+    }
+
+    #[test]
+    fn bench_once_returns_value() {
+        let (v, secs) = bench_once("compute", || 41 + 1);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+}

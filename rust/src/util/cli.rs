@@ -1,0 +1,186 @@
+//! Tiny command-line argument parser (no `clap` offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args and
+//! subcommands. Collects unknown flags so callers can error with a usage
+//! string.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, Vec<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw argv strings (excluding argv[0]).
+    /// If `with_subcommand` is true, the first non-flag token becomes the
+    /// subcommand.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I, with_subcommand: bool) -> Args {
+        let mut out = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some(eq) = stripped.find('=') {
+                    let (k, v) = stripped.split_at(eq);
+                    out.flags
+                        .entry(k.to_string())
+                        .or_default()
+                        .push(v[1..].to_string());
+                } else {
+                    // "--key value" if the next token is not a flag; else boolean.
+                    let is_val = iter
+                        .peek()
+                        .map(|n| !n.starts_with("--"))
+                        .unwrap_or(false);
+                    if is_val {
+                        let v = iter.next().unwrap();
+                        out.flags.entry(stripped.to_string()).or_default().push(v);
+                    } else {
+                        out.flags
+                            .entry(stripped.to_string())
+                            .or_default()
+                            .push("true".to_string());
+                    }
+                }
+            } else if with_subcommand && out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    pub fn from_env(with_subcommand: bool) -> Args {
+        Args::parse(std::env::args().skip(1), with_subcommand)
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    pub fn get_all(&self, key: &str) -> Vec<&str> {
+        self.flags
+            .get(key)
+            .map(|v| v.iter().map(|s| s.as_str()).collect())
+            .unwrap_or_default()
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|s| {
+                s.parse::<usize>()
+                    .unwrap_or_else(|_| panic!("--{key} expects an integer, got '{s}'"))
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .map(|s| {
+                s.parse::<u64>()
+                    .unwrap_or_else(|_| panic!("--{key} expects an integer, got '{s}'"))
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|s| {
+                s.parse::<f64>()
+                    .unwrap_or_else(|_| panic!("--{key} expects a number, got '{s}'"))
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        match self.get(key) {
+            None => default,
+            Some("true") | Some("1") | Some("yes") => true,
+            Some("false") | Some("0") | Some("no") => false,
+            Some(s) => panic!("--{key} expects a boolean, got '{s}'"),
+        }
+    }
+
+    /// Comma-separated list.
+    pub fn list_or(&self, key: &str, default: &[&str]) -> Vec<String> {
+        match self.get(key) {
+            Some(v) => v.split(',').map(|s| s.trim().to_string()).collect(),
+            None => default.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|t| t.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_and_flags() {
+        let a = Args::parse(argv("train --dataset a1a --iters 100 --verbose"), true);
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.get("dataset"), Some("a1a"));
+        assert_eq!(a.usize_or("iters", 0), 100);
+        assert!(a.bool_or("verbose", false));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = Args::parse(argv("--tau=4 --mu=1e-3"), false);
+        assert_eq!(a.usize_or("tau", 0), 4);
+        assert_eq!(a.f64_or("mu", 0.0), 1e-3);
+    }
+
+    #[test]
+    fn boolean_flag_before_flag() {
+        let a = Args::parse(argv("--flag --other 3"), false);
+        assert!(a.bool_or("flag", false));
+        assert_eq!(a.usize_or("other", 0), 3);
+    }
+
+    #[test]
+    fn positional_args() {
+        let a = Args::parse(argv("run file1 file2 --x 1"), true);
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.positional, vec!["file1", "file2"]);
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = Args::parse(argv("--datasets a1a,mushrooms , madelon"), false);
+        // note: value is a single token "a1a,mushrooms" here
+        assert_eq!(a.list_or("datasets", &[]), vec!["a1a", "mushrooms"]);
+        let b = Args::parse(vec!["--datasets".into(), "a1a, duke".into()], false);
+        assert_eq!(b.list_or("datasets", &[]), vec!["a1a", "duke"]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(argv(""), false);
+        assert_eq!(a.str_or("name", "x"), "x");
+        assert_eq!(a.usize_or("n", 5), 5);
+        assert_eq!(a.f64_or("f", 2.5), 2.5);
+        assert!(!a.bool_or("b", false));
+    }
+
+    #[test]
+    fn repeated_flags_last_wins_get() {
+        let a = Args::parse(argv("--k 1 --k 2"), false);
+        assert_eq!(a.get("k"), Some("2"));
+        assert_eq!(a.get_all("k"), vec!["1", "2"]);
+    }
+}

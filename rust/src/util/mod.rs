@@ -1,0 +1,43 @@
+//! Self-contained substrates: RNG, JSON, CLI parsing, logging, timing and
+//! a mini property-test harness (the image is offline, so `rand`, `serde`,
+//! `clap`, `proptest` and friends are unavailable; see DESIGN.md §6).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod log;
+pub mod prop;
+pub mod rng;
+pub mod timer;
+
+/// Write a CSV file from a header and rows of f64-renderable cells.
+pub fn write_csv(path: &std::path::Path, header: &[&str], rows: &[Vec<String>]) -> std::io::Result<()> {
+    use std::io::Write;
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "{}", header.join(","))?;
+    for row in rows {
+        writeln!(f, "{}", row.join(","))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn csv_writes_and_reads_back() {
+        let dir = std::env::temp_dir().join("smx_csv_test");
+        let path = dir.join("t.csv");
+        super::write_csv(
+            &path,
+            &["a", "b"],
+            &[vec!["1".into(), "2".into()], vec!["3".into(), "4".into()]],
+        )
+        .unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(body, "a,b\n1,2\n3,4\n");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

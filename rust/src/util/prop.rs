@@ -1,0 +1,117 @@
+//! Mini property-testing harness (no `proptest` offline).
+//!
+//! Runs a property over many seeded random cases and reports the first
+//! failing seed, so failures are reproducible by construction. Generators
+//! are plain closures over [`Rng`]; there is no shrinking — instead every
+//! case prints its seed on failure, which in practice is enough because
+//! all our generators are parameterized by small size bounds.
+
+use crate::util::rng::Rng;
+
+pub struct PropConfig {
+    pub cases: usize,
+    pub base_seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        Self {
+            cases: 64,
+            base_seed: 0x5EED,
+        }
+    }
+}
+
+/// Run `prop` for `cfg.cases` seeded cases. The property receives a fresh
+/// `Rng` per case and returns `Result<(), String>`; the first failure
+/// panics with the seed and message.
+pub fn forall(cfg: PropConfig, name: &str, mut prop: impl FnMut(&mut Rng) -> Result<(), String>) {
+    for case in 0..cfg.cases {
+        let seed = cfg.base_seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property '{name}' failed at case {case} (seed={seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Convenience wrapper with defaults.
+pub fn check(name: &str, prop: impl FnMut(&mut Rng) -> Result<(), String>) {
+    forall(PropConfig::default(), name, prop);
+}
+
+/// Assert helper producing a property-friendly Result.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err(format!($($arg)*));
+        }
+    };
+}
+
+/// Assert two f64s are within tolerance.
+#[macro_export]
+macro_rules! prop_assert_close {
+    ($a:expr, $b:expr, $tol:expr) => {{
+        let (a, b, tol) = ($a, $b, $tol);
+        if (a - b).abs() > tol * (1.0 + a.abs().max(b.abs())) {
+            return Err(format!(
+                "{} = {a} differs from {} = {b} by {} (> tol {tol})",
+                stringify!($a),
+                stringify!($b),
+                (a - b).abs()
+            ));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check("addition commutes", |rng| {
+            let a = rng.uniform();
+            let b = rng.uniform();
+            prop_assert!((a + b - (b + a)).abs() < 1e-15, "not commutative");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics_with_seed() {
+        check("always fails", |_rng| Err("nope".to_string()));
+    }
+
+    #[test]
+    fn cases_are_deterministic() {
+        let mut first_vals = Vec::new();
+        forall(
+            PropConfig {
+                cases: 5,
+                base_seed: 1,
+            },
+            "record",
+            |rng| {
+                first_vals.push(rng.next_u64());
+                Ok(())
+            },
+        );
+        let mut second_vals = Vec::new();
+        forall(
+            PropConfig {
+                cases: 5,
+                base_seed: 1,
+            },
+            "record2",
+            |rng| {
+                second_vals.push(rng.next_u64());
+                Ok(())
+            },
+        );
+        assert_eq!(first_vals, second_vals);
+    }
+}

@@ -1,0 +1,140 @@
+//! Timing helpers: scoped stopwatches and accumulating phase timers used
+//! by the coordinator metrics and the §Perf profiling pass.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// Simple stopwatch.
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Self {
+            start: Instant::now(),
+        }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn restart(&mut self) -> Duration {
+        let e = self.start.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Accumulates durations per named phase; used to break down where a
+/// coordinator round spends its time (grad / compress / network / server).
+#[derive(Debug, Default, Clone)]
+pub struct PhaseTimer {
+    acc: BTreeMap<&'static str, (Duration, u64)>,
+}
+
+impl PhaseTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, phase: &'static str, d: Duration) {
+        let e = self.acc.entry(phase).or_insert((Duration::ZERO, 0));
+        e.0 += d;
+        e.1 += 1;
+    }
+
+    /// Time a closure and attribute it to `phase`.
+    pub fn time<T>(&mut self, phase: &'static str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.add(phase, t0.elapsed());
+        out
+    }
+
+    pub fn total(&self, phase: &str) -> Duration {
+        self.acc
+            .get(phase)
+            .map(|(d, _)| *d)
+            .unwrap_or(Duration::ZERO)
+    }
+
+    pub fn count(&self, phase: &str) -> u64 {
+        self.acc.get(phase).map(|(_, c)| *c).unwrap_or(0)
+    }
+
+    pub fn merge(&mut self, other: &PhaseTimer) {
+        for (k, (d, c)) in &other.acc {
+            let e = self.acc.entry(k).or_insert((Duration::ZERO, 0));
+            e.0 += *d;
+            e.1 += *c;
+        }
+    }
+
+    pub fn report(&self) -> String {
+        let mut entries: Vec<_> = self.acc.iter().collect();
+        entries.sort_by(|a, b| b.1 .0.cmp(&a.1 .0));
+        let mut s = String::new();
+        for (k, (d, c)) in entries {
+            s.push_str(&format!(
+                "{:<18} total={:>10.3}ms calls={:>8} avg={:>8.3}us\n",
+                k,
+                d.as_secs_f64() * 1e3,
+                c,
+                d.as_secs_f64() * 1e6 / (*c).max(1) as f64,
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn stopwatch_measures() {
+        let sw = Stopwatch::start();
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(sw.elapsed_secs() >= 0.004);
+    }
+
+    #[test]
+    fn phase_timer_accumulates() {
+        let mut pt = PhaseTimer::new();
+        pt.add("a", Duration::from_millis(2));
+        pt.add("a", Duration::from_millis(3));
+        pt.add("b", Duration::from_millis(1));
+        assert_eq!(pt.count("a"), 2);
+        assert_eq!(pt.total("a"), Duration::from_millis(5));
+        assert_eq!(pt.count("missing"), 0);
+    }
+
+    #[test]
+    fn phase_timer_time_closure() {
+        let mut pt = PhaseTimer::new();
+        let x = pt.time("work", || 21 * 2);
+        assert_eq!(x, 42);
+        assert_eq!(pt.count("work"), 1);
+    }
+
+    #[test]
+    fn merge_combines() {
+        let mut a = PhaseTimer::new();
+        a.add("x", Duration::from_millis(1));
+        let mut b = PhaseTimer::new();
+        b.add("x", Duration::from_millis(2));
+        b.add("y", Duration::from_millis(3));
+        a.merge(&b);
+        assert_eq!(a.total("x"), Duration::from_millis(3));
+        assert_eq!(a.count("y"), 1);
+        assert!(a.report().contains("x"));
+    }
+}

@@ -1,0 +1,248 @@
+//! Property-based tests on coordinator/protocol invariants (mini-prop
+//! harness; see `util::prop`): routing/accounting/state invariants that
+//! must hold for every method, sampling, τ, and seed.
+
+use smx::compress::{MatrixAware, SparseMsg};
+use smx::config::ExperimentConfig;
+use smx::coordinator::{run_sim, RunConfig};
+use smx::data::synth;
+use smx::experiments::runner;
+use smx::linalg::psd::PsdRoot;
+use smx::methods::{build, MethodSpec, METHOD_NAMES};
+use smx::objective::Smoothness;
+use smx::prop_assert;
+use smx::sampling::{IndependentSampling, SamplingKind};
+use smx::util::prop::{check, forall, PropConfig};
+use smx::util::rng::Rng;
+
+fn random_spec(rng: &mut Rng, dim: usize) -> (String, SamplingKind, f64) {
+    let method = METHOD_NAMES[rng.below(METHOD_NAMES.len())].to_string();
+    let sampling = match rng.below(4) {
+        0 => SamplingKind::Uniform,
+        1 => SamplingKind::ImportanceDcgd,
+        2 => SamplingKind::ImportanceDiana,
+        _ => SamplingKind::ImportanceAdiana,
+    };
+    let tau = 1.0 + rng.below(dim.min(8)) as f64;
+    (method, sampling, tau)
+}
+
+#[test]
+fn prop_every_method_makes_progress_and_accounts_consistently() {
+    // shared setup (expensive) outside the property loop
+    let cfg = ExperimentConfig {
+        dataset: "tiny".into(),
+        workers: 4,
+        ..Default::default()
+    };
+    let prep = runner::prepare_with(&cfg, true).unwrap();
+    let dim = prep.sm.dim;
+
+    forall(
+        PropConfig {
+            cases: 24,
+            base_seed: 0xAB,
+        },
+        "method progress + accounting",
+        |rng| {
+            let (method_name, sampling, tau) = random_spec(rng, dim);
+            let spec = MethodSpec::new(&method_name, tau, sampling, cfg.mu, vec![0.0; dim]);
+            let mut method = build(&spec, &prep.sm).unwrap();
+            let mut engines = prep.native_engines(cfg.mu);
+            let rounds = 120;
+            let run_cfg = RunConfig {
+                max_rounds: rounds,
+                record_every: 1,
+                seed: rng.next_u64(),
+                ..Default::default()
+            };
+            let r = run_sim(&mut method, &mut engines, &prep.x_star, &run_cfg);
+
+            // residual decreased from 1.0
+            prop_assert!(
+                r.final_residual() < 1.0,
+                "{method_name} ({sampling:?}, tau={tau}) made no progress: {:.3e}",
+                r.final_residual()
+            );
+            // iterate is finite
+            prop_assert!(
+                r.final_x.iter().all(|v| v.is_finite()),
+                "{method_name} produced non-finite iterate"
+            );
+            // accounting monotone and consistent with τ
+            let mut prev = 0u64;
+            for rec in &r.records {
+                prop_assert!(rec.coords_up >= prev, "coords_up not monotone");
+                prev = rec.coords_up;
+            }
+            let last = r.records.last().unwrap();
+            let per_round_worker =
+                last.coords_up as f64 / (rounds as f64 * prep.sm.n() as f64);
+            let factor = if method_name.starts_with("adiana") { 2.0 } else { 1.0 };
+            let expected = if method_name == "dgd" {
+                dim as f64
+            } else {
+                tau * factor
+            };
+            prop_assert!(
+                (per_round_worker - expected).abs() <= 0.5 * expected + 0.5,
+                "{method_name} tau={tau}: {per_round_worker:.2} coords/round/worker vs expected {expected}"
+            );
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_matrix_aware_unbiasedness_random_roots() {
+    check("matrix-aware compressor unbiased for random PSD roots", |rng| {
+        let d = 3 + rng.below(6);
+        // random PSD with ridge
+        let mut b = smx::linalg::Mat::zeros(d + 2, d);
+        for r in 0..d + 2 {
+            for c in 0..d {
+                b[(r, c)] = rng.normal();
+            }
+        }
+        let mut l = b.gram();
+        l.scale(0.3);
+        l.add_diag(0.01 + rng.uniform() * 0.1);
+        let root = PsdRoot::from_dense(&l);
+
+        let x: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        let p: Vec<f64> = (0..d).map(|_| rng.uniform_in(0.2, 1.0)).collect();
+        let mut ma = MatrixAware::new(IndependentSampling::new(p));
+        let trials = 20_000;
+        let mut mean = vec![0.0; d];
+        let mut msg = SparseMsg::new();
+        let mut g = vec![0.0; d];
+        for _ in 0..trials {
+            ma.compress(&root, &x, rng, &mut msg);
+            MatrixAware::decompress_into(&root, &msg, &mut g);
+            for j in 0..d {
+                mean[j] += g[j];
+            }
+        }
+        for j in 0..d {
+            let m = mean[j] / trials as f64;
+            prop_assert!(
+                (m - x[j]).abs() < 0.12 * (1.0 + x[j].abs()),
+                "biased at coord {j}: E[g]={m} x={}",
+                x[j]
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_water_filling_budget_invariant() {
+    check("water-filling probabilities meet the τ budget", |rng| {
+        let d = 2 + rng.below(40);
+        let diag: Vec<f64> = (0..d)
+            .map(|_| 1e-4 + rng.uniform() * rng.uniform() * 3.0)
+            .collect();
+        let tau = 1.0 + rng.below(d) as f64;
+        for kind in [
+            SamplingKind::ImportanceDcgd,
+            SamplingKind::ImportanceDiana,
+            SamplingKind::ImportanceAdiana,
+        ] {
+            let s = kind.build(&diag, tau, 1e-3, 1 + rng.below(20));
+            let sum = s.expected_size();
+            prop_assert!(
+                (sum - tau).abs() < 1e-6 * tau,
+                "{kind:?}: Σp = {sum} ≠ τ = {tau} (d={d})"
+            );
+            prop_assert!(
+                s.p.iter().all(|&p| p > 0.0 && p <= 1.0),
+                "{kind:?}: improper probabilities"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_smoothness_invariants_random_shards() {
+    forall(
+        PropConfig {
+            cases: 10,
+            base_seed: 3,
+        },
+        "smoothness constants ordering",
+        |rng| {
+            let spec = synth::SynthSpec {
+                name: "prop",
+                points: 40 + rng.below(80),
+                d: 5 + rng.below(25),
+                n: 2 + rng.below(4),
+                nnz_per_row: 3 + rng.below(5),
+                scale_alpha: rng.uniform_in(0.3, 1.5),
+                noise: 0.05,
+            };
+            let ds = synth::generate(&spec, rng.next_u64());
+            let n = spec.n;
+            let (_, shards) = ds.prepare(n, rng.next_u64());
+            let sm = Smoothness::build(&shards, 1e-3);
+            // μ ≤ L ≤ (1/n)ΣL_i ≤ L_max; diag ≤ λ_max per worker
+            prop_assert!(sm.l >= sm.mu * 0.999, "L < mu");
+            let avg = sm.locals.iter().map(|l| l.l_i).sum::<f64>() / sm.n() as f64;
+            prop_assert!(sm.l <= avg * 1.0001, "L={} > avg={avg}", sm.l);
+            prop_assert!(sm.l_max <= sm.l * sm.n() as f64 * 1.0001, "L_max > nL");
+            for loc in &sm.locals {
+                let dmax = loc.diag.iter().cloned().fold(0.0, f64::max);
+                prop_assert!(dmax <= loc.l_i * 1.0001, "diag > λmax");
+            }
+            // ν, ν_s in their ranges (eq. 14)
+            let nu = sm.nu();
+            prop_assert!(nu >= 0.999 && nu <= sm.n() as f64 * 1.0001, "nu={nu}");
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_downlink_coords_match_method_class() {
+    let cfg = ExperimentConfig {
+        dataset: "tiny".into(),
+        workers: 3,
+        ..Default::default()
+    };
+    let prep = runner::prepare_with(&cfg, true).unwrap();
+    let dim = prep.sm.dim;
+    forall(
+        PropConfig {
+            cases: 8,
+            base_seed: 9,
+        },
+        "downlink accounting",
+        |rng| {
+            let (method_name, sampling, tau) = random_spec(rng, dim);
+            let spec = MethodSpec::new(&method_name, tau, sampling, cfg.mu, vec![0.0; dim]);
+            let mut method = build(&spec, &prep.sm).unwrap();
+            let mut engines = prep.native_engines(cfg.mu);
+            let rounds = 40;
+            let run_cfg = RunConfig {
+                max_rounds: rounds,
+                record_every: rounds,
+                seed: rng.next_u64(),
+                ..Default::default()
+            };
+            let r = run_sim(&mut method, &mut engines, &prep.x_star, &run_cfg);
+            let down = r.records.last().unwrap().coords_down as f64
+                / (rounds as f64 * prep.sm.n() as f64);
+            match method_name.as_str() {
+                "adiana" | "adiana+" => {
+                    prop_assert!((down - 2.0 * dim as f64).abs() < 1e-9, "adiana downlink {down}")
+                }
+                "diana++" => prop_assert!(
+                    down < dim as f64,
+                    "diana++ downlink should be sparse on average: {down}"
+                ),
+                _ => prop_assert!((down - dim as f64).abs() < 1e-9, "dense downlink {down}"),
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,198 @@
+//! Three-layer integration: the PJRT engine (AOT JAX/Pallas artifacts)
+//! must agree with the native Rust oracle to f64 precision, and a full
+//! distributed run must produce identical trajectories under either
+//! engine.
+//!
+//! Requires `make artifacts` (the Makefile test target guarantees it).
+
+use smx::data::synth;
+use smx::objective::logreg::LogReg;
+use smx::runtime::artifact::Manifest;
+use smx::runtime::native::NativeEngine;
+use smx::runtime::pjrt::PjrtEngine;
+use smx::runtime::GradEngine;
+use smx::util::rng::Rng;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    smx::runtime::artifact::default_dir()
+}
+
+fn tiny_shards() -> Vec<smx::data::Shard> {
+    let ds = synth::generate(&synth::tiny_spec(), 21);
+    let (_, shards) = ds.prepare(4, 21);
+    shards
+}
+
+#[test]
+fn pjrt_grad_matches_native() {
+    let manifest = Manifest::load(&artifacts_dir()).expect("run `make artifacts` first");
+    let shards = tiny_shards();
+    let mu = 1e-3;
+    let mut rng = Rng::new(1);
+    for shard in &shards {
+        let mut pjrt = PjrtEngine::from_shard(&manifest, shard, mu).expect("pjrt engine");
+        let mut native = NativeEngine::from_shard(shard, mu);
+        let d = shard.dim();
+        for _ in 0..5 {
+            let x: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+            let mut g_pjrt = vec![0.0; d];
+            let mut g_native = vec![0.0; d];
+            pjrt.grad_into(&x, &mut g_pjrt);
+            native.grad_into(&x, &mut g_native);
+            for j in 0..d {
+                assert!(
+                    (g_pjrt[j] - g_native[j]).abs() < 1e-12 * (1.0 + g_native[j].abs()),
+                    "grad mismatch at {j}: pjrt={} native={}",
+                    g_pjrt[j],
+                    g_native[j]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn pjrt_loss_matches_native() {
+    let manifest = Manifest::load(&artifacts_dir()).expect("run `make artifacts` first");
+    let shards = tiny_shards();
+    let mu = 1e-3;
+    let mut rng = Rng::new(2);
+    let shard = &shards[0];
+    let mut pjrt = PjrtEngine::from_shard(&manifest, shard, mu).expect("pjrt engine");
+    let obj = LogReg::from_shard(shard, mu);
+    for _ in 0..5 {
+        let x: Vec<f64> = (0..shard.dim()).map(|_| rng.normal()).collect();
+        let l_pjrt = pjrt.loss(&x);
+        let l_native = obj.loss(&x);
+        assert!(
+            (l_pjrt - l_native).abs() < 1e-12 * (1.0 + l_native.abs()),
+            "loss mismatch: {l_pjrt} vs {l_native}"
+        );
+    }
+}
+
+#[test]
+fn distributed_run_identical_under_both_engines() {
+    use smx::coordinator::{run_sim, RunConfig};
+    use smx::methods::{build, MethodSpec};
+    use smx::objective::{Problem, Smoothness};
+    use smx::sampling::SamplingKind;
+
+    let manifest = Manifest::load(&artifacts_dir()).expect("run `make artifacts` first");
+    let shards = tiny_shards();
+    let mu = 1e-3;
+    let sm = Smoothness::build(&shards, mu);
+    let problem = Problem::from_shards(&shards, mu);
+    let sol = smx::methods::solve::solve_opt(&problem, &sm, 1e-13, 20_000);
+
+    let spec = MethodSpec::new(
+        "diana+",
+        2.0,
+        SamplingKind::ImportanceDiana,
+        mu,
+        vec![0.0; sm.dim],
+    );
+    let cfg = RunConfig {
+        max_rounds: 30,
+        ..Default::default()
+    };
+
+    let mut m1 = build(&spec, &sm).unwrap();
+    let mut native_engines: Vec<Box<dyn GradEngine>> = shards
+        .iter()
+        .map(|s| Box::new(NativeEngine::from_shard(s, mu)) as Box<dyn GradEngine>)
+        .collect();
+    let r_native = run_sim(&mut m1, &mut native_engines, &sol.x_star, &cfg);
+
+    let mut m2 = build(&spec, &sm).unwrap();
+    let mut pjrt_engines: Vec<Box<dyn GradEngine>> = shards
+        .iter()
+        .map(|s| {
+            Box::new(PjrtEngine::from_shard(&manifest, s, mu).expect("pjrt engine"))
+                as Box<dyn GradEngine>
+        })
+        .collect();
+    let r_pjrt = run_sim(&mut m2, &mut pjrt_engines, &sol.x_star, &cfg);
+
+    // identical sampling sequences + f64-exact gradients ⇒ near-identical
+    // trajectories (tiny drift allowed for XLA reassociation)
+    let dx = smx::linalg::vector::dist2(&r_native.final_x, &r_pjrt.final_x).sqrt();
+    let scale = smx::linalg::vector::norm(&r_native.final_x).max(1e-9);
+    assert!(
+        dx / scale < 1e-9,
+        "engines diverged: rel dist {} (native res {:.3e}, pjrt res {:.3e})",
+        dx / scale,
+        r_native.final_residual(),
+        r_pjrt.final_residual()
+    );
+    assert_eq!(
+        r_native.records.last().unwrap().coords_up,
+        r_pjrt.records.last().unwrap().coords_up,
+        "communication accounting must be identical"
+    );
+}
+
+#[test]
+fn pjrt_wgrad_artifact_loads_and_runs() {
+    // the wgrad artifact (whitened gradient difference, protocol (7)) is
+    // exercised end-to-end: L^{†1/2}(∇f − h) computed by the artifact must
+    // match the native root application.
+    use smx::objective::smoothness::build_local;
+    use xla::{Literal, PjRtClient};
+
+    let manifest = Manifest::load(&artifacts_dir()).expect("run `make artifacts` first");
+    let shards = tiny_shards();
+    let shard = &shards[1];
+    let (m, d) = (shard.num_points(), shard.dim());
+    let mu = 1e-3;
+
+    let entry = manifest.find("wgrad", m, d).expect("wgrad artifact");
+    let client = PjRtClient::cpu().unwrap();
+    let proto = xla::HloModuleProto::from_text_file(entry.file.to_str().unwrap()).unwrap();
+    let exe = client
+        .compile(&xla::XlaComputation::from_proto(&proto))
+        .unwrap();
+
+    let loc = build_local(&shard.a, mu);
+    let r_mat = loc.root.to_dense_pow(-0.5);
+
+    let mut rng = Rng::new(3);
+    let x: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+    let h: Vec<f64> = (0..d).map(|_| rng.normal() * 0.1).collect();
+
+    let x_lit = Literal::vec1(x.as_slice());
+    let a_lit = Literal::vec1(shard.a.to_dense_buffer().as_slice())
+        .reshape(&[m as i64, d as i64])
+        .unwrap();
+    let b_lit = Literal::vec1(shard.b.as_slice());
+    let mu_lit = Literal::scalar(mu);
+    let r_lit = Literal::vec1(r_mat.data.as_slice())
+        .reshape(&[d as i64, d as i64])
+        .unwrap();
+    let h_lit = Literal::vec1(h.as_slice());
+
+    let out = exe
+        .execute::<Literal>(&[x_lit, a_lit, b_lit, mu_lit, r_lit, h_lit])
+        .unwrap()[0][0]
+        .to_literal_sync()
+        .unwrap()
+        .to_tuple1()
+        .unwrap();
+    let got = out.to_vec::<f64>().unwrap();
+
+    // native reference
+    let obj = LogReg::from_shard(shard, mu);
+    let mut g = obj.grad(&x);
+    for j in 0..d {
+        g[j] -= h[j];
+    }
+    let want = loc.root.apply_pow(-0.5, &g);
+    for j in 0..d {
+        assert!(
+            (got[j] - want[j]).abs() < 1e-10 * (1.0 + want[j].abs()),
+            "wgrad mismatch at {j}: {} vs {}",
+            got[j],
+            want[j]
+        );
+    }
+}

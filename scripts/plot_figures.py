@@ -1,0 +1,105 @@
+#!/usr/bin/env python
+"""Render the paper's figures from the CSVs that `smx figures` writes.
+
+Usage:
+    python scripts/plot_figures.py [--results results] [--out results/plots]
+
+Produces one PNG per figure/dataset, matching the paper's layout:
+  Figure 1/2: residual vs iteration (log y)
+  Figure 3:   residual vs iteration, one curve per τ
+  Figure 4:   residual vs coordinates sent to server
+  Figure 5:   α+β and α·4^{b/d} scatter for random/top-k sparsification
+"""
+
+import argparse
+import csv
+import os
+from collections import defaultdict
+
+import matplotlib
+
+matplotlib.use("Agg")
+import matplotlib.pyplot as plt
+
+
+def read_curves(path):
+    """label -> (rounds, residuals, coords)."""
+    curves = defaultdict(lambda: ([], [], []))
+    with open(path) as f:
+        for row in csv.DictReader(f):
+            c = curves[row["label"]]
+            c[0].append(int(row["round"]))
+            c[1].append(float(row["residual"]))
+            c[2].append(int(row["coords_up"]))
+    return curves
+
+
+def plot_residual(path, out, x_axis="round", title=""):
+    curves = read_curves(path)
+    plt.figure(figsize=(5, 4))
+    for label, (rounds, res, coords) in sorted(curves.items()):
+        xs = rounds if x_axis == "round" else coords
+        plt.semilogy(xs, res, label=label, linewidth=1.2)
+    plt.xlabel("iteration" if x_axis == "round" else "coordinates sent to server")
+    plt.ylabel(r"$\|x^k - x^*\|^2 / \|x^0 - x^*\|^2$")
+    plt.title(title, fontsize=10)
+    plt.legend(fontsize=7)
+    plt.grid(True, alpha=0.3)
+    plt.tight_layout()
+    plt.savefig(out, dpi=130)
+    plt.close()
+    print(f"wrote {out}")
+
+
+def plot_fig5(path, out):
+    pts = defaultdict(lambda: ([], [], []))
+    with open(path) as f:
+        for row in csv.DictReader(f):
+            p = pts[row["scheme"]]
+            p[0].append(float(row["beta"]))
+            p[1].append(float(row["alpha"]))
+            p[2].append(float(row["bits"]))
+    plt.figure(figsize=(5, 4))
+    colors = {"random": "gold", "topk": "darkorange"}
+    for scheme, (betas, alphas, _) in pts.items():
+        plt.scatter(betas, alphas, s=14, marker="^", label=scheme, color=colors.get(scheme))
+    # lower bounds
+    import numpy as np
+
+    beta = np.linspace(0.001, 1.05, 200)
+    plt.plot(beta, 1 - beta, "b--", label=r"linear bound $\alpha+\beta\geq 1$ (Thm 14)")
+    plt.plot(beta, 4.0 ** (-32 * beta), "r--", label=r"general UP $\alpha \cdot 4^{b/d}\geq 1$")
+    plt.xlabel(r"$\beta = b/(32d)$")
+    plt.ylabel(r"$\alpha$ (squared error fraction)")
+    plt.ylim(-0.02, 1.05)
+    plt.legend(fontsize=7)
+    plt.grid(True, alpha=0.3)
+    plt.tight_layout()
+    plt.savefig(out, dpi=130)
+    plt.close()
+    print(f"wrote {out}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default="results")
+    ap.add_argument("--out", default="results/plots")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    for fname in sorted(os.listdir(args.results)):
+        path = os.path.join(args.results, fname)
+        if not fname.endswith(".csv"):
+            continue
+        stem = fname[:-4]
+        if fname.startswith(("fig1_", "fig2_", "train_")):
+            plot_residual(path, os.path.join(args.out, stem + ".png"), "round", stem)
+        elif fname.startswith("fig34_"):
+            plot_residual(path, os.path.join(args.out, stem + "_iters.png"), "round", stem + " (Fig 3)")
+            plot_residual(path, os.path.join(args.out, stem + "_coords.png"), "coords", stem + " (Fig 4)")
+        elif fname == "fig5.csv":
+            plot_fig5(path, os.path.join(args.out, "fig5.png"))
+
+
+if __name__ == "__main__":
+    main()
