@@ -1,25 +1,80 @@
 //! Hot-path micro-benches (§Perf): the per-round cost centers of the
-//! three-layer stack, native and PJRT.
+//! three-layer stack, native and PJRT, plus end-to-end rounds.
 //!
+//!   kernels: blocked dot/axpy/matvec/CSR vs retained naive references
 //!   worker:  grad (native CSR)  |  grad (PJRT artifact)  |  whiten L^{†1/2}v
 //!   server:  sparse decompress L^{1/2}Δ  |  full server apply
 //!   sampling: Bernoulli draw + water-filling solve
+//!   rounds:  dcgd+/diana+ end-to-end, buffer-reusing vs pre-opt allocating
 //!
 //!     cargo bench --bench hotpath
+//!
+//! Every row is also appended to `BENCH_hotpath.json` (median/min/p95 ns)
+//! so later PRs can diff the perf trajectory — see
+//! `scripts/bench_trajectory.sh`.
+
+#![allow(clippy::needless_range_loop)]
 
 use smx::compress::{MatrixAware, SparseMsg};
 use smx::data::synth;
+use smx::linalg::sparse::Csr;
+use smx::methods::{build, sync_round, MethodSpec, RoundBuffers, Uplink};
 use smx::objective::smoothness::build_local;
+use smx::objective::Smoothness;
 use smx::runtime::artifact::Manifest;
 use smx::runtime::native::NativeEngine;
 use smx::runtime::pjrt::PjrtEngine;
 use smx::runtime::GradEngine;
-use smx::sampling::{solvers, IndependentSampling};
-use smx::util::bench::{bench, black_box};
+use smx::sampling::{solvers, IndependentSampling, SamplingKind};
+use smx::util::bench::{bench, black_box, BenchResult};
+use smx::util::json::Json;
 use smx::util::rng::Rng;
+
+// ---- pre-opt reference kernels (scalar loops, what the blocked versions
+// replaced; kept here so before/after stays measurable) -----------------
+
+fn naive_dot(a: &[f64], b: &[f64]) -> f64 {
+    let mut s = 0.0;
+    for i in 0..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+fn naive_axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    for i in 0..x.len() {
+        y[i] += alpha * x[i];
+    }
+}
+
+fn naive_csr_matvec_into(a: &Csr, x: &[f64], out: &mut [f64]) {
+    for r in 0..a.rows {
+        let (idx, val) = a.row_entries(r);
+        let mut s = 0.0;
+        for k in 0..idx.len() {
+            s += val[k] * x[idx[k] as usize];
+        }
+        out[r] = s;
+    }
+}
+
+fn naive_csr_tmatvec_into(a: &Csr, y: &[f64], out: &mut [f64]) {
+    out.fill(0.0);
+    for r in 0..a.rows {
+        let yr = y[r];
+        if yr == 0.0 {
+            continue;
+        }
+        let (idx, val) = a.row_entries(r);
+        for k in 0..idx.len() {
+            out[idx[k] as usize] += yr * val[k];
+        }
+    }
+}
 
 fn main() -> anyhow::Result<()> {
     let mut rng = Rng::new(7);
+    let mut rows: Vec<BenchResult> = Vec::new();
 
     // a8a-scale shard: m=2837, d=123 (the e2e workload)
     let spec = synth::spec_by_name("a8a").unwrap();
@@ -32,61 +87,99 @@ fn main() -> anyhow::Result<()> {
     let x: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
     let mut g = vec![0.0; d];
 
+    // L0 kernels: blocked vs naive on the a8a shapes
+    {
+        let a: Vec<f64> = (0..4096).map(|_| rng.normal()).collect();
+        let b: Vec<f64> = (0..4096).map(|_| rng.normal()).collect();
+        rows.push(bench("dot blocked (n=4096)", 100, || {
+            black_box(smx::linalg::vector::dot(black_box(&a), black_box(&b)));
+        }));
+        rows.push(bench("dot naive (pre-opt reference)", 100, || {
+            black_box(naive_dot(black_box(&a), black_box(&b)));
+        }));
+        let mut y = vec![0.0; 4096];
+        rows.push(bench("axpy blocked (n=4096)", 100, || {
+            smx::linalg::vector::axpy(1.0000001, black_box(&a), &mut y);
+        }));
+        rows.push(bench("axpy naive (pre-opt reference)", 100, || {
+            naive_axpy(1.0000001, black_box(&a), &mut y);
+        }));
+
+        let mut gm = vec![0.0; m];
+        rows.push(bench("csr matvec blocked (a8a grad half)", 200, || {
+            shard.a.matvec_into(black_box(&x), &mut gm);
+        }));
+        rows.push(bench("csr matvec naive (pre-opt reference)", 200, || {
+            naive_csr_matvec_into(&shard.a, black_box(&x), &mut gm);
+        }));
+        let ym: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+        rows.push(bench("csr tmatvec blocked (a8a grad half)", 200, || {
+            shard.a.tmatvec_into(black_box(&ym), &mut g);
+        }));
+        rows.push(bench("csr tmatvec naive (pre-opt reference)", 200, || {
+            naive_csr_tmatvec_into(&shard.a, black_box(&ym), &mut g);
+        }));
+    }
+
     // L1/L2 gradient: native vs PJRT
     let mut native = NativeEngine::from_shard(shard, 1e-3);
-    bench("grad native (CSR fused)", 300, || {
+    rows.push(bench("grad native (CSR fused)", 300, || {
         native.grad_into(black_box(&x), &mut g);
-    });
+    }));
     match Manifest::load(&smx::runtime::artifact::default_dir()) {
-        Ok(manifest) => {
-            let mut pjrt = PjrtEngine::from_shard(&manifest, shard, 1e-3)?;
-            bench("grad pjrt (AOT JAX/Pallas artifact)", 300, || {
-                pjrt.grad_into(black_box(&x), &mut g);
-            });
-        }
+        Ok(manifest) => match PjrtEngine::from_shard(&manifest, shard, 1e-3) {
+            Ok(mut pjrt) => {
+                rows.push(bench("grad pjrt (AOT JAX/Pallas artifact)", 300, || {
+                    pjrt.grad_into(black_box(&x), &mut g);
+                }));
+            }
+            Err(e) => println!("(skipping pjrt engine: {e})"),
+        },
         Err(e) => println!("(skipping pjrt: {e})"),
     }
 
     // smoothness root application (worker whiten + server decompress)
     let loc = build_local(&shard.a, 1e-3);
     let mut w = vec![0.0; d];
-    bench("whiten L^(-1/2) v (dense root, d=123)", 200, || {
-        loc.root.apply_pow_into(-0.5, black_box(&x), &mut w);
-    });
+    let mut coeff = Vec::new();
+    rows.push(bench("whiten L^(-1/2) v (dense root, d=123)", 200, || {
+        loc.root
+            .apply_pow_into_with(-0.5, black_box(&x), &mut w, &mut coeff);
+    }));
     // §Perf reference: the pre-optimization column-strided V access,
     // re-materialized here so before/after stays measurable
     if let smx::linalg::PsdRoot::Dense { eig, dim, .. } = &loc.root {
         let n = *dim;
-        let mut coeff = vec![0.0; n];
-        bench("whiten strided (pre-opt reference)", 200, || {
+        let mut strided_coeff = vec![0.0; n];
+        rows.push(bench("whiten strided (pre-opt reference)", 200, || {
             let xb = black_box(&x);
             for c in 0..n {
                 let mut s = 0.0;
                 for r in 0..n {
                     s += eig.v[(r, c)] * xb[r];
                 }
-                coeff[c] = s * eig.w[c].max(0.0).powf(-0.5);
+                strided_coeff[c] = s * eig.w[c].max(0.0).powf(-0.5);
             }
             for r in 0..n {
                 let mut s = 0.0;
                 for c in 0..n {
-                    s += eig.v[(r, c)] * coeff[c];
+                    s += eig.v[(r, c)] * strided_coeff[c];
                 }
                 w[r] = s;
             }
-        });
+        }));
     }
 
     let sampling = IndependentSampling::uniform(d, 4.0);
     let mut ma = MatrixAware::new(sampling.clone());
     let mut msg = SparseMsg::new();
-    bench("worker compress (whiten + sketch, tau=4)", 200, || {
+    rows.push(bench("worker compress (whiten + sketch, tau=4)", 200, || {
         ma.compress(&loc.root, black_box(&x), &mut rng, &mut msg);
-    });
-    bench("server decompress L^(1/2) Δ (sparse, tau=4)", 200, || {
+    }));
+    rows.push(bench("server decompress L^(1/2) Δ (sparse, tau=4)", 200, || {
         loc.root
-            .apply_pow_sparse_into(0.5, black_box(&msg.idx), &msg.val, &mut g);
-    });
+            .apply_pow_sparse_into_with(0.5, black_box(&msg.idx), &msg.val, &mut g, &mut coeff);
+    }));
 
     // duke-scale low-rank root (d=7129, k=11)
     let duke = synth::spec_by_name("duke").unwrap();
@@ -95,18 +188,95 @@ fn main() -> anyhow::Result<()> {
     let dloc = build_local(&dshards[0].a, 1e-3);
     let dx: Vec<f64> = (0..dshards[0].dim()).map(|_| rng.normal()).collect();
     let mut dw = vec![0.0; dshards[0].dim()];
-    bench("whiten low-rank root (duke d=7129 k~11)", 200, || {
-        dloc.root.apply_pow_into(-0.5, black_box(&dx), &mut dw);
-    });
+    rows.push(bench("whiten low-rank root (duke d=7129 k~11)", 200, || {
+        dloc.root
+            .apply_pow_into_with(-0.5, black_box(&dx), &mut dw, &mut coeff);
+    }));
 
     // sampling machinery
     let mut buf = Vec::new();
-    bench("bernoulli sample d=123 tau=4", 100, || {
+    rows.push(bench("bernoulli sample d=123 tau=4", 100, || {
         sampling.sample_into(&mut rng, &mut buf);
-    });
-    bench("water-filling solve (eq.19, d=123)", 100, || {
+    }));
+    rows.push(bench("water-filling solve (eq.19, d=123)", 100, || {
         black_box(solvers::probs_diana_plus(&loc.diag, 4.0, 1e-3, 8));
-    });
+    }));
+
+    // L3 end-to-end rounds: buffer-reusing protocol vs the pre-opt
+    // allocating loop (fresh Downlink + Vec<Uplink> per round)
+    println!();
+    let sm = Smoothness::build(&shards, 1e-3);
+    for name in ["dcgd+", "diana+"] {
+        let mspec = MethodSpec::new(name, 4.0, SamplingKind::Uniform, 1e-3, vec![0.0; sm.dim]);
+
+        let mut method = build(&mspec, &sm)?;
+        let mut engines: Vec<Box<dyn GradEngine>> = shards
+            .iter()
+            .map(|s| Box::new(NativeEngine::from_shard(s, 1e-3)) as Box<dyn GradEngine>)
+            .collect();
+        let base = Rng::new(1);
+        let mut server_rng = base.derive(u64::MAX);
+        let mut worker_rngs: Vec<Rng> = (0..shards.len()).map(|i| base.derive(i as u64)).collect();
+        let mut bufs = RoundBuffers::new(shards.len());
+        rows.push(bench(
+            &format!("round e2e {name} (buffer-reusing, n=8)"),
+            400,
+            || {
+                sync_round(
+                    &mut method,
+                    &mut engines,
+                    &mut server_rng,
+                    &mut worker_rngs,
+                    &mut bufs,
+                );
+            },
+        ));
+
+        let mut method2 = build(&mspec, &sm)?;
+        let mut engines2: Vec<Box<dyn GradEngine>> = shards
+            .iter()
+            .map(|s| Box::new(NativeEngine::from_shard(s, 1e-3)) as Box<dyn GradEngine>)
+            .collect();
+        let mut server_rng2 = base.derive(u64::MAX);
+        let mut worker_rngs2: Vec<Rng> = (0..shards.len()).map(|i| base.derive(i as u64)).collect();
+        rows.push(bench(
+            &format!("round e2e {name} (pre-opt allocating)"),
+            400,
+            || {
+                let down = method2.server.downlink();
+                let ups: Vec<Uplink> = method2
+                    .workers
+                    .iter_mut()
+                    .zip(engines2.iter_mut())
+                    .zip(worker_rngs2.iter_mut())
+                    .map(|((wk, e), r)| wk.round(&down, e.as_mut(), r))
+                    .collect();
+                method2.server.apply(&ups, &mut server_rng2);
+            },
+        ));
+    }
+
+    // perf trajectory artifact
+    let entries: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("name", Json::Str(r.name.clone())),
+                ("iters", Json::Num(r.iters as f64)),
+                ("min_ns", Json::Num(r.min_ns)),
+                ("median_ns", Json::Num(r.median_ns)),
+                ("p95_ns", Json::Num(r.p95_ns)),
+                ("mean_ns", Json::Num(r.mean_ns)),
+            ])
+        })
+        .collect();
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("hotpath".into())),
+        ("unit", Json::Str("ns".into())),
+        ("results", Json::Arr(entries)),
+    ]);
+    std::fs::write("BENCH_hotpath.json", doc.to_string_pretty())?;
+    println!("\nwrote BENCH_hotpath.json ({} rows)", rows.len());
 
     Ok(())
 }

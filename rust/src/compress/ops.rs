@@ -44,6 +44,9 @@ pub fn sketch_apply(x: &[f64], sample: &[u32], p: &[f64], out: &mut SparseMsg) {
 pub struct MatrixAware {
     pub sampling: IndependentSampling,
     whiten_scratch: Vec<f64>,
+    /// eigen-coordinate scratch for the whiten apply (§Perf: keeps the
+    /// per-round compress path allocation-free)
+    coeff_scratch: Vec<f64>,
 }
 
 impl MatrixAware {
@@ -52,12 +55,13 @@ impl MatrixAware {
         MatrixAware {
             sampling,
             whiten_scratch: vec![0.0; d],
+            coeff_scratch: Vec::new(),
         }
     }
 
     /// Worker side: msg = C L^{†1/2} x (sparse, *not* unbiased on its own).
     pub fn compress(&mut self, root: &PsdRoot, x: &[f64], rng: &mut Rng, out: &mut SparseMsg) {
-        root.apply_pow_into(-0.5, x, &mut self.whiten_scratch);
+        root.apply_pow_into_with(-0.5, x, &mut self.whiten_scratch, &mut self.coeff_scratch);
         sketch_compress(&self.whiten_scratch, &self.sampling, rng, out);
     }
 

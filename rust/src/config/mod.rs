@@ -46,6 +46,10 @@ pub struct ExperimentConfig {
     /// start near the optimum (Figure 2's setup)
     pub start_near_opt: bool,
     pub practical_adiana: bool,
+    /// sweep-cell parallelism: 0 ⇒ all cores, 1 ⇒ sequential, k ⇒ k threads.
+    /// Output is bitwise identical for every value (deterministic per-cell
+    /// seeds; see `experiments::pool`).
+    pub jobs: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -66,6 +70,7 @@ impl Default for ExperimentConfig {
             out_dir: std::path::PathBuf::from("results"),
             start_near_opt: false,
             practical_adiana: true,
+            jobs: 0,
         }
     }
 }
@@ -79,6 +84,15 @@ impl ExperimentConfig {
         spec_by_name(&self.dataset)
             .map(|s| s.n)
             .unwrap_or(synth::tiny_spec().n)
+    }
+
+    /// Effective sweep parallelism: explicit `jobs`, or all cores when 0.
+    pub fn effective_jobs(&self) -> usize {
+        if self.jobs == 0 {
+            crate::experiments::pool::default_threads()
+        } else {
+            self.jobs
+        }
     }
 
     pub fn from_json(j: &Json) -> Result<ExperimentConfig> {
@@ -118,6 +132,7 @@ impl ExperimentConfig {
                 "practical_adiana" => {
                     c.practical_adiana = v.as_bool().context("practical_adiana")?
                 }
+                "jobs" => c.jobs = v.as_usize().context("jobs")?,
                 other => bail!("unknown config key '{other}'"),
             }
         }
@@ -176,6 +191,9 @@ impl ExperimentConfig {
         if args.has("start-near-opt") {
             self.start_near_opt = args.bool_or("start-near-opt", self.start_near_opt);
         }
+        if args.has("jobs") {
+            self.jobs = args.usize_or("jobs", self.jobs);
+        }
         self.validate()
     }
 
@@ -218,6 +236,7 @@ impl ExperimentConfig {
             ("engine", Json::Str(self.engine.name().to_string())),
             ("start_near_opt", Json::Bool(self.start_near_opt)),
             ("practical_adiana", Json::Bool(self.practical_adiana)),
+            ("jobs", Json::Num(self.jobs as f64)),
         ])
     }
 }

@@ -3,6 +3,11 @@
 //! Each driver writes long-format CSV curves under `out_dir` and prints a
 //! compact summary comparing the *shape* of the result against the
 //! paper's qualitative claims (who wins, by how much).
+//!
+//! Sweep cells (fig1's three variants, fig2's six methods, fig3/4's
+//! τ-grid) run concurrently on the [`pool`](crate::experiments::pool)
+//! executor via `runner::run_variants` — deterministic per-cell seeds
+//! keep the CSVs bitwise identical to a sequential run.
 
 use crate::compress::lowerbound;
 use crate::config::ExperimentConfig;

@@ -2,5 +2,6 @@
 //! evaluation (see DESIGN.md §3 for the index).
 
 pub mod figures;
+pub mod pool;
 pub mod runner;
 pub mod tables;

@@ -92,6 +92,21 @@ pub fn run_one(
     sampling: SamplingKind,
     tau: f64,
 ) -> Result<RunResult> {
+    run_one_seeded(prep, cfg, method_name, sampling, tau, cfg.seed)
+}
+
+/// [`run_one`] with an explicit coordinator seed — for sweeps that want
+/// distinct streams per cell (e.g. seed-replicate grids via
+/// [`pool::cell_seed`](crate::experiments::pool::cell_seed)); the figure
+/// sweeps keep `cfg.seed` for every cell.
+pub fn run_one_seeded(
+    prep: &Prepared,
+    cfg: &ExperimentConfig,
+    method_name: &str,
+    sampling: SamplingKind,
+    tau: f64,
+    seed: u64,
+) -> Result<RunResult> {
     let mut spec = MethodSpec::new(method_name, tau, sampling, cfg.mu, prep.x0(cfg));
     spec.practical_adiana = cfg.practical_adiana;
     let mut method = build(&spec, &prep.sm)?;
@@ -99,7 +114,7 @@ pub fn run_one(
         max_rounds: cfg.max_rounds,
         target_residual: cfg.target_residual,
         record_every: cfg.record_every,
-        seed: cfg.seed,
+        seed,
         float_bits: 64,
     };
     let result = match cfg.engine {
@@ -135,19 +150,46 @@ pub struct Variant {
 
 /// Run a set of variants and write one CSV (long format with a `label`
 /// column) to `out_dir/name.csv`. Returns (label, result) pairs.
+///
+/// Independent cells run on the [`pool`](crate::experiments::pool)
+/// executor (all cores by default; `cfg.jobs = 1` forces sequential).
+/// Every cell keeps the experiment seed `cfg.seed` (cells own disjoint
+/// RNGs, so results are bitwise independent of the thread count — and
+/// identical to the pre-pool sequential sweeps and to `run_one`; the
+/// shared seed also gives common random numbers across variants, which
+/// the fig1-style paired comparisons rely on). Asserted in the tests
+/// below.
 pub fn run_variants(
     prep: &Prepared,
     cfg: &ExperimentConfig,
     variants: &[Variant],
     out_name: &str,
 ) -> Result<Vec<(String, RunResult)>> {
+    // The PJRT engine path is already threaded internally (one OS thread
+    // per worker); keep cells sequential there.
+    let jobs = match cfg.engine {
+        EngineKind::Native => cfg.effective_jobs(),
+        EngineKind::Pjrt => 1,
+    };
+    crate::info!(
+        "runner",
+        "  sweep: {} cells on {} thread(s)",
+        variants.len(),
+        jobs.min(variants.len().max(1))
+    );
+    let cells: Vec<Result<RunResult>> =
+        crate::experiments::pool::run_cells(variants.len(), jobs, |i| {
+            let v = &variants[i];
+            run_one(prep, cfg, v.method, v.sampling, v.tau)
+        });
     let mut results = Vec::new();
-    for v in variants {
-        crate::info!("runner", "  running {} ({})", v.label, v.method);
-        let r = run_one(prep, cfg, v.method, v.sampling, v.tau)?;
+    for (v, r) in variants.iter().zip(cells) {
+        let r = r?;
         crate::info!(
             "runner",
-            "    {} rounds, final residual {:.3e}",
+            "  {} ({}): {} rounds, final residual {:.3e}",
+            v.label,
+            v.method,
             r.rounds_run,
             r.final_residual()
         );
@@ -220,6 +262,46 @@ mod tests {
         let rel = crate::linalg::vector::dist2(&x0, &prep.x_star).sqrt()
             / crate::linalg::vector::norm(&prep.x_star).max(1e-9);
         assert!(rel < 0.1, "x0 too far: rel={rel}");
+    }
+
+    #[test]
+    fn parallel_sweep_bitwise_identical_to_sequential() {
+        let prep = prepare(&tiny_cfg()).unwrap();
+        let cells: [(&'static str, f64); 4] =
+            [("dcgd+", 1.0), ("diana+", 2.0), ("diana+", 4.0), ("dcgd", 1.0)];
+        let variants: Vec<Variant> = cells
+            .iter()
+            .enumerate()
+            .map(|(i, &(method, tau))| Variant {
+                label: format!("v{i}"),
+                method,
+                sampling: SamplingKind::Uniform,
+                tau,
+            })
+            .collect();
+
+        let mut cfg_seq = tiny_cfg();
+        cfg_seq.jobs = 1;
+        cfg_seq.out_dir = std::env::temp_dir().join("smx_pool_seq");
+        let seq = run_variants(&prep, &cfg_seq, &variants, "seq").unwrap();
+
+        let mut cfg_par = tiny_cfg();
+        cfg_par.jobs = 4;
+        cfg_par.out_dir = std::env::temp_dir().join("smx_pool_par");
+        let par = run_variants(&prep, &cfg_par, &variants, "par").unwrap();
+
+        assert_eq!(seq.len(), par.len());
+        for ((ls, rs), (lp, rp)) in seq.iter().zip(&par) {
+            assert_eq!(ls, lp, "label order changed");
+            assert_eq!(rs.final_x, rp.final_x, "{ls}: trajectories diverged");
+            assert_eq!(
+                rs.records.last().unwrap().coords_up,
+                rp.records.last().unwrap().coords_up,
+                "{ls}: accounting diverged"
+            );
+        }
+        std::fs::remove_dir_all(&cfg_seq.out_dir).ok();
+        std::fs::remove_dir_all(&cfg_par.out_dir).ok();
     }
 
     #[test]

@@ -17,6 +17,16 @@
 //! See `DESIGN.md` for the system inventory and the experiment index, and
 //! `EXPERIMENTS.md` for paper-vs-measured results.
 
+// Numeric-kernel style: explicit index loops are deliberate in the hot
+// paths (they are what LLVM vectorizes predictably), and the math-heavy
+// constructors legitimately take many scalars.
+#![allow(
+    clippy::needless_range_loop,
+    clippy::manual_memcpy,
+    clippy::too_many_arguments,
+    clippy::uninlined_format_args
+)]
+
 pub mod compress;
 pub mod config;
 pub mod coordinator;

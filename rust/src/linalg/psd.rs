@@ -80,16 +80,19 @@ impl PsdRoot {
         let k = keep.len();
         let mut q = Mat::zeros(d, k);
         let mut lam = Vec::with_capacity(k);
+        let mut vcol = vec![0.0; m];
+        let mut qcol = vec![0.0; d];
         for (col, &ei) in keep.iter().enumerate() {
             let w = e.w[ei];
             lam.push(w);
             // q_col = √c Aᵀ v / √w
-            let vcol: Vec<f64> = (0..m).map(|r| e.v[(r, ei)]).collect();
-            let mut qcol = a_rows.tmatvec(&vcol);
+            for r in 0..m {
+                vcol[r] = e.v[(r, ei)];
+            }
+            a_rows.tmatvec_into(&vcol, &mut qcol);
             let scale = c.sqrt() / w.sqrt();
-            for (r, qv) in qcol.iter_mut().enumerate() {
-                q[(r, col)] = *qv * scale;
-                let _ = qv;
+            for (r, &qv) in qcol.iter().enumerate() {
+                q[(r, col)] = qv * scale;
             }
         }
         let qt = q.transpose();
@@ -132,20 +135,32 @@ impl PsdRoot {
     }
 
     /// `out = L^p · x` with pseudo-inverse semantics for p < 0.
+    ///
+    /// Allocates the eigen-coordinate scratch per call; hot paths should
+    /// use [`PsdRoot::apply_pow_into_with`] with a persistent scratch.
     pub fn apply_pow_into(&self, p: f64, x: &[f64], out: &mut [f64]) {
+        let mut coeff = Vec::new();
+        self.apply_pow_into_with(p, x, out, &mut coeff);
+    }
+
+    /// `out = L^p · x`, writing eigen-coordinates into the caller-owned
+    /// `coeff` scratch (resized on first use, then reused allocation-free
+    /// — §Perf: this is on the per-round whiten path of every + method).
+    pub fn apply_pow_into_with(&self, p: f64, x: &[f64], out: &mut [f64], coeff: &mut Vec<f64>) {
         match self {
             PsdRoot::Dense { eig, vt, dim } => {
                 assert_eq!(x.len(), *dim);
                 // out = V f(w) Vᵀ x   (Vᵀx via sequential rows of vt)
                 let n = *dim;
                 let lmax = self.lambda_max();
-                let mut coeff = vec![0.0; n];
+                coeff.clear();
+                coeff.resize(n, 0.0);
                 for c in 0..n {
                     coeff[c] =
                         crate::linalg::vector::dot(vt.row(c), x) * pinv_pow(eig.w[c], p, lmax);
                 }
                 for r in 0..n {
-                    out[r] = crate::linalg::vector::dot(eig.v.row(r), &coeff);
+                    out[r] = crate::linalg::vector::dot(eig.v.row(r), coeff);
                 }
             }
             PsdRoot::LowRankRidge { q, qt, lam, mu, dim } => {
@@ -153,13 +168,14 @@ impl PsdRoot {
                 let mus = ridge_pow(*mu, p);
                 // out = μ^p x + Q ((λ+μ)^p − μ^p) Qᵀ x
                 let k = lam.len();
-                let mut qx = vec![0.0; k];
+                coeff.clear();
+                coeff.resize(k, 0.0);
                 for c in 0..k {
-                    qx[c] = crate::linalg::vector::dot(qt.row(c), x)
+                    coeff[c] = crate::linalg::vector::dot(qt.row(c), x)
                         * (ridge_pow(lam[c] + *mu, p) - mus);
                 }
                 for r in 0..*dim {
-                    out[r] = mus * x[r] + crate::linalg::vector::dot(q.row(r), &qx);
+                    out[r] = mus * x[r] + crate::linalg::vector::dot(q.row(r), coeff);
                 }
             }
         }
@@ -174,7 +190,24 @@ impl PsdRoot {
     /// `out = L^p · x` where `x` is sparse (indices + values). Cost
     /// O(dim · nnz) dense-path / O(k · nnz + dim · k) low-rank path — the
     /// decompression hot path at the server.
+    ///
+    /// Allocates scratch per call; hot paths should use
+    /// [`PsdRoot::apply_pow_sparse_into_with`].
     pub fn apply_pow_sparse_into(&self, p: f64, idx: &[u32], val: &[f64], out: &mut [f64]) {
+        let mut coeff = Vec::new();
+        self.apply_pow_sparse_into_with(p, idx, val, out, &mut coeff);
+    }
+
+    /// Sparse-input apply with a caller-owned eigen-coordinate scratch
+    /// (§Perf: allocation-free in the server decompression loop).
+    pub fn apply_pow_sparse_into_with(
+        &self,
+        p: f64,
+        idx: &[u32],
+        val: &[f64],
+        out: &mut [f64],
+        coeff: &mut Vec<f64>,
+    ) {
         match self {
             PsdRoot::Dense { eig, dim, .. } => {
                 let n = *dim;
@@ -182,15 +215,16 @@ impl PsdRoot {
                 // coeff[c] = Σ_t V[i_t, c]·val_t — accumulate rows of V
                 // sequentially (each row is the eigen-coordinates of e_i),
                 // then scale by f(w) (§Perf: no column striding)
-                let mut coeff = vec![0.0; n];
+                coeff.clear();
+                coeff.resize(n, 0.0);
                 for (t, &i) in idx.iter().enumerate() {
-                    crate::linalg::vector::axpy(val[t], eig.v.row(i as usize), &mut coeff);
+                    crate::linalg::vector::axpy(val[t], eig.v.row(i as usize), coeff);
                 }
                 for c in 0..n {
                     coeff[c] *= pinv_pow(eig.w[c], p, lmax);
                 }
                 for r in 0..n {
-                    out[r] = crate::linalg::vector::dot(eig.v.row(r), &coeff);
+                    out[r] = crate::linalg::vector::dot(eig.v.row(r), coeff);
                 }
             }
             PsdRoot::LowRankRidge { q, lam, mu, dim, .. } => {
@@ -198,19 +232,20 @@ impl PsdRoot {
                 let k = lam.len();
                 // Qᵀ x_sparse: for each nonzero, walk row i of Q (len k,
                 // sequential)
-                let mut qx = vec![0.0; k];
+                coeff.clear();
+                coeff.resize(k, 0.0);
                 for (t, &i) in idx.iter().enumerate() {
-                    crate::linalg::vector::axpy(val[t], q.row(i as usize), &mut qx);
+                    crate::linalg::vector::axpy(val[t], q.row(i as usize), coeff);
                 }
                 for c in 0..k {
-                    qx[c] *= ridge_pow(lam[c] + *mu, p) - mus;
+                    coeff[c] *= ridge_pow(lam[c] + *mu, p) - mus;
                 }
                 out.fill(0.0);
                 for (t, &i) in idx.iter().enumerate() {
                     out[i as usize] = mus * val[t];
                 }
                 for r in 0..*dim {
-                    out[r] += crate::linalg::vector::dot(q.row(r), &qx);
+                    out[r] += crate::linalg::vector::dot(q.row(r), coeff);
                 }
             }
         }

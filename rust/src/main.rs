@@ -12,6 +12,8 @@
 //! --max-rounds --target-residual --seed --engine native|pjrt
 //! --config file.json --out-dir results/ --data-dir data/
 
+#![allow(clippy::uninlined_format_args)]
+
 use anyhow::{bail, Result};
 use smx::config::ExperimentConfig;
 use smx::experiments::{figures, runner, tables};
@@ -26,7 +28,7 @@ const USAGE: &str = "usage: smx <train|figures|tables|solve|info> [flags]
   smx info    --dataset duke
 flags: --workers N --mu F --max-rounds N --target-residual F --seed N
        --engine native|pjrt --config FILE --out-dir DIR --data-dir DIR
-       --record-every N --start-near-opt";
+       --record-every N --start-near-opt --jobs N (0 = all cores)";
 
 fn main() {
     smx::util::log::init_from_env();

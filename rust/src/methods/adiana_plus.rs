@@ -17,7 +17,7 @@ use crate::compress::{sketch_compress, MatrixAware, SparseMsg};
 use crate::linalg::psd::PsdRoot;
 use crate::methods::prox::Prox;
 use crate::methods::stepsize::{self, AdianaParams};
-use crate::methods::{Downlink, MethodSpec, ServerAlgo, Uplink, WorkerAlgo};
+use crate::methods::{dense_downlink_into, Downlink, MethodSpec, ServerAlgo, Uplink, WorkerAlgo};
 use crate::objective::Smoothness;
 use crate::runtime::GradEngine;
 use crate::sampling::IndependentSampling;
@@ -34,6 +34,7 @@ pub struct AccelWorker {
     grad_w: Vec<f64>,
     diff: Vec<f64>,
     dbar: Vec<f64>,
+    coeff: Vec<f64>,
     compressor: Option<MatrixAware>,
 }
 
@@ -50,6 +51,18 @@ impl AccelWorker {
 
 impl WorkerAlgo for AccelWorker {
     fn round(&mut self, down: &Downlink, engine: &mut dyn GradEngine, rng: &mut Rng) -> Uplink {
+        let mut up = Uplink::default();
+        self.round_into(down, engine, rng, &mut up);
+        up
+    }
+
+    fn round_into(
+        &mut self,
+        down: &Downlink,
+        engine: &mut dyn GradEngine,
+        rng: &mut Rng,
+        up: &mut Uplink,
+    ) {
         let (x, w) = match down {
             Downlink::Dense { x, w: Some(w) } => (x, w),
             _ => unreachable!("adiana needs dense downlink with anchor w"),
@@ -61,20 +74,26 @@ impl WorkerAlgo for AccelWorker {
         for j in 0..self.diff.len() {
             self.diff[j] = self.grad_x[j] - self.h[j];
         }
-        let mut delta = SparseMsg::new();
-        self.compress(true, rng, &mut delta);
+        self.compress(true, rng, &mut up.delta);
 
-        // δ_i from w^k (independent sketch draw)
+        // δ_i from w^k (independent sketch draw), reusing the persistent
+        // second-message buffer
         for j in 0..self.diff.len() {
             self.diff[j] = self.grad_w[j] - self.h[j];
         }
-        let mut delta2 = SparseMsg::new();
-        self.compress(false, rng, &mut delta2);
+        let delta2 = up.delta2.get_or_insert_with(SparseMsg::new);
+        self.compress(false, rng, delta2);
 
         // h_i ← h_i + α·decompress(δ_i)
         match &self.root {
             Some(root) => {
-                root.apply_pow_sparse_into(0.5, &delta2.idx, &delta2.val, &mut self.dbar);
+                root.apply_pow_sparse_into_with(
+                    0.5,
+                    &delta2.idx,
+                    &delta2.val,
+                    &mut self.dbar,
+                    &mut self.coeff,
+                );
                 for j in 0..self.h.len() {
                     self.h[j] += self.alpha * self.dbar[j];
                 }
@@ -84,11 +103,6 @@ impl WorkerAlgo for AccelWorker {
                     self.h[i as usize] += self.alpha * delta2.val[k];
                 }
             }
-        }
-
-        Uplink {
-            delta,
-            delta2: Some(delta2),
         }
     }
 
@@ -102,6 +116,9 @@ pub struct AccelServer {
     prox: Prox,
     x: Vec<f64>,
     y: Vec<f64>,
+    /// previous y^k, persisted for the probabilistic w update (§Perf:
+    /// replaces a per-round clone)
+    y_prev: Vec<f64>,
     z: Vec<f64>,
     w: Vec<f64>,
     h: Vec<f64>,
@@ -110,6 +127,7 @@ pub struct AccelServer {
     dbar: Vec<f64>,
     delta_bar: Vec<f64>,
     scratch: Vec<f64>,
+    coeff: Vec<f64>,
     name: &'static str,
 }
 
@@ -125,7 +143,13 @@ impl AccelServer {
             };
             match &self.roots {
                 Some(roots) => {
-                    roots[i].apply_pow_sparse_into(0.5, &msg.idx, &msg.val, &mut self.scratch);
+                    roots[i].apply_pow_sparse_into_with(
+                        0.5,
+                        &msg.idx,
+                        &msg.val,
+                        &mut self.scratch,
+                        &mut self.coeff,
+                    );
                     for j in 0..self.dbar.len() {
                         self.dbar[j] += self.scratch[j];
                     }
@@ -146,16 +170,19 @@ impl AccelServer {
 
 impl ServerAlgo for AccelServer {
     fn downlink(&mut self) -> Downlink {
+        let mut down = Downlink::Init { x: Vec::new() };
+        self.downlink_into(&mut down);
+        down
+    }
+
+    fn downlink_into(&mut self, down: &mut Downlink) {
         let p = &self.params;
         for j in 0..self.x.len() {
             self.x[j] = p.theta1 * self.z[j]
                 + p.theta2 * self.w[j]
                 + (1.0 - p.theta1 - p.theta2) * self.y[j];
         }
-        Downlink::Dense {
-            x: self.x.clone(),
-            w: Some(self.w.clone()),
-        }
+        dense_downlink_into(&self.x, Some(&self.w), down);
     }
 
     fn apply(&mut self, ups: &[Uplink], rng: &mut Rng) {
@@ -169,7 +196,7 @@ impl ServerAlgo for AccelServer {
         // δ̄ for the shift update
         self.aggregate(ups, true);
 
-        let y_old = self.y.clone();
+        self.y_prev.copy_from_slice(&self.y);
         for j in 0..self.x.len() {
             let g = self.delta_bar[j] + self.h[j];
             self.y[j] = self.x[j] - p.eta * g;
@@ -190,7 +217,7 @@ impl ServerAlgo for AccelServer {
 
         // w^{k+1} = y^k with probability q
         if rng.bernoulli(p.q) {
-            self.w.copy_from_slice(&y_old);
+            self.w.copy_from_slice(&self.y_prev);
         }
     }
 
@@ -259,6 +286,7 @@ pub fn build_accel(
                 grad_w: vec![0.0; dim],
                 diff: vec![0.0; dim],
                 dbar: vec![0.0; dim],
+                coeff: Vec::new(),
             }) as Box<dyn WorkerAlgo + Send>
         })
         .collect();
@@ -268,6 +296,7 @@ pub fn build_accel(
         prox: Prox::None,
         x: spec.x0.clone(),
         y: spec.x0.clone(),
+        y_prev: spec.x0.clone(),
         z: spec.x0.clone(),
         w: spec.x0.clone(),
         h: vec![0.0; dim],
@@ -275,6 +304,7 @@ pub fn build_accel(
         dbar: vec![0.0; dim],
         delta_bar: vec![0.0; dim],
         scratch: vec![0.0; dim],
+        coeff: Vec::new(),
         name,
     });
     (server, workers)

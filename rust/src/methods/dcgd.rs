@@ -3,9 +3,11 @@
 //! sparsification `C_i ∇f_i(x^k)`. Converges linearly only to a
 //! neighborhood of x* (Theorem 2 analogue with 𝓛̃ → ωL_max).
 
-use crate::compress::{sketch_compress, SparseMsg};
+use crate::compress::sketch_compress;
 use crate::methods::prox::Prox;
-use crate::methods::{stepsize, Downlink, MethodSpec, ServerAlgo, Uplink, WorkerAlgo};
+use crate::methods::{
+    dense_downlink_into, stepsize, Downlink, MethodSpec, ServerAlgo, Uplink, WorkerAlgo,
+};
 use crate::objective::Smoothness;
 use crate::runtime::GradEngine;
 use crate::sampling::IndependentSampling;
@@ -18,17 +20,25 @@ pub struct DcgdWorker {
 
 impl WorkerAlgo for DcgdWorker {
     fn round(&mut self, down: &Downlink, engine: &mut dyn GradEngine, rng: &mut Rng) -> Uplink {
+        let mut up = Uplink::default();
+        self.round_into(down, engine, rng, &mut up);
+        up
+    }
+
+    fn round_into(
+        &mut self,
+        down: &Downlink,
+        engine: &mut dyn GradEngine,
+        rng: &mut Rng,
+        up: &mut Uplink,
+    ) {
         let x = match down {
             Downlink::Dense { x, .. } => x,
             _ => unreachable!("dcgd uses dense downlinks"),
         };
         engine.grad_into(x, &mut self.grad);
-        let mut delta = SparseMsg::new();
-        sketch_compress(&self.grad, &self.sampling, rng, &mut delta);
-        Uplink {
-            delta,
-            delta2: None,
-        }
+        sketch_compress(&self.grad, &self.sampling, rng, &mut up.delta);
+        up.delta2 = None;
     }
 
     fn dim(&self) -> usize {
@@ -45,10 +55,13 @@ pub struct DcgdServer {
 
 impl ServerAlgo for DcgdServer {
     fn downlink(&mut self) -> Downlink {
-        Downlink::Dense {
-            x: self.x.clone(),
-            w: None,
-        }
+        let mut down = Downlink::Init { x: Vec::new() };
+        self.downlink_into(&mut down);
+        down
+    }
+
+    fn downlink_into(&mut self, down: &mut Downlink) {
+        dense_downlink_into(&self.x, None, down);
     }
 
     fn apply(&mut self, ups: &[Uplink], _rng: &mut Rng) {

@@ -6,10 +6,12 @@
 //!
 //! Theory step size γ = 1/(L + 2𝓛̃_max/n) (Theorem 2).
 
-use crate::compress::{MatrixAware, SparseMsg};
+use crate::compress::MatrixAware;
 use crate::linalg::psd::PsdRoot;
 use crate::methods::prox::Prox;
-use crate::methods::{stepsize, Downlink, MethodSpec, ServerAlgo, Uplink, WorkerAlgo};
+use crate::methods::{
+    dense_downlink_into, stepsize, Downlink, MethodSpec, ServerAlgo, Uplink, WorkerAlgo,
+};
 use crate::objective::Smoothness;
 use crate::runtime::GradEngine;
 use crate::util::rng::Rng;
@@ -23,17 +25,26 @@ pub struct DcgdPlusWorker {
 
 impl WorkerAlgo for DcgdPlusWorker {
     fn round(&mut self, down: &Downlink, engine: &mut dyn GradEngine, rng: &mut Rng) -> Uplink {
+        let mut up = Uplink::default();
+        self.round_into(down, engine, rng, &mut up);
+        up
+    }
+
+    fn round_into(
+        &mut self,
+        down: &Downlink,
+        engine: &mut dyn GradEngine,
+        rng: &mut Rng,
+        up: &mut Uplink,
+    ) {
         let x = match down {
             Downlink::Dense { x, .. } => x,
             _ => unreachable!("dcgd+ uses dense downlinks"),
         };
         engine.grad_into(x, &mut self.grad);
-        let mut delta = SparseMsg::new();
-        self.compressor.compress(&self.root, &self.grad, rng, &mut delta);
-        Uplink {
-            delta,
-            delta2: None,
-        }
+        self.compressor
+            .compress(&self.root, &self.grad, rng, &mut up.delta);
+        up.delta2 = None;
     }
 
     fn dim(&self) -> usize {
@@ -48,25 +59,30 @@ pub struct DcgdPlusServer {
     roots: Vec<Arc<PsdRoot>>,
     g: Vec<f64>,
     scratch: Vec<f64>,
+    coeff: Vec<f64>,
 }
 
 impl ServerAlgo for DcgdPlusServer {
     fn downlink(&mut self) -> Downlink {
-        Downlink::Dense {
-            x: self.x.clone(),
-            w: None,
-        }
+        let mut down = Downlink::Init { x: Vec::new() };
+        self.downlink_into(&mut down);
+        down
+    }
+
+    fn downlink_into(&mut self, down: &mut Downlink) {
+        dense_downlink_into(&self.x, None, down);
     }
 
     fn apply(&mut self, ups: &[Uplink], _rng: &mut Rng) {
         self.g.fill(0.0);
         for (i, u) in ups.iter().enumerate() {
             // decompress: L_i^{1/2} Δ_i
-            self.roots[i].apply_pow_sparse_into(
+            self.roots[i].apply_pow_sparse_into_with(
                 0.5,
                 &u.delta.idx,
                 &u.delta.val,
                 &mut self.scratch,
+                &mut self.coeff,
             );
             for j in 0..self.g.len() {
                 self.g[j] += self.scratch[j];
@@ -123,6 +139,7 @@ pub fn build(
         roots,
         g: vec![0.0; dim],
         scratch: vec![0.0; dim],
+        coeff: Vec::new(),
     });
     (server, workers)
 }

@@ -2,10 +2,11 @@
 //! Workers send dense gradients; the server averages and takes a proximal
 //! step with γ = 2/(L+μ).
 
-use crate::compress::SparseMsg;
 use crate::linalg::vector;
 use crate::methods::prox::Prox;
-use crate::methods::{stepsize, Downlink, MethodSpec, ServerAlgo, Uplink, WorkerAlgo};
+use crate::methods::{
+    dense_downlink_into, stepsize, Downlink, MethodSpec, ServerAlgo, Uplink, WorkerAlgo,
+};
 use crate::objective::Smoothness;
 use crate::runtime::GradEngine;
 use crate::util::rng::Rng;
@@ -16,20 +17,29 @@ pub struct DgdWorker {
 }
 
 impl WorkerAlgo for DgdWorker {
-    fn round(&mut self, down: &Downlink, engine: &mut dyn GradEngine, _rng: &mut Rng) -> Uplink {
+    fn round(&mut self, down: &Downlink, engine: &mut dyn GradEngine, rng: &mut Rng) -> Uplink {
+        let mut up = Uplink::default();
+        self.round_into(down, engine, rng, &mut up);
+        up
+    }
+
+    fn round_into(
+        &mut self,
+        down: &Downlink,
+        engine: &mut dyn GradEngine,
+        _rng: &mut Rng,
+        up: &mut Uplink,
+    ) {
         let x = match down {
             Downlink::Dense { x, .. } => x,
             _ => unreachable!("dgd uses dense downlinks"),
         };
         engine.grad_into(x, &mut self.grad);
-        let mut delta = SparseMsg::with_capacity(self.dim);
+        up.delta.clear();
         for (j, &v) in self.grad.iter().enumerate() {
-            delta.push(j as u32, v);
+            up.delta.push(j as u32, v);
         }
-        Uplink {
-            delta,
-            delta2: None,
-        }
+        up.delta2 = None;
     }
 
     fn dim(&self) -> usize {
@@ -46,10 +56,13 @@ pub struct DgdServer {
 
 impl ServerAlgo for DgdServer {
     fn downlink(&mut self) -> Downlink {
-        Downlink::Dense {
-            x: self.x.clone(),
-            w: None,
-        }
+        let mut down = Downlink::Init { x: Vec::new() };
+        self.downlink_into(&mut down);
+        down
+    }
+
+    fn downlink_into(&mut self, down: &mut Downlink) {
+        dense_downlink_into(&self.x, None, down);
     }
 
     fn apply(&mut self, ups: &[Uplink], _rng: &mut Rng) {
@@ -59,8 +72,8 @@ impl ServerAlgo for DgdServer {
                 self.g[i as usize] += u.delta.val[k];
             }
         }
-        let inv_n = 1.0 / ups.len() as f64;
-        vector::axpy(-self.gamma * inv_n, &self.g.clone(), &mut self.x);
+        let step = -self.gamma / ups.len() as f64;
+        vector::axpy(step, &self.g, &mut self.x);
         self.prox.apply(self.gamma, &mut self.x);
     }
 

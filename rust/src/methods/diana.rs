@@ -6,9 +6,11 @@
 //!
 //! Theory parameters: γ = 1/(L + 6ωL_max/n), α = 1/(1+ω).
 
-use crate::compress::{sketch_compress, SparseMsg};
+use crate::compress::sketch_compress;
 use crate::methods::prox::Prox;
-use crate::methods::{stepsize, Downlink, MethodSpec, ServerAlgo, Uplink, WorkerAlgo};
+use crate::methods::{
+    dense_downlink_into, stepsize, Downlink, MethodSpec, ServerAlgo, Uplink, WorkerAlgo,
+};
 use crate::objective::Smoothness;
 use crate::runtime::GradEngine;
 use crate::sampling::IndependentSampling;
@@ -24,6 +26,18 @@ pub struct DianaWorker {
 
 impl WorkerAlgo for DianaWorker {
     fn round(&mut self, down: &Downlink, engine: &mut dyn GradEngine, rng: &mut Rng) -> Uplink {
+        let mut up = Uplink::default();
+        self.round_into(down, engine, rng, &mut up);
+        up
+    }
+
+    fn round_into(
+        &mut self,
+        down: &Downlink,
+        engine: &mut dyn GradEngine,
+        rng: &mut Rng,
+        up: &mut Uplink,
+    ) {
         let x = match down {
             Downlink::Dense { x, .. } => x,
             _ => unreachable!("diana uses dense downlinks"),
@@ -32,16 +46,12 @@ impl WorkerAlgo for DianaWorker {
         for j in 0..self.diff.len() {
             self.diff[j] = self.grad[j] - self.h[j];
         }
-        let mut delta = SparseMsg::new();
-        sketch_compress(&self.diff, &self.sampling, rng, &mut delta);
+        sketch_compress(&self.diff, &self.sampling, rng, &mut up.delta);
         // h_i ← h_i + α·Ĉ(∇f_i − h_i)  (same compressed message)
-        for (k, &i) in delta.idx.iter().enumerate() {
-            self.h[i as usize] += self.alpha * delta.val[k];
+        for (k, &i) in up.delta.idx.iter().enumerate() {
+            self.h[i as usize] += self.alpha * up.delta.val[k];
         }
-        Uplink {
-            delta,
-            delta2: None,
-        }
+        up.delta2 = None;
     }
 
     fn dim(&self) -> usize {
@@ -60,10 +70,13 @@ pub struct DianaServer {
 
 impl ServerAlgo for DianaServer {
     fn downlink(&mut self) -> Downlink {
-        Downlink::Dense {
-            x: self.x.clone(),
-            w: None,
-        }
+        let mut down = Downlink::Init { x: Vec::new() };
+        self.downlink_into(&mut down);
+        down
+    }
+
+    fn downlink_into(&mut self, down: &mut Downlink) {
+        dense_downlink_into(&self.x, None, down);
     }
 
     fn apply(&mut self, ups: &[Uplink], _rng: &mut Rng) {

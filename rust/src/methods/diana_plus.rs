@@ -8,10 +8,12 @@
 //!
 //! Theory parameters (Theorem 3): γ = 1/(L + 6𝓛̃_max/n), α = 1/(1+ω_max).
 
-use crate::compress::{MatrixAware, SparseMsg};
+use crate::compress::MatrixAware;
 use crate::linalg::psd::PsdRoot;
 use crate::methods::prox::Prox;
-use crate::methods::{stepsize, Downlink, MethodSpec, ServerAlgo, Uplink, WorkerAlgo};
+use crate::methods::{
+    dense_downlink_into, stepsize, Downlink, MethodSpec, ServerAlgo, Uplink, WorkerAlgo,
+};
 use crate::objective::Smoothness;
 use crate::runtime::GradEngine;
 use crate::util::rng::Rng;
@@ -25,10 +27,23 @@ pub struct DianaPlusWorker {
     diff: Vec<f64>,
     grad: Vec<f64>,
     dbar: Vec<f64>,
+    coeff: Vec<f64>,
 }
 
 impl WorkerAlgo for DianaPlusWorker {
     fn round(&mut self, down: &Downlink, engine: &mut dyn GradEngine, rng: &mut Rng) -> Uplink {
+        let mut up = Uplink::default();
+        self.round_into(down, engine, rng, &mut up);
+        up
+    }
+
+    fn round_into(
+        &mut self,
+        down: &Downlink,
+        engine: &mut dyn GradEngine,
+        rng: &mut Rng,
+        up: &mut Uplink,
+    ) {
         let x = match down {
             Downlink::Dense { x, .. } => x,
             _ => unreachable!("diana+ uses dense downlinks"),
@@ -37,18 +52,20 @@ impl WorkerAlgo for DianaPlusWorker {
         for j in 0..self.diff.len() {
             self.diff[j] = self.grad[j] - self.h[j];
         }
-        let mut delta = SparseMsg::new();
-        self.compressor.compress(&self.root, &self.diff, rng, &mut delta);
+        self.compressor
+            .compress(&self.root, &self.diff, rng, &mut up.delta);
         // h_i ← h_i + α L_i^{1/2} Δ_i
-        self.root
-            .apply_pow_sparse_into(0.5, &delta.idx, &delta.val, &mut self.dbar);
+        self.root.apply_pow_sparse_into_with(
+            0.5,
+            &up.delta.idx,
+            &up.delta.val,
+            &mut self.dbar,
+            &mut self.coeff,
+        );
         for j in 0..self.h.len() {
             self.h[j] += self.alpha * self.dbar[j];
         }
-        Uplink {
-            delta,
-            delta2: None,
-        }
+        up.delta2 = None;
     }
 
     fn dim(&self) -> usize {
@@ -65,25 +82,30 @@ pub struct DianaPlusServer {
     roots: Vec<Arc<PsdRoot>>,
     dbar: Vec<f64>,
     scratch: Vec<f64>,
+    coeff: Vec<f64>,
     name: &'static str,
 }
 
 impl ServerAlgo for DianaPlusServer {
     fn downlink(&mut self) -> Downlink {
-        Downlink::Dense {
-            x: self.x.clone(),
-            w: None,
-        }
+        let mut down = Downlink::Init { x: Vec::new() };
+        self.downlink_into(&mut down);
+        down
+    }
+
+    fn downlink_into(&mut self, down: &mut Downlink) {
+        dense_downlink_into(&self.x, None, down);
     }
 
     fn apply(&mut self, ups: &[Uplink], _rng: &mut Rng) {
         self.dbar.fill(0.0);
         for (i, u) in ups.iter().enumerate() {
-            self.roots[i].apply_pow_sparse_into(
+            self.roots[i].apply_pow_sparse_into_with(
                 0.5,
                 &u.delta.idx,
                 &u.delta.val,
                 &mut self.scratch,
+                &mut self.coeff,
             );
             for j in 0..self.dbar.len() {
                 self.dbar[j] += self.scratch[j];
@@ -144,6 +166,7 @@ pub fn build(
                 diff: vec![0.0; dim],
                 grad: vec![0.0; dim],
                 dbar: vec![0.0; dim],
+                coeff: Vec::new(),
             }) as Box<dyn WorkerAlgo + Send>
         })
         .collect();
@@ -157,6 +180,7 @@ pub fn build(
         roots,
         dbar: vec![0.0; dim],
         scratch: vec![0.0; dim],
+        coeff: Vec::new(),
         name: "diana+",
     });
     (server, workers)

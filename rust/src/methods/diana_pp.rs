@@ -36,10 +36,23 @@ pub struct DianaPpWorker {
     grad: Vec<f64>,
     diff: Vec<f64>,
     scratch: Vec<f64>,
+    coeff: Vec<f64>,
 }
 
 impl WorkerAlgo for DianaPpWorker {
     fn round(&mut self, down: &Downlink, engine: &mut dyn GradEngine, rng: &mut Rng) -> Uplink {
+        let mut up = Uplink::default();
+        self.round_into(down, engine, rng, &mut up);
+        up
+    }
+
+    fn round_into(
+        &mut self,
+        down: &Downlink,
+        engine: &mut dyn GradEngine,
+        rng: &mut Rng,
+        up: &mut Uplink,
+    ) {
         match down {
             Downlink::Init { x } => {
                 self.x.copy_from_slice(x);
@@ -47,11 +60,12 @@ impl WorkerAlgo for DianaPpWorker {
             }
             Downlink::Sparse { delta } => {
                 // reconstruct: ĝ = H + L^{1/2}δ ; x ← prox(x − γĝ) ; H += βL^{1/2}δ
-                self.global_root.apply_pow_sparse_into(
+                self.global_root.apply_pow_sparse_into_with(
                     0.5,
                     &delta.idx,
                     &delta.val,
                     &mut self.scratch,
+                    &mut self.coeff,
                 );
                 for j in 0..self.x.len() {
                     let ghat = self.hh[j] + self.scratch[j];
@@ -67,18 +81,20 @@ impl WorkerAlgo for DianaPpWorker {
         for j in 0..self.diff.len() {
             self.diff[j] = self.grad[j] - self.h[j];
         }
-        let mut delta = SparseMsg::new();
-        self.compressor.compress(&self.root, &self.diff, rng, &mut delta);
+        self.compressor
+            .compress(&self.root, &self.diff, rng, &mut up.delta);
         // h_i ← h_i + α L_i^{1/2} Δ_i
-        self.root
-            .apply_pow_sparse_into(0.5, &delta.idx, &delta.val, &mut self.scratch);
+        self.root.apply_pow_sparse_into_with(
+            0.5,
+            &up.delta.idx,
+            &up.delta.val,
+            &mut self.scratch,
+            &mut self.coeff,
+        );
         for j in 0..self.h.len() {
             self.h[j] += self.alpha * self.scratch[j];
         }
-        Uplink {
-            delta,
-            delta2: None,
-        }
+        up.delta2 = None;
     }
 
     fn dim(&self) -> usize {
@@ -97,21 +113,44 @@ pub struct DianaPpServer {
     roots: Vec<Arc<PsdRoot>>,
     global_root: Arc<PsdRoot>,
     server_compressor: MatrixAware,
-    pending: Option<SparseMsg>,
+    /// next round's δ; ping-pongs with the coordinator's downlink buffer
+    /// through `downlink_into` so both retain their capacity (§Perf)
+    pending: SparseMsg,
+    /// set by `apply`, consumed by `downlink*` — guards the protocol
+    /// ordering (a downlink without a preceding apply is a driver bug)
+    pending_valid: bool,
     first: bool,
     dbar: Vec<f64>,
     gvec: Vec<f64>,
     scratch: Vec<f64>,
+    coeff: Vec<f64>,
 }
 
 impl ServerAlgo for DianaPpServer {
     fn downlink(&mut self) -> Downlink {
+        let mut down = Downlink::Init { x: Vec::new() };
+        self.downlink_into(&mut down);
+        down
+    }
+
+    fn downlink_into(&mut self, down: &mut Downlink) {
         if self.first {
             self.first = false;
-            return Downlink::Init { x: self.x.clone() };
+            match down {
+                Downlink::Init { x } if x.len() == self.x.len() => x.copy_from_slice(&self.x),
+                _ => *down = Downlink::Init { x: self.x.clone() },
+            }
+            return;
         }
-        Downlink::Sparse {
-            delta: self.pending.take().expect("δ pending from previous apply"),
+        assert!(self.pending_valid, "δ pending from previous apply");
+        self.pending_valid = false;
+        match down {
+            Downlink::Sparse { delta } => std::mem::swap(delta, &mut self.pending),
+            _ => {
+                *down = Downlink::Sparse {
+                    delta: std::mem::take(&mut self.pending),
+                }
+            }
         }
     }
 
@@ -119,11 +158,12 @@ impl ServerAlgo for DianaPpServer {
         // Δ̄ = (1/n)Σ L_i^{1/2}Δ_i ;  g = Δ̄ + h ;  h += αΔ̄
         self.dbar.fill(0.0);
         for (i, u) in ups.iter().enumerate() {
-            self.roots[i].apply_pow_sparse_into(
+            self.roots[i].apply_pow_sparse_into_with(
                 0.5,
                 &u.delta.idx,
                 &u.delta.val,
                 &mut self.scratch,
+                &mut self.coeff,
             );
             for j in 0..self.dbar.len() {
                 self.dbar[j] += self.scratch[j];
@@ -136,22 +176,25 @@ impl ServerAlgo for DianaPpServer {
             self.h[j] += self.alpha * db;
         }
 
-        // δ = C L^{†1/2}(g − H)
-        let mut delta = SparseMsg::new();
+        // δ = C L^{†1/2}(g − H), compressed into the persistent buffer
         self.server_compressor
-            .compress(&self.global_root, &self.gvec, rng, &mut delta);
+            .compress(&self.global_root, &self.gvec, rng, &mut self.pending);
 
         // ĝ = H + L^{1/2}δ ; x ← prox(x − γĝ) ; H += βL^{1/2}δ
-        self.global_root
-            .apply_pow_sparse_into(0.5, &delta.idx, &delta.val, &mut self.scratch);
+        self.global_root.apply_pow_sparse_into_with(
+            0.5,
+            &self.pending.idx,
+            &self.pending.val,
+            &mut self.scratch,
+            &mut self.coeff,
+        );
         for j in 0..self.x.len() {
             let ghat = self.hh[j] + self.scratch[j];
             self.x[j] -= self.gamma * ghat;
             self.hh[j] += self.beta * self.scratch[j];
         }
         self.prox.apply(self.gamma, &mut self.x);
-
-        self.pending = Some(delta);
+        self.pending_valid = true;
     }
 
     fn iterate(&self) -> &[f64] {
@@ -266,6 +309,7 @@ pub fn build(
                 grad: vec![0.0; dim],
                 diff: vec![0.0; dim],
                 scratch: vec![0.0; dim],
+                coeff: Vec::new(),
             }) as Box<dyn WorkerAlgo + Send>
         })
         .collect();
@@ -281,11 +325,13 @@ pub fn build(
         roots,
         global_root,
         server_compressor: MatrixAware::new(server_sampling),
-        pending: None,
+        pending: SparseMsg::new(),
+        pending_valid: false,
         first: true,
         dbar: vec![0.0; dim],
         gvec: vec![0.0; dim],
         scratch: vec![0.0; dim],
+        coeff: Vec::new(),
     });
     (server, workers)
 }

@@ -12,7 +12,9 @@
 use crate::compress::{MatrixAware, SparseMsg};
 use crate::linalg::psd::PsdRoot;
 use crate::methods::prox::Prox;
-use crate::methods::{stepsize, Downlink, MethodSpec, ServerAlgo, Uplink, WorkerAlgo};
+use crate::methods::{
+    dense_downlink_into, stepsize, Downlink, MethodSpec, ServerAlgo, Uplink, WorkerAlgo,
+};
 use crate::objective::Smoothness;
 use crate::runtime::GradEngine;
 use crate::util::rng::Rng;
@@ -25,11 +27,24 @@ pub struct IsegaPlusWorker {
     diff: Vec<f64>,
     grad: Vec<f64>,
     scratch: Vec<f64>,
+    coeff: Vec<f64>,
     proj: SparseMsg,
 }
 
 impl WorkerAlgo for IsegaPlusWorker {
     fn round(&mut self, down: &Downlink, engine: &mut dyn GradEngine, rng: &mut Rng) -> Uplink {
+        let mut up = Uplink::default();
+        self.round_into(down, engine, rng, &mut up);
+        up
+    }
+
+    fn round_into(
+        &mut self,
+        down: &Downlink,
+        engine: &mut dyn GradEngine,
+        rng: &mut Rng,
+        up: &mut Uplink,
+    ) {
         let x = match down {
             Downlink::Dense { x, .. } => x,
             _ => unreachable!("isega+ uses dense downlinks"),
@@ -38,25 +53,27 @@ impl WorkerAlgo for IsegaPlusWorker {
         for j in 0..self.diff.len() {
             self.diff[j] = self.grad[j] - self.h[j];
         }
-        let mut delta = SparseMsg::new();
-        self.compressor.compress(&self.root, &self.diff, rng, &mut delta);
+        self.compressor
+            .compress(&self.root, &self.diff, rng, &mut up.delta);
 
         // h_i ← h_i + L^{1/2} Diag(P) Δ_i  (projection update)
         self.proj.clear();
-        for (k, &i) in delta.idx.iter().enumerate() {
+        for (k, &i) in up.delta.idx.iter().enumerate() {
             self.proj
-                .push(i, delta.val[k] * self.compressor.sampling.p[i as usize]);
+                .push(i, up.delta.val[k] * self.compressor.sampling.p[i as usize]);
         }
-        self.root
-            .apply_pow_sparse_into(0.5, &self.proj.idx, &self.proj.val, &mut self.scratch);
+        self.root.apply_pow_sparse_into_with(
+            0.5,
+            &self.proj.idx,
+            &self.proj.val,
+            &mut self.scratch,
+            &mut self.coeff,
+        );
         for j in 0..self.h.len() {
             self.h[j] += self.scratch[j];
         }
 
-        Uplink {
-            delta,
-            delta2: None,
-        }
+        up.delta2 = None;
     }
 
     fn dim(&self) -> usize {
@@ -75,15 +92,19 @@ pub struct IsegaPlusServer {
     g: Vec<f64>,
     hupd: Vec<f64>,
     scratch: Vec<f64>,
+    coeff: Vec<f64>,
     proj: SparseMsg,
 }
 
 impl ServerAlgo for IsegaPlusServer {
     fn downlink(&mut self) -> Downlink {
-        Downlink::Dense {
-            x: self.x.clone(),
-            w: None,
-        }
+        let mut down = Downlink::Init { x: Vec::new() };
+        self.downlink_into(&mut down);
+        down
+    }
+
+    fn downlink_into(&mut self, down: &mut Downlink) {
+        dense_downlink_into(&self.x, None, down);
     }
 
     fn apply(&mut self, ups: &[Uplink], _rng: &mut Rng) {
@@ -91,11 +112,12 @@ impl ServerAlgo for IsegaPlusServer {
         self.hupd.fill(0.0);
         for (i, u) in ups.iter().enumerate() {
             // gradient estimator contribution: L^{1/2} Δ_i
-            self.roots[i].apply_pow_sparse_into(
+            self.roots[i].apply_pow_sparse_into_with(
                 0.5,
                 &u.delta.idx,
                 &u.delta.val,
                 &mut self.scratch,
+                &mut self.coeff,
             );
             for j in 0..self.g.len() {
                 self.g[j] += self.scratch[j];
@@ -106,11 +128,12 @@ impl ServerAlgo for IsegaPlusServer {
                 self.proj
                     .push(idx, u.delta.val[k] * self.probs[i][idx as usize]);
             }
-            self.roots[i].apply_pow_sparse_into(
+            self.roots[i].apply_pow_sparse_into_with(
                 0.5,
                 &self.proj.idx,
                 &self.proj.val,
                 &mut self.scratch,
+                &mut self.coeff,
             );
             for j in 0..self.hupd.len() {
                 self.hupd[j] += self.scratch[j];
@@ -168,6 +191,7 @@ pub fn build(
                 diff: vec![0.0; dim],
                 grad: vec![0.0; dim],
                 scratch: vec![0.0; dim],
+                coeff: Vec::new(),
                 proj: SparseMsg::new(),
             }) as Box<dyn WorkerAlgo + Send>
         })
@@ -183,6 +207,7 @@ pub fn build(
         g: vec![0.0; dim],
         hupd: vec![0.0; dim],
         scratch: vec![0.0; dim],
+        coeff: Vec::new(),
         proj: SparseMsg::new(),
     });
     (server, workers)

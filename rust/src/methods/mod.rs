@@ -87,6 +87,21 @@ pub trait WorkerAlgo {
     /// Process one round: consume the downlink, produce the uplink.
     fn round(&mut self, down: &Downlink, engine: &mut dyn GradEngine, rng: &mut Rng) -> Uplink;
 
+    /// Buffer-reusing round: write the uplink into `up`, reusing its
+    /// `SparseMsg` capacity across rounds (§Perf: the coordinator's
+    /// steady-state loop is allocation-free through this path). The
+    /// default falls back to [`WorkerAlgo::round`], so existing
+    /// implementations keep working unchanged.
+    fn round_into(
+        &mut self,
+        down: &Downlink,
+        engine: &mut dyn GradEngine,
+        rng: &mut Rng,
+        up: &mut Uplink,
+    ) {
+        *up = self.round(down, engine, rng);
+    }
+
     fn dim(&self) -> usize;
 }
 
@@ -94,6 +109,13 @@ pub trait WorkerAlgo {
 pub trait ServerAlgo {
     /// Produce this round's downlink.
     fn downlink(&mut self) -> Downlink;
+
+    /// Buffer-reusing downlink: overwrite `down` in place, reusing its
+    /// dense/sparse buffers when the shape matches (§Perf). The default
+    /// falls back to [`ServerAlgo::downlink`].
+    fn downlink_into(&mut self, down: &mut Downlink) {
+        *down = self.downlink();
+    }
 
     /// Consume all workers' uplinks, advance the model.
     fn apply(&mut self, ups: &[Uplink], rng: &mut Rng);
@@ -105,6 +127,30 @@ pub trait ServerAlgo {
     fn dim(&self) -> usize;
 
     fn name(&self) -> &'static str;
+}
+
+/// Overwrite `down` with a dense broadcast, reusing its buffers when the
+/// shapes line up (the steady-state case). Shared by every dense-downlink
+/// server's `downlink_into`.
+pub(crate) fn dense_downlink_into(src_x: &[f64], src_w: Option<&[f64]>, down: &mut Downlink) {
+    match down {
+        Downlink::Dense { x, w } if x.len() == src_x.len() => {
+            x.copy_from_slice(src_x);
+            match src_w {
+                Some(sw) => match w {
+                    Some(dw) if dw.len() == sw.len() => dw.copy_from_slice(sw),
+                    _ => *w = Some(sw.to_vec()),
+                },
+                None => *w = None,
+            }
+        }
+        _ => {
+            *down = Downlink::Dense {
+                x: src_x.to_vec(),
+                w: src_w.map(<[f64]>::to_vec),
+            }
+        }
+    }
 }
 
 /// A constructed method: one server + n workers.
@@ -176,24 +222,49 @@ mod builder {
     }
 }
 
-/// Drive a method for one synchronous round against in-process engines.
+/// Persistent per-round message buffers: one [`Downlink`] and one
+/// [`Uplink`] per worker, reused across every round so the steady-state
+/// protocol performs zero heap allocations (§Perf).
+pub struct RoundBuffers {
+    pub down: Downlink,
+    pub ups: Vec<Uplink>,
+}
+
+impl RoundBuffers {
+    pub fn new(n_workers: usize) -> RoundBuffers {
+        RoundBuffers {
+            // placeholder; the first `downlink_into` replaces it
+            down: Downlink::Init { x: Vec::new() },
+            ups: (0..n_workers).map(|_| Uplink::default()).collect(),
+        }
+    }
+}
+
+/// Drive a method for one synchronous round against in-process engines,
+/// reusing `bufs` across calls (no per-round `Vec<Uplink>` construction).
 /// Returns coordinates sent up (Σ over workers) and down.
 pub fn sync_round(
     method: &mut Method,
     engines: &mut [Box<dyn GradEngine>],
     server_rng: &mut Rng,
     worker_rngs: &mut [Rng],
+    bufs: &mut RoundBuffers,
 ) -> (usize, usize) {
-    let down = method.server.downlink();
+    debug_assert_eq!(bufs.ups.len(), method.workers.len());
+    let RoundBuffers { down, ups } = bufs;
+    method.server.downlink_into(down);
     let down_coords = down.coords() * method.workers.len();
-    let ups: Vec<Uplink> = method
+    let mut up_coords = 0usize;
+    for (((w, e), rng), up) in method
         .workers
         .iter_mut()
         .zip(engines.iter_mut())
         .zip(worker_rngs.iter_mut())
-        .map(|((w, e), rng)| w.round(&down, e.as_mut(), rng))
-        .collect();
-    let up_coords: usize = ups.iter().map(|u| u.coords()).sum();
-    method.server.apply(&ups, server_rng);
+        .zip(ups.iter_mut())
+    {
+        w.round_into(down, e.as_mut(), rng, up);
+        up_coords += up.coords();
+    }
+    method.server.apply(ups, server_rng);
     (up_coords, down_coords)
 }

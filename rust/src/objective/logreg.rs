@@ -35,13 +35,27 @@ pub fn sigmoid(t: f64) -> f64 {
 }
 
 /// One node's local loss f_i.
-#[derive(Clone, Debug)]
+#[derive(Debug)]
 pub struct LogReg {
     pub a: Csr,
     pub b: Vec<f64>,
     pub mu: f64,
-    /// scratch for A·x (len m); reused across calls on the hot path
-    m_scratch: std::cell::RefCell<Vec<f64>>,
+    /// scratch for A·x (len m); reused across calls on the hot path.
+    /// A `Mutex` (uncontended; each engine owns its LogReg) rather than a
+    /// `RefCell` so the problem stays `Sync` and can be shared across the
+    /// parallel sweep executor's threads.
+    m_scratch: std::sync::Mutex<Vec<f64>>,
+}
+
+impl Clone for LogReg {
+    fn clone(&self) -> LogReg {
+        LogReg {
+            a: self.a.clone(),
+            b: self.b.clone(),
+            mu: self.mu,
+            m_scratch: std::sync::Mutex::new(vec![0.0; self.a.rows]),
+        }
+    }
 }
 
 impl LogReg {
@@ -52,7 +66,7 @@ impl LogReg {
             a,
             b,
             mu,
-            m_scratch: std::cell::RefCell::new(vec![0.0; m]),
+            m_scratch: std::sync::Mutex::new(vec![0.0; m]),
         }
     }
 
@@ -70,7 +84,7 @@ impl LogReg {
 
     /// f_i(x)
     pub fn loss(&self, x: &[f64]) -> f64 {
-        let mut z = self.m_scratch.borrow_mut();
+        let mut z = self.m_scratch.lock().unwrap();
         self.a.matvec_into(x, &mut z);
         let m = self.a.rows as f64;
         let mut s = 0.0;
@@ -82,7 +96,7 @@ impl LogReg {
 
     /// ∇f_i(x) = (1/m) Aᵀ(b ∘ σ(b ∘ Ax)) + μx
     pub fn grad_into(&self, x: &[f64], out: &mut [f64]) {
-        let mut z = self.m_scratch.borrow_mut();
+        let mut z = self.m_scratch.lock().unwrap();
         self.a.matvec_into(x, &mut z);
         let m = self.a.rows as f64;
         for (j, &bj) in self.b.iter().enumerate() {
@@ -100,7 +114,7 @@ impl LogReg {
 
     /// (f_i(x), ∇f_i(x)) with a single A·x product.
     pub fn loss_and_grad(&self, x: &[f64], grad_out: &mut [f64]) -> f64 {
-        let mut z = self.m_scratch.borrow_mut();
+        let mut z = self.m_scratch.lock().unwrap();
         self.a.matvec_into(x, &mut z);
         let m = self.a.rows as f64;
         let mut loss = 0.0;

@@ -11,7 +11,48 @@
 
 pub mod artifact;
 pub mod native;
+
+#[cfg(feature = "pjrt")]
 pub mod pjrt;
+
+/// Stub PJRT engine for builds without the `pjrt` feature (the offline
+/// image has no `xla` crate). Constructors fail at runtime with a clear
+/// message; every call site compiles unchanged.
+#[cfg(not(feature = "pjrt"))]
+pub mod pjrt {
+    use crate::data::Shard;
+    use crate::runtime::artifact::Manifest;
+    use crate::runtime::GradEngine;
+    use anyhow::{bail, Result};
+
+    pub struct PjrtEngine {
+        _private: (),
+    }
+
+    impl PjrtEngine {
+        pub fn from_shard(_manifest: &Manifest, _shard: &Shard, _mu: f64) -> Result<PjrtEngine> {
+            bail!("smx was built without the `pjrt` feature; rebuild with `--features pjrt` (requires the xla crate)")
+        }
+    }
+
+    impl GradEngine for PjrtEngine {
+        fn grad_into(&mut self, _x: &[f64], _out: &mut [f64]) {
+            unreachable!("pjrt stub cannot be constructed")
+        }
+
+        fn loss(&mut self, _x: &[f64]) -> f64 {
+            unreachable!("pjrt stub cannot be constructed")
+        }
+
+        fn dim(&self) -> usize {
+            unreachable!("pjrt stub cannot be constructed")
+        }
+
+        fn name(&self) -> &'static str {
+            "pjrt-stub"
+        }
+    }
+}
 
 /// A worker's gradient oracle.
 ///

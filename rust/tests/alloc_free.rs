@@ -1,0 +1,222 @@
+//! §Perf acceptance: the round pipeline performs **zero heap allocations
+//! per round in steady state** for the matrix-aware methods.
+//!
+//! A thread-local counting allocator (const-initialized TLS, so the
+//! allocator itself never recurses) tallies every alloc/realloc made by
+//! the *calling* thread. Per-thread counting keeps the assertions immune
+//! to the libtest harness and to sibling tests running concurrently, and
+//! for the threaded driver it scopes the measurement to the coordinator
+//! thread (worker threads own their engines and are steady-state-free by
+//! the same sync_round argument).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+struct CountingAlloc;
+
+thread_local! {
+    static TL_ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+fn tl_count() -> u64 {
+    TL_ALLOCS.try_with(|c| c.get()).unwrap_or(0)
+}
+
+fn tl_bump() {
+    // try_with: allocations during TLS teardown must not panic inside
+    // the allocator
+    let _ = TL_ALLOCS.try_with(|c| c.set(c.get() + 1));
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        tl_bump();
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        tl_bump();
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        tl_bump();
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+use smx::coordinator::{run_sim, run_threaded, EngineFactory, RunConfig};
+use smx::data::synth;
+use smx::methods::{build, sync_round, Method, MethodSpec, RoundBuffers};
+use smx::objective::Smoothness;
+use smx::runtime::native::NativeEngine;
+use smx::runtime::GradEngine;
+use smx::sampling::SamplingKind;
+use smx::util::rng::Rng;
+use std::sync::Arc;
+
+fn setup() -> (Vec<smx::data::Shard>, Smoothness) {
+    let ds = synth::generate(&synth::tiny_spec(), 3);
+    let (_, shards) = ds.prepare(4, 3);
+    let sm = Smoothness::build(&shards, 1e-3);
+    (shards, sm)
+}
+
+fn engines(shards: &[smx::data::Shard]) -> Vec<Box<dyn GradEngine>> {
+    shards
+        .iter()
+        .map(|s| Box::new(NativeEngine::from_shard(s, 1e-3)) as Box<dyn GradEngine>)
+        .collect()
+}
+
+fn method(name: &str, sm: &Smoothness) -> Method {
+    let spec = MethodSpec::new(name, 2.0, SamplingKind::Uniform, 1e-3, vec![0.0; sm.dim]);
+    build(&spec, sm).unwrap()
+}
+
+/// The core claim: after warmup (plus reserving the worst-case sketch
+/// capacity), `sync_round` makes literally zero allocator calls.
+#[test]
+fn sync_round_steady_state_is_allocation_free() {
+    let (shards, sm) = setup();
+    let dim = sm.dim;
+    for name in ["dcgd+", "diana+"] {
+        let mut m = method(name, &sm);
+        let mut eng = engines(&shards);
+        let base = Rng::new(99);
+        let mut server_rng = base.derive(u64::MAX);
+        let mut worker_rngs: Vec<Rng> = (0..shards.len()).map(|i| base.derive(i as u64)).collect();
+        let mut bufs = RoundBuffers::new(shards.len());
+
+        for _ in 0..60 {
+            sync_round(&mut m, &mut eng, &mut server_rng, &mut worker_rngs, &mut bufs);
+        }
+        // a Bernoulli sketch can select up to all d coordinates
+        for up in &mut bufs.ups {
+            up.delta.idx.reserve(dim);
+            up.delta.val.reserve(dim);
+        }
+
+        let before = tl_count();
+        for _ in 0..100 {
+            sync_round(&mut m, &mut eng, &mut server_rng, &mut worker_rngs, &mut bufs);
+        }
+        let delta = tl_count() - before;
+        assert_eq!(
+            delta, 0,
+            "{name}: {delta} allocations in 100 steady-state rounds (want 0)"
+        );
+    }
+}
+
+/// `run_sim` end-to-end: doubling the round count must not add
+/// allocations beyond (identical) setup + warmup — i.e. the per-round
+/// marginal allocation count is zero.
+#[test]
+fn run_sim_marginal_allocations_are_zero() {
+    let (shards, sm) = setup();
+
+    let measure = |rounds: usize| -> u64 {
+        let mut m = method("diana+", &sm);
+        let mut eng = engines(&shards);
+        let cfg = RunConfig {
+            max_rounds: rounds,
+            record_every: 1,
+            seed: 0xA110C,
+            ..Default::default()
+        };
+        let x_star = vec![0.0; sm.dim];
+        let before = tl_count();
+        let r = run_sim(&mut m, &mut eng, &x_star, &cfg);
+        assert_eq!(r.rounds_run, rounds);
+        tl_count() - before
+    };
+
+    // warm up caches/lazy inits once so both measured runs see the same
+    // environment
+    measure(10);
+    let a = measure(150);
+    let b = measure(300);
+    // identical setup; rounds 151..300 must be allocation-free (modulo a
+    // couple of deterministic capacity-doubling events in the sketch
+    // buffers, which amortize to zero)
+    let marginal = b.saturating_sub(a);
+    assert!(
+        marginal <= 2,
+        "run_sim allocated {marginal} times across 150 extra rounds (want ~0)"
+    );
+}
+
+/// The threaded driver's coordinator thread: uplink recycling + the
+/// reclaimed downlink Arc keep its per-round allocations at O(1) channel
+/// bookkeeping, far below one allocation per round on average.
+#[test]
+fn run_threaded_coordinator_allocations_stay_bounded() {
+    let (shards, sm) = setup();
+
+    let measure = |rounds: usize| -> u64 {
+        let m = method("dcgd+", &sm);
+        let shards2 = shards.clone();
+        let factory: EngineFactory = Arc::new(move |i| {
+            Box::new(NativeEngine::from_shard(&shards2[i], 1e-3)) as Box<dyn GradEngine>
+        });
+        let cfg = RunConfig {
+            max_rounds: rounds,
+            record_every: 1,
+            seed: 0xA110C,
+            ..Default::default()
+        };
+        let x_star = vec![0.0; sm.dim];
+        let before = tl_count();
+        let r = run_threaded(m, factory, &x_star, &cfg);
+        assert_eq!(r.rounds_run, rounds);
+        tl_count() - before
+    };
+
+    measure(10);
+    let a = measure(100);
+    let b = measure(300);
+    let marginal = b.saturating_sub(a);
+    // 200 extra rounds; mpsc block allocation amortizes to well under one
+    // allocation per round, and nothing scales with dim
+    assert!(
+        marginal < 200,
+        "threaded coordinator allocated {marginal} times across 200 extra rounds"
+    );
+}
+
+/// Bitwise invariant guard: with the buffer-reusing pipeline in place,
+/// the sim and threaded drivers still produce identical trajectories.
+#[test]
+fn drivers_still_bitwise_identical_with_buffer_reuse() {
+    let (shards, sm) = setup();
+    let cfg = RunConfig {
+        max_rounds: 40,
+        ..Default::default()
+    };
+    let x_star = vec![0.0; sm.dim];
+
+    let mut m1 = method("diana+", &sm);
+    let mut eng = engines(&shards);
+    let r1 = run_sim(&mut m1, &mut eng, &x_star, &cfg);
+
+    let m2 = method("diana+", &sm);
+    let shards2 = shards.clone();
+    let factory: EngineFactory = Arc::new(move |i| {
+        Box::new(NativeEngine::from_shard(&shards2[i], 1e-3)) as Box<dyn GradEngine>
+    });
+    let r2 = run_threaded(m2, factory, &x_star, &cfg);
+
+    assert_eq!(r1.final_x, r2.final_x);
+    assert_eq!(
+        r1.records.last().unwrap().coords_up,
+        r2.records.last().unwrap().coords_up
+    );
+}

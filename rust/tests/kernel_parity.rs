@@ -1,0 +1,237 @@
+//! Property tests: the blocked linalg kernels must agree with scalar
+//! reference loops to 1e-12 across random shapes, and the dense and
+//! low-rank PSD-root representations must agree on random sparse inputs
+//! (the server decompression path).
+
+#![allow(clippy::needless_range_loop)]
+
+use smx::linalg::dense::Mat;
+use smx::linalg::sparse::Csr;
+use smx::linalg::vector;
+use smx::linalg::PsdRoot;
+use smx::util::prop::{forall, PropConfig};
+
+// scalar references (the pre-optimization kernels)
+
+fn ref_dot(a: &[f64], b: &[f64]) -> f64 {
+    (0..a.len()).map(|i| a[i] * b[i]).sum()
+}
+
+fn ref_axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    for i in 0..x.len() {
+        y[i] += alpha * x[i];
+    }
+}
+
+fn ref_matvec(m: &Mat, x: &[f64]) -> Vec<f64> {
+    (0..m.rows)
+        .map(|r| (0..m.cols).map(|c| m[(r, c)] * x[c]).sum())
+        .collect()
+}
+
+fn ref_csr_matvec(a: &Csr, x: &[f64]) -> Vec<f64> {
+    (0..a.rows)
+        .map(|r| {
+            let (idx, val) = a.row_entries(r);
+            (0..idx.len()).map(|k| val[k] * x[idx[k] as usize]).sum()
+        })
+        .collect()
+}
+
+fn ref_csr_tmatvec(a: &Csr, y: &[f64]) -> Vec<f64> {
+    let mut out = vec![0.0; a.cols];
+    for r in 0..a.rows {
+        let (idx, val) = a.row_entries(r);
+        for k in 0..idx.len() {
+            out[idx[k] as usize] += y[r] * val[k];
+        }
+    }
+    out
+}
+
+fn close(a: f64, b: f64, scale: f64) -> bool {
+    (a - b).abs() <= 1e-12 * scale.max(1.0)
+}
+
+#[test]
+fn prop_blocked_vector_kernels_match_references() {
+    forall(
+        PropConfig {
+            cases: 64,
+            base_seed: 0xD07,
+        },
+        "dot/axpy/dist2 parity",
+        |rng| {
+            let n = rng.below(257);
+            let a: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let scale = ref_dot(&a, &a).abs() + ref_dot(&b, &b).abs();
+
+            if !close(vector::dot(&a, &b), ref_dot(&a, &b), scale) {
+                return Err(format!("dot mismatch at n={n}"));
+            }
+
+            let alpha = rng.normal();
+            let mut y1 = b.clone();
+            let mut y2 = b.clone();
+            vector::axpy(alpha, &a, &mut y1);
+            ref_axpy(alpha, &a, &mut y2);
+            if y1 != y2 {
+                return Err(format!("axpy not bitwise identical at n={n}"));
+            }
+
+            let d2 = vector::dist2(&a, &b);
+            let d2_ref: f64 = (0..n).map(|i| (a[i] - b[i]) * (a[i] - b[i])).sum();
+            if !close(d2, d2_ref, scale) {
+                return Err(format!("dist2 mismatch at n={n}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_blocked_dense_kernels_match_references() {
+    forall(
+        PropConfig {
+            cases: 48,
+            base_seed: 0xDE45,
+        },
+        "dense matvec/matmul/gram parity",
+        |rng| {
+            let rows = 1 + rng.below(24);
+            let cols = 1 + rng.below(24);
+            let m = Mat::from_rows(
+                (0..rows)
+                    .map(|_| (0..cols).map(|_| rng.normal()).collect())
+                    .collect(),
+            );
+            let x: Vec<f64> = (0..cols).map(|_| rng.normal()).collect();
+
+            let fast = m.matvec(&x);
+            let slow = ref_matvec(&m, &x);
+            for r in 0..rows {
+                if !close(fast[r], slow[r], slow[r].abs() + 1.0) {
+                    return Err(format!("matvec {rows}x{cols} row {r}"));
+                }
+            }
+
+            let b = Mat::from_rows(
+                (0..cols)
+                    .map(|_| (0..rows).map(|_| rng.normal()).collect())
+                    .collect(),
+            );
+            let prod = m.matmul(&b);
+            for i in 0..rows {
+                for j in 0..rows {
+                    let s: f64 = (0..cols).map(|k| m[(i, k)] * b[(k, j)]).sum();
+                    if !close(prod[(i, j)], s, s.abs() + 1.0) {
+                        return Err(format!("matmul {rows}x{cols} at ({i},{j})"));
+                    }
+                }
+            }
+
+            let g = m.gram();
+            for i in 0..cols {
+                for j in 0..cols {
+                    let s: f64 = (0..rows).map(|r| m[(r, i)] * m[(r, j)]).sum();
+                    if !close(g[(i, j)], s, s.abs() + 1.0) {
+                        return Err(format!("gram {rows}x{cols} at ({i},{j})"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_blocked_csr_kernels_match_references() {
+    forall(
+        PropConfig {
+            cases: 48,
+            base_seed: 0xC52,
+        },
+        "CSR matvec/tmatvec parity",
+        |rng| {
+            let rows = 1 + rng.below(30);
+            let cols = 1 + rng.below(30);
+            let density = 0.05 + rng.uniform() * 0.6;
+            let mut t = Vec::new();
+            for r in 0..rows {
+                for c in 0..cols {
+                    if rng.uniform() < density {
+                        t.push((r, c, rng.normal()));
+                    }
+                }
+            }
+            let a = Csr::from_triplets(rows, cols, t);
+            let x: Vec<f64> = (0..cols).map(|_| rng.normal()).collect();
+            let y: Vec<f64> = (0..rows).map(|_| rng.normal()).collect();
+
+            let mv = a.matvec(&x);
+            let mv_ref = ref_csr_matvec(&a, &x);
+            for r in 0..rows {
+                if !close(mv[r], mv_ref[r], mv_ref[r].abs() + 1.0) {
+                    return Err(format!("csr matvec {rows}x{cols} row {r} (nnz={})", a.nnz()));
+                }
+            }
+            if a.tmatvec(&y) != ref_csr_tmatvec(&a, &y) {
+                return Err(format!("csr tmatvec {rows}x{cols} not bitwise identical"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_dense_and_lowrank_roots_agree_on_sparse_inputs() {
+    forall(
+        PropConfig {
+            cases: 32,
+            base_seed: 0x10A7,
+        },
+        "dense vs low-rank apply_pow_sparse_into",
+        |rng| {
+            // L = c·AᵀA + μI with m < d, both representations
+            let m = 2 + rng.below(5);
+            let d = m + 1 + rng.below(10);
+            let a = Mat::from_rows(
+                (0..m)
+                    .map(|_| (0..d).map(|_| rng.normal()).collect())
+                    .collect(),
+            );
+            let c = 0.1 + rng.uniform();
+            let mu = 1e-4 + rng.uniform() * 1e-2;
+            let mut l = a.gram();
+            l.scale(c);
+            l.add_diag(mu);
+            let dense = PsdRoot::from_dense(&l);
+            let lowrank = PsdRoot::from_lowrank_ridge(&a, &a.gram_t(), c, mu);
+
+            // random sparse input
+            let nnz = 1 + rng.below(d);
+            let mut picked: Vec<usize> = rng.sample_indices(d, nnz);
+            picked.sort_unstable();
+            let idx: Vec<u32> = picked.iter().map(|&i| i as u32).collect();
+            let val: Vec<f64> = (0..nnz).map(|_| rng.normal()).collect();
+
+            let mut out_d = vec![0.0; d];
+            let mut out_l = vec![0.0; d];
+            for p in [0.5, -0.5] {
+                dense.apply_pow_sparse_into(p, &idx, &val, &mut out_d);
+                lowrank.apply_pow_sparse_into(p, &idx, &val, &mut out_l);
+                let scale: f64 = out_d.iter().map(|v| v.abs()).fold(0.0, f64::max);
+                for j in 0..d {
+                    if (out_d[j] - out_l[j]).abs() > 1e-8 * scale.max(1.0) {
+                        return Err(format!(
+                            "p={p} d={d} m={m} coord {j}: dense {} vs low-rank {}",
+                            out_d[j], out_l[j]
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}

@@ -3,7 +3,10 @@
 //! distributed run must produce identical trajectories under either
 //! engine.
 //!
-//! Requires `make artifacts` (the Makefile test target guarantees it).
+//! Requires `make artifacts` (the Makefile test target guarantees it) and
+//! a build with the `pjrt` feature; without it this file compiles empty.
+
+#![cfg(feature = "pjrt")]
 
 use smx::data::synth;
 use smx::objective::logreg::LogReg;

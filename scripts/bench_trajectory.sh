@@ -1,0 +1,24 @@
+#!/usr/bin/env bash
+# Run the hot-path micro-bench suite and capture the perf trajectory.
+#
+# `benches/hotpath.rs` writes BENCH_hotpath.json (median/min/p95 ns per
+# row) into the repo root; this wrapper builds in release, runs it, and
+# keeps a timestamped copy under benchmarks/ so successive PRs can diff:
+#
+#   ./scripts/bench_trajectory.sh
+#   python3 -m json.tool BENCH_hotpath.json | less
+#
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+cargo bench --bench hotpath "$@"
+
+if [[ -f BENCH_hotpath.json ]]; then
+    mkdir -p benchmarks
+    stamp=$(date -u +%Y%m%dT%H%M%SZ)
+    cp BENCH_hotpath.json "benchmarks/hotpath_${stamp}.json"
+    echo "saved benchmarks/hotpath_${stamp}.json"
+else
+    echo "error: bench did not produce BENCH_hotpath.json" >&2
+    exit 1
+fi

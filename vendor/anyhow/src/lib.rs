@@ -1,0 +1,236 @@
+//! Minimal offline drop-in for the `anyhow` crate.
+//!
+//! The build image has no crates.io access, so this vendored shim provides
+//! the subset of the real `anyhow` API the workspace uses:
+//!
+//! * [`Error`] — an opaque error carrying a message + context chain;
+//! * [`Result`] — `Result<T, Error>` alias with a default error type;
+//! * [`anyhow!`] / [`bail!`] — format-style construction / early return;
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`, mirroring the upstream trait (including the upstream's
+//!   private-`StdError` coherence trick so `Result<T, Error>` gets context
+//!   too).
+//!
+//! Display follows upstream semantics: `{}` prints the outermost message,
+//! `{:#}` prints the whole chain joined by `: `, and `Debug` prints the
+//! chain with a `Caused by:` list (what `.unwrap()` shows in tests).
+
+use std::fmt::{self, Display};
+
+/// Opaque error: outermost message first, then the cause chain.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from any displayable message.
+    pub fn msg<M: Display>(m: M) -> Error {
+        Error {
+            chain: vec![m.to_string()],
+        }
+    }
+
+    fn wrap(mut self, ctx: String) -> Error {
+        self.chain.insert(0, ctx);
+        self
+    }
+
+    /// The cause chain, outermost context first (upstream: `chain()`).
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// Outermost message (upstream: `root_cause`/`to_string` analogues).
+    pub fn to_string_full(&self) -> String {
+        self.chain.join(": ")
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(&self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for (i, c) in self.chain[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// NOTE: `Error` deliberately does NOT implement `std::error::Error`; that
+// is what makes the blanket `From` below and the `ext::StdError` impls
+// coherent (same trick as upstream anyhow).
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `anyhow!("...")` — format-style error construction.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+/// `bail!("...")` — return early with a formatted error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::core::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// `ensure!(cond, "...")` — bail unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+mod ext {
+    use super::Error;
+
+    /// Private conversion trait: implemented for all std errors AND for
+    /// [`Error`] itself, so `.context(..)` works on both kinds of Result.
+    pub trait StdError {
+        fn ext_context(self, ctx: String) -> Error;
+    }
+
+    impl<E: std::error::Error + Send + Sync + 'static> StdError for E {
+        fn ext_context(self, ctx: String) -> Error {
+            Error::from(self).wrap(ctx)
+        }
+    }
+
+    impl StdError for Error {
+        fn ext_context(self, ctx: String) -> Error {
+            self.wrap(ctx)
+        }
+    }
+}
+
+/// `.context(..)` / `.with_context(..)` on `Result` and `Option`.
+pub trait Context<T, E>: Sized {
+    fn context<C: Display + Send + Sync + 'static>(self, ctx: C) -> Result<T, Error>;
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: ext::StdError + Send + Sync + 'static> Context<T, E> for Result<T, E> {
+    fn context<C: Display + Send + Sync + 'static>(self, ctx: C) -> Result<T, Error> {
+        match self {
+            Ok(v) => Ok(v),
+            Err(e) => Err(e.ext_context(ctx.to_string())),
+        }
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        match self {
+            Ok(v) => Ok(v),
+            Err(e) => Err(e.ext_context(f().to_string())),
+        }
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: Display + Send + Sync + 'static>(self, ctx: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing")
+    }
+
+    #[test]
+    fn construction_and_display() {
+        let e = anyhow!("boom {}", 7);
+        assert_eq!(format!("{e}"), "boom 7");
+    }
+
+    #[test]
+    fn context_chains() {
+        let r: Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("reading config").unwrap_err();
+        assert_eq!(format!("{e}"), "reading config");
+        assert_eq!(format!("{e:#}"), "reading config: missing");
+        let e2: Result<(), Error> = Err(e);
+        let e2 = e2.with_context(|| format!("loading {}", "x")).unwrap_err();
+        assert_eq!(format!("{e2:#}"), "loading x: reading config: missing");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("no value").unwrap_err();
+        assert_eq!(format!("{e}"), "no value");
+        assert_eq!(Some(3).context("ok").unwrap(), 3);
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x >= 0, "negative: {x}");
+            if x > 10 {
+                bail!("too big");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert!(f(-1).is_err());
+        assert!(f(11).is_err());
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert_eq!(format!("{}", f().unwrap_err()), "missing");
+    }
+}
