@@ -5,7 +5,9 @@
 //!   worker:  grad (native CSR)  |  grad (PJRT artifact)  |  whiten L^{†1/2}v
 //!   server:  sparse decompress L^{1/2}Δ  |  full server apply
 //!   sampling: Bernoulli draw + water-filling solve
-//!   rounds:  dcgd+/diana+ end-to-end, buffer-reusing vs pre-opt allocating
+//!   wire:    codec encode/decode (f64/f32/q8 payloads, delta-varint idx)
+//!   rounds:  dcgd+/diana+ end-to-end, buffer-reusing vs pre-opt
+//!            allocating, and distributed(loopback) across worker threads
 //!
 //!     cargo bench --bench hotpath
 //!
@@ -15,10 +17,10 @@
 
 #![allow(clippy::needless_range_loop)]
 
-use smx::compress::{MatrixAware, SparseMsg};
+use smx::compress::{topk_compress, MatrixAware, SparseMsg};
 use smx::data::synth;
 use smx::linalg::sparse::Csr;
-use smx::methods::{build, sync_round, MethodSpec, RoundBuffers, Uplink};
+use smx::methods::{build, sync_round, Method, MethodSpec, RoundBuffers, Uplink};
 use smx::objective::smoothness::build_local;
 use smx::objective::Smoothness;
 use smx::runtime::artifact::Manifest;
@@ -29,6 +31,9 @@ use smx::sampling::{solvers, IndependentSampling, SamplingKind};
 use smx::util::bench::{bench, black_box, BenchResult};
 use smx::util::json::Json;
 use smx::util::rng::Rng;
+use smx::wire::codec as wcodec;
+use smx::wire::runtime::{server_round, worker_loop, HostedShards, ServerRoundState, WorkerHost};
+use smx::wire::{loopback_pair, Payload};
 
 // ---- pre-opt reference kernels (scalar loops, what the blocked versions
 // replaced; kept here so before/after stays measurable) -----------------
@@ -193,6 +198,45 @@ fn main() -> anyhow::Result<()> {
             .apply_pow_into_with(-0.5, black_box(&dx), &mut dw, &mut coeff);
     }));
 
+    // wire codec: top-k uplink on the duke shape (d=7129 — where the
+    // delta-varint index coding beats the modeled ⌈log₂ d⌉ account)
+    {
+        let mut up = Uplink::default();
+        topk_compress(&dx, 128, &mut up.delta);
+        let mut enc = Vec::new();
+        for p in [Payload::F64, Payload::F32, Payload::Q8] {
+            rows.push(bench(
+                &format!("codec encode uplink top-128 d=7129 ({})", p.name()),
+                300,
+                || {
+                    enc.clear();
+                    wcodec::put_uplink(&mut enc, black_box(&up), 0, p);
+                    black_box(enc.len());
+                },
+            ));
+        }
+        enc.clear();
+        wcodec::put_uplink(&mut enc, &up, 0, Payload::F64);
+        let mut dec = Uplink::default();
+        rows.push(bench("codec decode uplink top-128 d=7129 (f64)", 300, || {
+            black_box(wcodec::get_uplink(black_box(&enc), 7129, &mut dec).unwrap());
+        }));
+
+        let down = smx::methods::Downlink::Dense {
+            x: x.clone(),
+            w: None,
+        };
+        let mut dbuf = Vec::new();
+        rows.push(bench("codec encode dense downlink d=123 (f64)", 300, || {
+            dbuf.clear();
+            wcodec::put_downlink(&mut dbuf, black_box(&down), Payload::F64);
+        }));
+        let mut ddec = smx::methods::Downlink::Init { x: Vec::new() };
+        rows.push(bench("codec decode dense downlink d=123 (f64)", 300, || {
+            wcodec::get_downlink(black_box(&dbuf), 123, &mut ddec).unwrap();
+        }));
+    }
+
     // sampling machinery
     let mut buf = Vec::new();
     rows.push(bench("bernoulli sample d=123 tau=4", 100, || {
@@ -254,6 +298,75 @@ fn main() -> anyhow::Result<()> {
                 method2.server.apply(&ups, &mut server_rng2);
             },
         ));
+    }
+
+    // distributed round over loopback transports: the same diana+ round,
+    // but messages travel the wire codec between the server and 2 worker
+    // threads (4 shards each)
+    {
+        let mspec = MethodSpec::new("diana+", 4.0, SamplingKind::Uniform, 1e-3, vec![0.0; sm.dim]);
+        let method = build(&mspec, &sm)?;
+        let Method {
+            mut server,
+            workers,
+            name: _,
+        } = method;
+        let n = workers.len();
+        let procs = 2usize.min(n);
+        let base = Rng::new(1);
+        let mut server_rng = base.derive(u64::MAX);
+        let mut groups: Vec<HostedShards> = (0..procs).map(|_| Vec::new()).collect();
+        for (i, w) in workers.into_iter().enumerate() {
+            groups[i % procs].push((i, w));
+        }
+        let mut hosts: Vec<WorkerHost> = Vec::with_capacity(procs);
+        let mut ends = Vec::with_capacity(procs);
+        for g in &groups {
+            let (a, b) = loopback_pair();
+            hosts.push(WorkerHost {
+                transport: Box::new(a),
+                shards: g.iter().map(|(i, _)| *i).collect(),
+            });
+            ends.push(b);
+        }
+        let shards_ref = &shards;
+        std::thread::scope(|scope| {
+            for (mut end, mut group) in ends.into_iter().zip(groups.into_iter()) {
+                let base = base.clone();
+                scope.spawn(move || {
+                    let mut engines: Vec<Box<dyn GradEngine>> = group
+                        .iter()
+                        .map(|(i, _)| {
+                            Box::new(NativeEngine::from_shard(&shards_ref[*i], 1e-3))
+                                as Box<dyn GradEngine>
+                        })
+                        .collect();
+                    let mut rngs: Vec<Rng> =
+                        group.iter().map(|(i, _)| base.derive(*i as u64)).collect();
+                    let _ =
+                        worker_loop(&mut group, &mut engines, &mut rngs, &mut end, Payload::F64);
+                });
+            }
+            let mut st = ServerRoundState::new(n);
+            rows.push(bench(
+                "round e2e diana+ distributed(loopback, 2 procs)",
+                400,
+                || {
+                    server_round(
+                        server.as_mut(),
+                        &mut hosts,
+                        &mut st,
+                        &mut server_rng,
+                        Payload::F64,
+                        64,
+                    )
+                    .unwrap();
+                },
+            ));
+            for h in hosts.iter_mut() {
+                let _ = h.transport.send(&[wcodec::TAG_STOP]);
+            }
+        });
     }
 
     // perf trajectory artifact

@@ -73,7 +73,14 @@ pub fn index_bits(dim: usize) -> u32 {
     }
 }
 
-/// Running totals for an experiment (per worker or aggregated).
+/// Running totals for an experiment — a standalone aggregator the *caller*
+/// feeds (the coordinator drivers keep their own internal accounting and
+/// surface it via [`RoundRecord`](crate::coordinator::RoundRecord)).
+///
+/// `bits_up` is the *modeled* account (`coords · (float_bits + ⌈log₂ d⌉)`);
+/// `bytes_up`/`bytes_down` are *measured* encoded frame sizes — pass what
+/// [`crate::wire::codec::uplink_frame_len`] (or a real encode) reports via
+/// the `*_measured` recorders; they stay 0 otherwise.
 #[derive(Clone, Debug, Default)]
 pub struct CommStats {
     pub coords_up: u64,
@@ -81,6 +88,10 @@ pub struct CommStats {
     pub msgs_up: u64,
     /// dense broadcast volume (server→workers), coords
     pub coords_down: u64,
+    /// measured encoded bytes worker→server
+    pub bytes_up: u64,
+    /// measured encoded bytes server→workers
+    pub bytes_down: u64,
 }
 
 impl CommStats {
@@ -90,8 +101,27 @@ impl CommStats {
         self.msgs_up += 1;
     }
 
+    /// [`CommStats::record_up`] plus the measured encoded size of the frame
+    /// that carried the message.
+    pub fn record_up_measured(
+        &mut self,
+        msg: &SparseMsg,
+        dim: usize,
+        float_bits: u32,
+        encoded_bytes: u64,
+    ) {
+        self.record_up(msg, dim, float_bits);
+        self.bytes_up += encoded_bytes;
+    }
+
     pub fn record_down(&mut self, dim: usize) {
         self.coords_down += dim as u64;
+    }
+
+    /// [`CommStats::record_down`] plus the measured encoded frame size.
+    pub fn record_down_measured(&mut self, dim: usize, encoded_bytes: u64) {
+        self.record_down(dim);
+        self.bytes_down += encoded_bytes;
     }
 
     pub fn merge(&mut self, other: &CommStats) {
@@ -99,6 +129,8 @@ impl CommStats {
         self.bits_up += other.bits_up;
         self.msgs_up += other.msgs_up;
         self.coords_down += other.coords_down;
+        self.bytes_up += other.bytes_up;
+        self.bytes_down += other.bytes_down;
     }
 }
 
@@ -150,6 +182,23 @@ mod tests {
         t.merge(&s);
         t.merge(&s);
         assert_eq!(t.coords_up, 4);
+    }
+
+    #[test]
+    fn measured_bytes_accumulate_and_merge() {
+        let mut s = CommStats::default();
+        let mut m = SparseMsg::new();
+        m.push(2, 1.0);
+        s.record_up_measured(&m, 16, 64, 19);
+        s.record_down_measured(16, 140);
+        assert_eq!(s.bytes_up, 19);
+        assert_eq!(s.bytes_down, 140);
+        assert_eq!(s.coords_up, 1);
+        assert_eq!(s.coords_down, 16);
+        let mut t = CommStats::default();
+        t.merge(&s);
+        t.merge(&s);
+        assert_eq!((t.bytes_up, t.bytes_down), (38, 280));
     }
 
     #[test]

@@ -14,18 +14,107 @@
 //!   "max_rounds": 20000,
 //!   "target_residual": 1e-12,
 //!   "seed": 42,
-//!   "engine": "native"
+//!   "engine": "native",
+//!   "wire": {
+//!     "payload": "f32",
+//!     "listen": "127.0.0.1:4950",
+//!     "workers": 2,
+//!     "float_bits": 32
+//!   }
 //! }
 //! ```
 //!
 //! `workers: 0` means "use the dataset's Table-3 default".
+//!
+//! The `wire` section configures the [`crate::wire`] subsystem:
+//! `payload` is the value encoding (`f64`/`f32`/`q16`/`q8`/`q4`),
+//! `listen` the `smx serve` address, `workers` the number of worker
+//! *processes* a serve run waits for (0 ⇒ one per shard), and
+//! `float_bits` optionally overrides the modeled bit account (it defaults
+//! to the payload's width, so `"payload": "f32"` reproduces Appendix
+//! C.5's 32-bit accounting with no further flags).
 
 use crate::data::{spec_by_name, synth};
 use crate::runtime::EngineKind;
 use crate::sampling::SamplingKind;
 use crate::util::cli::Args;
 use crate::util::json::Json;
+use crate::wire::Payload;
 use anyhow::{bail, Context, Result};
+
+/// Wire-subsystem settings (`"wire": {…}` in configs).
+#[derive(Clone, Debug)]
+pub struct WireConfig {
+    /// value payload for every encoded message
+    pub payload: Payload,
+    /// `smx serve` listen address
+    pub listen: String,
+    /// worker processes a serve run expects; 0 ⇒ one per shard
+    pub workers: usize,
+    /// override the modeled bit account's float width (None ⇒ payload width)
+    pub float_bits: Option<u32>,
+}
+
+impl Default for WireConfig {
+    fn default() -> Self {
+        WireConfig {
+            payload: Payload::F64,
+            listen: "127.0.0.1:4950".to_string(),
+            workers: 0,
+            float_bits: None,
+        }
+    }
+}
+
+impl WireConfig {
+    /// Float width for the modeled bit account: explicit override or the
+    /// payload's width (f64→64, f32→32, qb→b).
+    pub fn effective_float_bits(&self) -> u32 {
+        self.float_bits.unwrap_or(self.payload.bits())
+    }
+
+    /// Worker processes for an n-shard serve run.
+    pub fn effective_procs(&self, n_shards: usize) -> usize {
+        if self.workers == 0 {
+            n_shards
+        } else {
+            self.workers.min(n_shards)
+        }
+    }
+
+    fn from_json(j: &Json) -> Result<WireConfig> {
+        let mut w = WireConfig::default();
+        let obj = j.as_obj().context("wire section must be a JSON object")?;
+        for (k, v) in obj {
+            match k.as_str() {
+                "payload" => {
+                    let s = v.as_str().context("wire.payload")?;
+                    w.payload = Payload::parse(s)
+                        .with_context(|| format!("bad wire payload '{s}'"))?;
+                }
+                "listen" => w.listen = v.as_str().context("wire.listen")?.to_string(),
+                "workers" => w.workers = v.as_usize().context("wire.workers")?,
+                "float_bits" => {
+                    w.float_bits = Some(v.as_usize().context("wire.float_bits")? as u32)
+                }
+                other => bail!("unknown wire config key '{other}'"),
+            }
+        }
+        Ok(w)
+    }
+
+    fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("payload", Json::Str(self.payload.name().to_string())),
+            ("listen", Json::Str(self.listen.clone())),
+            ("workers", Json::Num(self.workers as f64)),
+        ];
+        if let Some(b) = self.float_bits {
+            fields.push(("float_bits", Json::Num(b as f64)));
+        }
+        Json::obj(fields)
+    }
+}
 
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
@@ -50,6 +139,8 @@ pub struct ExperimentConfig {
     /// Output is bitwise identical for every value (deterministic per-cell
     /// seeds; see `experiments::pool`).
     pub jobs: usize,
+    /// wire subsystem: payload encoding, serve address, process count
+    pub wire: WireConfig,
 }
 
 impl Default for ExperimentConfig {
@@ -71,6 +162,7 @@ impl Default for ExperimentConfig {
             start_near_opt: false,
             practical_adiana: true,
             jobs: 0,
+            wire: WireConfig::default(),
         }
     }
 }
@@ -133,6 +225,7 @@ impl ExperimentConfig {
                     c.practical_adiana = v.as_bool().context("practical_adiana")?
                 }
                 "jobs" => c.jobs = v.as_usize().context("jobs")?,
+                "wire" => c.wire = WireConfig::from_json(v).context("wire")?,
                 other => bail!("unknown config key '{other}'"),
             }
         }
@@ -194,6 +287,22 @@ impl ExperimentConfig {
         if args.has("jobs") {
             self.jobs = args.usize_or("jobs", self.jobs);
         }
+        if let Some(s) = args.get("payload") {
+            self.wire.payload =
+                Payload::parse(s).with_context(|| format!("bad wire payload '{s}'"))?;
+        }
+        if let Some(s) = args.get("listen") {
+            self.wire.listen = s.to_string();
+        }
+        if args.has("wire-workers") {
+            self.wire.workers = args.usize_or("wire-workers", self.wire.workers);
+        }
+        if args.has("float-bits") {
+            self.wire.float_bits = Some(args.usize_or(
+                "float-bits",
+                self.wire.effective_float_bits() as usize,
+            ) as u32);
+        }
         self.validate()
     }
 
@@ -206,6 +315,11 @@ impl ExperimentConfig {
         }
         if self.methods.is_empty() {
             bail!("at least one method required");
+        }
+        if let Some(b) = self.wire.float_bits {
+            if b == 0 || b > 64 {
+                bail!("wire.float_bits must be in 1..=64 (got {b})");
+            }
         }
         for m in &self.methods {
             if !crate::methods::METHOD_NAMES.contains(&m.as_str()) {
@@ -237,6 +351,7 @@ impl ExperimentConfig {
             ("start_near_opt", Json::Bool(self.start_near_opt)),
             ("practical_adiana", Json::Bool(self.practical_adiana)),
             ("jobs", Json::Num(self.jobs as f64)),
+            ("wire", self.wire.to_json()),
         ])
     }
 }
@@ -252,12 +367,63 @@ mod tests {
 
     #[test]
     fn json_roundtrip() {
-        let c = ExperimentConfig::default();
+        let c = ExperimentConfig {
+            wire: WireConfig {
+                payload: Payload::Q16,
+                workers: 3,
+                float_bits: Some(32),
+                ..Default::default()
+            },
+            ..Default::default()
+        };
         let j = c.to_json();
         let c2 = ExperimentConfig::from_json(&j).unwrap();
         assert_eq!(c2.dataset, c.dataset);
         assert_eq!(c2.methods, c.methods);
         assert_eq!(c2.tau, c.tau);
+        assert_eq!(c2.wire.payload, Payload::Q16);
+        assert_eq!(c2.wire.workers, 3);
+        assert_eq!(c2.wire.float_bits, Some(32));
+    }
+
+    #[test]
+    fn wire_section_parses_and_overrides() {
+        let j = Json::parse(
+            r#"{"wire": {"payload": "q8", "listen": "0.0.0.0:9", "workers": 3}}"#,
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(c.wire.payload, Payload::Q8);
+        assert_eq!(c.wire.listen, "0.0.0.0:9");
+        assert_eq!(c.wire.effective_float_bits(), 8);
+        assert_eq!(c.wire.effective_procs(10), 3);
+        assert_eq!(c.wire.effective_procs(2), 2);
+        // defaults: f64 payload, one process per shard
+        let d = ExperimentConfig::default();
+        assert_eq!(d.wire.effective_float_bits(), 64);
+        assert_eq!(d.wire.effective_procs(7), 7);
+
+        let mut c2 = ExperimentConfig::default();
+        let args = Args::parse(
+            "--payload f32 --float-bits 64 --wire-workers 2 --listen 127.0.0.1:5000"
+                .split_whitespace()
+                .map(String::from),
+            false,
+        );
+        c2.apply_args(&args).unwrap();
+        assert_eq!(c2.wire.payload, Payload::F32);
+        assert_eq!(c2.wire.effective_float_bits(), 64); // override wins
+        assert_eq!(c2.wire.workers, 2);
+        assert_eq!(c2.wire.listen, "127.0.0.1:5000");
+
+        assert!(ExperimentConfig::from_json(
+            &Json::parse(r#"{"wire": {"payload": "f16"}}"#).unwrap()
+        )
+        .is_err());
+        assert!(ExperimentConfig::from_json(
+            &Json::parse(r#"{"wire": {"float_bits": 65}}"#).unwrap()
+        )
+        .is_err());
     }
 
     #[test]

@@ -10,10 +10,16 @@ pub struct RoundRecord {
     pub residual: f64,
     /// cumulative coordinates sent worker→server (all workers)
     pub coords_up: u64,
-    /// cumulative bits worker→server
+    /// cumulative bits worker→server under the *modeled* account
+    /// (`coords · (float_bits + ⌈log₂ d⌉)`)
     pub bits_up: u64,
     /// cumulative coordinates sent server→workers
     pub coords_down: u64,
+    /// cumulative *measured* bytes worker→server: exact encoded frame
+    /// sizes (length prefix included) under the run's wire payload
+    pub bytes_up: u64,
+    /// cumulative *measured* bytes server→workers
+    pub bytes_down: u64,
     pub wall_secs: f64,
 }
 
@@ -60,13 +66,15 @@ impl RunResult {
                     r.coords_up.to_string(),
                     r.bits_up.to_string(),
                     r.coords_down.to_string(),
+                    r.bytes_up.to_string(),
+                    r.bytes_down.to_string(),
                     format!("{:.6}", r.wall_secs),
                 ]
             })
             .collect()
     }
 
-    pub fn csv_header() -> [&'static str; 7] {
+    pub fn csv_header() -> [&'static str; 9] {
         [
             "method",
             "round",
@@ -74,6 +82,8 @@ impl RunResult {
             "coords_up",
             "bits_up",
             "coords_down",
+            "bytes_up",
+            "bytes_down",
             "wall_secs",
         ]
     }
@@ -95,6 +105,8 @@ mod tests {
                     coords_up: (i * 10) as u64,
                     bits_up: (i * 640) as u64,
                     coords_down: (i * 100) as u64,
+                    bytes_up: (i * 90) as u64,
+                    bytes_down: (i * 800) as u64,
                     wall_secs: i as f64 * 0.1,
                 })
                 .collect(),

@@ -16,6 +16,14 @@
 //! Both drivers seed workers identically, so given the same method +
 //! engines they produce *bitwise identical* trajectories — an invariant
 //! checked in the tests below.
+//!
+//! A third driver, [`run_distributed`](crate::wire::run_distributed),
+//! moves the same protocol across process boundaries through the
+//! [`wire`](crate::wire) codec + transports; under the lossless `f64`
+//! payload it is bitwise identical to [`run_sim`] too. Both in-process
+//! drivers additionally record *measured* `bytes_up`/`bytes_down` — the
+//! exact encoded frame sizes the wire codec would produce under
+//! [`RunConfig::payload`] — next to the modeled `bits_up` account.
 
 pub mod metrics;
 
@@ -26,6 +34,7 @@ use crate::methods::{Downlink, Method, RoundBuffers, Uplink};
 use crate::runtime::GradEngine;
 use crate::util::rng::Rng;
 use crate::util::timer::PhaseTimer;
+use crate::wire::codec::{self, Payload};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::Instant;
@@ -40,8 +49,13 @@ pub struct RunConfig {
     /// are always kept)
     pub record_every: usize,
     pub seed: u64,
-    /// float width used for bit accounting (64 for the f64 pipeline)
+    /// float width used for the *modeled* bit accounting (derived from
+    /// the wire payload by the runner; Appendix C.5 uses 32)
     pub float_bits: u32,
+    /// wire value payload: what `run_distributed` actually encodes, and
+    /// what the in-process drivers' measured `bytes_up`/`bytes_down`
+    /// accounting assumes
+    pub payload: Payload,
 }
 
 impl Default for RunConfig {
@@ -52,6 +66,7 @@ impl Default for RunConfig {
             record_every: 1,
             seed: 0xC0FFEE,
             float_bits: 64,
+            payload: Payload::F64,
         }
     }
 }
@@ -72,13 +87,31 @@ struct Accounting {
     coords_up: u64,
     bits_up: u64,
     coords_down: u64,
+    /// measured: exact encoded frame bytes under the configured payload
+    bytes_up: u64,
+    bytes_down: u64,
+}
+
+impl Accounting {
+    fn zero() -> Accounting {
+        Accounting {
+            coords_up: 0,
+            bits_up: 0,
+            coords_down: 0,
+            bytes_up: 0,
+            bytes_down: 0,
+        }
+    }
 }
 
 fn residual(x: &[f64], x_star: &[f64], denom: f64) -> f64 {
     vector::dist2(x, x_star) / denom
 }
 
-fn bits_of(up: &Uplink, dim: usize, float_bits: u32) -> u64 {
+/// Modeled bit account of one uplink (`delta` plus ADIANA's optional
+/// `delta2`) — shared with the distributed driver so the two accounts
+/// cannot drift.
+pub(crate) fn bits_of(up: &Uplink, dim: usize, float_bits: u32) -> u64 {
     let mut b = up.delta.bits(dim, float_bits);
     if let Some(d2) = &up.delta2 {
         b += d2.bits(dim, float_bits);
@@ -107,11 +140,7 @@ pub fn run_sim(
     let mut worker_rngs: Vec<Rng> = (0..n).map(|i| base.derive(i as u64)).collect();
 
     let denom = vector::dist2(method.server.iterate(), x_star).max(1e-300);
-    let mut acc = Accounting {
-        coords_up: 0,
-        bits_up: 0,
-        coords_down: 0,
-    };
+    let mut acc = Accounting::zero();
     let mut phases = PhaseTimer::new();
     let mut records = Vec::with_capacity(cfg.max_rounds / record_every + 3);
     records.push(RoundRecord {
@@ -120,6 +149,8 @@ pub fn run_sim(
         coords_up: 0,
         bits_up: 0,
         coords_down: 0,
+        bytes_up: 0,
+        bytes_down: 0,
         wall_secs: 0.0,
     });
     let t0 = Instant::now();
@@ -132,6 +163,7 @@ pub fn run_sim(
         let RoundBuffers { down, ups } = &mut bufs;
         phases.time("server_downlink", || method.server.downlink_into(&mut *down));
         acc.coords_down += (down.coords() * n) as u64;
+        acc.bytes_down += (codec::downlink_frame_len(&*down, cfg.payload) * n) as u64;
 
         for i in 0..n {
             let up = &mut ups[i];
@@ -145,6 +177,7 @@ pub fn run_sim(
             });
             acc.coords_up += up.coords() as u64;
             acc.bits_up += bits_of(up, dim, cfg.float_bits);
+            acc.bytes_up += codec::uplink_frame_len(&*up, i, cfg.payload) as u64;
         }
 
         phases.time("server_apply", || {
@@ -160,6 +193,8 @@ pub fn run_sim(
                 coords_up: acc.coords_up,
                 bits_up: acc.bits_up,
                 coords_down: acc.coords_down,
+                bytes_up: acc.bytes_up,
+                bytes_down: acc.bytes_down,
                 wall_secs: t0.elapsed().as_secs_f64(),
             });
         }
@@ -238,11 +273,7 @@ pub fn run_threaded(
     drop(up_tx);
 
     let denom = vector::dist2(method.server.iterate(), x_star).max(1e-300);
-    let mut acc = Accounting {
-        coords_up: 0,
-        bits_up: 0,
-        coords_down: 0,
-    };
+    let mut acc = Accounting::zero();
     let mut phases = PhaseTimer::new();
     let mut records = Vec::with_capacity(cfg.max_rounds / record_every + 3);
     records.push(RoundRecord {
@@ -251,6 +282,8 @@ pub fn run_threaded(
         coords_up: 0,
         bits_up: 0,
         coords_down: 0,
+        bytes_up: 0,
+        bytes_down: 0,
         wall_secs: 0.0,
     });
     let t0 = Instant::now();
@@ -277,6 +310,7 @@ pub fn run_threaded(
             }
         });
         acc.coords_down += (down.coords() * n) as u64;
+        acc.bytes_down += (codec::downlink_frame_len(&down, cfg.payload) * n) as u64;
         phases.time("scatter", || {
             for tx in &to_workers {
                 tx.send(ToWorker::Round(down.clone())).expect("worker died");
@@ -287,6 +321,7 @@ pub fn run_threaded(
                 let (i, up) = up_rx.recv().expect("worker channel closed");
                 acc.coords_up += up.coords() as u64;
                 acc.bits_up += bits_of(&up, dim, cfg.float_bits);
+                acc.bytes_up += codec::uplink_frame_len(&up, i, cfg.payload) as u64;
                 ups[i] = up;
             }
         });
@@ -307,6 +342,8 @@ pub fn run_threaded(
                 coords_up: acc.coords_up,
                 bits_up: acc.bits_up,
                 coords_down: acc.coords_down,
+                bytes_up: acc.bytes_up,
+                bytes_down: acc.bytes_down,
                 wall_secs: t0.elapsed().as_secs_f64(),
             });
         }

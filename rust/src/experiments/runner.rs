@@ -95,6 +95,23 @@ pub fn run_one(
     run_one_seeded(prep, cfg, method_name, sampling, tau, cfg.seed)
 }
 
+/// Translate an experiment config into a coordinator [`RunConfig`].
+///
+/// `float_bits` is *derived from the configured wire payload* (f64→64,
+/// f32→32, qb→b), with `wire.float_bits` / `--float-bits` as an explicit
+/// override — so Appendix C.5's 32-bit accounting is one config key away
+/// instead of a hardcoded 64.
+pub fn run_config(cfg: &ExperimentConfig) -> RunConfig {
+    RunConfig {
+        max_rounds: cfg.max_rounds,
+        target_residual: cfg.target_residual,
+        record_every: cfg.record_every,
+        seed: cfg.seed,
+        float_bits: cfg.wire.effective_float_bits(),
+        payload: cfg.wire.payload,
+    }
+}
+
 /// [`run_one`] with an explicit coordinator seed — for sweeps that want
 /// distinct streams per cell (e.g. seed-replicate grids via
 /// [`pool::cell_seed`](crate::experiments::pool::cell_seed)); the figure
@@ -111,11 +128,8 @@ pub fn run_one_seeded(
     spec.practical_adiana = cfg.practical_adiana;
     let mut method = build(&spec, &prep.sm)?;
     let run_cfg = RunConfig {
-        max_rounds: cfg.max_rounds,
-        target_residual: cfg.target_residual,
-        record_every: cfg.record_every,
         seed,
-        float_bits: 64,
+        ..run_config(cfg)
     };
     let result = match cfg.engine {
         EngineKind::Native => {
@@ -206,6 +220,8 @@ pub fn run_variants(
                 rec.coords_up.to_string(),
                 rec.bits_up.to_string(),
                 rec.coords_down.to_string(),
+                rec.bytes_up.to_string(),
+                rec.bytes_down.to_string(),
                 format!("{:.6}", rec.wall_secs),
             ]);
         }
@@ -220,6 +236,8 @@ pub fn run_variants(
             "coords_up",
             "bits_up",
             "coords_down",
+            "bytes_up",
+            "bytes_down",
             "wall_secs",
         ],
         &rows,
@@ -242,6 +260,21 @@ mod tests {
             out_dir: std::env::temp_dir().join("smx_runner_test"),
             ..Default::default()
         }
+    }
+
+    #[test]
+    fn float_bits_derived_from_wire_payload() {
+        use crate::wire::Payload;
+        let mut cfg = tiny_cfg();
+        assert_eq!(run_config(&cfg).float_bits, 64);
+        cfg.wire.payload = Payload::F32;
+        assert_eq!(run_config(&cfg).float_bits, 32);
+        assert_eq!(run_config(&cfg).payload, Payload::F32);
+        cfg.wire.payload = Payload::Q8;
+        assert_eq!(run_config(&cfg).float_bits, 8);
+        // explicit override wins over the payload width
+        cfg.wire.float_bits = Some(32);
+        assert_eq!(run_config(&cfg).float_bits, 32);
     }
 
     #[test]

@@ -38,3 +38,4 @@ pub mod objective;
 pub mod runtime;
 pub mod sampling;
 pub mod util;
+pub mod wire;

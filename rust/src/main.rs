@@ -7,10 +7,14 @@
 //!   tables   regenerate a paper table (--table 2|3|6)
 //!   solve    compute x* and problem constants for a dataset
 //!   info     print dataset/smoothness diagnostics
+//!   serve    distributed coordinator: accept worker processes over TCP
+//!   worker   join a serve run (--connect HOST:PORT)
 //!
 //! Common flags: --dataset --workers --tau --methods --sampling
 //! --max-rounds --target-residual --seed --engine native|pjrt
 //! --config file.json --out-dir results/ --data-dir data/
+//! Wire flags:  --payload f64|f32|q16|q8|q4 --listen HOST:PORT
+//! --wire-workers N --float-bits N
 
 #![allow(clippy::uninlined_format_args)]
 
@@ -20,15 +24,20 @@ use smx::experiments::{figures, runner, tables};
 use smx::sampling::SamplingKind;
 use smx::util::cli::Args;
 
-const USAGE: &str = "usage: smx <train|figures|tables|solve|info> [flags]
+const USAGE: &str = "usage: smx <train|figures|tables|solve|info|serve|worker> [flags]
   smx train   --dataset a1a --methods diana,diana+ --tau 1 --sampling uniform
   smx figures --figure 1 --datasets a1a,mushrooms
   smx tables  --table 2 --datasets a1a,mushrooms,phishing
   smx solve   --dataset mushrooms
   smx info    --dataset duke
+  smx serve   --dataset a1a --methods diana+ --listen 127.0.0.1:4950 \\
+              --wire-workers 2 --payload f32 [--check-sim]
+  smx worker  --connect 127.0.0.1:4950
 flags: --workers N --mu F --max-rounds N --target-residual F --seed N
        --engine native|pjrt --config FILE --out-dir DIR --data-dir DIR
-       --record-every N --start-near-opt --jobs N (0 = all cores)";
+       --record-every N --start-near-opt --jobs N (0 = all cores)
+wire:  --payload f64|f32|q16|q8|q4 --listen HOST:PORT --wire-workers N
+       (0 = one process per shard) --float-bits N (modeled-bit override)";
 
 fn main() {
     smx::util::log::init_from_env();
@@ -144,6 +153,16 @@ fn run() -> Result<()> {
                 prep.sm.n(),
                 prep.f_star
             );
+        }
+        "serve" => {
+            let cfg = config_from(&args)?;
+            smx::wire::serve(&cfg, args.bool_or("check-sim", false))?;
+        }
+        "worker" => {
+            let addr = args
+                .get("connect")
+                .ok_or_else(|| anyhow::anyhow!("smx worker requires --connect HOST:PORT"))?;
+            smx::wire::worker_connect(addr)?;
         }
         "info" => {
             let cfg = config_from(&args)?;

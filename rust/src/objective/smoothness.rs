@@ -70,11 +70,27 @@ pub fn build_local(a: &Csr, mu: f64) -> LocalSmoothness {
 }
 
 impl Smoothness {
+    /// Build all per-shard roots + the global λ_max(L).
+    ///
+    /// The per-shard eigendecompositions (one `build_local` each — the
+    /// dominant cost of sweep startup for n ≫ 8) run in parallel on the
+    /// [`pool`](crate::experiments::pool) executor. Each shard's build is
+    /// pure sequential arithmetic with no shared state, so the result is
+    /// *bitwise identical* to the sequential build for every thread count
+    /// (asserted in the tests below).
     pub fn build(shards: &[Shard], mu: f64) -> Smoothness {
+        Smoothness::build_with_threads(shards, mu, crate::experiments::pool::default_threads())
+    }
+
+    /// [`Smoothness::build`] with an explicit thread count (≤ 1 ⇒ the
+    /// sequential reference path).
+    pub fn build_with_threads(shards: &[Shard], mu: f64, threads: usize) -> Smoothness {
         assert!(!shards.is_empty());
         let dim = shards[0].dim();
         let locals: Vec<LocalSmoothness> =
-            shards.iter().map(|s| build_local(&s.a, mu)).collect();
+            crate::experiments::pool::run_cells(shards.len(), threads, |i| {
+                build_local(&shards[i].a, mu)
+            });
         let l_max = locals.iter().map(|l| l.l_i).fold(0.0, f64::max);
 
         // λ_max(L) with L = (1/(4nm)) AᵀA + μI applied implicitly over all
@@ -216,6 +232,43 @@ mod tests {
         let (_, shards) = ds.prepare(n, seed);
         let sm = Smoothness::build(&shards, 1e-3);
         (shards, sm)
+    }
+
+    #[test]
+    fn parallel_build_bitwise_identical_to_sequential() {
+        // §Perf: Smoothness::build parallelizes the per-shard
+        // eigendecompositions; every derived quantity must stay bit-for-bit.
+        let ds = synth::generate(&synth::tiny_spec(), 21);
+        let (_, shards) = ds.prepare(6, 21);
+        let seq = Smoothness::build_with_threads(&shards, 1e-3, 1);
+        let mut rng = Rng::new(99);
+        let probes: Vec<Vec<f64>> = (0..3)
+            .map(|_| (0..seq.dim).map(|_| rng.normal()).collect())
+            .collect();
+        for threads in [2, 4, 8] {
+            let par = Smoothness::build_with_threads(&shards, 1e-3, threads);
+            assert_eq!(par.l.to_bits(), seq.l.to_bits(), "L diverged");
+            assert_eq!(par.l_max.to_bits(), seq.l_max.to_bits(), "L_max diverged");
+            assert_eq!(par.locals.len(), seq.locals.len());
+            for (a, b) in par.locals.iter().zip(&seq.locals) {
+                assert_eq!(a.l_i.to_bits(), b.l_i.to_bits(), "l_i diverged");
+                assert_eq!(a.diag.len(), b.diag.len());
+                for (x, y) in a.diag.iter().zip(&b.diag) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "diag diverged");
+                }
+                // root operators agree on random probes, bit-for-bit
+                let mut oa = vec![0.0; seq.dim];
+                let mut ob = vec![0.0; seq.dim];
+                let mut coeff = Vec::new();
+                for p in &probes {
+                    a.root.apply_pow_into_with(0.5, p, &mut oa, &mut coeff);
+                    b.root.apply_pow_into_with(0.5, p, &mut ob, &mut coeff);
+                    for (x, y) in oa.iter().zip(&ob) {
+                        assert_eq!(x.to_bits(), y.to_bits(), "root apply diverged");
+                    }
+                }
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,1014 @@
+//! Framed binary codec for protocol messages.
+//!
+//! See the [module docs](crate::wire) for the format overview. Layout
+//! reference (all integers little-endian, varints are LEB128):
+//!
+//! ```text
+//! uplink frame body:    TAG_UPLINK  shard:varint  payload:u8  flags:u8
+//!                       sparse(delta)  [sparse(delta2) if flags&1]
+//! downlink frame body:  TAG_DOWNLINK  payload:u8  kind:u8  dense|sparse…
+//! sparse block:         count:varint  [mode:u8  indices…  values…]
+//!   mode 0 (sorted-gap) idx[0]:varint  (idx[k]−idx[k−1]):varint …
+//!   mode 1 (raw)        idx[k]:varint …
+//! dense block:          len:varint  values…
+//! values (k > 0):       f64: k×8 | f32: k×4
+//!                       qb:  scale:f64 then k scaled ints (q4 packs two
+//!                            values per byte, low nibble first)
+//! ```
+//!
+//! Lossy payload semantics are exact specifications, not approximations:
+//! `f32` stores `v as f32`; `qb` stores `round(v/scale · qmax)` clamped to
+//! `[−qmax, qmax]` with `scale = max |v|` over the block, decoding to
+//! `(q/qmax)·scale`. Tests assert both the exact spec and the implied
+//! error bound `|v̂ − v| ≤ scale/(2·qmax)`.
+
+use crate::compress::SparseMsg;
+use crate::methods::{Downlink, Uplink};
+use crate::sampling::SamplingKind;
+use crate::util::json::Json;
+use std::fmt;
+
+/// Bytes of the `u32` frame-length prefix, included in measured byte
+/// counts so `bytes_up`/`bytes_down` reflect what a TCP wire carries.
+pub const FRAME_PREFIX: usize = 4;
+
+/// Frames a worker process can receive/send. First byte of every body.
+pub const TAG_HELLO: u8 = 1;
+pub const TAG_HELLO_ACK: u8 = 2;
+pub const TAG_DOWNLINK: u8 = 3;
+pub const TAG_UPLINK: u8 = 4;
+pub const TAG_STOP: u8 = 5;
+
+const IDX_SORTED_GAP: u8 = 0;
+const IDX_RAW: u8 = 1;
+
+const DOWN_DENSE: u8 = 0;
+const DOWN_DENSE_W: u8 = 1;
+const DOWN_SPARSE: u8 = 2;
+const DOWN_INIT: u8 = 3;
+
+/// Decode failure (truncated/malformed frame, unknown payload, …).
+#[derive(Debug)]
+pub struct WireError {
+    msg: String,
+}
+
+impl WireError {
+    pub fn new(msg: impl Into<String>) -> WireError {
+        WireError { msg: msg.into() }
+    }
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "wire: {}", self.msg)
+    }
+}
+
+impl std::error::Error for WireError {}
+
+type Result<T> = std::result::Result<T, WireError>;
+
+/// Value payload carried by every message of a run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Payload {
+    /// 8 bytes/value, lossless — the reference payload.
+    F64,
+    /// 4 bytes/value (`v as f32`).
+    F32,
+    /// 2 bytes/value, per-message scale.
+    Q16,
+    /// 1 byte/value, per-message scale.
+    Q8,
+    /// ½ byte/value, per-message scale.
+    Q4,
+}
+
+impl Payload {
+    pub const ALL: [Payload; 5] =
+        [Payload::F64, Payload::F32, Payload::Q16, Payload::Q8, Payload::Q4];
+
+    pub fn parse(s: &str) -> Option<Payload> {
+        match s {
+            "f64" => Some(Payload::F64),
+            "f32" => Some(Payload::F32),
+            "q16" => Some(Payload::Q16),
+            "q8" => Some(Payload::Q8),
+            "q4" => Some(Payload::Q4),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Payload::F64 => "f64",
+            Payload::F32 => "f32",
+            Payload::Q16 => "q16",
+            Payload::Q8 => "q8",
+            Payload::Q4 => "q4",
+        }
+    }
+
+    /// Bits per value — what `RunConfig::float_bits` derives from
+    /// (Appendix C.5 counts 32 bits/float; `q*` count their width).
+    pub fn bits(self) -> u32 {
+        match self {
+            Payload::F64 => 64,
+            Payload::F32 => 32,
+            Payload::Q16 => 16,
+            Payload::Q8 => 8,
+            Payload::Q4 => 4,
+        }
+    }
+
+    pub fn is_lossless(self) -> bool {
+        matches!(self, Payload::F64)
+    }
+
+    fn id(self) -> u8 {
+        match self {
+            Payload::F64 => 0,
+            Payload::F32 => 1,
+            Payload::Q16 => 2,
+            Payload::Q8 => 3,
+            Payload::Q4 => 4,
+        }
+    }
+
+    fn from_id(b: u8) -> Result<Payload> {
+        Payload::ALL
+            .into_iter()
+            .find(|p| p.id() == b)
+            .ok_or_else(|| WireError::new(format!("unknown payload id {b}")))
+    }
+
+    /// Largest representable quantization level (`q*` payloads only).
+    fn qmax(self) -> f64 {
+        match self {
+            Payload::Q16 => 32767.0,
+            Payload::Q8 => 127.0,
+            Payload::Q4 => 7.0,
+            Payload::F64 | Payload::F32 => unreachable!("qmax of a float payload"),
+        }
+    }
+
+    /// Worst-case absolute decode error for one value in a block whose
+    /// max magnitude is `scale` (0 for `f64`).
+    pub fn max_abs_err(self, scale: f64) -> f64 {
+        match self {
+            Payload::F64 => 0.0,
+            // half-ulp relative rounding, plus the smallest subnormal for
+            // values that underflow the f32 range entirely
+            Payload::F32 => scale * (f32::EPSILON as f64) + f64::from(f32::from_bits(1)),
+            q => scale / (2.0 * q.qmax()),
+        }
+    }
+}
+
+// ---- varints -----------------------------------------------------------
+
+/// Encoded length of `v` as a LEB128 varint.
+pub fn varint_len(v: u64) -> usize {
+    let bits = (64 - v.leading_zeros() as usize).max(1);
+    bits / 7 + usize::from(bits % 7 != 0)
+}
+
+pub fn put_varint(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let b = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(b);
+            return;
+        }
+        out.push(b | 0x80);
+    }
+}
+
+pub fn get_varint(buf: &[u8], pos: &mut usize) -> Result<u64> {
+    let mut v = 0u64;
+    let mut shift = 0u32;
+    loop {
+        let b = *buf
+            .get(*pos)
+            .ok_or_else(|| WireError::new("truncated varint"))?;
+        *pos += 1;
+        if shift > 63 || (shift == 63 && b & 0x7f > 1) {
+            return Err(WireError::new("varint overflows u64"));
+        }
+        v |= ((b & 0x7f) as u64) << shift;
+        if b & 0x80 == 0 {
+            return Ok(v);
+        }
+        shift += 7;
+    }
+}
+
+fn take<'a>(buf: &'a [u8], pos: &mut usize, n: usize) -> Result<&'a [u8]> {
+    let end = pos
+        .checked_add(n)
+        .filter(|&e| e <= buf.len())
+        .ok_or_else(|| WireError::new("truncated frame"))?;
+    let s = &buf[*pos..end];
+    *pos = end;
+    Ok(s)
+}
+
+fn take1(buf: &[u8], pos: &mut usize) -> Result<u8> {
+    Ok(take(buf, pos, 1)?[0])
+}
+
+/// Tag of a frame body (its first byte).
+pub fn frame_tag(body: &[u8]) -> Result<u8> {
+    body.first()
+        .copied()
+        .ok_or_else(|| WireError::new("empty frame"))
+}
+
+// ---- value blocks ------------------------------------------------------
+
+/// Encoded bytes of a k-value block under `payload` (0 for an empty block:
+/// the scale header is skipped too).
+pub fn values_len(k: usize, payload: Payload) -> usize {
+    if k == 0 {
+        return 0;
+    }
+    match payload {
+        Payload::F64 => 8 * k,
+        Payload::F32 => 4 * k,
+        Payload::Q16 => 8 + 2 * k,
+        Payload::Q8 => 8 + k,
+        Payload::Q4 => 8 + k / 2 + k % 2,
+    }
+}
+
+fn block_scale(vals: &[f64]) -> f64 {
+    vals.iter().fold(0.0f64, |a, &v| a.max(v.abs()))
+}
+
+fn quantize(v: f64, scale: f64, qmax: f64) -> i32 {
+    if scale == 0.0 {
+        return 0;
+    }
+    (v / scale * qmax).round().clamp(-qmax, qmax) as i32
+}
+
+fn put_values(out: &mut Vec<u8>, vals: &[f64], payload: Payload) {
+    if vals.is_empty() {
+        return;
+    }
+    match payload {
+        Payload::F64 => {
+            for &v in vals {
+                out.extend_from_slice(&v.to_bits().to_le_bytes());
+            }
+        }
+        Payload::F32 => {
+            for &v in vals {
+                out.extend_from_slice(&(v as f32).to_bits().to_le_bytes());
+            }
+        }
+        Payload::Q16 | Payload::Q8 | Payload::Q4 => {
+            let scale = block_scale(vals);
+            let qmax = payload.qmax();
+            out.extend_from_slice(&scale.to_bits().to_le_bytes());
+            match payload {
+                Payload::Q16 => {
+                    for &v in vals {
+                        out.extend_from_slice(&(quantize(v, scale, qmax) as i16).to_le_bytes());
+                    }
+                }
+                Payload::Q8 => {
+                    for &v in vals {
+                        out.push(quantize(v, scale, qmax) as i8 as u8);
+                    }
+                }
+                Payload::Q4 => {
+                    // two values per byte, low nibble first; nibble = q + 7
+                    for pair in vals.chunks(2) {
+                        let lo = (quantize(pair[0], scale, qmax) + 7) as u8;
+                        let hi = if pair.len() > 1 {
+                            (quantize(pair[1], scale, qmax) + 7) as u8
+                        } else {
+                            0
+                        };
+                        out.push(lo | (hi << 4));
+                    }
+                }
+                _ => unreachable!(),
+            }
+        }
+    }
+}
+
+fn get_values(
+    buf: &[u8],
+    pos: &mut usize,
+    k: usize,
+    payload: Payload,
+    out: &mut Vec<f64>,
+) -> Result<()> {
+    out.clear();
+    if k == 0 {
+        return Ok(());
+    }
+    // bounds-check the whole block before reserving, so a malformed count
+    // cannot trigger a huge allocation
+    let need = values_len(k, payload);
+    if buf.len() - *pos < need {
+        return Err(WireError::new("truncated value block"));
+    }
+    out.reserve(k);
+    match payload {
+        Payload::F64 => {
+            let bytes = take(buf, pos, 8 * k)?;
+            for c in bytes.chunks_exact(8) {
+                out.push(f64::from_bits(u64::from_le_bytes(c.try_into().unwrap())));
+            }
+        }
+        Payload::F32 => {
+            let bytes = take(buf, pos, 4 * k)?;
+            for c in bytes.chunks_exact(4) {
+                out.push(f64::from(f32::from_bits(u32::from_le_bytes(
+                    c.try_into().unwrap(),
+                ))));
+            }
+        }
+        Payload::Q16 | Payload::Q8 | Payload::Q4 => {
+            let scale = f64::from_bits(u64::from_le_bytes(take(buf, pos, 8)?.try_into().unwrap()));
+            let qmax = payload.qmax();
+            match payload {
+                Payload::Q16 => {
+                    let bytes = take(buf, pos, 2 * k)?;
+                    for c in bytes.chunks_exact(2) {
+                        let q = i16::from_le_bytes(c.try_into().unwrap());
+                        out.push(q as f64 / qmax * scale);
+                    }
+                }
+                Payload::Q8 => {
+                    let bytes = take(buf, pos, k)?;
+                    for &b in bytes {
+                        out.push(b as i8 as f64 / qmax * scale);
+                    }
+                }
+                Payload::Q4 => {
+                    let bytes = take(buf, pos, k / 2 + k % 2)?;
+                    for (j, &b) in bytes.iter().enumerate() {
+                        let lo = (b & 0x0f) as i32 - 7;
+                        out.push(lo as f64 / qmax * scale);
+                        if 2 * j + 1 < k {
+                            let hi = (b >> 4) as i32 - 7;
+                            out.push(hi as f64 / qmax * scale);
+                        }
+                    }
+                }
+                _ => unreachable!(),
+            }
+        }
+    }
+    Ok(())
+}
+
+// ---- sparse / dense blocks --------------------------------------------
+
+/// Encoded bytes of one [`SparseMsg`] block.
+pub fn sparse_len(msg: &SparseMsg, payload: Payload) -> usize {
+    let k = msg.idx.len();
+    let mut n = varint_len(k as u64);
+    if k > 0 {
+        n += 1; // index-mode byte
+        if idx_sorted(&msg.idx) {
+            n += varint_len(msg.idx[0] as u64);
+            for w in msg.idx.windows(2) {
+                n += varint_len((w[1] - w[0]) as u64);
+            }
+        } else {
+            for &i in &msg.idx {
+                n += varint_len(i as u64);
+            }
+        }
+        n += values_len(k, payload);
+    }
+    n
+}
+
+fn idx_sorted(idx: &[u32]) -> bool {
+    idx.windows(2).all(|w| w[0] < w[1])
+}
+
+fn put_sparse(out: &mut Vec<u8>, msg: &SparseMsg, payload: Payload) {
+    let k = msg.idx.len();
+    put_varint(out, k as u64);
+    if k == 0 {
+        return;
+    }
+    if idx_sorted(&msg.idx) {
+        out.push(IDX_SORTED_GAP);
+        put_varint(out, msg.idx[0] as u64);
+        for w in msg.idx.windows(2) {
+            put_varint(out, (w[1] - w[0]) as u64);
+        }
+    } else {
+        out.push(IDX_RAW);
+        for &i in &msg.idx {
+            put_varint(out, i as u64);
+        }
+    }
+    put_values(out, &msg.val, payload);
+}
+
+fn get_sparse(
+    buf: &[u8],
+    pos: &mut usize,
+    dim: usize,
+    payload: Payload,
+    msg: &mut SparseMsg,
+) -> Result<()> {
+    msg.clear();
+    let k = get_varint(buf, pos)? as usize;
+    if k == 0 {
+        return Ok(());
+    }
+    // each index costs ≥ 1 byte, so k can never exceed the remaining bytes
+    if k > buf.len() - *pos {
+        return Err(WireError::new("sparse count exceeds frame"));
+    }
+    if k > dim {
+        return Err(WireError::new(format!("sparse count {k} exceeds dim {dim}")));
+    }
+    let mode = take1(buf, pos)?;
+    msg.idx.reserve(k);
+    match mode {
+        IDX_SORTED_GAP => {
+            let mut cur = get_varint(buf, pos)?;
+            for taken in 0..k {
+                if cur >= dim as u64 {
+                    return Err(WireError::new(format!("index {cur} out of range (d={dim})")));
+                }
+                msg.idx.push(cur as u32);
+                if taken + 1 < k {
+                    let gap = get_varint(buf, pos)?;
+                    if gap == 0 {
+                        // the encoder only emits this mode for strictly
+                        // increasing indices; a zero gap would decode to a
+                        // duplicate index that apply would double-count
+                        return Err(WireError::new("zero index gap in sorted-gap mode"));
+                    }
+                    cur = cur
+                        .checked_add(gap)
+                        .ok_or_else(|| WireError::new("index gap overflow"))?;
+                }
+            }
+        }
+        IDX_RAW => {
+            for _ in 0..k {
+                let i = get_varint(buf, pos)?;
+                if i >= dim as u64 {
+                    return Err(WireError::new(format!("index {i} out of range (d={dim})")));
+                }
+                msg.idx.push(i as u32);
+            }
+        }
+        other => return Err(WireError::new(format!("unknown index mode {other}"))),
+    }
+    get_values(buf, pos, k, payload, &mut msg.val)
+}
+
+fn dense_len(n: usize, payload: Payload) -> usize {
+    varint_len(n as u64) + values_len(n, payload)
+}
+
+fn put_dense(out: &mut Vec<u8>, vals: &[f64], payload: Payload) {
+    put_varint(out, vals.len() as u64);
+    put_values(out, vals, payload);
+}
+
+fn get_dense(
+    buf: &[u8],
+    pos: &mut usize,
+    dim: usize,
+    payload: Payload,
+    out: &mut Vec<f64>,
+) -> Result<()> {
+    let n = get_varint(buf, pos)? as usize;
+    if n != dim {
+        return Err(WireError::new(format!("dense block len {n}, expected {dim}")));
+    }
+    get_values(buf, pos, n, payload, out)
+}
+
+// ---- uplink frames -----------------------------------------------------
+
+/// Serialize `up` (frame body only — transports add the length prefix).
+pub fn put_uplink(out: &mut Vec<u8>, up: &Uplink, shard: usize, payload: Payload) {
+    out.push(TAG_UPLINK);
+    put_varint(out, shard as u64);
+    out.push(payload.id());
+    out.push(up.delta2.is_some() as u8);
+    put_sparse(out, &up.delta, payload);
+    if let Some(d2) = &up.delta2 {
+        put_sparse(out, d2, payload);
+    }
+}
+
+/// Read the shard index of an uplink frame without decoding the message —
+/// the server needs it to pick the decode slot.
+pub fn peek_uplink_shard(body: &[u8]) -> Result<usize> {
+    let mut pos = 0usize;
+    if take1(body, &mut pos)? != TAG_UPLINK {
+        return Err(WireError::new("expected uplink frame"));
+    }
+    Ok(get_varint(body, &mut pos)? as usize)
+}
+
+/// Decode an uplink frame body into `up` (buffers reused); returns the
+/// hosting shard index.
+pub fn get_uplink(body: &[u8], dim: usize, up: &mut Uplink) -> Result<usize> {
+    let mut pos = 0usize;
+    if take1(body, &mut pos)? != TAG_UPLINK {
+        return Err(WireError::new("expected uplink frame"));
+    }
+    let shard = get_varint(body, &mut pos)? as usize;
+    let payload = Payload::from_id(take1(body, &mut pos)?)?;
+    let flags = take1(body, &mut pos)?;
+    get_sparse(body, &mut pos, dim, payload, &mut up.delta)?;
+    if flags & 1 != 0 {
+        let d2 = match &mut up.delta2 {
+            Some(d2) => d2,
+            slot => slot.insert(SparseMsg::new()),
+        };
+        get_sparse(body, &mut pos, dim, payload, d2)?;
+    } else {
+        up.delta2 = None;
+    }
+    if pos != body.len() {
+        return Err(WireError::new("trailing bytes in uplink frame"));
+    }
+    Ok(shard)
+}
+
+/// Exact on-the-wire size of an uplink frame (length prefix included) —
+/// what the in-process drivers record as measured `bytes_up`.
+pub fn uplink_frame_len(up: &Uplink, shard: usize, payload: Payload) -> usize {
+    FRAME_PREFIX
+        + 1 // tag
+        + varint_len(shard as u64)
+        + 2 // payload id + flags
+        + sparse_len(&up.delta, payload)
+        + up.delta2.as_ref().map_or(0, |m| sparse_len(m, payload))
+}
+
+// ---- downlink frames ---------------------------------------------------
+
+/// Serialize `down` (frame body only).
+pub fn put_downlink(out: &mut Vec<u8>, down: &Downlink, payload: Payload) {
+    out.push(TAG_DOWNLINK);
+    out.push(payload.id());
+    match down {
+        Downlink::Dense { x, w } => match w {
+            Some(w) => {
+                out.push(DOWN_DENSE_W);
+                put_dense(out, x, payload);
+                put_dense(out, w, payload);
+            }
+            None => {
+                out.push(DOWN_DENSE);
+                put_dense(out, x, payload);
+            }
+        },
+        Downlink::Sparse { delta } => {
+            out.push(DOWN_SPARSE);
+            put_sparse(out, delta, payload);
+        }
+        Downlink::Init { x } => {
+            out.push(DOWN_INIT);
+            put_dense(out, x, payload);
+        }
+    }
+}
+
+/// Decode a downlink frame body into `down`, reusing its buffers when the
+/// variant matches (the steady-state case on the worker side).
+pub fn get_downlink(body: &[u8], dim: usize, down: &mut Downlink) -> Result<()> {
+    let mut pos = 0usize;
+    if take1(body, &mut pos)? != TAG_DOWNLINK {
+        return Err(WireError::new("expected downlink frame"));
+    }
+    let payload = Payload::from_id(take1(body, &mut pos)?)?;
+    let kind = take1(body, &mut pos)?;
+    match kind {
+        DOWN_DENSE | DOWN_DENSE_W => {
+            if !matches!(down, Downlink::Dense { .. }) {
+                *down = Downlink::Dense {
+                    x: Vec::new(),
+                    w: None,
+                };
+            }
+            let Downlink::Dense { x, w } = down else {
+                unreachable!()
+            };
+            get_dense(body, &mut pos, dim, payload, x)?;
+            if kind == DOWN_DENSE_W {
+                let wv = match w {
+                    Some(wv) => wv,
+                    slot => slot.insert(Vec::new()),
+                };
+                get_dense(body, &mut pos, dim, payload, wv)?;
+            } else {
+                *w = None;
+            }
+        }
+        DOWN_SPARSE => {
+            if !matches!(down, Downlink::Sparse { .. }) {
+                *down = Downlink::Sparse {
+                    delta: SparseMsg::new(),
+                };
+            }
+            let Downlink::Sparse { delta } = down else {
+                unreachable!()
+            };
+            get_sparse(body, &mut pos, dim, payload, delta)?;
+        }
+        DOWN_INIT => {
+            if !matches!(down, Downlink::Init { .. }) {
+                *down = Downlink::Init { x: Vec::new() };
+            }
+            let Downlink::Init { x } = down else {
+                unreachable!()
+            };
+            get_dense(body, &mut pos, dim, payload, x)?;
+        }
+        other => return Err(WireError::new(format!("unknown downlink kind {other}"))),
+    }
+    if pos != body.len() {
+        return Err(WireError::new("trailing bytes in downlink frame"));
+    }
+    Ok(())
+}
+
+/// Exact on-the-wire size of a downlink frame (length prefix included).
+pub fn downlink_frame_len(down: &Downlink, payload: Payload) -> usize {
+    FRAME_PREFIX
+        + 3 // tag + payload id + kind
+        + match down {
+            Downlink::Dense { x, w } => {
+                dense_len(x.len(), payload) + w.as_ref().map_or(0, |w| dense_len(w.len(), payload))
+            }
+            Downlink::Sparse { delta } => sparse_len(delta, payload),
+            Downlink::Init { x } => dense_len(x.len(), payload),
+        }
+}
+
+// ---- handshake ---------------------------------------------------------
+
+/// Everything a worker process needs to rebuild its shard-local state
+/// bitwise identically to the server's reference build.
+#[derive(Clone, Debug)]
+pub struct Hello {
+    pub dataset: String,
+    pub data_dir: Option<String>,
+    pub seed: u64,
+    /// total shard count n (the dataset partition)
+    pub workers: usize,
+    pub mu: f64,
+    pub tau: f64,
+    pub sampling: SamplingKind,
+    pub method: String,
+    pub practical_adiana: bool,
+    pub payload: Payload,
+    pub need_global: bool,
+    /// shard indices this process hosts (ascending)
+    pub shards: Vec<usize>,
+    /// starting point, shipped as raw f64 bits so it is exact
+    pub x0: Vec<f64>,
+}
+
+/// Serialize a [`Hello`] frame body: tag, u32 JSON length, JSON header,
+/// u32 dim, then `x0` as raw little-endian f64 bits (exactness matters:
+/// the spec the worker rebuilds must match the server's bit-for-bit).
+pub fn put_hello(out: &mut Vec<u8>, h: &Hello) {
+    out.push(TAG_HELLO);
+    let mut fields = vec![
+        ("dataset", Json::Str(h.dataset.clone())),
+        // u64 doesn't survive a f64 JSON number above 2^53; ship as text
+        ("seed", Json::Str(h.seed.to_string())),
+        ("workers", Json::Num(h.workers as f64)),
+        ("mu", Json::Num(h.mu)),
+        ("tau", Json::Num(h.tau)),
+        ("sampling", Json::Str(h.sampling.name().to_string())),
+        ("method", Json::Str(h.method.clone())),
+        ("practical_adiana", Json::Bool(h.practical_adiana)),
+        ("payload", Json::Str(h.payload.name().to_string())),
+        ("need_global", Json::Bool(h.need_global)),
+        (
+            "shards",
+            Json::Arr(h.shards.iter().map(|&s| Json::Num(s as f64)).collect()),
+        ),
+    ];
+    if let Some(d) = &h.data_dir {
+        fields.push(("data_dir", Json::Str(d.clone())));
+    }
+    let json = Json::obj(fields).to_string();
+    out.extend_from_slice(&(json.len() as u32).to_le_bytes());
+    out.extend_from_slice(json.as_bytes());
+    out.extend_from_slice(&(h.x0.len() as u32).to_le_bytes());
+    for &v in &h.x0 {
+        out.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+}
+
+pub fn get_hello(body: &[u8]) -> Result<Hello> {
+    let mut pos = 0usize;
+    if take1(body, &mut pos)? != TAG_HELLO {
+        return Err(WireError::new("expected hello frame"));
+    }
+    let json_len = u32::from_le_bytes(take(body, &mut pos, 4)?.try_into().unwrap()) as usize;
+    let json_bytes = take(body, &mut pos, json_len)?;
+    let json_text = std::str::from_utf8(json_bytes)
+        .map_err(|_| WireError::new("hello header is not UTF-8"))?;
+    let j = Json::parse(json_text).map_err(|e| WireError::new(format!("hello header: {e}")))?;
+    let str_field = |k: &str| -> Result<String> {
+        j.get(k)
+            .as_str()
+            .map(|s| s.to_string())
+            .ok_or_else(|| WireError::new(format!("hello: missing '{k}'")))
+    };
+    let num_field = |k: &str| -> Result<f64> {
+        j.get(k)
+            .as_f64()
+            .ok_or_else(|| WireError::new(format!("hello: missing '{k}'")))
+    };
+    let sampling_name = str_field("sampling")?;
+    let payload_name = str_field("payload")?;
+    let shards = j
+        .get("shards")
+        .as_arr()
+        .ok_or_else(|| WireError::new("hello: missing 'shards'"))?
+        .iter()
+        .map(|v| v.as_usize())
+        .collect::<Option<Vec<usize>>>()
+        .ok_or_else(|| WireError::new("hello: bad shard index"))?;
+
+    let dim = u32::from_le_bytes(take(body, &mut pos, 4)?.try_into().unwrap()) as usize;
+    let x0_bytes = take(body, &mut pos, dim.checked_mul(8).ok_or_else(|| {
+        WireError::new("hello: x0 length overflow")
+    })?)?;
+    let x0: Vec<f64> = x0_bytes
+        .chunks_exact(8)
+        .map(|c| f64::from_bits(u64::from_le_bytes(c.try_into().unwrap())))
+        .collect();
+    if pos != body.len() {
+        return Err(WireError::new("trailing bytes in hello frame"));
+    }
+
+    Ok(Hello {
+        dataset: str_field("dataset")?,
+        data_dir: j.get("data_dir").as_str().map(|s| s.to_string()),
+        seed: str_field("seed")?
+            .parse::<u64>()
+            .map_err(|_| WireError::new("hello: bad seed"))?,
+        workers: num_field("workers")? as usize,
+        mu: num_field("mu")?,
+        tau: num_field("tau")?,
+        sampling: SamplingKind::parse(&sampling_name)
+            .ok_or_else(|| WireError::new(format!("hello: bad sampling '{sampling_name}'")))?,
+        method: str_field("method")?,
+        practical_adiana: j.get("practical_adiana").as_bool().unwrap_or(true),
+        payload: Payload::parse(&payload_name)
+            .ok_or_else(|| WireError::new(format!("hello: bad payload '{payload_name}'")))?,
+        need_global: j.get("need_global").as_bool().unwrap_or(false),
+        shards,
+        x0,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn msg(pairs: &[(u32, f64)]) -> SparseMsg {
+        let mut m = SparseMsg::new();
+        for &(i, v) in pairs {
+            m.push(i, v);
+        }
+        m
+    }
+
+    #[test]
+    fn varint_roundtrip_and_len() {
+        let mut buf = Vec::new();
+        for v in [0u64, 1, 127, 128, 300, 16383, 16384, u32::MAX as u64, u64::MAX] {
+            buf.clear();
+            put_varint(&mut buf, v);
+            assert_eq!(buf.len(), varint_len(v), "len mismatch for {v}");
+            let mut pos = 0;
+            assert_eq!(get_varint(&buf, &mut pos).unwrap(), v);
+            assert_eq!(pos, buf.len());
+        }
+        // a 10th byte may only carry bit 0 (u64 has 64 bits = 9·7 + 1);
+        // non-canonical high bits must be rejected, not silently dropped
+        let mut bad = vec![0x80u8; 9];
+        bad.push(0x7f);
+        let mut pos = 0;
+        assert!(get_varint(&bad, &mut pos).is_err());
+        // an 11th byte overflows outright
+        let mut worse = vec![0x80u8; 10];
+        worse.push(0x01);
+        pos = 0;
+        assert!(get_varint(&worse, &mut pos).is_err());
+    }
+
+    #[test]
+    fn uplink_f64_roundtrip_exact() {
+        let up = Uplink {
+            delta: msg(&[(0, 1.5), (3, -2.25e-300), (17, f64::INFINITY), (99, -0.0)]),
+            delta2: Some(msg(&[(5, 1e300)])),
+        };
+        let mut body = Vec::new();
+        put_uplink(&mut body, &up, 42, Payload::F64);
+        assert_eq!(
+            body.len() + FRAME_PREFIX,
+            uplink_frame_len(&up, 42, Payload::F64)
+        );
+        let mut dec = Uplink::default();
+        let shard = get_uplink(&body, 100, &mut dec).unwrap();
+        assert_eq!(shard, 42);
+        assert_eq!(dec.delta, up.delta);
+        assert_eq!(dec.delta2, up.delta2);
+    }
+
+    #[test]
+    fn unsorted_indices_preserve_order() {
+        let up = Uplink {
+            delta: msg(&[(9, 1.0), (2, 2.0), (2, 3.0), (7, 4.0)]),
+            delta2: None,
+        };
+        let mut body = Vec::new();
+        put_uplink(&mut body, &up, 0, Payload::F64);
+        let mut dec = Uplink::default();
+        get_uplink(&body, 10, &mut dec).unwrap();
+        assert_eq!(dec.delta, up.delta);
+    }
+
+    #[test]
+    fn empty_message_roundtrip() {
+        for p in Payload::ALL {
+            let up = Uplink::default();
+            let mut body = Vec::new();
+            put_uplink(&mut body, &up, 3, p);
+            assert_eq!(body.len() + FRAME_PREFIX, uplink_frame_len(&up, 3, p));
+            let mut dec = Uplink {
+                delta: msg(&[(1, 1.0)]),
+                delta2: Some(msg(&[(0, 2.0)])),
+            };
+            get_uplink(&body, 4, &mut dec).unwrap();
+            assert!(dec.delta.is_empty());
+            assert!(dec.delta2.is_none());
+        }
+    }
+
+    #[test]
+    fn quantized_error_bound() {
+        let vals = [0.3, -1.7, 0.0001, 2.0, -2.0, 0.9999];
+        let scale = 2.0;
+        for p in [Payload::Q16, Payload::Q8, Payload::Q4] {
+            let pairs: Vec<(u32, f64)> =
+                vals.iter().enumerate().map(|(i, &v)| (i as u32, v)).collect();
+            let up = Uplink {
+                delta: msg(&pairs),
+                delta2: None,
+            };
+            let mut body = Vec::new();
+            put_uplink(&mut body, &up, 0, p);
+            let mut dec = Uplink::default();
+            get_uplink(&body, 10, &mut dec).unwrap();
+            let bound = p.max_abs_err(scale) * (1.0 + 1e-12);
+            for (orig, got) in vals.iter().zip(&dec.delta.val) {
+                assert!(
+                    (orig - got).abs() <= bound,
+                    "{}: |{orig} - {got}| > {bound}",
+                    p.name()
+                );
+            }
+            // extremes hit the grid exactly
+            assert_eq!(dec.delta.val[3], 2.0);
+            assert_eq!(dec.delta.val[4], -2.0);
+        }
+    }
+
+    #[test]
+    fn downlink_kinds_roundtrip() {
+        let dim = 5;
+        let cases = [
+            Downlink::Dense {
+                x: vec![1.0, -2.0, 3.5e-310, 0.0, 9.0],
+                w: None,
+            },
+            Downlink::Dense {
+                x: vec![0.0; 5],
+                w: Some(vec![5.0, 4.0, 3.0, 2.0, 1.0]),
+            },
+            Downlink::Sparse {
+                delta: msg(&[(1, 0.5), (4, -0.25)]),
+            },
+            Downlink::Init {
+                x: vec![1.0, 2.0, 3.0, 4.0, 5.0],
+            },
+        ];
+        for orig in &cases {
+            let mut body = Vec::new();
+            put_downlink(&mut body, orig, Payload::F64);
+            assert_eq!(
+                body.len() + FRAME_PREFIX,
+                downlink_frame_len(orig, Payload::F64)
+            );
+            let mut dec = Downlink::Init { x: Vec::new() };
+            get_downlink(&body, dim, &mut dec).unwrap();
+            match (orig, &dec) {
+                (Downlink::Dense { x: a, w: u }, Downlink::Dense { x: b, w: v }) => {
+                    assert_eq!(a, b);
+                    assert_eq!(u, v);
+                }
+                (Downlink::Sparse { delta: a }, Downlink::Sparse { delta: b }) => {
+                    assert_eq!(a, b)
+                }
+                (Downlink::Init { x: a }, Downlink::Init { x: b }) => assert_eq!(a, b),
+                _ => panic!("variant changed in roundtrip"),
+            }
+        }
+    }
+
+    #[test]
+    fn malformed_frames_error_not_panic() {
+        let mut body = Vec::new();
+        put_uplink(
+            &mut body,
+            &Uplink {
+                delta: msg(&[(0, 1.0), (5, 2.0)]),
+                delta2: None,
+            },
+            1,
+            Payload::F64,
+        );
+        // truncations at every prefix length
+        for cut in 0..body.len() {
+            let mut dec = Uplink::default();
+            assert!(get_uplink(&body[..cut], 10, &mut dec).is_err(), "cut={cut}");
+        }
+        // out-of-range index vs dim
+        let mut dec = Uplink::default();
+        assert!(get_uplink(&body, 3, &mut dec).is_err());
+        // bad tag
+        let mut bad = body.clone();
+        bad[0] = 99;
+        assert!(get_uplink(&bad, 10, &mut dec).is_err());
+    }
+
+    #[test]
+    fn hello_roundtrip() {
+        let h = Hello {
+            dataset: "a1a".into(),
+            data_dir: Some("/tmp/data".into()),
+            seed: u64::MAX - 3,
+            workers: 107,
+            mu: 1e-3,
+            tau: 2.5,
+            sampling: SamplingKind::ImportanceDiana,
+            method: "diana+".into(),
+            practical_adiana: false,
+            payload: Payload::Q8,
+            need_global: true,
+            shards: vec![1, 54, 107 - 1],
+            x0: vec![0.1, -2.3e-15, 7.0],
+        };
+        let mut body = Vec::new();
+        put_hello(&mut body, &h);
+        let d = get_hello(&body).unwrap();
+        assert_eq!(d.dataset, h.dataset);
+        assert_eq!(d.data_dir, h.data_dir);
+        assert_eq!(d.seed, h.seed);
+        assert_eq!(d.workers, h.workers);
+        assert_eq!(d.mu.to_bits(), h.mu.to_bits());
+        assert_eq!(d.tau.to_bits(), h.tau.to_bits());
+        assert_eq!(d.sampling, h.sampling);
+        assert_eq!(d.method, h.method);
+        assert_eq!(d.practical_adiana, h.practical_adiana);
+        assert_eq!(d.payload, h.payload);
+        assert_eq!(d.need_global, h.need_global);
+        assert_eq!(d.shards, h.shards);
+        assert_eq!(
+            d.x0.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            h.x0.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn payload_parse_names() {
+        for p in Payload::ALL {
+            assert_eq!(Payload::parse(p.name()), Some(p));
+        }
+        assert_eq!(Payload::parse("f16"), None);
+        assert_eq!(Payload::F64.bits(), 64);
+        assert_eq!(Payload::Q4.bits(), 4);
+    }
+}

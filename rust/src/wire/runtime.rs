@@ -1,0 +1,570 @@
+//! Distributed coordinator: [`run_distributed`] drives a
+//! [`ServerAlgo`](crate::methods::ServerAlgo) against worker *processes*
+//! over [`Transport`]s, plus the `smx serve` / `smx worker --connect`
+//! entry points and the in-process loopback harness.
+//!
+//! Protocol per round (after the TCP handshake):
+//!
+//! 1. the server encodes this round's downlink **once** and sends the
+//!    frame to every worker process;
+//! 2. each process decodes it and runs every shard it hosts (round-robin
+//!    assignment, ascending), sending one uplink frame per shard tagged
+//!    with the shard index;
+//! 3. the server decodes uplinks into per-shard slots (order on the wire
+//!    is irrelevant; apply order equals `run_sim`'s) and advances.
+//!
+//! RNG streams are derived exactly as in
+//! [`run_sim`](crate::coordinator::run_sim) — `base.derive(i)` per shard
+//! `i`, `base.derive(u64::MAX)` for the server — which together with the
+//! lossless `f64` codec gives the bitwise-identity guarantee in the
+//! [module docs](crate::wire).
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::{run_sim, EngineFactory, RoundRecord, RunConfig, RunResult};
+use crate::experiments::runner;
+use crate::linalg::vector;
+use crate::methods::{build, Downlink, Method, MethodSpec, ServerAlgo, Uplink, WorkerAlgo};
+use crate::objective::Smoothness;
+use crate::runtime::native::NativeEngine;
+use crate::runtime::{EngineKind, GradEngine};
+use crate::util::rng::Rng;
+use crate::util::timer::PhaseTimer;
+use crate::wire::codec::{self, Hello, Payload};
+use crate::wire::transport::{loopback_pair, Tcp, Transport};
+use anyhow::{bail, ensure, Context, Result};
+use std::time::{Duration, Instant};
+
+/// One worker process from the server's perspective: a transport plus the
+/// shard indices it hosts.
+pub struct WorkerHost {
+    pub transport: Box<dyn Transport>,
+    pub shards: Vec<usize>,
+}
+
+/// The `(shard index, worker half)` pairs hosted by one worker process.
+pub type HostedShards = Vec<(usize, Box<dyn WorkerAlgo + Send>)>;
+
+/// Per-round communication totals of [`server_round`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RoundTotals {
+    pub coords_up: u64,
+    pub bits_up: u64,
+    pub coords_down: u64,
+    pub bytes_up: u64,
+    pub bytes_down: u64,
+}
+
+/// Reused server-side buffers: per-shard uplink slots, the downlink and
+/// its encoding, and one receive scratch buffer.
+pub struct ServerRoundState {
+    pub ups: Vec<Uplink>,
+    down: Downlink,
+    down_buf: Vec<u8>,
+    up_buf: Vec<u8>,
+    seen: Vec<bool>,
+}
+
+impl ServerRoundState {
+    pub fn new(n_shards: usize) -> ServerRoundState {
+        ServerRoundState {
+            ups: (0..n_shards).map(|_| Uplink::default()).collect(),
+            down: Downlink::Init { x: Vec::new() },
+            down_buf: Vec::new(),
+            up_buf: Vec::new(),
+            seen: vec![false; n_shards],
+        }
+    }
+}
+
+/// One synchronous distributed round: broadcast the downlink, gather one
+/// uplink per shard, apply. Public so the bench harness can time a single
+/// steady-state round against live worker threads.
+pub fn server_round(
+    server: &mut dyn ServerAlgo,
+    hosts: &mut [WorkerHost],
+    st: &mut ServerRoundState,
+    server_rng: &mut Rng,
+    payload: Payload,
+    float_bits: u32,
+) -> Result<RoundTotals> {
+    let n = st.ups.len();
+    let dim = server.dim();
+    let mut t = RoundTotals::default();
+
+    server.downlink_into(&mut st.down);
+    st.down_buf.clear();
+    codec::put_downlink(&mut st.down_buf, &st.down, payload);
+    t.coords_down = (st.down.coords() * n) as u64;
+    t.bytes_down = ((codec::FRAME_PREFIX + st.down_buf.len()) * hosts.len()) as u64;
+    for h in hosts.iter_mut() {
+        h.transport.send(&st.down_buf).context("sending downlink")?;
+    }
+
+    st.seen.fill(false);
+    for h in hosts.iter_mut() {
+        for _ in 0..h.shards.len() {
+            h.transport.recv(&mut st.up_buf).context("receiving uplink")?;
+            let shard = codec::peek_uplink_shard(&st.up_buf)?;
+            ensure!(shard < n, "uplink for shard {shard}, but n = {n}");
+            ensure!(!st.seen[shard], "duplicate uplink for shard {shard}");
+            st.seen[shard] = true;
+            let up = &mut st.ups[shard];
+            codec::get_uplink(&st.up_buf, dim, up)?;
+            t.coords_up += up.coords() as u64;
+            t.bits_up += crate::coordinator::bits_of(up, dim, float_bits);
+            t.bytes_up += (codec::FRAME_PREFIX + st.up_buf.len()) as u64;
+        }
+    }
+
+    server.apply(&st.ups, server_rng);
+    Ok(t)
+}
+
+/// Distributed driver: same stopping/recording policy as
+/// [`run_sim`](crate::coordinator::run_sim), with *measured* byte counts
+/// from the frames actually sent. Always releases the worker processes
+/// with a `Stop` frame, even on error.
+pub fn run_distributed(
+    server: &mut dyn ServerAlgo,
+    name: &str,
+    hosts: &mut [WorkerHost],
+    x_star: &[f64],
+    cfg: &RunConfig,
+) -> Result<RunResult> {
+    let n: usize = hosts.iter().map(|h| h.shards.len()).sum();
+    ensure!(n > 0, "no shards hosted");
+    let record_every = cfg.record_every.max(1);
+    let mut server_rng = Rng::new(cfg.seed).derive(u64::MAX);
+    let denom = vector::dist2(server.iterate(), x_star).max(1e-300);
+    let mut st = ServerRoundState::new(n);
+    let mut acc = RoundTotals::default();
+    let mut phases = PhaseTimer::new();
+    let mut records = Vec::with_capacity(cfg.max_rounds / record_every + 3);
+    records.push(RoundRecord {
+        round: 0,
+        residual: 1.0,
+        coords_up: 0,
+        bits_up: 0,
+        coords_down: 0,
+        bytes_up: 0,
+        bytes_down: 0,
+        wall_secs: 0.0,
+    });
+    let t0 = Instant::now();
+    let mut reached = false;
+    let mut rounds_run = 0;
+    let mut failure = None;
+
+    for round in 1..=cfg.max_rounds {
+        rounds_run = round;
+        let totals = phases.time("dist_round", || {
+            server_round(
+                server,
+                hosts,
+                &mut st,
+                &mut server_rng,
+                cfg.payload,
+                cfg.float_bits,
+            )
+        });
+        let totals = match totals {
+            Ok(t) => t,
+            Err(e) => {
+                failure = Some(e);
+                break;
+            }
+        };
+        acc.coords_up += totals.coords_up;
+        acc.bits_up += totals.bits_up;
+        acc.coords_down += totals.coords_down;
+        acc.bytes_up += totals.bytes_up;
+        acc.bytes_down += totals.bytes_down;
+
+        let res = vector::dist2(server.iterate(), x_star) / denom;
+        let hit_target = cfg.target_residual > 0.0 && res <= cfg.target_residual;
+        if round % record_every == 0 || round == cfg.max_rounds || hit_target {
+            records.push(RoundRecord {
+                round,
+                residual: res,
+                coords_up: acc.coords_up,
+                bits_up: acc.bits_up,
+                coords_down: acc.coords_down,
+                bytes_up: acc.bytes_up,
+                bytes_down: acc.bytes_down,
+                wall_secs: t0.elapsed().as_secs_f64(),
+            });
+        }
+        if hit_target {
+            reached = true;
+            break;
+        }
+    }
+
+    for h in hosts.iter_mut() {
+        let _ = h.transport.send(&[codec::TAG_STOP]);
+    }
+    if let Some(e) = failure {
+        return Err(e);
+    }
+    Ok(RunResult {
+        method: name.to_string(),
+        records,
+        final_x: server.iterate().to_vec(),
+        rounds_run,
+        reached_target: reached,
+        phases,
+    })
+}
+
+/// Worker-process main loop: for every downlink frame, run each hosted
+/// shard and send its uplink; exit cleanly on `Stop`.
+pub fn worker_loop(
+    workers: &mut [(usize, Box<dyn WorkerAlgo + Send>)],
+    engines: &mut [Box<dyn GradEngine>],
+    rngs: &mut [Rng],
+    transport: &mut dyn Transport,
+    payload: Payload,
+) -> Result<()> {
+    ensure!(!workers.is_empty(), "worker process hosts no shards");
+    assert_eq!(workers.len(), engines.len());
+    assert_eq!(workers.len(), rngs.len());
+    let dim = workers[0].1.dim();
+    let mut body = Vec::new();
+    let mut down = Downlink::Init { x: Vec::new() };
+    let mut ups: Vec<Uplink> = workers.iter().map(|_| Uplink::default()).collect();
+    let mut out = Vec::new();
+    loop {
+        transport.recv(&mut body).context("worker recv")?;
+        match codec::frame_tag(&body)? {
+            codec::TAG_DOWNLINK => {
+                codec::get_downlink(&body, dim, &mut down)?;
+                for (k, (shard, algo)) in workers.iter_mut().enumerate() {
+                    let up = &mut ups[k];
+                    algo.round_into(&down, engines[k].as_mut(), &mut rngs[k], up);
+                    out.clear();
+                    codec::put_uplink(&mut out, up, *shard, payload);
+                    transport.send(&out).context("worker send")?;
+                }
+            }
+            codec::TAG_STOP => return Ok(()),
+            other => bail!("worker: unexpected frame tag {other}"),
+        }
+    }
+}
+
+/// Run the full distributed protocol in-process: the server on the
+/// calling thread, `procs` worker threads (each hosting `n/procs` shards
+/// round-robin) connected by loopback transports. `procs = 0` means one
+/// process per shard. Engines are built inside each worker thread via
+/// `engine_factory`, mirroring [`run_threaded`](crate::coordinator::run_threaded).
+pub fn run_distributed_loopback(
+    method: Method,
+    engine_factory: EngineFactory,
+    x_star: &[f64],
+    cfg: &RunConfig,
+    procs: usize,
+) -> Result<RunResult> {
+    let Method {
+        mut server,
+        workers,
+        name,
+    } = method;
+    let n = workers.len();
+    ensure!(n > 0, "method has no workers");
+    ensure!(
+        cfg.payload.is_lossless() || name != "diana++",
+        "diana++ requires the lossless f64 payload: its incremental sparse \
+         downlinks never re-sync the worker model replicas, so quantization \
+         error would accumulate unboundedly (got payload {})",
+        cfg.payload.name()
+    );
+    let procs = if procs == 0 { n } else { procs.min(n) };
+    let base = Rng::new(cfg.seed);
+
+    let mut groups: Vec<HostedShards> = (0..procs).map(|_| Vec::new()).collect();
+    for (i, w) in workers.into_iter().enumerate() {
+        groups[i % procs].push((i, w));
+    }
+    let mut hosts: Vec<WorkerHost> = Vec::with_capacity(procs);
+    let mut ends = Vec::with_capacity(procs);
+    for g in &groups {
+        let (a, b) = loopback_pair();
+        hosts.push(WorkerHost {
+            transport: Box::new(a),
+            shards: g.iter().map(|(i, _)| *i).collect(),
+        });
+        ends.push(b);
+    }
+    let payload = cfg.payload;
+
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(procs);
+        for (mut end, mut group) in ends.into_iter().zip(groups.into_iter()) {
+            let factory = engine_factory.clone();
+            let base = base.clone();
+            handles.push(scope.spawn(move || -> Result<()> {
+                let mut engines: Vec<Box<dyn GradEngine>> =
+                    group.iter().map(|(i, _)| factory(*i)).collect();
+                let mut rngs: Vec<Rng> =
+                    group.iter().map(|(i, _)| base.derive(*i as u64)).collect();
+                worker_loop(&mut group, &mut engines, &mut rngs, &mut end, payload)
+            }));
+        }
+        let result = run_distributed(server.as_mut(), &name, &mut hosts, x_star, cfg);
+        for h in handles {
+            match h.join() {
+                Ok(r) => r?,
+                Err(_) => bail!("loopback worker thread panicked"),
+            }
+        }
+        result
+    })
+}
+
+/// `smx serve`: prepare the problem, accept the configured number of
+/// worker-process connections, hand each its shard assignment via the
+/// `Hello` handshake, run [`run_distributed`] and write the residual
+/// curve CSV. With `check_sim`, re-run the identical configuration under
+/// [`run_sim`] and fail unless the iterates are bitwise identical
+/// (requires the lossless `f64` payload) — the CI smoke's assertion.
+pub fn serve(cfg: &ExperimentConfig, check_sim: bool) -> Result<()> {
+    let listener = std::net::TcpListener::bind(&cfg.wire.listen)
+        .with_context(|| format!("binding {}", cfg.wire.listen))?;
+    serve_on(listener, cfg, check_sim)
+}
+
+/// [`serve`] against an already-bound listener (tests bind port 0 and
+/// hand the ephemeral address to their worker threads).
+pub fn serve_on(
+    listener: std::net::TcpListener,
+    cfg: &ExperimentConfig,
+    check_sim: bool,
+) -> Result<()> {
+    ensure!(
+        cfg.methods.len() == 1,
+        "smx serve drives exactly one method; got {:?}",
+        cfg.methods
+    );
+    ensure!(
+        cfg.engine == EngineKind::Native,
+        "smx serve supports the native engine only"
+    );
+    let method_name = cfg.methods[0].clone();
+    let payload = cfg.wire.payload;
+    ensure!(
+        payload.is_lossless() || method_name != "diana++",
+        "diana++ requires the lossless f64 payload (worker model replicas \
+         are updated by incremental sparse downlinks; quantization error \
+         would accumulate unboundedly)"
+    );
+    if check_sim {
+        ensure!(
+            payload.is_lossless(),
+            "--check-sim requires the f64 payload (got {})",
+            payload.name()
+        );
+    }
+    let prep = runner::prepare(cfg)?;
+    let n = prep.shards.len();
+    let procs = cfg.wire.effective_procs(n);
+    let mut spec = MethodSpec::new(&method_name, cfg.tau, cfg.sampling, cfg.mu, prep.x0(cfg));
+    spec.practical_adiana = cfg.practical_adiana;
+    let mut method = build(&spec, &prep.sm)?;
+    // server half only; the workers live in their own processes
+    method.workers.clear();
+    let run_cfg = runner::run_config(cfg);
+
+    crate::info!(
+        "wire",
+        "serving {} on {} — {} worker process(es), {} shards, payload {}",
+        method_name,
+        cfg.wire.listen,
+        procs,
+        n,
+        payload.name()
+    );
+    let mut assignment: Vec<Vec<usize>> = vec![Vec::new(); procs];
+    for i in 0..n {
+        assignment[i % procs].push(i);
+    }
+    // Phase 1: accept every process and send its Hello immediately, so all
+    // workers rebuild their dataset + smoothness state concurrently; acks
+    // are collected in phase 2 (a sequential accept→ack loop would cost
+    // procs × build-time instead of max(build-time)).
+    let mut pending: Vec<Tcp> = Vec::with_capacity(procs);
+    let mut body = Vec::new();
+    for p in 0..procs {
+        let (stream, peer) = listener.accept().context("accepting worker")?;
+        let mut t = Tcp::new(stream)?;
+        let hello = Hello {
+            dataset: cfg.dataset.clone(),
+            // only ship data_dir when the dataset file actually resolved on
+            // this side — otherwise the server trained on synthetic data and
+            // the worker must synthesize too (it rejects a dangling data_dir)
+            data_dir: cfg
+                .data_dir
+                .as_ref()
+                .filter(|d| {
+                    d.join(&cfg.dataset).is_file()
+                        || d.join(format!("{}.txt", cfg.dataset)).is_file()
+                })
+                .map(|d| d.display().to_string()),
+            seed: cfg.seed,
+            workers: n,
+            mu: cfg.mu,
+            tau: cfg.tau,
+            sampling: cfg.sampling,
+            method: method_name.clone(),
+            practical_adiana: cfg.practical_adiana,
+            payload,
+            need_global: method_name == "diana++",
+            shards: assignment[p].clone(),
+            x0: spec.x0.clone(),
+        };
+        body.clear();
+        codec::put_hello(&mut body, &hello);
+        t.send(&body)?;
+        crate::info!(
+            "wire",
+            "  worker process {p} connected from {peer} ({} shard(s))",
+            assignment[p].len()
+        );
+        pending.push(t);
+    }
+    // Phase 2: collect acks (each worker sends one once its state is built).
+    let mut hosts: Vec<WorkerHost> = Vec::with_capacity(procs);
+    for (p, mut t) in pending.into_iter().enumerate() {
+        t.recv(&mut body).context("waiting for worker ack")?;
+        ensure!(
+            codec::frame_tag(&body)? == codec::TAG_HELLO_ACK,
+            "worker process {p} did not acknowledge the handshake"
+        );
+        hosts.push(WorkerHost {
+            transport: Box::new(t),
+            shards: assignment[p].clone(),
+        });
+    }
+
+    let result = run_distributed(
+        method.server.as_mut(),
+        &method.name,
+        &mut hosts,
+        &prep.x_star,
+        &run_cfg,
+    )?;
+    let last = result.records.last().unwrap();
+    println!(
+        "distributed {method_name} on {}: {} rounds, residual {:.6e}",
+        cfg.dataset,
+        result.rounds_run,
+        result.final_residual()
+    );
+    println!(
+        "  measured bytes_up {} (modeled bits_up/8 = {}), bytes_down {}",
+        last.bytes_up,
+        last.bits_up / 8,
+        last.bytes_down
+    );
+    let path = cfg.out_dir.join(format!("distributed_{}.csv", cfg.dataset));
+    crate::util::write_csv(&path, &RunResult::csv_header(), &result.csv_rows())?;
+    crate::info!("wire", "wrote {}", path.display());
+
+    if check_sim {
+        let mut method2 = build(&spec, &prep.sm)?;
+        let mut engines = prep.native_engines(cfg.mu);
+        let r_sim = run_sim(&mut method2, &mut engines, &prep.x_star, &run_cfg);
+        // bit-level comparison: value equality would let a -0.0/+0.0
+        // regression slip through the "bitwise identical" guarantee
+        let bits = |xs: &[f64]| xs.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+        ensure!(
+            bits(&r_sim.final_x) == bits(&result.final_x),
+            "check-sim FAILED: distributed iterates diverged from run_sim \
+             (residual {:.6e} vs {:.6e})",
+            result.final_residual(),
+            r_sim.final_residual()
+        );
+        ensure!(
+            r_sim.records.last().unwrap().coords_up == last.coords_up,
+            "check-sim FAILED: communication accounting diverged"
+        );
+        println!(
+            "check-sim OK: bitwise identical to run_sim over {} rounds",
+            result.rounds_run
+        );
+    }
+    Ok(())
+}
+
+/// `smx worker --connect ADDR`: join a serve run, rebuild the assigned
+/// shards' state from the `Hello` handshake (deterministic, so worker
+/// state matches the server's reference build bit-for-bit), and run the
+/// round loop until `Stop`.
+pub fn worker_connect(addr: &str) -> Result<()> {
+    let mut t = Tcp::connect_retry(addr, 60, Duration::from_millis(250))
+        .with_context(|| format!("connecting to {addr}"))?;
+    let mut body = Vec::new();
+    t.recv(&mut body).context("waiting for hello")?;
+    let hello = codec::get_hello(&body)?;
+    ensure!(!hello.shards.is_empty(), "server assigned no shards");
+    crate::info!(
+        "wire",
+        "assigned {} shard(s) of {} (method {}, payload {})",
+        hello.shards.len(),
+        hello.dataset,
+        hello.method,
+        hello.payload.name()
+    );
+
+    let data_dir = hello.data_dir.as_ref().map(std::path::PathBuf::from);
+    if let Some(dir) = &data_dir {
+        // The server resolved a real dataset file; silently falling back to
+        // the synthetic generator here would train on *different data* than
+        // the server's x*/smoothness build and diverge without any error.
+        ensure!(
+            dir.join(&hello.dataset).is_file()
+                || dir.join(format!("{}.txt", hello.dataset)).is_file(),
+            "server set data_dir {} but dataset '{}' is not there on this \
+             machine (refusing to fall back to synthetic data)",
+            dir.display(),
+            hello.dataset
+        );
+    }
+    let raw = crate::data::load_or_synth(&hello.dataset, data_dir.as_deref(), hello.seed)
+        .with_context(|| format!("loading dataset {}", hello.dataset))?;
+    let (global, shards) = raw.prepare(hello.workers, hello.seed);
+    let mut sm = Smoothness::build(&shards, hello.mu);
+    if hello.need_global {
+        sm = sm.with_global(&global.a);
+    }
+    let mut spec = MethodSpec::new(
+        &hello.method,
+        hello.tau,
+        hello.sampling,
+        hello.mu,
+        hello.x0.clone(),
+    );
+    spec.practical_adiana = hello.practical_adiana;
+    let method = build(&spec, &sm)?;
+    ensure!(
+        hello.shards.iter().all(|&i| i < method.workers.len()),
+        "assigned shard index out of range"
+    );
+    let assigned: std::collections::BTreeSet<usize> = hello.shards.iter().copied().collect();
+    let mut workers: HostedShards = method
+        .workers
+        .into_iter()
+        .enumerate()
+        .filter(|(i, _)| assigned.contains(i))
+        .collect();
+    let mut engines: Vec<Box<dyn GradEngine>> = workers
+        .iter()
+        .map(|(i, _)| {
+            Box::new(NativeEngine::from_shard(&shards[*i], hello.mu)) as Box<dyn GradEngine>
+        })
+        .collect();
+    let base = Rng::new(hello.seed);
+    let mut rngs: Vec<Rng> = workers.iter().map(|(i, _)| base.derive(*i as u64)).collect();
+
+    t.send(&[codec::TAG_HELLO_ACK])?;
+    worker_loop(&mut workers, &mut engines, &mut rngs, &mut t, hello.payload)
+}

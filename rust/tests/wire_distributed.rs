@@ -1,0 +1,188 @@
+//! Distributed-driver integration tests.
+//!
+//! * Under the lossless `f64` payload, `run_distributed` (loopback and
+//!   TCP) must produce iterates **bitwise identical** to `run_sim`, for
+//!   dense-downlink methods, ADIANA's two-message uplink, and DIANA++'s
+//!   sparse downlink — at one process per shard *and* with several shards
+//!   multiplexed per process.
+//! * Measured `bytes_up`/`bytes_down` recorded by `run_sim` equal the
+//!   bytes the distributed driver actually framed (procs = n).
+//! * Lossy payloads track the `f64` trajectory on a1a within the
+//!   tolerances documented in `wire/mod.rs`.
+
+use smx::config::ExperimentConfig;
+use smx::coordinator::{run_sim, EngineFactory, RunConfig};
+use smx::experiments::runner::{self, run_config};
+use smx::methods::{build, MethodSpec};
+use smx::runtime::native::NativeEngine;
+use smx::runtime::GradEngine;
+use smx::sampling::SamplingKind;
+use smx::wire::{run_distributed_loopback, serve_on, worker_connect, Payload};
+use std::sync::Arc;
+
+fn tiny_cfg() -> ExperimentConfig {
+    ExperimentConfig {
+        dataset: "tiny".into(),
+        workers: 4,
+        max_rounds: 40,
+        target_residual: 0.0,
+        record_every: 1,
+        seed: 77,
+        out_dir: std::env::temp_dir().join("smx_wire_test"),
+        ..Default::default()
+    }
+}
+
+fn factory_for(prep: &runner::Prepared, mu: f64) -> EngineFactory {
+    let shards = prep.shards.clone();
+    Arc::new(move |i| Box::new(NativeEngine::from_shard(&shards[i], mu)) as Box<dyn GradEngine>)
+}
+
+fn bits(xs: &[f64]) -> Vec<u64> {
+    xs.iter().map(|v| v.to_bits()).collect()
+}
+
+#[test]
+fn loopback_f64_bitwise_identical_to_sim() {
+    let cfg = tiny_cfg();
+    // need_global=true so the same Prepared also serves diana++
+    let prep = runner::prepare_with(&cfg, true).unwrap();
+    let n = prep.shards.len();
+    let run_cfg = run_config(&cfg);
+    assert_eq!(run_cfg.payload, Payload::F64);
+
+    for (name, sampling, tau) in [
+        ("dcgd+", SamplingKind::Uniform, 2.0),
+        ("diana+", SamplingKind::ImportanceDiana, 2.0),
+        ("adiana+", SamplingKind::Uniform, 2.0), // two sparse uplinks/round
+        ("diana++", SamplingKind::Uniform, 2.0), // sparse downlink
+    ] {
+        let mut spec = MethodSpec::new(name, tau, sampling, cfg.mu, vec![0.0; prep.sm.dim]);
+        spec.practical_adiana = cfg.practical_adiana;
+
+        let mut m_sim = build(&spec, &prep.sm).unwrap();
+        let mut engines = prep.native_engines(cfg.mu);
+        let r_sim = run_sim(&mut m_sim, &mut engines, &prep.x_star, &run_cfg);
+
+        for procs in [n, 2] {
+            let m_dist = build(&spec, &prep.sm).unwrap();
+            let r_dist = run_distributed_loopback(
+                m_dist,
+                factory_for(&prep, cfg.mu),
+                &prep.x_star,
+                &run_cfg,
+                procs,
+            )
+            .unwrap();
+
+            assert_eq!(
+                bits(&r_sim.final_x),
+                bits(&r_dist.final_x),
+                "{name} (procs={procs}): iterates diverged from run_sim"
+            );
+            let (ls, ld) = (
+                r_sim.records.last().unwrap(),
+                r_dist.records.last().unwrap(),
+            );
+            assert_eq!(ls.coords_up, ld.coords_up, "{name}: coords_up diverged");
+            assert_eq!(ls.bits_up, ld.bits_up, "{name}: modeled bits diverged");
+            assert_eq!(
+                ls.bytes_up, ld.bytes_up,
+                "{name} (procs={procs}): sim-accounted bytes_up != measured"
+            );
+            if procs == n {
+                // one process per shard: the downlink fan-out matches the
+                // sim's per-worker broadcast model exactly
+                assert_eq!(
+                    ls.bytes_down, ld.bytes_down,
+                    "{name}: sim-accounted bytes_down != measured"
+                );
+            }
+            assert!(ld.bytes_up > 0 && ld.bytes_down > 0);
+        }
+    }
+}
+
+#[test]
+fn tcp_serve_check_sim_roundtrips() {
+    // Full TCP path in-process: serve_on an ephemeral port, two worker
+    // "processes" (threads running the real worker_connect entry point,
+    // each hosting 2 of the 4 shards). --check-sim semantics assert
+    // bitwise identity against run_sim inside serve_on.
+    let mut cfg = tiny_cfg();
+    cfg.methods = vec!["diana+".into()];
+    cfg.sampling = SamplingKind::ImportanceDiana;
+    cfg.tau = 2.0;
+    cfg.max_rounds = 25;
+    cfg.wire.workers = 2;
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+
+    let workers: Vec<_> = (0..2)
+        .map(|_| {
+            let addr = addr.clone();
+            std::thread::spawn(move || worker_connect(&addr))
+        })
+        .collect();
+    serve_on(listener, &cfg, true).expect("serve_on with check-sim");
+    for w in workers {
+        w.join().unwrap().expect("worker failed");
+    }
+    std::fs::remove_dir_all(&cfg.out_dir).ok();
+}
+
+#[test]
+fn lossy_payloads_track_f64_on_a1a() {
+    // Documented tolerances (wire/mod.rs): after a few hundred rounds the
+    // lossy trajectories stay within an additive tolerance of the f64
+    // residual (quantization error is relative to per-message magnitude,
+    // so the perturbations contract along with the iterates).
+    let cfg = ExperimentConfig {
+        dataset: "a1a".into(),
+        methods: vec!["diana+".into()],
+        max_rounds: 200,
+        target_residual: 0.0,
+        record_every: 200,
+        seed: 42,
+        out_dir: std::env::temp_dir().join("smx_wire_a1a"),
+        ..Default::default()
+    };
+    let prep = runner::prepare(&cfg).unwrap();
+
+    let residual_at = |payload: Payload| -> f64 {
+        let mut run_cfg: RunConfig = run_config(&cfg);
+        run_cfg.payload = payload;
+        let spec = MethodSpec::new(
+            "diana+",
+            2.0,
+            SamplingKind::Uniform,
+            cfg.mu,
+            vec![0.0; prep.sm.dim],
+        );
+        let method = build(&spec, &prep.sm).unwrap();
+        let r = run_distributed_loopback(
+            method,
+            factory_for(&prep, cfg.mu),
+            &prep.x_star,
+            &run_cfg,
+            8, // 8 processes hosting ~13 shards each
+        )
+        .unwrap();
+        r.final_residual()
+    };
+
+    let r64 = residual_at(Payload::F64);
+    assert!(r64.is_finite() && r64 < 1.0, "f64 reference stalled: {r64}");
+    let r32 = residual_at(Payload::F32);
+    let r16 = residual_at(Payload::Q16);
+    let tol32 = (0.5 * r64).max(1e-6);
+    let tol16 = (0.5 * r64).max(1e-4);
+    assert!(
+        (r32 - r64).abs() <= tol32,
+        "f32 drifted: {r32:.3e} vs f64 {r64:.3e} (tol {tol32:.1e})"
+    );
+    assert!(
+        (r16 - r64).abs() <= tol16,
+        "q16 drifted: {r16:.3e} vs f64 {r64:.3e} (tol {tol16:.1e})"
+    );
+}

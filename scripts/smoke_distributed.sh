@@ -1,0 +1,40 @@
+#!/usr/bin/env bash
+# Multi-process smoke test for the wire subsystem: spawn one `smx serve`
+# coordinator and two `smx worker` processes on the synthetic tiny dataset
+# (8 shards, 4 per worker process) for a few rounds. `--check-sim` makes
+# the server re-run the identical configuration through the in-process
+# `run_sim` driver and exit nonzero unless the distributed iterates are
+# bitwise identical — the whole codec/transport/runtime stack is asserted
+# by the server's exit code.
+#
+#   BIN=target/release/smx PORT=4973 bash scripts/smoke_distributed.sh
+set -u
+
+BIN=${BIN:-target/release/smx}
+PORT=${PORT:-4973}
+ADDR=127.0.0.1:$PORT
+OUT=${OUT:-$(mktemp -d)}
+
+# `timeout` bounds the whole run so a worker that dies before connecting
+# (serve would then block in accept() forever) fails the job fast instead
+# of hanging until the CI-level timeout.
+timeout "${SMOKE_TIMEOUT:-300}" "$BIN" serve --dataset tiny --workers 8 --methods diana+ \
+  --sampling importance-diana --tau 2 --max-rounds 30 \
+  --listen "$ADDR" --wire-workers 2 --out-dir "$OUT" --check-sim &
+SERVE_PID=$!
+
+"$BIN" worker --connect "$ADDR" &
+W1=$!
+"$BIN" worker --connect "$ADDR" &
+W2=$!
+
+rc=0
+wait "$SERVE_PID" || rc=1
+wait "$W1" || { echo "worker 1 failed" >&2; rc=1; }
+wait "$W2" || { echo "worker 2 failed" >&2; rc=1; }
+
+if [ "$rc" -ne 0 ]; then
+  echo "distributed smoke FAILED" >&2
+  exit 1
+fi
+echo "distributed smoke OK (serve + 2 workers, bitwise identical to run_sim)"
