@@ -1,7 +1,9 @@
 //! Hot-path micro-benches (§Perf): the per-round cost centers of the
 //! three-layer stack, native and PJRT, plus end-to-end rounds.
 //!
-//!   kernels: blocked dot/axpy/matvec/CSR vs retained naive references
+//!   kernels: every SIMD dispatch arm (scalar blocked / avx2 / avx512
+//!            where available) of dot/axpy/CSR matvec+tmatvec, vs the
+//!            retained naive references
 //!   worker:  grad (native CSR)  |  grad (PJRT artifact)  |  whiten L^{†1/2}v
 //!   server:  sparse decompress L^{1/2}Δ  |  full server apply
 //!   sampling: Bernoulli draw + water-filling solve
@@ -19,6 +21,7 @@
 
 use smx::compress::{topk_compress, MatrixAware, SparseMsg};
 use smx::data::synth;
+use smx::linalg::simd::{self, Level};
 use smx::linalg::sparse::Csr;
 use smx::methods::{build, sync_round, Method, MethodSpec, RoundBuffers, Uplink};
 use smx::objective::smoothness::build_local;
@@ -92,35 +95,70 @@ fn main() -> anyhow::Result<()> {
     let x: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
     let mut g = vec![0.0; d];
 
-    // L0 kernels: blocked vs naive on the a8a shapes
+    // L0 kernels: every dispatch arm (scalar blocked, avx2, avx512 where
+    // the CPU has it) vs the naive pre-opt references, on the a8a shapes.
+    // The arm rows share one name scheme — "<kernel> <arm>" — so
+    // BENCH_hotpath.json diffs show the scalar-vs-SIMD margin per kernel.
+    let arms = Level::available();
+    println!("simd arms: {:?} (active: {:?})\n", arms, simd::active());
     {
         let a: Vec<f64> = (0..4096).map(|_| rng.normal()).collect();
         let b: Vec<f64> = (0..4096).map(|_| rng.normal()).collect();
-        rows.push(bench("dot blocked (n=4096)", 100, || {
-            black_box(smx::linalg::vector::dot(black_box(&a), black_box(&b)));
-        }));
+        for &lvl in &arms {
+            rows.push(bench(&format!("dot {} (n=4096)", lvl.name()), 100, || {
+                black_box(simd::dot_at(lvl, black_box(&a), black_box(&b)));
+            }));
+        }
         rows.push(bench("dot naive (pre-opt reference)", 100, || {
             black_box(naive_dot(black_box(&a), black_box(&b)));
         }));
         let mut y = vec![0.0; 4096];
-        rows.push(bench("axpy blocked (n=4096)", 100, || {
-            smx::linalg::vector::axpy(1.0000001, black_box(&a), &mut y);
-        }));
+        for &lvl in &arms {
+            rows.push(bench(&format!("axpy {} (n=4096)", lvl.name()), 100, || {
+                simd::axpy_at(lvl, 1.0000001, black_box(&a), &mut y);
+            }));
+        }
         rows.push(bench("axpy naive (pre-opt reference)", 100, || {
             naive_axpy(1.0000001, black_box(&a), &mut y);
         }));
 
         let mut gm = vec![0.0; m];
-        rows.push(bench("csr matvec blocked (a8a grad half)", 200, || {
-            shard.a.matvec_into(black_box(&x), &mut gm);
-        }));
+        for &lvl in &arms {
+            rows.push(bench(
+                &format!("csr matvec {} (a8a grad half)", lvl.name()),
+                200,
+                || {
+                    simd::csr_matvec_into_at(
+                        lvl,
+                        &shard.a.indptr,
+                        &shard.a.indices,
+                        &shard.a.values,
+                        black_box(&x),
+                        &mut gm,
+                    );
+                },
+            ));
+        }
         rows.push(bench("csr matvec naive (pre-opt reference)", 200, || {
             naive_csr_matvec_into(&shard.a, black_box(&x), &mut gm);
         }));
         let ym: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
-        rows.push(bench("csr tmatvec blocked (a8a grad half)", 200, || {
-            shard.a.tmatvec_into(black_box(&ym), &mut g);
-        }));
+        for &lvl in &arms {
+            rows.push(bench(
+                &format!("csr tmatvec {} (a8a grad half)", lvl.name()),
+                200,
+                || {
+                    simd::csr_tmatvec_into_at(
+                        lvl,
+                        &shard.a.indptr,
+                        &shard.a.indices,
+                        &shard.a.values,
+                        black_box(&ym),
+                        &mut g,
+                    );
+                },
+            ));
+        }
         rows.push(bench("csr tmatvec naive (pre-opt reference)", 200, || {
             naive_csr_tmatvec_into(&shard.a, black_box(&ym), &mut g);
         }));
@@ -186,17 +224,36 @@ fn main() -> anyhow::Result<()> {
             .apply_pow_sparse_into_with(0.5, black_box(&msg.idx), &msg.val, &mut g, &mut coeff);
     }));
 
-    // duke-scale low-rank root (d=7129, k=11)
+    // duke-scale low-rank root (d=7129, k=11): the fused single-matrix
+    // apply (what apply_pow_into_with now routes to) vs the pre-fusion
+    // two-matrix reference (QT cached row-major + Q, both streamed cold)
     let duke = synth::spec_by_name("duke").unwrap();
     let dds = synth::generate(duke, 1);
     let (_, dshards) = dds.prepare(duke.n, 1);
     let dloc = build_local(&dshards[0].a, 1e-3);
     let dx: Vec<f64> = (0..dshards[0].dim()).map(|_| rng.normal()).collect();
     let mut dw = vec![0.0; dshards[0].dim()];
-    rows.push(bench("whiten low-rank root (duke d=7129 k~11)", 200, || {
+    rows.push(bench("whiten low-rank fused (duke d=7129 k~11)", 200, || {
         dloc.root
-            .apply_pow_into_with(-0.5, black_box(&dx), &mut dw, &mut coeff);
+            .apply_pow_fused_into(-0.5, black_box(&dx), &mut dw, &mut coeff);
     }));
+    if let smx::linalg::PsdRoot::LowRankRidge { q, lam, mu, dim } = &dloc.root {
+        let qt = q.transpose();
+        let k = lam.len();
+        let mut coeffv = vec![0.0; k];
+        let p = -0.5;
+        let mus = if *mu <= 0.0 { 0.0 } else { mu.powf(p) };
+        rows.push(bench("whiten low-rank unfused (pre-opt reference)", 200, || {
+            let xb = black_box(&dx);
+            for c in 0..k {
+                coeffv[c] = smx::linalg::vector::dot(qt.row(c), xb)
+                    * ((lam[c] + *mu).powf(p) - mus);
+            }
+            for r in 0..*dim {
+                dw[r] = mus * xb[r] + smx::linalg::vector::dot(q.row(r), &coeffv);
+            }
+        }));
+    }
 
     // wire codec: top-k uplink on the duke shape (d=7129 — where the
     // delta-varint index coding beats the modeled ⌈log₂ d⌉ account)

@@ -410,38 +410,9 @@ mod tests {
         assert!(r.reached_target, "final residual {}", r.final_residual());
     }
 
-    #[test]
-    fn sim_and_threaded_agree_bitwise() {
-        let (shards, sm, x_star) = setup();
-        let spec = MethodSpec::new(
-            "diana+",
-            2.0,
-            SamplingKind::ImportanceDiana,
-            1e-3,
-            vec![0.0; sm.dim],
-        );
-        let cfg = RunConfig {
-            max_rounds: 50,
-            ..Default::default()
-        };
-
-        let mut m1 = build(&spec, &sm).unwrap();
-        let mut eng = engines(&shards);
-        let r1 = run_sim(&mut m1, &mut eng, &x_star, &cfg);
-
-        let m2 = build(&spec, &sm).unwrap();
-        let shards2 = shards.clone();
-        let factory: EngineFactory = Arc::new(move |i| {
-            Box::new(NativeEngine::from_shard(&shards2[i], 1e-3)) as Box<dyn GradEngine>
-        });
-        let r2 = run_threaded(m2, factory, &x_star, &cfg);
-
-        assert_eq!(r1.final_x, r2.final_x, "drivers diverged");
-        assert_eq!(
-            r1.records.last().unwrap().coords_up,
-            r2.records.last().unwrap().coords_up
-        );
-    }
+    // sim ≡ threaded ≡ distributed(loopback) bitwise identity is covered
+    // by the table-driven matrix test in `tests/driver_matrix.rs`
+    // ({3 methods × 2 samplings × 2 shard counts}).
 
     #[test]
     fn record_every_thins_records() {

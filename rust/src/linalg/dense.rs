@@ -55,38 +55,14 @@ impl Mat {
 
     /// out = A x
     ///
-    /// §Perf: processes 4 rows per pass sharing one stream of `x`, giving
-    /// LLVM four independent accumulator chains to vectorize; remainder
-    /// rows fall back to the 4-lane [`vector::dot`].
+    /// §Perf: dispatches through [`crate::linalg::simd`] — 4-row blocks
+    /// sharing one stream of `x`, each row on the canonical 4 accumulator
+    /// lanes (explicit AVX2 where available, blocked scalar otherwise,
+    /// bitwise identical either way).
     pub fn matvec_into(&self, x: &[f64], out: &mut [f64]) {
         assert_eq!(x.len(), self.cols);
         assert_eq!(out.len(), self.rows);
-        let cols = self.cols;
-        let r4 = self.rows / 4 * 4;
-        let mut r = 0;
-        while r < r4 {
-            let row0 = &self.data[r * cols..(r + 1) * cols];
-            let row1 = &self.data[(r + 1) * cols..(r + 2) * cols];
-            let row2 = &self.data[(r + 2) * cols..(r + 3) * cols];
-            let row3 = &self.data[(r + 3) * cols..(r + 4) * cols];
-            let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
-            for c in 0..cols {
-                let xc = x[c];
-                s0 += row0[c] * xc;
-                s1 += row1[c] * xc;
-                s2 += row2[c] * xc;
-                s3 += row3[c] * xc;
-            }
-            out[r] = s0;
-            out[r + 1] = s1;
-            out[r + 2] = s2;
-            out[r + 3] = s3;
-            r += 4;
-        }
-        while r < self.rows {
-            out[r] = vector::dot(self.row(r), x);
-            r += 1;
-        }
+        crate::linalg::simd::mat_matvec_into(&self.data, self.rows, self.cols, x, out);
     }
 
     pub fn matvec(&self, x: &[f64]) -> Vec<f64> {

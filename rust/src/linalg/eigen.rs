@@ -20,24 +20,48 @@ pub struct Eigh {
     pub v: Mat,
 }
 
+/// Mutable views of two distinct rows `p < q` of a row-major matrix —
+/// the shape [`vector::rot2`] wants.
+fn rows_pair_mut(m: &mut Mat, p: usize, q: usize) -> (&mut [f64], &mut [f64]) {
+    debug_assert!(p < q);
+    let cols = m.cols;
+    let (head, tail) = m.data.split_at_mut(q * cols);
+    (&mut head[p * cols..(p + 1) * cols], &mut tail[..cols])
+}
+
 /// Cyclic Jacobi eigensolver for symmetric matrices.
 ///
 /// Converges to machine precision for the well-conditioned PSD matrices we
 /// feed it (Gram matrices + ridge). Panics if `a` is not square.
+///
+/// §Perf: the row halves of each rotation — `M[p,·]/M[q,·]` and the
+/// eigenvector update — run through the SIMD [`vector::rot2`] kernel on
+/// contiguous rows. The eigenvector matrix is therefore accumulated
+/// *transposed* (`vt`, rows = eigenvectors) during the sweeps, so its
+/// per-rotation update touches two contiguous rows instead of two strided
+/// columns; it is transposed back once at the end. Same arithmetic per
+/// element as the pre-SIMD column loops, so results are bitwise identical.
 pub fn eigh(a: &Mat) -> Eigh {
     assert_eq!(a.rows, a.cols, "eigh needs a square matrix");
     let n = a.rows;
     let mut m = a.clone();
-    let mut v = Mat::eye(n);
     if n == 0 {
-        return Eigh { w: vec![], v };
+        return Eigh {
+            w: vec![],
+            v: Mat::eye(n),
+        };
     }
     if n == 1 {
         return Eigh {
             w: vec![m[(0, 0)]],
-            v,
+            v: Mat::eye(n),
         };
     }
+    // vt.row(j) is eigenvector j (V's column j) during iteration
+    let mut vt = Mat::eye(n);
+    // kernel dispatch resolved once for all O(n³) rotations — the rotated
+    // rows can be short (low-rank Gram cells have n = m_i ~ 11)
+    let lvl = crate::linalg::simd::active();
 
     let max_sweeps = 64;
     for _sweep in 0..max_sweeps {
@@ -69,30 +93,24 @@ pub fn eigh(a: &Mat) -> Eigh {
                 let c = 1.0 / (1.0 + t * t).sqrt();
                 let s = t * c;
 
-                // Apply rotation J(p,q,θ): M ← JᵀMJ, V ← VJ.
+                // Apply rotation J(p,q,θ): M ← JᵀMJ, Vᵀ ← JᵀVᵀ.
+                // Column half (strided — left as scalar):
                 for k in 0..n {
                     let mkp = m[(k, p)];
                     let mkq = m[(k, q)];
                     m[(k, p)] = c * mkp - s * mkq;
                     m[(k, q)] = s * mkp + c * mkq;
                 }
-                for k in 0..n {
-                    let mpk = m[(p, k)];
-                    let mqk = m[(q, k)];
-                    m[(p, k)] = c * mpk - s * mqk;
-                    m[(q, k)] = s * mpk + c * mqk;
-                }
-                for k in 0..n {
-                    let vkp = v[(k, p)];
-                    let vkq = v[(k, q)];
-                    v[(k, p)] = c * vkp - s * vkq;
-                    v[(k, q)] = s * vkp + c * vkq;
-                }
+                // Row halves (contiguous — SIMD rot2):
+                let (mp, mq) = rows_pair_mut(&mut m, p, q);
+                crate::linalg::simd::rot2_at(lvl, c, s, mp, mq);
+                let (vp, vq) = rows_pair_mut(&mut vt, p, q);
+                crate::linalg::simd::rot2_at(lvl, c, s, vp, vq);
             }
         }
     }
 
-    // Collect eigenvalues and sort ascending with eigenvector columns.
+    // Collect eigenvalues and sort ascending; vt rows become V's columns.
     let mut order: Vec<usize> = (0..n).collect();
     let w_raw: Vec<f64> = (0..n).map(|i| m[(i, i)]).collect();
     order.sort_by(|&i, &j| w_raw[i].partial_cmp(&w_raw[j]).unwrap());
@@ -100,7 +118,7 @@ pub fn eigh(a: &Mat) -> Eigh {
     let mut vs = Mat::zeros(n, n);
     for (new_c, &old_c) in order.iter().enumerate() {
         for r in 0..n {
-            vs[(r, new_c)] = v[(r, old_c)];
+            vs[(r, new_c)] = vt[(old_c, r)];
         }
     }
     Eigh { w, v: vs }

@@ -2,10 +2,18 @@
 //! CSR sparse matrices, symmetric eigensolvers, and PSD root operators
 //! (`L^{1/2}`, `L^{†1/2}`) used by the matrix-smoothness-aware
 //! compression protocol.
+//!
+//! The hot kernels (`vector::{dot, axpy, dist2, lincomb_into,
+//! wnorm2_diag, rot2}`, `Mat::matvec_into`, the CSR matvecs) route
+//! through [`simd`] — an explicit AVX2/AVX-512 layer with once-per-process
+//! runtime dispatch and a portable blocked-scalar fallback, all arms
+//! bitwise identical. `SMX_NO_SIMD=1` forces the scalar arm; see the
+//! [`simd`] module docs for the dispatch seam and the safety contracts.
 
 pub mod dense;
 pub mod eigen;
 pub mod psd;
+pub mod simd;
 pub mod sparse;
 pub mod vector;
 

@@ -13,6 +13,7 @@
 
 use crate::linalg::dense::Mat;
 use crate::linalg::eigen::{eigh, Eigh};
+use crate::linalg::simd;
 use crate::linalg::vector;
 
 const PINV_TOL: f64 = 1e-12;
@@ -29,10 +30,12 @@ pub enum PsdRoot {
         dim: usize,
     },
     LowRankRidge {
-        /// orthonormal columns spanning Range(B), d×k
+        /// orthonormal columns spanning Range(B), d×k. Both halves of the
+        /// fused apply stream this one matrix row-wise (`Qᵀx` as an axpy
+        /// accumulation over rows, then the output sweep as row dots), so
+        /// no transposed copy is kept — see
+        /// [`PsdRoot::apply_pow_fused_into`].
         q: Mat,
-        /// Qᵀ cached row-major (same access-pattern rationale as `vt`)
-        qt: Mat,
         /// eigenvalues of BBᵀ restricted to Range(B) (ascending, > 0)
         lam: Vec<f64>,
         /// ridge μ ≥ 0
@@ -95,10 +98,8 @@ impl PsdRoot {
                 q[(r, col)] = qv * scale;
             }
         }
-        let qt = q.transpose();
         PsdRoot::LowRankRidge {
             q,
-            qt,
             lam,
             mu,
             dim: d,
@@ -146,36 +147,69 @@ impl PsdRoot {
     /// `out = L^p · x`, writing eigen-coordinates into the caller-owned
     /// `coeff` scratch (resized on first use, then reused allocation-free
     /// — §Perf: this is on the per-round whiten path of every + method).
+    /// The low-rank arm routes through [`PsdRoot::apply_pow_fused_into`].
     pub fn apply_pow_into_with(&self, p: f64, x: &[f64], out: &mut [f64], coeff: &mut Vec<f64>) {
         match self {
             PsdRoot::Dense { eig, vt, dim } => {
                 assert_eq!(x.len(), *dim);
-                // out = V f(w) Vᵀ x   (Vᵀx via sequential rows of vt)
+                // out = V f(w) Vᵀ x   (Vᵀx via sequential rows of vt);
+                // dispatch resolved once, not per row (§Perf: rows can be
+                // short, so per-call dispatch would rival the work)
+                let lvl = simd::active();
                 let n = *dim;
                 let lmax = self.lambda_max();
                 coeff.clear();
                 coeff.resize(n, 0.0);
                 for c in 0..n {
-                    coeff[c] =
-                        crate::linalg::vector::dot(vt.row(c), x) * pinv_pow(eig.w[c], p, lmax);
+                    coeff[c] = simd::dot_at(lvl, vt.row(c), x) * pinv_pow(eig.w[c], p, lmax);
                 }
                 for r in 0..n {
-                    out[r] = crate::linalg::vector::dot(eig.v.row(r), coeff);
+                    out[r] = simd::dot_at(lvl, eig.v.row(r), coeff);
                 }
             }
-            PsdRoot::LowRankRidge { q, qt, lam, mu, dim } => {
+            PsdRoot::LowRankRidge { .. } => self.apply_pow_fused_into(p, x, out, coeff),
+        }
+    }
+
+    /// Fused low-rank apply: `out = μ^p x + Q ((λ+μ)^p − μ^p) Qᵀ x`
+    /// streaming the single `d×k` matrix `Q` for *both* halves — `Qᵀx`
+    /// accumulated as one axpy per row, the scale folded into the
+    /// eigen-coordinates, then the output sweep as one dot per row.
+    ///
+    /// §Perf: the pre-fusion path read two distinct `d×k` buffers (`Qᵀ`
+    /// cached row-major, then `Q`), every byte cold; this reads `Q` twice,
+    /// so the second sweep hits cache whenever `d·k` fits (duke:
+    /// 7129×11×8 B ≈ 0.6 MB) — halving DRAM traffic on the whiten — and
+    /// the transposed copy no longer exists at all.
+    ///
+    /// The dense arm has no second matrix to drop and simply delegates to
+    /// the eigenbasis apply.
+    pub fn apply_pow_fused_into(&self, p: f64, x: &[f64], out: &mut [f64], coeff: &mut Vec<f64>) {
+        match self {
+            PsdRoot::Dense { .. } => self.apply_pow_into_with(p, x, out, coeff),
+            PsdRoot::LowRankRidge { q, lam, mu, dim } => {
                 assert_eq!(x.len(), *dim);
+                // rows of Q are short (length k ≪ d), so resolve the
+                // kernel dispatch once for the whole apply — per-row
+                // dispatch would cost as much as the k mul-adds it guards
+                let lvl = simd::active();
                 let mus = ridge_pow(*mu, p);
-                // out = μ^p x + Q ((λ+μ)^p − μ^p) Qᵀ x
                 let k = lam.len();
+                // pass 1 over Q: coeff = Qᵀ x (row-wise accumulation)
                 coeff.clear();
                 coeff.resize(k, 0.0);
-                for c in 0..k {
-                    coeff[c] = crate::linalg::vector::dot(qt.row(c), x)
-                        * (ridge_pow(lam[c] + *mu, p) - mus);
+                for (r, &xr) in x.iter().enumerate() {
+                    if xr != 0.0 {
+                        simd::axpy_at(lvl, xr, q.row(r), coeff);
+                    }
                 }
+                // scale: eigen-coordinates pick up ((λ+μ)^p − μ^p)
+                for c in 0..k {
+                    coeff[c] *= ridge_pow(lam[c] + *mu, p) - mus;
+                }
+                // pass 2 over Q (warm): out = μ^p x + Q coeff
                 for r in 0..*dim {
-                    out[r] = mus * x[r] + crate::linalg::vector::dot(q.row(r), coeff);
+                    out[r] = mus * x[r] + simd::dot_at(lvl, q.row(r), coeff);
                 }
             }
         }
@@ -210,32 +244,37 @@ impl PsdRoot {
     ) {
         match self {
             PsdRoot::Dense { eig, dim, .. } => {
+                let lvl = simd::active();
                 let n = *dim;
                 let lmax = self.lambda_max();
                 // coeff[c] = Σ_t V[i_t, c]·val_t — accumulate rows of V
                 // sequentially (each row is the eigen-coordinates of e_i),
-                // then scale by f(w) (§Perf: no column striding)
+                // then scale by f(w) (§Perf: no column striding; dispatch
+                // hoisted out of the per-nonzero loop)
                 coeff.clear();
                 coeff.resize(n, 0.0);
                 for (t, &i) in idx.iter().enumerate() {
-                    crate::linalg::vector::axpy(val[t], eig.v.row(i as usize), coeff);
+                    simd::axpy_at(lvl, val[t], eig.v.row(i as usize), coeff);
                 }
                 for c in 0..n {
                     coeff[c] *= pinv_pow(eig.w[c], p, lmax);
                 }
                 for r in 0..n {
-                    out[r] = crate::linalg::vector::dot(eig.v.row(r), coeff);
+                    out[r] = simd::dot_at(lvl, eig.v.row(r), coeff);
                 }
             }
             PsdRoot::LowRankRidge { q, lam, mu, dim, .. } => {
+                // the sparse-input face of the fused kernel: pass 1 over Q
+                // touches only the nonzero rows, pass 2 is the same warm
+                // output sweep as `apply_pow_fused_into` (dispatch hoisted
+                // — rows of Q are length k ≪ d)
+                let lvl = simd::active();
                 let mus = ridge_pow(*mu, p);
                 let k = lam.len();
-                // Qᵀ x_sparse: for each nonzero, walk row i of Q (len k,
-                // sequential)
                 coeff.clear();
                 coeff.resize(k, 0.0);
                 for (t, &i) in idx.iter().enumerate() {
-                    crate::linalg::vector::axpy(val[t], q.row(i as usize), coeff);
+                    simd::axpy_at(lvl, val[t], q.row(i as usize), coeff);
                 }
                 for c in 0..k {
                     coeff[c] *= ridge_pow(lam[c] + *mu, p) - mus;
@@ -245,7 +284,7 @@ impl PsdRoot {
                     out[i as usize] = mus * val[t];
                 }
                 for r in 0..*dim {
-                    out[r] += crate::linalg::vector::dot(q.row(r), coeff);
+                    out[r] += simd::dot_at(lvl, q.row(r), coeff);
                 }
             }
         }

@@ -1,0 +1,308 @@
+//! AVX2 arm: 256-bit f64 lanes, hand-written gathers for the CSR matvec.
+//!
+//! Every function is `unsafe fn` + `#[target_feature(enable = "avx2")]`;
+//! the caller (the dispatch wrappers in [`super`]) guarantees
+//!
+//! 1. the CPU supports AVX2 (runtime-detected [`Level`](super::Level)),
+//! 2. the slice-length relations listed per function below.
+//!
+//! All memory access is either bounds-checked slice indexing or
+//! `loadu`/`storeu` on offsets proven in-bounds by the loop structure
+//! (`chunk·4 + 4 ≤ len`); the single data-dependent access — the gather —
+//! is guarded by an explicit index check immediately before it. No FMA
+//! anywhere: `mul` then `add`, matching the scalar arm bit-for-bit (see
+//! the module's determinism contract).
+
+#![allow(clippy::missing_safety_doc)] // contracts are on the module + per fn below
+
+use core::arch::x86_64::*;
+
+/// Horizontal sum in the canonical order `(s0 + s1) + (s2 + s3)`.
+///
+/// SAFETY: requires AVX (implied by the callers' `avx2` feature).
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn hsum(v: __m256d) -> f64 {
+    let lo = _mm256_castpd256_pd128(v); // [s0, s1]
+    let hi = _mm256_extractf128_pd::<1>(v); // [s2, s3]
+    let lo_s = _mm_add_sd(lo, _mm_unpackhi_pd(lo, lo)); // s0 + s1
+    let hi_s = _mm_add_sd(hi, _mm_unpackhi_pd(hi, hi)); // s2 + s3
+    _mm_cvtsd_f64(_mm_add_sd(lo_s, hi_s))
+}
+
+/// SAFETY: AVX2 available; `a.len() == b.len()`.
+#[target_feature(enable = "avx2")]
+pub unsafe fn dot(a: &[f64], b: &[f64]) -> f64 {
+    let n = a.len();
+    let chunks = n / 4;
+    let ap = a.as_ptr();
+    let bp = b.as_ptr();
+    let mut acc = _mm256_setzero_pd();
+    for i in 0..chunks {
+        let av = _mm256_loadu_pd(ap.add(i * 4));
+        let bv = _mm256_loadu_pd(bp.add(i * 4));
+        acc = _mm256_add_pd(acc, _mm256_mul_pd(av, bv));
+    }
+    let mut s = hsum(acc);
+    for j in chunks * 4..n {
+        s += a[j] * b[j];
+    }
+    s
+}
+
+/// SAFETY: AVX2 available; `a.len() == b.len()`.
+#[target_feature(enable = "avx2")]
+pub unsafe fn dist2(a: &[f64], b: &[f64]) -> f64 {
+    let n = a.len();
+    let chunks = n / 4;
+    let ap = a.as_ptr();
+    let bp = b.as_ptr();
+    let mut acc = _mm256_setzero_pd();
+    for i in 0..chunks {
+        let d = _mm256_sub_pd(_mm256_loadu_pd(ap.add(i * 4)), _mm256_loadu_pd(bp.add(i * 4)));
+        acc = _mm256_add_pd(acc, _mm256_mul_pd(d, d));
+    }
+    let mut s = hsum(acc);
+    for j in chunks * 4..n {
+        let d = a[j] - b[j];
+        s += d * d;
+    }
+    s
+}
+
+/// SAFETY: AVX2 available; `x.len() == w.len()`.
+#[target_feature(enable = "avx2")]
+pub unsafe fn wnorm2_diag(x: &[f64], w: &[f64]) -> f64 {
+    let n = x.len();
+    let chunks = n / 4;
+    let xp = x.as_ptr();
+    let wp = w.as_ptr();
+    let mut acc = _mm256_setzero_pd();
+    for i in 0..chunks {
+        let xv = _mm256_loadu_pd(xp.add(i * 4));
+        let wv = _mm256_loadu_pd(wp.add(i * 4));
+        // (w·x)·x — same association as the scalar arm's w[j]*x[j]*x[j]
+        acc = _mm256_add_pd(acc, _mm256_mul_pd(_mm256_mul_pd(wv, xv), xv));
+    }
+    let mut s = hsum(acc);
+    for j in chunks * 4..n {
+        s += w[j] * x[j] * x[j];
+    }
+    s
+}
+
+/// SAFETY: AVX2 available; `x.len() == y.len()`.
+#[target_feature(enable = "avx2")]
+pub unsafe fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    let n = x.len();
+    let chunks = n / 4;
+    let xp = x.as_ptr();
+    let yp = y.as_mut_ptr();
+    let av = _mm256_set1_pd(alpha);
+    for i in 0..chunks {
+        let yv = _mm256_loadu_pd(yp.add(i * 4));
+        let xv = _mm256_loadu_pd(xp.add(i * 4));
+        _mm256_storeu_pd(yp.add(i * 4), _mm256_add_pd(yv, _mm256_mul_pd(av, xv)));
+    }
+    for j in chunks * 4..n {
+        y[j] += alpha * x[j];
+    }
+}
+
+/// SAFETY: AVX2 available; `a.len() == b.len() == out.len()`.
+#[target_feature(enable = "avx2")]
+pub unsafe fn lincomb_into(alpha: f64, a: &[f64], beta: f64, b: &[f64], out: &mut [f64]) {
+    let n = a.len();
+    let chunks = n / 4;
+    let ap = a.as_ptr();
+    let bp = b.as_ptr();
+    let op = out.as_mut_ptr();
+    let av = _mm256_set1_pd(alpha);
+    let bv = _mm256_set1_pd(beta);
+    for i in 0..chunks {
+        let ta = _mm256_mul_pd(av, _mm256_loadu_pd(ap.add(i * 4)));
+        let tb = _mm256_mul_pd(bv, _mm256_loadu_pd(bp.add(i * 4)));
+        _mm256_storeu_pd(op.add(i * 4), _mm256_add_pd(ta, tb));
+    }
+    for j in chunks * 4..n {
+        out[j] = alpha * a[j] + beta * b[j];
+    }
+}
+
+/// SAFETY: AVX2 available; `a.len() == b.len()`.
+#[target_feature(enable = "avx2")]
+pub unsafe fn rot2(c: f64, s: f64, a: &mut [f64], b: &mut [f64]) {
+    let n = a.len();
+    let chunks = n / 4;
+    let ap = a.as_mut_ptr();
+    let bp = b.as_mut_ptr();
+    let cv = _mm256_set1_pd(c);
+    let sv = _mm256_set1_pd(s);
+    for i in 0..chunks {
+        let va = _mm256_loadu_pd(ap.add(i * 4));
+        let vb = _mm256_loadu_pd(bp.add(i * 4));
+        _mm256_storeu_pd(
+            ap.add(i * 4),
+            _mm256_sub_pd(_mm256_mul_pd(cv, va), _mm256_mul_pd(sv, vb)),
+        );
+        _mm256_storeu_pd(
+            bp.add(i * 4),
+            _mm256_add_pd(_mm256_mul_pd(sv, va), _mm256_mul_pd(cv, vb)),
+        );
+    }
+    for j in chunks * 4..n {
+        let aj = a[j];
+        let bj = b[j];
+        a[j] = c * aj - s * bj;
+        b[j] = s * aj + c * bj;
+    }
+}
+
+/// Dense row-major matvec: 4-row blocks sharing each loaded `x` chunk,
+/// one 4-lane accumulator per row.
+///
+/// SAFETY: AVX2 available; `data.len() == rows·cols`, `x.len() == cols`,
+/// `out.len() == rows` (asserted by the dispatch wrapper).
+#[target_feature(enable = "avx2")]
+pub unsafe fn mat_matvec_into(data: &[f64], rows: usize, cols: usize, x: &[f64], out: &mut [f64]) {
+    let r4 = rows / 4 * 4;
+    let c4 = cols / 4 * 4;
+    let xp = x.as_ptr();
+    let mut r = 0;
+    while r < r4 {
+        // in-bounds: (r+3)·cols + cols ≤ rows·cols == data.len()
+        let row0 = data.as_ptr().add(r * cols);
+        let row1 = data.as_ptr().add((r + 1) * cols);
+        let row2 = data.as_ptr().add((r + 2) * cols);
+        let row3 = data.as_ptr().add((r + 3) * cols);
+        let mut a0 = _mm256_setzero_pd();
+        let mut a1 = _mm256_setzero_pd();
+        let mut a2 = _mm256_setzero_pd();
+        let mut a3 = _mm256_setzero_pd();
+        let mut c = 0;
+        while c < c4 {
+            let xv = _mm256_loadu_pd(xp.add(c));
+            a0 = _mm256_add_pd(a0, _mm256_mul_pd(_mm256_loadu_pd(row0.add(c)), xv));
+            a1 = _mm256_add_pd(a1, _mm256_mul_pd(_mm256_loadu_pd(row1.add(c)), xv));
+            a2 = _mm256_add_pd(a2, _mm256_mul_pd(_mm256_loadu_pd(row2.add(c)), xv));
+            a3 = _mm256_add_pd(a3, _mm256_mul_pd(_mm256_loadu_pd(row3.add(c)), xv));
+            c += 4;
+        }
+        let mut t = [hsum(a0), hsum(a1), hsum(a2), hsum(a3)];
+        while c < cols {
+            let xc = x[c];
+            t[0] += *row0.add(c) * xc;
+            t[1] += *row1.add(c) * xc;
+            t[2] += *row2.add(c) * xc;
+            t[3] += *row3.add(c) * xc;
+            c += 1;
+        }
+        out[r] = t[0];
+        out[r + 1] = t[1];
+        out[r + 2] = t[2];
+        out[r + 3] = t[3];
+        r += 4;
+    }
+    while r < rows {
+        out[r] = dot(&data[r * cols..(r + 1) * cols], x);
+        r += 1;
+    }
+}
+
+/// CSR matvec with `vgatherdpd`: 4 nonzeros per iteration, the `x` loads
+/// done by one hardware gather.
+///
+/// SAFETY: AVX2 available; `indptr.len() == out.len()+1`,
+/// `indices.len() == values.len()`, `x.len() ≤ i32::MAX` (all checked by
+/// the dispatch wrapper). Row ranges come from bounds-checked slicing,
+/// and each 4 gather offsets are checked `< x.len()` right before the
+/// gather — a corrupted matrix panics exactly like the scalar arm.
+#[target_feature(enable = "avx2")]
+pub unsafe fn csr_matvec_into(
+    indptr: &[usize],
+    indices: &[u32],
+    values: &[f64],
+    x: &[f64],
+    out: &mut [f64],
+) {
+    let xp = x.as_ptr();
+    let xn = x.len();
+    for r in 0..out.len() {
+        let (s, e) = (indptr[r], indptr[r + 1]);
+        let idx = &indices[s..e];
+        let val = &values[s..e];
+        let nnz = idx.len();
+        let k4 = nnz / 4 * 4;
+        let mut acc = _mm256_setzero_pd();
+        let mut k = 0;
+        while k < k4 {
+            let (i0, i1, i2, i3) = (
+                idx[k] as usize,
+                idx[k + 1] as usize,
+                idx[k + 2] as usize,
+                idx[k + 3] as usize,
+            );
+            // the gather bypasses slice bounds checks — enforce them here
+            assert!(
+                i0.max(i1).max(i2).max(i3) < xn,
+                "CSR column index out of bounds"
+            );
+            // offsets < x.len() ≤ i32::MAX, so the i32 lanes are non-negative
+            let vidx = _mm_loadu_si128(idx.as_ptr().add(k) as *const __m128i);
+            let g = _mm256_i32gather_pd::<8>(xp, vidx);
+            let vv = _mm256_loadu_pd(val.as_ptr().add(k));
+            acc = _mm256_add_pd(acc, _mm256_mul_pd(vv, g));
+            k += 4;
+        }
+        let mut sacc = hsum(acc);
+        while k < nnz {
+            sacc += val[k] * x[idx[k] as usize];
+            k += 1;
+        }
+        out[r] = sacc;
+    }
+}
+
+/// CSR transposed matvec: the products `yr·val` run 4 per vector op, the
+/// scatter stores stay scalar (AVX2 has no scatter) and bounds-checked.
+/// Zeroes `out` first.
+///
+/// SAFETY: AVX2 available; `indptr.len() == y.len()+1`,
+/// `indices.len() == values.len()` (asserted by the dispatch wrapper).
+#[target_feature(enable = "avx2")]
+pub unsafe fn csr_tmatvec_into(
+    indptr: &[usize],
+    indices: &[u32],
+    values: &[f64],
+    y: &[f64],
+    out: &mut [f64],
+) {
+    out.fill(0.0);
+    let mut tmp = [0.0f64; 4];
+    for r in 0..y.len() {
+        let yr = y[r];
+        if yr == 0.0 {
+            continue;
+        }
+        let (s, e) = (indptr[r], indptr[r + 1]);
+        let idx = &indices[s..e];
+        let val = &values[s..e];
+        let nnz = idx.len();
+        let k4 = nnz / 4 * 4;
+        let yv = _mm256_set1_pd(yr);
+        let mut k = 0;
+        while k < k4 {
+            let vv = _mm256_loadu_pd(val.as_ptr().add(k));
+            _mm256_storeu_pd(tmp.as_mut_ptr(), _mm256_mul_pd(yv, vv));
+            out[idx[k] as usize] += tmp[0];
+            out[idx[k + 1] as usize] += tmp[1];
+            out[idx[k + 2] as usize] += tmp[2];
+            out[idx[k + 3] as usize] += tmp[3];
+            k += 4;
+        }
+        while k < nnz {
+            out[idx[k] as usize] += yr * val[k];
+            k += 1;
+        }
+    }
+}

@@ -1,0 +1,84 @@
+//! AVX-512 arm (cargo feature `avx512`, Rust ≥ 1.89 — the release that
+//! stabilized the `_mm512_*` intrinsics; the crate's default MSRV stays
+//! 1.70 because this module is compiled out without the feature).
+//!
+//! Only the *elementwise* kernels are widened to 512 bits: they are
+//! order-free, so an 8-lane body stays bitwise identical to the scalar
+//! arm. Reductions keep the canonical 4-lane order and therefore reuse
+//! the AVX2 bodies (see the dispatch in [`super`]); widening them would
+//! change the summation order and break the cross-arm bitwise contract.
+//!
+//! Safety contracts mirror [`super::avx2`]: the dispatch wrapper proves
+//! the length relations and only routes here when `avx512f` was runtime
+//! detected.
+
+#![allow(clippy::missing_safety_doc)] // contracts are on the module + per fn below
+
+use core::arch::x86_64::*;
+
+/// SAFETY: AVX-512F available; `x.len() == y.len()`.
+#[target_feature(enable = "avx512f")]
+pub unsafe fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    let n = x.len();
+    let chunks = n / 8;
+    let xp = x.as_ptr();
+    let yp = y.as_mut_ptr();
+    let av = _mm512_set1_pd(alpha);
+    for i in 0..chunks {
+        let yv = _mm512_loadu_pd(yp.add(i * 8));
+        let xv = _mm512_loadu_pd(xp.add(i * 8));
+        _mm512_storeu_pd(yp.add(i * 8), _mm512_add_pd(yv, _mm512_mul_pd(av, xv)));
+    }
+    for j in chunks * 8..n {
+        y[j] += alpha * x[j];
+    }
+}
+
+/// SAFETY: AVX-512F available; `a.len() == b.len() == out.len()`.
+#[target_feature(enable = "avx512f")]
+pub unsafe fn lincomb_into(alpha: f64, a: &[f64], beta: f64, b: &[f64], out: &mut [f64]) {
+    let n = a.len();
+    let chunks = n / 8;
+    let ap = a.as_ptr();
+    let bp = b.as_ptr();
+    let op = out.as_mut_ptr();
+    let av = _mm512_set1_pd(alpha);
+    let bv = _mm512_set1_pd(beta);
+    for i in 0..chunks {
+        let ta = _mm512_mul_pd(av, _mm512_loadu_pd(ap.add(i * 8)));
+        let tb = _mm512_mul_pd(bv, _mm512_loadu_pd(bp.add(i * 8)));
+        _mm512_storeu_pd(op.add(i * 8), _mm512_add_pd(ta, tb));
+    }
+    for j in chunks * 8..n {
+        out[j] = alpha * a[j] + beta * b[j];
+    }
+}
+
+/// SAFETY: AVX-512F available; `a.len() == b.len()`.
+#[target_feature(enable = "avx512f")]
+pub unsafe fn rot2(c: f64, s: f64, a: &mut [f64], b: &mut [f64]) {
+    let n = a.len();
+    let chunks = n / 8;
+    let ap = a.as_mut_ptr();
+    let bp = b.as_mut_ptr();
+    let cv = _mm512_set1_pd(c);
+    let sv = _mm512_set1_pd(s);
+    for i in 0..chunks {
+        let va = _mm512_loadu_pd(ap.add(i * 8));
+        let vb = _mm512_loadu_pd(bp.add(i * 8));
+        _mm512_storeu_pd(
+            ap.add(i * 8),
+            _mm512_sub_pd(_mm512_mul_pd(cv, va), _mm512_mul_pd(sv, vb)),
+        );
+        _mm512_storeu_pd(
+            bp.add(i * 8),
+            _mm512_add_pd(_mm512_mul_pd(sv, va), _mm512_mul_pd(cv, vb)),
+        );
+    }
+    for j in chunks * 8..n {
+        let aj = a[j];
+        let bj = b[j];
+        a[j] = c * aj - s * bj;
+        b[j] = s * aj + c * bj;
+    }
+}

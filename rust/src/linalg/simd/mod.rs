@@ -1,0 +1,478 @@
+//! Explicit SIMD kernel layer with runtime dispatch.
+//!
+//! PR 1's blocked loops lean on LLVM auto-vectorization; this module makes
+//! the vector lanes explicit (`std::arch` AVX2 intrinsics, AVX-512 behind
+//! the off-by-default `avx512` cargo feature) behind the same safe
+//! signatures the rest of the crate already calls
+//! ([`vector`](crate::linalg::vector), [`Mat::matvec_into`]
+//! (crate::linalg::dense::Mat::matvec_into), the CSR kernels). The CSR
+//! matvec is where hand-written code wins outright: the per-row
+//! `x[idx[k]]` loads become one `_mm256_i32gather_pd` per 4 nonzeros.
+//!
+//! # The dispatch seam
+//!
+//! [`active()`] picks a [`Level`] exactly once per process:
+//!
+//! 1. `SMX_NO_SIMD=1` (any non-empty value other than `0`) forces
+//!    [`Level::Scalar`] — the portable blocked-loop fallback in
+//!    [`scalar`]. This is how CI exercises both arms.
+//! 2. Otherwise `is_x86_feature_detected!` selects the widest supported
+//!    level: `avx512f` ⇒ [`Level::Avx512`] (only with the `avx512` cargo
+//!    feature, which needs Rust ≥ 1.89), `avx2` ⇒ [`Level::Avx2`].
+//! 3. Non-x86_64 targets and Miri always resolve to [`Level::Scalar`].
+//!
+//! Every public kernel (`dot`, `axpy`, …) reads the cached level; the
+//! `*_at(level, …)` variants take it explicitly so tests and benches can
+//! run *both dispatch arms in the same process* (see
+//! `tests/kernel_parity.rs`).
+//!
+//! # Determinism contract
+//!
+//! All dispatch arms are **bitwise identical** for every kernel, on every
+//! input — not merely ULP-close. This is what keeps `SMX_NO_SIMD=1` runs
+//! bitwise reproducible against default runs, and it is cheap to provide:
+//!
+//! * Elementwise kernels (`axpy`, `lincomb_into`, `rot2`, the CSR
+//!   `tmatvec` scatter) perform the same IEEE mul/add per element in every
+//!   arm (no FMA contraction — `mul` then `add`, which is also what the
+//!   scalar source expresses).
+//! * Reductions (`dot`, `dist2`, `wnorm2_diag`, both matvecs) fix one
+//!   canonical order: 4 independent lanes over `chunks = n/4` blocks,
+//!   reduced as `(s0+s1)+(s2+s3)`, then a sequential scalar tail. The
+//!   scalar arm writes that order with 4 named accumulators; the AVX2 arm
+//!   holds the same 4 lanes in one `__m256d`. The AVX-512 arm deliberately
+//!   reuses the AVX2 reduction bodies (8-lane accumulators would change
+//!   the order) and only widens the elementwise kernels to 512 bits.
+//!
+//! The property suite asserts the cross-arm bitwise guarantee on
+//! adversarial inputs (denormals, ±0, 1e300-scale magnitudes, remainder
+//! tails 0–7, misaligned slices).
+//!
+//! # Safety
+//!
+//! All `unsafe` is cordoned here and in [`avx2`]/[`avx512`]. Two contract
+//! families, each discharged *before* the `unsafe` call:
+//!
+//! * **CPU feature**: the safe `*_at` entry points `clamp` any level the
+//!   hardware does not support down to `Scalar` before dispatching (one
+//!   cached compare), so a caller-constructed [`Level`] can never reach a
+//!   `#[target_feature]` body the CPU lacks — the wrappers stay sound for
+//!   arbitrary safe callers, and levels from [`active()`] /
+//!   [`Level::available()`] pass through unchanged.
+//! * **Bounds**: the dispatch wrappers below `assert!` every slice-length
+//!   relation the intrinsic bodies rely on (equal vector lengths,
+//!   `data.len() == rows·cols`, CSR row ranges inside `indices`/`values`).
+//!   The one data-dependent case — gather offsets in the CSR matvec —
+//!   is checked per 4-chunk against `x.len()` immediately before the
+//!   gather (plus a `cols ≤ i32::MAX` gate here, since the offsets ride
+//!   in i32 lanes), so even a corrupted `Csr` panics like the scalar arm
+//!   instead of reading out of bounds.
+
+pub mod scalar;
+
+#[cfg(target_arch = "x86_64")]
+pub(crate) mod avx2;
+
+#[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+pub(crate) mod avx512;
+
+use std::sync::OnceLock;
+
+/// A dispatch arm. Ordered by width (`Scalar < Avx2 < Avx512`); `Scalar`
+/// is always available.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    /// Portable blocked loops (the PR 1 kernels) — the fallback arm and
+    /// the reference the SIMD arms must match bitwise.
+    Scalar,
+    /// 256-bit f64 lanes + `vgatherdpd` (x86_64 with AVX2).
+    Avx2,
+    /// 512-bit elementwise lanes; reductions share the AVX2 bodies to
+    /// keep the canonical 4-lane order. Requires the `avx512` cargo
+    /// feature (Rust ≥ 1.89) *and* runtime `avx512f`.
+    Avx512,
+}
+
+impl Level {
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Scalar => "scalar",
+            Level::Avx2 => "avx2",
+            Level::Avx512 => "avx512",
+        }
+    }
+
+    /// Every level the running CPU supports (always includes `Scalar`),
+    /// independent of `SMX_NO_SIMD` — this is what tests iterate to run
+    /// all arms in one process.
+    pub fn available() -> Vec<Level> {
+        let mut v = vec![Level::Scalar];
+        let top = detect();
+        if top != Level::Scalar {
+            v.push(Level::Avx2);
+        }
+        if top == Level::Avx512 {
+            v.push(Level::Avx512);
+        }
+        v
+    }
+}
+
+/// Widest level the hardware supports (ignores `SMX_NO_SIMD`).
+pub fn detect() -> Level {
+    if cfg!(miri) {
+        return Level::Scalar;
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        #[cfg(feature = "avx512")]
+        if is_x86_feature_detected!("avx512f") {
+            return Level::Avx512;
+        }
+        if is_x86_feature_detected!("avx2") {
+            return Level::Avx2;
+        }
+    }
+    Level::Scalar
+}
+
+/// Pure resolution rule: what [`active()`] returns given the env override
+/// and the hardware level. Split out so tests can cover the override
+/// without mutating process env.
+pub fn resolve(no_simd: Option<&str>, hw: Level) -> Level {
+    match no_simd {
+        Some(v) if !v.is_empty() && v != "0" => Level::Scalar,
+        _ => hw,
+    }
+}
+
+static HW: OnceLock<Level> = OnceLock::new();
+
+/// Cached hardware level (ignores `SMX_NO_SIMD`).
+#[inline]
+fn hw() -> Level {
+    *HW.get_or_init(detect)
+}
+
+/// Soundness gate for the safe `*_at` entry points: `Level` is freely
+/// constructible, so a caller could pass `Avx2` on a CPU without it —
+/// clamp anything the hardware does not support down to `Scalar` before
+/// the `unsafe` dispatch. One cached atomic load + compare per call;
+/// levels from [`active()`]/[`Level::available()`] always pass through
+/// unchanged.
+#[inline]
+fn clamp(level: Level) -> Level {
+    if level <= hw() {
+        level
+    } else {
+        Level::Scalar
+    }
+}
+
+static ACTIVE: OnceLock<Level> = OnceLock::new();
+
+/// The process-wide dispatch arm, selected once: `SMX_NO_SIMD` override
+/// over [`detect()`].
+#[inline]
+pub fn active() -> Level {
+    *ACTIVE.get_or_init(|| {
+        let env = std::env::var("SMX_NO_SIMD").ok();
+        resolve(env.as_deref(), hw())
+    })
+}
+
+// ---- vector kernels ----------------------------------------------------
+//
+// Each wrapper asserts the length relations its unsafe arm relies on (the
+// scalar arm would panic on the same violation via slice indexing, so the
+// asserts change no observable behavior — they only make the bound
+// explicit before the raw-pointer code runs).
+
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    dot_at(active(), a, b)
+}
+
+#[inline]
+pub fn dot_at(level: Level, a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    match clamp(level) {
+        Level::Scalar => scalar::dot(a, b),
+        // SAFETY: a non-scalar level implies AVX2 is available (module
+        // contract); lengths asserted equal above.
+        #[cfg(target_arch = "x86_64")]
+        _ => unsafe { avx2::dot(a, b) },
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => scalar::dot(a, b),
+    }
+}
+
+#[inline]
+pub fn dist2(a: &[f64], b: &[f64]) -> f64 {
+    dist2_at(active(), a, b)
+}
+
+#[inline]
+pub fn dist2_at(level: Level, a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    match clamp(level) {
+        Level::Scalar => scalar::dist2(a, b),
+        // SAFETY: AVX2 available per level; lengths asserted equal.
+        #[cfg(target_arch = "x86_64")]
+        _ => unsafe { avx2::dist2(a, b) },
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => scalar::dist2(a, b),
+    }
+}
+
+#[inline]
+pub fn wnorm2_diag(x: &[f64], w: &[f64]) -> f64 {
+    wnorm2_diag_at(active(), x, w)
+}
+
+#[inline]
+pub fn wnorm2_diag_at(level: Level, x: &[f64], w: &[f64]) -> f64 {
+    assert_eq!(x.len(), w.len());
+    match clamp(level) {
+        Level::Scalar => scalar::wnorm2_diag(x, w),
+        // SAFETY: AVX2 available per level; lengths asserted equal.
+        #[cfg(target_arch = "x86_64")]
+        _ => unsafe { avx2::wnorm2_diag(x, w) },
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => scalar::wnorm2_diag(x, w),
+    }
+}
+
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    axpy_at(active(), alpha, x, y)
+}
+
+#[inline]
+pub fn axpy_at(level: Level, alpha: f64, x: &[f64], y: &mut [f64]) {
+    assert_eq!(x.len(), y.len());
+    match clamp(level) {
+        Level::Scalar => scalar::axpy(alpha, x, y),
+        // SAFETY: AVX-512F available per level; lengths asserted equal.
+        #[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+        Level::Avx512 => unsafe { avx512::axpy(alpha, x, y) },
+        // SAFETY: AVX2 available per level; lengths asserted equal.
+        #[cfg(target_arch = "x86_64")]
+        _ => unsafe { avx2::axpy(alpha, x, y) },
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => scalar::axpy(alpha, x, y),
+    }
+}
+
+#[inline]
+pub fn lincomb_into(alpha: f64, a: &[f64], beta: f64, b: &[f64], out: &mut [f64]) {
+    lincomb_into_at(active(), alpha, a, beta, b, out)
+}
+
+#[inline]
+pub fn lincomb_into_at(
+    level: Level,
+    alpha: f64,
+    a: &[f64],
+    beta: f64,
+    b: &[f64],
+    out: &mut [f64],
+) {
+    assert_eq!(a.len(), b.len());
+    assert_eq!(a.len(), out.len());
+    match clamp(level) {
+        Level::Scalar => scalar::lincomb_into(alpha, a, beta, b, out),
+        // SAFETY: AVX-512F available per level; lengths asserted equal.
+        #[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+        Level::Avx512 => unsafe { avx512::lincomb_into(alpha, a, beta, b, out) },
+        // SAFETY: AVX2 available per level; lengths asserted equal.
+        #[cfg(target_arch = "x86_64")]
+        _ => unsafe { avx2::lincomb_into(alpha, a, beta, b, out) },
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => scalar::lincomb_into(alpha, a, beta, b, out),
+    }
+}
+
+#[inline]
+pub fn rot2(c: f64, s: f64, a: &mut [f64], b: &mut [f64]) {
+    rot2_at(active(), c, s, a, b)
+}
+
+/// Plane rotation on two rows: `(a, b) ← (c·a − s·b, s·a + c·b)` —
+/// the Jacobi eigensolver's inner update, elementwise so every arm is
+/// bitwise identical.
+#[inline]
+pub fn rot2_at(level: Level, c: f64, s: f64, a: &mut [f64], b: &mut [f64]) {
+    assert_eq!(a.len(), b.len());
+    match clamp(level) {
+        Level::Scalar => scalar::rot2(c, s, a, b),
+        // SAFETY: AVX-512F available per level; lengths asserted equal.
+        #[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+        Level::Avx512 => unsafe { avx512::rot2(c, s, a, b) },
+        // SAFETY: AVX2 available per level; lengths asserted equal.
+        #[cfg(target_arch = "x86_64")]
+        _ => unsafe { avx2::rot2(c, s, a, b) },
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => scalar::rot2(c, s, a, b),
+    }
+}
+
+// ---- dense matvec ------------------------------------------------------
+
+#[inline]
+pub fn mat_matvec_into(data: &[f64], rows: usize, cols: usize, x: &[f64], out: &mut [f64]) {
+    mat_matvec_into_at(active(), data, rows, cols, x, out)
+}
+
+/// `out = A·x` for a row-major `rows × cols` matrix in `data`.
+pub fn mat_matvec_into_at(
+    level: Level,
+    data: &[f64],
+    rows: usize,
+    cols: usize,
+    x: &[f64],
+    out: &mut [f64],
+) {
+    assert_eq!(data.len(), rows * cols);
+    assert_eq!(x.len(), cols);
+    assert_eq!(out.len(), rows);
+    match clamp(level) {
+        Level::Scalar => scalar::mat_matvec_into(data, rows, cols, x, out),
+        // SAFETY: AVX2 available per level; the three shape relations the
+        // body's raw-pointer arithmetic needs are asserted above.
+        #[cfg(target_arch = "x86_64")]
+        _ => unsafe { avx2::mat_matvec_into(data, rows, cols, x, out) },
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => scalar::mat_matvec_into(data, rows, cols, x, out),
+    }
+}
+
+// ---- CSR kernels -------------------------------------------------------
+
+#[inline]
+pub fn csr_matvec_into(
+    indptr: &[usize],
+    indices: &[u32],
+    values: &[f64],
+    x: &[f64],
+    out: &mut [f64],
+) {
+    csr_matvec_into_at(active(), indptr, indices, values, x, out)
+}
+
+/// `out = A·x` for a CSR matrix (`out.len()` rows).
+pub fn csr_matvec_into_at(
+    level: Level,
+    indptr: &[usize],
+    indices: &[u32],
+    values: &[f64],
+    x: &[f64],
+    out: &mut [f64],
+) {
+    assert_eq!(indptr.len(), out.len() + 1);
+    assert_eq!(indices.len(), values.len());
+    match clamp(level) {
+        Level::Scalar => scalar::csr_matvec_into(indptr, indices, values, x, out),
+        // The i32 gather lanes can only address offsets < 2^31; a larger
+        // x would need i64 gathers, so fall back to scalar there.
+        // SAFETY: AVX2 available per level; indptr/indices/values length
+        // relations asserted above; row ranges and gather offsets are
+        // re-checked inside (panic, not UB, on a corrupted matrix).
+        #[cfg(target_arch = "x86_64")]
+        _ if x.len() <= i32::MAX as usize => unsafe {
+            avx2::csr_matvec_into(indptr, indices, values, x, out)
+        },
+        _ => scalar::csr_matvec_into(indptr, indices, values, x, out),
+    }
+}
+
+#[inline]
+pub fn csr_tmatvec_into(
+    indptr: &[usize],
+    indices: &[u32],
+    values: &[f64],
+    y: &[f64],
+    out: &mut [f64],
+) {
+    csr_tmatvec_into_at(active(), indptr, indices, values, y, out)
+}
+
+/// `out = Aᵀ·y` scatter for a CSR matrix (`y.len()` rows); zeroes `out`
+/// first.
+pub fn csr_tmatvec_into_at(
+    level: Level,
+    indptr: &[usize],
+    indices: &[u32],
+    values: &[f64],
+    y: &[f64],
+    out: &mut [f64],
+) {
+    assert_eq!(indptr.len(), y.len() + 1);
+    assert_eq!(indices.len(), values.len());
+    match clamp(level) {
+        Level::Scalar => scalar::csr_tmatvec_into(indptr, indices, values, y, out),
+        // SAFETY: AVX2 available per level; length relations asserted
+        // above; the scatter stores are bounds-checked slice indexing.
+        #[cfg(target_arch = "x86_64")]
+        _ => unsafe { avx2::csr_tmatvec_into(indptr, indices, values, y, out) },
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => scalar::csr_tmatvec_into(indptr, indices, values, y, out),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resolve_env_override() {
+        assert_eq!(resolve(Some("1"), Level::Avx2), Level::Scalar);
+        assert_eq!(resolve(Some("yes"), Level::Avx512), Level::Scalar);
+        assert_eq!(resolve(Some("0"), Level::Avx2), Level::Avx2);
+        assert_eq!(resolve(Some(""), Level::Avx2), Level::Avx2);
+        assert_eq!(resolve(None, Level::Avx2), Level::Avx2);
+        assert_eq!(resolve(None, Level::Scalar), Level::Scalar);
+    }
+
+    #[test]
+    fn unsupported_levels_clamp_to_scalar() {
+        // a hand-constructed level above the hardware's must behave like
+        // (and equal) the scalar arm instead of reaching unsafe code
+        let a: Vec<f64> = (0..13).map(|i| i as f64 * 0.25 - 1.0).collect();
+        let b: Vec<f64> = (0..13).map(|i| (i as f64).cos()).collect();
+        for lvl in [Level::Avx2, Level::Avx512] {
+            let d = dot_at(lvl, &a, &b);
+            if !Level::available().contains(&lvl) {
+                assert_eq!(d.to_bits(), dot_at(Level::Scalar, &a, &b).to_bits());
+            }
+            assert!(d.is_finite());
+        }
+    }
+
+    #[test]
+    fn available_always_starts_scalar() {
+        let levels = Level::available();
+        assert_eq!(levels[0], Level::Scalar);
+        // whatever the hardware, the cached arm is one of the listed ones
+        // unless SMX_NO_SIMD forced scalar (which is listed too)
+        assert!(levels.contains(&active()));
+    }
+
+    #[test]
+    fn every_available_level_runs_every_kernel() {
+        // smoke: each arm executes without fault on a non-trivial shape;
+        // cross-arm value identity is property-tested in kernel_parity.rs
+        let a: Vec<f64> = (0..37).map(|i| (i as f64).sin()).collect();
+        let b: Vec<f64> = (0..37).map(|i| (i as f64).cos()).collect();
+        for lvl in Level::available() {
+            let d = dot_at(lvl, &a, &b);
+            assert!(d.is_finite());
+            let mut y = b.clone();
+            axpy_at(lvl, 0.5, &a, &mut y);
+            let mut out = vec![0.0; 37];
+            lincomb_into_at(lvl, 0.5, &a, -2.0, &b, &mut out);
+            assert!(dist2_at(lvl, &a, &b) >= 0.0);
+            assert!(wnorm2_diag_at(lvl, &a, &b).is_finite());
+        }
+    }
+}

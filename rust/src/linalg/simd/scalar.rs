@@ -1,0 +1,233 @@
+//! Portable blocked-loop arm — the dispatch fallback and the bitwise
+//! reference for the SIMD arms.
+//!
+//! Every kernel here fixes the canonical evaluation order documented in
+//! the [module docs](super): reductions run 4 independent accumulator
+//! lanes over `n/4` blocks, reduce as `(s0+s1)+(s2+s3)`, and finish with
+//! a sequential scalar tail; elementwise kernels are plain per-element
+//! mul/add. The AVX2/AVX-512 arms replay exactly these operations on
+//! wider registers, so any divergence is a bug (property-tested in
+//! `tests/kernel_parity.rs`). LLVM auto-vectorizes most of these loops —
+//! the explicit arms exist for the cases it does not (the CSR gather) and
+//! to make the lane structure an API-level invariant instead of an
+//! optimizer outcome.
+
+/// 4-lane dot product.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for i in 0..chunks {
+        let j = i * 4;
+        s0 += a[j] * b[j];
+        s1 += a[j + 1] * b[j + 1];
+        s2 += a[j + 2] * b[j + 2];
+        s3 += a[j + 3] * b[j + 3];
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    for j in chunks * 4..n {
+        s += a[j] * b[j];
+    }
+    s
+}
+
+/// 4-lane squared distance ‖a − b‖².
+#[inline]
+pub fn dist2(a: &[f64], b: &[f64]) -> f64 {
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for i in 0..chunks {
+        let j = i * 4;
+        let d0 = a[j] - b[j];
+        let d1 = a[j + 1] - b[j + 1];
+        let d2 = a[j + 2] - b[j + 2];
+        let d3 = a[j + 3] - b[j + 3];
+        s0 += d0 * d0;
+        s1 += d1 * d1;
+        s2 += d2 * d2;
+        s3 += d3 * d3;
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    for j in chunks * 4..n {
+        let d = a[j] - b[j];
+        s += d * d;
+    }
+    s
+}
+
+/// 4-lane weighted squared norm Σ wᵢ·xᵢ² (each term `(w·x)·x`).
+#[inline]
+pub fn wnorm2_diag(x: &[f64], w: &[f64]) -> f64 {
+    let n = x.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for i in 0..chunks {
+        let j = i * 4;
+        s0 += w[j] * x[j] * x[j];
+        s1 += w[j + 1] * x[j + 1] * x[j + 1];
+        s2 += w[j + 2] * x[j + 2] * x[j + 2];
+        s3 += w[j + 3] * x[j + 3] * x[j + 3];
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    for j in chunks * 4..n {
+        s += w[j] * x[j] * x[j];
+    }
+    s
+}
+
+/// y += alpha·x, 4-element blocks (elementwise ⇒ order-free).
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    let n = x.len();
+    let chunks = n / 4;
+    for i in 0..chunks {
+        let j = i * 4;
+        y[j] += alpha * x[j];
+        y[j + 1] += alpha * x[j + 1];
+        y[j + 2] += alpha * x[j + 2];
+        y[j + 3] += alpha * x[j + 3];
+    }
+    for j in chunks * 4..n {
+        y[j] += alpha * x[j];
+    }
+}
+
+/// out = alpha·a + beta·b (elementwise).
+#[inline]
+pub fn lincomb_into(alpha: f64, a: &[f64], beta: f64, b: &[f64], out: &mut [f64]) {
+    for i in 0..a.len() {
+        out[i] = alpha * a[i] + beta * b[i];
+    }
+}
+
+/// Plane rotation: `(a, b) ← (c·a − s·b, s·a + c·b)` (elementwise).
+#[inline]
+pub fn rot2(c: f64, s: f64, a: &mut [f64], b: &mut [f64]) {
+    for i in 0..a.len() {
+        let ai = a[i];
+        let bi = b[i];
+        a[i] = c * ai - s * bi;
+        b[i] = s * ai + c * bi;
+    }
+}
+
+/// Dense row-major matvec: 4-row blocks, each row accumulated on the
+/// canonical 4 lanes (so the remainder-row path, a plain [`dot`], and the
+/// AVX2 arm all agree bitwise).
+pub fn mat_matvec_into(data: &[f64], rows: usize, cols: usize, x: &[f64], out: &mut [f64]) {
+    let r4 = rows / 4 * 4;
+    let c4 = cols / 4 * 4;
+    let mut r = 0;
+    while r < r4 {
+        let row0 = &data[r * cols..(r + 1) * cols];
+        let row1 = &data[(r + 1) * cols..(r + 2) * cols];
+        let row2 = &data[(r + 2) * cols..(r + 3) * cols];
+        let row3 = &data[(r + 3) * cols..(r + 4) * cols];
+        let mut s = [[0.0f64; 4]; 4];
+        let mut c = 0;
+        while c < c4 {
+            for l in 0..4 {
+                let xc = x[c + l];
+                s[0][l] += row0[c + l] * xc;
+                s[1][l] += row1[c + l] * xc;
+                s[2][l] += row2[c + l] * xc;
+                s[3][l] += row3[c + l] * xc;
+            }
+            c += 4;
+        }
+        let mut t = [
+            (s[0][0] + s[0][1]) + (s[0][2] + s[0][3]),
+            (s[1][0] + s[1][1]) + (s[1][2] + s[1][3]),
+            (s[2][0] + s[2][1]) + (s[2][2] + s[2][3]),
+            (s[3][0] + s[3][1]) + (s[3][2] + s[3][3]),
+        ];
+        while c < cols {
+            let xc = x[c];
+            t[0] += row0[c] * xc;
+            t[1] += row1[c] * xc;
+            t[2] += row2[c] * xc;
+            t[3] += row3[c] * xc;
+            c += 1;
+        }
+        out[r] = t[0];
+        out[r + 1] = t[1];
+        out[r + 2] = t[2];
+        out[r + 3] = t[3];
+        r += 4;
+    }
+    while r < rows {
+        out[r] = dot(&data[r * cols..(r + 1) * cols], x);
+        r += 1;
+    }
+}
+
+/// CSR matvec: per-row 4-lane gather-accumulate.
+pub fn csr_matvec_into(
+    indptr: &[usize],
+    indices: &[u32],
+    values: &[f64],
+    x: &[f64],
+    out: &mut [f64],
+) {
+    for r in 0..out.len() {
+        let (s, e) = (indptr[r], indptr[r + 1]);
+        let idx = &indices[s..e];
+        let val = &values[s..e];
+        let nnz = idx.len();
+        let k4 = nnz / 4 * 4;
+        let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+        let mut k = 0;
+        while k < k4 {
+            s0 += val[k] * x[idx[k] as usize];
+            s1 += val[k + 1] * x[idx[k + 1] as usize];
+            s2 += val[k + 2] * x[idx[k + 2] as usize];
+            s3 += val[k + 3] * x[idx[k + 3] as usize];
+            k += 4;
+        }
+        let mut acc = (s0 + s1) + (s2 + s3);
+        while k < nnz {
+            acc += val[k] * x[idx[k] as usize];
+            k += 1;
+        }
+        out[r] = acc;
+    }
+}
+
+/// CSR transposed matvec (scatter), 4-wide unrolled. Zeroes `out` first.
+/// Elementwise adds ⇒ bitwise identical across arms; the unroll is safe
+/// because column indices are strictly increasing within a row, so the
+/// four targets are distinct.
+pub fn csr_tmatvec_into(
+    indptr: &[usize],
+    indices: &[u32],
+    values: &[f64],
+    y: &[f64],
+    out: &mut [f64],
+) {
+    out.fill(0.0);
+    for r in 0..y.len() {
+        let yr = y[r];
+        if yr == 0.0 {
+            continue;
+        }
+        let (s, e) = (indptr[r], indptr[r + 1]);
+        let idx = &indices[s..e];
+        let val = &values[s..e];
+        let nnz = idx.len();
+        let k4 = nnz / 4 * 4;
+        let mut k = 0;
+        while k < k4 {
+            out[idx[k] as usize] += yr * val[k];
+            out[idx[k + 1] as usize] += yr * val[k + 1];
+            out[idx[k + 2] as usize] += yr * val[k + 2];
+            out[idx[k + 3] as usize] += yr * val[k + 3];
+            k += 4;
+        }
+        while k < nnz {
+            out[idx[k] as usize] += yr * val[k];
+            k += 1;
+        }
+    }
+}

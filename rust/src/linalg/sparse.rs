@@ -75,32 +75,14 @@ impl Csr {
 
     /// out = A x
     ///
-    /// §Perf: the per-row reduction runs on 4 independent accumulator
-    /// lanes (the gather `x[idx[k]]` loads pipeline across lanes); this is
-    /// half of every worker's per-round gradient.
+    /// §Perf: dispatches through [`crate::linalg::simd`] — per-row 4-lane
+    /// reduction whose `x[idx[k]]` loads become one `vgatherdpd` per 4
+    /// nonzeros on the AVX2 arm; this is half of every worker's per-round
+    /// gradient.
     pub fn matvec_into(&self, x: &[f64], out: &mut [f64]) {
         assert_eq!(x.len(), self.cols);
         assert_eq!(out.len(), self.rows);
-        for r in 0..self.rows {
-            let (idx, val) = self.row_entries(r);
-            let nnz = idx.len();
-            let k4 = nnz / 4 * 4;
-            let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
-            let mut k = 0;
-            while k < k4 {
-                s0 += val[k] * x[idx[k] as usize];
-                s1 += val[k + 1] * x[idx[k + 1] as usize];
-                s2 += val[k + 2] * x[idx[k + 2] as usize];
-                s3 += val[k + 3] * x[idx[k + 3] as usize];
-                k += 4;
-            }
-            let mut s = (s0 + s1) + (s2 + s3);
-            while k < nnz {
-                s += val[k] * x[idx[k] as usize];
-                k += 1;
-            }
-            out[r] = s;
-        }
+        crate::linalg::simd::csr_matvec_into(&self.indptr, &self.indices, &self.values, x, out);
     }
 
     pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
@@ -111,34 +93,14 @@ impl Csr {
 
     /// out = Aᵀ y
     ///
-    /// §Perf: the scatter is unrolled 4-wide — safe because column indices
-    /// are strictly increasing within a row, so the four targets are
-    /// distinct and the stores are independent.
+    /// §Perf: dispatches through [`crate::linalg::simd`] — the scatter is
+    /// unrolled 4-wide (products vectorized on the AVX2 arm, stores scalar
+    /// since AVX2 has no scatter), safe because column indices are
+    /// strictly increasing within a row, so the four targets are distinct.
     pub fn tmatvec_into(&self, y: &[f64], out: &mut [f64]) {
         assert_eq!(y.len(), self.rows);
         assert_eq!(out.len(), self.cols);
-        out.fill(0.0);
-        for r in 0..self.rows {
-            let yr = y[r];
-            if yr == 0.0 {
-                continue;
-            }
-            let (idx, val) = self.row_entries(r);
-            let nnz = idx.len();
-            let k4 = nnz / 4 * 4;
-            let mut k = 0;
-            while k < k4 {
-                out[idx[k] as usize] += yr * val[k];
-                out[idx[k + 1] as usize] += yr * val[k + 1];
-                out[idx[k + 2] as usize] += yr * val[k + 2];
-                out[idx[k + 3] as usize] += yr * val[k + 3];
-                k += 4;
-            }
-            while k < nnz {
-                out[idx[k] as usize] += yr * val[k];
-                k += 1;
-            }
-        }
+        crate::linalg::simd::csr_tmatvec_into(&self.indptr, &self.indices, &self.values, y, out);
     }
 
     pub fn tmatvec(&self, y: &[f64]) -> Vec<f64> {

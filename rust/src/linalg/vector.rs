@@ -4,32 +4,20 @@
 //! steady-state round loop relies on the `*_into` / in-place variants.
 //!
 //! §Perf: the reductions (`dot`, `dist2`, `wnorm2_diag`) and the fused
-//! update kernels (`axpy`, `lincomb_into`) are unrolled into 4 independent
-//! accumulator lanes / 4-element blocks so LLVM auto-vectorizes them
-//! (256-bit f64 lanes) without breaking determinism. The scalar reference
-//! loops are retained under `#[cfg(test)]` in [`self::naive`] and asserted
-//! equal in the tests below and in `tests/kernel_parity.rs`.
+//! update kernels (`axpy`, `lincomb_into`, `rot2`) dispatch through the
+//! explicit SIMD layer ([`crate::linalg::simd`]): AVX2/AVX-512 lanes where
+//! the CPU has them, the portable 4-lane blocked loops otherwise — all
+//! arms bitwise identical (see the simd module's determinism contract),
+//! selected once per process (`SMX_NO_SIMD=1` forces the scalar arm).
+//! The pre-optimization sequential loops are retained under `#[cfg(test)]`
+//! in [`self::naive`] and asserted in the tests below and in
+//! `tests/kernel_parity.rs`.
+
+use crate::linalg::simd;
 
 #[inline]
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {
-    debug_assert_eq!(a.len(), b.len());
-    // 4-way unrolled accumulation: measurably faster than naive sum at the
-    // d~1e2..1e4 sizes we run, and deterministic.
-    let n = a.len();
-    let chunks = n / 4;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
-    for i in 0..chunks {
-        let j = i * 4;
-        s0 += a[j] * b[j];
-        s1 += a[j + 1] * b[j + 1];
-        s2 += a[j + 2] * b[j + 2];
-        s3 += a[j + 3] * b[j + 3];
-    }
-    let mut s = (s0 + s1) + (s2 + s3);
-    for j in chunks * 4..n {
-        s += a[j] * b[j];
-    }
-    s
+    simd::dot(a, b)
 }
 
 #[inline]
@@ -45,46 +33,14 @@ pub fn norm(a: &[f64]) -> f64 {
 /// Squared distance ‖a − b‖² (4-lane accumulators).
 #[inline]
 pub fn dist2(a: &[f64], b: &[f64]) -> f64 {
-    debug_assert_eq!(a.len(), b.len());
-    let n = a.len();
-    let chunks = n / 4;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
-    for i in 0..chunks {
-        let j = i * 4;
-        let d0 = a[j] - b[j];
-        let d1 = a[j + 1] - b[j + 1];
-        let d2 = a[j + 2] - b[j + 2];
-        let d3 = a[j + 3] - b[j + 3];
-        s0 += d0 * d0;
-        s1 += d1 * d1;
-        s2 += d2 * d2;
-        s3 += d3 * d3;
-    }
-    let mut s = (s0 + s1) + (s2 + s3);
-    for j in chunks * 4..n {
-        let d = a[j] - b[j];
-        s += d * d;
-    }
-    s
+    simd::dist2(a, b)
 }
 
-/// y += alpha * x (4-element blocks; elementwise, so bitwise identical to
-/// the scalar loop).
+/// y += alpha * x (elementwise, so bitwise identical to the scalar loop
+/// on every dispatch arm).
 #[inline]
 pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
-    debug_assert_eq!(x.len(), y.len());
-    let n = x.len();
-    let chunks = n / 4;
-    for i in 0..chunks {
-        let j = i * 4;
-        y[j] += alpha * x[j];
-        y[j + 1] += alpha * x[j + 1];
-        y[j + 2] += alpha * x[j + 2];
-        y[j + 3] += alpha * x[j + 3];
-    }
-    for j in chunks * 4..n {
-        y[j] += alpha * x[j];
-    }
+    simd::axpy(alpha, x, y)
 }
 
 /// y = x
@@ -120,20 +76,21 @@ pub fn sub_into(a: &[f64], b: &[f64], out: &mut [f64]) {
 /// out = alpha*a + beta*b
 #[inline]
 pub fn lincomb_into(alpha: f64, a: &[f64], beta: f64, b: &[f64], out: &mut [f64]) {
-    for i in 0..a.len() {
-        out[i] = alpha * a[i] + beta * b[i];
-    }
+    simd::lincomb_into(alpha, a, beta, b, out)
 }
 
-/// Weighted squared norm ‖x‖²_w = Σ w_i x_i² for a diagonal weight.
+/// Plane rotation `(a, b) ← (c·a − s·b, s·a + c·b)` — the Jacobi
+/// eigensolver's row update (elementwise).
+#[inline]
+pub fn rot2(c: f64, s: f64, a: &mut [f64], b: &mut [f64]) {
+    simd::rot2(c, s, a, b)
+}
+
+/// Weighted squared norm ‖x‖²_w = Σ w_i x_i² for a diagonal weight
+/// (4-lane canonical order, like `dot`).
 #[inline]
 pub fn wnorm2_diag(x: &[f64], w: &[f64]) -> f64 {
-    debug_assert_eq!(x.len(), w.len());
-    let mut s = 0.0;
-    for i in 0..x.len() {
-        s += w[i] * x[i] * x[i];
-    }
-    s
+    simd::wnorm2_diag(x, w)
 }
 
 /// max_i |a_i|
@@ -235,6 +192,25 @@ mod tests {
     #[test]
     fn weighted_norm() {
         assert_eq!(wnorm2_diag(&[1.0, 2.0], &[3.0, 0.5]), 3.0 + 2.0);
+    }
+
+    #[test]
+    fn rot2_rotates_in_plane() {
+        // 90° rotation: (a, b) -> (-b, a)
+        let mut a = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let mut b = [-1.0, 0.5, 0.0, -2.0, 7.0];
+        let (a0, b0) = (a, b);
+        rot2(0.0, 1.0, &mut a, &mut b);
+        for i in 0..5 {
+            assert_eq!(a[i], -b0[i]);
+            assert_eq!(b[i], a0[i]);
+        }
+        // identity rotation preserves both
+        rot2(1.0, 0.0, &mut a, &mut b);
+        for i in 0..5 {
+            assert_eq!(a[i], 0.0 - b0[i]);
+            assert_eq!(b[i], a0[i] + 0.0);
+        }
     }
 
     #[test]

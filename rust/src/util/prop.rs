@@ -22,6 +22,18 @@ impl Default for PropConfig {
     }
 }
 
+impl PropConfig {
+    /// `cases` shrunk under Miri (it interprets every instruction, so
+    /// full case counts are intractable) — the one shared shrink policy
+    /// for every property suite.
+    pub fn cases(cases: usize, base_seed: u64) -> PropConfig {
+        PropConfig {
+            cases: if cfg!(miri) { cases.min(4) } else { cases },
+            base_seed,
+        }
+    }
+}
+
 /// Run `prop` for `cfg.cases` seeded cases. The property receives a fresh
 /// `Rng` per case and returns `Result<(), String>`; the first failure
 /// panics with the seed and message.

@@ -1,17 +1,217 @@
-//! Property tests: the blocked linalg kernels must agree with scalar
-//! reference loops to 1e-12 across random shapes, and the dense and
-//! low-rank PSD-root representations must agree on random sparse inputs
-//! (the server decompression path).
+//! Property tests locking down the kernel layer:
+//!
+//! 1. **Cross-arm bitwise identity** — every dispatch arm of the explicit
+//!    SIMD layer (`linalg::simd`) must be *bitwise identical* to the
+//!    scalar blocked arm, for every kernel, on adversarial inputs
+//!    (denormals, ±0, 1e300-scale magnitudes, remainder tails 0–7, empty,
+//!    length-1, misaligned slices). Both arms run in the same process via
+//!    the explicit `*_at(level, …)` entry points.
+//! 2. **Oracle parity** — the blocked/SIMD kernels agree with naive
+//!    sequential reference loops: bitwise for elementwise kernels, and
+//!    within the classic `n·eps·Σ|terms|` reassociation bound for
+//!    reductions.
+//! 3. **Representation parity** — the dense and low-rank PSD-root
+//!    representations (including the fused low-rank apply) agree on
+//!    random dense and sparse inputs (the whiten/decompress paths).
 
 #![allow(clippy::needless_range_loop)]
 
 use smx::linalg::dense::Mat;
+use smx::linalg::simd::{self, Level};
 use smx::linalg::sparse::Csr;
 use smx::linalg::vector;
 use smx::linalg::PsdRoot;
 use smx::util::prop::{forall, PropConfig};
+use smx::util::rng::Rng;
 
-// scalar references (the pre-optimization kernels)
+// ---- generators --------------------------------------------------------
+
+/// Magnitude palette stressing IEEE edge behavior. `cap` bounds the
+/// magnitude so oracle comparisons can avoid intermediate overflow
+/// (products of two palette values stay finite for cap = 1e150).
+fn adversarial(rng: &mut Rng, cap: f64) -> f64 {
+    let mag = match rng.below(8) {
+        0 => 0.0,
+        1 => 5e-324,        // smallest subnormal
+        2 => 1e-310,        // subnormal
+        3 => 1e-150,
+        4 => 1.0,
+        5 => cap,
+        6 => cap / 3.0,
+        _ => rng.normal(),
+    };
+    if rng.bernoulli(0.5) {
+        -mag
+    } else {
+        mag
+    }
+}
+
+/// Lengths hitting every remainder tail 0–7 around the 4-lane (and
+/// 8-lane AVX-512) block sizes, plus empty/one/bigger.
+fn edge_len(rng: &mut Rng) -> usize {
+    const EDGES: [usize; 18] = [0, 1, 2, 3, 4, 5, 6, 7, 8, 9, 15, 16, 17, 31, 32, 33, 63, 65];
+    match rng.below(EDGES.len() + 2) {
+        i if i < EDGES.len() => EDGES[i],
+        _ => rng.below(if cfg!(miri) { 64 } else { 1024 }) + 1,
+    }
+}
+
+/// A vector of `n + off` adversarial values returned with its offset, so
+/// `&buf[off..off + n]` exercises all four 8-byte alignment phases of a
+/// 32-byte SIMD lane.
+fn adversarial_vec(rng: &mut Rng, n: usize, off: usize, cap: f64) -> Vec<f64> {
+    (0..n + off).map(|_| adversarial(rng, cap)).collect()
+}
+
+fn random_csr(rng: &mut Rng, rows: usize, cols: usize, cap: f64) -> Csr {
+    let mut t = Vec::new();
+    if cols > 0 {
+        let density = rng.uniform();
+        for r in 0..rows {
+            for c in 0..cols {
+                if rng.uniform() < density {
+                    t.push((r, c, adversarial(rng, cap)));
+                }
+            }
+        }
+    }
+    Csr::from_triplets(rows, cols, t)
+}
+
+/// Bit pattern with NaNs canonicalized: whether a result is NaN is
+/// value-determined (so still compared exactly), but NaN *payloads* are
+/// not guaranteed stable across evaluations (Miri randomizes them by
+/// design), so payload bits must not participate in equality.
+fn canon_bits(v: f64) -> u64 {
+    if v.is_nan() {
+        0x7ff8_0000_0000_0000
+    } else {
+        v.to_bits()
+    }
+}
+
+fn bits(xs: &[f64]) -> Vec<u64> {
+    xs.iter().map(|&v| canon_bits(v)).collect()
+}
+
+// ---- 1. cross-arm bitwise identity ------------------------------------
+
+#[test]
+fn prop_simd_arms_bitwise_match_scalar_arm_vector_kernels() {
+    let levels = Level::available();
+    println!("dispatch arms under test: {levels:?} (active: {:?})", simd::active());
+    forall(
+        PropConfig::cases(128, 0x51D0),
+        "cross-arm bitwise identity (vector kernels)",
+        |rng| {
+            let n = edge_len(rng);
+            let off = rng.below(4);
+            // ±inf-adjacent magnitudes are fine here: both arms perform
+            // the identical op sequence, so overflow to ±inf (and whether
+            // an inf−inf reduction yields NaN) is identical; NaN payloads
+            // are canonicalized by canon_bits before comparison
+            let a_buf = adversarial_vec(rng, n, off, 1e300);
+            let b_buf = adversarial_vec(rng, n, off, 1e300);
+            let (a, b) = (&a_buf[off..], &b_buf[off..]);
+            let alpha = adversarial(rng, 1e3);
+            let beta = adversarial(rng, 1e3);
+
+            let d_ref = canon_bits(simd::dot_at(Level::Scalar, a, b));
+            let s_ref = canon_bits(simd::dist2_at(Level::Scalar, a, b));
+            let w_ref = canon_bits(simd::wnorm2_diag_at(Level::Scalar, a, b));
+            let mut y_ref = b.to_vec();
+            simd::axpy_at(Level::Scalar, alpha, a, &mut y_ref);
+            let mut l_ref = vec![0.0; n];
+            simd::lincomb_into_at(Level::Scalar, alpha, a, beta, b, &mut l_ref);
+            let (mut ra_ref, mut rb_ref) = (a.to_vec(), b.to_vec());
+            simd::rot2_at(Level::Scalar, alpha, beta, &mut ra_ref, &mut rb_ref);
+
+            for &lvl in &levels {
+                if canon_bits(simd::dot_at(lvl, a, b)) != d_ref {
+                    return Err(format!("dot {lvl:?} != scalar at n={n} off={off}"));
+                }
+                if canon_bits(simd::dist2_at(lvl, a, b)) != s_ref {
+                    return Err(format!("dist2 {lvl:?} != scalar at n={n} off={off}"));
+                }
+                if canon_bits(simd::wnorm2_diag_at(lvl, a, b)) != w_ref {
+                    return Err(format!("wnorm2_diag {lvl:?} != scalar at n={n} off={off}"));
+                }
+                let mut y = b.to_vec();
+                simd::axpy_at(lvl, alpha, a, &mut y);
+                if bits(&y) != bits(&y_ref) {
+                    return Err(format!("axpy {lvl:?} != scalar at n={n} off={off}"));
+                }
+                let mut l = vec![0.0; n];
+                simd::lincomb_into_at(lvl, alpha, a, beta, b, &mut l);
+                if bits(&l) != bits(&l_ref) {
+                    return Err(format!("lincomb {lvl:?} != scalar at n={n} off={off}"));
+                }
+                let (mut ra, mut rb) = (a.to_vec(), b.to_vec());
+                simd::rot2_at(lvl, alpha, beta, &mut ra, &mut rb);
+                if bits(&ra) != bits(&ra_ref) || bits(&rb) != bits(&rb_ref) {
+                    return Err(format!("rot2 {lvl:?} != scalar at n={n} off={off}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_simd_arms_bitwise_match_scalar_arm_matvec_kernels() {
+    let levels = Level::available();
+    forall(
+        PropConfig::cases(96, 0x51D1),
+        "cross-arm bitwise identity (dense + CSR matvec)",
+        |rng| {
+            // dense: rows/cols sweep the 4-row and 4-col remainders
+            let rows = rng.below(12);
+            let cols = rng.below(12) + usize::from(rng.bernoulli(0.2)) * rng.below(64);
+            let data = adversarial_vec(rng, rows * cols, 0, 1e300);
+            let x = adversarial_vec(rng, cols, 0, 1e300);
+            let mut out_ref = vec![0.0; rows];
+            simd::mat_matvec_into_at(Level::Scalar, &data, rows, cols, &x, &mut out_ref);
+
+            // CSR: includes empty rows, empty matrix, nnz tails 0–7
+            let a = random_csr(rng, rows, cols, 1e300);
+            let y = adversarial_vec(rng, rows, 0, 1e300);
+            let mut mv_ref = vec![0.0; rows];
+            simd::csr_matvec_into_at(Level::Scalar, &a.indptr, &a.indices, &a.values, &x, &mut mv_ref);
+            let mut tv_ref = vec![0.0; cols];
+            simd::csr_tmatvec_into_at(Level::Scalar, &a.indptr, &a.indices, &a.values, &y, &mut tv_ref);
+
+            for &lvl in &levels {
+                let mut out = vec![0.0; rows];
+                simd::mat_matvec_into_at(lvl, &data, rows, cols, &x, &mut out);
+                if bits(&out) != bits(&out_ref) {
+                    return Err(format!("mat matvec {lvl:?} != scalar at {rows}x{cols}"));
+                }
+                let mut mv = vec![0.0; rows];
+                simd::csr_matvec_into_at(lvl, &a.indptr, &a.indices, &a.values, &x, &mut mv);
+                if bits(&mv) != bits(&mv_ref) {
+                    return Err(format!(
+                        "csr matvec {lvl:?} != scalar at {rows}x{cols} nnz={}",
+                        a.nnz()
+                    ));
+                }
+                let mut tv = vec![0.0; cols];
+                simd::csr_tmatvec_into_at(lvl, &a.indptr, &a.indices, &a.values, &y, &mut tv);
+                if bits(&tv) != bits(&tv_ref) {
+                    return Err(format!(
+                        "csr tmatvec {lvl:?} != scalar at {rows}x{cols} nnz={}",
+                        a.nnz()
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---- 2. oracle parity --------------------------------------------------
+
+// scalar references (the pre-optimization sequential kernels)
 
 fn ref_dot(a: &[f64], b: &[f64]) -> f64 {
     (0..a.len()).map(|i| a[i] * b[i]).sum()
@@ -53,13 +253,119 @@ fn close(a: f64, b: f64, scale: f64) -> bool {
     (a - b).abs() <= 1e-12 * scale.max(1.0)
 }
 
+/// Reassociation bound for comparing two summation orders of the same
+/// terms: each order's error is ≤ (n−1)·eps·Σ|tᵢ| in the worst case, so
+/// the difference is ≤ 2(n−1)·eps·Σ|tᵢ|; 4(n+4) leaves slack for the
+/// per-term products' own rounding.
+fn reassoc_ok(fast: f64, naive: f64, n: usize, abs_sum: f64) -> bool {
+    (fast - naive).abs() <= 4.0 * (n as f64 + 4.0) * f64::EPSILON * abs_sum.max(f64::MIN_POSITIVE)
+}
+
+#[test]
+fn prop_reduction_kernels_within_reassociation_bound_of_naive() {
+    forall(
+        PropConfig::cases(96, 0xD07E),
+        "dot/dist2/wnorm2 vs naive oracle on edge values",
+        |rng| {
+            let n = edge_len(rng);
+            let off = rng.below(4);
+            // cap 1e100: wnorm2's triple products w·x·x then stay ≤ 1e300
+            // and sums of ≤ 1024 of them stay finite, so the bound is
+            // meaningful for every reduction here (dot's pairwise products
+            // are even smaller); the 1e300-scale overflow behavior is
+            // covered by the cross-arm bitwise tests above
+            let a_buf = adversarial_vec(rng, n, off, 1e100);
+            let b_buf = adversarial_vec(rng, n, off, 1e100);
+            let (a, b) = (&a_buf[off..], &b_buf[off..]);
+
+            let abs_dot: f64 = (0..n).map(|i| (a[i] * b[i]).abs()).sum();
+            if !reassoc_ok(vector::dot(a, b), ref_dot(a, b), n, abs_dot) {
+                return Err(format!("dot reassociation bound violated at n={n}"));
+            }
+
+            // squared terms are non-negative, so d_naive doubles as Σ|tᵢ|
+            let d_naive: f64 = (0..n).map(|i| (a[i] - b[i]) * (a[i] - b[i])).sum();
+            if !reassoc_ok(vector::dist2(a, b), d_naive, n, d_naive) {
+                return Err(format!("dist2 reassociation bound violated at n={n}"));
+            }
+
+            let w_naive: f64 = (0..n).map(|i| b[i] * a[i] * a[i]).sum();
+            let abs_w: f64 = (0..n).map(|i| (b[i] * a[i] * a[i]).abs()).sum();
+            if !reassoc_ok(vector::wnorm2_diag(a, b), w_naive, n, abs_w) {
+                return Err(format!("wnorm2_diag reassociation bound violated at n={n}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_elementwise_kernels_bitwise_match_naive() {
+    forall(
+        PropConfig::cases(96, 0xE1E),
+        "axpy/lincomb/rot2/tmatvec vs naive oracle, bitwise",
+        |rng| {
+            let n = edge_len(rng);
+            let off = rng.below(4);
+            let a_buf = adversarial_vec(rng, n, off, 1e150);
+            let b_buf = adversarial_vec(rng, n, off, 1e150);
+            let (a, b) = (&a_buf[off..], &b_buf[off..]);
+            let alpha = adversarial(rng, 1e3);
+            let beta = adversarial(rng, 1e3);
+
+            let mut y1 = b.to_vec();
+            let mut y2 = b.to_vec();
+            vector::axpy(alpha, a, &mut y1);
+            ref_axpy(alpha, a, &mut y2);
+            if bits(&y1) != bits(&y2) {
+                return Err(format!("axpy not bitwise identical to naive at n={n}"));
+            }
+
+            let mut l1 = vec![0.0; n];
+            vector::lincomb_into(alpha, a, beta, b, &mut l1);
+            let l2: Vec<f64> = (0..n).map(|i| alpha * a[i] + beta * b[i]).collect();
+            if bits(&l1) != bits(&l2) {
+                return Err(format!("lincomb not bitwise identical to naive at n={n}"));
+            }
+
+            let (mut ra, mut rb) = (a.to_vec(), b.to_vec());
+            vector::rot2(alpha, beta, &mut ra, &mut rb);
+            let ra2: Vec<f64> = (0..n).map(|i| alpha * a[i] - beta * b[i]).collect();
+            let rb2: Vec<f64> = (0..n).map(|i| beta * a[i] + alpha * b[i]).collect();
+            if bits(&ra) != bits(&ra2) || bits(&rb) != bits(&rb2) {
+                return Err(format!("rot2 not bitwise identical to naive at n={n}"));
+            }
+
+            // CSR tmatvec scatter: elementwise adds in row order, so it
+            // too must match the naive oracle bitwise (cap 1e150 + ≤ 16
+            // rows keeps every per-column sum finite)
+            let rows = rng.below(16);
+            let cols = rng.below(16);
+            let csr = random_csr(rng, rows, cols, 1e150);
+            let yv = adversarial_vec(rng, rows, 0, 1e150);
+            let mut tv = vec![0.0; cols];
+            smx::linalg::simd::csr_tmatvec_into(
+                &csr.indptr,
+                &csr.indices,
+                &csr.values,
+                &yv,
+                &mut tv,
+            );
+            if bits(&tv) != bits(&ref_csr_tmatvec(&csr, &yv)) {
+                return Err(format!(
+                    "csr tmatvec not bitwise identical to naive at {rows}x{cols} nnz={}",
+                    csr.nnz()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
 #[test]
 fn prop_blocked_vector_kernels_match_references() {
     forall(
-        PropConfig {
-            cases: 64,
-            base_seed: 0xD07,
-        },
+        PropConfig::cases(64, 0xD07),
         "dot/axpy/dist2 parity",
         |rng| {
             let n = rng.below(257);
@@ -93,10 +399,7 @@ fn prop_blocked_vector_kernels_match_references() {
 #[test]
 fn prop_blocked_dense_kernels_match_references() {
     forall(
-        PropConfig {
-            cases: 48,
-            base_seed: 0xDE45,
-        },
+        PropConfig::cases(48, 0xDE45),
         "dense matvec/matmul/gram parity",
         |rng| {
             let rows = 1 + rng.below(24);
@@ -148,10 +451,7 @@ fn prop_blocked_dense_kernels_match_references() {
 #[test]
 fn prop_blocked_csr_kernels_match_references() {
     forall(
-        PropConfig {
-            cases: 48,
-            base_seed: 0xC52,
-        },
+        PropConfig::cases(48, 0xC52),
         "CSR matvec/tmatvec parity",
         |rng| {
             let rows = 1 + rng.below(30);
@@ -184,13 +484,12 @@ fn prop_blocked_csr_kernels_match_references() {
     );
 }
 
+// ---- 3. PSD-root representation parity --------------------------------
+
 #[test]
 fn prop_dense_and_lowrank_roots_agree_on_sparse_inputs() {
     forall(
-        PropConfig {
-            cases: 32,
-            base_seed: 0x10A7,
-        },
+        PropConfig::cases(32, 0x10A7),
         "dense vs low-rank apply_pow_sparse_into",
         |rng| {
             // L = c·AᵀA + μI with m < d, both representations
@@ -229,6 +528,59 @@ fn prop_dense_and_lowrank_roots_agree_on_sparse_inputs() {
                             out_d[j], out_l[j]
                         ));
                     }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_fused_lowrank_apply_matches_dense_root_on_dense_inputs() {
+    forall(
+        PropConfig::cases(32, 0xF05D),
+        "fused low-rank apply_pow vs dense root (whiten path)",
+        |rng| {
+            let m = 2 + rng.below(5);
+            let d = m + 1 + rng.below(12);
+            let a = Mat::from_rows(
+                (0..m)
+                    .map(|_| (0..d).map(|_| rng.normal()).collect())
+                    .collect(),
+            );
+            let c = 0.1 + rng.uniform();
+            let mu = 1e-4 + rng.uniform() * 1e-2;
+            let mut l = a.gram();
+            l.scale(c);
+            l.add_diag(mu);
+            let dense = PsdRoot::from_dense(&l);
+            let lowrank = PsdRoot::from_lowrank_ridge(&a, &a.gram_t(), c, mu);
+
+            // dense input with some exact zeros (the fused pass skips
+            // zero rows of the Qᵀx accumulation)
+            let x: Vec<f64> = (0..d)
+                .map(|_| if rng.bernoulli(0.2) { 0.0 } else { rng.normal() })
+                .collect();
+            let mut out_d = vec![0.0; d];
+            let mut out_f = vec![0.0; d];
+            let mut coeff = Vec::new();
+            for p in [1.0, 0.5, -0.5, -1.0] {
+                dense.apply_pow_into(p, &x, &mut out_d);
+                lowrank.apply_pow_fused_into(p, &x, &mut out_f, &mut coeff);
+                let scale: f64 = out_d.iter().map(|v| v.abs()).fold(0.0, f64::max);
+                for j in 0..d {
+                    if (out_d[j] - out_f[j]).abs() > 1e-8 * scale.max(1.0) {
+                        return Err(format!(
+                            "p={p} d={d} m={m} coord {j}: dense {} vs fused {}",
+                            out_d[j], out_f[j]
+                        ));
+                    }
+                }
+                // the routed entry point must hit the same fused kernel
+                let mut out_routed = vec![0.0; d];
+                lowrank.apply_pow_into_with(p, &x, &mut out_routed, &mut coeff);
+                if bits(&out_routed) != bits(&out_f) {
+                    return Err(format!("apply_pow_into_with not routed through fused (p={p})"));
                 }
             }
             Ok(())

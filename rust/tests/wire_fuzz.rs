@@ -1,0 +1,376 @@
+//! Seeded structure-aware fuzzing of the wire codec.
+//!
+//! Round-trips random frames — payload kind (f64/f32/q16/q8/q4) ×
+//! sorted/unsorted/duplicated index sets × adversarial values (NaN-free
+//! but ±inf-adjacent magnitudes, per-message scale extremes, denormals,
+//! ±0) — and asserts:
+//!
+//! * `decode(encode(m))` is **bitwise lossless** for the `f64` payload
+//!   (values and indices), and within the *documented* tolerance
+//!   ([`Payload::max_abs_err`]) for the lossy payloads, with indices
+//!   always exact;
+//! * the `*_frame_len` helpers predict the encoded size exactly (they are
+//!   what the in-process drivers record as measured bytes);
+//! * truncated frames decode to `Err`, never panic;
+//! * arbitrary single-byte corruption decodes to `Err` *or* a valid
+//!   message, never panics and never allocates unboundedly.
+//!
+//! The base seed comes from `SMX_FUZZ_SEED` (decimal u64; CI sets and
+//! logs it — see `.github/workflows/ci.yml`), so any failure is
+//! reproducible from the job log; the per-case seed is printed by the
+//! property harness on failure.
+
+use smx::compress::SparseMsg;
+use smx::methods::{Downlink, Uplink};
+use smx::util::prop::{forall, PropConfig};
+use smx::util::rng::Rng;
+use smx::wire::codec::{self, FRAME_PREFIX};
+use smx::wire::Payload;
+
+fn fuzz_seed() -> u64 {
+    std::env::var("SMX_FUZZ_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x57AB1E5EED)
+}
+
+// ---- generators --------------------------------------------------------
+
+/// NaN-free adversarial magnitudes: ±0, denormals, 1, near-overflow
+/// (`cap`), mixed so per-message scales hit extremes.
+fn adversarial(rng: &mut Rng, cap: f64) -> f64 {
+    let mag = match rng.below(8) {
+        0 => 0.0,
+        1 => 5e-324,
+        2 => 1e-310,
+        3 => 1e-15,
+        4 => 1.0,
+        5 => cap,
+        6 => cap / 3.0,
+        _ => rng.normal(),
+    };
+    if rng.bernoulli(0.5) {
+        -mag
+    } else {
+        mag
+    }
+}
+
+/// f32 must stay inside f32 range for its documented relative tolerance
+/// to be meaningful; every other payload is exercised ±inf-adjacent.
+fn value_cap(payload: Payload) -> f64 {
+    if payload == Payload::F32 {
+        1e37
+    } else {
+        1e308
+    }
+}
+
+fn random_payload(rng: &mut Rng) -> Payload {
+    Payload::ALL[rng.below(Payload::ALL.len())]
+}
+
+/// Random index set over [0, dim): strictly increasing (the sketch/Top-k
+/// shape → sorted-gap coding), or arbitrary order with possible
+/// duplicates (→ raw-varint coding).
+fn random_indices(rng: &mut Rng, dim: usize, k: usize) -> Vec<u32> {
+    if rng.bernoulli(0.5) {
+        rng.sample_indices(dim, k).iter().map(|&i| i as u32).collect()
+    } else {
+        (0..k).map(|_| rng.below(dim) as u32).collect()
+    }
+}
+
+fn random_msg(rng: &mut Rng, dim: usize, payload: Payload) -> SparseMsg {
+    let k = rng.below(dim + 1);
+    let mut m = SparseMsg::new();
+    for i in random_indices(rng, dim, k) {
+        m.push(i, adversarial(rng, value_cap(payload)));
+    }
+    m
+}
+
+fn block_scale(vals: &[f64]) -> f64 {
+    vals.iter().fold(0.0f64, |a, &v| a.max(v.abs()))
+}
+
+/// Documented per-value decode tolerance for one value block.
+fn check_block(orig: &SparseMsg, dec: &SparseMsg, payload: Payload) -> Result<(), String> {
+    if dec.idx != orig.idx {
+        return Err(format!("{}: indices not exact", payload.name()));
+    }
+    if payload.is_lossless() {
+        let ob: Vec<u64> = orig.val.iter().map(|v| v.to_bits()).collect();
+        let db: Vec<u64> = dec.val.iter().map(|v| v.to_bits()).collect();
+        if ob != db {
+            return Err("f64: values not bitwise exact".into());
+        }
+        return Ok(());
+    }
+    let bound = payload.max_abs_err(block_scale(&orig.val)) * (1.0 + 1e-9);
+    for (o, d) in orig.val.iter().zip(&dec.val) {
+        if (o - d).abs() > bound {
+            return Err(format!("{}: |{o} - {d}| > {bound}", payload.name()));
+        }
+    }
+    Ok(())
+}
+
+fn check_dense(orig: &[f64], dec: &[f64], payload: Payload) -> Result<(), String> {
+    if payload.is_lossless() {
+        let ob: Vec<u64> = orig.iter().map(|v| v.to_bits()).collect();
+        let db: Vec<u64> = dec.iter().map(|v| v.to_bits()).collect();
+        if ob != db {
+            return Err("f64: dense block not bitwise exact".into());
+        }
+        return Ok(());
+    }
+    let bound = payload.max_abs_err(block_scale(orig)) * (1.0 + 1e-9);
+    for (o, d) in orig.iter().zip(dec) {
+        if (o - d).abs() > bound {
+            return Err(format!("{}: dense |{o} - {d}| > {bound}", payload.name()));
+        }
+    }
+    Ok(())
+}
+
+/// A decode target pre-filled with junk, to exercise every buffer-reuse
+/// branch of `get_uplink`/`get_downlink`.
+fn dirty_uplink(rng: &mut Rng) -> Uplink {
+    let mut up = Uplink::default();
+    for _ in 0..rng.below(4) {
+        up.delta.push(rng.below(100) as u32, rng.normal());
+    }
+    if rng.bernoulli(0.5) {
+        let mut d2 = SparseMsg::new();
+        d2.push(0, 1.0);
+        up.delta2 = Some(d2);
+    }
+    up
+}
+
+fn dirty_downlink(rng: &mut Rng) -> Downlink {
+    match rng.below(3) {
+        0 => Downlink::Dense {
+            x: vec![1.0; rng.below(5)],
+            w: rng.bernoulli(0.5).then(|| vec![2.0; 3]),
+        },
+        1 => Downlink::Sparse {
+            delta: SparseMsg::new(),
+        },
+        _ => Downlink::Init {
+            x: vec![9.0; rng.below(5)],
+        },
+    }
+}
+
+// ---- round-trips -------------------------------------------------------
+
+#[test]
+fn fuzz_uplink_roundtrip_per_payload_semantics() {
+    println!("SMX_FUZZ_SEED = {}", fuzz_seed());
+    forall(
+        PropConfig::cases(192, fuzz_seed()),
+        "uplink decode(encode(m)) per payload spec",
+        |rng| {
+            let dim = 1 + rng.below(300);
+            let payload = random_payload(rng);
+            let up = Uplink {
+                delta: random_msg(rng, dim, payload),
+                delta2: if rng.bernoulli(0.4) {
+                    Some(random_msg(rng, dim, payload))
+                } else {
+                    None
+                },
+            };
+            let shard = rng.below(1 << 20);
+
+            let mut body = Vec::new();
+            codec::put_uplink(&mut body, &up, shard, payload);
+            if body.len() + FRAME_PREFIX != codec::uplink_frame_len(&up, shard, payload) {
+                return Err(format!(
+                    "{}: frame_len {} != encoded {}",
+                    payload.name(),
+                    codec::uplink_frame_len(&up, shard, payload),
+                    body.len() + FRAME_PREFIX
+                ));
+            }
+
+            let mut dec = dirty_uplink(rng);
+            let got_shard = codec::get_uplink(&body, dim, &mut dec)
+                .map_err(|e| format!("{}: decode failed: {e}", payload.name()))?;
+            if got_shard != shard {
+                return Err(format!("shard {got_shard} != {shard}"));
+            }
+            check_block(&up.delta, &dec.delta, payload)?;
+            match (&up.delta2, &dec.delta2) {
+                (None, None) => {}
+                (Some(o), Some(d)) => check_block(o, d, payload)?,
+                _ => return Err("delta2 presence flag not round-tripped".into()),
+            }
+
+            // decoding against a dim smaller than the largest index must
+            // error (range check), not panic or accept
+            if let Some(&mx) = up.delta.idx.iter().max() {
+                let mut d2 = Uplink::default();
+                if codec::get_uplink(&body, mx as usize, &mut d2).is_ok() {
+                    return Err(format!("index {mx} accepted with dim {mx}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn fuzz_downlink_roundtrip_per_payload_semantics() {
+    forall(
+        PropConfig::cases(160, fuzz_seed() ^ 0xD0),
+        "downlink decode(encode(m)) per payload spec",
+        |rng| {
+            let dim = 1 + rng.below(200);
+            let payload = random_payload(rng);
+            let cap = value_cap(payload);
+            let down = match rng.below(4) {
+                0 => Downlink::Dense {
+                    x: (0..dim).map(|_| adversarial(rng, cap)).collect(),
+                    w: None,
+                },
+                1 => Downlink::Dense {
+                    x: (0..dim).map(|_| adversarial(rng, cap)).collect(),
+                    w: Some((0..dim).map(|_| adversarial(rng, cap)).collect()),
+                },
+                2 => Downlink::Sparse {
+                    delta: random_msg(rng, dim, payload),
+                },
+                _ => Downlink::Init {
+                    x: (0..dim).map(|_| adversarial(rng, cap)).collect(),
+                },
+            };
+
+            let mut body = Vec::new();
+            codec::put_downlink(&mut body, &down, payload);
+            if body.len() + FRAME_PREFIX != codec::downlink_frame_len(&down, payload) {
+                return Err(format!("{}: downlink frame_len mismatch", payload.name()));
+            }
+
+            let mut dec = dirty_downlink(rng);
+            codec::get_downlink(&body, dim, &mut dec)
+                .map_err(|e| format!("{}: decode failed: {e}", payload.name()))?;
+            match (&down, &dec) {
+                (Downlink::Dense { x: ox, w: ow }, Downlink::Dense { x: dx, w: dw }) => {
+                    check_dense(ox, dx, payload)?;
+                    match (ow, dw) {
+                        (None, None) => {}
+                        (Some(o), Some(d)) => check_dense(o, d, payload)?,
+                        _ => return Err("w presence not round-tripped".into()),
+                    }
+                }
+                (Downlink::Sparse { delta: o }, Downlink::Sparse { delta: d }) => {
+                    check_block(o, d, payload)?
+                }
+                (Downlink::Init { x: o }, Downlink::Init { x: d }) => check_dense(o, d, payload)?,
+                _ => return Err("downlink kind changed in roundtrip".into()),
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---- malformed frames --------------------------------------------------
+
+/// Random sample of truncation points, always including the shortest and
+/// longest prefixes (where header/trailing checks live).
+fn cut_points(rng: &mut Rng, len: usize, want: usize) -> Vec<usize> {
+    let mut cuts: Vec<usize> = (0..len.min(9)).collect();
+    for t in len.saturating_sub(8)..len {
+        cuts.push(t);
+    }
+    for _ in 0..want {
+        if len > 0 {
+            cuts.push(rng.below(len));
+        }
+    }
+    cuts.sort_unstable();
+    cuts.dedup();
+    cuts
+}
+
+#[test]
+fn fuzz_truncated_frames_decode_to_err() {
+    forall(
+        PropConfig::cases(64, fuzz_seed() ^ 0x7C),
+        "every truncation decodes to Err",
+        |rng| {
+            let dim = 1 + rng.below(128);
+            let payload = random_payload(rng);
+            let up = Uplink {
+                delta: random_msg(rng, dim, payload),
+                delta2: rng.bernoulli(0.3).then(|| random_msg(rng, dim, payload)),
+            };
+            let mut body = Vec::new();
+            codec::put_uplink(&mut body, &up, rng.below(64), payload);
+            for cut in cut_points(rng, body.len(), 32) {
+                let mut dec = Uplink::default();
+                if codec::get_uplink(&body[..cut], dim, &mut dec).is_ok() {
+                    return Err(format!("uplink truncated at {cut}/{} decoded Ok", body.len()));
+                }
+            }
+
+            let down = Downlink::Dense {
+                x: (0..dim).map(|_| adversarial(rng, value_cap(payload))).collect(),
+                w: None,
+            };
+            let mut dbody = Vec::new();
+            codec::put_downlink(&mut dbody, &down, payload);
+            for cut in cut_points(rng, dbody.len(), 32) {
+                let mut dec = dirty_downlink(rng);
+                if codec::get_downlink(&dbody[..cut], dim, &mut dec).is_ok() {
+                    return Err(format!(
+                        "downlink truncated at {cut}/{} decoded Ok",
+                        dbody.len()
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn fuzz_corrupted_frames_never_panic() {
+    forall(
+        PropConfig::cases(128, fuzz_seed() ^ 0xBAD),
+        "byte corruption decodes to Err or a valid message, no panic",
+        |rng| {
+            let dim = 1 + rng.below(128);
+            let payload = random_payload(rng);
+            let up = Uplink {
+                delta: random_msg(rng, dim, payload),
+                delta2: rng.bernoulli(0.3).then(|| random_msg(rng, dim, payload)),
+            };
+            let mut body = Vec::new();
+            codec::put_uplink(&mut body, &up, rng.below(64), payload);
+            if body.is_empty() {
+                return Ok(());
+            }
+            for _ in 0..8 {
+                let mut bad = body.clone();
+                for _ in 0..1 + rng.below(4) {
+                    let pos = rng.below(bad.len());
+                    bad[pos] ^= (1 + rng.below(255)) as u8;
+                }
+                // claimed dim may also disagree with the encoder's
+                let claim = 1 + rng.below(2 * dim);
+                let mut dec = dirty_uplink(rng);
+                let _ = codec::get_uplink(&bad, claim, &mut dec);
+
+                // a corrupted uplink must also never decode as a downlink
+                // in an uncontrolled way
+                let mut ddec = dirty_downlink(rng);
+                let _ = codec::get_downlink(&bad, claim, &mut ddec);
+            }
+            Ok(())
+        },
+    );
+}
