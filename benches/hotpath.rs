@@ -35,7 +35,10 @@ use smx::util::bench::{bench, black_box, BenchResult};
 use smx::util::json::Json;
 use smx::util::rng::Rng;
 use smx::wire::codec as wcodec;
-use smx::wire::runtime::{server_round, worker_loop, HostedShards, ServerRoundState, WorkerHost};
+use smx::wire::runtime::{
+    server_round, worker_loop, HostedShards, ServerRoundState, ShardRunner, WorkerHost,
+    WorkerState,
+};
 use smx::wire::{loopback_pair, Payload};
 
 // ---- pre-opt reference kernels (scalar loops, what the blocked versions
@@ -388,20 +391,23 @@ fn main() -> anyhow::Result<()> {
         }
         let shards_ref = &shards;
         std::thread::scope(|scope| {
-            for (mut end, mut group) in ends.into_iter().zip(groups.into_iter()) {
+            for (mut end, group) in ends.into_iter().zip(groups.into_iter()) {
                 let base = base.clone();
                 scope.spawn(move || {
-                    let mut engines: Vec<Box<dyn GradEngine>> = group
-                        .iter()
-                        .map(|(i, _)| {
-                            Box::new(NativeEngine::from_shard(&shards_ref[*i], 1e-3))
-                                as Box<dyn GradEngine>
+                    let runners: Vec<ShardRunner> = group
+                        .into_iter()
+                        .map(|(i, w)| {
+                            ShardRunner::new(
+                                i,
+                                w,
+                                Box::new(NativeEngine::from_shard(&shards_ref[i], 1e-3))
+                                    as Box<dyn GradEngine>,
+                                base.derive(i as u64),
+                            )
                         })
                         .collect();
-                    let mut rngs: Vec<Rng> =
-                        group.iter().map(|(i, _)| base.derive(*i as u64)).collect();
-                    let _ =
-                        worker_loop(&mut group, &mut engines, &mut rngs, &mut end, Payload::F64);
+                    let mut state = WorkerState::for_loopback(runners, Payload::F64, 1);
+                    let _ = worker_loop(&mut state, &mut end);
                 });
             }
             let mut st = ServerRoundState::new(n);
@@ -424,6 +430,51 @@ fn main() -> anyhow::Result<()> {
                 let _ = h.transport.send(&[wcodec::TAG_STOP]);
             }
         });
+    }
+
+    // channel substrate: the threaded driver's SPSC ring (preallocated
+    // slots, zero allocs per message) vs the mpsc channel it replaced
+    // (allocates internal blocks per send) — one message ping-ponged
+    // between two threads per iteration
+    {
+        use std::sync::mpsc;
+        let (ping_tx, ping_rx) = smx::util::ring::ring::<Uplink>(2);
+        let (pong_tx, pong_rx) = smx::util::ring::ring::<Uplink>(2);
+        let echo = std::thread::spawn(move || {
+            while let Ok(v) = ping_rx.recv() {
+                if pong_tx.send(v).is_err() {
+                    break;
+                }
+            }
+        });
+        let mut slot = Some(Uplink::default());
+        rows.push(bench("channel ping-pong spsc ring (Uplink)", 150, || {
+            ping_tx.send(slot.take().unwrap()).unwrap();
+            slot = Some(pong_rx.recv().unwrap());
+        }));
+        drop(ping_tx);
+        echo.join().unwrap();
+
+        let (ping_tx, ping_rx) = mpsc::channel::<Uplink>();
+        let (pong_tx, pong_rx) = mpsc::channel::<Uplink>();
+        let echo = std::thread::spawn(move || {
+            while let Ok(v) = ping_rx.recv() {
+                if pong_tx.send(v).is_err() {
+                    break;
+                }
+            }
+        });
+        let mut slot = Some(Uplink::default());
+        rows.push(bench(
+            "channel ping-pong mpsc (pre-opt reference)",
+            150,
+            || {
+                ping_tx.send(slot.take().unwrap()).unwrap();
+                slot = Some(pong_rx.recv().unwrap());
+            },
+        ));
+        drop(ping_tx);
+        echo.join().unwrap();
     }
 
     // perf trajectory artifact

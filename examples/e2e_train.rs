@@ -6,7 +6,7 @@
 //!
 //!   L1 Pallas kernel → L2 JAX model → AOT HLO text (`make artifacts`)
 //!   → PJRT CPU executables → threaded Rust coordinator (one OS thread
-//!   per worker, mpsc channels, matrix-aware sparse uplinks).
+//!   per worker, SPSC ring-buffer channels, matrix-aware sparse uplinks).
 //!
 //! Logs the loss curve + communication volume; numbers are recorded in
 //! EXPERIMENTS.md. Run with:

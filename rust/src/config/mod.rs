@@ -29,10 +29,13 @@
 //! The `wire` section configures the [`crate::wire`] subsystem:
 //! `payload` is the value encoding (`f64`/`f32`/`q16`/`q8`/`q4`),
 //! `listen` the `smx serve` address, `workers` the number of worker
-//! *processes* a serve run waits for (0 ⇒ one per shard), and
-//! `float_bits` optionally overrides the modeled bit account (it defaults
-//! to the payload's width, so `"payload": "f32"` reproduces Appendix
-//! C.5's 32-bit accounting with no further flags).
+//! *processes* a serve run waits for (0 ⇒ one per shard), `float_bits`
+//! optionally overrides the modeled bit account (it defaults to the
+//! payload's width, so `"payload": "f32"` reproduces Appendix C.5's
+//! 32-bit accounting with no further flags), and `worker_timeout` is the
+//! fault-tolerance grace window in seconds (`--worker-timeout`; 0
+//! disables fault handling). The top-level `pin` key (`--pin`) opts into
+//! per-worker core pinning in the threaded driver.
 
 use crate::data::{spec_by_name, synth};
 use crate::runtime::EngineKind;
@@ -53,6 +56,14 @@ pub struct WireConfig {
     pub workers: usize,
     /// override the modeled bit account's float width (None ⇒ payload width)
     pub float_bits: Option<u32>,
+    /// fault-tolerance grace window in seconds: how long a worker may
+    /// stay silent mid-gather before its shards are orphaned, and how
+    /// long the server waits for a rejoining replacement before
+    /// reassigning them to survivors. 0 disables fault handling (any
+    /// worker failure aborts the run). Must exceed the slowest
+    /// single-shard round computation — workers cannot heartbeat
+    /// mid-gradient.
+    pub worker_timeout: f64,
 }
 
 impl Default for WireConfig {
@@ -62,6 +73,7 @@ impl Default for WireConfig {
             listen: "127.0.0.1:4950".to_string(),
             workers: 0,
             float_bits: None,
+            worker_timeout: 30.0,
         }
     }
 }
@@ -97,6 +109,9 @@ impl WireConfig {
                 "float_bits" => {
                     w.float_bits = Some(v.as_usize().context("wire.float_bits")? as u32)
                 }
+                "worker_timeout" => {
+                    w.worker_timeout = v.as_f64().context("wire.worker_timeout")?
+                }
                 other => bail!("unknown wire config key '{other}'"),
             }
         }
@@ -108,6 +123,7 @@ impl WireConfig {
             ("payload", Json::Str(self.payload.name().to_string())),
             ("listen", Json::Str(self.listen.clone())),
             ("workers", Json::Num(self.workers as f64)),
+            ("worker_timeout", Json::Num(self.worker_timeout)),
         ];
         if let Some(b) = self.float_bits {
             fields.push(("float_bits", Json::Num(b as f64)));
@@ -139,7 +155,12 @@ pub struct ExperimentConfig {
     /// Output is bitwise identical for every value (deterministic per-cell
     /// seeds; see `experiments::pool`).
     pub jobs: usize,
-    /// wire subsystem: payload encoding, serve address, process count
+    /// pin `run_threaded` worker `i` to core `i mod cores`
+    /// (`sched_setaffinity`; no-op off Linux). Cannot affect results —
+    /// asserted by the pinned column in `tests/driver_matrix.rs`.
+    pub pin: bool,
+    /// wire subsystem: payload encoding, serve address, process count,
+    /// fault-tolerance grace window
     pub wire: WireConfig,
 }
 
@@ -162,6 +183,7 @@ impl Default for ExperimentConfig {
             start_near_opt: false,
             practical_adiana: true,
             jobs: 0,
+            pin: false,
             wire: WireConfig::default(),
         }
     }
@@ -225,6 +247,7 @@ impl ExperimentConfig {
                     c.practical_adiana = v.as_bool().context("practical_adiana")?
                 }
                 "jobs" => c.jobs = v.as_usize().context("jobs")?,
+                "pin" => c.pin = v.as_bool().context("pin")?,
                 "wire" => c.wire = WireConfig::from_json(v).context("wire")?,
                 other => bail!("unknown config key '{other}'"),
             }
@@ -287,6 +310,13 @@ impl ExperimentConfig {
         if args.has("jobs") {
             self.jobs = args.usize_or("jobs", self.jobs);
         }
+        if args.has("pin") {
+            self.pin = args.bool_or("pin", self.pin);
+        }
+        if args.has("worker-timeout") {
+            self.wire.worker_timeout =
+                args.f64_or("worker-timeout", self.wire.worker_timeout);
+        }
         if let Some(s) = args.get("payload") {
             self.wire.payload =
                 Payload::parse(s).with_context(|| format!("bad wire payload '{s}'"))?;
@@ -321,6 +351,13 @@ impl ExperimentConfig {
                 bail!("wire.float_bits must be in 1..=64 (got {b})");
             }
         }
+        if !self.wire.worker_timeout.is_finite() || self.wire.worker_timeout < 0.0 {
+            bail!(
+                "wire.worker_timeout must be a non-negative number of seconds \
+                 (got {}; 0 disables fault handling)",
+                self.wire.worker_timeout
+            );
+        }
         for m in &self.methods {
             if !crate::methods::METHOD_NAMES.contains(&m.as_str()) {
                 bail!(
@@ -351,6 +388,7 @@ impl ExperimentConfig {
             ("start_near_opt", Json::Bool(self.start_near_opt)),
             ("practical_adiana", Json::Bool(self.practical_adiana)),
             ("jobs", Json::Num(self.jobs as f64)),
+            ("pin", Json::Bool(self.pin)),
             ("wire", self.wire.to_json()),
         ])
     }
@@ -405,7 +443,8 @@ mod tests {
 
         let mut c2 = ExperimentConfig::default();
         let args = Args::parse(
-            "--payload f32 --float-bits 64 --wire-workers 2 --listen 127.0.0.1:5000"
+            "--payload f32 --float-bits 64 --wire-workers 2 --listen 127.0.0.1:5000 \
+             --worker-timeout 2.5 --pin"
                 .split_whitespace()
                 .map(String::from),
             false,
@@ -415,6 +454,16 @@ mod tests {
         assert_eq!(c2.wire.effective_float_bits(), 64); // override wins
         assert_eq!(c2.wire.workers, 2);
         assert_eq!(c2.wire.listen, "127.0.0.1:5000");
+        assert_eq!(c2.wire.worker_timeout, 2.5);
+        assert!(c2.pin);
+        // defaults: fault tolerance on with a generous window, no pinning
+        assert_eq!(ExperimentConfig::default().wire.worker_timeout, 30.0);
+        assert!(!ExperimentConfig::default().pin);
+        // negative grace windows are rejected
+        assert!(ExperimentConfig::from_json(
+            &Json::parse(r#"{"wire": {"worker_timeout": -1}}"#).unwrap()
+        )
+        .is_err());
 
         assert!(ExperimentConfig::from_json(
             &Json::parse(r#"{"wire": {"payload": "f16"}}"#).unwrap()

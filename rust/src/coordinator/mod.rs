@@ -7,11 +7,12 @@
 //! * [`run_sim`] — deterministic in-process loop (workers execute
 //!   sequentially on the calling thread). Used by the figure sweeps,
 //!   benches and tests: zero scheduling noise, exact reproducibility.
-//! * [`run_threaded`] — one OS thread per worker connected by mpsc
-//!   channels, mirroring a real parameter-server deployment. Engines are
-//!   constructed *inside* each worker thread via an [`EngineFactory`]
-//!   (the PJRT client is not `Send`). Used by the e2e example and the
-//!   throughput benches.
+//! * [`run_threaded`] — one OS thread per worker connected by
+//!   fixed-capacity SPSC [`ring`](crate::util::ring) buffers, mirroring a
+//!   real parameter-server deployment (optionally core-pinned via
+//!   [`RunConfig::pin`]). Engines are constructed *inside* each worker
+//!   thread via an [`EngineFactory`] (the PJRT client is not `Send`).
+//!   Used by the e2e example and the throughput benches.
 //!
 //! Both drivers seed workers identically, so given the same method +
 //! engines they produce *bitwise identical* trajectories — an invariant
@@ -33,9 +34,9 @@ use crate::linalg::vector;
 use crate::methods::{Downlink, Method, RoundBuffers, Uplink};
 use crate::runtime::GradEngine;
 use crate::util::rng::Rng;
+use crate::util::ring;
 use crate::util::timer::PhaseTimer;
 use crate::wire::codec::{self, Payload};
-use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -56,6 +57,11 @@ pub struct RunConfig {
     /// what the in-process drivers' measured `bytes_up`/`bytes_down`
     /// accounting assumes
     pub payload: Payload,
+    /// pin worker thread `i` to core `i mod cores` in [`run_threaded`]
+    /// (`sched_setaffinity`; no-op off Linux). Pinning cannot affect the
+    /// trajectory — the protocol is synchronous and deterministic — it
+    /// only removes scheduler migration from the hot loop.
+    pub pin: bool,
 }
 
 impl Default for RunConfig {
@@ -67,6 +73,7 @@ impl Default for RunConfig {
             seed: 0xC0FFEE,
             float_bits: 64,
             payload: Payload::F64,
+            pin: false,
         }
     }
 }
@@ -222,14 +229,27 @@ enum ToWorker {
     Stop,
 }
 
+/// At most a `Round` and a `Recycle` are in flight to a worker at once,
+/// plus the final `Stop`; one spare slot keeps the send side from ever
+/// brushing the full-ring wait in the steady state.
+const TO_WORKER_RING_CAP: usize = 4;
+
 /// Threaded parameter-server driver: one thread per worker, synchronous
 /// rounds. Consumes the method (worker halves move into their threads).
 ///
-/// §Perf: uplink buffers cycle server→worker via [`ToWorker::Recycle`]
-/// and the downlink `Arc` is rewritten in place via `Arc::get_mut` once
-/// the workers drop their clones, so in steady state the only per-round
-/// allocations left are the mpsc channel's internal blocks (amortized;
-/// bounded in `tests/alloc_free.rs`).
+/// §Perf: each worker is connected by a pair of fixed-capacity SPSC
+/// [`ring`](crate::util::ring) channels (mpsc's per-send block allocation
+/// was the last per-round allocation source). Uplink buffers cycle
+/// server→worker via [`ToWorker::Recycle`], workers drop their downlink
+/// `Arc` clone *before* sending the uplink so the gather barrier
+/// guarantees `Arc::get_mut` succeeds and the broadcast buffer is
+/// rewritten in place — the steady-state coordinator round is literally
+/// allocation-free (asserted in `tests/alloc_free.rs`).
+///
+/// With [`RunConfig::pin`], worker `i` pins itself to core `i mod cores`
+/// before building its engine (`sched_setaffinity`; no-op off Linux).
+/// Pinning cannot change results — the protocol is synchronous — and the
+/// driver-identity tests run a pinned column to keep that true.
 pub fn run_threaded(
     mut method: Method,
     engine_factory: EngineFactory,
@@ -241,18 +261,25 @@ pub fn run_threaded(
     let record_every = cfg.record_every.max(1);
     let base = Rng::new(cfg.seed);
     let mut server_rng = base.derive(u64::MAX);
+    let pin = cfg.pin;
 
-    // spawn workers
-    let mut to_workers: Vec<mpsc::Sender<ToWorker>> = Vec::with_capacity(n);
-    let (up_tx, up_rx) = mpsc::channel::<(usize, Uplink)>();
+    // spawn workers: one SPSC ring per direction per worker
+    let mut to_workers: Vec<ring::RingSender<ToWorker>> = Vec::with_capacity(n);
+    let mut from_workers: Vec<ring::RingReceiver<Uplink>> = Vec::with_capacity(n);
     let mut handles = Vec::with_capacity(n);
     for (i, mut algo) in method.workers.drain(..).enumerate() {
-        let (tx, rx) = mpsc::channel::<ToWorker>();
+        let (tx, rx) = ring::ring::<ToWorker>(TO_WORKER_RING_CAP);
+        // capacity 1: a worker sends exactly one uplink per round and the
+        // server pops it within the same round's gather
+        let (up_tx, up_rx) = ring::ring::<Uplink>(1);
         to_workers.push(tx);
-        let up_tx = up_tx.clone();
+        from_workers.push(up_rx);
         let factory = engine_factory.clone();
         let mut rng = base.derive(i as u64);
         handles.push(std::thread::spawn(move || {
+            if pin {
+                crate::util::affinity::pin_to_core(i);
+            }
             let mut engine = factory(i);
             let mut spare: Vec<Uplink> = Vec::new();
             while let Ok(msg) = rx.recv() {
@@ -260,7 +287,12 @@ pub fn run_threaded(
                     ToWorker::Round(down) => {
                         let mut up = spare.pop().unwrap_or_default();
                         algo.round_into(&down, engine.as_mut(), &mut rng, &mut up);
-                        if up_tx.send((i, up)).is_err() {
+                        // Drop our downlink clone before handing the
+                        // uplink over: the ring's happens-before edge then
+                        // guarantees the server sees refcount 1 after the
+                        // gather, keeping its in-place rewrite alloc-free.
+                        drop(down);
+                        if up_tx.send(up).is_err() {
                             break;
                         }
                     }
@@ -270,7 +302,6 @@ pub fn run_threaded(
             }
         }));
     }
-    drop(up_tx);
 
     let denom = vector::dist2(method.server.iterate(), x_star).max(1e-300);
     let mut acc = Accounting::zero();
@@ -301,9 +332,10 @@ pub fn run_threaded(
         phases.time("server_downlink", || match Arc::get_mut(&mut down) {
             Some(d) => method.server.downlink_into(d),
             None => {
-                // a worker still holds a clone (rare race between its
-                // uplink send and its drop of the Arc) — fall back to a
-                // fresh allocation
+                // unreachable in practice: every worker drops its clone
+                // before its uplink send, and the previous round's gather
+                // synchronized with all n sends — kept as a safe fallback
+                // (the alloc_free test would flag it if it ever fired)
                 let mut fresh = Downlink::Init { x: Vec::new() };
                 method.server.downlink_into(&mut fresh);
                 down = Arc::new(fresh);
@@ -312,13 +344,18 @@ pub fn run_threaded(
         acc.coords_down += (down.coords() * n) as u64;
         acc.bytes_down += (codec::downlink_frame_len(&down, cfg.payload) * n) as u64;
         phases.time("scatter", || {
-            for tx in &to_workers {
-                tx.send(ToWorker::Round(down.clone())).expect("worker died");
+            for (i, tx) in to_workers.iter().enumerate() {
+                if tx.send(ToWorker::Round(down.clone())).is_err() {
+                    panic!("worker {i} died");
+                }
             }
         });
         phases.time("gather", || {
-            for _ in 0..n {
-                let (i, up) = up_rx.recv().expect("worker channel closed");
+            // fixed worker order: each ring is SPSC, so popping worker i's
+            // ring blocks exactly until its round is done — the barrier is
+            // complete after the loop, same as the shared-channel gather
+            for (i, up_rx) in from_workers.iter().enumerate() {
+                let up = up_rx.recv().expect("worker channel closed");
                 acc.coords_up += up.coords() as u64;
                 acc.bits_up += bits_of(&up, dim, cfg.float_bits);
                 acc.bytes_up += codec::uplink_frame_len(&up, i, cfg.payload) as u64;

@@ -109,6 +109,7 @@ pub fn run_config(cfg: &ExperimentConfig) -> RunConfig {
         seed: cfg.seed,
         float_bits: cfg.wire.effective_float_bits(),
         payload: cfg.wire.payload,
+        pin: cfg.pin,
     }
 }
 

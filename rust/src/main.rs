@@ -31,13 +31,17 @@ const USAGE: &str = "usage: smx <train|figures|tables|solve|info|serve|worker> [
   smx solve   --dataset mushrooms
   smx info    --dataset duke
   smx serve   --dataset a1a --methods diana+ --listen 127.0.0.1:4950 \\
-              --wire-workers 2 --payload f32 [--check-sim]
-  smx worker  --connect 127.0.0.1:4950
+              --wire-workers 2 --payload f32 [--check-sim] [--worker-timeout S]
+  smx worker  --connect 127.0.0.1:4950 [--pin-core N] [--die-after K]
 flags: --workers N --mu F --max-rounds N --target-residual F --seed N
        --engine native|pjrt --config FILE --out-dir DIR --data-dir DIR
        --record-every N --start-near-opt --jobs N (0 = all cores)
+       --pin (pin threaded-driver workers to cores)
 wire:  --payload f64|f32|q16|q8|q4 --listen HOST:PORT --wire-workers N
-       (0 = one process per shard) --float-bits N (modeled-bit override)";
+       (0 = one process per shard) --float-bits N (modeled-bit override)
+       --worker-timeout SECS (fault-tolerance grace window; 0 = fail fast)
+       --pin-core N (pin this worker process) --die-after K (chaos: drop
+       the connection after the K-th downlink, like a SIGKILL)";
 
 fn main() {
     smx::util::log::init_from_env();
@@ -162,7 +166,23 @@ fn run() -> Result<()> {
             let addr = args
                 .get("connect")
                 .ok_or_else(|| anyhow::anyhow!("smx worker requires --connect HOST:PORT"))?;
-            smx::wire::worker_connect(addr)?;
+            let opts = smx::wire::WorkerOpts {
+                die_after: args
+                    .get("die-after")
+                    .map(|s| {
+                        s.parse::<usize>()
+                            .map_err(|_| anyhow::anyhow!("--die-after expects a round count"))
+                    })
+                    .transpose()?,
+                pin: args
+                    .get("pin-core")
+                    .map(|s| {
+                        s.parse::<usize>()
+                            .map_err(|_| anyhow::anyhow!("--pin-core expects a core index"))
+                    })
+                    .transpose()?,
+            };
+            smx::wire::worker_connect_with(addr, opts)?;
         }
         "info" => {
             let cfg = config_from(&args)?;

@@ -2,11 +2,13 @@
 //! a mini property-test harness (the image is offline, so `rand`, `serde`,
 //! `clap`, `proptest` and friends are unavailable; see DESIGN.md §6).
 
+pub mod affinity;
 pub mod bench;
 pub mod cli;
 pub mod json;
 pub mod log;
 pub mod prop;
+pub mod ring;
 pub mod rng;
 pub mod timer;
 

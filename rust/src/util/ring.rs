@@ -1,0 +1,194 @@
+//! Fixed-capacity SPSC ring channel.
+//!
+//! `std::sync::mpsc` allocates a heap block per send (its internal linked
+//! segments), which made the channels the last per-round allocation source
+//! in [`run_threaded`](crate::coordinator::run_threaded) (§Perf backlog).
+//! This ring preallocates every slot at construction: `send`/`recv` move
+//! the value in and out of a fixed `Vec<Option<T>>` under a mutex, so the
+//! steady state makes **zero allocator calls** — asserted for the whole
+//! threaded round pipeline in `tests/alloc_free.rs`.
+//!
+//! Single-producer single-consumer by construction: the two endpoints are
+//! not `Clone`, so each ring connects exactly one sender to one receiver
+//! (the coordinator holds one ring per direction per worker). Both ends
+//! block on a `Condvar` when full/empty and observe the peer's drop as a
+//! disconnect, mirroring mpsc's error contract.
+
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Sending half died before the queue drained.
+#[derive(Debug, PartialEq, Eq)]
+pub struct RecvError;
+
+/// Receiving half is gone; the unsent value is returned.
+#[derive(Debug, PartialEq, Eq)]
+pub struct SendError<T>(pub T);
+
+struct State<T> {
+    /// fixed ring storage; `None` slots are empty
+    slots: Vec<Option<T>>,
+    /// index of the oldest element (next `recv`)
+    head: usize,
+    /// elements currently queued
+    len: usize,
+    tx_alive: bool,
+    rx_alive: bool,
+}
+
+struct Shared<T> {
+    state: Mutex<State<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+}
+
+/// Producer endpoint of [`ring`]. Not `Clone` (single producer).
+pub struct RingSender<T> {
+    shared: Arc<Shared<T>>,
+}
+
+/// Consumer endpoint of [`ring`]. Not `Clone` (single consumer).
+pub struct RingReceiver<T> {
+    shared: Arc<Shared<T>>,
+}
+
+/// A connected `(sender, receiver)` pair over `capacity` preallocated
+/// slots. `capacity` must be at least 1.
+pub fn ring<T>(capacity: usize) -> (RingSender<T>, RingReceiver<T>) {
+    assert!(capacity > 0, "ring capacity must be positive");
+    let shared = Arc::new(Shared {
+        state: Mutex::new(State {
+            slots: (0..capacity).map(|_| None).collect(),
+            head: 0,
+            len: 0,
+            tx_alive: true,
+            rx_alive: true,
+        }),
+        not_empty: Condvar::new(),
+        not_full: Condvar::new(),
+    });
+    (
+        RingSender {
+            shared: shared.clone(),
+        },
+        RingReceiver { shared },
+    )
+}
+
+impl<T> RingSender<T> {
+    /// Move `value` into the ring, blocking while it is full. Errors (and
+    /// hands the value back) once the receiver is gone.
+    pub fn send(&self, value: T) -> Result<(), SendError<T>> {
+        let mut st = self.shared.state.lock().unwrap();
+        loop {
+            if !st.rx_alive {
+                return Err(SendError(value));
+            }
+            if st.len < st.slots.len() {
+                let cap = st.slots.len();
+                let tail = (st.head + st.len) % cap;
+                debug_assert!(st.slots[tail].is_none());
+                st.slots[tail] = Some(value);
+                st.len += 1;
+                self.shared.not_empty.notify_one();
+                return Ok(());
+            }
+            st = self.shared.not_full.wait(st).unwrap();
+        }
+    }
+}
+
+impl<T> RingReceiver<T> {
+    /// Take the oldest value, blocking while the ring is empty. Errors
+    /// once the sender is gone *and* the queue has drained.
+    pub fn recv(&self) -> Result<T, RecvError> {
+        let mut st = self.shared.state.lock().unwrap();
+        loop {
+            if st.len > 0 {
+                let v = st.slots[st.head].take().expect("occupied ring slot");
+                st.head = (st.head + 1) % st.slots.len();
+                st.len -= 1;
+                self.shared.not_full.notify_one();
+                return Ok(v);
+            }
+            if !st.tx_alive {
+                return Err(RecvError);
+            }
+            st = self.shared.not_empty.wait(st).unwrap();
+        }
+    }
+}
+
+impl<T> Drop for RingSender<T> {
+    fn drop(&mut self) {
+        let mut st = self.shared.state.lock().unwrap();
+        st.tx_alive = false;
+        self.shared.not_empty.notify_one();
+    }
+}
+
+impl<T> Drop for RingReceiver<T> {
+    fn drop(&mut self) {
+        let mut st = self.shared.state.lock().unwrap();
+        st.rx_alive = false;
+        self.shared.not_full.notify_one();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_roundtrip() {
+        let (tx, rx) = ring::<u32>(3);
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        tx.send(3).unwrap();
+        assert_eq!(rx.recv(), Ok(1));
+        tx.send(4).unwrap(); // slot freed above
+        assert_eq!(rx.recv(), Ok(2));
+        assert_eq!(rx.recv(), Ok(3));
+        assert_eq!(rx.recv(), Ok(4));
+    }
+
+    #[test]
+    fn disconnect_contract() {
+        let (tx, rx) = ring::<u8>(2);
+        tx.send(7).unwrap();
+        drop(tx);
+        // queued values drain before the disconnect surfaces
+        assert_eq!(rx.recv(), Ok(7));
+        assert_eq!(rx.recv(), Err(RecvError));
+
+        let (tx, rx) = ring::<u8>(1);
+        drop(rx);
+        assert_eq!(tx.send(9), Err(SendError(9)));
+    }
+
+    #[test]
+    fn full_ring_blocks_until_pop() {
+        let (tx, rx) = ring::<usize>(2);
+        let producer = std::thread::spawn(move || {
+            for i in 0..100 {
+                tx.send(i).unwrap();
+            }
+        });
+        for i in 0..100 {
+            assert_eq!(rx.recv(), Ok(i));
+        }
+        producer.join().unwrap();
+    }
+
+    #[test]
+    fn wraparound_many_cycles() {
+        let (tx, rx) = ring::<Vec<u8>>(3);
+        let mut buf = vec![0u8; 16];
+        for round in 0..50u8 {
+            buf[0] = round;
+            tx.send(std::mem::take(&mut buf)).unwrap();
+            let got = rx.recv().unwrap();
+            assert_eq!(got[0], round);
+            buf = got; // recycle the buffer like the coordinator does
+        }
+    }
+}

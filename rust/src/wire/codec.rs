@@ -38,6 +38,17 @@ pub const TAG_HELLO_ACK: u8 = 2;
 pub const TAG_DOWNLINK: u8 = 3;
 pub const TAG_UPLINK: u8 = 4;
 pub const TAG_STOP: u8 = 5;
+/// Worker → server liveness beacon (sent on downlink receipt, between
+/// shards of a multi-shard round, and periodically during replay). Resets
+/// the server's `--worker-timeout` grace clock; carries no payload.
+pub const TAG_HEARTBEAT: u8 = 6;
+/// Server → worker: "the next `count` frames are journaled downlinks —
+/// replay them silently except the last, which is live". Sent right after
+/// a rejoining worker's handshake ack.
+pub const TAG_REPLAY: u8 = 7;
+/// Server → worker: adopt orphaned shards (listed in the body), then a
+/// replay block for *those shards only* follows, last frame live.
+pub const TAG_ADOPT: u8 = 8;
 
 const IDX_SORTED_GAP: u8 = 0;
 const IDX_RAW: u8 = 1;
@@ -659,6 +670,62 @@ pub fn downlink_frame_len(down: &Downlink, payload: Payload) -> usize {
         }
 }
 
+// ---- fault-tolerance frames -------------------------------------------
+
+/// Serialize a replay announcement: the next `count` frames are journaled
+/// downlink bodies (replay silently, answer only the last).
+pub fn put_replay(out: &mut Vec<u8>, count: usize) {
+    out.push(TAG_REPLAY);
+    put_varint(out, count as u64);
+}
+
+/// Decode a replay announcement → journaled-frame count.
+pub fn get_replay(body: &[u8]) -> Result<usize> {
+    let mut pos = 0usize;
+    if take1(body, &mut pos)? != TAG_REPLAY {
+        return Err(WireError::new("expected replay frame"));
+    }
+    let count = get_varint(body, &mut pos)? as usize;
+    if pos != body.len() {
+        return Err(WireError::new("trailing bytes in replay frame"));
+    }
+    Ok(count)
+}
+
+/// Serialize a shard-adoption order: `shards` move to this worker, and
+/// `replay_count` journaled downlink frames follow (for those shards
+/// only; the last one is live).
+pub fn put_adopt(out: &mut Vec<u8>, shards: &[usize], replay_count: usize) {
+    out.push(TAG_ADOPT);
+    put_varint(out, shards.len() as u64);
+    for &s in shards {
+        put_varint(out, s as u64);
+    }
+    put_varint(out, replay_count as u64);
+}
+
+/// Decode a shard-adoption order → (adopted shard indices, replay count).
+pub fn get_adopt(body: &[u8]) -> Result<(Vec<usize>, usize)> {
+    let mut pos = 0usize;
+    if take1(body, &mut pos)? != TAG_ADOPT {
+        return Err(WireError::new("expected adopt frame"));
+    }
+    let k = get_varint(body, &mut pos)? as usize;
+    // each index costs ≥ 1 byte, so k is bounded by the remaining bytes
+    if k > body.len() - pos {
+        return Err(WireError::new("adopt shard count exceeds frame"));
+    }
+    let mut shards = Vec::with_capacity(k);
+    for _ in 0..k {
+        shards.push(get_varint(body, &mut pos)? as usize);
+    }
+    let count = get_varint(body, &mut pos)? as usize;
+    if pos != body.len() {
+        return Err(WireError::new("trailing bytes in adopt frame"));
+    }
+    Ok((shards, count))
+}
+
 // ---- handshake ---------------------------------------------------------
 
 /// Everything a worker process needs to rebuild its shard-local state
@@ -1000,6 +1067,35 @@ mod tests {
             d.x0.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
             h.x0.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
         );
+    }
+
+    #[test]
+    fn replay_and_adopt_roundtrip_and_reject_malformed() {
+        let mut body = Vec::new();
+        put_replay(&mut body, 12345);
+        assert_eq!(get_replay(&body).unwrap(), 12345);
+        for cut in 0..body.len() {
+            assert!(get_replay(&body[..cut]).is_err(), "cut={cut}");
+        }
+        let mut extra = body.clone();
+        extra.push(0);
+        assert!(get_replay(&extra).is_err());
+
+        let mut body = Vec::new();
+        put_adopt(&mut body, &[3, 0, 1000], 77);
+        let (shards, count) = get_adopt(&body).unwrap();
+        assert_eq!(shards, vec![3, 0, 1000]);
+        assert_eq!(count, 77);
+        for cut in 0..body.len() {
+            assert!(get_adopt(&body[..cut]).is_err(), "cut={cut}");
+        }
+        // empty adoption is representable (degenerate but well-formed)
+        body.clear();
+        put_adopt(&mut body, &[], 0);
+        assert_eq!(get_adopt(&body).unwrap(), (Vec::new(), 0));
+        // wrong tags cross-reject
+        assert!(get_replay(&body).is_err());
+        assert!(get_adopt(&[TAG_REPLAY, 1]).is_err());
     }
 
     #[test]

@@ -23,13 +23,20 @@
 //!   without serializing, which is how the in-process drivers record
 //!   measured `bytes_up`/`bytes_down` allocation-free.
 //!
-//! * [`transport`] + [`runtime`] — a [`Transport`] trait (one framed,
-//!   bidirectional byte channel per worker process) with an in-process
-//!   loopback implementation and a length-prefixed TCP implementation
-//!   (`std::net`, no new dependencies), driving the third coordinator
-//!   entry point [`run_distributed`]: shards run in worker *processes*
-//!   (`smx serve` / `smx worker --connect`), each process hosting one or
-//!   more shards round-robin.
+//! * [`transport`] + [`poll`] + [`runtime`] — a [`Transport`] trait (one
+//!   framed, bidirectional byte channel per worker process) with an
+//!   in-process loopback implementation and a length-prefixed TCP
+//!   implementation (`std::net`, no new dependencies) that also supports
+//!   nonblocking frame reassembly; a minimal readiness shim over
+//!   epoll/kqueue with a portable short-deadline-polling fallback; and
+//!   the coordinator runtimes on top: the fixed-membership
+//!   [`run_distributed`] (loopback tests/benches) and the **elastic,
+//!   fault-tolerant multiplexed server** behind `smx serve` — worker
+//!   heartbeats, a per-round replay journal, deterministic rejoin, and
+//!   grace-window shard reassignment (see the
+//!   [`runtime`] module docs for the connection state machine).
+//!   Shards run in worker *processes* (`smx serve` / `smx worker
+//!   --connect`), each process hosting one or more shards round-robin.
 //!
 //! # Guarantees
 //!
@@ -40,6 +47,15 @@
 //!   bit-for-bit too), preserves message order, and the drivers derive
 //!   identical per-shard RNG streams. Asserted in
 //!   `rust/tests/wire_distributed.rs` and by `smx serve --check-sim`.
+//! * The identity survives **worker failures**: a worker process that
+//!   dies mid-run is replaced (rejoin) or absorbed (shard reassignment to
+//!   survivors) by replaying the journaled downlinks through the same
+//!   deterministic `round_into` calls, so the final model is still
+//!   bit-for-bit equal to `run_sim`'s — asserted by the chaos tests and
+//!   the `--die-after` smoke leg. Heartbeats and replay retransmissions
+//!   are protocol overhead, excluded from the `bytes_up`/`bytes_down`
+//!   accounting (which counts the frames the round logically applies, so
+//!   the accounting stays comparable across drivers and failures).
 //! * Lossy payloads quantize what the *server* sees; each worker's local
 //!   state (e.g. DIANA shifts) still integrates its exact values, so
 //!   server and worker shift estimates drift by a zero-mean error
@@ -59,11 +75,13 @@
 //! length prefix is included in all measured byte counts.
 
 pub mod codec;
+pub mod poll;
 pub mod runtime;
 pub mod transport;
 
 pub use codec::{Payload, WireError};
 pub use runtime::{
-    run_distributed, run_distributed_loopback, serve, serve_on, worker_connect, WorkerHost,
+    run_distributed, run_distributed_loopback, serve, serve_on, worker_connect,
+    worker_connect_with, FaultConfig, WorkerHost, WorkerOpts,
 };
 pub use transport::{loopback_pair, Loopback, Tcp, Transport};

@@ -1,15 +1,14 @@
-//! Distributed coordinator: [`run_distributed`] drives a
-//! [`ServerAlgo`](crate::methods::ServerAlgo) against worker *processes*
-//! over [`Transport`]s, plus the `smx serve` / `smx worker --connect`
-//! entry points and the in-process loopback harness.
+//! Distributed coordinator runtime: the elastic multiplexed TCP server
+//! behind `smx serve`, the worker-process round loop behind `smx worker`,
+//! and the in-process loopback harness.
 //!
-//! Protocol per round (after the TCP handshake):
+//! # Round protocol (after the `Hello` handshake)
 //!
-//! 1. the server encodes this round's downlink **once** and sends the
-//!    frame to every worker process;
-//! 2. each process decodes it and runs every shard it hosts (round-robin
-//!    assignment, ascending), sending one uplink frame per shard tagged
-//!    with the shard index;
+//! 1. the server encodes this round's downlink **once**, appends it to the
+//!    replay journal, and sends the frame to every live worker process;
+//! 2. each process decodes it, sends a heartbeat, and runs every shard it
+//!    hosts (round-robin assignment, ascending), sending one uplink frame
+//!    per shard tagged with the shard index;
 //! 3. the server decodes uplinks into per-shard slots (order on the wire
 //!    is irrelevant; apply order equals `run_sim`'s) and advances.
 //!
@@ -18,6 +17,67 @@
 //! `i`, `base.derive(u64::MAX)` for the server — which together with the
 //! lossless `f64` codec gives the bitwise-identity guarantee in the
 //! [module docs](crate::wire).
+//!
+//! # Connection lifecycle (server side)
+//!
+//! ```text
+//!            accept (nonblocking listener, readiness-polled)
+//!              │
+//!              ▼
+//!   ┌── work available? ──no──▶ STANDBY ──(shards orphaned later)──┐
+//!   │       (yes)                                                  │
+//!   ▼                                                              │
+//! AWAITING-ACK ◀───────────────────────────────────────────────────┘
+//!   │  Hello sent (shard set = initial assignment, or the orphan
+//!   │  pool for a rejoiner); worker rebuilds dataset + method state
+//!   │  deterministically and acks
+//!   ▼
+//! LIVE ── receives downlinks / replay journal, sends heartbeats and
+//!   │      uplinks; `last_seen` refreshed by every frame
+//!   ▼
+//! DEAD ── socket EOF/error, or silence past `--worker-timeout` while
+//!          owing uplinks, or handshake-ack deadline exceeded
+//! ```
+//!
+//! A connection's death **orphans** its shard set. Orphans are re-homed in
+//! two stages, both inside the current round's gather loop:
+//!
+//! * **rejoin** — the next accepted (or parked standby) connection gets a
+//!   `Hello` naming the orphaned shards; after its ack the server streams
+//!   `TAG_REPLAY` + the journaled downlinks of every completed round plus
+//!   the in-flight one. The worker replays all but the last silently
+//!   (advancing its per-shard RNG streams and local state through the
+//!   exact same `round_into` calls the dead worker made) and answers the
+//!   last — landing bit-for-bit where the dead worker would have been.
+//! * **reassignment** — if no replacement acks within the grace window
+//!   (`--worker-timeout` after the death), the orphans are dealt
+//!   round-robin to the surviving live connections via `TAG_ADOPT` + the
+//!   same journal stream; survivors promote their reserve worker halves
+//!   (every worker process builds all n halves and keeps the unassigned
+//!   ones at round-0 state precisely for this) and replay likewise.
+//!
+//! Both paths preserve the bitwise-identity guarantee: replay is
+//! deterministic, and the round's accounting only counts the uplink frame
+//! that is finally applied per shard (recovery retransmissions are
+//! excluded, so `coords_up` still matches `run_sim` — asserted by the
+//! chaos tests and `--check-sim`).
+//!
+//! # Replay journal
+//!
+//! The journal holds the encoded downlink body of every round so far. It
+//! grows O(rounds × frame size); for the experiment scales this runtime
+//! targets that is megabytes. Snapshot + truncation (replaying from a
+//! model checkpoint instead of round 0) is the documented follow-up in
+//! ROADMAP §Perf backlog.
+//!
+//! # Liveness
+//!
+//! Workers heartbeat when a downlink arrives and every few replayed
+//! frames; uplinks refresh liveness too. The grace window must therefore
+//! exceed the slowest *single-shard* round computation — the worker is
+//! single-threaded and cannot beacon mid-`round_into`. `--worker-timeout
+//! 0` disables fault handling entirely: any worker failure aborts the run
+//! (the pre-elastic behavior).
 
 use crate::config::ExperimentConfig;
 use crate::coordinator::{run_sim, EngineFactory, RoundRecord, RunConfig, RunResult};
@@ -30,12 +90,15 @@ use crate::runtime::{EngineKind, GradEngine};
 use crate::util::rng::Rng;
 use crate::util::timer::PhaseTimer;
 use crate::wire::codec::{self, Hello, Payload};
+use crate::wire::poll::Poller;
 use crate::wire::transport::{loopback_pair, Tcp, Transport};
 use anyhow::{bail, ensure, Context, Result};
+use std::net::TcpListener;
 use std::time::{Duration, Instant};
 
 /// One worker process from the server's perspective: a transport plus the
-/// shard indices it hosts.
+/// shard indices it hosts. Used by the fixed-membership
+/// [`run_distributed`] driver (loopback tests and benches).
 pub struct WorkerHost {
     pub transport: Box<dyn Transport>,
     pub shards: Vec<usize>,
@@ -52,6 +115,16 @@ pub struct RoundTotals {
     pub coords_down: u64,
     pub bytes_up: u64,
     pub bytes_down: u64,
+}
+
+impl RoundTotals {
+    fn accumulate(&mut self, t: &RoundTotals) {
+        self.coords_up += t.coords_up;
+        self.bits_up += t.bits_up;
+        self.coords_down += t.coords_down;
+        self.bytes_up += t.bytes_up;
+        self.bytes_down += t.bytes_down;
+    }
 }
 
 /// Reused server-side buffers: per-shard uplink slots, the downlink and
@@ -76,9 +149,11 @@ impl ServerRoundState {
     }
 }
 
-/// One synchronous distributed round: broadcast the downlink, gather one
-/// uplink per shard, apply. Public so the bench harness can time a single
-/// steady-state round against live worker threads.
+/// One synchronous distributed round against a *fixed* set of hosts:
+/// broadcast the downlink, gather one uplink per shard, apply. Public so
+/// the bench harness can time a single steady-state round against live
+/// worker threads. (The elastic TCP server has its own gather loop with
+/// fault handling; this one is the minimal reference.)
 pub fn server_round(
     server: &mut dyn ServerAlgo,
     hosts: &mut [WorkerHost],
@@ -101,9 +176,15 @@ pub fn server_round(
     }
 
     st.seen.fill(false);
+    let mut pending: usize = hosts.iter().map(|h| h.shards.len()).sum();
     for h in hosts.iter_mut() {
-        for _ in 0..h.shards.len() {
+        let mut got = 0;
+        while got < h.shards.len() {
             h.transport.recv(&mut st.up_buf).context("receiving uplink")?;
+            // workers may interleave heartbeats with uplinks
+            if codec::frame_tag(&st.up_buf)? == codec::TAG_HEARTBEAT {
+                continue;
+            }
             let shard = codec::peek_uplink_shard(&st.up_buf)?;
             ensure!(shard < n, "uplink for shard {shard}, but n = {n}");
             ensure!(!st.seen[shard], "duplicate uplink for shard {shard}");
@@ -113,17 +194,21 @@ pub fn server_round(
             t.coords_up += up.coords() as u64;
             t.bits_up += crate::coordinator::bits_of(up, dim, float_bits);
             t.bytes_up += (codec::FRAME_PREFIX + st.up_buf.len()) as u64;
+            got += 1;
+            pending -= 1;
         }
     }
+    debug_assert_eq!(pending, 0);
 
     server.apply(&st.ups, server_rng);
     Ok(t)
 }
 
-/// Distributed driver: same stopping/recording policy as
+/// Fixed-membership distributed driver: same stopping/recording policy as
 /// [`run_sim`](crate::coordinator::run_sim), with *measured* byte counts
 /// from the frames actually sent. Always releases the worker processes
-/// with a `Stop` frame, even on error.
+/// with a `Stop` frame, even on error. No fault tolerance — this is the
+/// loopback/bench reference; the TCP path goes through [`serve_on`].
 pub fn run_distributed(
     server: &mut dyn ServerAlgo,
     name: &str,
@@ -174,11 +259,7 @@ pub fn run_distributed(
                 break;
             }
         };
-        acc.coords_up += totals.coords_up;
-        acc.bits_up += totals.bits_up;
-        acc.coords_down += totals.coords_down;
-        acc.bytes_up += totals.bytes_up;
-        acc.bytes_down += totals.bytes_down;
+        acc.accumulate(&totals);
 
         let res = vector::dist2(server.iterate(), x_star) / denom;
         let hit_target = cfg.target_residual > 0.0 && res <= cfg.target_residual;
@@ -216,40 +297,222 @@ pub fn run_distributed(
     })
 }
 
-/// Worker-process main loop: for every downlink frame, run each hosted
-/// shard and send its uplink; exit cleanly on `Stop`.
-pub fn worker_loop(
-    workers: &mut [(usize, Box<dyn WorkerAlgo + Send>)],
-    engines: &mut [Box<dyn GradEngine>],
-    rngs: &mut [Rng],
-    transport: &mut dyn Transport,
+// ---- worker side -------------------------------------------------------
+
+/// Everything one shard needs to run rounds on a worker process.
+pub struct ShardRunner {
+    shard: usize,
+    algo: Box<dyn WorkerAlgo + Send>,
+    engine: Box<dyn GradEngine>,
+    rng: Rng,
+    up: Uplink,
+}
+
+impl ShardRunner {
+    pub fn new(
+        shard: usize,
+        algo: Box<dyn WorkerAlgo + Send>,
+        engine: Box<dyn GradEngine>,
+        rng: Rng,
+    ) -> ShardRunner {
+        ShardRunner {
+            shard,
+            algo,
+            engine,
+            rng,
+            up: Uplink::default(),
+        }
+    }
+
+    /// Advance this shard one round; optionally encode + send the uplink.
+    fn step(
+        &mut self,
+        down: &Downlink,
+        live: bool,
+        payload: Payload,
+        out: &mut Vec<u8>,
+        transport: &mut dyn Transport,
+    ) -> Result<()> {
+        self.algo
+            .round_into(down, self.engine.as_mut(), &mut self.rng, &mut self.up);
+        if live {
+            out.clear();
+            codec::put_uplink(out, &self.up, self.shard, payload);
+            transport.send(out).context("worker send")?;
+        }
+        Ok(())
+    }
+}
+
+/// Context a TCP worker keeps so it can *adopt* orphaned shards later:
+/// the dataset shards (to build gradient engines) and the reserve worker
+/// halves at round-0 state.
+struct AdoptCtx {
+    shards: Vec<crate::data::Shard>,
+    mu: f64,
+}
+
+/// Chaos / deployment knobs for [`worker_connect_with`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WorkerOpts {
+    /// Fault-injection hook (chaos tests, `smx worker --die-after N`):
+    /// drop the connection immediately after receiving the N-th live
+    /// downlink, without replying — observably identical to the process
+    /// being SIGKILLed at that instant (the OS closes the socket).
+    pub die_after: Option<usize>,
+    /// Pin this worker process to the given core before the round loop
+    /// (`sched_setaffinity`; no-op off Linux).
+    pub pin: Option<usize>,
+}
+
+/// Worker-process state: active shard runners, reserve halves for
+/// adoption, and the round loop bookkeeping.
+pub struct WorkerState {
+    active: Vec<ShardRunner>,
+    /// round-0 worker halves for shards this process does NOT host —
+    /// promoted by `TAG_ADOPT` (TCP workers only; empty under loopback)
+    reserve: HostedShards,
+    adopt_ctx: Option<AdoptCtx>,
+    seed: u64,
     payload: Payload,
-) -> Result<()> {
-    ensure!(!workers.is_empty(), "worker process hosts no shards");
-    assert_eq!(workers.len(), engines.len());
-    assert_eq!(workers.len(), rngs.len());
-    let dim = workers[0].1.dim();
+    dim: usize,
+    die_after: Option<usize>,
+    rounds_seen: usize,
+}
+
+impl WorkerState {
+    /// State for an in-process loopback worker (fixed membership: no
+    /// reserve halves, no adoption).
+    pub fn for_loopback(active: Vec<ShardRunner>, payload: Payload, seed: u64) -> WorkerState {
+        let dim = active.first().map(|r| r.algo.dim()).unwrap_or(0);
+        WorkerState {
+            active,
+            reserve: Vec::new(),
+            adopt_ctx: None,
+            seed,
+            payload,
+            dim,
+            die_after: None,
+            rounds_seen: 0,
+        }
+    }
+}
+
+/// Heartbeat cadence while replaying a long journal.
+const REPLAY_HEARTBEAT_EVERY: usize = 16;
+
+fn send_heartbeat(transport: &mut dyn Transport) -> Result<()> {
+    transport
+        .send(&[codec::TAG_HEARTBEAT])
+        .context("worker heartbeat")
+}
+
+/// Worker-process main loop: run every hosted shard per downlink, replay
+/// journaled rounds on demand, adopt orphaned shards, exit on `Stop`.
+pub fn worker_loop(state: &mut WorkerState, transport: &mut dyn Transport) -> Result<()> {
+    ensure!(!state.active.is_empty(), "worker process hosts no shards");
     let mut body = Vec::new();
-    let mut down = Downlink::Init { x: Vec::new() };
-    let mut ups: Vec<Uplink> = workers.iter().map(|_| Uplink::default()).collect();
     let mut out = Vec::new();
+    let mut down = Downlink::Init { x: Vec::new() };
+    let payload = state.payload;
+    let dim = state.dim;
     loop {
         transport.recv(&mut body).context("worker recv")?;
         match codec::frame_tag(&body)? {
             codec::TAG_DOWNLINK => {
-                codec::get_downlink(&body, dim, &mut down)?;
-                for (k, (shard, algo)) in workers.iter_mut().enumerate() {
-                    let up = &mut ups[k];
-                    algo.round_into(&down, engines[k].as_mut(), &mut rngs[k], up);
-                    out.clear();
-                    codec::put_uplink(&mut out, up, *shard, payload);
-                    transport.send(&out).context("worker send")?;
+                state.rounds_seen += 1;
+                if state.die_after == Some(state.rounds_seen) {
+                    // injected fault: vanish without replying — the OS
+                    // closes the socket, exactly like a SIGKILL here
+                    return Ok(());
                 }
+                send_heartbeat(transport)?;
+                codec::get_downlink(&body, dim, &mut down)?;
+                for r in state.active.iter_mut() {
+                    r.step(&down, true, payload, &mut out, transport)?;
+                }
+            }
+            codec::TAG_REPLAY => {
+                // rejoin catch-up: every active shard replays the whole
+                // journal; only the last frame is answered
+                let count = codec::get_replay(&body)?;
+                let all: Vec<usize> = (0..state.active.len()).collect();
+                replay_rounds(state, transport, &mut body, &mut out, &mut down, count, &all)?;
+            }
+            codec::TAG_ADOPT => {
+                let (shards, count) = codec::get_adopt(&body)?;
+                let fresh = adopt_shards(state, &shards)?;
+                replay_rounds(state, transport, &mut body, &mut out, &mut down, count, &fresh)?;
             }
             codec::TAG_STOP => return Ok(()),
             other => bail!("worker: unexpected frame tag {other}"),
         }
     }
+}
+
+/// Promote `shards` from the reserve pool to active runners (round-0
+/// state). Returns the indices of the new runners within `state.active`.
+fn adopt_shards(state: &mut WorkerState, shards: &[usize]) -> Result<Vec<usize>> {
+    let ctx = state
+        .adopt_ctx
+        .as_ref()
+        .ok_or_else(|| anyhow::anyhow!("adoption unsupported on this worker (loopback)"))?;
+    let base = Rng::new(state.seed);
+    let mut fresh = Vec::with_capacity(shards.len());
+    for &s in shards {
+        let pos = state
+            .reserve
+            .iter()
+            .position(|(i, _)| *i == s)
+            .with_context(|| format!("shard {s} not in reserve (already active or unknown)"))?;
+        let (i, algo) = state.reserve.swap_remove(pos);
+        let engine = Box::new(NativeEngine::from_shard(&ctx.shards[i], ctx.mu));
+        crate::info!("wire", "adopting orphaned shard {i}");
+        fresh.push(state.active.len());
+        state
+            .active
+            .push(ShardRunner::new(i, algo, engine, base.derive(i as u64)));
+    }
+    Ok(fresh)
+}
+
+/// Consume `count` journaled downlink frames: advance the runners at
+/// `targets` through all of them, answering only the last (live) frame.
+fn replay_rounds(
+    state: &mut WorkerState,
+    transport: &mut dyn Transport,
+    body: &mut Vec<u8>,
+    out: &mut Vec<u8>,
+    down: &mut Downlink,
+    count: usize,
+    targets: &[usize],
+) -> Result<()> {
+    if count == 0 {
+        return Ok(());
+    }
+    crate::info!(
+        "wire",
+        "replaying {count} journaled round(s) over {} shard(s)",
+        targets.len()
+    );
+    send_heartbeat(transport)?;
+    for f in 0..count {
+        transport.recv(body).context("replay recv")?;
+        ensure!(
+            codec::frame_tag(body)? == codec::TAG_DOWNLINK,
+            "replay stream interrupted by a non-downlink frame"
+        );
+        codec::get_downlink(body, state.dim, down)?;
+        let live = f + 1 == count;
+        let payload = state.payload;
+        for &k in targets {
+            state.active[k].step(down, live, payload, out, transport)?;
+        }
+        if (f + 1) % REPLAY_HEARTBEAT_EVERY == 0 && !live {
+            send_heartbeat(transport)?;
+        }
+    }
+    Ok(())
 }
 
 /// Run the full distributed protocol in-process: the server on the
@@ -296,18 +559,22 @@ pub fn run_distributed_loopback(
         ends.push(b);
     }
     let payload = cfg.payload;
+    let seed = cfg.seed;
 
     std::thread::scope(|scope| {
         let mut handles = Vec::with_capacity(procs);
-        for (mut end, mut group) in ends.into_iter().zip(groups.into_iter()) {
+        for (mut end, group) in ends.into_iter().zip(groups.into_iter()) {
             let factory = engine_factory.clone();
             let base = base.clone();
             handles.push(scope.spawn(move || -> Result<()> {
-                let mut engines: Vec<Box<dyn GradEngine>> =
-                    group.iter().map(|(i, _)| factory(*i)).collect();
-                let mut rngs: Vec<Rng> =
-                    group.iter().map(|(i, _)| base.derive(*i as u64)).collect();
-                worker_loop(&mut group, &mut engines, &mut rngs, &mut end, payload)
+                let runners: Vec<ShardRunner> = group
+                    .into_iter()
+                    .map(|(i, algo)| {
+                        ShardRunner::new(i, algo, factory(i), base.derive(i as u64))
+                    })
+                    .collect();
+                let mut state = WorkerState::for_loopback(runners, payload, seed);
+                worker_loop(&mut state, &mut end)
             }));
         }
         let result = run_distributed(server.as_mut(), &name, &mut hosts, x_star, cfg);
@@ -321,25 +588,700 @@ pub fn run_distributed_loopback(
     })
 }
 
-/// `smx serve`: prepare the problem, accept the configured number of
-/// worker-process connections, hand each its shard assignment via the
-/// `Hello` handshake, run [`run_distributed`] and write the residual
+// ---- elastic TCP server ------------------------------------------------
+
+/// Fault-handling policy of the elastic server.
+#[derive(Clone, Copy, Debug)]
+pub struct FaultConfig {
+    /// Grace window: how long a live worker may stay silent while owing
+    /// uplinks before being declared dead, and how long the server waits
+    /// for a rejoining replacement before reassigning orphaned shards.
+    /// `Duration::ZERO` disables fault handling (any failure aborts).
+    pub worker_timeout: Duration,
+}
+
+impl FaultConfig {
+    fn enabled(&self) -> bool {
+        self.worker_timeout > Duration::ZERO
+    }
+
+    /// A rejoiner rebuilds the dataset + method state before acking; that
+    /// build cannot heartbeat, so it gets a generous multiple.
+    fn ack_grace(&self) -> Duration {
+        (self.worker_timeout * 10).max(Duration::from_secs(30))
+    }
+}
+
+/// Poller token reserved for the listening socket.
+const LISTENER_TOKEN: u64 = u64::MAX;
+
+/// Kernel-wait slice; deadlines are re-checked at least this often.
+const WAIT_SLICE: Duration = Duration::from_millis(25);
+
+enum Phase {
+    /// `Hello` sent, worker is rebuilding state. Rejoiners carry an ack
+    /// deadline and owe a journal replay after acking.
+    AwaitingAck {
+        deadline: Option<Instant>,
+        replay_on_ack: bool,
+    },
+    Live,
+}
+
+struct Conn {
+    tcp: Tcp,
+    shards: Vec<usize>,
+    phase: Phase,
+    last_seen: Instant,
+    peer: String,
+}
+
+/// Per-round gather scratch (server side).
+struct Scratch {
+    down: Downlink,
+    down_buf: Vec<u8>,
+    ups: Vec<Uplink>,
+    seen: Vec<bool>,
+    /// length-prefixed size of the uplink frame finally applied per shard
+    up_bytes: Vec<u64>,
+}
+
+struct ElasticServer {
+    listener: TcpListener,
+    poller: Poller,
+    conns: Vec<Option<Conn>>,
+    /// accepted connections with no work yet (no Hello sent); promoted
+    /// when shards orphan
+    standby: Vec<Tcp>,
+    /// `Hello` template; `shards` is filled per installation
+    hello: Hello,
+    fault: FaultConfig,
+    payload: Payload,
+    n_shards: usize,
+    dim: usize,
+    /// encoded downlink body of every round so far (1-indexed by round)
+    journal: Vec<Vec<u8>>,
+    /// shards whose owner died, awaiting a rejoiner or reassignment
+    orphans: Vec<usize>,
+    orphan_deadline: Option<Instant>,
+    /// initial shard assignments not yet handed to a connection
+    pending_assignments: Vec<Vec<usize>>,
+    /// fatal condition recorded where `Result` cannot flow (fault
+    /// handling disabled, or an unrecoverable membership state)
+    fatal: Option<String>,
+    st: Scratch,
+    body: Vec<u8>,
+    events: Vec<u64>,
+}
+
+fn fd_of_tcp(t: &Tcp) -> i32 {
+    #[cfg(unix)]
+    {
+        t.raw_fd()
+    }
+    #[cfg(not(unix))]
+    {
+        // the fallback poller (the only backend off unix) ignores fds
+        -1
+    }
+}
+
+impl ElasticServer {
+    fn new(
+        listener: TcpListener,
+        hello: Hello,
+        fault: FaultConfig,
+        payload: Payload,
+        n_shards: usize,
+        dim: usize,
+        assignments: Vec<Vec<usize>>,
+    ) -> Result<ElasticServer> {
+        listener
+            .set_nonblocking(true)
+            .context("nonblocking listener")?;
+        let mut poller = Poller::new().context("creating poller")?;
+        #[cfg(unix)]
+        {
+            use std::os::unix::io::AsRawFd;
+            poller
+                .register(listener.as_raw_fd(), LISTENER_TOKEN)
+                .context("registering listener")?;
+        }
+        #[cfg(not(unix))]
+        {
+            poller
+                .register(-1, LISTENER_TOKEN)
+                .context("registering listener")?;
+        }
+        Ok(ElasticServer {
+            listener,
+            poller,
+            conns: Vec::new(),
+            standby: Vec::new(),
+            hello,
+            fault,
+            payload,
+            n_shards,
+            dim,
+            journal: Vec::new(),
+            orphans: Vec::new(),
+            orphan_deadline: None,
+            pending_assignments: assignments,
+            fatal: None,
+            st: Scratch {
+                down: Downlink::Init { x: Vec::new() },
+                down_buf: Vec::new(),
+                ups: (0..n_shards).map(|_| Uplink::default()).collect(),
+                seen: vec![false; n_shards],
+                up_bytes: vec![0; n_shards],
+            },
+            body: Vec::new(),
+            events: Vec::new(),
+        })
+    }
+
+    fn live_tokens(&self) -> Vec<usize> {
+        self.conns
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| matches!(c, Some(Conn { phase: Phase::Live, .. })))
+            .map(|(t, _)| t)
+            .collect()
+    }
+
+    /// Accept every pending connection; hand out work (initial
+    /// assignments first, then the orphan pool) or park as standby.
+    fn accept_pending(&mut self) -> Result<()> {
+        loop {
+            match self.listener.accept() {
+                Ok((stream, peer)) => {
+                    let tcp = Tcp::new(stream).context("wrapping accepted stream")?;
+                    crate::info!("wire", "accepted connection from {peer}");
+                    self.place(tcp)?;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return Ok(()),
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e).context("accepting worker"),
+            }
+        }
+    }
+
+    /// Give `tcp` work if any is waiting, else park it.
+    fn place(&mut self, tcp: Tcp) -> Result<()> {
+        if let Some(shards) = self.pending_assignments.pop() {
+            self.install(tcp, shards, false)?;
+        } else if !self.orphans.is_empty() {
+            let shards = std::mem::take(&mut self.orphans);
+            self.orphan_deadline = None;
+            self.install(tcp, shards, true)?;
+        } else {
+            self.standby.push(tcp);
+        }
+        Ok(())
+    }
+
+    /// Promote parked standby connections while work is waiting.
+    fn try_promote(&mut self) -> Result<()> {
+        while (!self.pending_assignments.is_empty() || !self.orphans.is_empty())
+            && !self.standby.is_empty()
+        {
+            let tcp = self.standby.pop().expect("checked non-empty");
+            self.place(tcp)?;
+        }
+        Ok(())
+    }
+
+    /// Send the `Hello` and start waiting for the ack. A send failure
+    /// returns the shards to their queue (the connection was dead on
+    /// arrival) instead of erroring the run.
+    fn install(&mut self, mut tcp: Tcp, shards: Vec<usize>, rejoin: bool) -> Result<()> {
+        tcp.set_nonblocking(true).context("nonblocking conn")?;
+        self.hello.shards = shards;
+        self.body.clear();
+        codec::put_hello(&mut self.body, &self.hello);
+        if let Err(e) = tcp.send(&self.body) {
+            crate::info!("wire", "handshake send failed ({e}); dropping connection");
+            let shards = std::mem::take(&mut self.hello.shards);
+            self.requeue(shards, rejoin);
+            return Ok(());
+        }
+        let shards = std::mem::take(&mut self.hello.shards);
+        let peer = tcp
+            .peer_addr()
+            .map(|a| a.to_string())
+            .unwrap_or_else(|_| "?".into());
+        crate::info!(
+            "wire",
+            "handshake sent to {peer} ({} shard(s){})",
+            shards.len(),
+            if rejoin { ", rejoin + replay" } else { "" }
+        );
+        let tok = self
+            .conns
+            .iter()
+            .position(|c| c.is_none())
+            .unwrap_or_else(|| {
+                self.conns.push(None);
+                self.conns.len() - 1
+            });
+        if let Err(e) = self.poller.register(fd_of_tcp(&tcp), tok as u64) {
+            // fd exhaustion or similar: drop this connection but keep the
+            // shards recoverable instead of hanging the gather forever
+            crate::info!("wire", "poller registration failed ({e}); dropping connection");
+            self.requeue(shards, rejoin);
+            return Ok(());
+        }
+        let deadline = if rejoin {
+            Some(Instant::now() + self.fault.ack_grace())
+        } else {
+            None
+        };
+        self.conns[tok] = Some(Conn {
+            tcp,
+            shards,
+            phase: Phase::AwaitingAck {
+                deadline,
+                replay_on_ack: rejoin,
+            },
+            last_seen: Instant::now(),
+            peer,
+        });
+        Ok(())
+    }
+
+    fn requeue(&mut self, shards: Vec<usize>, orphaned: bool) {
+        if shards.is_empty() {
+            return;
+        }
+        if orphaned {
+            self.orphans.extend(shards);
+            self.orphan_deadline = Some(Instant::now() + self.fault.worker_timeout);
+        } else {
+            self.pending_assignments.push(shards);
+        }
+    }
+
+    /// Declare connection `tok` dead: discard its partial uplinks for the
+    /// in-flight round and queue its shards for recovery. With fault
+    /// handling disabled this records a fatal error instead.
+    fn mark_dead(&mut self, tok: usize, why: &str) {
+        let Some(conn) = self.conns.get_mut(tok).and_then(|c| c.take()) else {
+            return;
+        };
+        let _ = self.poller.deregister(fd_of_tcp(&conn.tcp), tok as u64);
+        crate::info!(
+            "wire",
+            "worker {} ({} shard(s)) lost: {why}",
+            conn.peer,
+            conn.shards.len()
+        );
+        if !self.fault.enabled() {
+            self.fatal = Some(format!(
+                "worker {} failed ({why}) and fault handling is disabled \
+                 (--worker-timeout 0)",
+                conn.peer
+            ));
+            return;
+        }
+        for &s in &conn.shards {
+            self.st.seen[s] = false;
+            self.st.up_bytes[s] = 0;
+        }
+        let initial = matches!(
+            conn.phase,
+            Phase::AwaitingAck {
+                replay_on_ack: false,
+                ..
+            }
+        );
+        self.requeue(conn.shards, !initial);
+    }
+
+    /// Stream the whole journal to `tok`, prefixed by `announce` (a
+    /// `TAG_REPLAY` or `TAG_ADOPT` frame). Marks the connection dead on
+    /// any send failure.
+    fn send_journal(&mut self, tok: usize, announce: &[u8]) {
+        let res = (|| -> std::io::Result<()> {
+            let conn = self.conns[tok].as_mut().expect("journal to live conn");
+            conn.tcp.send(announce)?;
+            for frame in &self.journal {
+                conn.tcp.send(frame)?;
+            }
+            Ok(())
+        })();
+        if let Err(e) = res {
+            self.mark_dead(tok, &format!("journal send failed: {e}"));
+        }
+    }
+
+    /// Reassign the orphan pool round-robin across surviving live
+    /// connections (grace window expired with no rejoiner).
+    fn reassign_orphans(&mut self) -> Result<()> {
+        let live = self.live_tokens();
+        ensure!(
+            !live.is_empty(),
+            "all worker processes lost with {} shard(s) orphaned and no \
+             replacement within the grace window",
+            self.orphans.len()
+        );
+        let orphans = std::mem::take(&mut self.orphans);
+        self.orphan_deadline = None;
+        crate::info!(
+            "wire",
+            "grace window expired: reassigning {} shard(s) across {} survivor(s)",
+            orphans.len(),
+            live.len()
+        );
+        let mut groups: Vec<Vec<usize>> = vec![Vec::new(); live.len()];
+        for (k, s) in orphans.into_iter().enumerate() {
+            groups[k % live.len()].push(s);
+        }
+        let count = self.journal.len();
+        for (tok, extra) in live.into_iter().zip(groups) {
+            if extra.is_empty() {
+                continue;
+            }
+            let mut announce = Vec::new();
+            codec::put_adopt(&mut announce, &extra, count);
+            // record ownership first so a send failure orphans the
+            // adopted shards together with the rest of the connection
+            self.conns[tok]
+                .as_mut()
+                .expect("live conn")
+                .shards
+                .extend(extra);
+            self.send_journal(tok, &announce);
+        }
+        Ok(())
+    }
+
+    /// Drain every complete frame currently buffered on connection `tok`.
+    /// `gathering` enables uplink decoding (false during the initial
+    /// handshake phase, where an uplink is a protocol violation).
+    fn drain_conn(&mut self, tok: usize, gathering: bool) -> Result<()> {
+        loop {
+            if self.conns.get(tok).and_then(|c| c.as_ref()).is_none() {
+                return Ok(());
+            }
+            let got = {
+                let conn = self.conns[tok].as_mut().expect("checked above");
+                conn.tcp.try_recv(&mut self.body)
+            };
+            match got {
+                Ok(false) => return Ok(()),
+                Err(e) => {
+                    self.mark_dead(tok, &format!("connection error: {e}"));
+                    return Ok(());
+                }
+                Ok(true) => {}
+            }
+            let now = Instant::now();
+            let tag = codec::frame_tag(&self.body)?;
+            match tag {
+                codec::TAG_HEARTBEAT => {
+                    self.conns[tok].as_mut().expect("live conn").last_seen = now;
+                }
+                codec::TAG_HELLO_ACK => {
+                    let conn = self.conns[tok].as_mut().expect("live conn");
+                    conn.last_seen = now;
+                    let replay = match conn.phase {
+                        Phase::AwaitingAck { replay_on_ack, .. } => replay_on_ack,
+                        Phase::Live => bail!("worker {} acked twice", conn.peer),
+                    };
+                    conn.phase = Phase::Live;
+                    crate::info!("wire", "worker {} is live", conn.peer);
+                    if replay && !self.journal.is_empty() {
+                        let mut announce = Vec::new();
+                        codec::put_replay(&mut announce, self.journal.len());
+                        self.send_journal(tok, &announce);
+                    }
+                }
+                codec::TAG_UPLINK => {
+                    ensure!(gathering, "uplink before the first round started");
+                    let shard = codec::peek_uplink_shard(&self.body)?;
+                    ensure!(
+                        shard < self.n_shards,
+                        "uplink for shard {shard}, but n = {}",
+                        self.n_shards
+                    );
+                    {
+                        let conn = self.conns[tok].as_mut().expect("live conn");
+                        conn.last_seen = now;
+                        ensure!(
+                            conn.shards.contains(&shard),
+                            "worker {} sent an uplink for shard {shard} it does \
+                             not own",
+                            conn.peer
+                        );
+                        ensure!(
+                            !self.st.seen[shard],
+                            "duplicate uplink for shard {shard} from worker {}",
+                            conn.peer
+                        );
+                    }
+                    codec::get_uplink(&self.body, self.dim, &mut self.st.ups[shard])?;
+                    self.st.seen[shard] = true;
+                    self.st.up_bytes[shard] =
+                        (codec::FRAME_PREFIX + self.body.len()) as u64;
+                }
+                other => bail!("server: unexpected frame tag {other}"),
+            }
+        }
+    }
+
+    /// Fault bookkeeping: silence timeouts, ack deadlines, standby
+    /// promotion and grace-window reassignment. `gathering` scopes the
+    /// silence check to connections that still owe uplinks.
+    fn police(&mut self, gathering: bool) -> Result<()> {
+        if let Some(msg) = self.fatal.take() {
+            bail!("{msg}");
+        }
+        if !self.fault.enabled() {
+            return Ok(());
+        }
+        let now = Instant::now();
+        for tok in 0..self.conns.len() {
+            let verdict = match &self.conns[tok] {
+                Some(conn) => match &conn.phase {
+                    Phase::AwaitingAck {
+                        deadline: Some(d), ..
+                    } if now > *d => Some("handshake ack deadline exceeded"),
+                    Phase::Live
+                        if gathering
+                            && conn.shards.iter().any(|&s| !self.st.seen[s])
+                            && now.duration_since(conn.last_seen) > self.fault.worker_timeout =>
+                    {
+                        Some("silent past the grace window while owing uplinks")
+                    }
+                    _ => None,
+                },
+                None => None,
+            };
+            if let Some(why) = verdict {
+                self.mark_dead(tok, why);
+            }
+        }
+        self.try_promote()?;
+        if !self.orphans.is_empty() {
+            match self.orphan_deadline {
+                Some(d) if now > d => self.reassign_orphans()?,
+                _ => {}
+            }
+        }
+        Ok(())
+    }
+
+    /// One multiplexed wait-and-dispatch step.
+    fn pump(&mut self, gathering: bool) -> Result<()> {
+        self.police(gathering)?;
+        let mut events = std::mem::take(&mut self.events);
+        self.poller
+            .wait(WAIT_SLICE, &mut events)
+            .context("poller wait")?;
+        // the listener is polled opportunistically as well: the fallback
+        // backend reports everything, and a pending connect is cheap to
+        // test for (one nonblocking accept)
+        self.accept_pending()?;
+        for &tok in events.iter().filter(|&&t| t != LISTENER_TOKEN) {
+            self.drain_conn(tok as usize, gathering)?;
+        }
+        self.events = events;
+        Ok(())
+    }
+
+    /// Accept + handshake until every initial assignment is live. `Hello`s
+    /// go out the moment a connection arrives, so all workers rebuild
+    /// their dataset + smoothness state concurrently (cost = max build
+    /// time, not the sum); acks are collected multiplexed. A connection
+    /// that dies mid-handshake returns its assignment to the queue for
+    /// the next accept.
+    fn accept_initial(&mut self) -> Result<()> {
+        let want = self.pending_assignments.len();
+        crate::info!(
+            "wire",
+            "waiting for {want} worker process(es) ({} shards total)",
+            self.n_shards
+        );
+        // Completion is *shard coverage*, not a fixed connection count:
+        // a startup-phase death whose shards get reassigned to survivors
+        // can make the run viable with fewer than `want` processes, and
+        // waiting on the count would hang forever.
+        while !(self.pending_assignments.is_empty()
+            && self.orphans.is_empty()
+            && self.conns.iter().flatten().count() > 0
+            && self
+                .conns
+                .iter()
+                .flatten()
+                .all(|c| matches!(c.phase, Phase::Live)))
+        {
+            self.pump(false)?;
+        }
+        crate::info!(
+            "wire",
+            "all shards hosted across {} live worker process(es)",
+            self.live_tokens().len()
+        );
+        Ok(())
+    }
+
+    /// One elastic round: journal + broadcast, fault-tolerant gather,
+    /// apply. Accounting counts only the uplink frame finally applied per
+    /// shard and the live broadcast fan-out — recovery retransmissions
+    /// (journal replays) are excluded, so `coords_up` matches `run_sim`.
+    fn round(
+        &mut self,
+        server: &mut dyn ServerAlgo,
+        server_rng: &mut Rng,
+        float_bits: u32,
+    ) -> Result<RoundTotals> {
+        let mut t = RoundTotals::default();
+        server.downlink_into(&mut self.st.down);
+        self.st.down_buf.clear();
+        codec::put_downlink(&mut self.st.down_buf, &self.st.down, self.payload);
+        if self.fault.enabled() {
+            // the journal only exists to feed rejoin/adoption replays;
+            // fail-fast mode can never consume it, so don't grow it
+            self.journal.push(self.st.down_buf.clone());
+        }
+        t.coords_down = (self.st.down.coords() * self.n_shards) as u64;
+        let frame_len = (codec::FRAME_PREFIX + self.st.down_buf.len()) as u64;
+
+        self.st.seen.fill(false);
+        self.st.up_bytes.fill(0);
+        for tok in self.live_tokens() {
+            let res = {
+                let conn = self.conns[tok].as_mut().expect("live conn");
+                conn.tcp.send(&self.st.down_buf)
+            };
+            match res {
+                Ok(()) => t.bytes_down += frame_len,
+                Err(e) => self.mark_dead(tok, &format!("broadcast failed: {e}")),
+            }
+        }
+
+        // gather: complete when every shard's uplink (from its *current*
+        // owner) has been applied to the slot table
+        while !self.st.seen.iter().all(|&s| s) {
+            self.pump(true)?;
+        }
+
+        for i in 0..self.n_shards {
+            t.coords_up += self.st.ups[i].coords() as u64;
+            t.bits_up += crate::coordinator::bits_of(&self.st.ups[i], self.dim, float_bits);
+            t.bytes_up += self.st.up_bytes[i];
+        }
+        server.apply(&self.st.ups, server_rng);
+        Ok(t)
+    }
+
+    /// Full run: same stopping/recording policy as
+    /// [`run_sim`](crate::coordinator::run_sim).
+    fn run(
+        &mut self,
+        server: &mut dyn ServerAlgo,
+        name: &str,
+        x_star: &[f64],
+        cfg: &RunConfig,
+    ) -> Result<RunResult> {
+        let record_every = cfg.record_every.max(1);
+        let mut server_rng = Rng::new(cfg.seed).derive(u64::MAX);
+        let denom = vector::dist2(server.iterate(), x_star).max(1e-300);
+        let mut acc = RoundTotals::default();
+        let mut phases = PhaseTimer::new();
+        let mut records = Vec::with_capacity(cfg.max_rounds / record_every + 3);
+        records.push(RoundRecord {
+            round: 0,
+            residual: 1.0,
+            coords_up: 0,
+            bits_up: 0,
+            coords_down: 0,
+            bytes_up: 0,
+            bytes_down: 0,
+            wall_secs: 0.0,
+        });
+        let t0 = Instant::now();
+        let mut reached = false;
+        let mut rounds_run = 0;
+        let mut failure = None;
+
+        for round in 1..=cfg.max_rounds {
+            rounds_run = round;
+            let totals =
+                phases.time("dist_round", || self.round(server, &mut server_rng, cfg.float_bits));
+            let totals = match totals {
+                Ok(t) => t,
+                Err(e) => {
+                    failure = Some(e);
+                    break;
+                }
+            };
+            acc.accumulate(&totals);
+
+            let res = vector::dist2(server.iterate(), x_star) / denom;
+            let hit_target = cfg.target_residual > 0.0 && res <= cfg.target_residual;
+            if round % record_every == 0 || round == cfg.max_rounds || hit_target {
+                records.push(RoundRecord {
+                    round,
+                    residual: res,
+                    coords_up: acc.coords_up,
+                    bits_up: acc.bits_up,
+                    coords_down: acc.coords_down,
+                    bytes_up: acc.bytes_up,
+                    bytes_down: acc.bytes_down,
+                    wall_secs: t0.elapsed().as_secs_f64(),
+                });
+            }
+            if hit_target {
+                reached = true;
+                break;
+            }
+        }
+
+        self.shutdown();
+        if let Some(e) = failure {
+            return Err(e);
+        }
+        Ok(RunResult {
+            method: name.to_string(),
+            records,
+            final_x: server.iterate().to_vec(),
+            rounds_run,
+            reached_target: reached,
+            phases,
+        })
+    }
+
+    /// Release every connection — live, handshaking and parked — with a
+    /// `Stop` frame (standby replacements would otherwise wait forever
+    /// for a `Hello`).
+    fn shutdown(&mut self) {
+        for conn in self.conns.iter_mut().flatten() {
+            let _ = conn.tcp.send(&[codec::TAG_STOP]);
+        }
+        for tcp in self.standby.iter_mut() {
+            let _ = tcp.send(&[codec::TAG_STOP]);
+        }
+    }
+}
+
+// ---- entry points ------------------------------------------------------
+
+/// `smx serve`: prepare the problem, run the elastic server (accept
+/// workers, survive their deaths, accept rejoiners), write the residual
 /// curve CSV. With `check_sim`, re-run the identical configuration under
 /// [`run_sim`] and fail unless the iterates are bitwise identical
-/// (requires the lossless `f64` payload) — the CI smoke's assertion.
+/// (requires the lossless `f64` payload) — the CI smoke's assertion,
+/// which holds even across worker deaths and rejoins.
 pub fn serve(cfg: &ExperimentConfig, check_sim: bool) -> Result<()> {
-    let listener = std::net::TcpListener::bind(&cfg.wire.listen)
+    let listener = TcpListener::bind(&cfg.wire.listen)
         .with_context(|| format!("binding {}", cfg.wire.listen))?;
     serve_on(listener, cfg, check_sim)
 }
 
 /// [`serve`] against an already-bound listener (tests bind port 0 and
 /// hand the ephemeral address to their worker threads).
-pub fn serve_on(
-    listener: std::net::TcpListener,
-    cfg: &ExperimentConfig,
-    check_sim: bool,
-) -> Result<()> {
+pub fn serve_on(listener: TcpListener, cfg: &ExperimentConfig, check_sim: bool) -> Result<()> {
     ensure!(
         cfg.methods.len() == 1,
         "smx serve drives exactly one method; got {:?}",
@@ -373,85 +1315,57 @@ pub fn serve_on(
     // server half only; the workers live in their own processes
     method.workers.clear();
     let run_cfg = runner::run_config(cfg);
+    let fault = FaultConfig {
+        worker_timeout: Duration::from_secs_f64(cfg.wire.worker_timeout.max(0.0)),
+    };
 
     crate::info!(
         "wire",
-        "serving {} on {} — {} worker process(es), {} shards, payload {}",
+        "serving {} on {} — {} worker process(es), {} shards, payload {}, \
+         worker-timeout {:?}",
         method_name,
         cfg.wire.listen,
         procs,
         n,
-        payload.name()
+        payload.name(),
+        fault.worker_timeout
     );
+    // round-robin shard assignment, ascending within each process
     let mut assignment: Vec<Vec<usize>> = vec![Vec::new(); procs];
     for i in 0..n {
         assignment[i % procs].push(i);
     }
-    // Phase 1: accept every process and send its Hello immediately, so all
-    // workers rebuild their dataset + smoothness state concurrently; acks
-    // are collected in phase 2 (a sequential accept→ack loop would cost
-    // procs × build-time instead of max(build-time)).
-    let mut pending: Vec<Tcp> = Vec::with_capacity(procs);
-    let mut body = Vec::new();
-    for p in 0..procs {
-        let (stream, peer) = listener.accept().context("accepting worker")?;
-        let mut t = Tcp::new(stream)?;
-        let hello = Hello {
-            dataset: cfg.dataset.clone(),
-            // only ship data_dir when the dataset file actually resolved on
-            // this side — otherwise the server trained on synthetic data and
-            // the worker must synthesize too (it rejects a dangling data_dir)
-            data_dir: cfg
-                .data_dir
-                .as_ref()
-                .filter(|d| {
-                    d.join(&cfg.dataset).is_file()
-                        || d.join(format!("{}.txt", cfg.dataset)).is_file()
-                })
-                .map(|d| d.display().to_string()),
-            seed: cfg.seed,
-            workers: n,
-            mu: cfg.mu,
-            tau: cfg.tau,
-            sampling: cfg.sampling,
-            method: method_name.clone(),
-            practical_adiana: cfg.practical_adiana,
-            payload,
-            need_global: method_name == "diana++",
-            shards: assignment[p].clone(),
-            x0: spec.x0.clone(),
-        };
-        body.clear();
-        codec::put_hello(&mut body, &hello);
-        t.send(&body)?;
-        crate::info!(
-            "wire",
-            "  worker process {p} connected from {peer} ({} shard(s))",
-            assignment[p].len()
-        );
-        pending.push(t);
-    }
-    // Phase 2: collect acks (each worker sends one once its state is built).
-    let mut hosts: Vec<WorkerHost> = Vec::with_capacity(procs);
-    for (p, mut t) in pending.into_iter().enumerate() {
-        t.recv(&mut body).context("waiting for worker ack")?;
-        ensure!(
-            codec::frame_tag(&body)? == codec::TAG_HELLO_ACK,
-            "worker process {p} did not acknowledge the handshake"
-        );
-        hosts.push(WorkerHost {
-            transport: Box::new(t),
-            shards: assignment[p].clone(),
-        });
-    }
+    let hello = Hello {
+        dataset: cfg.dataset.clone(),
+        // only ship data_dir when the dataset file actually resolved on
+        // this side — otherwise the server trained on synthetic data and
+        // the worker must synthesize too (it rejects a dangling data_dir)
+        data_dir: cfg
+            .data_dir
+            .as_ref()
+            .filter(|d| {
+                d.join(&cfg.dataset).is_file()
+                    || d.join(format!("{}.txt", cfg.dataset)).is_file()
+            })
+            .map(|d| d.display().to_string()),
+        seed: cfg.seed,
+        workers: n,
+        mu: cfg.mu,
+        tau: cfg.tau,
+        sampling: cfg.sampling,
+        method: method_name.clone(),
+        practical_adiana: cfg.practical_adiana,
+        payload,
+        need_global: method_name == "diana++",
+        shards: Vec::new(),
+        x0: spec.x0.clone(),
+    };
+    let dim = spec.x0.len();
 
-    let result = run_distributed(
-        method.server.as_mut(),
-        &method.name,
-        &mut hosts,
-        &prep.x_star,
-        &run_cfg,
-    )?;
+    let mut es = ElasticServer::new(listener, hello, fault, payload, n, dim, assignment)?;
+    es.accept_initial()?;
+    let result = es.run(method.server.as_mut(), &method.name, &prep.x_star, &run_cfg)?;
+
     let last = result.records.last().unwrap();
     println!(
         "distributed {method_name} on {}: {} rounds, residual {:.6e}",
@@ -495,15 +1409,35 @@ pub fn serve_on(
     Ok(())
 }
 
-/// `smx worker --connect ADDR`: join a serve run, rebuild the assigned
-/// shards' state from the `Hello` handshake (deterministic, so worker
-/// state matches the server's reference build bit-for-bit), and run the
-/// round loop until `Stop`.
+/// `smx worker --connect ADDR`: join (or rejoin) a serve run.
 pub fn worker_connect(addr: &str) -> Result<()> {
+    worker_connect_with(addr, WorkerOpts::default())
+}
+
+/// [`worker_connect`] with chaos/pinning options: rebuild the assigned
+/// shards' state from the `Hello` handshake (deterministic, so worker
+/// state matches the server's reference build bit-for-bit), keep the
+/// unassigned worker halves in reserve for later adoption, and run the
+/// round loop until `Stop`.
+pub fn worker_connect_with(addr: &str, opts: WorkerOpts) -> Result<()> {
+    if let Some(core) = opts.pin {
+        let ok = crate::util::affinity::pin_to_core(core);
+        crate::info!(
+            "wire",
+            "pinning to core {core}: {}",
+            if ok { "ok" } else { "unsupported (running unpinned)" }
+        );
+    }
     let mut t = Tcp::connect_retry(addr, 60, Duration::from_millis(250))
         .with_context(|| format!("connecting to {addr}"))?;
     let mut body = Vec::new();
     t.recv(&mut body).context("waiting for hello")?;
+    // a standby replacement that was never needed is released with a Stop
+    // instead of a Hello — that is a clean no-op exit
+    if codec::frame_tag(&body)? == codec::TAG_STOP {
+        crate::info!("wire", "server finished without needing this worker");
+        return Ok(());
+    }
     let hello = codec::get_hello(&body)?;
     ensure!(!hello.shards.is_empty(), "server assigned no shards");
     crate::info!(
@@ -550,21 +1484,33 @@ pub fn worker_connect(addr: &str) -> Result<()> {
         "assigned shard index out of range"
     );
     let assigned: std::collections::BTreeSet<usize> = hello.shards.iter().copied().collect();
-    let mut workers: HostedShards = method
-        .workers
-        .into_iter()
-        .enumerate()
-        .filter(|(i, _)| assigned.contains(i))
-        .collect();
-    let mut engines: Vec<Box<dyn GradEngine>> = workers
-        .iter()
-        .map(|(i, _)| {
-            Box::new(NativeEngine::from_shard(&shards[*i], hello.mu)) as Box<dyn GradEngine>
-        })
-        .collect();
     let base = Rng::new(hello.seed);
-    let mut rngs: Vec<Rng> = workers.iter().map(|(i, _)| base.derive(*i as u64)).collect();
+    let mut active = Vec::with_capacity(assigned.len());
+    let mut reserve = Vec::new();
+    for (i, algo) in method.workers.into_iter().enumerate() {
+        if assigned.contains(&i) {
+            let engine = Box::new(NativeEngine::from_shard(&shards[i], hello.mu));
+            active.push(ShardRunner::new(i, algo, engine, base.derive(i as u64)));
+        } else {
+            // keep the round-0 half: the server may hand us this shard if
+            // its owner dies and no replacement rejoins in time
+            reserve.push((i, algo));
+        }
+    }
+    let mut state = WorkerState {
+        active,
+        reserve,
+        adopt_ctx: Some(AdoptCtx {
+            shards,
+            mu: hello.mu,
+        }),
+        seed: hello.seed,
+        payload: hello.payload,
+        dim: hello.x0.len(),
+        die_after: opts.die_after,
+        rounds_seen: 0,
+    };
 
     t.send(&[codec::TAG_HELLO_ACK])?;
-    worker_loop(&mut workers, &mut engines, &mut rngs, &mut t, hello.payload)
+    worker_loop(&mut state, &mut t)
 }

@@ -7,6 +7,15 @@
 //! the same [`FRAME_PREFIX`](crate::wire::codec::FRAME_PREFIX) bytes the
 //! measured-byte accounting includes, so `bytes_up`/`bytes_down` equal
 //! what actually crosses the socket.
+//!
+//! [`Tcp`] owns its reassembly state (a rolling receive buffer instead of
+//! a `BufReader`), which lets the same endpoint serve both blocking use
+//! (workers, the loopback-style drivers) and the elastic server's
+//! **nonblocking** use: after [`Tcp::set_nonblocking`], [`Tcp::try_recv`]
+//! consumes whatever bytes the kernel has — possibly a partial frame,
+//! possibly several frames — and reports complete frames one at a time
+//! without ever blocking, which is what the
+//! [`poll`](crate::wire::poll) readiness loop needs.
 
 use std::io::{self, Read, Write};
 use std::net::{TcpStream, ToSocketAddrs};
@@ -17,6 +26,13 @@ use std::time::Duration;
 /// a huge allocation). Far above any real message: a dense f64 downlink
 /// at d = 10⁷ is 80 MB.
 const MAX_FRAME: usize = 1 << 30;
+
+/// Give up on a nonblocking send that makes no progress for this long
+/// (peer alive-but-stalled: SIGSTOPped, wedged, or reading nothing while
+/// its receive window fills). Surfaces as `TimedOut`, which the elastic
+/// server treats like any other connection death — bounding how long one
+/// stalled worker can wedge the single-threaded server loop.
+const SEND_STALL_TIMEOUT: Duration = Duration::from_secs(30);
 
 /// One framed, ordered, bidirectional byte channel.
 pub trait Transport: Send {
@@ -69,21 +85,34 @@ impl Transport for Loopback {
 
 // ---- TCP ---------------------------------------------------------------
 
-/// Length-prefixed TCP transport (`std::net`, `TCP_NODELAY`, buffered
-/// writes flushed per frame).
+/// Length-prefixed TCP transport (`std::net`, `TCP_NODELAY`).
+///
+/// Reads accumulate in an internal rolling buffer; a frame is surfaced
+/// once its 4-byte length prefix *and* full body have arrived. In
+/// blocking mode `recv` loops on the socket until that happens; in
+/// nonblocking mode `try_recv` returns `Ok(false)` instead of waiting.
+/// Writes always complete the whole frame: in nonblocking mode a
+/// `WouldBlock` from a full socket buffer is retried after a short yield
+/// (broadcast frames are small relative to socket buffers, so this path
+/// is cold).
 pub struct Tcp {
-    reader: io::BufReader<TcpStream>,
-    writer: io::BufWriter<TcpStream>,
+    stream: TcpStream,
+    /// received-but-unparsed bytes; `rpos..` is the live region
+    rbuf: Vec<u8>,
+    rpos: usize,
+    /// fixed scratch for one kernel read
+    chunk: Box<[u8; 64 * 1024]>,
 }
 
 impl Tcp {
-    /// Wrap an accepted/connected stream.
+    /// Wrap an accepted/connected stream (blocking mode).
     pub fn new(stream: TcpStream) -> io::Result<Tcp> {
         stream.set_nodelay(true)?;
-        let write_half = stream.try_clone()?;
         Ok(Tcp {
-            reader: io::BufReader::new(stream),
-            writer: io::BufWriter::new(write_half),
+            stream,
+            rbuf: Vec::new(),
+            rpos: 0,
+            chunk: Box::new([0u8; 64 * 1024]),
         })
     }
 
@@ -112,31 +141,159 @@ impl Tcp {
         }
         Err(last.unwrap_or_else(|| io::Error::new(io::ErrorKind::TimedOut, "no attempts")))
     }
-}
 
-impl Transport for Tcp {
-    fn send(&mut self, body: &[u8]) -> io::Result<()> {
-        let len = u32::try_from(body.len())
-            .map_err(|_| io::Error::new(io::ErrorKind::InvalidInput, "frame too large"))?;
-        self.writer.write_all(&len.to_le_bytes())?;
-        self.writer.write_all(body)?;
-        self.writer.flush()
+    /// Switch the socket between blocking and nonblocking mode. The
+    /// elastic server flips its connections to nonblocking and drives
+    /// them through [`Tcp::try_recv`] under the readiness poller.
+    pub fn set_nonblocking(&mut self, nonblocking: bool) -> io::Result<()> {
+        self.stream.set_nonblocking(nonblocking)
     }
 
-    fn recv(&mut self, body: &mut Vec<u8>) -> io::Result<()> {
-        let mut len_bytes = [0u8; 4];
-        self.reader.read_exact(&mut len_bytes)?;
-        let len = u32::from_le_bytes(len_bytes) as usize;
+    /// Raw socket fd for readiness registration (unix only).
+    #[cfg(unix)]
+    pub fn raw_fd(&self) -> i32 {
+        use std::os::unix::io::AsRawFd;
+        self.stream.as_raw_fd()
+    }
+
+    /// Peer address (diagnostics).
+    pub fn peer_addr(&self) -> io::Result<std::net::SocketAddr> {
+        self.stream.peer_addr()
+    }
+
+    /// Extract one complete frame from the rolling buffer, if present.
+    fn take_frame(&mut self, body: &mut Vec<u8>) -> io::Result<bool> {
+        let avail = self.rbuf.len() - self.rpos;
+        if avail < 4 {
+            return Ok(false);
+        }
+        let p = &self.rbuf[self.rpos..self.rpos + 4];
+        let len = u32::from_le_bytes([p[0], p[1], p[2], p[3]]) as usize;
         if len > MAX_FRAME {
             return Err(io::Error::new(
                 io::ErrorKind::InvalidData,
                 format!("frame length {len} exceeds cap"),
             ));
         }
-        // resize alone suffices: read_exact overwrites body[..len], so the
-        // zero-fill only touches growth beyond the previous length
-        body.resize(len, 0);
-        self.reader.read_exact(body)
+        if avail < 4 + len {
+            return Ok(false);
+        }
+        body.clear();
+        body.extend_from_slice(&self.rbuf[self.rpos + 4..self.rpos + 4 + len]);
+        self.rpos += 4 + len;
+        if self.rpos == self.rbuf.len() {
+            // buffer fully drained: reset in place, keep the capacity
+            self.rbuf.clear();
+            self.rpos = 0;
+        }
+        Ok(true)
+    }
+
+    /// One kernel read into the rolling buffer. `Ok(0)` is EOF; maps a
+    /// clean-shutdown reset to `UnexpectedEof` like the blocking path.
+    fn fill(&mut self) -> io::Result<usize> {
+        // compact lazily so the buffer doesn't creep when frames straddle
+        // reads (cheap: the live region is at most one partial frame)
+        if self.rpos > 0 {
+            let len = self.rbuf.len();
+            self.rbuf.copy_within(self.rpos..len, 0);
+            self.rbuf.truncate(len - self.rpos);
+            self.rpos = 0;
+        }
+        let n = self.stream.read(&mut self.chunk[..])?;
+        self.rbuf.extend_from_slice(&self.chunk[..n]);
+        Ok(n)
+    }
+
+    /// Nonblocking receive: `Ok(true)` with `body` filled when a complete
+    /// frame was available, `Ok(false)` when the socket has no complete
+    /// frame yet (`WouldBlock` is absorbed). EOF from the peer surfaces
+    /// as `UnexpectedEof`.
+    pub fn try_recv(&mut self, body: &mut Vec<u8>) -> io::Result<bool> {
+        loop {
+            if self.take_frame(body)? {
+                return Ok(true);
+            }
+            match self.fill() {
+                Ok(0) => {
+                    return Err(io::Error::new(
+                        io::ErrorKind::UnexpectedEof,
+                        "peer closed connection",
+                    ))
+                }
+                Ok(_) => continue,
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => return Ok(false),
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            }
+        }
+    }
+}
+
+impl Transport for Tcp {
+    fn send(&mut self, body: &[u8]) -> io::Result<()> {
+        let len = u32::try_from(body.len())
+            .map_err(|_| io::Error::new(io::ErrorKind::InvalidInput, "frame too large"))?;
+        let prefix = len.to_le_bytes();
+        // write prefix + body fully, absorbing WouldBlock in nonblocking
+        // mode (the readiness loop never leaves a frame half-sent) — but
+        // only while the peer keeps draining: a no-progress stall past
+        // SEND_STALL_TIMEOUT errors out so the server can declare the
+        // connection dead instead of wedging forever
+        let mut last_progress = std::time::Instant::now();
+        for part in [&prefix[..], body] {
+            let mut off = 0usize;
+            while off < part.len() {
+                match self.stream.write(&part[off..]) {
+                    Ok(0) => {
+                        return Err(io::Error::new(
+                            io::ErrorKind::WriteZero,
+                            "socket accepted no bytes",
+                        ))
+                    }
+                    Ok(n) => {
+                        off += n;
+                        last_progress = std::time::Instant::now();
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                        if last_progress.elapsed() > SEND_STALL_TIMEOUT {
+                            return Err(io::Error::new(
+                                io::ErrorKind::TimedOut,
+                                "peer stopped draining its socket",
+                            ));
+                        }
+                        std::thread::sleep(Duration::from_micros(200));
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                    Err(e) => return Err(e),
+                }
+            }
+        }
+        self.stream.flush()
+    }
+
+    fn recv(&mut self, body: &mut Vec<u8>) -> io::Result<()> {
+        loop {
+            if self.take_frame(body)? {
+                return Ok(());
+            }
+            match self.fill() {
+                Ok(0) => {
+                    return Err(io::Error::new(
+                        io::ErrorKind::UnexpectedEof,
+                        "peer closed connection",
+                    ))
+                }
+                Ok(_) => {}
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                    // blocking recv on a nonblocking socket: degrade to a
+                    // short-deadline poll instead of spinning
+                    std::thread::sleep(Duration::from_micros(200));
+                }
+                Err(e) => return Err(e),
+            }
+        }
     }
 }
 
@@ -185,5 +342,71 @@ mod tests {
         // peer closed → EOF
         assert!(c.recv(&mut buf).is_err());
         server.join().unwrap();
+    }
+
+    #[test]
+    fn tcp_try_recv_reassembles_split_and_batched_frames() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.set_nodelay(true).unwrap();
+            // frame 1 split across two writes at an awkward boundary,
+            // then frames 2+3 coalesced into a single write
+            let f1: Vec<u8> = (0..100u8).collect();
+            let mut w1 = (f1.len() as u32).to_le_bytes().to_vec();
+            w1.extend_from_slice(&f1[..37]);
+            s.write_all(&w1).unwrap();
+            s.flush().unwrap();
+            std::thread::sleep(Duration::from_millis(30));
+            let mut w2 = f1[37..].to_vec();
+            w2.extend_from_slice(&3u32.to_le_bytes());
+            w2.extend_from_slice(&[9, 8, 7]);
+            w2.extend_from_slice(&0u32.to_le_bytes()); // empty frame
+            s.write_all(&w2).unwrap();
+            s.flush().unwrap();
+            // hold the socket open until the server is done reading
+            let mut ack = [0u8; 1];
+            let _ = s.read(&mut ack);
+        });
+
+        let (stream, _) = listener.accept().unwrap();
+        let mut t = Tcp::new(stream).unwrap();
+        t.set_nonblocking(true).unwrap();
+        let mut body = Vec::new();
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        let mut frames: Vec<Vec<u8>> = Vec::new();
+        while frames.len() < 3 {
+            assert!(std::time::Instant::now() < deadline, "timed out");
+            match t.try_recv(&mut body).unwrap() {
+                true => frames.push(body.clone()),
+                false => std::thread::sleep(Duration::from_millis(1)),
+            }
+        }
+        assert_eq!(frames[0], (0..100u8).collect::<Vec<u8>>());
+        assert_eq!(frames[1], vec![9, 8, 7]);
+        assert!(frames[2].is_empty());
+        // nothing further: try_recv idles without blocking
+        assert!(!t.try_recv(&mut body).unwrap());
+        t.send(&[1]).unwrap(); // release the client
+        client.join().unwrap();
+    }
+
+    #[test]
+    fn tcp_huge_length_prefix_is_rejected() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(&u32::MAX.to_le_bytes()).unwrap();
+            s.flush().unwrap();
+            std::thread::sleep(Duration::from_millis(100));
+        });
+        let (stream, _) = listener.accept().unwrap();
+        let mut t = Tcp::new(stream).unwrap();
+        let mut body = Vec::new();
+        let e = t.recv(&mut body).unwrap_err();
+        assert_eq!(e.kind(), io::ErrorKind::InvalidData);
+        client.join().unwrap();
     }
 }

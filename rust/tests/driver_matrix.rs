@@ -1,7 +1,8 @@
 //! Cross-driver identity as one table-driven matrix test.
 //!
 //! The three coordinator drivers — [`run_sim`] (sequential in-process),
-//! [`run_threaded`] (one OS thread per worker over mpsc), and
+//! [`run_threaded`] (one OS thread per worker over fixed-capacity SPSC
+//! ring buffers, with an additional core-pinned column), and
 //! [`run_distributed`](smx::wire::run_distributed) (loopback transports
 //! through the wire codec, lossless `f64` payload) — must produce
 //! **bitwise identical** iterates and identical communication accounting
@@ -63,7 +64,7 @@ fn drivers_bitwise_identical_over_method_sampling_shard_grid() {
                 let r_sim = run_sim(&mut m_sim, &mut engines, &x_star, &cfg);
                 let sim_last = r_sim.records.last().unwrap().clone();
 
-                // run_threaded
+                // run_threaded (SPSC ring-buffer channels)
                 let m_thr = build(&spec, &sm).unwrap();
                 let r_thr = run_threaded(m_thr, factory.clone(), &x_star, &cfg);
                 assert_eq!(
@@ -75,6 +76,23 @@ fn drivers_bitwise_identical_over_method_sampling_shard_grid() {
                 assert_eq!(sim_last.coords_up, thr_last.coords_up, "{cell}: coords_up (threaded)");
                 assert_eq!(sim_last.bits_up, thr_last.bits_up, "{cell}: bits_up (threaded)");
                 assert_eq!(sim_last.bytes_up, thr_last.bytes_up, "{cell}: bytes_up (threaded)");
+
+                // pinned column: core pinning is a scheduling hint only —
+                // the synchronous ring protocol makes the trajectory
+                // independent of where worker threads land
+                if method == "diana+" {
+                    let m_pin = build(&spec, &sm).unwrap();
+                    let cfg_pin = RunConfig {
+                        pin: true,
+                        ..cfg.clone()
+                    };
+                    let r_pin = run_threaded(m_pin, factory.clone(), &x_star, &cfg_pin);
+                    assert_eq!(
+                        bits(&r_sim.final_x),
+                        bits(&r_pin.final_x),
+                        "{cell}: pinned run_threaded diverged from run_sim"
+                    );
+                }
 
                 // run_distributed over loopback, f64 payload: one process
                 // per shard, then 2 shards multiplexed per process

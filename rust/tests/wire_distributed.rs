@@ -9,6 +9,10 @@
 //!   bytes the distributed driver actually framed (procs = n).
 //! * Lossy payloads track the `f64` trajectory on a1a within the
 //!   tolerances documented in `wire/mod.rs`.
+//! * Chaos: a worker killed mid-run and replaced (rejoin + journal
+//!   replay) — or absorbed by the survivor (grace-window reassignment +
+//!   reserve-half adoption) — still yields a final model bitwise
+//!   identical to `run_sim` under the f64 payload.
 
 use smx::config::ExperimentConfig;
 use smx::coordinator::{run_sim, EngineFactory, RunConfig};
@@ -17,8 +21,11 @@ use smx::methods::{build, MethodSpec};
 use smx::runtime::native::NativeEngine;
 use smx::runtime::GradEngine;
 use smx::sampling::SamplingKind;
-use smx::wire::{run_distributed_loopback, serve_on, worker_connect, Payload};
+use smx::wire::{
+    run_distributed_loopback, serve_on, worker_connect, worker_connect_with, Payload, WorkerOpts,
+};
 use std::sync::Arc;
+use std::time::Duration;
 
 fn tiny_cfg() -> ExperimentConfig {
     ExperimentConfig {
@@ -132,6 +139,96 @@ fn tcp_serve_check_sim_roundtrips() {
     for w in workers {
         w.join().unwrap().expect("worker failed");
     }
+    std::fs::remove_dir_all(&cfg.out_dir).ok();
+}
+
+#[test]
+fn chaos_worker_death_and_rejoin_is_bitwise_identical() {
+    // One of two worker processes is killed mid-round (it drops its
+    // connection right after receiving the round-6 downlink, without
+    // replying — observably a SIGKILL at that instant). A replacement is
+    // already parked as a standby; the server hands it the orphaned shard
+    // set via the same Hello handshake and streams the replay journal, so
+    // it lands in a bitwise-identical trajectory. `check_sim` inside
+    // serve_on asserts final iterates AND coords_up against run_sim.
+    let mut cfg = tiny_cfg();
+    cfg.methods = vec!["diana+".into()];
+    cfg.sampling = SamplingKind::ImportanceDiana;
+    cfg.tau = 2.0;
+    cfg.max_rounds = 40;
+    cfg.wire.workers = 2;
+    cfg.wire.worker_timeout = 20.0;
+    cfg.out_dir = std::env::temp_dir().join("smx_wire_chaos_rejoin");
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+
+    let dying = {
+        let addr = addr.clone();
+        std::thread::spawn(move || {
+            worker_connect_with(
+                &addr,
+                WorkerOpts {
+                    die_after: Some(6),
+                    ..Default::default()
+                },
+            )
+        })
+    };
+    let survivor = {
+        let addr = addr.clone();
+        std::thread::spawn(move || worker_connect(&addr))
+    };
+    // the replacement connects after the initial pair has its
+    // assignments; it parks as a standby until shards orphan
+    let replacement = std::thread::spawn(move || {
+        std::thread::sleep(Duration::from_millis(400));
+        worker_connect(&addr)
+    });
+
+    serve_on(listener, &cfg, true).expect("serve_on --check-sim under worker death + rejoin");
+    dying.join().unwrap().expect("dying worker (clean injected exit)");
+    survivor.join().unwrap().expect("surviving worker");
+    replacement.join().unwrap().expect("replacement worker");
+    std::fs::remove_dir_all(&cfg.out_dir).ok();
+}
+
+#[test]
+fn chaos_reassignment_to_survivor_is_bitwise_identical() {
+    // Same death, but no replacement ever arrives: after the grace window
+    // (0.5 s here) the server deals the orphaned shards to the survivor
+    // via TAG_ADOPT + journal replay. The survivor promotes its reserve
+    // worker halves (built at round 0 and kept for exactly this), replays
+    // them forward, and finishes the run hosting every shard — still
+    // bitwise identical to run_sim.
+    let mut cfg = tiny_cfg();
+    cfg.methods = vec!["diana+".into()];
+    cfg.sampling = SamplingKind::Uniform;
+    cfg.tau = 2.0;
+    cfg.max_rounds = 30;
+    cfg.wire.workers = 2;
+    cfg.wire.worker_timeout = 0.5;
+    cfg.out_dir = std::env::temp_dir().join("smx_wire_chaos_adopt");
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+
+    let dying = {
+        let addr = addr.clone();
+        std::thread::spawn(move || {
+            worker_connect_with(
+                &addr,
+                WorkerOpts {
+                    die_after: Some(4),
+                    ..Default::default()
+                },
+            )
+        })
+    };
+    let survivor = std::thread::spawn(move || worker_connect(&addr));
+
+    serve_on(listener, &cfg, true)
+        .expect("serve_on --check-sim under worker death + shard reassignment");
+    dying.join().unwrap().expect("dying worker (clean injected exit)");
+    survivor.join().unwrap().expect("surviving worker (with adopted shards)");
     std::fs::remove_dir_all(&cfg.out_dir).ok();
 }
 

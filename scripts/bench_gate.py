@@ -1,0 +1,107 @@
+#!/usr/bin/env python3
+"""Bench regression gate: compare BENCH_hotpath.json against a committed
+baseline.
+
+Usage:
+    bench_gate.py CURRENT BASELINE [--threshold 0.25]
+    bench_gate.py CURRENT BASELINE --seed
+
+Policy (CI):
+  * rows whose name starts with ``round e2e`` are **gated**: a median
+    wall-clock regression beyond the threshold (default +25%) fails the
+    job;
+  * every other row present in both files only **warns** beyond the
+    threshold (micro-kernel rows are noisy on shared runners);
+  * an unseeded baseline (missing file, or ``{"seeded": false}``) makes
+    the gate a no-op with a notice — seed it from the first
+    toolchain-equipped run with ``--seed`` and commit the result.
+
+The baseline format is intentionally tiny and diff-friendly::
+
+    {"seeded": true, "rows": {"<row name>": <median_ns>, ...}}
+"""
+
+import json
+import sys
+
+
+GATED_PREFIX = "round e2e"
+
+
+def load_rows(path):
+    with open(path, encoding="utf-8") as f:
+        doc = json.load(f)
+    return {r["name"]: float(r["median_ns"]) for r in doc["results"]}
+
+
+def main(argv):
+    args = [a for a in argv[1:] if not a.startswith("--")]
+    flags = [a for a in argv[1:] if a.startswith("--")]
+    if len(args) != 2:
+        print(__doc__, file=sys.stderr)
+        return 2
+    current_path, baseline_path = args
+    seed = "--seed" in flags
+    threshold = 0.25
+    for f in flags:
+        if f.startswith("--threshold="):
+            threshold = float(f.split("=", 1)[1])
+
+    current = load_rows(current_path)
+
+    if seed:
+        doc = {"seeded": True, "rows": current}
+        with open(baseline_path, "w", encoding="utf-8") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"seeded {baseline_path} with {len(current)} rows")
+        return 0
+
+    try:
+        with open(baseline_path, encoding="utf-8") as f:
+            baseline_doc = json.load(f)
+    except FileNotFoundError:
+        print(f"bench gate: no baseline at {baseline_path} — skipping "
+              f"(seed it with: bench_gate.py {current_path} {baseline_path} --seed)")
+        return 0
+    if not baseline_doc.get("seeded"):
+        print("bench gate: baseline not seeded yet — skipping "
+              "(run bench_gate.py with --seed on a toolchain-equipped host "
+              "and commit benchmarks/baseline.json)")
+        return 0
+
+    baseline = {k: float(v) for k, v in baseline_doc["rows"].items()}
+    failures, warnings = [], []
+    for name in sorted(current):
+        if name not in baseline:
+            continue
+        base, cur = baseline[name], current[name]
+        if base <= 0:
+            continue
+        ratio = cur / base - 1.0
+        line = f"{name}: {base:.0f}ns -> {cur:.0f}ns ({ratio:+.1%})"
+        gated = name.startswith(GATED_PREFIX)
+        if ratio > threshold:
+            (failures if gated else warnings).append(line)
+        elif gated:
+            print(f"ok    {line}")
+
+    for w in warnings:
+        print(f"WARN  {w}")
+    for f_ in failures:
+        print(f"FAIL  {f_}")
+    missing = [n for n in baseline if n not in current]
+    if missing:
+        print(f"note: {len(missing)} baseline row(s) absent from this run "
+              f"(renamed or removed): {', '.join(sorted(missing)[:5])}...")
+
+    if failures:
+        print(f"\nbench gate: {len(failures)} gated regression(s) beyond "
+              f"+{threshold:.0%}")
+        return 1
+    print(f"\nbench gate: OK ({len(warnings)} warning(s))")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -1,40 +1,74 @@
 #!/usr/bin/env bash
-# Multi-process smoke test for the wire subsystem: spawn one `smx serve`
-# coordinator and two `smx worker` processes on the synthetic tiny dataset
-# (8 shards, 4 per worker process) for a few rounds. `--check-sim` makes
-# the server re-run the identical configuration through the in-process
-# `run_sim` driver and exit nonzero unless the distributed iterates are
-# bitwise identical — the whole codec/transport/runtime stack is asserted
-# by the server's exit code.
+# Multi-process smoke test for the wire subsystem, two legs:
+#
+#  1. steady state — one `smx serve` coordinator and two `smx worker`
+#     processes on the synthetic tiny dataset (8 shards, 4 per worker
+#     process) for a few rounds;
+#  2. chaos — same topology plus a third (replacement) worker process;
+#     worker 1 drops its connection right after receiving the round-5
+#     downlink (`--die-after 5`, observably a SIGKILL at that instant),
+#     the replacement rejoins via the Hello handshake and replays the
+#     journal.
+#
+# Both legs pass `--check-sim`, which makes the server re-run the
+# identical configuration through the in-process `run_sim` driver and
+# exit nonzero unless the distributed iterates are bitwise identical — so
+# the whole codec/transport/poller/runtime stack, including the recovery
+# path, is asserted by the server's exit code.
 #
 #   BIN=target/release/smx PORT=4973 bash scripts/smoke_distributed.sh
 set -u
 
 BIN=${BIN:-target/release/smx}
 PORT=${PORT:-4973}
-ADDR=127.0.0.1:$PORT
 OUT=${OUT:-$(mktemp -d)}
 
-# `timeout` bounds the whole run so a worker that dies before connecting
-# (serve would then block in accept() forever) fails the job fast instead
-# of hanging until the CI-level timeout.
-timeout "${SMOKE_TIMEOUT:-300}" "$BIN" serve --dataset tiny --workers 8 --methods diana+ \
-  --sampling importance-diana --tau 2 --max-rounds 30 \
-  --listen "$ADDR" --wire-workers 2 --out-dir "$OUT" --check-sim &
-SERVE_PID=$!
+run_leg() {
+  local name=$1
+  local addr=$2
+  shift 2
+  # `timeout` bounds the whole run so a worker that dies before connecting
+  # (serve would then block in accept() forever) fails the job fast
+  # instead of hanging until the CI-level timeout.
+  timeout "${SMOKE_TIMEOUT:-300}" "$BIN" serve --dataset tiny --workers 8 --methods diana+ \
+    --sampling importance-diana --tau 2 --max-rounds 30 \
+    --listen "$addr" --wire-workers 2 --out-dir "$OUT" --check-sim "$@" &
+  local serve_pid=$!
 
-"$BIN" worker --connect "$ADDR" &
-W1=$!
-"$BIN" worker --connect "$ADDR" &
-W2=$!
+  local rc=0
+  local w_pids=()
+  case $name in
+    steady)
+      "$BIN" worker --connect "$addr" &
+      w_pids+=("$!")
+      "$BIN" worker --connect "$addr" &
+      w_pids+=("$!")
+      ;;
+    chaos)
+      "$BIN" worker --connect "$addr" --die-after 5 &
+      w_pids+=("$!")
+      "$BIN" worker --connect "$addr" &
+      w_pids+=("$!")
+      # replacement: parks as a standby until worker 1's shards orphan,
+      # then rejoins with a journal replay
+      (sleep 1 && "$BIN" worker --connect "$addr") &
+      w_pids+=("$!")
+      ;;
+  esac
 
-rc=0
-wait "$SERVE_PID" || rc=1
-wait "$W1" || { echo "worker 1 failed" >&2; rc=1; }
-wait "$W2" || { echo "worker 2 failed" >&2; rc=1; }
+  wait "$serve_pid" || rc=1
+  local i=1
+  for pid in "${w_pids[@]}"; do
+    wait "$pid" || { echo "[$name] worker $i failed" >&2; rc=1; }
+    i=$((i + 1))
+  done
 
-if [ "$rc" -ne 0 ]; then
-  echo "distributed smoke FAILED" >&2
-  exit 1
-fi
-echo "distributed smoke OK (serve + 2 workers, bitwise identical to run_sim)"
+  if [ "$rc" -ne 0 ]; then
+    echo "distributed smoke FAILED ($name leg)" >&2
+    exit 1
+  fi
+  echo "distributed smoke OK ($name leg: bitwise identical to run_sim)"
+}
+
+run_leg steady "127.0.0.1:$PORT"
+run_leg chaos "127.0.0.1:$((PORT + 1))" --worker-timeout 60
