@@ -432,6 +432,33 @@ fn main() -> anyhow::Result<()> {
         });
     }
 
+    // the Session front door end-to-end: method build + engine
+    // construction + a 10-round sim run per iteration — measures the
+    // builder/observer seam's overhead on top of the raw round loop
+    {
+        use smx::coordinator::{RunConfig, Session};
+        let mspec = MethodSpec::new("diana+", 4.0, SamplingKind::Uniform, 1e-3, vec![0.0; sm.dim]);
+        let x_star = vec![0.0; sm.dim];
+        let run_cfg = RunConfig {
+            max_rounds: 10,
+            ..Default::default()
+        };
+        rows.push(bench("session e2e diana+ (sim, 10 rounds, n=8)", 40, || {
+            let engines: Vec<Box<dyn GradEngine>> = shards
+                .iter()
+                .map(|s| Box::new(NativeEngine::from_shard(s, 1e-3)) as Box<dyn GradEngine>)
+                .collect();
+            let r = Session::new(mspec.clone())
+                .smoothness(&sm)
+                .x_star(&x_star)
+                .engines(engines)
+                .run_config(run_cfg.clone())
+                .run()
+                .unwrap();
+            black_box(r.rounds_run);
+        }));
+    }
+
     // channel substrate: the threaded driver's SPSC ring (preallocated
     // slots, zero allocs per message) vs the mpsc channel it replaced
     // (allocates internal blocks per send) — one message ping-ponged

@@ -14,12 +14,14 @@
 //!     make artifacts && cargo run --release --example e2e_train
 //!
 //! Flags: --rounds N (default 300) --tau F (default 4) --engine native
-//! to cross-check against the pure-Rust oracle.
+//! to cross-check against the pure-Rust oracle; --jsonl PATH streams the
+//! residual curve as JSON lines while the run is still going (a
+//! `Session` round observer).
 
 use smx::config::ExperimentConfig;
-use smx::coordinator::{run_threaded, EngineFactory, RunConfig};
+use smx::coordinator::{Driver, EngineFactory, JsonlObserver, RunConfig, Session};
 use smx::experiments::runner;
-use smx::methods::{build, MethodSpec};
+use smx::methods::MethodSpec;
 use smx::runtime::artifact::Manifest;
 use smx::runtime::native::NativeEngine;
 use smx::runtime::pjrt::PjrtEngine;
@@ -64,7 +66,6 @@ fn main() -> anyhow::Result<()> {
         cfg.mu,
         vec![0.0; prep.sm.dim],
     );
-    let method = build(&spec, &prep.sm)?;
     let run_cfg = RunConfig {
         max_rounds: rounds,
         record_every: cfg.record_every,
@@ -93,8 +94,19 @@ fn main() -> anyhow::Result<()> {
         }
     };
 
+    // the full stack behind the one front door: threaded driver, engines
+    // built inside worker threads, metrics optionally streamed live
+    let mut session = Session::new(spec)
+        .prepared(&prep)
+        .driver(Driver::Threaded)
+        .engine_factory(factory)
+        .run_config(run_cfg);
+    if let Some(path) = args.get("jsonl") {
+        println!("streaming residual curve to {path} (one JSON object per record)");
+        session = session.observer(JsonlObserver::create(path)?);
+    }
     let t_run = Instant::now();
-    let result = run_threaded(method, factory, &prep.x_star, &run_cfg);
+    let result = session.run()?;
     let wall = t_run.elapsed().as_secs_f64();
 
     // loss curve (re-evaluated on the recorded rounds' final state only at

@@ -26,6 +26,12 @@
 //!
 //! `workers: 0` means "use the dataset's Table-3 default".
 //!
+//! The `driver` key (`--driver auto|sim|threaded|distributed`) selects
+//! the execution regime through the
+//! [`Session`](crate::coordinator::Session) front door, and
+//! `checkpoint_every` (`--checkpoint-every`) the checkpoint cadence —
+//! see [`crate::coordinator::session`].
+//!
 //! The `wire` section configures the [`crate::wire`] subsystem:
 //! `payload` is the value encoding (`f64`/`f32`/`q16`/`q8`/`q4`),
 //! `listen` the `smx serve` address, `workers` the number of worker
@@ -37,6 +43,7 @@
 //! disables fault handling). The top-level `pin` key (`--pin`) opts into
 //! per-worker core pinning in the threaded driver.
 
+use crate::coordinator::DriverKind;
 use crate::data::{spec_by_name, synth};
 use crate::runtime::EngineKind;
 use crate::sampling::SamplingKind;
@@ -146,6 +153,16 @@ pub struct ExperimentConfig {
     pub record_every: usize,
     pub seed: u64,
     pub engine: EngineKind,
+    /// execution regime (`--driver auto|sim|threaded|distributed`):
+    /// `auto` keeps the historical mapping (native engine → sim driver,
+    /// PJRT → threaded); `distributed` runs the full wire protocol over
+    /// loopback with `wire.workers` worker threads. Resolved by
+    /// [`Session::run`](crate::coordinator::Session::run).
+    pub driver: DriverKind,
+    /// checkpoint cadence in rounds (`--checkpoint-every`, 0 = off):
+    /// fires observer checkpoints on every driver, and drives the wire
+    /// runtime's journal snapshot + truncation under `smx serve`
+    pub checkpoint_every: usize,
     pub data_dir: Option<std::path::PathBuf>,
     pub out_dir: std::path::PathBuf,
     /// start near the optimum (Figure 2's setup)
@@ -178,6 +195,8 @@ impl Default for ExperimentConfig {
             record_every: 10,
             seed: 42,
             engine: EngineKind::Native,
+            driver: DriverKind::Auto,
+            checkpoint_every: 0,
             data_dir: None,
             out_dir: std::path::PathBuf::from("results"),
             start_near_opt: false,
@@ -240,6 +259,14 @@ impl ExperimentConfig {
                     let s = v.as_str().context("engine")?;
                     c.engine = EngineKind::parse(s).with_context(|| format!("bad engine '{s}'"))?
                 }
+                "driver" => {
+                    let s = v.as_str().context("driver")?;
+                    c.driver = DriverKind::parse(s)
+                        .with_context(|| format!("bad driver '{s}' (auto|sim|threaded|distributed)"))?
+                }
+                "checkpoint_every" => {
+                    c.checkpoint_every = v.as_usize().context("checkpoint_every")?
+                }
                 "data_dir" => c.data_dir = Some(v.as_str().context("data_dir")?.into()),
                 "out_dir" => c.out_dir = v.as_str().context("out_dir")?.into(),
                 "start_near_opt" => c.start_near_opt = v.as_bool().context("start_near_opt")?,
@@ -297,6 +324,13 @@ impl ExperimentConfig {
         }
         if let Some(s) = args.get("engine") {
             self.engine = EngineKind::parse(s).with_context(|| format!("bad engine '{s}'"))?;
+        }
+        if let Some(s) = args.get("driver") {
+            self.driver = DriverKind::parse(s)
+                .with_context(|| format!("bad driver '{s}' (auto|sim|threaded|distributed)"))?;
+        }
+        if args.has("checkpoint-every") {
+            self.checkpoint_every = args.usize_or("checkpoint-every", self.checkpoint_every);
         }
         if let Some(s) = args.get("data-dir") {
             self.data_dir = Some(s.into());
@@ -385,6 +419,8 @@ impl ExperimentConfig {
             ("record_every", Json::Num(self.record_every as f64)),
             ("seed", Json::Num(self.seed as f64)),
             ("engine", Json::Str(self.engine.name().to_string())),
+            ("driver", Json::Str(self.driver.name().to_string())),
+            ("checkpoint_every", Json::Num(self.checkpoint_every as f64)),
             ("start_near_opt", Json::Bool(self.start_near_opt)),
             ("practical_adiana", Json::Bool(self.practical_adiana)),
             ("jobs", Json::Num(self.jobs as f64)),
@@ -473,6 +509,35 @@ mod tests {
             &Json::parse(r#"{"wire": {"float_bits": 65}}"#).unwrap()
         )
         .is_err());
+    }
+
+    #[test]
+    fn driver_and_checkpoint_keys_parse() {
+        let j = Json::parse(r#"{"driver": "distributed", "checkpoint_every": 25}"#).unwrap();
+        let c = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(c.driver, DriverKind::Distributed);
+        assert_eq!(c.checkpoint_every, 25);
+        // defaults: the historical auto mapping, checkpointing off
+        let d = ExperimentConfig::default();
+        assert_eq!(d.driver, DriverKind::Auto);
+        assert_eq!(d.checkpoint_every, 0);
+        // JSON roundtrip keeps both
+        let c2 = ExperimentConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2.driver, DriverKind::Distributed);
+        assert_eq!(c2.checkpoint_every, 25);
+        // CLI overrides
+        let mut c3 = ExperimentConfig::default();
+        let args = Args::parse(
+            "--driver sim --checkpoint-every 10".split_whitespace().map(String::from),
+            false,
+        );
+        c3.apply_args(&args).unwrap();
+        assert_eq!(c3.driver, DriverKind::Sim);
+        assert_eq!(c3.checkpoint_every, 10);
+        // unknown driver names are rejected
+        assert!(
+            ExperimentConfig::from_json(&Json::parse(r#"{"driver": "gpu"}"#).unwrap()).is_err()
+        );
     }
 
     #[test]

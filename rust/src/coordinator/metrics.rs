@@ -23,6 +23,61 @@ pub struct RoundRecord {
     pub wall_secs: f64,
 }
 
+/// Cumulative communication totals, shared by every driver (the sim and
+/// threaded loops, the fixed-membership distributed driver, and the
+/// elastic TCP server) so their accounts cannot drift apart.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RoundTotals {
+    pub coords_up: u64,
+    pub bits_up: u64,
+    pub coords_down: u64,
+    /// measured: exact encoded frame bytes under the configured payload
+    pub bytes_up: u64,
+    pub bytes_down: u64,
+}
+
+impl RoundTotals {
+    pub fn accumulate(&mut self, t: &RoundTotals) {
+        self.coords_up += t.coords_up;
+        self.bits_up += t.bits_up;
+        self.coords_down += t.coords_down;
+        self.bytes_up += t.bytes_up;
+        self.bytes_down += t.bytes_down;
+    }
+}
+
+/// What a driver core produces besides the observed records: the metrics
+/// stream itself flows through a
+/// [`RoundObserver`](crate::coordinator::RoundObserver), and
+/// [`RunOutcome::into_result`] reattaches whatever the collecting
+/// observer gathered. [`Session`](crate::coordinator::Session) (and the
+/// deprecated `run_*` shims) do this for you.
+#[derive(Debug)]
+pub struct RunOutcome {
+    pub method: String,
+    pub final_x: Vec<f64>,
+    pub rounds_run: usize,
+    pub reached_target: bool,
+    /// an observer's `on_round` returned
+    /// [`ObserverControl::Stop`](crate::coordinator::ObserverControl)
+    pub stopped_by_observer: bool,
+    pub phases: PhaseTimer,
+}
+
+impl RunOutcome {
+    /// Attach the collected records, producing the classic [`RunResult`].
+    pub fn into_result(self, records: Vec<RoundRecord>) -> RunResult {
+        RunResult {
+            method: self.method,
+            records,
+            final_x: self.final_x,
+            rounds_run: self.rounds_run,
+            reached_target: self.reached_target,
+            phases: self.phases,
+        }
+    }
+}
+
 #[derive(Debug)]
 pub struct RunResult {
     pub method: String,

@@ -2,33 +2,61 @@
 //! gradient engines, with exact communication accounting and per-phase
 //! timing.
 //!
-//! Two drivers share the protocol:
+//! The front door is the [`Session`] builder: one composable API that
+//! selects a [`Driver`], wires engines, streams metrics through
+//! [`RoundObserver`]s, and configures checkpointing —
 //!
-//! * [`run_sim`] — deterministic in-process loop (workers execute
+//! ```no_run
+//! # use smx::config::ExperimentConfig;
+//! # fn demo(cfg: &ExperimentConfig) -> anyhow::Result<()> {
+//! let result = smx::coordinator::Session::from_config(cfg).run()?;
+//! # let _ = result; Ok(()) }
+//! ```
+//!
+//! Three drivers share the protocol:
+//!
+//! * [`Driver::Sim`] — deterministic in-process loop (workers execute
 //!   sequentially on the calling thread). Used by the figure sweeps,
 //!   benches and tests: zero scheduling noise, exact reproducibility.
-//! * [`run_threaded`] — one OS thread per worker connected by
+//! * [`Driver::Threaded`] — one OS thread per worker connected by
 //!   fixed-capacity SPSC [`ring`](crate::util::ring) buffers, mirroring a
 //!   real parameter-server deployment (optionally core-pinned via
 //!   [`RunConfig::pin`]). Engines are constructed *inside* each worker
 //!   thread via an [`EngineFactory`] (the PJRT client is not `Send`).
-//!   Used by the e2e example and the throughput benches.
+//! * [`Driver::Distributed`] — the same protocol across process
+//!   boundaries through the [`wire`](crate::wire) codec + transports
+//!   (loopback threads, or the elastic TCP server behind `smx serve`).
 //!
-//! Both drivers seed workers identically, so given the same method +
-//! engines they produce *bitwise identical* trajectories — an invariant
-//! checked in the tests below.
+//! All drivers seed workers identically, so given the same method +
+//! engines they produce *bitwise identical* trajectories (the distributed
+//! driver under its lossless `f64` payload) — the invariant checked by
+//! `tests/driver_matrix.rs` across the full method × sampling × shard
+//! grid, with observers attached and detached.
 //!
-//! A third driver, [`run_distributed`](crate::wire::run_distributed),
-//! moves the same protocol across process boundaries through the
-//! [`wire`](crate::wire) codec + transports; under the lossless `f64`
-//! payload it is bitwise identical to [`run_sim`] too. Both in-process
-//! drivers additionally record *measured* `bytes_up`/`bytes_down` — the
-//! exact encoded frame sizes the wire codec would produce under
-//! [`RunConfig::payload`] — next to the modeled `bits_up` account.
+//! Metrics flow through the [`RoundObserver`] seam: each driver computes
+//! a [`RoundRecord`] for round 0, every `record_every`-th round and the
+//! final/target round, and hands it to the observer stack. In-memory
+//! collection (the classic [`RunResult::records`]) is itself an observer;
+//! streaming JSONL/CSV sinks and a checkpoint writer are provided in
+//! [`session`]. Both in-process drivers also record *measured*
+//! `bytes_up`/`bytes_down` — the exact encoded frame sizes the wire codec
+//! would produce under [`RunConfig::payload`] — next to the modeled
+//! `bits_up` account.
+//!
+//! The pre-`Session` free functions ([`run_sim`], [`run_threaded`], and
+//! `wire::run_distributed*`) remain as thin deprecated shims over the
+//! observer-threaded cores ([`run_sim_observed`] /
+//! [`run_threaded_observed`]); they will be removed once external callers
+//! have migrated.
 
 pub mod metrics;
+pub mod session;
 
-pub use metrics::{RoundRecord, RunResult};
+pub use metrics::{RoundRecord, RoundTotals, RunOutcome, RunResult};
+pub use session::{
+    load_checkpoint, write_checkpoint, CheckpointObserver, CollectObserver, CsvObserver,
+    DistTransport, Driver, DriverKind, JsonlObserver, ObserverControl, RoundObserver, Session,
+};
 
 use crate::linalg::vector;
 use crate::methods::{Downlink, Method, RoundBuffers, Uplink};
@@ -37,10 +65,10 @@ use crate::util::rng::Rng;
 use crate::util::ring;
 use crate::util::timer::PhaseTimer;
 use crate::wire::codec::{self, Payload};
+use session::{Tick, Ticker};
 use std::sync::Arc;
-use std::time::Instant;
 
-/// Stopping / recording policy for one run.
+/// Stopping / recording / checkpointing policy for one run.
 #[derive(Clone, Debug)]
 pub struct RunConfig {
     pub max_rounds: usize,
@@ -50,18 +78,25 @@ pub struct RunConfig {
     /// are always kept)
     pub record_every: usize,
     pub seed: u64,
-    /// float width used for the *modeled* bit accounting (derived from
-    /// the wire payload by the runner; Appendix C.5 uses 32)
+    /// float width used for the *modeled* bit accounting. The runner
+    /// derives it from the wire payload via
+    /// [`WireConfig::effective_float_bits`](crate::config::WireConfig::effective_float_bits)
+    /// — the single home of the derivation rules.
     pub float_bits: u32,
-    /// wire value payload: what `run_distributed` actually encodes, and
-    /// what the in-process drivers' measured `bytes_up`/`bytes_down`
+    /// wire value payload: what the distributed driver actually encodes,
+    /// and what the in-process drivers' measured `bytes_up`/`bytes_down`
     /// accounting assumes
     pub payload: Payload,
-    /// pin worker thread `i` to core `i mod cores` in [`run_threaded`]
+    /// pin worker thread `i` to core `i mod cores` in the threaded driver
     /// (`sched_setaffinity`; no-op off Linux). Pinning cannot affect the
     /// trajectory — the protocol is synchronous and deterministic — it
     /// only removes scheduler migration from the hot loop.
     pub pin: bool,
+    /// fire [`RoundObserver::on_checkpoint`] every k rounds (0 disables).
+    /// The elastic TCP server additionally snapshots worker state and
+    /// truncates its replay journal on this cadence (see
+    /// [`crate::wire::runtime`]).
+    pub checkpoint_every: usize,
 }
 
 impl Default for RunConfig {
@@ -74,6 +109,7 @@ impl Default for RunConfig {
             float_bits: 64,
             payload: Payload::F64,
             pin: false,
+            checkpoint_every: 0,
         }
     }
 }
@@ -90,27 +126,6 @@ impl RunConfig {
 /// Builds a worker's engine inside its own thread.
 pub type EngineFactory = Arc<dyn Fn(usize) -> Box<dyn GradEngine> + Send + Sync>;
 
-struct Accounting {
-    coords_up: u64,
-    bits_up: u64,
-    coords_down: u64,
-    /// measured: exact encoded frame bytes under the configured payload
-    bytes_up: u64,
-    bytes_down: u64,
-}
-
-impl Accounting {
-    fn zero() -> Accounting {
-        Accounting {
-            coords_up: 0,
-            bits_up: 0,
-            coords_down: 0,
-            bytes_up: 0,
-            bytes_down: 0,
-        }
-    }
-}
-
 fn residual(x: &[f64], x_star: &[f64], denom: f64) -> f64 {
     vector::dist2(x, x_star) / denom
 }
@@ -126,99 +141,104 @@ pub(crate) fn bits_of(up: &Uplink, dim: usize, float_bits: u32) -> u64 {
     b
 }
 
-/// Deterministic in-process driver.
+/// Deterministic in-process driver core: metrics stream through `obs`,
+/// the records themselves are whatever the observer stack keeps (see
+/// [`RunOutcome::into_result`]). Prefer [`Session`] with [`Driver::Sim`].
 ///
 /// §Perf: the round loop reuses one [`RoundBuffers`] (a `Downlink` plus
 /// one `Uplink` per worker) for the whole run, so in steady state it
 /// performs zero heap allocations per round (asserted in
-/// `tests/alloc_free.rs` for dcgd+/diana+).
+/// `tests/alloc_free.rs` for dcgd+/diana+; observer calls hand out
+/// stack-built records by reference).
+pub fn run_sim_observed(
+    method: &mut Method,
+    engines: &mut [Box<dyn GradEngine>],
+    x_star: &[f64],
+    cfg: &RunConfig,
+    obs: &mut dyn RoundObserver,
+) -> RunOutcome {
+    assert_eq!(method.workers.len(), engines.len());
+    let n = method.workers.len();
+    let dim = method.server.dim();
+    let base = Rng::new(cfg.seed);
+    let mut server_rng = base.derive(u64::MAX);
+    let mut worker_rngs: Vec<Rng> = (0..n).map(|i| base.derive(i as u64)).collect();
+
+    let denom = vector::dist2(method.server.iterate(), x_star).max(1e-300);
+    let mut acc = RoundTotals::default();
+    let mut phases = PhaseTimer::new();
+    let ticker = Ticker::new(cfg);
+    let mut stopped = ticker.start(obs);
+    let mut reached = false;
+    let mut rounds_run = 0;
+    let mut bufs = RoundBuffers::new(n);
+
+    if !stopped {
+        for round in 1..=cfg.max_rounds {
+            rounds_run = round;
+            let RoundBuffers { down, ups } = &mut bufs;
+            phases.time("server_downlink", || method.server.downlink_into(&mut *down));
+            acc.coords_down += (down.coords() * n) as u64;
+            acc.bytes_down += (codec::downlink_frame_len(&*down, cfg.payload) * n) as u64;
+
+            for i in 0..n {
+                let up = &mut ups[i];
+                phases.time("worker_round", || {
+                    method.workers[i].round_into(
+                        &*down,
+                        engines[i].as_mut(),
+                        &mut worker_rngs[i],
+                        &mut *up,
+                    )
+                });
+                acc.coords_up += up.coords() as u64;
+                acc.bits_up += bits_of(up, dim, cfg.float_bits);
+                acc.bytes_up += codec::uplink_frame_len(&*up, i, cfg.payload) as u64;
+            }
+
+            phases.time("server_apply", || {
+                method.server.apply(&*ups, &mut server_rng)
+            });
+
+            let res = residual(method.server.iterate(), x_star, denom);
+            match ticker.tick(round, res, &acc, method.server.iterate(), obs) {
+                Tick::Continue => {}
+                Tick::ReachedTarget => {
+                    reached = true;
+                    break;
+                }
+                Tick::Stopped => {
+                    stopped = true;
+                    break;
+                }
+            }
+        }
+    }
+
+    RunOutcome {
+        method: method.name.clone(),
+        final_x: method.server.iterate().to_vec(),
+        rounds_run,
+        reached_target: reached,
+        stopped_by_observer: stopped,
+        phases,
+    }
+}
+
+/// Pre-`Session` entry point for the in-process driver.
+#[deprecated(
+    note = "drive runs through `coordinator::Session` (Driver::Sim); this shim wraps \
+            `run_sim_observed` with the default collecting observer"
+)]
 pub fn run_sim(
     method: &mut Method,
     engines: &mut [Box<dyn GradEngine>],
     x_star: &[f64],
     cfg: &RunConfig,
 ) -> RunResult {
-    assert_eq!(method.workers.len(), engines.len());
-    let n = method.workers.len();
-    let dim = method.server.dim();
-    let record_every = cfg.record_every.max(1);
-    let base = Rng::new(cfg.seed);
-    let mut server_rng = base.derive(u64::MAX);
-    let mut worker_rngs: Vec<Rng> = (0..n).map(|i| base.derive(i as u64)).collect();
-
-    let denom = vector::dist2(method.server.iterate(), x_star).max(1e-300);
-    let mut acc = Accounting::zero();
-    let mut phases = PhaseTimer::new();
-    let mut records = Vec::with_capacity(cfg.max_rounds / record_every + 3);
-    records.push(RoundRecord {
-        round: 0,
-        residual: 1.0,
-        coords_up: 0,
-        bits_up: 0,
-        coords_down: 0,
-        bytes_up: 0,
-        bytes_down: 0,
-        wall_secs: 0.0,
-    });
-    let t0 = Instant::now();
-    let mut reached = false;
-    let mut rounds_run = 0;
-    let mut bufs = RoundBuffers::new(n);
-
-    for round in 1..=cfg.max_rounds {
-        rounds_run = round;
-        let RoundBuffers { down, ups } = &mut bufs;
-        phases.time("server_downlink", || method.server.downlink_into(&mut *down));
-        acc.coords_down += (down.coords() * n) as u64;
-        acc.bytes_down += (codec::downlink_frame_len(&*down, cfg.payload) * n) as u64;
-
-        for i in 0..n {
-            let up = &mut ups[i];
-            phases.time("worker_round", || {
-                method.workers[i].round_into(
-                    &*down,
-                    engines[i].as_mut(),
-                    &mut worker_rngs[i],
-                    &mut *up,
-                )
-            });
-            acc.coords_up += up.coords() as u64;
-            acc.bits_up += bits_of(up, dim, cfg.float_bits);
-            acc.bytes_up += codec::uplink_frame_len(&*up, i, cfg.payload) as u64;
-        }
-
-        phases.time("server_apply", || {
-            method.server.apply(&*ups, &mut server_rng)
-        });
-
-        let res = residual(method.server.iterate(), x_star, denom);
-        let hit_target = cfg.target_residual > 0.0 && res <= cfg.target_residual;
-        if round % record_every == 0 || round == cfg.max_rounds || hit_target {
-            records.push(RoundRecord {
-                round,
-                residual: res,
-                coords_up: acc.coords_up,
-                bits_up: acc.bits_up,
-                coords_down: acc.coords_down,
-                bytes_up: acc.bytes_up,
-                bytes_down: acc.bytes_down,
-                wall_secs: t0.elapsed().as_secs_f64(),
-            });
-        }
-        if hit_target {
-            reached = true;
-            break;
-        }
-    }
-
-    RunResult {
-        method: method.name.clone(),
-        records,
-        final_x: method.server.iterate().to_vec(),
-        rounds_run,
-        reached_target: reached,
-        phases,
-    }
+    let mut collect = CollectObserver::for_cfg(cfg);
+    let out = run_sim_observed(method, engines, x_star, cfg, &mut collect);
+    out.into_result(collect.into_records())
 }
 
 enum ToWorker {
@@ -234,31 +254,34 @@ enum ToWorker {
 /// brushing the full-ring wait in the steady state.
 const TO_WORKER_RING_CAP: usize = 4;
 
-/// Threaded parameter-server driver: one thread per worker, synchronous
-/// rounds. Consumes the method (worker halves move into their threads).
+/// Threaded parameter-server driver core: one thread per worker,
+/// synchronous rounds, metrics through `obs`. Consumes the method (worker
+/// halves move into their threads). Prefer [`Session`] with
+/// [`Driver::Threaded`].
 ///
 /// §Perf: each worker is connected by a pair of fixed-capacity SPSC
 /// [`ring`](crate::util::ring) channels (mpsc's per-send block allocation
 /// was the last per-round allocation source). Uplink buffers cycle
-/// server→worker via [`ToWorker::Recycle`], workers drop their downlink
+/// server→worker via `ToWorker::Recycle`, workers drop their downlink
 /// `Arc` clone *before* sending the uplink so the gather barrier
 /// guarantees `Arc::get_mut` succeeds and the broadcast buffer is
 /// rewritten in place — the steady-state coordinator round is literally
-/// allocation-free (asserted in `tests/alloc_free.rs`).
+/// allocation-free (asserted in `tests/alloc_free.rs`, observers
+/// included).
 ///
 /// With [`RunConfig::pin`], worker `i` pins itself to core `i mod cores`
 /// before building its engine (`sched_setaffinity`; no-op off Linux).
 /// Pinning cannot change results — the protocol is synchronous — and the
 /// driver-identity tests run a pinned column to keep that true.
-pub fn run_threaded(
+pub fn run_threaded_observed(
     mut method: Method,
     engine_factory: EngineFactory,
     x_star: &[f64],
     cfg: &RunConfig,
-) -> RunResult {
+    obs: &mut dyn RoundObserver,
+) -> RunOutcome {
     let n = method.workers.len();
     let dim = method.server.dim();
-    let record_every = cfg.record_every.max(1);
     let base = Rng::new(cfg.seed);
     let mut server_rng = base.derive(u64::MAX);
     let pin = cfg.pin;
@@ -304,20 +327,10 @@ pub fn run_threaded(
     }
 
     let denom = vector::dist2(method.server.iterate(), x_star).max(1e-300);
-    let mut acc = Accounting::zero();
+    let mut acc = RoundTotals::default();
     let mut phases = PhaseTimer::new();
-    let mut records = Vec::with_capacity(cfg.max_rounds / record_every + 3);
-    records.push(RoundRecord {
-        round: 0,
-        residual: 1.0,
-        coords_up: 0,
-        bits_up: 0,
-        coords_down: 0,
-        bytes_up: 0,
-        bytes_down: 0,
-        wall_secs: 0.0,
-    });
-    let t0 = Instant::now();
+    let ticker = Ticker::new(cfg);
+    let mut stopped = ticker.start(obs);
     let mut reached = false;
     let mut rounds_run = 0;
     let mut ups: Vec<Uplink> = (0..n).map(|_| Uplink::default()).collect();
@@ -327,66 +340,62 @@ pub fn run_threaded(
     // in place — no per-round Arc or payload allocation in steady state.
     let mut down: Arc<Downlink> = Arc::new(Downlink::Init { x: Vec::new() });
 
-    for round in 1..=cfg.max_rounds {
-        rounds_run = round;
-        phases.time("server_downlink", || match Arc::get_mut(&mut down) {
-            Some(d) => method.server.downlink_into(d),
-            None => {
-                // unreachable in practice: every worker drops its clone
-                // before its uplink send, and the previous round's gather
-                // synchronized with all n sends — kept as a safe fallback
-                // (the alloc_free test would flag it if it ever fired)
-                let mut fresh = Downlink::Init { x: Vec::new() };
-                method.server.downlink_into(&mut fresh);
-                down = Arc::new(fresh);
-            }
-        });
-        acc.coords_down += (down.coords() * n) as u64;
-        acc.bytes_down += (codec::downlink_frame_len(&down, cfg.payload) * n) as u64;
-        phases.time("scatter", || {
+    if !stopped {
+        for round in 1..=cfg.max_rounds {
+            rounds_run = round;
+            phases.time("server_downlink", || match Arc::get_mut(&mut down) {
+                Some(d) => method.server.downlink_into(d),
+                None => {
+                    // unreachable in practice: every worker drops its clone
+                    // before its uplink send, and the previous round's gather
+                    // synchronized with all n sends — kept as a safe fallback
+                    // (the alloc_free test would flag it if it ever fired)
+                    let mut fresh = Downlink::Init { x: Vec::new() };
+                    method.server.downlink_into(&mut fresh);
+                    down = Arc::new(fresh);
+                }
+            });
+            acc.coords_down += (down.coords() * n) as u64;
+            acc.bytes_down += (codec::downlink_frame_len(&down, cfg.payload) * n) as u64;
+            phases.time("scatter", || {
+                for (i, tx) in to_workers.iter().enumerate() {
+                    if tx.send(ToWorker::Round(down.clone())).is_err() {
+                        panic!("worker {i} died");
+                    }
+                }
+            });
+            phases.time("gather", || {
+                // fixed worker order: each ring is SPSC, so popping worker i's
+                // ring blocks exactly until its round is done — the barrier is
+                // complete after the loop, same as the shared-channel gather
+                for (i, up_rx) in from_workers.iter().enumerate() {
+                    let up = up_rx.recv().expect("worker channel closed");
+                    acc.coords_up += up.coords() as u64;
+                    acc.bits_up += bits_of(&up, dim, cfg.float_bits);
+                    acc.bytes_up += codec::uplink_frame_len(&up, i, cfg.payload) as u64;
+                    ups[i] = up;
+                }
+            });
+            phases.time("server_apply", || {
+                method.server.apply(&ups, &mut server_rng)
+            });
+            // hand the consumed uplink buffers back to their workers
             for (i, tx) in to_workers.iter().enumerate() {
-                if tx.send(ToWorker::Round(down.clone())).is_err() {
-                    panic!("worker {i} died");
+                let _ = tx.send(ToWorker::Recycle(std::mem::take(&mut ups[i])));
+            }
+
+            let res = residual(method.server.iterate(), x_star, denom);
+            match ticker.tick(round, res, &acc, method.server.iterate(), obs) {
+                Tick::Continue => {}
+                Tick::ReachedTarget => {
+                    reached = true;
+                    break;
+                }
+                Tick::Stopped => {
+                    stopped = true;
+                    break;
                 }
             }
-        });
-        phases.time("gather", || {
-            // fixed worker order: each ring is SPSC, so popping worker i's
-            // ring blocks exactly until its round is done — the barrier is
-            // complete after the loop, same as the shared-channel gather
-            for (i, up_rx) in from_workers.iter().enumerate() {
-                let up = up_rx.recv().expect("worker channel closed");
-                acc.coords_up += up.coords() as u64;
-                acc.bits_up += bits_of(&up, dim, cfg.float_bits);
-                acc.bytes_up += codec::uplink_frame_len(&up, i, cfg.payload) as u64;
-                ups[i] = up;
-            }
-        });
-        phases.time("server_apply", || {
-            method.server.apply(&ups, &mut server_rng)
-        });
-        // hand the consumed uplink buffers back to their workers
-        for (i, tx) in to_workers.iter().enumerate() {
-            let _ = tx.send(ToWorker::Recycle(std::mem::take(&mut ups[i])));
-        }
-
-        let res = residual(method.server.iterate(), x_star, denom);
-        let hit_target = cfg.target_residual > 0.0 && res <= cfg.target_residual;
-        if round % record_every == 0 || round == cfg.max_rounds || hit_target {
-            records.push(RoundRecord {
-                round,
-                residual: res,
-                coords_up: acc.coords_up,
-                bits_up: acc.bits_up,
-                coords_down: acc.coords_down,
-                bytes_up: acc.bytes_up,
-                bytes_down: acc.bytes_down,
-                wall_secs: t0.elapsed().as_secs_f64(),
-            });
-        }
-        if hit_target {
-            reached = true;
-            break;
         }
     }
 
@@ -397,14 +406,30 @@ pub fn run_threaded(
         let _ = h.join();
     }
 
-    RunResult {
+    RunOutcome {
         method: method.name.clone(),
-        records,
         final_x: method.server.iterate().to_vec(),
         rounds_run,
         reached_target: reached,
+        stopped_by_observer: stopped,
         phases,
     }
+}
+
+/// Pre-`Session` entry point for the threaded driver.
+#[deprecated(
+    note = "drive runs through `coordinator::Session` (Driver::Threaded); this shim wraps \
+            `run_threaded_observed` with the default collecting observer"
+)]
+pub fn run_threaded(
+    method: Method,
+    engine_factory: EngineFactory,
+    x_star: &[f64],
+    cfg: &RunConfig,
+) -> RunResult {
+    let mut collect = CollectObserver::for_cfg(cfg);
+    let out = run_threaded_observed(method, engine_factory, x_star, cfg, &mut collect);
+    out.into_result(collect.into_records())
 }
 
 #[cfg(test)]
@@ -432,6 +457,18 @@ mod tests {
             .collect()
     }
 
+    /// The shim body, sans deprecation: collect + core.
+    fn sim(
+        method: &mut Method,
+        engines: &mut [Box<dyn GradEngine>],
+        x_star: &[f64],
+        cfg: &RunConfig,
+    ) -> RunResult {
+        let mut collect = CollectObserver::for_cfg(cfg);
+        let out = run_sim_observed(method, engines, x_star, cfg, &mut collect);
+        out.into_result(collect.into_records())
+    }
+
     #[test]
     fn sim_driver_dgd_converges() {
         let (shards, sm, x_star) = setup();
@@ -443,13 +480,13 @@ mod tests {
             target_residual: 1e-8,
             ..Default::default()
         };
-        let r = run_sim(&mut m, &mut eng, &x_star, &cfg);
+        let r = sim(&mut m, &mut eng, &x_star, &cfg);
         assert!(r.reached_target, "final residual {}", r.final_residual());
     }
 
     // sim ≡ threaded ≡ distributed(loopback) bitwise identity is covered
     // by the table-driven matrix test in `tests/driver_matrix.rs`
-    // ({3 methods × 2 samplings × 2 shard counts}).
+    // ({3 methods × 2 samplings × 2 shard counts}), built via `Session`.
 
     #[test]
     fn record_every_thins_records() {
@@ -462,8 +499,60 @@ mod tests {
             record_every: 10,
             ..Default::default()
         };
-        let r = run_sim(&mut m, &mut eng, &x_star, &cfg);
+        let r = sim(&mut m, &mut eng, &x_star, &cfg);
         assert_eq!(r.records.len(), 11); // round 0 + 10 checkpoints
+    }
+
+    #[test]
+    fn observer_early_stop_ends_run() {
+        struct StopAt(usize);
+        impl RoundObserver for StopAt {
+            fn on_round(&mut self, rec: &RoundRecord) -> ObserverControl {
+                if rec.round >= self.0 {
+                    ObserverControl::Stop
+                } else {
+                    ObserverControl::Continue
+                }
+            }
+        }
+        let (shards, sm, x_star) = setup();
+        let spec = MethodSpec::new("dcgd+", 1.0, SamplingKind::Uniform, 1e-3, vec![0.0; sm.dim]);
+        let mut m = build(&spec, &sm).unwrap();
+        let mut eng = engines(&shards);
+        let cfg = RunConfig {
+            max_rounds: 100,
+            ..Default::default()
+        };
+        let mut obs = StopAt(7);
+        let out = run_sim_observed(&mut m, &mut eng, &x_star, &cfg, &mut obs);
+        assert_eq!(out.rounds_run, 7);
+        assert!(out.stopped_by_observer);
+        assert!(!out.reached_target);
+    }
+
+    #[test]
+    fn checkpoint_hook_fires_on_cadence() {
+        struct Count(Vec<usize>, usize);
+        impl RoundObserver for Count {
+            fn on_checkpoint(&mut self, round: usize, x: &[f64]) {
+                self.0.push(round);
+                self.1 = x.len();
+            }
+        }
+        let (shards, sm, x_star) = setup();
+        let spec = MethodSpec::new("diana+", 2.0, SamplingKind::Uniform, 1e-3, vec![0.0; sm.dim]);
+        let mut m = build(&spec, &sm).unwrap();
+        let mut eng = engines(&shards);
+        let cfg = RunConfig {
+            max_rounds: 25,
+            checkpoint_every: 10,
+            ..Default::default()
+        };
+        let mut obs = Count(Vec::new(), 0);
+        let out = run_sim_observed(&mut m, &mut eng, &x_star, &cfg, &mut obs);
+        assert_eq!(out.rounds_run, 25);
+        assert_eq!(obs.0, vec![10, 20]);
+        assert_eq!(obs.1, sm.dim);
     }
 
     #[test]
@@ -478,7 +567,7 @@ mod tests {
             max_rounds: 5,
             ..Default::default()
         };
-        let r = run_sim(&mut m, &mut eng, &x_star, &cfg);
+        let r = sim(&mut m, &mut eng, &x_star, &cfg);
         let last = r.records.last().unwrap();
         assert_eq!(last.coords_up, 5 * n * d);
         assert_eq!(last.coords_down, 5 * n * d);
@@ -579,7 +668,7 @@ mod tests {
 
             let mut m_new = build(&spec, &sm_local).unwrap();
             let mut eng_new = engines(&shards);
-            let r_new = run_sim(&mut m_new, &mut eng_new, &x_star, &cfg);
+            let r_new = sim(&mut m_new, &mut eng_new, &x_star, &cfg);
 
             assert_eq!(
                 m_ref.server.iterate(),
@@ -601,12 +690,41 @@ mod tests {
             record_every: rounds,
             ..Default::default()
         };
-        let r = run_sim(&mut m, &mut eng, &x_star, &cfg);
+        let r = sim(&mut m, &mut eng, &x_star, &cfg);
         let per_round_per_worker =
             r.records.last().unwrap().coords_up as f64 / (rounds as f64 * shards.len() as f64);
         assert!(
             (per_round_per_worker - 1.0).abs() < 0.3,
             "E|S| drifted: {per_round_per_worker}"
+        );
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_shims_match_session_output() {
+        // The shims must stay faithful wrappers until they are removed.
+        let (shards, sm, x_star) = setup();
+        let spec = MethodSpec::new("diana+", 2.0, SamplingKind::Uniform, 1e-3, vec![0.0; sm.dim]);
+        let cfg = RunConfig {
+            max_rounds: 20,
+            ..Default::default()
+        };
+        let mut m1 = build(&spec, &sm).unwrap();
+        let mut eng1 = engines(&shards);
+        let r_shim = run_sim(&mut m1, &mut eng1, &x_star, &cfg);
+
+        let r_session = Session::new(spec)
+            .smoothness(&sm)
+            .x_star(&x_star)
+            .engines(engines(&shards))
+            .run_config(cfg)
+            .run()
+            .unwrap();
+        assert_eq!(r_shim.final_x, r_session.final_x);
+        assert_eq!(r_shim.records.len(), r_session.records.len());
+        assert_eq!(
+            r_shim.records.last().unwrap().coords_up,
+            r_session.records.last().unwrap().coords_up
         );
     }
 }

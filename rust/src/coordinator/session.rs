@@ -1,0 +1,894 @@
+//! The one front door for running a method: a [`Session`] builder that
+//! dispatches to any of the three drivers, streams metrics through
+//! [`RoundObserver`]s, and configures checkpointing.
+//!
+//! Historically each driver had its own incompatible entry point
+//! (`run_sim` wanted `&mut Method` + engines, `run_threaded` consumed the
+//! method and wanted a factory, `wire::run_distributed` wanted transports)
+//! so the figure sweeps, the PJRT path and the wire runtime each hard-coded
+//! one driver. `Session` composes the same run from named parts:
+//!
+//! ```no_run
+//! use smx::coordinator::{Driver, Session, RunConfig};
+//! use smx::methods::MethodSpec;
+//! use smx::sampling::SamplingKind;
+//! # fn demo(sm: &smx::objective::Smoothness, x_star: &[f64],
+//! #         factory: smx::coordinator::EngineFactory) -> anyhow::Result<()> {
+//! let spec = MethodSpec::new("diana+", 2.0, SamplingKind::Uniform, 1e-3,
+//!                            vec![0.0; sm.dim]);
+//! let result = Session::new(spec)
+//!     .smoothness(sm)
+//!     .x_star(x_star)
+//!     .driver(Driver::Threaded)
+//!     .engine_factory(factory)
+//!     .run_config(RunConfig::new(500))
+//!     .run()?;
+//! # let _ = result; Ok(()) }
+//! ```
+//!
+//! or, config-driven (the CLI's `--driver` flag lands here):
+//!
+//! ```no_run
+//! # use smx::config::ExperimentConfig;
+//! # use smx::coordinator::Session;
+//! # fn demo(cfg: &ExperimentConfig) -> anyhow::Result<()> {
+//! let result = Session::from_config(cfg).run()?; // prepares, builds, runs
+//! # let _ = result; Ok(()) }
+//! ```
+//!
+//! # Observers
+//!
+//! A [`RoundObserver`] receives every *recorded* round (round 0, every
+//! `record_every`-th round, and the final/target round — exactly the rows
+//! the old implicit collection kept), an optional checkpoint callback, and
+//! the finished [`RunResult`]. Observers only ever see `&`-references
+//! taken *after* the server applied the round, so they cannot perturb the
+//! trajectory — the driver-identity tests run a streaming observer next
+//! to the collector and assert bitwise-equal iterates. Returning
+//! [`ObserverControl::Stop`] ends the run after the current round.
+//!
+//! Provided observers: the in-memory [`CollectObserver`] (always installed
+//! by [`Session::run`]; its records become [`RunResult::records`]),
+//! streaming [`JsonlObserver`]/[`CsvObserver`] sinks, and a
+//! [`CheckpointObserver`] that atomically rewrites a model-snapshot file
+//! every [`Session::checkpoint_every`] rounds (reload it with
+//! [`load_checkpoint`] to warm-start a new run via [`MethodSpec::x0`]).
+//! Under the distributed TCP driver, `checkpoint_every` additionally
+//! drives the wire runtime's worker-state snapshot + journal truncation,
+//! so a worker that dies and rejoins resumes from the snapshot instead of
+//! replaying from round 0 — bitwise identically (see
+//! [`crate::wire::runtime`]).
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::{
+    run_sim_observed, run_threaded_observed, EngineFactory, RoundRecord, RoundTotals, RunConfig,
+    RunOutcome, RunResult,
+};
+use crate::experiments::runner::{self, Prepared};
+use crate::methods::{build, MethodSpec};
+use crate::objective::Smoothness;
+use crate::runtime::{EngineKind, GradEngine};
+use anyhow::{bail, ensure, Context, Result};
+use std::io::Write;
+use std::net::TcpListener;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+// ---- observers ---------------------------------------------------------
+
+/// Returned by [`RoundObserver::on_round`]: keep going, or end the run
+/// after the current round (the result reports `rounds_run` up to here
+/// and `reached_target = false`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ObserverControl {
+    Continue,
+    Stop,
+}
+
+/// Streaming view of a run: one call per *recorded* round. The single
+/// metrics seam shared by all three drivers — the in-memory records of
+/// [`RunResult`] are produced by an observer too ([`CollectObserver`]).
+///
+/// Observers receive shared references after the server has applied the
+/// round, so they can stream, aggregate or early-stop but cannot perturb
+/// the trajectory.
+pub trait RoundObserver {
+    /// A recorded round (round 0, every `record_every`-th, the final and
+    /// the target-hitting round). Return [`ObserverControl::Stop`] to end
+    /// the run here.
+    fn on_round(&mut self, _rec: &RoundRecord) -> ObserverControl {
+        ObserverControl::Continue
+    }
+
+    /// Fired every [`RunConfig::checkpoint_every`] rounds with the
+    /// current model iterate (never at round 0; disabled when 0).
+    fn on_checkpoint(&mut self, _round: usize, _x: &[f64]) {}
+
+    /// The finished run, records included.
+    fn on_done(&mut self, _result: &RunResult) {}
+}
+
+/// In-memory collection — the behavior every run had before observers
+/// existed. [`Session::run`] always installs one internally and returns
+/// its records as [`RunResult::records`].
+#[derive(Debug, Default)]
+pub struct CollectObserver {
+    records: Vec<RoundRecord>,
+}
+
+impl CollectObserver {
+    pub fn new() -> CollectObserver {
+        CollectObserver::default()
+    }
+
+    /// Pre-reserve for a run under `cfg` so steady-state pushes never
+    /// reallocate (the alloc-free driver contract counts on this).
+    pub fn for_cfg(cfg: &RunConfig) -> CollectObserver {
+        CollectObserver {
+            records: Vec::with_capacity(cfg.max_rounds / cfg.record_every.max(1) + 3),
+        }
+    }
+
+    pub fn into_records(self) -> Vec<RoundRecord> {
+        self.records
+    }
+}
+
+impl RoundObserver for CollectObserver {
+    fn on_round(&mut self, rec: &RoundRecord) -> ObserverControl {
+        self.records.push(rec.clone());
+        ObserverControl::Continue
+    }
+}
+
+/// Streams each recorded round as one JSON object per line. Write errors
+/// do not interrupt the run (the sink is an observer, not a participant);
+/// the first failure is logged and the stream goes quiet.
+pub struct JsonlObserver {
+    w: std::io::BufWriter<std::fs::File>,
+    failed: bool,
+}
+
+impl JsonlObserver {
+    pub fn create(path: impl AsRef<Path>) -> std::io::Result<JsonlObserver> {
+        Ok(JsonlObserver {
+            w: std::io::BufWriter::new(std::fs::File::create(path)?),
+            failed: false,
+        })
+    }
+}
+
+impl RoundObserver for JsonlObserver {
+    fn on_round(&mut self, rec: &RoundRecord) -> ObserverControl {
+        if !self.failed {
+            let res = writeln!(
+                self.w,
+                "{{\"round\":{},\"residual\":{:e},\"coords_up\":{},\"bits_up\":{},\
+                 \"coords_down\":{},\"bytes_up\":{},\"bytes_down\":{},\"wall_secs\":{:.6}}}",
+                rec.round,
+                rec.residual,
+                rec.coords_up,
+                rec.bits_up,
+                rec.coords_down,
+                rec.bytes_up,
+                rec.bytes_down,
+                rec.wall_secs
+            );
+            if let Err(e) = res {
+                crate::info!("session", "jsonl observer write failed ({e}); stream stops");
+                self.failed = true;
+            }
+        }
+        ObserverControl::Continue
+    }
+
+    fn on_done(&mut self, _result: &RunResult) {
+        let _ = self.w.flush();
+    }
+}
+
+/// Streams each recorded round as a CSV row (same columns as
+/// [`RunResult::csv_rows`] minus the method label, which an observer does
+/// not know). Same error policy as [`JsonlObserver`].
+pub struct CsvObserver {
+    w: std::io::BufWriter<std::fs::File>,
+    failed: bool,
+}
+
+impl CsvObserver {
+    pub fn create(path: impl AsRef<Path>) -> std::io::Result<CsvObserver> {
+        let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+        writeln!(
+            w,
+            "round,residual,coords_up,bits_up,coords_down,bytes_up,bytes_down,wall_secs"
+        )?;
+        Ok(CsvObserver { w, failed: false })
+    }
+}
+
+impl RoundObserver for CsvObserver {
+    fn on_round(&mut self, rec: &RoundRecord) -> ObserverControl {
+        if !self.failed {
+            let res = writeln!(
+                self.w,
+                "{},{:.6e},{},{},{},{},{},{:.6}",
+                rec.round,
+                rec.residual,
+                rec.coords_up,
+                rec.bits_up,
+                rec.coords_down,
+                rec.bytes_up,
+                rec.bytes_down,
+                rec.wall_secs
+            );
+            if let Err(e) = res {
+                crate::info!("session", "csv observer write failed ({e}); stream stops");
+                self.failed = true;
+            }
+        }
+        ObserverControl::Continue
+    }
+
+    fn on_done(&mut self, _result: &RunResult) {
+        let _ = self.w.flush();
+    }
+}
+
+const CKPT_MAGIC: &[u8; 8] = b"SMXCKPT1";
+
+/// Atomically rewrites a model-snapshot file at every checkpoint (write
+/// to a sibling `.tmp`, then rename). The file always holds the *latest*
+/// checkpoint; reload it with [`load_checkpoint`] and pass the iterate as
+/// [`MethodSpec::x0`] to warm-start a new run. (Bitwise checkpoint-resume
+/// — including worker-local state — is the distributed TCP driver's
+/// journal-snapshot mechanism; see [`crate::wire::runtime`].)
+pub struct CheckpointObserver {
+    path: PathBuf,
+}
+
+impl CheckpointObserver {
+    pub fn new(path: impl Into<PathBuf>) -> CheckpointObserver {
+        CheckpointObserver { path: path.into() }
+    }
+}
+
+impl RoundObserver for CheckpointObserver {
+    fn on_checkpoint(&mut self, round: usize, x: &[f64]) {
+        if let Err(e) = write_checkpoint(&self.path, round, x) {
+            crate::info!(
+                "session",
+                "checkpoint write to {} failed ({e}); keeping the previous snapshot",
+                self.path.display()
+            );
+        }
+    }
+}
+
+/// Write a `(round, x)` model snapshot: magic, `u64` round, `u64` length,
+/// raw little-endian f64 bits (exact). Atomic via tmp-file + rename.
+pub fn write_checkpoint(path: &Path, round: usize, x: &[f64]) -> std::io::Result<()> {
+    let mut buf = Vec::with_capacity(CKPT_MAGIC.len() + 16 + 8 * x.len());
+    buf.extend_from_slice(CKPT_MAGIC);
+    buf.extend_from_slice(&(round as u64).to_le_bytes());
+    buf.extend_from_slice(&(x.len() as u64).to_le_bytes());
+    for &v in x {
+        buf.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+    let tmp = path.with_extension("tmp");
+    std::fs::write(&tmp, &buf)?;
+    std::fs::rename(&tmp, path)
+}
+
+/// Read a snapshot written by [`write_checkpoint`] back as `(round, x)`,
+/// bit-exact.
+pub fn load_checkpoint(path: &Path) -> std::io::Result<(usize, Vec<f64>)> {
+    let bad = |msg: &str| std::io::Error::new(std::io::ErrorKind::InvalidData, msg.to_string());
+    let buf = std::fs::read(path)?;
+    if buf.len() < CKPT_MAGIC.len() + 16 || &buf[..8] != CKPT_MAGIC {
+        return Err(bad("not a smx checkpoint file"));
+    }
+    let round = u64::from_le_bytes(buf[8..16].try_into().unwrap()) as usize;
+    let n = u64::from_le_bytes(buf[16..24].try_into().unwrap()) as usize;
+    if buf.len() != 24 + 8 * n {
+        return Err(bad("checkpoint length mismatch"));
+    }
+    let x = buf[24..]
+        .chunks_exact(8)
+        .map(|c| f64::from_bits(u64::from_le_bytes(c.try_into().unwrap())))
+        .collect();
+    Ok((round, x))
+}
+
+/// Fan a driver's observer calls out to the collector plus any user
+/// observers. `Stop` wins if any observer asks for it.
+pub(crate) struct Fanout<'a, 'b> {
+    pub collect: &'a mut CollectObserver,
+    pub rest: &'a mut [Box<dyn RoundObserver + 'b>],
+}
+
+impl RoundObserver for Fanout<'_, '_> {
+    fn on_round(&mut self, rec: &RoundRecord) -> ObserverControl {
+        let mut stop = self.collect.on_round(rec) == ObserverControl::Stop;
+        for o in self.rest.iter_mut() {
+            stop |= o.on_round(rec) == ObserverControl::Stop;
+        }
+        if stop {
+            ObserverControl::Stop
+        } else {
+            ObserverControl::Continue
+        }
+    }
+
+    fn on_checkpoint(&mut self, round: usize, x: &[f64]) {
+        self.collect.on_checkpoint(round, x);
+        for o in self.rest.iter_mut() {
+            o.on_checkpoint(round, x);
+        }
+    }
+}
+
+// ---- shared per-round bookkeeping --------------------------------------
+
+/// Outcome of one [`Ticker::tick`].
+pub(crate) enum Tick {
+    Continue,
+    ReachedTarget,
+    Stopped,
+}
+
+/// The stopping/recording policy every driver shares: round 0 plus every
+/// `record_every`-th/final/target round goes to the observer, checkpoints
+/// fire on their own cadence, and the target/stop decision comes back as
+/// a [`Tick`]. Extracted so the four driver loops cannot drift apart.
+pub(crate) struct Ticker {
+    record_every: usize,
+    max_rounds: usize,
+    target_residual: f64,
+    checkpoint_every: usize,
+    t0: Instant,
+}
+
+impl Ticker {
+    pub fn new(cfg: &RunConfig) -> Ticker {
+        Ticker {
+            record_every: cfg.record_every.max(1),
+            max_rounds: cfg.max_rounds,
+            target_residual: cfg.target_residual,
+            checkpoint_every: cfg.checkpoint_every,
+            t0: Instant::now(),
+        }
+    }
+
+    /// Emit the round-0 record. Returns `true` if an observer stopped the
+    /// run before it began.
+    pub fn start(&self, obs: &mut dyn RoundObserver) -> bool {
+        let rec = RoundRecord {
+            round: 0,
+            residual: 1.0,
+            coords_up: 0,
+            bits_up: 0,
+            coords_down: 0,
+            bytes_up: 0,
+            bytes_down: 0,
+            wall_secs: 0.0,
+        };
+        obs.on_round(&rec) == ObserverControl::Stop
+    }
+
+    /// Post-apply bookkeeping for `round`.
+    pub fn tick(
+        &self,
+        round: usize,
+        residual: f64,
+        acc: &RoundTotals,
+        x: &[f64],
+        obs: &mut dyn RoundObserver,
+    ) -> Tick {
+        let hit_target = self.target_residual > 0.0 && residual <= self.target_residual;
+        let mut stop = false;
+        if round % self.record_every == 0 || round == self.max_rounds || hit_target {
+            let rec = RoundRecord {
+                round,
+                residual,
+                coords_up: acc.coords_up,
+                bits_up: acc.bits_up,
+                coords_down: acc.coords_down,
+                bytes_up: acc.bytes_up,
+                bytes_down: acc.bytes_down,
+                wall_secs: self.t0.elapsed().as_secs_f64(),
+            };
+            stop = obs.on_round(&rec) == ObserverControl::Stop;
+        }
+        if self.checkpoint_every > 0 && round % self.checkpoint_every == 0 {
+            obs.on_checkpoint(round, x);
+        }
+        if hit_target {
+            Tick::ReachedTarget
+        } else if stop {
+            Tick::Stopped
+        } else {
+            Tick::Continue
+        }
+    }
+}
+
+// ---- drivers -----------------------------------------------------------
+
+/// Execution regime of a [`Session`].
+#[derive(Clone, Debug)]
+pub enum Driver {
+    /// Deterministic in-process loop (workers run sequentially on the
+    /// calling thread). The reference driver.
+    Sim,
+    /// One OS thread per worker over SPSC ring buffers; engines are built
+    /// inside the worker threads via an [`EngineFactory`].
+    Threaded,
+    /// Multi-process protocol through the wire codec.
+    Distributed { transport: DistTransport },
+}
+
+/// How a distributed run moves its bytes.
+#[derive(Clone, Debug)]
+pub enum DistTransport {
+    /// In-process loopback transports: `procs` worker threads (0 = one
+    /// per shard) speaking the full wire codec. Deterministic, bitwise
+    /// identical to [`Driver::Sim`] under the lossless `f64` payload.
+    Loopback { procs: usize },
+    /// The elastic TCP server (`smx serve`): bind `listen`, wait for
+    /// `workers` worker processes (0 = one per shard), survive their
+    /// deaths. Requires [`Session::from_config`] — the handshake ships
+    /// the dataset recipe to the worker processes.
+    Tcp { listen: String, workers: usize },
+}
+
+/// Config-file / CLI driver selection (`--driver`, `"driver"` key);
+/// resolved to a concrete [`Driver`] by [`Session::run`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DriverKind {
+    /// Historical behavior: native engine → [`Driver::Sim`], PJRT engine
+    /// → [`Driver::Threaded`].
+    Auto,
+    Sim,
+    Threaded,
+    /// Loopback distributed with `wire.workers` processes (the TCP path
+    /// has its own subcommands, `smx serve` / `smx worker`).
+    Distributed,
+}
+
+impl DriverKind {
+    pub fn parse(s: &str) -> Option<DriverKind> {
+        match s {
+            "auto" => Some(DriverKind::Auto),
+            "sim" => Some(DriverKind::Sim),
+            "threaded" => Some(DriverKind::Threaded),
+            "distributed" => Some(DriverKind::Distributed),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DriverKind::Auto => "auto",
+            DriverKind::Sim => "sim",
+            DriverKind::Threaded => "threaded",
+            DriverKind::Distributed => "distributed",
+        }
+    }
+}
+
+// ---- the builder -------------------------------------------------------
+
+/// Builder for one run: method × driver × engines × run policy ×
+/// observers. See the [module docs](self) for examples.
+///
+/// Two entry points: [`Session::new`] with an explicit [`MethodSpec`]
+/// (supply [`Session::smoothness`], and [`Session::x_star`] unless the
+/// residual reference is zero), or [`Session::from_config`], which can
+/// prepare the whole problem (dataset, x*, smoothness) by itself —
+/// [`Session::prepared`] shares one [`Prepared`] across many runs.
+pub struct Session<'a> {
+    spec: Option<MethodSpec>,
+    cfg: Option<&'a ExperimentConfig>,
+    prep: Option<&'a Prepared>,
+    sm: Option<&'a Smoothness>,
+    x_star: Option<&'a [f64]>,
+    driver: Option<Driver>,
+    run_cfg: Option<RunConfig>,
+    checkpoint_every: Option<usize>,
+    engines: Option<Vec<Box<dyn GradEngine>>>,
+    factory: Option<EngineFactory>,
+    observers: Vec<Box<dyn RoundObserver + 'a>>,
+    listener: Option<TcpListener>,
+}
+
+impl<'a> Session<'a> {
+    /// Start from an explicit method spec (library use; tests).
+    pub fn new(spec: MethodSpec) -> Session<'a> {
+        Session {
+            spec: Some(spec),
+            cfg: None,
+            prep: None,
+            sm: None,
+            x_star: None,
+            driver: None,
+            run_cfg: None,
+            checkpoint_every: None,
+            engines: None,
+            factory: None,
+            observers: Vec::new(),
+            listener: None,
+        }
+    }
+
+    /// Start from an experiment config: the method comes from
+    /// `cfg.methods` (exactly one, unless overridden via
+    /// [`Session::method`]), the run policy from
+    /// [`runner::run_config`], the driver from `cfg.driver`, and the
+    /// problem is prepared on demand (share one with
+    /// [`Session::prepared`]).
+    pub fn from_config(cfg: &'a ExperimentConfig) -> Session<'a> {
+        Session {
+            spec: None,
+            cfg: Some(cfg),
+            prep: None,
+            sm: None,
+            x_star: None,
+            driver: None,
+            run_cfg: None,
+            checkpoint_every: None,
+            engines: None,
+            factory: None,
+            observers: Vec::new(),
+            listener: None,
+        }
+    }
+
+    /// Reuse an already-prepared problem (smoothness, x*, shards) instead
+    /// of preparing from the config inside [`Session::run`] — what the
+    /// sweep runner does for every cell of a figure.
+    pub fn prepared(mut self, prep: &'a Prepared) -> Session<'a> {
+        self.prep = Some(prep);
+        self
+    }
+
+    /// Override the method (spec wins over `cfg.methods`).
+    pub fn method(mut self, spec: MethodSpec) -> Session<'a> {
+        self.spec = Some(spec);
+        self
+    }
+
+    /// Problem smoothness to build the method against (implied by
+    /// [`Session::prepared`] / [`Session::from_config`]).
+    pub fn smoothness(mut self, sm: &'a Smoothness) -> Session<'a> {
+        self.sm = Some(sm);
+        self
+    }
+
+    /// Residual reference point x*. Defaults to the prepared problem's
+    /// solution, or to the origin (identity is a trajectory property;
+    /// the reference only scales the reported residual).
+    pub fn x_star(mut self, x_star: &'a [f64]) -> Session<'a> {
+        self.x_star = Some(x_star);
+        self
+    }
+
+    /// Select the execution regime. Defaults to the config's `driver`
+    /// key (`Auto` maps native → Sim, PJRT → Threaded), or [`Driver::Sim`].
+    pub fn driver(mut self, driver: Driver) -> Session<'a> {
+        self.driver = Some(driver);
+        self
+    }
+
+    /// Stopping/recording policy. Defaults to
+    /// [`runner::run_config`]`(cfg)` under [`Session::from_config`], else
+    /// [`RunConfig::default`].
+    pub fn run_config(mut self, cfg: RunConfig) -> Session<'a> {
+        self.run_cfg = Some(cfg);
+        self
+    }
+
+    /// Checkpoint cadence in rounds (0 disables). Fires
+    /// [`RoundObserver::on_checkpoint`] on every driver; under the
+    /// distributed TCP driver it additionally snapshots worker state and
+    /// truncates the replay journal (see [`crate::wire::runtime`]).
+    /// Overrides the value in [`Session::run_config`].
+    pub fn checkpoint_every(mut self, rounds: usize) -> Session<'a> {
+        self.checkpoint_every = Some(rounds);
+        self
+    }
+
+    /// Per-worker gradient engines for [`Driver::Sim`] (the threaded and
+    /// distributed drivers build engines inside their workers — give them
+    /// an [`Session::engine_factory`] instead).
+    pub fn engines(mut self, engines: Vec<Box<dyn GradEngine>>) -> Session<'a> {
+        self.engines = Some(engines);
+        self
+    }
+
+    /// Engine factory, called with the shard index inside each worker
+    /// thread. Works for every driver; required for [`Driver::Threaded`]
+    /// and loopback-distributed unless the problem is prepared (which
+    /// supplies a native/PJRT factory per `cfg.engine`).
+    pub fn engine_factory(mut self, factory: EngineFactory) -> Session<'a> {
+        self.factory = Some(factory);
+        self
+    }
+
+    /// Attach a streaming observer (repeatable; all observers see every
+    /// recorded round, and any of them can stop the run).
+    pub fn observer(mut self, obs: impl RoundObserver + 'a) -> Session<'a> {
+        self.observers.push(Box::new(obs));
+        self
+    }
+
+    /// Use an already-bound listener for the TCP transport (tests bind
+    /// port 0 and hand the ephemeral address to their workers).
+    pub fn tcp_listener(mut self, listener: TcpListener) -> Session<'a> {
+        self.listener = Some(listener);
+        self
+    }
+
+    /// Resolve every part, dispatch to the selected driver, and return
+    /// the classic [`RunResult`]. Bitwise contract: for a fixed method,
+    /// engines and [`RunConfig`], the trajectory is identical across
+    /// `Sim`, `Threaded`, and `Distributed` (lossless `f64` payload),
+    /// with or without observers — asserted by `tests/driver_matrix.rs`.
+    pub fn run(mut self) -> Result<RunResult> {
+        // -- driver (needed early: TCP forces preparation) --------------
+        let driver = match self.driver.take() {
+            Some(d) => d,
+            None => match self.cfg {
+                Some(cfg) => match cfg.driver {
+                    DriverKind::Auto => match cfg.engine {
+                        EngineKind::Native => Driver::Sim,
+                        EngineKind::Pjrt => Driver::Threaded,
+                    },
+                    DriverKind::Sim => Driver::Sim,
+                    DriverKind::Threaded => Driver::Threaded,
+                    DriverKind::Distributed => Driver::Distributed {
+                        transport: DistTransport::Loopback {
+                            procs: cfg.wire.workers,
+                        },
+                    },
+                },
+                None => Driver::Sim,
+            },
+        };
+        let is_tcp = matches!(
+            &driver,
+            Driver::Distributed {
+                transport: DistTransport::Tcp { .. }
+            }
+        );
+
+        // -- problem preparation (config source only, on demand) --------
+        let mut owned_prep: Option<Prepared> = None;
+        if self.prep.is_none() {
+            if let Some(cfg) = self.cfg {
+                let need = self.spec.is_none()
+                    || self.sm.is_none()
+                    || (self.engines.is_none() && self.factory.is_none())
+                    || is_tcp;
+                if need {
+                    let need_global = match &self.spec {
+                        Some(s) => s.name == "diana++",
+                        None => cfg.methods.iter().any(|m| m == "diana++"),
+                    };
+                    owned_prep = Some(runner::prepare_with(cfg, need_global)?);
+                }
+            }
+        }
+        let prep: Option<&Prepared> = self.prep.or(owned_prep.as_ref());
+
+        // -- method spec ------------------------------------------------
+        let spec: MethodSpec = match self.spec.take() {
+            Some(s) => s,
+            None => {
+                let cfg = self.cfg.context(
+                    "Session needs a MethodSpec (Session::new / .method) or an \
+                     ExperimentConfig (Session::from_config)",
+                )?;
+                ensure!(
+                    cfg.methods.len() == 1,
+                    "Session::from_config drives exactly one method; got {:?} \
+                     (override with .method(..) or trim cfg.methods)",
+                    cfg.methods
+                );
+                let prep = prep.expect("prepared above when no spec is given");
+                let mut s =
+                    MethodSpec::new(&cfg.methods[0], cfg.tau, cfg.sampling, cfg.mu, prep.x0(cfg));
+                s.practical_adiana = cfg.practical_adiana;
+                s
+            }
+        };
+
+        // -- smoothness + residual reference ----------------------------
+        let sm: &Smoothness = match self.sm {
+            Some(s) => s,
+            None => {
+                &prep
+                    .context("Session needs .smoothness(..) or a prepared problem")?
+                    .sm
+            }
+        };
+        let zeros: Vec<f64>;
+        let x_star: &[f64] = match self.x_star {
+            Some(x) => x,
+            None => match prep {
+                Some(p) => &p.x_star,
+                None => {
+                    zeros = vec![0.0; sm.dim];
+                    &zeros
+                }
+            },
+        };
+
+        // -- run policy -------------------------------------------------
+        let mut run_cfg = match self.run_cfg.take() {
+            Some(rc) => rc,
+            None => match self.cfg {
+                Some(cfg) => runner::run_config(cfg),
+                None => RunConfig::default(),
+            },
+        };
+        if let Some(k) = self.checkpoint_every {
+            run_cfg.checkpoint_every = k;
+        }
+
+        // -- engines ----------------------------------------------------
+        // Resolved lazily per driver: an explicit factory wins; otherwise
+        // a prepared problem supplies engines per the config's engine
+        // kind (native when config-less).
+        let engine_kind = self.cfg.map(|c| c.engine).unwrap_or(EngineKind::Native);
+
+        // -- dispatch ---------------------------------------------------
+        let mut observers = std::mem::take(&mut self.observers);
+        let mut collector = CollectObserver::for_cfg(&run_cfg);
+        let outcome: RunOutcome = {
+            let mut fan = Fanout {
+                collect: &mut collector,
+                rest: &mut observers[..],
+            };
+            match driver {
+                Driver::Sim => {
+                    let mut method = build(&spec, sm)?;
+                    let n = method.workers.len();
+                    let mut engines = match (self.engines.take(), &self.factory, prep) {
+                        (Some(e), _, _) => e,
+                        (None, Some(f), _) => (0..n).map(|i| f(i)).collect(),
+                        // native engines straight off the borrowed shards —
+                        // no factory (and no shard clone) on the sweep path
+                        (None, None, Some(p)) => match engine_kind {
+                            EngineKind::Native => p.native_engines(spec.mu),
+                            EngineKind::Pjrt => {
+                                let f = p.engine_factory(EngineKind::Pjrt, spec.mu)?;
+                                (0..n).map(|i| f(i)).collect()
+                            }
+                        },
+                        (None, None, None) => bail!(
+                            "Driver::Sim needs .engines(..), .engine_factory(..), \
+                             or a prepared problem"
+                        ),
+                    };
+                    ensure!(
+                        engines.len() == method.workers.len(),
+                        "engine count {} != worker count {}",
+                        engines.len(),
+                        method.workers.len()
+                    );
+                    run_sim_observed(&mut method, &mut engines, x_star, &run_cfg, &mut fan)
+                }
+                Driver::Threaded => {
+                    ensure!(
+                        self.engines.is_none(),
+                        "Driver::Threaded builds engines inside its worker threads; \
+                         pass .engine_factory(..) instead of .engines(..)"
+                    );
+                    let method = build(&spec, sm)?;
+                    let factory = match self.factory.clone() {
+                        Some(f) => f,
+                        None => prep
+                            .context(
+                                "Driver::Threaded needs .engine_factory(..) or a \
+                                 prepared problem",
+                            )?
+                            .engine_factory(engine_kind, spec.mu)?,
+                    };
+                    run_threaded_observed(method, factory, x_star, &run_cfg, &mut fan)
+                }
+                Driver::Distributed {
+                    transport: DistTransport::Loopback { procs },
+                } => {
+                    ensure!(
+                        self.engines.is_none(),
+                        "the distributed driver builds engines inside its workers; \
+                         pass .engine_factory(..) instead of .engines(..)"
+                    );
+                    let method = build(&spec, sm)?;
+                    let factory = match self.factory.clone() {
+                        Some(f) => f,
+                        None => prep
+                            .context(
+                                "the loopback-distributed driver needs \
+                                 .engine_factory(..) or a prepared problem",
+                            )?
+                            .engine_factory(engine_kind, spec.mu)?,
+                    };
+                    crate::wire::runtime::run_distributed_loopback_observed(
+                        method, factory, x_star, &run_cfg, procs, &mut fan,
+                    )?
+                }
+                Driver::Distributed {
+                    transport: DistTransport::Tcp { listen, workers },
+                } => {
+                    let cfg = self.cfg.context(
+                        "the TCP transport needs Session::from_config (the worker \
+                         handshake ships the dataset recipe)",
+                    )?;
+                    ensure!(
+                        cfg.engine == EngineKind::Native,
+                        "the TCP driver supports the native engine only"
+                    );
+                    ensure!(
+                        self.engines.is_none() && self.factory.is_none(),
+                        "the TCP driver builds engines in its worker processes; \
+                         drop .engines()/.engine_factory()"
+                    );
+                    let prep = prep.expect("prepared above for the TCP transport");
+                    let mut wire_cfg = cfg.clone();
+                    wire_cfg.wire.listen = listen;
+                    wire_cfg.wire.workers = workers;
+                    let listener = match self.listener.take() {
+                        Some(l) => l,
+                        None => TcpListener::bind(&wire_cfg.wire.listen)
+                            .with_context(|| format!("binding {}", wire_cfg.wire.listen))?,
+                    };
+                    crate::wire::runtime::serve_observed(
+                        listener, &wire_cfg, &spec, prep, &run_cfg, &mut fan,
+                    )?
+                }
+            }
+        };
+
+        let result = outcome.into_result(collector.into_records());
+        for obs in observers.iter_mut() {
+            obs.on_done(&result);
+        }
+        Ok(result)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn driver_kind_parses() {
+        for k in [
+            DriverKind::Auto,
+            DriverKind::Sim,
+            DriverKind::Threaded,
+            DriverKind::Distributed,
+        ] {
+            assert_eq!(DriverKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(DriverKind::parse("gpu"), None);
+    }
+
+    #[test]
+    fn checkpoint_file_roundtrip_bit_exact() {
+        let path = std::env::temp_dir().join("smx_session_ckpt_test.ckpt");
+        let x = vec![1.5, -0.0, 3.5e-310, f64::MAX];
+        write_checkpoint(&path, 40, &x).unwrap();
+        let (round, got) = load_checkpoint(&path).unwrap();
+        assert_eq!(round, 40);
+        let bits = |v: &[f64]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&x), bits(&got));
+        // corrupting the magic is rejected
+        let mut raw = std::fs::read(&path).unwrap();
+        raw[0] ^= 0xFF;
+        std::fs::write(&path, &raw).unwrap();
+        assert!(load_checkpoint(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

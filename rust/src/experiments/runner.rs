@@ -2,16 +2,17 @@
 //! construction and execution, CSV output.
 
 use crate::config::ExperimentConfig;
-use crate::coordinator::{run_sim, run_threaded, EngineFactory, RunConfig, RunResult};
+use crate::coordinator::{DriverKind, EngineFactory, RunConfig, RunResult, Session};
 use crate::data::{self, Dataset, Shard};
-use crate::methods::{build, solve, MethodSpec};
+use crate::methods::{solve, MethodSpec};
 use crate::objective::{Problem, Smoothness};
+use crate::runtime::artifact::Manifest;
 use crate::runtime::native::NativeEngine;
 use crate::runtime::{EngineKind, GradEngine};
 use crate::sampling::SamplingKind;
 use crate::util::rng::Rng;
 use anyhow::{Context, Result};
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
 /// A fully prepared problem instance, reused across methods of one figure.
 pub struct Prepared {
@@ -21,6 +22,9 @@ pub struct Prepared {
     pub problem: Problem,
     pub x_star: Vec<f64>,
     pub f_star: f64,
+    /// lazily loaded PJRT artifact manifest, cached for the whole sweep
+    /// (it used to be re-parsed from disk inside every cell)
+    manifest: OnceLock<Arc<Manifest>>,
 }
 
 pub fn prepare(cfg: &ExperimentConfig) -> Result<Prepared> {
@@ -57,6 +61,7 @@ pub fn prepare_with(cfg: &ExperimentConfig, need_global: bool) -> Result<Prepare
         problem,
         x_star: sol.x_star,
         f_star: sol.f_star,
+        manifest: OnceLock::new(),
     })
 }
 
@@ -81,6 +86,42 @@ impl Prepared {
             .map(|s| Box::new(NativeEngine::from_shard(s, mu)) as Box<dyn GradEngine>)
             .collect()
     }
+
+    /// The PJRT artifact manifest, loaded from disk once per `Prepared`
+    /// and shared by every sweep cell thereafter.
+    pub fn pjrt_manifest(&self) -> Result<Arc<Manifest>> {
+        if let Some(m) = self.manifest.get() {
+            return Ok(m.clone());
+        }
+        let loaded = Arc::new(Manifest::load(&crate::runtime::artifact::default_dir())?);
+        // a concurrent cell may have won the race; either value is the
+        // same on-disk manifest
+        Ok(self.manifest.get_or_init(|| loaded).clone())
+    }
+
+    /// Engine factory for the given engine kind — what
+    /// [`Session`](crate::coordinator::Session) installs when a prepared
+    /// problem is supplied without explicit engines.
+    pub fn engine_factory(&self, engine: EngineKind, mu: f64) -> Result<EngineFactory> {
+        match engine {
+            EngineKind::Native => {
+                let shards = self.shards.clone();
+                Ok(Arc::new(move |i| {
+                    Box::new(NativeEngine::from_shard(&shards[i], mu)) as Box<dyn GradEngine>
+                }))
+            }
+            EngineKind::Pjrt => {
+                let manifest = self.pjrt_manifest()?;
+                let shards = self.shards.clone();
+                Ok(Arc::new(move |i| {
+                    Box::new(
+                        crate::runtime::pjrt::PjrtEngine::from_shard(&manifest, &shards[i], mu)
+                            .expect("building PJRT engine"),
+                    ) as Box<dyn GradEngine>
+                }))
+            }
+        }
+    }
 }
 
 /// Run one method on a prepared problem. `sampling`/`tau` override the
@@ -97,10 +138,9 @@ pub fn run_one(
 
 /// Translate an experiment config into a coordinator [`RunConfig`].
 ///
-/// `float_bits` is *derived from the configured wire payload* (f64→64,
-/// f32→32, qb→b), with `wire.float_bits` / `--float-bits` as an explicit
-/// override — so Appendix C.5's 32-bit accounting is one config key away
-/// instead of a hardcoded 64.
+/// `float_bits` comes from
+/// [`WireConfig::effective_float_bits`](crate::config::WireConfig::effective_float_bits)
+/// — the single home of the payload→bits derivation rules.
 pub fn run_config(cfg: &ExperimentConfig) -> RunConfig {
     RunConfig {
         max_rounds: cfg.max_rounds,
@@ -110,13 +150,16 @@ pub fn run_config(cfg: &ExperimentConfig) -> RunConfig {
         float_bits: cfg.wire.effective_float_bits(),
         payload: cfg.wire.payload,
         pin: cfg.pin,
+        checkpoint_every: cfg.checkpoint_every,
     }
 }
 
 /// [`run_one`] with an explicit coordinator seed — for sweeps that want
 /// distinct streams per cell (e.g. seed-replicate grids via
 /// [`pool::cell_seed`](crate::experiments::pool::cell_seed)); the figure
-/// sweeps keep `cfg.seed` for every cell.
+/// sweeps keep `cfg.seed` for every cell. One [`Session`] per cell: the
+/// driver comes from `cfg.driver` (auto → sim for native, threaded for
+/// PJRT), the engines from the prepared problem per `cfg.engine`.
 pub fn run_one_seeded(
     prep: &Prepared,
     cfg: &ExperimentConfig,
@@ -127,32 +170,15 @@ pub fn run_one_seeded(
 ) -> Result<RunResult> {
     let mut spec = MethodSpec::new(method_name, tau, sampling, cfg.mu, prep.x0(cfg));
     spec.practical_adiana = cfg.practical_adiana;
-    let mut method = build(&spec, &prep.sm)?;
     let run_cfg = RunConfig {
         seed,
         ..run_config(cfg)
     };
-    let result = match cfg.engine {
-        EngineKind::Native => {
-            let mut engines = prep.native_engines(cfg.mu);
-            run_sim(&mut method, &mut engines, &prep.x_star, &run_cfg)
-        }
-        EngineKind::Pjrt => {
-            let manifest = Arc::new(crate::runtime::artifact::Manifest::load(
-                &crate::runtime::artifact::default_dir(),
-            )?);
-            let shards = prep.shards.clone();
-            let mu = cfg.mu;
-            let factory: EngineFactory = Arc::new(move |i| {
-                Box::new(
-                    crate::runtime::pjrt::PjrtEngine::from_shard(&manifest, &shards[i], mu)
-                        .expect("building PJRT engine"),
-                ) as Box<dyn GradEngine>
-            });
-            run_threaded(method, factory, &prep.x_star, &run_cfg)
-        }
-    };
-    Ok(result)
+    Session::from_config(cfg)
+        .prepared(prep)
+        .method(spec)
+        .run_config(run_cfg)
+        .run()
 }
 
 /// A labeled variant in a figure sweep.
@@ -180,11 +206,12 @@ pub fn run_variants(
     variants: &[Variant],
     out_name: &str,
 ) -> Result<Vec<(String, RunResult)>> {
-    // The PJRT engine path is already threaded internally (one OS thread
-    // per worker); keep cells sequential there.
-    let jobs = match cfg.engine {
-        EngineKind::Native => cfg.effective_jobs(),
-        EngineKind::Pjrt => 1,
+    // Threaded/distributed cells spawn one OS thread per worker (the
+    // PJRT engine path always does); keep such cells sequential so the
+    // sweep does not oversubscribe the machine.
+    let jobs = match (cfg.engine, cfg.driver) {
+        (EngineKind::Native, DriverKind::Auto | DriverKind::Sim) => cfg.effective_jobs(),
+        _ => 1,
     };
     crate::info!(
         "runner",
@@ -276,6 +303,31 @@ mod tests {
         // explicit override wins over the payload width
         cfg.wire.float_bits = Some(32);
         assert_eq!(run_config(&cfg).float_bits, 32);
+        // checkpoint cadence flows through
+        cfg.checkpoint_every = 7;
+        assert_eq!(run_config(&cfg).checkpoint_every, 7);
+    }
+
+    #[test]
+    fn driver_distributed_matches_sim_through_run_one() {
+        // `--driver distributed` sends every sweep cell through the full
+        // wire codec over loopback; under the f64 payload the result must
+        // stay bitwise identical to the sim driver.
+        let mut cfg = tiny_cfg();
+        cfg.target_residual = 0.0;
+        cfg.max_rounds = 25;
+        let prep = prepare(&cfg).unwrap();
+        let r_sim = run_one(&prep, &cfg, "diana+", SamplingKind::Uniform, 2.0).unwrap();
+
+        cfg.driver = DriverKind::Distributed;
+        cfg.wire.workers = 2;
+        let r_dist = run_one(&prep, &cfg, "diana+", SamplingKind::Uniform, 2.0).unwrap();
+        let bits = |xs: &[f64]| xs.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&r_sim.final_x), bits(&r_dist.final_x));
+        assert_eq!(
+            r_sim.records.last().unwrap().coords_up,
+            r_dist.records.last().unwrap().coords_up
+        );
     }
 
     #[test]

@@ -14,6 +14,11 @@
 //! computation executes AOT-compiled JAX/Pallas artifacts through the
 //! PJRT CPU client.
 //!
+//! Every run — any method × driver (sim / threaded / distributed) ×
+//! payload — is composed through the [`coordinator::Session`] builder,
+//! which also hosts the streaming-metrics observer seam and
+//! checkpoint/resume; see [`coordinator::session`].
+//!
 //! See `DESIGN.md` for the system inventory and the experiment index, and
 //! `EXPERIMENTS.md` for paper-vs-measured results.
 

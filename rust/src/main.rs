@@ -12,9 +12,13 @@
 //!
 //! Common flags: --dataset --workers --tau --methods --sampling
 //! --max-rounds --target-residual --seed --engine native|pjrt
+//! --driver auto|sim|threaded|distributed --checkpoint-every N
 //! --config file.json --out-dir results/ --data-dir data/
 //! Wire flags:  --payload f64|f32|q16|q8|q4 --listen HOST:PORT
 //! --wire-workers N --float-bits N
+//!
+//! Every run goes through the `coordinator::Session` front door, so each
+//! method × driver × payload combination is reachable from this CLI.
 
 #![allow(clippy::uninlined_format_args)]
 
@@ -37,11 +41,18 @@ flags: --workers N --mu F --max-rounds N --target-residual F --seed N
        --engine native|pjrt --config FILE --out-dir DIR --data-dir DIR
        --record-every N --start-near-opt --jobs N (0 = all cores)
        --pin (pin threaded-driver workers to cores)
+       --driver auto|sim|threaded|distributed (execution regime; auto =
+       sim for native, threaded for pjrt; distributed = wire protocol
+       over loopback with --wire-workers threads)
+       --checkpoint-every N (observer checkpoints every N rounds; under
+       serve also snapshots worker state + truncates the replay journal)
 wire:  --payload f64|f32|q16|q8|q4 --listen HOST:PORT --wire-workers N
        (0 = one process per shard) --float-bits N (modeled-bit override)
        --worker-timeout SECS (fault-tolerance grace window; 0 = fail fast)
        --pin-core N (pin this worker process) --die-after K (chaos: drop
-       the connection after the K-th downlink, like a SIGKILL)";
+       the connection after the K-th downlink, like a SIGKILL)
+       --expect-restore (chaos: worker fails unless it was resumed from a
+       checkpoint snapshot)";
 
 fn main() {
     smx::util::log::init_from_env();
@@ -181,6 +192,7 @@ fn run() -> Result<()> {
                             .map_err(|_| anyhow::anyhow!("--pin-core expects a core index"))
                     })
                     .transpose()?,
+                expect_restore: args.bool_or("expect-restore", false),
             };
             smx::wire::worker_connect_with(addr, opts)?;
         }

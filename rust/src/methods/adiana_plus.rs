@@ -109,6 +109,15 @@ impl WorkerAlgo for AccelWorker {
     fn dim(&self) -> usize {
         self.h.len()
     }
+
+    fn save_state(&self, out: &mut Vec<u8>) {
+        crate::methods::state::put_vec(out, &self.h);
+    }
+
+    fn load_state(&mut self, buf: &[u8]) -> bool {
+        let mut pos = 0;
+        crate::methods::state::get_vec(buf, &mut pos, &mut self.h) && pos == buf.len()
+    }
 }
 
 pub struct AccelServer {

@@ -100,6 +100,20 @@ impl WorkerAlgo for DianaPpWorker {
     fn dim(&self) -> usize {
         self.x.len()
     }
+
+    fn save_state(&self, out: &mut Vec<u8>) {
+        crate::methods::state::put_vec(out, &self.x);
+        crate::methods::state::put_vec(out, &self.hh);
+        crate::methods::state::put_vec(out, &self.h);
+    }
+
+    fn load_state(&mut self, buf: &[u8]) -> bool {
+        let mut pos = 0;
+        crate::methods::state::get_vec(buf, &mut pos, &mut self.x)
+            && crate::methods::state::get_vec(buf, &mut pos, &mut self.hh)
+            && crate::methods::state::get_vec(buf, &mut pos, &mut self.h)
+            && pos == buf.len()
+    }
 }
 
 pub struct DianaPpServer {

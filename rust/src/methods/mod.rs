@@ -103,6 +103,60 @@ pub trait WorkerAlgo {
     }
 
     fn dim(&self) -> usize;
+
+    /// Append the *round-evolving* local state (DIANA shifts, DIANA++'s
+    /// model/control replicas, …) to `out`. Static configuration — roots,
+    /// sampling tables, stepsizes — is rebuilt deterministically from the
+    /// [`MethodSpec`], so it does not belong in the snapshot. Stateless
+    /// workers (DGD, DCGD, DCGD+) write nothing, which the default
+    /// provides. Paired with [`WorkerAlgo::load_state`]; the wire
+    /// runtime's checkpoint snapshots are built from exactly these bytes
+    /// (see [`crate::wire::runtime`]).
+    fn save_state(&self, _out: &mut Vec<u8>) {}
+
+    /// Restore the state written by [`WorkerAlgo::save_state`]. Returns
+    /// `false` on a malformed or wrong-shape buffer (the caller treats
+    /// that as a protocol error). The default accepts only the empty
+    /// buffer a stateless worker saves.
+    fn load_state(&mut self, buf: &[u8]) -> bool {
+        buf.is_empty()
+    }
+}
+
+/// Length-prefixed `f64`-vector (de)serialization for
+/// [`WorkerAlgo::save_state`]/[`WorkerAlgo::load_state`] implementations:
+/// values travel as raw little-endian bits, so a save/load round trip is
+/// bit-exact — the precondition for checkpoint-resume equalling an
+/// uninterrupted run.
+pub mod state {
+    /// Append `v` as a little-endian `u32` length plus raw f64 bits.
+    pub fn put_vec(out: &mut Vec<u8>, v: &[f64]) {
+        out.extend_from_slice(&(v.len() as u32).to_le_bytes());
+        for &x in v {
+            out.extend_from_slice(&x.to_bits().to_le_bytes());
+        }
+    }
+
+    /// Read a vector written by [`put_vec`] into `v`, which must already
+    /// have the expected length (state shapes are fixed at build time).
+    /// Advances `pos`; returns `false` on truncation or length mismatch.
+    pub fn get_vec(buf: &[u8], pos: &mut usize, v: &mut [f64]) -> bool {
+        let Some(hdr) = buf.get(*pos..*pos + 4) else {
+            return false;
+        };
+        let n = u32::from_le_bytes(hdr.try_into().unwrap()) as usize;
+        if n != v.len() {
+            return false;
+        }
+        let Some(body) = buf.get(*pos + 4..*pos + 4 + 8 * n) else {
+            return false;
+        };
+        for (x, c) in v.iter_mut().zip(body.chunks_exact(8)) {
+            *x = f64::from_bits(u64::from_le_bytes(c.try_into().unwrap()));
+        }
+        *pos += 4 + 8 * n;
+        true
+    }
 }
 
 /// Server-side half of a method.
@@ -267,4 +321,71 @@ pub fn sync_round(
     }
     method.server.apply(ups, server_rng);
     (up_coords, down_coords)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn state_vec_roundtrip_is_bit_exact_and_shape_checked() {
+        let src = [1.5f64, -0.0, 3.7e-310, f64::INFINITY, -2.25];
+        let mut buf = Vec::new();
+        state::put_vec(&mut buf, &src);
+        let mut dst = [0.0f64; 5];
+        let mut pos = 0;
+        assert!(state::get_vec(&buf, &mut pos, &mut dst));
+        assert_eq!(pos, buf.len());
+        for (a, b) in src.iter().zip(&dst) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // wrong shape and truncation are rejected, not silently accepted
+        let mut wrong = [0.0f64; 4];
+        pos = 0;
+        assert!(!state::get_vec(&buf, &mut pos, &mut wrong));
+        pos = 0;
+        assert!(!state::get_vec(&buf[..buf.len() - 1], &mut pos, &mut dst));
+    }
+
+    #[test]
+    fn stateful_workers_save_load_roundtrip() {
+        // Drive a diana+ worker a few rounds, snapshot it, drive a clone
+        // forward: the restored worker must follow bit-for-bit. (The
+        // distributed chaos tests cover the full wire path; this is the
+        // unit-level contract.)
+        use crate::data::synth;
+        use crate::objective::Smoothness;
+        use crate::runtime::native::NativeEngine;
+        use crate::sampling::SamplingKind;
+        use crate::util::rng::Rng;
+
+        let ds = synth::generate(&synth::tiny_spec(), 5);
+        let (_, shards) = ds.prepare(2, 5);
+        let sm = Smoothness::build(&shards, 1e-3);
+        let spec = MethodSpec::new("diana+", 2.0, SamplingKind::Uniform, 1e-3, vec![0.0; sm.dim]);
+        let mut m = build(&spec, &sm).unwrap();
+        let mut m2 = build(&spec, &sm).unwrap();
+        let mut engine = NativeEngine::from_shard(&shards[0], 1e-3);
+        let mut rng = Rng::new(9);
+        let down = Downlink::Dense {
+            x: vec![0.01; sm.dim],
+            w: None,
+        };
+        let w = &mut m.workers[0];
+        for _ in 0..5 {
+            w.round(&down, &mut engine, &mut rng);
+        }
+        let mut blob = Vec::new();
+        w.save_state(&mut blob);
+        assert!(!blob.is_empty(), "diana+ worker state must not be empty");
+
+        let w2 = &mut m2.workers[0];
+        assert!(w2.load_state(&blob), "snapshot must load into a fresh build");
+        let mut rng2 = rng.clone();
+        let up_a = w.round(&down, &mut engine, &mut rng);
+        let up_b = w2.round(&down, &mut engine, &mut rng2);
+        assert_eq!(up_a.delta, up_b.delta, "restored worker diverged");
+        // malformed blobs are rejected
+        assert!(!w2.load_state(&blob[..blob.len() - 1]));
+    }
 }

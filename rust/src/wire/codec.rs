@@ -49,6 +49,21 @@ pub const TAG_REPLAY: u8 = 7;
 /// Server → worker: adopt orphaned shards (listed in the body), then a
 /// replay block for *those shards only* follows, last frame live.
 pub const TAG_ADOPT: u8 = 8;
+/// Server → worker: "serialize the evolving state of every shard you
+/// host, as of the round named in the body, and send one
+/// [`TAG_SNAP_STATE`] frame per shard". Sent on the `checkpoint_every`
+/// cadence; feeds the journal-truncating snapshot.
+pub const TAG_SNAP_REQ: u8 = 9;
+/// Worker → server: one shard's checkpoint blob (RNG state + the
+/// [`WorkerAlgo::save_state`](crate::methods::WorkerAlgo::save_state)
+/// bytes). Protocol overhead, excluded from the byte accounting like
+/// heartbeats.
+pub const TAG_SNAP_STATE: u8 = 10;
+/// Server → worker: restore the listed shards from snapshot blobs before
+/// replaying. Follows a `TAG_REPLAY`/`TAG_ADOPT` announcement whose
+/// restore flag is set; the replay then covers only the journaled rounds
+/// *after* the snapshot.
+pub const TAG_RESTORE: u8 = 11;
 
 const IDX_SORTED_GAP: u8 = 0;
 const IDX_RAW: u8 = 1;
@@ -672,40 +687,55 @@ pub fn downlink_frame_len(down: &Downlink, payload: Payload) -> usize {
 
 // ---- fault-tolerance frames -------------------------------------------
 
-/// Serialize a replay announcement: the next `count` frames are journaled
-/// downlink bodies (replay silently, answer only the last).
-pub fn put_replay(out: &mut Vec<u8>, count: usize) {
-    out.push(TAG_REPLAY);
-    put_varint(out, count as u64);
+fn get_flag(buf: &[u8], pos: &mut usize, what: &str) -> Result<bool> {
+    match take1(buf, pos)? {
+        0 => Ok(false),
+        1 => Ok(true),
+        other => Err(WireError::new(format!("bad {what} flag {other}"))),
+    }
 }
 
-/// Decode a replay announcement → journaled-frame count.
-pub fn get_replay(body: &[u8]) -> Result<usize> {
+/// Serialize a replay announcement: the next `count` frames are journaled
+/// downlink bodies (replay silently, answer only the last). With
+/// `restore`, a [`TAG_RESTORE`] frame carrying snapshot blobs precedes
+/// them — the journal was truncated at the snapshot round, so the replay
+/// covers only the rounds after it.
+pub fn put_replay(out: &mut Vec<u8>, count: usize, restore: bool) {
+    out.push(TAG_REPLAY);
+    put_varint(out, count as u64);
+    out.push(restore as u8);
+}
+
+/// Decode a replay announcement → (journaled-frame count, restore flag).
+pub fn get_replay(body: &[u8]) -> Result<(usize, bool)> {
     let mut pos = 0usize;
     if take1(body, &mut pos)? != TAG_REPLAY {
         return Err(WireError::new("expected replay frame"));
     }
     let count = get_varint(body, &mut pos)? as usize;
+    let restore = get_flag(body, &mut pos, "replay restore")?;
     if pos != body.len() {
         return Err(WireError::new("trailing bytes in replay frame"));
     }
-    Ok(count)
+    Ok((count, restore))
 }
 
 /// Serialize a shard-adoption order: `shards` move to this worker, and
 /// `replay_count` journaled downlink frames follow (for those shards
-/// only; the last one is live).
-pub fn put_adopt(out: &mut Vec<u8>, shards: &[usize], replay_count: usize) {
+/// only; the last one is live). `restore` as in [`put_replay`].
+pub fn put_adopt(out: &mut Vec<u8>, shards: &[usize], replay_count: usize, restore: bool) {
     out.push(TAG_ADOPT);
     put_varint(out, shards.len() as u64);
     for &s in shards {
         put_varint(out, s as u64);
     }
     put_varint(out, replay_count as u64);
+    out.push(restore as u8);
 }
 
-/// Decode a shard-adoption order → (adopted shard indices, replay count).
-pub fn get_adopt(body: &[u8]) -> Result<(Vec<usize>, usize)> {
+/// Decode a shard-adoption order → (adopted shard indices, replay count,
+/// restore flag).
+pub fn get_adopt(body: &[u8]) -> Result<(Vec<usize>, usize, bool)> {
     let mut pos = 0usize;
     if take1(body, &mut pos)? != TAG_ADOPT {
         return Err(WireError::new("expected adopt frame"));
@@ -720,10 +750,95 @@ pub fn get_adopt(body: &[u8]) -> Result<(Vec<usize>, usize)> {
         shards.push(get_varint(body, &mut pos)? as usize);
     }
     let count = get_varint(body, &mut pos)? as usize;
+    let restore = get_flag(body, &mut pos, "adopt restore")?;
     if pos != body.len() {
         return Err(WireError::new("trailing bytes in adopt frame"));
     }
-    Ok((shards, count))
+    Ok((shards, count, restore))
+}
+
+// ---- checkpoint-snapshot frames ---------------------------------------
+
+/// Serialize a snapshot request: every hosted shard's state as of the end
+/// of `round`.
+pub fn put_snap_req(out: &mut Vec<u8>, round: usize) {
+    out.push(TAG_SNAP_REQ);
+    put_varint(out, round as u64);
+}
+
+/// Decode a snapshot request → round.
+pub fn get_snap_req(body: &[u8]) -> Result<usize> {
+    let mut pos = 0usize;
+    if take1(body, &mut pos)? != TAG_SNAP_REQ {
+        return Err(WireError::new("expected snapshot-request frame"));
+    }
+    let round = get_varint(body, &mut pos)? as usize;
+    if pos != body.len() {
+        return Err(WireError::new("trailing bytes in snapshot-request frame"));
+    }
+    Ok(round)
+}
+
+/// Serialize one shard's snapshot blob for `round`.
+pub fn put_snap_state(out: &mut Vec<u8>, shard: usize, round: usize, blob: &[u8]) {
+    out.push(TAG_SNAP_STATE);
+    put_varint(out, shard as u64);
+    put_varint(out, round as u64);
+    put_varint(out, blob.len() as u64);
+    out.extend_from_slice(blob);
+}
+
+/// Decode a snapshot-state frame → (shard, round, blob).
+pub fn get_snap_state(body: &[u8]) -> Result<(usize, usize, &[u8])> {
+    let mut pos = 0usize;
+    if take1(body, &mut pos)? != TAG_SNAP_STATE {
+        return Err(WireError::new("expected snapshot-state frame"));
+    }
+    let shard = get_varint(body, &mut pos)? as usize;
+    let round = get_varint(body, &mut pos)? as usize;
+    let len = get_varint(body, &mut pos)? as usize;
+    let blob = take(body, &mut pos, len)?;
+    if pos != body.len() {
+        return Err(WireError::new("trailing bytes in snapshot-state frame"));
+    }
+    Ok((shard, round, blob))
+}
+
+/// Serialize a restore order: load each `(shard, blob)` pair — state as
+/// of the end of `round` — before replaying the post-snapshot journal.
+pub fn put_restore(out: &mut Vec<u8>, round: usize, blobs: &[(usize, &[u8])]) {
+    out.push(TAG_RESTORE);
+    put_varint(out, round as u64);
+    put_varint(out, blobs.len() as u64);
+    for (shard, blob) in blobs {
+        put_varint(out, *shard as u64);
+        put_varint(out, blob.len() as u64);
+        out.extend_from_slice(blob);
+    }
+}
+
+/// Decode a restore order → (snapshot round, per-shard blobs).
+pub fn get_restore(body: &[u8]) -> Result<(usize, Vec<(usize, Vec<u8>)>)> {
+    let mut pos = 0usize;
+    if take1(body, &mut pos)? != TAG_RESTORE {
+        return Err(WireError::new("expected restore frame"));
+    }
+    let round = get_varint(body, &mut pos)? as usize;
+    let k = get_varint(body, &mut pos)? as usize;
+    // every entry costs ≥ 2 bytes (shard varint + length varint)
+    if k > (body.len() - pos) / 2 {
+        return Err(WireError::new("restore shard count exceeds frame"));
+    }
+    let mut blobs = Vec::with_capacity(k);
+    for _ in 0..k {
+        let shard = get_varint(body, &mut pos)? as usize;
+        let len = get_varint(body, &mut pos)? as usize;
+        blobs.push((shard, take(body, &mut pos, len)?.to_vec()));
+    }
+    if pos != body.len() {
+        return Err(WireError::new("trailing bytes in restore frame"));
+    }
+    Ok((round, blobs))
 }
 
 // ---- handshake ---------------------------------------------------------
@@ -1072,30 +1187,72 @@ mod tests {
     #[test]
     fn replay_and_adopt_roundtrip_and_reject_malformed() {
         let mut body = Vec::new();
-        put_replay(&mut body, 12345);
-        assert_eq!(get_replay(&body).unwrap(), 12345);
+        put_replay(&mut body, 12345, true);
+        assert_eq!(get_replay(&body).unwrap(), (12345, true));
         for cut in 0..body.len() {
             assert!(get_replay(&body[..cut]).is_err(), "cut={cut}");
         }
         let mut extra = body.clone();
         extra.push(0);
         assert!(get_replay(&extra).is_err());
+        // non-boolean restore flag is rejected
+        let mut bad = body.clone();
+        *bad.last_mut().unwrap() = 2;
+        assert!(get_replay(&bad).is_err());
 
         let mut body = Vec::new();
-        put_adopt(&mut body, &[3, 0, 1000], 77);
-        let (shards, count) = get_adopt(&body).unwrap();
+        put_adopt(&mut body, &[3, 0, 1000], 77, false);
+        let (shards, count, restore) = get_adopt(&body).unwrap();
         assert_eq!(shards, vec![3, 0, 1000]);
         assert_eq!(count, 77);
+        assert!(!restore);
         for cut in 0..body.len() {
             assert!(get_adopt(&body[..cut]).is_err(), "cut={cut}");
         }
         // empty adoption is representable (degenerate but well-formed)
         body.clear();
-        put_adopt(&mut body, &[], 0);
-        assert_eq!(get_adopt(&body).unwrap(), (Vec::new(), 0));
+        put_adopt(&mut body, &[], 0, true);
+        assert_eq!(get_adopt(&body).unwrap(), (Vec::new(), 0, true));
         // wrong tags cross-reject
         assert!(get_replay(&body).is_err());
-        assert!(get_adopt(&[TAG_REPLAY, 1]).is_err());
+        assert!(get_adopt(&[TAG_REPLAY, 1, 0]).is_err());
+    }
+
+    #[test]
+    fn snapshot_frames_roundtrip_and_reject_malformed() {
+        let mut body = Vec::new();
+        put_snap_req(&mut body, 4096);
+        assert_eq!(get_snap_req(&body).unwrap(), 4096);
+        for cut in 0..body.len() {
+            assert!(get_snap_req(&body[..cut]).is_err(), "cut={cut}");
+        }
+
+        let blob: Vec<u8> = (0..200u8).collect();
+        body.clear();
+        put_snap_state(&mut body, 5, 4096, &blob);
+        let (shard, round, got) = get_snap_state(&body).unwrap();
+        assert_eq!((shard, round), (5, 4096));
+        assert_eq!(got, &blob[..]);
+        for cut in 0..body.len() {
+            assert!(get_snap_state(&body[..cut]).is_err(), "cut={cut}");
+        }
+
+        let b0: &[u8] = &[1, 2, 3];
+        let b1: &[u8] = &[];
+        body.clear();
+        put_restore(&mut body, 30, &[(0, b0), (7, b1)]);
+        let (round, blobs) = get_restore(&body).unwrap();
+        assert_eq!(round, 30);
+        assert_eq!(blobs, vec![(0usize, b0.to_vec()), (7usize, Vec::new())]);
+        for cut in 0..body.len() {
+            assert!(get_restore(&body[..cut]).is_err(), "cut={cut}");
+        }
+        let mut extra = body.clone();
+        extra.push(9);
+        assert!(get_restore(&extra).is_err());
+        // cross-tag rejection
+        assert!(get_restore(&[TAG_SNAP_REQ, 1]).is_err());
+        assert!(get_snap_req(&[TAG_RESTORE, 1, 0]).is_err());
     }
 
     #[test]

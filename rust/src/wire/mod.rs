@@ -30,13 +30,22 @@
 //!   nonblocking frame reassembly; a minimal readiness shim over
 //!   epoll/kqueue with a portable short-deadline-polling fallback; and
 //!   the coordinator runtimes on top: the fixed-membership
-//!   [`run_distributed`] (loopback tests/benches) and the **elastic,
-//!   fault-tolerant multiplexed server** behind `smx serve` — worker
-//!   heartbeats, a per-round replay journal, deterministic rejoin, and
-//!   grace-window shard reassignment (see the
-//!   [`runtime`] module docs for the connection state machine).
+//!   [`run_distributed_observed`] (loopback tests/benches) and the
+//!   **elastic, fault-tolerant multiplexed server** behind `smx serve` —
+//!   worker heartbeats, a replay journal with checkpoint snapshots +
+//!   truncation, deterministic rejoin/snapshot-resume, and grace-window
+//!   shard reassignment (see the [`runtime`] module docs for the
+//!   connection state machine and the snapshot protocol).
 //!   Shards run in worker *processes* (`smx serve` / `smx worker
 //!   --connect`), each process hosting one or more shards round-robin.
+//!
+//! Both runtimes are reached from one front door: the
+//! [`Session`](crate::coordinator::Session) builder with
+//! [`Driver::Distributed`](crate::coordinator::Driver) selects loopback
+//! or TCP via [`DistTransport`](crate::coordinator::DistTransport), and
+//! `--driver distributed` does the same from the CLI. The old
+//! `run_distributed`/`run_distributed_loopback` free functions remain as
+//! deprecated shims.
 //!
 //! # Guarantees
 //!
@@ -52,10 +61,14 @@
 //!   survivors) by replaying the journaled downlinks through the same
 //!   deterministic `round_into` calls, so the final model is still
 //!   bit-for-bit equal to `run_sim`'s — asserted by the chaos tests and
-//!   the `--die-after` smoke leg. Heartbeats and replay retransmissions
-//!   are protocol overhead, excluded from the `bytes_up`/`bytes_down`
-//!   accounting (which counts the frames the round logically applies, so
-//!   the accounting stays comparable across drivers and failures).
+//!   the `--die-after` smoke leg. With `checkpoint_every` set the replay
+//!   starts from a committed worker-state snapshot instead of round 0
+//!   (journal truncated, state blobs restored bit-exactly) and the
+//!   identity still holds — asserted by the snapshot-resume chaos test.
+//!   Heartbeats, replay and snapshot retransmissions are protocol
+//!   overhead, excluded from the `bytes_up`/`bytes_down` accounting
+//!   (which counts the frames the round logically applies, so the
+//!   accounting stays comparable across drivers and failures).
 //! * Lossy payloads quantize what the *server* sees; each worker's local
 //!   state (e.g. DIANA shifts) still integrates its exact values, so
 //!   server and worker shift estimates drift by a zero-mean error
@@ -80,8 +93,10 @@ pub mod runtime;
 pub mod transport;
 
 pub use codec::{Payload, WireError};
+#[allow(deprecated)] // the shims stay re-exported until external callers migrate
+pub use runtime::{run_distributed, run_distributed_loopback};
 pub use runtime::{
-    run_distributed, run_distributed_loopback, serve, serve_on, worker_connect,
+    run_distributed_loopback_observed, run_distributed_observed, serve, serve_on, worker_connect,
     worker_connect_with, FaultConfig, WorkerHost, WorkerOpts,
 };
 pub use transport::{loopback_pair, Loopback, Tcp, Transport};

@@ -44,31 +44,46 @@
 //!
 //! * **rejoin** — the next accepted (or parked standby) connection gets a
 //!   `Hello` naming the orphaned shards; after its ack the server streams
-//!   `TAG_REPLAY` + the journaled downlinks of every completed round plus
-//!   the in-flight one. The worker replays all but the last silently
-//!   (advancing its per-shard RNG streams and local state through the
-//!   exact same `round_into` calls the dead worker made) and answers the
-//!   last — landing bit-for-bit where the dead worker would have been.
+//!   `TAG_REPLAY` (+ `TAG_RESTORE` with the latest checkpoint's state
+//!   blobs, when one is committed) + the retained journal of downlinks up
+//!   to and including the in-flight round. The worker restores each
+//!   shard's evolving state and RNG stream from the blobs (or builds at
+//!   round 0 when no checkpoint exists), replays all but the last frame
+//!   silently through the exact same `round_into` calls the dead worker
+//!   made, and answers the last — landing bit-for-bit where the dead
+//!   worker would have been.
 //! * **reassignment** — if no replacement acks within the grace window
 //!   (`--worker-timeout` after the death), the orphans are dealt
 //!   round-robin to the surviving live connections via `TAG_ADOPT` + the
-//!   same journal stream; survivors promote their reserve worker halves
-//!   (every worker process builds all n halves and keeps the unassigned
-//!   ones at round-0 state precisely for this) and replay likewise.
+//!   same restore/journal stream; survivors promote their reserve worker
+//!   halves (every worker process builds all n halves and keeps the
+//!   unassigned ones at round-0 state precisely for this) and replay
+//!   likewise.
 //!
-//! Both paths preserve the bitwise-identity guarantee: replay is
-//! deterministic, and the round's accounting only counts the uplink frame
-//! that is finally applied per shard (recovery retransmissions are
-//! excluded, so `coords_up` still matches `run_sim` — asserted by the
-//! chaos tests and `--check-sim`).
+//! Both paths preserve the bitwise-identity guarantee: restore is
+//! bit-exact and replay is deterministic, and the round's accounting only
+//! counts the uplink frame that is finally applied per shard (recovery
+//! retransmissions — journal replays, snapshot/restore frames — are
+//! excluded, so `coords_up` still matches the sim driver — asserted by
+//! the chaos tests and `--check-sim`).
 //!
-//! # Replay journal
+//! # Replay journal + checkpoint snapshots
 //!
-//! The journal holds the encoded downlink body of every round so far. It
-//! grows O(rounds × frame size); for the experiment scales this runtime
-//! targets that is megabytes. Snapshot + truncation (replaying from a
-//! model checkpoint instead of round 0) is the documented follow-up in
-//! ROADMAP §Perf backlog.
+//! The journal holds the encoded downlink bodies the recovery paths
+//! replay. Unbounded, it grows O(rounds × frame size); with
+//! [`RunConfig::checkpoint_every`] set (`--checkpoint-every`, or
+//! [`Session::checkpoint_every`](crate::coordinator::Session::checkpoint_every)),
+//! the server bounds it: every k-th round it broadcasts `TAG_SNAP_REQ`,
+//! each worker answers with one `TAG_SNAP_STATE` blob per hosted shard
+//! (its [`WorkerAlgo::save_state`] bytes + RNG state — a consistent
+//! end-of-round cut, since frames are processed in order), and once every
+//! shard's blob has landed the snapshot **commits**: the blobs are kept
+//! for future rejoiners/adopters and the journal is truncated up to the
+//! snapshot round. Recovery then means "restore from the snapshot, replay
+//! the suffix" instead of "replay from round 0" — same bitwise result,
+//! bounded memory, O(k) catch-up. A death while blobs are in flight
+//! abandons that collection (the next cadence retries); the committed
+//! snapshot is only ever replaced by a newer complete one.
 //!
 //! # Liveness
 //!
@@ -80,8 +95,12 @@
 //! (the pre-elastic behavior).
 
 use crate::config::ExperimentConfig;
-use crate::coordinator::{run_sim, EngineFactory, RoundRecord, RunConfig, RunResult};
-use crate::experiments::runner;
+use crate::coordinator::session::{Tick, Ticker};
+use crate::coordinator::{
+    CollectObserver, DistTransport, Driver, EngineFactory, RoundObserver, RunConfig, RunOutcome,
+    RunResult, Session,
+};
+use crate::experiments::runner::{self, Prepared};
 use crate::linalg::vector;
 use crate::methods::{build, Downlink, Method, MethodSpec, ServerAlgo, Uplink, WorkerAlgo};
 use crate::objective::Smoothness;
@@ -96,6 +115,10 @@ use anyhow::{bail, ensure, Context, Result};
 use std::net::TcpListener;
 use std::time::{Duration, Instant};
 
+/// Per-round communication totals — the shared accounting struct, re-
+/// exported from [`coordinator::metrics`](crate::coordinator::metrics).
+pub use crate::coordinator::RoundTotals;
+
 /// One worker process from the server's perspective: a transport plus the
 /// shard indices it hosts. Used by the fixed-membership
 /// [`run_distributed`] driver (loopback tests and benches).
@@ -106,26 +129,6 @@ pub struct WorkerHost {
 
 /// The `(shard index, worker half)` pairs hosted by one worker process.
 pub type HostedShards = Vec<(usize, Box<dyn WorkerAlgo + Send>)>;
-
-/// Per-round communication totals of [`server_round`].
-#[derive(Clone, Copy, Debug, Default)]
-pub struct RoundTotals {
-    pub coords_up: u64,
-    pub bits_up: u64,
-    pub coords_down: u64,
-    pub bytes_up: u64,
-    pub bytes_down: u64,
-}
-
-impl RoundTotals {
-    fn accumulate(&mut self, t: &RoundTotals) {
-        self.coords_up += t.coords_up;
-        self.bits_up += t.bits_up;
-        self.coords_down += t.coords_down;
-        self.bytes_up += t.bytes_up;
-        self.bytes_down += t.bytes_down;
-    }
-}
 
 /// Reused server-side buffers: per-shard uplink slots, the downlink and
 /// its encoding, and one receive scratch buffer.
@@ -204,80 +207,69 @@ pub fn server_round(
     Ok(t)
 }
 
-/// Fixed-membership distributed driver: same stopping/recording policy as
-/// [`run_sim`](crate::coordinator::run_sim), with *measured* byte counts
-/// from the frames actually sent. Always releases the worker processes
-/// with a `Stop` frame, even on error. No fault tolerance — this is the
-/// loopback/bench reference; the TCP path goes through [`serve_on`].
-pub fn run_distributed(
+/// Fixed-membership distributed driver core: same stopping/recording
+/// policy as the other drivers (metrics stream through `obs`), with
+/// *measured* byte counts from the frames actually sent. Always releases
+/// the worker processes with a `Stop` frame, even on error. No fault
+/// tolerance — this is the loopback/bench reference; the TCP path goes
+/// through [`serve_on`]. Prefer
+/// [`Session`](crate::coordinator::Session) with
+/// [`Driver::Distributed`](crate::coordinator::Driver).
+pub fn run_distributed_observed(
     server: &mut dyn ServerAlgo,
     name: &str,
     hosts: &mut [WorkerHost],
     x_star: &[f64],
     cfg: &RunConfig,
-) -> Result<RunResult> {
+    obs: &mut dyn RoundObserver,
+) -> Result<RunOutcome> {
     let n: usize = hosts.iter().map(|h| h.shards.len()).sum();
     ensure!(n > 0, "no shards hosted");
-    let record_every = cfg.record_every.max(1);
     let mut server_rng = Rng::new(cfg.seed).derive(u64::MAX);
     let denom = vector::dist2(server.iterate(), x_star).max(1e-300);
     let mut st = ServerRoundState::new(n);
     let mut acc = RoundTotals::default();
     let mut phases = PhaseTimer::new();
-    let mut records = Vec::with_capacity(cfg.max_rounds / record_every + 3);
-    records.push(RoundRecord {
-        round: 0,
-        residual: 1.0,
-        coords_up: 0,
-        bits_up: 0,
-        coords_down: 0,
-        bytes_up: 0,
-        bytes_down: 0,
-        wall_secs: 0.0,
-    });
-    let t0 = Instant::now();
+    let ticker = Ticker::new(cfg);
+    let mut stopped = ticker.start(obs);
     let mut reached = false;
     let mut rounds_run = 0;
     let mut failure = None;
 
-    for round in 1..=cfg.max_rounds {
-        rounds_run = round;
-        let totals = phases.time("dist_round", || {
-            server_round(
-                server,
-                hosts,
-                &mut st,
-                &mut server_rng,
-                cfg.payload,
-                cfg.float_bits,
-            )
-        });
-        let totals = match totals {
-            Ok(t) => t,
-            Err(e) => {
-                failure = Some(e);
-                break;
-            }
-        };
-        acc.accumulate(&totals);
-
-        let res = vector::dist2(server.iterate(), x_star) / denom;
-        let hit_target = cfg.target_residual > 0.0 && res <= cfg.target_residual;
-        if round % record_every == 0 || round == cfg.max_rounds || hit_target {
-            records.push(RoundRecord {
-                round,
-                residual: res,
-                coords_up: acc.coords_up,
-                bits_up: acc.bits_up,
-                coords_down: acc.coords_down,
-                bytes_up: acc.bytes_up,
-                bytes_down: acc.bytes_down,
-                wall_secs: t0.elapsed().as_secs_f64(),
+    if !stopped {
+        for round in 1..=cfg.max_rounds {
+            rounds_run = round;
+            let totals = phases.time("dist_round", || {
+                server_round(
+                    server,
+                    hosts,
+                    &mut st,
+                    &mut server_rng,
+                    cfg.payload,
+                    cfg.float_bits,
+                )
             });
-        }
-        if hit_target {
-            reached = true;
-            break;
+            let totals = match totals {
+                Ok(t) => t,
+                Err(e) => {
+                    failure = Some(e);
+                    break;
+                }
+            };
+            acc.accumulate(&totals);
+
+            let res = vector::dist2(server.iterate(), x_star) / denom;
+            match ticker.tick(round, res, &acc, server.iterate(), obs) {
+                Tick::Continue => {}
+                Tick::ReachedTarget => {
+                    reached = true;
+                    break;
+                }
+                Tick::Stopped => {
+                    stopped = true;
+                    break;
+                }
+            }
         }
     }
 
@@ -287,14 +279,31 @@ pub fn run_distributed(
     if let Some(e) = failure {
         return Err(e);
     }
-    Ok(RunResult {
+    Ok(RunOutcome {
         method: name.to_string(),
-        records,
         final_x: server.iterate().to_vec(),
         rounds_run,
         reached_target: reached,
+        stopped_by_observer: stopped,
         phases,
     })
+}
+
+/// Pre-`Session` entry point for the fixed-membership distributed driver.
+#[deprecated(
+    note = "drive runs through `coordinator::Session` (Driver::Distributed); this shim wraps \
+            `run_distributed_observed` with the default collecting observer"
+)]
+pub fn run_distributed(
+    server: &mut dyn ServerAlgo,
+    name: &str,
+    hosts: &mut [WorkerHost],
+    x_star: &[f64],
+    cfg: &RunConfig,
+) -> Result<RunResult> {
+    let mut collect = CollectObserver::for_cfg(cfg);
+    let out = run_distributed_observed(server, name, hosts, x_star, cfg, &mut collect)?;
+    Ok(out.into_result(collect.into_records()))
 }
 
 // ---- worker side -------------------------------------------------------
@@ -342,6 +351,28 @@ impl ShardRunner {
         }
         Ok(())
     }
+
+    /// Append this shard's checkpoint blob: RNG state first (fixed size),
+    /// then the algorithm's evolving state. [`ShardRunner::load_blob`]
+    /// inverts it bit-exactly — the snapshot-resume identity rests on
+    /// this pair.
+    fn save_blob(&self, out: &mut Vec<u8>) {
+        self.rng.save_state(out);
+        self.algo.save_state(out);
+    }
+
+    /// Restore state saved by [`ShardRunner::save_blob`].
+    fn load_blob(&mut self, blob: &[u8]) -> Result<()> {
+        let rng = Rng::load_state(blob)
+            .with_context(|| format!("shard {}: malformed snapshot RNG state", self.shard))?;
+        ensure!(
+            self.algo.load_state(&blob[Rng::STATE_BYTES..]),
+            "shard {}: malformed or wrong-shape snapshot state",
+            self.shard
+        );
+        self.rng = rng;
+        Ok(())
+    }
 }
 
 /// Context a TCP worker keeps so it can *adopt* orphaned shards later:
@@ -363,6 +394,11 @@ pub struct WorkerOpts {
     /// Pin this worker process to the given core before the round loop
     /// (`sched_setaffinity`; no-op off Linux).
     pub pin: Option<usize>,
+    /// Chaos-test assertion (`smx worker --expect-restore`): fail unless
+    /// this worker was handed a snapshot restore (`TAG_RESTORE`) during
+    /// its run — proves the journal-truncating checkpoint path was
+    /// actually exercised, rather than a silent full-journal replay.
+    pub expect_restore: bool,
 }
 
 /// Worker-process state: active shard runners, reserve halves for
@@ -378,6 +414,10 @@ pub struct WorkerState {
     dim: usize,
     die_after: Option<usize>,
     rounds_seen: usize,
+    /// chaos assertion: fail unless a `TAG_RESTORE` arrived (see
+    /// [`WorkerOpts::expect_restore`])
+    expect_restore: bool,
+    restored: bool,
 }
 
 impl WorkerState {
@@ -394,6 +434,8 @@ impl WorkerState {
             dim,
             die_after: None,
             rounds_seen: 0,
+            expect_restore: false,
+            restored: false,
         }
     }
 }
@@ -407,8 +449,9 @@ fn send_heartbeat(transport: &mut dyn Transport) -> Result<()> {
         .context("worker heartbeat")
 }
 
-/// Worker-process main loop: run every hosted shard per downlink, replay
-/// journaled rounds on demand, adopt orphaned shards, exit on `Stop`.
+/// Worker-process main loop: run every hosted shard per downlink, answer
+/// snapshot requests, replay journaled rounds (restoring from a snapshot
+/// first when the server says so), adopt orphaned shards, exit on `Stop`.
 pub fn worker_loop(state: &mut WorkerState, transport: &mut dyn Transport) -> Result<()> {
     ensure!(!state.active.is_empty(), "worker process hosts no shards");
     let mut body = Vec::new();
@@ -432,22 +475,85 @@ pub fn worker_loop(state: &mut WorkerState, transport: &mut dyn Transport) -> Re
                     r.step(&down, true, payload, &mut out, transport)?;
                 }
             }
+            codec::TAG_SNAP_REQ => {
+                // checkpoint: ship every hosted shard's evolving state;
+                // the request arrives between rounds, so the blobs are a
+                // consistent end-of-round cut
+                let round = codec::get_snap_req(&body)?;
+                let mut blob = Vec::new();
+                for r in state.active.iter() {
+                    blob.clear();
+                    r.save_blob(&mut blob);
+                    out.clear();
+                    codec::put_snap_state(&mut out, r.shard, round, &blob);
+                    transport.send(&out).context("worker snapshot send")?;
+                }
+            }
             codec::TAG_REPLAY => {
-                // rejoin catch-up: every active shard replays the whole
+                // rejoin catch-up: every active shard restores from the
+                // snapshot (if one exists) and replays the remaining
                 // journal; only the last frame is answered
-                let count = codec::get_replay(&body)?;
+                let (count, restore) = codec::get_replay(&body)?;
                 let all: Vec<usize> = (0..state.active.len()).collect();
+                if restore {
+                    restore_from_snapshot(state, transport, &mut body, &all)?;
+                }
                 replay_rounds(state, transport, &mut body, &mut out, &mut down, count, &all)?;
             }
             codec::TAG_ADOPT => {
-                let (shards, count) = codec::get_adopt(&body)?;
+                let (shards, count, restore) = codec::get_adopt(&body)?;
                 let fresh = adopt_shards(state, &shards)?;
+                if restore {
+                    restore_from_snapshot(state, transport, &mut body, &fresh)?;
+                }
                 replay_rounds(state, transport, &mut body, &mut out, &mut down, count, &fresh)?;
             }
-            codec::TAG_STOP => return Ok(()),
+            codec::TAG_STOP => {
+                ensure!(
+                    !state.expect_restore || state.restored,
+                    "--expect-restore: run finished without a snapshot restore \
+                     (the journal-truncating checkpoint path was not exercised)"
+                );
+                return Ok(());
+            }
             other => bail!("worker: unexpected frame tag {other}"),
         }
     }
+}
+
+/// Receive the `TAG_RESTORE` frame that follows a restore-flagged
+/// announcement and load each blob into the matching runner among
+/// `targets` (indices into `state.active`). Blob state is the end of the
+/// snapshot round; the replay that follows covers only later rounds.
+fn restore_from_snapshot(
+    state: &mut WorkerState,
+    transport: &mut dyn Transport,
+    body: &mut Vec<u8>,
+    targets: &[usize],
+) -> Result<()> {
+    transport.recv(body).context("restore recv")?;
+    let (round, blobs) = codec::get_restore(body)?;
+    crate::info!(
+        "wire",
+        "restoring {} shard(s) from the round-{round} snapshot",
+        blobs.len()
+    );
+    ensure!(
+        blobs.len() == targets.len(),
+        "restore names {} shard(s), expected {}",
+        blobs.len(),
+        targets.len()
+    );
+    for (shard, blob) in &blobs {
+        let k = targets
+            .iter()
+            .copied()
+            .find(|&k| state.active[k].shard == *shard)
+            .with_context(|| format!("restore for shard {shard}, which is not a target here"))?;
+        state.active[k].load_blob(blob)?;
+    }
+    state.restored = true;
+    Ok(())
 }
 
 /// Promote `shards` from the reserve pool to active runners (round-0
@@ -519,14 +625,17 @@ fn replay_rounds(
 /// calling thread, `procs` worker threads (each hosting `n/procs` shards
 /// round-robin) connected by loopback transports. `procs = 0` means one
 /// process per shard. Engines are built inside each worker thread via
-/// `engine_factory`, mirroring [`run_threaded`](crate::coordinator::run_threaded).
-pub fn run_distributed_loopback(
+/// `engine_factory`, mirroring the threaded driver. Prefer
+/// [`Session`](crate::coordinator::Session) with
+/// [`DistTransport::Loopback`](crate::coordinator::DistTransport).
+pub fn run_distributed_loopback_observed(
     method: Method,
     engine_factory: EngineFactory,
     x_star: &[f64],
     cfg: &RunConfig,
     procs: usize,
-) -> Result<RunResult> {
+    obs: &mut dyn RoundObserver,
+) -> Result<RunOutcome> {
     let Method {
         mut server,
         workers,
@@ -577,7 +686,8 @@ pub fn run_distributed_loopback(
                 worker_loop(&mut state, &mut end)
             }));
         }
-        let result = run_distributed(server.as_mut(), &name, &mut hosts, x_star, cfg);
+        let result =
+            run_distributed_observed(server.as_mut(), &name, &mut hosts, x_star, cfg, obs);
         for h in handles {
             match h.join() {
                 Ok(r) => r?,
@@ -586,6 +696,25 @@ pub fn run_distributed_loopback(
         }
         result
     })
+}
+
+/// Pre-`Session` entry point for the loopback distributed driver.
+#[deprecated(
+    note = "drive runs through `coordinator::Session` (Driver::Distributed with \
+            DistTransport::Loopback); this shim wraps `run_distributed_loopback_observed` \
+            with the default collecting observer"
+)]
+pub fn run_distributed_loopback(
+    method: Method,
+    engine_factory: EngineFactory,
+    x_star: &[f64],
+    cfg: &RunConfig,
+    procs: usize,
+) -> Result<RunResult> {
+    let mut collect = CollectObserver::for_cfg(cfg);
+    let out =
+        run_distributed_loopback_observed(method, engine_factory, x_star, cfg, procs, &mut collect)?;
+    Ok(out.into_result(collect.into_records()))
 }
 
 // ---- elastic TCP server ------------------------------------------------
@@ -659,8 +788,23 @@ struct ElasticServer {
     payload: Payload,
     n_shards: usize,
     dim: usize,
-    /// encoded downlink body of every round so far (1-indexed by round)
+    /// encoded downlink bodies of rounds `journal_base+1 ..= journal_base
+    /// + journal.len()` — the suffix of the run since the last committed
+    /// snapshot (`journal_base = 0` before the first commit)
     journal: Vec<Vec<u8>>,
+    /// rounds truncated off the journal's front: the committed snapshot's
+    /// round
+    journal_base: usize,
+    /// last committed checkpoint: `(round, per-shard state blobs)`;
+    /// rejoiners and adopters restore from it instead of replaying from
+    /// round 0
+    snapshot: Option<(usize, Vec<Vec<u8>>)>,
+    /// snapshot round whose blobs are still being collected, with the
+    /// per-shard slots; committed (journal truncated) when all arrive
+    pending_snap: Option<(usize, Vec<Option<Vec<u8>>>)>,
+    /// snapshot cadence in rounds (0 disables; from
+    /// [`RunConfig::checkpoint_every`])
+    checkpoint_every: usize,
     /// shards whose owner died, awaiting a rejoiner or reassignment
     orphans: Vec<usize>,
     orphan_deadline: Option<Instant>,
@@ -695,6 +839,7 @@ impl ElasticServer {
         n_shards: usize,
         dim: usize,
         assignments: Vec<Vec<usize>>,
+        checkpoint_every: usize,
     ) -> Result<ElasticServer> {
         listener
             .set_nonblocking(true)
@@ -724,6 +869,10 @@ impl ElasticServer {
             n_shards,
             dim,
             journal: Vec::new(),
+            journal_base: 0,
+            snapshot: None,
+            pending_snap: None,
+            checkpoint_every,
             orphans: Vec::new(),
             orphan_deadline: None,
             pending_assignments: assignments,
@@ -887,6 +1036,9 @@ impl ElasticServer {
             self.st.seen[s] = false;
             self.st.up_bytes[s] = 0;
         }
+        // a dead worker's shards can no longer report snapshot blobs;
+        // abandon the in-flight collection (the next cadence retries)
+        self.pending_snap = None;
         let initial = matches!(
             conn.phase,
             Phase::AwaitingAck {
@@ -897,21 +1049,67 @@ impl ElasticServer {
         self.requeue(conn.shards, !initial);
     }
 
-    /// Stream the whole journal to `tok`, prefixed by `announce` (a
-    /// `TAG_REPLAY` or `TAG_ADOPT` frame). Marks the connection dead on
-    /// any send failure.
-    fn send_journal(&mut self, tok: usize, announce: &[u8]) {
+    /// Catch a connection up to the in-flight round: an announcement
+    /// (`TAG_REPLAY` for a rejoiner over its own shards, `TAG_ADOPT` for
+    /// `adopt` shards), then — when a snapshot is committed — a
+    /// `TAG_RESTORE` frame with the targets' state blobs, then the
+    /// retained journal (which starts right after the snapshot round).
+    /// Marks the connection dead on any send failure.
+    fn send_catchup(&mut self, tok: usize, adopt: Option<&[usize]>) {
+        let count = self.journal.len();
+        let mut announce = Vec::new();
+        let restore = self.snapshot.is_some();
+        match adopt {
+            Some(shards) => codec::put_adopt(&mut announce, shards, count, restore),
+            None => codec::put_replay(&mut announce, count, restore),
+        }
+        let mut restore_frame = Vec::new();
+        if let Some((round, blobs)) = &self.snapshot {
+            let targets: &[usize] = match adopt {
+                Some(shards) => shards,
+                None => &self.conns[tok].as_ref().expect("catchup to live conn").shards,
+            };
+            let pairs: Vec<(usize, &[u8])> =
+                targets.iter().map(|&s| (s, blobs[s].as_slice())).collect();
+            codec::put_restore(&mut restore_frame, *round, &pairs);
+        }
         let res = (|| -> std::io::Result<()> {
-            let conn = self.conns[tok].as_mut().expect("journal to live conn");
-            conn.tcp.send(announce)?;
+            let conn = self.conns[tok].as_mut().expect("catchup to live conn");
+            conn.tcp.send(&announce)?;
+            if !restore_frame.is_empty() {
+                conn.tcp.send(&restore_frame)?;
+            }
             for frame in &self.journal {
                 conn.tcp.send(frame)?;
             }
             Ok(())
         })();
         if let Err(e) = res {
-            self.mark_dead(tok, &format!("journal send failed: {e}"));
+            self.mark_dead(tok, &format!("catch-up send failed: {e}"));
         }
+    }
+
+    /// Commit the fully collected snapshot: keep the blobs for future
+    /// rejoiners/adopters and truncate the journal up to the snapshot
+    /// round — the memory bound the §Perf follow-up asked for.
+    fn commit_snapshot(&mut self) {
+        let Some((round, slots)) = self.pending_snap.take() else {
+            return;
+        };
+        let blobs: Vec<Vec<u8>> = slots
+            .into_iter()
+            .map(|s| s.expect("commit only on a complete slot table"))
+            .collect();
+        debug_assert!(round >= self.journal_base);
+        let drop_n = (round - self.journal_base).min(self.journal.len());
+        self.journal.drain(..drop_n);
+        self.journal_base = round;
+        self.snapshot = Some((round, blobs));
+        crate::info!(
+            "wire",
+            "snapshot committed at round {round}; journal truncated to {} frame(s)",
+            self.journal.len()
+        );
     }
 
     /// Reassign the orphan pool round-robin across surviving live
@@ -936,21 +1134,18 @@ impl ElasticServer {
         for (k, s) in orphans.into_iter().enumerate() {
             groups[k % live.len()].push(s);
         }
-        let count = self.journal.len();
         for (tok, extra) in live.into_iter().zip(groups) {
             if extra.is_empty() {
                 continue;
             }
-            let mut announce = Vec::new();
-            codec::put_adopt(&mut announce, &extra, count);
             // record ownership first so a send failure orphans the
             // adopted shards together with the rest of the connection
             self.conns[tok]
                 .as_mut()
                 .expect("live conn")
                 .shards
-                .extend(extra);
-            self.send_journal(tok, &announce);
+                .extend(extra.iter().copied());
+            self.send_catchup(tok, Some(&extra));
         }
         Ok(())
     }
@@ -990,10 +1185,37 @@ impl ElasticServer {
                     };
                     conn.phase = Phase::Live;
                     crate::info!("wire", "worker {} is live", conn.peer);
-                    if replay && !self.journal.is_empty() {
-                        let mut announce = Vec::new();
-                        codec::put_replay(&mut announce, self.journal.len());
-                        self.send_journal(tok, &announce);
+                    if replay && (!self.journal.is_empty() || self.snapshot.is_some()) {
+                        self.send_catchup(tok, None);
+                    }
+                }
+                codec::TAG_SNAP_STATE => {
+                    let (shard, round, blob) = codec::get_snap_state(&self.body)?;
+                    ensure!(
+                        shard < self.n_shards,
+                        "snapshot state for shard {shard}, but n = {}",
+                        self.n_shards
+                    );
+                    {
+                        let conn = self.conns[tok].as_mut().expect("live conn");
+                        conn.last_seen = now;
+                        ensure!(
+                            conn.shards.contains(&shard),
+                            "worker {} sent snapshot state for shard {shard} it \
+                             does not own",
+                            conn.peer
+                        );
+                    }
+                    let mut complete = false;
+                    if let Some((pr, slots)) = &mut self.pending_snap {
+                        if round == *pr && slots[shard].is_none() {
+                            slots[shard] = Some(blob.to_vec());
+                            complete = slots.iter().all(|s| s.is_some());
+                        }
+                        // blobs for a superseded round are stale; dropped
+                    }
+                    if complete {
+                        self.commit_snapshot();
                     }
                 }
                 codec::TAG_UPLINK => {
@@ -1126,11 +1348,14 @@ impl ElasticServer {
     }
 
     /// One elastic round: journal + broadcast, fault-tolerant gather,
-    /// apply. Accounting counts only the uplink frame finally applied per
-    /// shard and the live broadcast fan-out — recovery retransmissions
-    /// (journal replays) are excluded, so `coords_up` matches `run_sim`.
+    /// apply, and — on the `checkpoint_every` cadence — a snapshot
+    /// request. Accounting counts only the uplink frame finally applied
+    /// per shard and the live broadcast fan-out — recovery
+    /// retransmissions (journal replays, snapshot frames) are excluded,
+    /// so `coords_up` matches the sim driver.
     fn round(
         &mut self,
+        round: usize,
         server: &mut dyn ServerAlgo,
         server_rng: &mut Rng,
         float_bits: u32,
@@ -1172,69 +1397,80 @@ impl ElasticServer {
             t.bytes_up += self.st.up_bytes[i];
         }
         server.apply(&self.st.ups, server_rng);
+
+        // checkpoint cadence: ask every live worker for its shards' state
+        // as of the end of this round. Workers answer before touching the
+        // next downlink (frames are processed in order), so the blobs are
+        // a consistent cut; they are collected during the next gather and
+        // committed when the last one lands. Like the journal, snapshots
+        // only matter when fault handling can consume them.
+        if self.checkpoint_every > 0
+            && self.fault.enabled()
+            && round % self.checkpoint_every == 0
+        {
+            let mut req = Vec::new();
+            codec::put_snap_req(&mut req, round);
+            self.pending_snap = Some((round, vec![None; self.n_shards]));
+            for tok in self.live_tokens() {
+                let res = {
+                    let conn = self.conns[tok].as_mut().expect("live conn");
+                    conn.tcp.send(&req)
+                };
+                if let Err(e) = res {
+                    self.mark_dead(tok, &format!("snapshot request failed: {e}"));
+                }
+            }
+        }
         Ok(t)
     }
 
-    /// Full run: same stopping/recording policy as
-    /// [`run_sim`](crate::coordinator::run_sim).
+    /// Full run: same stopping/recording policy as every other driver,
+    /// metrics through `obs`.
     fn run(
         &mut self,
         server: &mut dyn ServerAlgo,
         name: &str,
         x_star: &[f64],
         cfg: &RunConfig,
-    ) -> Result<RunResult> {
-        let record_every = cfg.record_every.max(1);
+        obs: &mut dyn RoundObserver,
+    ) -> Result<RunOutcome> {
         let mut server_rng = Rng::new(cfg.seed).derive(u64::MAX);
         let denom = vector::dist2(server.iterate(), x_star).max(1e-300);
         let mut acc = RoundTotals::default();
         let mut phases = PhaseTimer::new();
-        let mut records = Vec::with_capacity(cfg.max_rounds / record_every + 3);
-        records.push(RoundRecord {
-            round: 0,
-            residual: 1.0,
-            coords_up: 0,
-            bits_up: 0,
-            coords_down: 0,
-            bytes_up: 0,
-            bytes_down: 0,
-            wall_secs: 0.0,
-        });
-        let t0 = Instant::now();
+        let ticker = Ticker::new(cfg);
+        let mut stopped = ticker.start(obs);
         let mut reached = false;
         let mut rounds_run = 0;
         let mut failure = None;
 
-        for round in 1..=cfg.max_rounds {
-            rounds_run = round;
-            let totals =
-                phases.time("dist_round", || self.round(server, &mut server_rng, cfg.float_bits));
-            let totals = match totals {
-                Ok(t) => t,
-                Err(e) => {
-                    failure = Some(e);
-                    break;
-                }
-            };
-            acc.accumulate(&totals);
-
-            let res = vector::dist2(server.iterate(), x_star) / denom;
-            let hit_target = cfg.target_residual > 0.0 && res <= cfg.target_residual;
-            if round % record_every == 0 || round == cfg.max_rounds || hit_target {
-                records.push(RoundRecord {
-                    round,
-                    residual: res,
-                    coords_up: acc.coords_up,
-                    bits_up: acc.bits_up,
-                    coords_down: acc.coords_down,
-                    bytes_up: acc.bytes_up,
-                    bytes_down: acc.bytes_down,
-                    wall_secs: t0.elapsed().as_secs_f64(),
+        if !stopped {
+            for round in 1..=cfg.max_rounds {
+                rounds_run = round;
+                let totals = phases.time("dist_round", || {
+                    self.round(round, server, &mut server_rng, cfg.float_bits)
                 });
-            }
-            if hit_target {
-                reached = true;
-                break;
+                let totals = match totals {
+                    Ok(t) => t,
+                    Err(e) => {
+                        failure = Some(e);
+                        break;
+                    }
+                };
+                acc.accumulate(&totals);
+
+                let res = vector::dist2(server.iterate(), x_star) / denom;
+                match ticker.tick(round, res, &acc, server.iterate(), obs) {
+                    Tick::Continue => {}
+                    Tick::ReachedTarget => {
+                        reached = true;
+                        break;
+                    }
+                    Tick::Stopped => {
+                        stopped = true;
+                        break;
+                    }
+                }
             }
         }
 
@@ -1242,12 +1478,12 @@ impl ElasticServer {
         if let Some(e) = failure {
             return Err(e);
         }
-        Ok(RunResult {
+        Ok(RunOutcome {
             method: name.to_string(),
-            records,
             final_x: server.iterate().to_vec(),
             rounds_run,
             reached_target: reached,
+            stopped_by_observer: stopped,
             phases,
         })
     }
@@ -1267,54 +1503,45 @@ impl ElasticServer {
 
 // ---- entry points ------------------------------------------------------
 
-/// `smx serve`: prepare the problem, run the elastic server (accept
-/// workers, survive their deaths, accept rejoiners), write the residual
-/// curve CSV. With `check_sim`, re-run the identical configuration under
-/// [`run_sim`] and fail unless the iterates are bitwise identical
-/// (requires the lossless `f64` payload) — the CI smoke's assertion,
-/// which holds even across worker deaths and rejoins.
-pub fn serve(cfg: &ExperimentConfig, check_sim: bool) -> Result<()> {
-    let listener = TcpListener::bind(&cfg.wire.listen)
-        .with_context(|| format!("binding {}", cfg.wire.listen))?;
-    serve_on(listener, cfg, check_sim)
-}
-
-/// [`serve`] against an already-bound listener (tests bind port 0 and
-/// hand the ephemeral address to their worker threads).
-pub fn serve_on(listener: TcpListener, cfg: &ExperimentConfig, check_sim: bool) -> Result<()> {
+/// The elastic TCP server core behind [`Driver::Distributed`] +
+/// [`DistTransport::Tcp`]: build the server half, accept `cfg.wire.workers`
+/// worker processes, survive their deaths, stream metrics through `obs`.
+/// Called by [`Session::run`](crate::coordinator::Session::run); `spec` /
+/// `prep` / `run_cfg` are the Session's resolved parts.
+pub(crate) fn serve_observed(
+    listener: TcpListener,
+    cfg: &ExperimentConfig,
+    spec: &MethodSpec,
+    prep: &Prepared,
+    run_cfg: &RunConfig,
+    obs: &mut dyn RoundObserver,
+) -> Result<RunOutcome> {
+    let method_name = spec.name.clone();
+    let payload = run_cfg.payload;
+    // the Hello's single seed feeds both the worker's dataset synthesis
+    // and its RNG stream derivation, and its mu feeds the worker's
+    // smoothness rebuild — they must match what the server side used
     ensure!(
-        cfg.methods.len() == 1,
-        "smx serve drives exactly one method; got {:?}",
-        cfg.methods
+        run_cfg.seed == cfg.seed,
+        "the TCP driver cannot override the seed per run (workers rebuild \
+         the dataset from it); set cfg.seed instead"
     );
     ensure!(
-        cfg.engine == EngineKind::Native,
-        "smx serve supports the native engine only"
+        spec.mu.to_bits() == cfg.mu.to_bits(),
+        "the TCP driver needs spec.mu == cfg.mu (workers rebuild smoothness \
+         from the config recipe)"
     );
-    let method_name = cfg.methods[0].clone();
-    let payload = cfg.wire.payload;
     ensure!(
         payload.is_lossless() || method_name != "diana++",
         "diana++ requires the lossless f64 payload (worker model replicas \
          are updated by incremental sparse downlinks; quantization error \
          would accumulate unboundedly)"
     );
-    if check_sim {
-        ensure!(
-            payload.is_lossless(),
-            "--check-sim requires the f64 payload (got {})",
-            payload.name()
-        );
-    }
-    let prep = runner::prepare(cfg)?;
     let n = prep.shards.len();
     let procs = cfg.wire.effective_procs(n);
-    let mut spec = MethodSpec::new(&method_name, cfg.tau, cfg.sampling, cfg.mu, prep.x0(cfg));
-    spec.practical_adiana = cfg.practical_adiana;
-    let mut method = build(&spec, &prep.sm)?;
+    let mut method = build(spec, &prep.sm)?;
     // server half only; the workers live in their own processes
     method.workers.clear();
-    let run_cfg = runner::run_config(cfg);
     let fault = FaultConfig {
         worker_timeout: Duration::from_secs_f64(cfg.wire.worker_timeout.max(0.0)),
     };
@@ -1322,13 +1549,14 @@ pub fn serve_on(listener: TcpListener, cfg: &ExperimentConfig, check_sim: bool) 
     crate::info!(
         "wire",
         "serving {} on {} — {} worker process(es), {} shards, payload {}, \
-         worker-timeout {:?}",
+         worker-timeout {:?}, checkpoint-every {}",
         method_name,
         cfg.wire.listen,
         procs,
         n,
         payload.name(),
-        fault.worker_timeout
+        fault.worker_timeout,
+        run_cfg.checkpoint_every
     );
     // round-robin shard assignment, ascending within each process
     let mut assignment: Vec<Vec<usize>> = vec![Vec::new(); procs];
@@ -1348,13 +1576,13 @@ pub fn serve_on(listener: TcpListener, cfg: &ExperimentConfig, check_sim: bool) 
                     || d.join(format!("{}.txt", cfg.dataset)).is_file()
             })
             .map(|d| d.display().to_string()),
-        seed: cfg.seed,
+        seed: run_cfg.seed,
         workers: n,
-        mu: cfg.mu,
-        tau: cfg.tau,
-        sampling: cfg.sampling,
+        mu: spec.mu,
+        tau: spec.tau,
+        sampling: spec.sampling,
         method: method_name.clone(),
-        practical_adiana: cfg.practical_adiana,
+        practical_adiana: spec.practical_adiana,
         payload,
         need_global: method_name == "diana++",
         shards: Vec::new(),
@@ -1362,9 +1590,65 @@ pub fn serve_on(listener: TcpListener, cfg: &ExperimentConfig, check_sim: bool) 
     };
     let dim = spec.x0.len();
 
-    let mut es = ElasticServer::new(listener, hello, fault, payload, n, dim, assignment)?;
+    let mut es = ElasticServer::new(
+        listener,
+        hello,
+        fault,
+        payload,
+        n,
+        dim,
+        assignment,
+        run_cfg.checkpoint_every,
+    )?;
     es.accept_initial()?;
-    let result = es.run(method.server.as_mut(), &method.name, &prep.x_star, &run_cfg)?;
+    es.run(method.server.as_mut(), &method.name, &prep.x_star, run_cfg, obs)
+}
+
+/// `smx serve`: prepare the problem, run the elastic server (accept
+/// workers, survive their deaths, accept rejoiners), write the residual
+/// curve CSV. With `check_sim`, re-run the identical configuration under
+/// [`Driver::Sim`] and fail unless the iterates are bitwise identical
+/// (requires the lossless `f64` payload) — the CI smoke's assertion,
+/// which holds even across worker deaths, rejoins and snapshot-resumes.
+pub fn serve(cfg: &ExperimentConfig, check_sim: bool) -> Result<()> {
+    let listener = TcpListener::bind(&cfg.wire.listen)
+        .with_context(|| format!("binding {}", cfg.wire.listen))?;
+    serve_on(listener, cfg, check_sim)
+}
+
+/// [`serve`] against an already-bound listener (tests bind port 0 and
+/// hand the ephemeral address to their worker threads). Both the
+/// distributed run and the `check_sim` reference go through [`Session`].
+pub fn serve_on(listener: TcpListener, cfg: &ExperimentConfig, check_sim: bool) -> Result<()> {
+    ensure!(
+        cfg.methods.len() == 1,
+        "smx serve drives exactly one method; got {:?}",
+        cfg.methods
+    );
+    ensure!(
+        cfg.engine == EngineKind::Native,
+        "smx serve supports the native engine only"
+    );
+    let method_name = cfg.methods[0].clone();
+    let payload = cfg.wire.payload;
+    if check_sim {
+        ensure!(
+            payload.is_lossless(),
+            "--check-sim requires the f64 payload (got {})",
+            payload.name()
+        );
+    }
+    let prep = runner::prepare(cfg)?;
+    let result = Session::from_config(cfg)
+        .prepared(&prep)
+        .driver(Driver::Distributed {
+            transport: DistTransport::Tcp {
+                listen: cfg.wire.listen.clone(),
+                workers: cfg.wire.workers,
+            },
+        })
+        .tcp_listener(listener)
+        .run()?;
 
     let last = result.records.last().unwrap();
     println!(
@@ -1384,16 +1668,17 @@ pub fn serve_on(listener: TcpListener, cfg: &ExperimentConfig, check_sim: bool) 
     crate::info!("wire", "wrote {}", path.display());
 
     if check_sim {
-        let mut method2 = build(&spec, &prep.sm)?;
-        let mut engines = prep.native_engines(cfg.mu);
-        let r_sim = run_sim(&mut method2, &mut engines, &prep.x_star, &run_cfg);
+        let r_sim = Session::from_config(cfg)
+            .prepared(&prep)
+            .driver(Driver::Sim)
+            .run()?;
         // bit-level comparison: value equality would let a -0.0/+0.0
         // regression slip through the "bitwise identical" guarantee
         let bits = |xs: &[f64]| xs.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
         ensure!(
             bits(&r_sim.final_x) == bits(&result.final_x),
-            "check-sim FAILED: distributed iterates diverged from run_sim \
-             (residual {:.6e} vs {:.6e})",
+            "check-sim FAILED: distributed iterates diverged from the sim \
+             driver (residual {:.6e} vs {:.6e})",
             result.final_residual(),
             r_sim.final_residual()
         );
@@ -1402,7 +1687,7 @@ pub fn serve_on(listener: TcpListener, cfg: &ExperimentConfig, check_sim: bool) 
             "check-sim FAILED: communication accounting diverged"
         );
         println!(
-            "check-sim OK: bitwise identical to run_sim over {} rounds",
+            "check-sim OK: bitwise identical to the sim driver over {} rounds",
             result.rounds_run
         );
     }
@@ -1509,6 +1794,8 @@ pub fn worker_connect_with(addr: &str, opts: WorkerOpts) -> Result<()> {
         dim: hello.x0.len(),
         die_after: opts.die_after,
         rounds_seen: 0,
+        expect_restore: opts.expect_restore,
+        restored: false,
     };
 
     t.send(&[codec::TAG_HELLO_ACK])?;

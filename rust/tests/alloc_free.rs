@@ -52,7 +52,7 @@ unsafe impl GlobalAlloc for CountingAlloc {
 #[global_allocator]
 static GLOBAL: CountingAlloc = CountingAlloc;
 
-use smx::coordinator::{run_sim, run_threaded, EngineFactory, RunConfig};
+use smx::coordinator::{Driver, EngineFactory, RunConfig, Session};
 use smx::data::synth;
 use smx::methods::{build, sync_round, Method, MethodSpec, RoundBuffers};
 use smx::objective::Smoothness;
@@ -79,6 +79,10 @@ fn engines(shards: &[smx::data::Shard]) -> Vec<Box<dyn GradEngine>> {
 fn method(name: &str, sm: &Smoothness) -> Method {
     let spec = MethodSpec::new(name, 2.0, SamplingKind::Uniform, 1e-3, vec![0.0; sm.dim]);
     build(&spec, sm).unwrap()
+}
+
+fn spec(name: &str, sm: &Smoothness) -> MethodSpec {
+    MethodSpec::new(name, 2.0, SamplingKind::Uniform, 1e-3, vec![0.0; sm.dim])
 }
 
 /// The core claim: after warmup (plus reserving the worst-case sketch
@@ -116,16 +120,15 @@ fn sync_round_steady_state_is_allocation_free() {
     }
 }
 
-/// `run_sim` end-to-end: doubling the round count must not add
-/// allocations beyond (identical) setup + warmup — i.e. the per-round
-/// marginal allocation count is zero.
+/// The sim driver end-to-end *through the `Session` front door*: doubling
+/// the round count must not add allocations beyond (identical) setup +
+/// warmup — i.e. the per-round marginal allocation count is zero, builder
+/// and observer seam included.
 #[test]
 fn run_sim_marginal_allocations_are_zero() {
     let (shards, sm) = setup();
 
     let measure = |rounds: usize| -> u64 {
-        let mut m = method("diana+", &sm);
-        let mut eng = engines(&shards);
         let cfg = RunConfig {
             max_rounds: rounds,
             record_every: 1,
@@ -134,7 +137,13 @@ fn run_sim_marginal_allocations_are_zero() {
         };
         let x_star = vec![0.0; sm.dim];
         let before = tl_count();
-        let r = run_sim(&mut m, &mut eng, &x_star, &cfg);
+        let r = Session::new(spec("diana+", &sm))
+            .smoothness(&sm)
+            .x_star(&x_star)
+            .engines(engines(&shards))
+            .run_config(cfg)
+            .run()
+            .unwrap();
         assert_eq!(r.rounds_run, rounds);
         tl_count() - before
     };
@@ -167,7 +176,6 @@ fn run_threaded_coordinator_is_allocation_free() {
     let (shards, sm) = setup();
 
     let measure = |rounds: usize| -> u64 {
-        let m = method("dcgd+", &sm);
         let shards2 = shards.clone();
         let factory: EngineFactory = Arc::new(move |i| {
             Box::new(NativeEngine::from_shard(&shards2[i], 1e-3)) as Box<dyn GradEngine>
@@ -180,7 +188,14 @@ fn run_threaded_coordinator_is_allocation_free() {
         };
         let x_star = vec![0.0; sm.dim];
         let before = tl_count();
-        let r = run_threaded(m, factory, &x_star, &cfg);
+        let r = Session::new(spec("dcgd+", &sm))
+            .smoothness(&sm)
+            .x_star(&x_star)
+            .driver(Driver::Threaded)
+            .engine_factory(factory)
+            .run_config(cfg)
+            .run()
+            .unwrap();
         assert_eq!(r.rounds_run, rounds);
         tl_count() - before
     };
@@ -210,16 +225,26 @@ fn drivers_still_bitwise_identical_with_buffer_reuse() {
     };
     let x_star = vec![0.0; sm.dim];
 
-    let mut m1 = method("diana+", &sm);
-    let mut eng = engines(&shards);
-    let r1 = run_sim(&mut m1, &mut eng, &x_star, &cfg);
+    let r1 = Session::new(spec("diana+", &sm))
+        .smoothness(&sm)
+        .x_star(&x_star)
+        .engines(engines(&shards))
+        .run_config(cfg.clone())
+        .run()
+        .unwrap();
 
-    let m2 = method("diana+", &sm);
     let shards2 = shards.clone();
     let factory: EngineFactory = Arc::new(move |i| {
         Box::new(NativeEngine::from_shard(&shards2[i], 1e-3)) as Box<dyn GradEngine>
     });
-    let r2 = run_threaded(m2, factory, &x_star, &cfg);
+    let r2 = Session::new(spec("diana+", &sm))
+        .smoothness(&sm)
+        .x_star(&x_star)
+        .driver(Driver::Threaded)
+        .engine_factory(factory)
+        .run_config(cfg)
+        .run()
+        .unwrap();
 
     assert_eq!(r1.final_x, r2.final_x);
     assert_eq!(

@@ -4,11 +4,11 @@
 
 use smx::compress::{MatrixAware, SparseMsg};
 use smx::config::ExperimentConfig;
-use smx::coordinator::{run_sim, RunConfig};
+use smx::coordinator::{RunConfig, Session};
 use smx::data::synth;
 use smx::experiments::runner;
 use smx::linalg::psd::PsdRoot;
-use smx::methods::{build, MethodSpec, METHOD_NAMES};
+use smx::methods::{MethodSpec, METHOD_NAMES};
 use smx::objective::Smoothness;
 use smx::prop_assert;
 use smx::sampling::{IndependentSampling, SamplingKind};
@@ -47,8 +47,6 @@ fn prop_every_method_makes_progress_and_accounts_consistently() {
         |rng| {
             let (method_name, sampling, tau) = random_spec(rng, dim);
             let spec = MethodSpec::new(&method_name, tau, sampling, cfg.mu, vec![0.0; dim]);
-            let mut method = build(&spec, &prep.sm).unwrap();
-            let mut engines = prep.native_engines(cfg.mu);
             let rounds = 120;
             let run_cfg = RunConfig {
                 max_rounds: rounds,
@@ -56,7 +54,11 @@ fn prop_every_method_makes_progress_and_accounts_consistently() {
                 seed: rng.next_u64(),
                 ..Default::default()
             };
-            let r = run_sim(&mut method, &mut engines, &prep.x_star, &run_cfg);
+            let r = Session::new(spec)
+                .prepared(&prep)
+                .run_config(run_cfg)
+                .run()
+                .unwrap();
 
             // residual decreased from 1.0
             prop_assert!(
@@ -220,8 +222,6 @@ fn prop_downlink_coords_match_method_class() {
         |rng| {
             let (method_name, sampling, tau) = random_spec(rng, dim);
             let spec = MethodSpec::new(&method_name, tau, sampling, cfg.mu, vec![0.0; dim]);
-            let mut method = build(&spec, &prep.sm).unwrap();
-            let mut engines = prep.native_engines(cfg.mu);
             let rounds = 40;
             let run_cfg = RunConfig {
                 max_rounds: rounds,
@@ -229,7 +229,11 @@ fn prop_downlink_coords_match_method_class() {
                 seed: rng.next_u64(),
                 ..Default::default()
             };
-            let r = run_sim(&mut method, &mut engines, &prep.x_star, &run_cfg);
+            let r = Session::new(spec)
+                .prepared(&prep)
+                .run_config(run_cfg)
+                .run()
+                .unwrap();
             let down = r.records.last().unwrap().coords_down as f64
                 / (rounds as f64 * prep.sm.n() as f64);
             match method_name.as_str() {

@@ -1,47 +1,59 @@
-//! Cross-driver identity as one table-driven matrix test.
+//! Cross-driver identity as one table-driven matrix test — every column
+//! constructed through the [`Session`] builder, the crate's one front
+//! door.
 //!
-//! The three coordinator drivers — [`run_sim`] (sequential in-process),
-//! [`run_threaded`] (one OS thread per worker over fixed-capacity SPSC
-//! ring buffers, with an additional core-pinned column), and
-//! [`run_distributed`](smx::wire::run_distributed) (loopback transports
-//! through the wire codec, lossless `f64` payload) — must produce
-//! **bitwise identical** iterates and identical communication accounting
-//! over the full grid
+//! The three coordinator drivers — [`Driver::Sim`] (sequential
+//! in-process), [`Driver::Threaded`] (one OS thread per worker over
+//! fixed-capacity SPSC ring buffers, with an additional core-pinned
+//! column), and [`Driver::Distributed`] over loopback transports through
+//! the wire codec (lossless `f64` payload) — must produce **bitwise
+//! identical** iterates and identical communication accounting over the
+//! full grid
 //!
 //!   {dcgd+, diana+, adiana+} × {uniform, importance-diana} × {2, 4 shards}
 //!
 //! with the distributed driver additionally run at both one-process-per-
-//! shard and 2 shards-multiplexed-per-process. This supersedes the former
-//! ad-hoc pairwise asserts (`coordinator::tests::sim_and_threaded_agree_
-//! bitwise`, the per-method loop in `wire_distributed.rs`); diana++'s
+//! shard and 2 shards-multiplexed-per-process. A second test asserts the
+//! observer seam is non-perturbing: a JSONL-streaming observer attached
+//! to the run leaves the trajectory bitwise unchanged versus the plain
+//! collecting run, and streams exactly the collected records. diana++'s
 //! sparse downlink and the measured-bytes accounting keep their dedicated
 //! coverage in `wire_distributed.rs`.
 
-use smx::coordinator::{run_sim, run_threaded, EngineFactory, RunConfig};
+use smx::coordinator::{
+    DistTransport, Driver, EngineFactory, ObserverControl, RoundObserver, RoundRecord, RunConfig,
+    RunResult, Session,
+};
 use smx::data::synth;
-use smx::methods::{build, MethodSpec};
+use smx::methods::MethodSpec;
 use smx::objective::Smoothness;
 use smx::runtime::native::NativeEngine;
 use smx::runtime::GradEngine;
 use smx::sampling::SamplingKind;
-use smx::wire::run_distributed_loopback;
 use std::sync::Arc;
 
 fn bits(xs: &[f64]) -> Vec<u64> {
     xs.iter().map(|v| v.to_bits()).collect()
 }
 
-#[test]
-fn drivers_bitwise_identical_over_method_sampling_shard_grid() {
-    let mu = 1e-3;
-    for n_shards in [2usize, 4] {
+struct Cell {
+    sm: Smoothness,
+    shards: Vec<smx::data::Shard>,
+    x_star: Vec<f64>,
+    mu: f64,
+    cfg: RunConfig,
+    factory: EngineFactory,
+}
+
+impl Cell {
+    fn new(n_shards: usize) -> Cell {
+        let mu = 1e-3;
         let ds = synth::generate(&synth::tiny_spec(), 11);
         let (_, shards) = ds.prepare(n_shards, 11);
         let sm = Smoothness::build(&shards, mu);
-        let dim = sm.dim;
         // identity is a trajectory property; the reference point only
         // feeds the residual metric, so 0 serves
-        let x_star = vec![0.0; dim];
+        let x_star = vec![0.0; sm.dim];
         let cfg = RunConfig {
             max_rounds: 25,
             ..Default::default()
@@ -50,74 +62,107 @@ fn drivers_bitwise_identical_over_method_sampling_shard_grid() {
         let factory: EngineFactory = Arc::new(move |i| {
             Box::new(NativeEngine::from_shard(&shards_f[i], mu)) as Box<dyn GradEngine>
         });
+        Cell {
+            sm,
+            shards,
+            x_star,
+            mu,
+            cfg,
+            factory,
+        }
+    }
 
+    fn engines(&self) -> Vec<Box<dyn GradEngine>> {
+        self.shards
+            .iter()
+            .map(|s| Box::new(NativeEngine::from_shard(s, self.mu)) as Box<dyn GradEngine>)
+            .collect()
+    }
+
+    /// One builder, any driver: the matrix columns differ only in the
+    /// `.driver(..)` argument.
+    fn run(&self, spec: &MethodSpec, driver: Driver, cfg: &RunConfig) -> RunResult {
+        let mut session = Session::new(spec.clone())
+            .smoothness(&self.sm)
+            .x_star(&self.x_star)
+            .driver(driver.clone())
+            .run_config(cfg.clone());
+        session = match driver {
+            Driver::Sim => session.engines(self.engines()),
+            _ => session.engine_factory(self.factory.clone()),
+        };
+        session.run().expect("session run")
+    }
+}
+
+#[test]
+fn drivers_bitwise_identical_over_method_sampling_shard_grid() {
+    for n_shards in [2usize, 4] {
+        let cell0 = Cell::new(n_shards);
         for method in ["dcgd+", "diana+", "adiana+"] {
             for sampling in [SamplingKind::Uniform, SamplingKind::ImportanceDiana] {
-                let cell = format!("{method}/{}/n={n_shards}", sampling.name());
-                let spec = MethodSpec::new(method, 2.0, sampling, mu, vec![0.0; dim]);
+                let cellname = format!("{method}/{}/n={n_shards}", sampling.name());
+                let spec =
+                    MethodSpec::new(method, 2.0, sampling, cell0.mu, vec![0.0; cell0.sm.dim]);
 
-                let mut m_sim = build(&spec, &sm).unwrap();
-                let mut engines: Vec<Box<dyn GradEngine>> = shards
-                    .iter()
-                    .map(|s| Box::new(NativeEngine::from_shard(s, mu)) as Box<dyn GradEngine>)
-                    .collect();
-                let r_sim = run_sim(&mut m_sim, &mut engines, &x_star, &cfg);
+                let r_sim = cell0.run(&spec, Driver::Sim, &cell0.cfg);
                 let sim_last = r_sim.records.last().unwrap().clone();
 
-                // run_threaded (SPSC ring-buffer channels)
-                let m_thr = build(&spec, &sm).unwrap();
-                let r_thr = run_threaded(m_thr, factory.clone(), &x_star, &cfg);
+                // threaded driver (SPSC ring-buffer channels)
+                let r_thr = cell0.run(&spec, Driver::Threaded, &cell0.cfg);
                 assert_eq!(
                     bits(&r_sim.final_x),
                     bits(&r_thr.final_x),
-                    "{cell}: run_threaded diverged from run_sim"
+                    "{cellname}: threaded diverged from sim"
                 );
                 let thr_last = r_thr.records.last().unwrap();
-                assert_eq!(sim_last.coords_up, thr_last.coords_up, "{cell}: coords_up (threaded)");
-                assert_eq!(sim_last.bits_up, thr_last.bits_up, "{cell}: bits_up (threaded)");
-                assert_eq!(sim_last.bytes_up, thr_last.bytes_up, "{cell}: bytes_up (threaded)");
+                assert_eq!(sim_last.coords_up, thr_last.coords_up, "{cellname}: coords_up (threaded)");
+                assert_eq!(sim_last.bits_up, thr_last.bits_up, "{cellname}: bits_up (threaded)");
+                assert_eq!(sim_last.bytes_up, thr_last.bytes_up, "{cellname}: bytes_up (threaded)");
 
                 // pinned column: core pinning is a scheduling hint only —
                 // the synchronous ring protocol makes the trajectory
                 // independent of where worker threads land
                 if method == "diana+" {
-                    let m_pin = build(&spec, &sm).unwrap();
                     let cfg_pin = RunConfig {
                         pin: true,
-                        ..cfg.clone()
+                        ..cell0.cfg.clone()
                     };
-                    let r_pin = run_threaded(m_pin, factory.clone(), &x_star, &cfg_pin);
+                    let r_pin = cell0.run(&spec, Driver::Threaded, &cfg_pin);
                     assert_eq!(
                         bits(&r_sim.final_x),
                         bits(&r_pin.final_x),
-                        "{cell}: pinned run_threaded diverged from run_sim"
+                        "{cellname}: pinned threaded diverged from sim"
                     );
                 }
 
-                // run_distributed over loopback, f64 payload: one process
-                // per shard, then 2 shards multiplexed per process
+                // distributed over loopback, f64 payload: one process per
+                // shard, then 2 shards multiplexed per process
                 let mut procs_grid = vec![n_shards];
                 if n_shards > 2 {
                     procs_grid.push(2);
                 }
                 for procs in procs_grid {
-                    let m_dist = build(&spec, &sm).unwrap();
-                    let r_dist =
-                        run_distributed_loopback(m_dist, factory.clone(), &x_star, &cfg, procs)
-                            .unwrap();
+                    let r_dist = cell0.run(
+                        &spec,
+                        Driver::Distributed {
+                            transport: DistTransport::Loopback { procs },
+                        },
+                        &cell0.cfg,
+                    );
                     assert_eq!(
                         bits(&r_sim.final_x),
                         bits(&r_dist.final_x),
-                        "{cell}: run_distributed(procs={procs}) diverged from run_sim"
+                        "{cellname}: distributed(procs={procs}) diverged from sim"
                     );
                     let dist_last = r_dist.records.last().unwrap();
                     assert_eq!(
                         sim_last.coords_up, dist_last.coords_up,
-                        "{cell}: coords_up (distributed, procs={procs})"
+                        "{cellname}: coords_up (distributed, procs={procs})"
                     );
                     assert_eq!(
                         sim_last.bits_up, dist_last.bits_up,
-                        "{cell}: bits_up (distributed, procs={procs})"
+                        "{cellname}: bits_up (distributed, procs={procs})"
                     );
                     // measured frame bytes: the sim's uplink_frame_len
                     // accounting must equal what the distributed driver
@@ -125,18 +170,102 @@ fn drivers_bitwise_identical_over_method_sampling_shard_grid() {
                     // (two-sparse-uplinks) frame path covered here
                     assert_eq!(
                         sim_last.bytes_up, dist_last.bytes_up,
-                        "{cell}: measured bytes_up (distributed, procs={procs})"
+                        "{cellname}: measured bytes_up (distributed, procs={procs})"
                     );
                     if procs == n_shards {
                         // one process per shard matches the sim's
                         // per-worker downlink broadcast model exactly
                         assert_eq!(
                             sim_last.bytes_down, dist_last.bytes_down,
-                            "{cell}: measured bytes_down (distributed, procs={procs})"
+                            "{cellname}: measured bytes_down (distributed, procs={procs})"
                         );
                     }
                 }
             }
         }
+    }
+}
+
+#[test]
+fn streaming_observers_do_not_perturb_the_trajectory() {
+    // Observers receive shared references after the server applies each
+    // round; attaching a JSONL streaming sink (plus a counting observer)
+    // must leave the trajectory bitwise unchanged versus the plain
+    // collecting run, on every driver.
+    struct Counter<'c> {
+        seen: &'c std::cell::Cell<usize>,
+    }
+    impl RoundObserver for Counter<'_> {
+        fn on_round(&mut self, _rec: &RoundRecord) -> ObserverControl {
+            self.seen.set(self.seen.get() + 1);
+            ObserverControl::Continue
+        }
+    }
+
+    let cell = Cell::new(4);
+    let spec = MethodSpec::new(
+        "diana+",
+        2.0,
+        SamplingKind::ImportanceDiana,
+        cell.mu,
+        vec![0.0; cell.sm.dim],
+    );
+    let drivers = [
+        Driver::Sim,
+        Driver::Threaded,
+        Driver::Distributed {
+            transport: DistTransport::Loopback { procs: 2 },
+        },
+    ];
+    for driver in drivers {
+        let plain = cell.run(&spec, driver.clone(), &cell.cfg);
+
+        let jsonl_path = std::env::temp_dir().join(format!(
+            "smx_driver_matrix_{}.jsonl",
+            match &driver {
+                Driver::Sim => "sim",
+                Driver::Threaded => "threaded",
+                Driver::Distributed { .. } => "dist",
+            }
+        ));
+        let seen = std::cell::Cell::new(0usize);
+        let mut session = Session::new(spec.clone())
+            .smoothness(&cell.sm)
+            .x_star(&cell.x_star)
+            .driver(driver.clone())
+            .run_config(cell.cfg.clone())
+            .observer(smx::coordinator::JsonlObserver::create(&jsonl_path).unwrap())
+            .observer(Counter { seen: &seen });
+        session = match driver {
+            Driver::Sim => session.engines(cell.engines()),
+            _ => session.engine_factory(cell.factory.clone()),
+        };
+        let observed = session.run().expect("observed session run");
+        assert_eq!(seen.get(), observed.records.len(), "counter observer call count");
+
+        assert_eq!(
+            bits(&plain.final_x),
+            bits(&observed.final_x),
+            "observers perturbed the trajectory"
+        );
+        assert_eq!(plain.records.len(), observed.records.len());
+        assert_eq!(
+            plain.records.last().unwrap().coords_up,
+            observed.records.last().unwrap().coords_up
+        );
+
+        // the stream carries exactly the records the collector kept
+        let text = std::fs::read_to_string(&jsonl_path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), observed.records.len(), "jsonl line count");
+        for (line, rec) in lines.iter().zip(&observed.records) {
+            let j = smx::util::json::Json::parse(line).expect("valid json line");
+            assert_eq!(j.get("round").as_usize().unwrap(), rec.round);
+            assert_eq!(
+                j.get("coords_up").as_f64().unwrap() as u64,
+                rec.coords_up
+            );
+        }
+        std::fs::remove_file(&jsonl_path).ok();
     }
 }

@@ -76,8 +76,8 @@ fn pjrt_loss_matches_native() {
 
 #[test]
 fn distributed_run_identical_under_both_engines() {
-    use smx::coordinator::{run_sim, RunConfig};
-    use smx::methods::{build, MethodSpec};
+    use smx::coordinator::{RunConfig, Session};
+    use smx::methods::MethodSpec;
     use smx::objective::{Problem, Smoothness};
     use smx::sampling::SamplingKind;
 
@@ -100,22 +100,32 @@ fn distributed_run_identical_under_both_engines() {
         ..Default::default()
     };
 
-    let mut m1 = build(&spec, &sm).unwrap();
-    let mut native_engines: Vec<Box<dyn GradEngine>> = shards
+    let native_engines: Vec<Box<dyn GradEngine>> = shards
         .iter()
         .map(|s| Box::new(NativeEngine::from_shard(s, mu)) as Box<dyn GradEngine>)
         .collect();
-    let r_native = run_sim(&mut m1, &mut native_engines, &sol.x_star, &cfg);
+    let r_native = Session::new(spec.clone())
+        .smoothness(&sm)
+        .x_star(&sol.x_star)
+        .engines(native_engines)
+        .run_config(cfg.clone())
+        .run()
+        .unwrap();
 
-    let mut m2 = build(&spec, &sm).unwrap();
-    let mut pjrt_engines: Vec<Box<dyn GradEngine>> = shards
+    let pjrt_engines: Vec<Box<dyn GradEngine>> = shards
         .iter()
         .map(|s| {
             Box::new(PjrtEngine::from_shard(&manifest, s, mu).expect("pjrt engine"))
                 as Box<dyn GradEngine>
         })
         .collect();
-    let r_pjrt = run_sim(&mut m2, &mut pjrt_engines, &sol.x_star, &cfg);
+    let r_pjrt = Session::new(spec)
+        .smoothness(&sm)
+        .x_star(&sol.x_star)
+        .engines(pjrt_engines)
+        .run_config(cfg)
+        .run()
+        .unwrap();
 
     // identical sampling sequences + f64-exact gradients ⇒ near-identical
     // trajectories (tiny drift allowed for XLA reassociation)

@@ -11,19 +11,20 @@
 //!   tolerances documented in `wire/mod.rs`.
 //! * Chaos: a worker killed mid-run and replaced (rejoin + journal
 //!   replay) — or absorbed by the survivor (grace-window reassignment +
-//!   reserve-half adoption) — still yields a final model bitwise
-//!   identical to `run_sim` under the f64 payload.
+//!   reserve-half adoption), or restored from a checkpoint snapshot after
+//!   journal truncation — still yields a final model bitwise identical to
+//!   the sim driver under the f64 payload.
+//!
+//! Every run is constructed through the [`Session`] front door.
 
 use smx::config::ExperimentConfig;
-use smx::coordinator::{run_sim, EngineFactory, RunConfig};
+use smx::coordinator::{DistTransport, Driver, EngineFactory, RunConfig, Session};
 use smx::experiments::runner::{self, run_config};
-use smx::methods::{build, MethodSpec};
+use smx::methods::MethodSpec;
 use smx::runtime::native::NativeEngine;
 use smx::runtime::GradEngine;
 use smx::sampling::SamplingKind;
-use smx::wire::{
-    run_distributed_loopback, serve_on, worker_connect, worker_connect_with, Payload, WorkerOpts,
-};
+use smx::wire::{serve_on, worker_connect, worker_connect_with, Payload, WorkerOpts};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -71,20 +72,23 @@ fn loopback_f64_accounting_and_sparse_downlink() {
         let mut spec = MethodSpec::new(name, tau, sampling, cfg.mu, vec![0.0; prep.sm.dim]);
         spec.practical_adiana = cfg.practical_adiana;
 
-        let mut m_sim = build(&spec, &prep.sm).unwrap();
-        let mut engines = prep.native_engines(cfg.mu);
-        let r_sim = run_sim(&mut m_sim, &mut engines, &prep.x_star, &run_cfg);
+        let r_sim = Session::new(spec.clone())
+            .prepared(&prep)
+            .driver(Driver::Sim)
+            .run_config(run_cfg.clone())
+            .run()
+            .unwrap();
 
         for procs in [n, 2] {
-            let m_dist = build(&spec, &prep.sm).unwrap();
-            let r_dist = run_distributed_loopback(
-                m_dist,
-                factory_for(&prep, cfg.mu),
-                &prep.x_star,
-                &run_cfg,
-                procs,
-            )
-            .unwrap();
+            let r_dist = Session::new(spec.clone())
+                .prepared(&prep)
+                .driver(Driver::Distributed {
+                    transport: DistTransport::Loopback { procs },
+                })
+                .engine_factory(factory_for(&prep, cfg.mu))
+                .run_config(run_cfg.clone())
+                .run()
+                .unwrap();
 
             assert_eq!(
                 bits(&r_sim.final_x),
@@ -233,6 +237,69 @@ fn chaos_reassignment_to_survivor_is_bitwise_identical() {
 }
 
 #[test]
+fn chaos_snapshot_resume_is_bitwise_identical() {
+    // Checkpoint cadence 3, death after downlink 8: the server requests
+    // snapshots after rounds 3 and 6; each commits during the following
+    // round's gather (workers answer the request before touching the next
+    // downlink, and TCP preserves order), truncating the journal to the
+    // post-snapshot suffix. When the worker dies at round 8, the rounds
+    // up to 6 are *gone* from the journal — the replacement can only
+    // catch up by restoring the round-6 state blobs (TAG_RESTORE) and
+    // replaying the ≤2 retained rounds. `--expect-restore` on the
+    // replacement asserts the restore actually happened, and `check_sim`
+    // inside serve_on asserts the final iterates AND coords_up are
+    // bitwise identical to the sim driver.
+    let mut cfg = tiny_cfg();
+    cfg.methods = vec!["diana+".into()];
+    cfg.sampling = SamplingKind::ImportanceDiana;
+    cfg.tau = 2.0;
+    cfg.max_rounds = 40;
+    cfg.checkpoint_every = 3;
+    cfg.wire.workers = 2;
+    cfg.wire.worker_timeout = 20.0;
+    cfg.out_dir = std::env::temp_dir().join("smx_wire_chaos_snapshot");
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+
+    let dying = {
+        let addr = addr.clone();
+        std::thread::spawn(move || {
+            worker_connect_with(
+                &addr,
+                WorkerOpts {
+                    die_after: Some(8),
+                    ..Default::default()
+                },
+            )
+        })
+    };
+    let survivor = {
+        let addr = addr.clone();
+        std::thread::spawn(move || worker_connect(&addr))
+    };
+    let replacement = std::thread::spawn(move || {
+        std::thread::sleep(Duration::from_millis(400));
+        worker_connect_with(
+            &addr,
+            WorkerOpts {
+                expect_restore: true,
+                ..Default::default()
+            },
+        )
+    });
+
+    serve_on(listener, &cfg, true)
+        .expect("serve_on --check-sim under worker death + snapshot-resume");
+    dying.join().unwrap().expect("dying worker (clean injected exit)");
+    survivor.join().unwrap().expect("surviving worker");
+    replacement
+        .join()
+        .unwrap()
+        .expect("replacement worker (must have been snapshot-restored)");
+    std::fs::remove_dir_all(&cfg.out_dir).ok();
+}
+
+#[test]
 fn lossy_payloads_track_f64_on_a1a() {
     // Documented tolerances (wire/mod.rs): after a few hundred rounds the
     // lossy trajectories stay within an additive tolerance of the f64
@@ -260,15 +327,16 @@ fn lossy_payloads_track_f64_on_a1a() {
             cfg.mu,
             vec![0.0; prep.sm.dim],
         );
-        let method = build(&spec, &prep.sm).unwrap();
-        let r = run_distributed_loopback(
-            method,
-            factory_for(&prep, cfg.mu),
-            &prep.x_star,
-            &run_cfg,
-            8, // 8 processes hosting ~13 shards each
-        )
-        .unwrap();
+        let r = Session::new(spec)
+            .prepared(&prep)
+            .driver(Driver::Distributed {
+                // 8 processes hosting ~13 shards each
+                transport: DistTransport::Loopback { procs: 8 },
+            })
+            .engine_factory(factory_for(&prep, cfg.mu))
+            .run_config(run_cfg)
+            .run()
+            .unwrap();
         r.final_residual()
     };
 

@@ -1,5 +1,5 @@
 #!/usr/bin/env bash
-# Multi-process smoke test for the wire subsystem, two legs:
+# Multi-process smoke test for the wire subsystem, four legs:
 #
 #  1. steady state — one `smx serve` coordinator and two `smx worker`
 #     processes on the synthetic tiny dataset (8 shards, 4 per worker
@@ -8,13 +8,21 @@
 #     worker 1 drops its connection right after receiving the round-5
 #     downlink (`--die-after 5`, observably a SIGKILL at that instant),
 #     the replacement rejoins via the Hello handshake and replays the
-#     journal.
+#     journal;
+#  3. snapshot — chaos again with `--checkpoint-every 3`: the journal is
+#     truncated at each committed worker-state snapshot, so the
+#     replacement can only catch up via a snapshot restore — asserted by
+#     its own `--expect-restore` exit code;
+#  4. --driver distributed — the same protocol through the `Session`
+#     front door from the plain `smx train` CLI (loopback transports, one
+#     process), asserted bitwise against a `--driver sim` run by diffing
+#     the residual-curve CSVs.
 #
-# Both legs pass `--check-sim`, which makes the server re-run the
-# identical configuration through the in-process `run_sim` driver and
-# exit nonzero unless the distributed iterates are bitwise identical — so
-# the whole codec/transport/poller/runtime stack, including the recovery
-# path, is asserted by the server's exit code.
+# The serve legs pass `--check-sim`, which makes the server re-run the
+# identical configuration through the in-process sim driver and exit
+# nonzero unless the distributed iterates are bitwise identical — so the
+# whole codec/transport/poller/runtime stack, including the recovery
+# paths, is asserted by the server's exit code.
 #
 #   BIN=target/release/smx PORT=4973 bash scripts/smoke_distributed.sh
 set -u
@@ -54,6 +62,18 @@ run_leg() {
       (sleep 1 && "$BIN" worker --connect "$addr") &
       w_pids+=("$!")
       ;;
+    snapshot)
+      # die after the round-6 snapshot committed (and truncated the
+      # journal): the replacement cannot replay from round 0 anymore and
+      # must be restored from the snapshot — --expect-restore makes the
+      # worker itself fail otherwise
+      "$BIN" worker --connect "$addr" --die-after 8 &
+      w_pids+=("$!")
+      "$BIN" worker --connect "$addr" &
+      w_pids+=("$!")
+      (sleep 1 && "$BIN" worker --connect "$addr" --expect-restore) &
+      w_pids+=("$!")
+      ;;
   esac
 
   wait "$serve_pid" || rc=1
@@ -72,3 +92,22 @@ run_leg() {
 
 run_leg steady "127.0.0.1:$PORT"
 run_leg chaos "127.0.0.1:$((PORT + 1))" --worker-timeout 60
+run_leg snapshot "127.0.0.1:$((PORT + 2))" --worker-timeout 60 --checkpoint-every 3
+
+# --driver distributed: the Session front door from the plain train CLI.
+# The wire protocol runs over loopback inside one process; its residual
+# curve must be bitwise identical to the sim driver's (wall_secs, column
+# 9, is the only legitimately differing column; bytes_down depends on the
+# process fan-in, so compare through bytes_up, column 7).
+for drv in sim distributed; do
+  timeout "${SMOKE_TIMEOUT:-300}" "$BIN" train --dataset tiny --workers 8 --methods diana+ \
+    --sampling importance-diana --tau 2 --max-rounds 30 --driver "$drv" \
+    --wire-workers 2 --out-dir "$OUT/drv_$drv" \
+    || { echo "train --driver $drv failed" >&2; exit 1; }
+done
+if ! diff <(cut -d, -f1-7 "$OUT/drv_sim/train_tiny.csv") \
+          <(cut -d, -f1-7 "$OUT/drv_distributed/train_tiny.csv"); then
+  echo "distributed smoke FAILED (--driver distributed diverged from --driver sim)" >&2
+  exit 1
+fi
+echo "distributed smoke OK (--driver leg: train CSVs bitwise identical through column 7)"
