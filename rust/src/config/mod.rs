@@ -38,10 +38,14 @@
 //! *processes* a serve run waits for (0 ⇒ one per shard), `float_bits`
 //! optionally overrides the modeled bit account (it defaults to the
 //! payload's width, so `"payload": "f32"` reproduces Appendix C.5's
-//! 32-bit accounting with no further flags), and `worker_timeout` is the
+//! 32-bit accounting with no further flags), `worker_timeout` is the
 //! fault-tolerance grace window in seconds (`--worker-timeout`; 0
-//! disables fault handling). The top-level `pin` key (`--pin`) opts into
-//! per-worker core pinning in the threaded driver.
+//! disables fault handling), `run_dir` (`--run-dir`) points `smx serve`
+//! at a durable run-log directory for crash-restart resume, `crc`
+//! (default on; `--no-crc` disables) appends a CRC32 trailer to every
+//! frame, and `fault_plan` (`--fault-plan`) schedules server-side fault
+//! injection (see [`crate::wire::fault`]). The top-level `pin` key
+//! (`--pin`) opts into per-worker core pinning in the threaded driver.
 
 use crate::coordinator::DriverKind;
 use crate::data::{spec_by_name, synth};
@@ -71,6 +75,18 @@ pub struct WireConfig {
     /// single-shard round computation — workers cannot heartbeat
     /// mid-gradient.
     pub worker_timeout: f64,
+    /// durable run-log directory (`--run-dir`): `smx serve` persists the
+    /// downlink journal and committed snapshots there and, on restart,
+    /// resumes the interrupted run bitwise identically (see
+    /// [`crate::wire::runlog`]). None ⇒ in-memory journal only.
+    pub run_dir: Option<String>,
+    /// CRC32-guard every wire frame and run-log record (`--no-crc`
+    /// disables the trailer on the socket; the run log always checks)
+    pub crc: bool,
+    /// scriptable fault-injection schedule (`--fault-plan`; grammar in
+    /// [`crate::wire::fault`]). Server-side events only — workers take
+    /// their plans on their own command line.
+    pub fault_plan: Option<String>,
 }
 
 impl Default for WireConfig {
@@ -81,6 +97,9 @@ impl Default for WireConfig {
             workers: 0,
             float_bits: None,
             worker_timeout: 30.0,
+            run_dir: None,
+            crc: true,
+            fault_plan: None,
         }
     }
 }
@@ -119,6 +138,11 @@ impl WireConfig {
                 "worker_timeout" => {
                     w.worker_timeout = v.as_f64().context("wire.worker_timeout")?
                 }
+                "run_dir" => w.run_dir = Some(v.as_str().context("wire.run_dir")?.to_string()),
+                "crc" => w.crc = v.as_bool().context("wire.crc")?,
+                "fault_plan" => {
+                    w.fault_plan = Some(v.as_str().context("wire.fault_plan")?.to_string())
+                }
                 other => bail!("unknown wire config key '{other}'"),
             }
         }
@@ -131,9 +155,16 @@ impl WireConfig {
             ("listen", Json::Str(self.listen.clone())),
             ("workers", Json::Num(self.workers as f64)),
             ("worker_timeout", Json::Num(self.worker_timeout)),
+            ("crc", Json::Bool(self.crc)),
         ];
         if let Some(b) = self.float_bits {
             fields.push(("float_bits", Json::Num(b as f64)));
+        }
+        if let Some(d) = &self.run_dir {
+            fields.push(("run_dir", Json::Str(d.clone())));
+        }
+        if let Some(p) = &self.fault_plan {
+            fields.push(("fault_plan", Json::Str(p.clone())));
         }
         Json::obj(fields)
     }
@@ -172,7 +203,7 @@ pub struct ExperimentConfig {
     /// Output is bitwise identical for every value (deterministic per-cell
     /// seeds; see `experiments::pool`).
     pub jobs: usize,
-    /// pin `run_threaded` worker `i` to core `i mod cores`
+    /// pin threaded-driver worker `i` to core `i mod cores`
     /// (`sched_setaffinity`; no-op off Linux). Cannot affect results —
     /// asserted by the pinned column in `tests/driver_matrix.rs`.
     pub pin: bool,
@@ -367,6 +398,15 @@ impl ExperimentConfig {
                 self.wire.effective_float_bits() as usize,
             ) as u32);
         }
+        if let Some(d) = args.get("run-dir") {
+            self.wire.run_dir = Some(d.to_string());
+        }
+        if args.has("no-crc") {
+            self.wire.crc = !args.bool_or("no-crc", false);
+        }
+        if let Some(p) = args.get("fault-plan") {
+            self.wire.fault_plan = Some(p.to_string());
+        }
         self.validate()
     }
 
@@ -400,7 +440,52 @@ impl ExperimentConfig {
                 );
             }
         }
+        if let Some(spec) = &self.wire.fault_plan {
+            let plan = crate::wire::FaultPlan::parse(spec, self.seed)
+                .with_context(|| format!("bad fault plan '{spec}'"))?;
+            let corrupts = plan
+                .events
+                .iter()
+                .any(|e| e.action == crate::wire::FaultAction::CorruptDownlink);
+            if corrupts && !self.wire.crc {
+                bail!(
+                    "fault plan '{spec}' injects frame corruption, which is only \
+                     detectable with frame CRCs — drop --no-crc"
+                );
+            }
+        }
         Ok(())
+    }
+
+    /// Canonical string identifying *the run* for the durable run log's
+    /// config hash: exactly the fields that determine the trajectory.
+    /// Operational knobs a restart may legitimately change — listen
+    /// address, worker/process counts (the elastic runtime is
+    /// process-count-invariant), timeouts, CRC framing, checkpoint
+    /// cadence, fault plan, directories — are deliberately excluded, so
+    /// a crashed `--fault-plan kill-server@rN` run can be resumed
+    /// without re-arming the kill.
+    pub fn canonical_identity(&self) -> String {
+        format!(
+            "dataset={};shards={};mu={:e};tau={:e};methods={};sampling={};max_rounds={};\
+             target_residual={:e};record_every={};seed={};engine={};payload={};float_bits={};\
+             start_near_opt={};practical_adiana={}",
+            self.dataset,
+            self.effective_workers(),
+            self.mu,
+            self.tau,
+            self.methods.join(","),
+            self.sampling.name(),
+            self.max_rounds,
+            self.target_residual,
+            self.record_every,
+            self.seed,
+            self.engine.name(),
+            self.wire.payload.name(),
+            self.wire.effective_float_bits(),
+            self.start_near_opt,
+            self.practical_adiana,
+        )
     }
 
     pub fn to_json(&self) -> Json {
@@ -509,6 +594,71 @@ mod tests {
             &Json::parse(r#"{"wire": {"float_bits": 65}}"#).unwrap()
         )
         .is_err());
+    }
+
+    #[test]
+    fn durability_and_fault_keys_parse() {
+        let j = Json::parse(
+            r#"{"wire": {"run_dir": "/tmp/r", "crc": false, "fault_plan": "kill@r3"}}"#,
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(c.wire.run_dir.as_deref(), Some("/tmp/r"));
+        assert!(!c.wire.crc);
+        assert_eq!(c.wire.fault_plan.as_deref(), Some("kill@r3"));
+        // JSON roundtrip keeps all three
+        let c2 = ExperimentConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2.wire.run_dir, c.wire.run_dir);
+        assert!(!c2.wire.crc);
+        assert_eq!(c2.wire.fault_plan, c.wire.fault_plan);
+        // defaults: CRC on, no run dir, no plan
+        let d = ExperimentConfig::default();
+        assert!(d.wire.crc && d.wire.run_dir.is_none() && d.wire.fault_plan.is_none());
+
+        // CLI overrides
+        let mut c3 = ExperimentConfig::default();
+        let args = Args::parse(
+            "--run-dir runs/x --no-crc --fault-plan kill-server@r10"
+                .split_whitespace()
+                .map(String::from),
+            false,
+        );
+        c3.apply_args(&args).unwrap();
+        assert_eq!(c3.wire.run_dir.as_deref(), Some("runs/x"));
+        assert!(!c3.wire.crc);
+        assert_eq!(c3.wire.fault_plan.as_deref(), Some("kill-server@r10"));
+
+        // a malformed plan is rejected at validation, not at fire time
+        assert!(ExperimentConfig::from_json(
+            &Json::parse(r#"{"wire": {"fault_plan": "explode@r3"}}"#).unwrap()
+        )
+        .is_err());
+        // corruption injection without CRCs is undetectable → rejected
+        assert!(ExperimentConfig::from_json(
+            &Json::parse(r#"{"wire": {"fault_plan": "corrupt-downlink@r3", "crc": false}}"#)
+                .unwrap()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn canonical_identity_pins_the_trajectory_not_the_plumbing() {
+        let a = ExperimentConfig::default();
+        let mut b = ExperimentConfig::default();
+        // operational knobs a restart may change leave the identity alone
+        b.wire.listen = "0.0.0.0:1".into();
+        b.wire.run_dir = Some("/tmp/x".into());
+        b.wire.fault_plan = Some("kill-server@r5".into());
+        b.wire.crc = false;
+        b.wire.worker_timeout = 1.0;
+        b.checkpoint_every = 7;
+        assert_eq!(a.canonical_identity(), b.canonical_identity());
+        // trajectory-determining fields do not
+        b.seed = 43;
+        assert_ne!(a.canonical_identity(), b.canonical_identity());
+        let mut c = ExperimentConfig::default();
+        c.wire.payload = Payload::Q8;
+        assert_ne!(a.canonical_identity(), c.canonical_identity());
     }
 
     #[test]

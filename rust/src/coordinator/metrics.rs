@@ -50,8 +50,8 @@ impl RoundTotals {
 /// stream itself flows through a
 /// [`RoundObserver`](crate::coordinator::RoundObserver), and
 /// [`RunOutcome::into_result`] reattaches whatever the collecting
-/// observer gathered. [`Session`](crate::coordinator::Session) (and the
-/// deprecated `run_*` shims) do this for you.
+/// observer gathered. [`Session`](crate::coordinator::Session) does this
+/// for you.
 #[derive(Debug)]
 pub struct RunOutcome {
     pub method: String,

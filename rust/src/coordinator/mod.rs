@@ -43,11 +43,11 @@
 //! would produce under [`RunConfig::payload`] — next to the modeled
 //! `bits_up` account.
 //!
-//! The pre-`Session` free functions ([`run_sim`], [`run_threaded`], and
-//! `wire::run_distributed*`) remain as thin deprecated shims over the
-//! observer-threaded cores ([`run_sim_observed`] /
-//! [`run_threaded_observed`]); they will be removed once external callers
-//! have migrated.
+//! The observer-threaded cores ([`run_sim_observed`] /
+//! [`run_threaded_observed`]) are the only per-driver entry points; the
+//! pre-`Session` deprecated shims (`run_sim`, `run_threaded`,
+//! `wire::run_distributed*`) have been removed — construct a [`Session`]
+//! instead.
 
 pub mod metrics;
 pub mod session;
@@ -225,22 +225,6 @@ pub fn run_sim_observed(
     }
 }
 
-/// Pre-`Session` entry point for the in-process driver.
-#[deprecated(
-    note = "drive runs through `coordinator::Session` (Driver::Sim); this shim wraps \
-            `run_sim_observed` with the default collecting observer"
-)]
-pub fn run_sim(
-    method: &mut Method,
-    engines: &mut [Box<dyn GradEngine>],
-    x_star: &[f64],
-    cfg: &RunConfig,
-) -> RunResult {
-    let mut collect = CollectObserver::for_cfg(cfg);
-    let out = run_sim_observed(method, engines, x_star, cfg, &mut collect);
-    out.into_result(collect.into_records())
-}
-
 enum ToWorker {
     Round(Arc<Downlink>),
     /// Hand a consumed uplink buffer back to its worker for reuse (§Perf:
@@ -414,22 +398,6 @@ pub fn run_threaded_observed(
         stopped_by_observer: stopped,
         phases,
     }
-}
-
-/// Pre-`Session` entry point for the threaded driver.
-#[deprecated(
-    note = "drive runs through `coordinator::Session` (Driver::Threaded); this shim wraps \
-            `run_threaded_observed` with the default collecting observer"
-)]
-pub fn run_threaded(
-    method: Method,
-    engine_factory: EngineFactory,
-    x_star: &[f64],
-    cfg: &RunConfig,
-) -> RunResult {
-    let mut collect = CollectObserver::for_cfg(cfg);
-    let out = run_threaded_observed(method, engine_factory, x_star, cfg, &mut collect);
-    out.into_result(collect.into_records())
 }
 
 #[cfg(test)]
@@ -699,32 +667,4 @@ mod tests {
         );
     }
 
-    #[test]
-    #[allow(deprecated)]
-    fn deprecated_shims_match_session_output() {
-        // The shims must stay faithful wrappers until they are removed.
-        let (shards, sm, x_star) = setup();
-        let spec = MethodSpec::new("diana+", 2.0, SamplingKind::Uniform, 1e-3, vec![0.0; sm.dim]);
-        let cfg = RunConfig {
-            max_rounds: 20,
-            ..Default::default()
-        };
-        let mut m1 = build(&spec, &sm).unwrap();
-        let mut eng1 = engines(&shards);
-        let r_shim = run_sim(&mut m1, &mut eng1, &x_star, &cfg);
-
-        let r_session = Session::new(spec)
-            .smoothness(&sm)
-            .x_star(&x_star)
-            .engines(engines(&shards))
-            .run_config(cfg)
-            .run()
-            .unwrap();
-        assert_eq!(r_shim.final_x, r_session.final_x);
-        assert_eq!(r_shim.records.len(), r_session.records.len());
-        assert_eq!(
-            r_shim.records.last().unwrap().coords_up,
-            r_session.records.last().unwrap().coords_up
-        );
-    }
 }

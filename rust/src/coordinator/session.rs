@@ -362,6 +362,13 @@ impl Ticker {
     /// Emit the round-0 record. Returns `true` if an observer stopped the
     /// run before it began.
     pub fn start(&self, obs: &mut dyn RoundObserver) -> bool {
+        self.start_with_record(obs).0
+    }
+
+    /// [`Ticker::start`], also handing back the emitted round-0 record so
+    /// the wire runtime's durable run log can persist it (a resumed run
+    /// must replay the identical record stream, round 0 included).
+    pub fn start_with_record(&self, obs: &mut dyn RoundObserver) -> (bool, RoundRecord) {
         let rec = RoundRecord {
             round: 0,
             residual: 1.0,
@@ -372,7 +379,19 @@ impl Ticker {
             bytes_down: 0,
             wall_secs: 0.0,
         };
-        obs.on_round(&rec) == ObserverControl::Stop
+        (obs.on_round(&rec) == ObserverControl::Stop, rec)
+    }
+
+    /// Resume path: feed records recovered from a durable run log back
+    /// through the observer stream, exactly as the crashed process emitted
+    /// them (in place of [`Ticker::start`]). Returns `true` if an observer
+    /// stopped the run.
+    pub fn replay(&self, records: &[RoundRecord], obs: &mut dyn RoundObserver) -> bool {
+        let mut stop = false;
+        for rec in records {
+            stop |= obs.on_round(rec) == ObserverControl::Stop;
+        }
+        stop
     }
 
     /// Post-apply bookkeeping for `round`.
@@ -384,8 +403,22 @@ impl Ticker {
         x: &[f64],
         obs: &mut dyn RoundObserver,
     ) -> Tick {
+        self.tick_with_record(round, residual, acc, x, obs).0
+    }
+
+    /// [`Ticker::tick`], also handing back the record it emitted (`None`
+    /// when `round` was not a recorded one) for the durable run log.
+    pub fn tick_with_record(
+        &self,
+        round: usize,
+        residual: f64,
+        acc: &RoundTotals,
+        x: &[f64],
+        obs: &mut dyn RoundObserver,
+    ) -> (Tick, Option<RoundRecord>) {
         let hit_target = self.target_residual > 0.0 && residual <= self.target_residual;
         let mut stop = false;
+        let mut emitted = None;
         if round % self.record_every == 0 || round == self.max_rounds || hit_target {
             let rec = RoundRecord {
                 round,
@@ -398,17 +431,19 @@ impl Ticker {
                 wall_secs: self.t0.elapsed().as_secs_f64(),
             };
             stop = obs.on_round(&rec) == ObserverControl::Stop;
+            emitted = Some(rec);
         }
         if self.checkpoint_every > 0 && round % self.checkpoint_every == 0 {
             obs.on_checkpoint(round, x);
         }
-        if hit_target {
+        let tick = if hit_target {
             Tick::ReachedTarget
         } else if stop {
             Tick::Stopped
         } else {
             Tick::Continue
-        }
+        };
+        (tick, emitted)
     }
 }
 

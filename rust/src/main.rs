@@ -36,7 +36,9 @@ const USAGE: &str = "usage: smx <train|figures|tables|solve|info|serve|worker> [
   smx info    --dataset duke
   smx serve   --dataset a1a --methods diana+ --listen 127.0.0.1:4950 \\
               --wire-workers 2 --payload f32 [--check-sim] [--worker-timeout S]
+              [--run-dir DIR] [--fault-plan PLAN] [--no-crc]
   smx worker  --connect 127.0.0.1:4950 [--pin-core N] [--die-after K]
+              [--max-retries N] [--retry-base-ms MS] [--fault-plan PLAN]
 flags: --workers N --mu F --max-rounds N --target-residual F --seed N
        --engine native|pjrt --config FILE --out-dir DIR --data-dir DIR
        --record-every N --start-near-opt --jobs N (0 = all cores)
@@ -52,7 +54,15 @@ wire:  --payload f64|f32|q16|q8|q4 --listen HOST:PORT --wire-workers N
        --pin-core N (pin this worker process) --die-after K (chaos: drop
        the connection after the K-th downlink, like a SIGKILL)
        --expect-restore (chaos: worker fails unless it was resumed from a
-       checkpoint snapshot)";
+       checkpoint snapshot)
+       --run-dir DIR (durable run log; a killed server restarted with the
+       same config + --run-dir resumes bit-for-bit from its last
+       committed snapshot — exit code 137 marks a planned kill)
+       --no-crc (disable the CRC32 frame trailers; on by default)
+       --fault-plan 'kill-server@r12;drop-uplink@r5:w1;corrupt-downlink@r9;
+       delay@r7:50ms' (scripted faults; server events on serve, worker
+       events on worker) --max-retries N --retry-base-ms MS (worker
+       reconnect backoff after a connection loss)";
 
 fn main() {
     smx::util::log::init_from_env();
@@ -171,7 +181,15 @@ fn run() -> Result<()> {
         }
         "serve" => {
             let cfg = config_from(&args)?;
-            smx::wire::serve(&cfg, args.bool_or("check-sim", false))?;
+            if let Err(e) = smx::wire::serve(&cfg, args.bool_or("check-sim", false)) {
+                // a planned --fault-plan kill mimics SIGKILL: exit 137 so
+                // scripts can tell it from a real failure (exit 1)
+                if format!("{e:#}").contains(smx::wire::KILLED_MARKER) {
+                    eprintln!("{e:#}");
+                    std::process::exit(137);
+                }
+                return Err(e);
+            }
         }
         "worker" => {
             let addr = args
@@ -193,6 +211,28 @@ fn run() -> Result<()> {
                     })
                     .transpose()?,
                 expect_restore: args.bool_or("expect-restore", false),
+                // worker-side fault events never use the seeded corrupt
+                // bit, so the plan seed is irrelevant here
+                fault: args
+                    .get("fault-plan")
+                    .map(|p| smx::wire::FaultPlan::parse(p, 0))
+                    .transpose()?,
+                max_retries: args
+                    .get("max-retries")
+                    .map(|s| {
+                        s.parse::<usize>()
+                            .map_err(|_| anyhow::anyhow!("--max-retries expects a count"))
+                    })
+                    .transpose()?
+                    .unwrap_or_else(|| smx::wire::WorkerOpts::default().max_retries),
+                retry_base_ms: args
+                    .get("retry-base-ms")
+                    .map(|s| {
+                        s.parse::<u64>()
+                            .map_err(|_| anyhow::anyhow!("--retry-base-ms expects milliseconds"))
+                    })
+                    .transpose()?
+                    .unwrap_or_else(|| smx::wire::WorkerOpts::default().retry_base_ms),
             };
             smx::wire::worker_connect_with(addr, opts)?;
         }

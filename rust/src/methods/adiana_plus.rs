@@ -241,6 +241,24 @@ impl ServerAlgo for AccelServer {
     fn name(&self) -> &'static str {
         self.name
     }
+
+    fn save_state(&self, out: &mut Vec<u8>) {
+        // y_prev and the aggregation scratch are transient within apply;
+        // x is recomputed by the next downlink from (z, w, y)
+        crate::methods::state::put_vec(out, &self.y);
+        crate::methods::state::put_vec(out, &self.z);
+        crate::methods::state::put_vec(out, &self.w);
+        crate::methods::state::put_vec(out, &self.h);
+    }
+
+    fn load_state(&mut self, buf: &[u8]) -> bool {
+        let mut pos = 0;
+        crate::methods::state::get_vec(buf, &mut pos, &mut self.y)
+            && crate::methods::state::get_vec(buf, &mut pos, &mut self.z)
+            && crate::methods::state::get_vec(buf, &mut pos, &mut self.w)
+            && crate::methods::state::get_vec(buf, &mut pos, &mut self.h)
+            && pos == buf.len()
+    }
 }
 
 /// Shared constructor for ADIANA / ADIANA+.

@@ -106,6 +106,15 @@ impl ServerAlgo for DcgdPlusServer {
     fn name(&self) -> &'static str {
         "dcgd+"
     }
+
+    fn save_state(&self, out: &mut Vec<u8>) {
+        crate::methods::state::put_vec(out, &self.x);
+    }
+
+    fn load_state(&mut self, buf: &[u8]) -> bool {
+        let mut pos = 0;
+        crate::methods::state::get_vec(buf, &mut pos, &mut self.x) && pos == buf.len()
+    }
 }
 
 pub fn build(

@@ -88,6 +88,15 @@ impl ServerAlgo for DgdServer {
     fn name(&self) -> &'static str {
         "dgd"
     }
+
+    fn save_state(&self, out: &mut Vec<u8>) {
+        crate::methods::state::put_vec(out, &self.x);
+    }
+
+    fn load_state(&mut self, buf: &[u8]) -> bool {
+        let mut pos = 0;
+        crate::methods::state::get_vec(buf, &mut pos, &mut self.x) && pos == buf.len()
+    }
 }
 
 pub fn build(

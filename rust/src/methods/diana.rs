@@ -116,6 +116,18 @@ impl ServerAlgo for DianaServer {
     fn name(&self) -> &'static str {
         "diana"
     }
+
+    fn save_state(&self, out: &mut Vec<u8>) {
+        crate::methods::state::put_vec(out, &self.x);
+        crate::methods::state::put_vec(out, &self.h);
+    }
+
+    fn load_state(&mut self, buf: &[u8]) -> bool {
+        let mut pos = 0;
+        crate::methods::state::get_vec(buf, &mut pos, &mut self.x)
+            && crate::methods::state::get_vec(buf, &mut pos, &mut self.h)
+            && pos == buf.len()
+    }
 }
 
 pub fn build(

@@ -222,6 +222,29 @@ impl ServerAlgo for DianaPpServer {
     fn name(&self) -> &'static str {
         "diana++"
     }
+
+    fn save_state(&self, out: &mut Vec<u8>) {
+        crate::methods::state::put_vec(out, &self.x);
+        crate::methods::state::put_vec(out, &self.h);
+        crate::methods::state::put_vec(out, &self.hh);
+        // the un-broadcast δ and the protocol-ordering flags are part of
+        // the round-boundary state: a restart between apply and the next
+        // downlink must re-emit the identical sparse message
+        crate::methods::state::put_msg(out, &self.pending);
+        crate::methods::state::put_flag(out, self.pending_valid);
+        crate::methods::state::put_flag(out, self.first);
+    }
+
+    fn load_state(&mut self, buf: &[u8]) -> bool {
+        let mut pos = 0;
+        crate::methods::state::get_vec(buf, &mut pos, &mut self.x)
+            && crate::methods::state::get_vec(buf, &mut pos, &mut self.h)
+            && crate::methods::state::get_vec(buf, &mut pos, &mut self.hh)
+            && crate::methods::state::get_msg(buf, &mut pos, &mut self.pending)
+            && crate::methods::state::get_flag(buf, &mut pos, &mut self.pending_valid)
+            && crate::methods::state::get_flag(buf, &mut pos, &mut self.first)
+            && pos == buf.len()
+    }
 }
 
 /// diag of M_i = L_i^{1/2} L^† L_i^{1/2}, exactly (O(d²·rank) — used when

@@ -157,6 +157,64 @@ pub mod state {
         *pos += 4 + 8 * n;
         true
     }
+
+    /// Append a sparse message as a little-endian `u32` count, the raw
+    /// `u32` indices, then the raw f64 value bits. Unlike [`put_vec`] the
+    /// length is *not* shape-checked on read — sketch sizes vary round to
+    /// round — so [`get_msg`] resizes the target.
+    pub fn put_msg(out: &mut Vec<u8>, m: &crate::compress::SparseMsg) {
+        out.extend_from_slice(&(m.idx.len() as u32).to_le_bytes());
+        for &i in &m.idx {
+            out.extend_from_slice(&i.to_le_bytes());
+        }
+        for &x in &m.val {
+            out.extend_from_slice(&x.to_bits().to_le_bytes());
+        }
+    }
+
+    /// Read a message written by [`put_msg`] into `m` (cleared first,
+    /// capacity reused). Advances `pos`; returns `false` on truncation.
+    pub fn get_msg(buf: &[u8], pos: &mut usize, m: &mut crate::compress::SparseMsg) -> bool {
+        let Some(hdr) = buf.get(*pos..*pos + 4) else {
+            return false;
+        };
+        let n = u32::from_le_bytes(hdr.try_into().unwrap()) as usize;
+        let need = 4 + 12 * n;
+        let Some(body) = buf.get(*pos + 4..*pos + need) else {
+            return false;
+        };
+        m.clear();
+        for k in 0..n {
+            let i = u32::from_le_bytes(body[4 * k..4 * k + 4].try_into().unwrap());
+            let vb = &body[4 * n + 8 * k..4 * n + 8 * k + 8];
+            m.push(i, f64::from_bits(u64::from_le_bytes(vb.try_into().unwrap())));
+        }
+        *pos += need;
+        true
+    }
+
+    /// Append a boolean as one byte (0 or 1).
+    pub fn put_flag(out: &mut Vec<u8>, b: bool) {
+        out.push(b as u8);
+    }
+
+    /// Read a boolean written by [`put_flag`]; rejects any byte other
+    /// than 0/1 so corrupted state never loads silently.
+    pub fn get_flag(buf: &[u8], pos: &mut usize, b: &mut bool) -> bool {
+        match buf.get(*pos) {
+            Some(&0) => {
+                *b = false;
+                *pos += 1;
+                true
+            }
+            Some(&1) => {
+                *b = true;
+                *pos += 1;
+                true
+            }
+            _ => false,
+        }
+    }
 }
 
 /// Server-side half of a method.
@@ -181,6 +239,24 @@ pub trait ServerAlgo {
     fn dim(&self) -> usize;
 
     fn name(&self) -> &'static str;
+
+    /// Append the *round-evolving* server state (model iterate, shift
+    /// estimates, ADIANA's y/z/w triple, DIANA++'s pending δ, …) to
+    /// `out`, the server-side analogue of [`WorkerAlgo::save_state`].
+    /// Static configuration — roots, stepsizes, samplings — is rebuilt
+    /// deterministically from the [`MethodSpec`] and does not belong in
+    /// the blob. The wire runtime's durable run log persists exactly
+    /// these bytes at each committed snapshot so a restarted `smx serve`
+    /// resumes bit-for-bit (see [`crate::wire::runtime`]).
+    fn save_state(&self, _out: &mut Vec<u8>) {}
+
+    /// Restore the state written by [`ServerAlgo::save_state`]. Returns
+    /// `false` on a malformed or wrong-shape buffer (the caller treats
+    /// that as a corrupt run log and refuses to resume). The default
+    /// accepts only the empty buffer a stateless server saves.
+    fn load_state(&mut self, buf: &[u8]) -> bool {
+        buf.is_empty()
+    }
 }
 
 /// Overwrite `down` with a dense broadcast, reusing its buffers when the
@@ -387,5 +463,63 @@ mod tests {
         assert_eq!(up_a.delta, up_b.delta, "restored worker diverged");
         // malformed blobs are rejected
         assert!(!w2.load_state(&blob[..blob.len() - 1]));
+    }
+
+    #[test]
+    fn stateful_servers_save_load_roundtrip() {
+        // Server-side analogue of the worker test above: drive a method a
+        // few joint rounds, snapshot the server (and workers, so the next
+        // joint round is comparable), restore into a fresh build, and
+        // assert the next iterate is bit-identical. diana++ exercises the
+        // trickiest blob (pending δ message + protocol flags), adiana+
+        // the accelerated y/z/w triple plus the rng-coupled w update.
+        use crate::data::synth;
+        use crate::objective::Smoothness;
+        use crate::runtime::native::NativeEngine;
+        use crate::runtime::GradEngine;
+        use crate::sampling::SamplingKind;
+        use crate::util::rng::Rng;
+
+        let ds = synth::generate(&synth::tiny_spec(), 5);
+        let (global, shards) = ds.prepare(2, 5);
+        let sm = Smoothness::build(&shards, 1e-3).with_global(&global.a);
+        for name in METHOD_NAMES {
+            let spec = MethodSpec::new(name, 2.0, SamplingKind::Uniform, 1e-3, vec![0.0; sm.dim]);
+            let mut m = build(&spec, &sm).unwrap();
+            let mut m2 = build(&spec, &sm).unwrap();
+            let mut engines: Vec<Box<dyn GradEngine>> = shards
+                .iter()
+                .map(|s| Box::new(NativeEngine::from_shard(s, 1e-3)) as Box<dyn GradEngine>)
+                .collect();
+            let mut server_rng = Rng::new(3).derive(u64::MAX);
+            let mut worker_rngs: Vec<Rng> =
+                (0..shards.len() as u64).map(|i| Rng::new(3).derive(i)).collect();
+            let mut bufs = RoundBuffers::new(shards.len());
+            for _ in 0..4 {
+                sync_round(&mut m, &mut engines, &mut server_rng, &mut worker_rngs, &mut bufs);
+            }
+            let mut blob = Vec::new();
+            m.server.save_state(&mut blob);
+            assert!(!blob.is_empty(), "{name}: server state must not be empty");
+            assert!(m2.server.load_state(&blob), "{name}: server blob must load");
+            for (w, w2) in m.workers.iter().zip(m2.workers.iter_mut()) {
+                let mut wb = Vec::new();
+                w.save_state(&mut wb);
+                assert!(w2.load_state(&wb), "{name}: worker blob must load");
+            }
+            let mut rng_b = server_rng.clone();
+            let mut wr_b = worker_rngs.clone();
+            let mut bufs_b = RoundBuffers::new(shards.len());
+            sync_round(&mut m, &mut engines, &mut server_rng, &mut worker_rngs, &mut bufs);
+            sync_round(&mut m2, &mut engines, &mut rng_b, &mut wr_b, &mut bufs_b);
+            let a: Vec<u64> = m.server.iterate().iter().map(|v| v.to_bits()).collect();
+            let b: Vec<u64> = m2.server.iterate().iter().map(|v| v.to_bits()).collect();
+            assert_eq!(a, b, "{name}: restored server diverged");
+            // malformed blobs are rejected, not silently accepted
+            assert!(
+                !m2.server.load_state(&blob[..blob.len() - 1]),
+                "{name}: truncated server blob must be rejected"
+            );
+        }
     }
 }

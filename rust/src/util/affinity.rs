@@ -8,7 +8,8 @@
 //!
 //! Pinning is *per calling thread*: `pid = 0` addresses the current
 //! thread's scheduling entity, which is exactly what
-//! [`run_threaded`](crate::coordinator::run_threaded) wants (worker `i`
+//! [`run_threaded_observed`](crate::coordinator::run_threaded_observed)
+//! wants (worker `i`
 //! pins itself from inside its own thread) and what a single-threaded
 //! `smx worker` process wants (pin the whole round loop).
 

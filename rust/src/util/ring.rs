@@ -2,7 +2,8 @@
 //!
 //! `std::sync::mpsc` allocates a heap block per send (its internal linked
 //! segments), which made the channels the last per-round allocation source
-//! in [`run_threaded`](crate::coordinator::run_threaded) (§Perf backlog).
+//! in [`run_threaded_observed`](crate::coordinator::run_threaded_observed)
+//! (§Perf backlog).
 //! This ring preallocates every slot at construction: `send`/`recv` move
 //! the value in and out of a fixed `Vec<Option<T>>` under a mutex, so the
 //! steady state makes **zero allocator calls** — asserted for the whole

@@ -1,0 +1,290 @@
+//! Scriptable fault injection for the elastic wire runtime
+//! (`--fault-plan`).
+//!
+//! PR 4 hard-coded one failure mode (`--die-after N`: a worker exits
+//! after round *N*). The chaos matrix in `tests/chaos_matrix.rs` needs
+//! the full menagerie — server SIGKILL, dropped uplinks, corrupted
+//! frames, slow workers — on a *deterministic schedule*, so faults are
+//! described by a tiny plan grammar instead of a pile of one-off flags:
+//!
+//! ```text
+//! plan    := event (';' event)*
+//! event   := action '@r' ROUND suffix*
+//! suffix  := ':w' SHARD | ':' MILLIS 'ms'
+//! action  := 'kill' | 'drop-uplink' | 'delay' | 'kill-server'
+//!          | 'corrupt-downlink'
+//! ```
+//!
+//! For example `kill-server@r12;drop-uplink@r5:w1;corrupt-downlink@r9;delay@r7:50ms`
+//! kills the server after round 12, makes the worker hosting shard 1
+//! sever instead of sending its round-5 uplink, flips one seeded bit in
+//! a round-9 downlink frame, and sleeps 50 ms before stepping round 7.
+//!
+//! Who executes what:
+//!
+//! * **Worker side** (`kill`, `drop-uplink`, `delay`): passed via
+//!   `WorkerOpts::fault`. A `:wK` suffix restricts the event to the
+//!   worker hosting shard *K*; unqualified events apply to every
+//!   worker (useful single-worker, chaotic multi-worker).
+//! * **Server side** (`kill-server`, `corrupt-downlink`): passed via
+//!   the config's `wire.fault_plan`. `corrupt-downlink` flips one bit —
+//!   chosen by a [`SplitMix64`] stream over `(seed, round)` so every
+//!   rerun corrupts the same bit — in the CRC trailer'd frame sent to
+//!   one connection (`:wK` picks the worker hosting shard *K*, default
+//!   the first live connection), and therefore requires `wire.crc`.
+//!
+//! The plan is *descriptive*, not imperative: parsing never touches the
+//! network, and a plan whose rounds are never reached simply never
+//! fires. Determinism is the point — the chaos tests assert that runs
+//! under faults finish bitwise identical to undisturbed ones.
+
+use crate::util::rng::SplitMix64;
+use anyhow::{anyhow, bail, ensure, Result};
+use std::time::Duration;
+
+/// Error string the server surfaces when a `kill-server` event fires.
+/// `main` matches on it to exit with status 137 (mimicking SIGKILL) so
+/// scripts and tests can tell a planned death from a real failure.
+pub const KILLED_MARKER: &str = "server killed by fault plan";
+
+/// One scheduled fault.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultAction {
+    /// worker: vanish on receiving this round's downlink, without
+    /// replying (≡ old `--die-after`: the OS closing the socket is
+    /// observably a SIGKILL at that instant)
+    Kill,
+    /// worker: compute the round but sever the connection instead of
+    /// sending the uplink
+    DropUplink,
+    /// worker: sleep this long before stepping the round
+    Delay(u64),
+    /// server: abort the run loop after the round, skipping the clean
+    /// shutdown (workers see EOF, as under SIGKILL)
+    KillServer,
+    /// server: flip one seeded bit in this round's downlink frame to
+    /// one connection
+    CorruptDownlink,
+}
+
+/// One parsed `action@rN[:wK][:MSms]` event.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultEvent {
+    pub round: u64,
+    /// `:wK` — restrict to the worker/connection hosting this shard
+    pub shard: Option<usize>,
+    pub action: FaultAction,
+}
+
+/// A parsed, seeded fault schedule. Cheap to clone; carried by both the
+/// server config and `WorkerOpts` (each side only acts on its own
+/// events).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub events: Vec<FaultEvent>,
+    /// seeds the corrupted-bit choice so reruns are identical
+    pub seed: u64,
+}
+
+impl FaultPlan {
+    /// Parse a plan string. Empty/whitespace specs parse to an empty
+    /// plan (no events ever fire).
+    pub fn parse(spec: &str, seed: u64) -> Result<FaultPlan> {
+        let mut events = Vec::new();
+        for tok in spec.split(';').map(str::trim).filter(|t| !t.is_empty()) {
+            events.push(parse_event(tok)?);
+        }
+        Ok(FaultPlan { events, seed })
+    }
+
+    /// Does any event target the server side?
+    pub fn has_server_events(&self) -> bool {
+        self.events.iter().any(|e| {
+            matches!(e.action, FaultAction::KillServer | FaultAction::CorruptDownlink)
+        })
+    }
+
+    /// server: should the run loop abort after `round`?
+    pub fn kill_server_after(&self, round: u64) -> bool {
+        self.events
+            .iter()
+            .any(|e| e.round == round && e.action == FaultAction::KillServer)
+    }
+
+    /// server: corrupt this round's downlink? Returns the target shard
+    /// (None ⇒ first live connection) and the seeded bit index to flip
+    /// (the transport reduces it modulo the frame length).
+    pub fn corrupt_downlink_at(&self, round: u64) -> Option<(Option<usize>, u64)> {
+        let e = self
+            .events
+            .iter()
+            .find(|e| e.round == round && e.action == FaultAction::CorruptDownlink)?;
+        Some((e.shard, seeded_bit(self.seed, round)))
+    }
+
+    /// worker: exit after completing `round`? (`shards` = the shard ids
+    /// this worker hosts)
+    pub fn kill_worker_after(&self, round: u64, shards: &[usize]) -> bool {
+        self.worker_event(round, shards, |a| a == FaultAction::Kill)
+            .is_some()
+    }
+
+    /// worker: sever instead of sending this round's uplink?
+    pub fn drop_uplink_at(&self, round: u64, shards: &[usize]) -> bool {
+        self.worker_event(round, shards, |a| a == FaultAction::DropUplink)
+            .is_some()
+    }
+
+    /// worker: sleep before stepping this round?
+    pub fn delay_at(&self, round: u64, shards: &[usize]) -> Option<Duration> {
+        self.worker_event(round, shards, |a| matches!(a, FaultAction::Delay(_)))
+            .and_then(|e| match e.action {
+                FaultAction::Delay(ms) => Some(Duration::from_millis(ms)),
+                _ => None,
+            })
+    }
+
+    fn worker_event(
+        &self,
+        round: u64,
+        shards: &[usize],
+        pred: impl Fn(FaultAction) -> bool,
+    ) -> Option<&FaultEvent> {
+        self.events.iter().find(|e| {
+            e.round == round
+                && pred(e.action)
+                && e.shard.map_or(true, |s| shards.contains(&s))
+        })
+    }
+}
+
+/// Deterministic bit choice for `corrupt-downlink`: a SplitMix64 draw
+/// over the plan seed mixed with the round (golden-ratio stride keeps
+/// nearby rounds uncorrelated).
+fn seeded_bit(seed: u64, round: u64) -> u64 {
+    SplitMix64::new(seed ^ round.wrapping_mul(0x9E37_79B9_7F4A_7C15)).next_u64()
+}
+
+fn parse_event(tok: &str) -> Result<FaultEvent> {
+    let (action_s, rest) = tok
+        .split_once("@r")
+        .ok_or_else(|| anyhow!("fault event `{tok}`: expected `action@rROUND`"))?;
+    let mut parts = rest.split(':');
+    let round: u64 = parts
+        .next()
+        .unwrap_or("")
+        .parse()
+        .map_err(|_| anyhow!("fault event `{tok}`: bad round number"))?;
+    let mut shard = None;
+    let mut ms = None;
+    for p in parts {
+        if let Some(w) = p.strip_prefix('w') {
+            ensure!(shard.is_none(), "fault event `{tok}`: duplicate :w suffix");
+            shard = Some(
+                w.parse::<usize>()
+                    .map_err(|_| anyhow!("fault event `{tok}`: bad shard in `:{p}`"))?,
+            );
+        } else if let Some(m) = p.strip_suffix("ms") {
+            ensure!(ms.is_none(), "fault event `{tok}`: duplicate delay suffix");
+            ms = Some(
+                m.parse::<u64>()
+                    .map_err(|_| anyhow!("fault event `{tok}`: bad delay in `:{p}`"))?,
+            );
+        } else {
+            bail!("fault event `{tok}`: unknown suffix `:{p}` (want `:wK` or `:MSms`)");
+        }
+    }
+    let action = match action_s {
+        "kill" => FaultAction::Kill,
+        "drop-uplink" => FaultAction::DropUplink,
+        "delay" => FaultAction::Delay(
+            ms.take()
+                .ok_or_else(|| anyhow!("fault event `{tok}`: delay needs a `:MSms` suffix"))?,
+        ),
+        "kill-server" => {
+            ensure!(
+                shard.is_none(),
+                "fault event `{tok}`: kill-server takes no `:wK` suffix"
+            );
+            FaultAction::KillServer
+        }
+        "corrupt-downlink" => FaultAction::CorruptDownlink,
+        other => bail!(
+            "fault event `{tok}`: unknown action `{other}` (want kill, drop-uplink, \
+             delay, kill-server or corrupt-downlink)"
+        ),
+    };
+    ensure!(
+        ms.is_none() || matches!(action, FaultAction::Delay(_)),
+        "fault event `{tok}`: only delay takes a `:MSms` suffix"
+    );
+    Ok(FaultEvent { round, shard, action })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_full_grammar() {
+        let p = FaultPlan::parse(
+            "kill-server@r12; drop-uplink@r5:w1 ;corrupt-downlink@r9;delay@r7:50ms;kill@r3:w2",
+            99,
+        )
+        .unwrap();
+        assert_eq!(p.events.len(), 5);
+        assert_eq!(
+            p.events[0],
+            FaultEvent { round: 12, shard: None, action: FaultAction::KillServer }
+        );
+        assert_eq!(
+            p.events[1],
+            FaultEvent { round: 5, shard: Some(1), action: FaultAction::DropUplink }
+        );
+        assert_eq!(
+            p.events[3],
+            FaultEvent { round: 7, shard: None, action: FaultAction::Delay(50) }
+        );
+        assert!(p.has_server_events());
+        assert!(p.kill_server_after(12) && !p.kill_server_after(11));
+        assert!(p.kill_worker_after(3, &[2, 5]));
+        assert!(!p.kill_worker_after(3, &[0, 1]), ":w2 must not fire elsewhere");
+        assert!(p.drop_uplink_at(5, &[1]) && !p.drop_uplink_at(5, &[0]));
+        assert_eq!(p.delay_at(7, &[0]), Some(Duration::from_millis(50)));
+        assert_eq!(p.delay_at(8, &[0]), None);
+
+        let empty = FaultPlan::parse("  ", 0).unwrap();
+        assert!(empty.events.is_empty() && !empty.has_server_events());
+    }
+
+    #[test]
+    fn corrupt_bit_is_seeded_and_stable() {
+        let p = FaultPlan::parse("corrupt-downlink@r9:w1", 42).unwrap();
+        let (target, bit) = p.corrupt_downlink_at(9).unwrap();
+        assert_eq!(target, Some(1));
+        // same seed + round → same bit on every rerun
+        let p2 = FaultPlan::parse("corrupt-downlink@r9:w1", 42).unwrap();
+        assert_eq!(p2.corrupt_downlink_at(9), Some((target, bit)));
+        // different seed or round → (almost surely) a different bit
+        let p3 = FaultPlan::parse("corrupt-downlink@r9;corrupt-downlink@r10", 43).unwrap();
+        assert_ne!(p3.corrupt_downlink_at(9), Some((None, bit)));
+        assert!(p.corrupt_downlink_at(8).is_none());
+    }
+
+    #[test]
+    fn rejects_malformed_events() {
+        for bad in [
+            "kill",                    // no @r
+            "kill@rX",                 // bad round
+            "explode@r3",              // unknown action
+            "delay@r3",                // delay without ms
+            "kill@r3:50ms",            // ms on a non-delay action
+            "kill-server@r3:w1",       // kill-server is not per-shard
+            "kill@r3:q9",              // unknown suffix
+            "kill@r3:w1:w2",           // duplicate suffix
+            "delay@r3:10ms:20ms",      // duplicate delay
+        ] {
+            assert!(FaultPlan::parse(bad, 0).is_err(), "`{bad}` must not parse");
+        }
+    }
+}

@@ -3,7 +3,7 @@
 //! Everything the rest of the crate sends between server and workers
 //! ([`SparseMsg`](crate::compress::SparseMsg) uplinks, dense/sparse
 //! [`Downlink`](crate::methods::Downlink)s) stays an in-memory struct under
-//! `run_sim`/`run_threaded`; this module is where those structs become
+//! the sim and threaded drivers; this module is where those structs become
 //! *bytes*, so the paper's communication claims can be measured instead of
 //! modeled.
 //!
@@ -43,15 +43,21 @@
 //! [`Session`](crate::coordinator::Session) builder with
 //! [`Driver::Distributed`](crate::coordinator::Driver) selects loopback
 //! or TCP via [`DistTransport`](crate::coordinator::DistTransport), and
-//! `--driver distributed` does the same from the CLI. The old
-//! `run_distributed`/`run_distributed_loopback` free functions remain as
-//! deprecated shims.
+//! `--driver distributed` does the same from the CLI.
+//!
+//! Two robustness layers complete the picture: [`fault`] parses the
+//! scriptable `--fault-plan` schedule (worker kills, dropped uplinks,
+//! frame corruption, delays, server kills) that the chaos tests drive
+//! recovery with, and [`runlog`] persists the journal + committed
+//! snapshots to disk (`--run-dir`) so even the *server* process is
+//! expendable — a SIGKILLed `smx serve` restarts and resumes bit-for-bit.
 //!
 //! # Guarantees
 //!
-//! * Under the `f64` payload, `run_distributed` (loopback or TCP) produces
-//!   iterates **bitwise identical** to
-//!   [`run_sim`](crate::coordinator::run_sim): the codec round-trips every
+//! * Under the `f64` payload, the distributed driver (loopback or TCP)
+//!   produces iterates **bitwise identical** to
+//!   [`run_sim_observed`](crate::coordinator::run_sim_observed): the codec
+//!   round-trips every
 //!   finite, subnormal and infinite value exactly (NaN payloads survive
 //!   bit-for-bit too), preserves message order, and the drivers derive
 //!   identical per-shard RNG streams. Asserted in
@@ -60,15 +66,23 @@
 //!   dies mid-run is replaced (rejoin) or absorbed (shard reassignment to
 //!   survivors) by replaying the journaled downlinks through the same
 //!   deterministic `round_into` calls, so the final model is still
-//!   bit-for-bit equal to `run_sim`'s — asserted by the chaos tests and
-//!   the `--die-after` smoke leg. With `checkpoint_every` set the replay
-//!   starts from a committed worker-state snapshot instead of round 0
-//!   (journal truncated, state blobs restored bit-exactly) and the
-//!   identity still holds — asserted by the snapshot-resume chaos test.
-//!   Heartbeats, replay and snapshot retransmissions are protocol
+//!   bit-for-bit equal to the sim driver's — asserted by the chaos tests
+//!   and the `--die-after` smoke leg. With `checkpoint_every` set the
+//!   replay starts from a committed worker-state snapshot instead of
+//!   round 0 (journal truncated, state blobs restored bit-exactly) and
+//!   the identity still holds — asserted by the snapshot-resume chaos
+//!   test. Heartbeats, replay and snapshot retransmissions are protocol
 //!   overhead, excluded from the `bytes_up`/`bytes_down` accounting
 //!   (which counts the frames the round logically applies, so the
 //!   accounting stays comparable across drivers and failures).
+//! * The identity also survives **server failures** and **frame
+//!   corruption**: with `--run-dir`, a killed-and-restarted server
+//!   resumes from its durable snapshot + journal (each regenerated
+//!   downlink verified byte-for-byte against the persisted copy), and
+//!   every TCP frame carries a CRC32 trailer (`--no-crc` opts out) that
+//!   turns silent bit flips into detected connection errors recovered
+//!   through the rejoin + journal-retransmit path. Asserted by
+//!   `rust/tests/chaos_matrix.rs` and the smoke script's restart leg.
 //! * Lossy payloads quantize what the *server* sees; each worker's local
 //!   state (e.g. DIANA shifts) still integrates its exact values, so
 //!   server and worker shift estimates drift by a zero-mean error
@@ -83,18 +97,24 @@
 //! # Frame format
 //!
 //! Every frame is `u32 LE body length` + body; the body starts with a
-//! 1-byte tag (`TAG_*`). Uplink bodies carry the hosting shard index so a
-//! process can multiplex several shards over one connection. The 4-byte
-//! length prefix is included in all measured byte counts.
+//! 1-byte tag (`TAG_*`). The top bit of the length prefix is a CRC flag:
+//! when set, the body is followed by a CRC32 trailer covering it (the
+//! flag bit doubles as the codec version marker, so CRC and plain peers
+//! interoperate frame-by-frame). Uplink bodies carry the hosting shard
+//! index so a process can multiplex several shards over one connection.
+//! The 4-byte length prefix is included in all measured byte counts;
+//! CRC trailers are integrity overhead and are not.
 
 pub mod codec;
+pub mod fault;
 pub mod poll;
+pub mod runlog;
 pub mod runtime;
 pub mod transport;
 
 pub use codec::{Payload, WireError};
-#[allow(deprecated)] // the shims stay re-exported until external callers migrate
-pub use runtime::{run_distributed, run_distributed_loopback};
+pub use fault::{FaultAction, FaultPlan, KILLED_MARKER};
+pub use runlog::{config_hash, LoadedRun, RunLog, Snapshot};
 pub use runtime::{
     run_distributed_loopback_observed, run_distributed_observed, serve, serve_on, worker_connect,
     worker_connect_with, FaultConfig, WorkerHost, WorkerOpts,

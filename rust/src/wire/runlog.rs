@@ -1,0 +1,547 @@
+//! Durable on-disk run log for the elastic server (`--run-dir`).
+//!
+//! PR 4/5 made *workers* expendable: the server's in-memory downlink
+//! journal + committed state snapshots replay any worker into a
+//! bitwise-identical trajectory. This module is the server-side
+//! analogue — it persists exactly those artifacts so a coordinator that
+//! is SIGKILLed mid-run can restart and **resume bit-for-bit**:
+//!
+//! * **`base.bin`** — atomically rotated (tmp + rename + fsync, the
+//!   idiom of `coordinator::session::write_checkpoint`) at every
+//!   committed snapshot. Holds the run header (config hash + seed), the
+//!   committed [`Snapshot`] (server method state via
+//!   [`ServerAlgo::save_state`](crate::methods::ServerAlgo::save_state),
+//!   server RNG, cumulative [`RoundTotals`], and the per-shard worker
+//!   blobs the rejoin path restores over `TAG_RESTORE`), and every
+//!   [`RoundRecord`] emitted up to the snapshot round.
+//! * **`journal.bin`** — append-only journal *suffix*: the encoded
+//!   downlink bodies broadcast after the last committed snapshot, in
+//!   round order. Truncated at each rotation, appended per round
+//!   without fsync (a lost tail is harmless — those rounds re-run
+//!   deterministically from the snapshot).
+//!
+//! Every record in both files is framed by the wire transport's
+//! CRC-guarded [`encode_frame`]/[`decode_frame`], so a flipped bit on
+//! disk is *detected* at load instead of silently diverging the resumed
+//! trajectory. A torn tail in `journal.bin` (crash mid-append) parses as
+//! "incomplete" and is dropped; a CRC mismatch anywhere is a hard error.
+//! `base.bin` is never torn because it is only ever replaced whole.
+//!
+//! Restart semantics: [`RunLog::load`] hands back the committed state.
+//! The server refuses to resume when the config hash or seed disagree
+//! (a resumed run must be *the same* run), restores its method/RNG/
+//! totals state at snapshot round `s`, replays the persisted records
+//! into the observer stream, and continues from round `s + 1`. The
+//! loaded journal suffix is kept only as a *verification queue*: the
+//! resumed rounds regenerate their downlinks deterministically, and
+//! each regenerated body must equal the persisted one byte-for-byte
+//! (any mismatch means nondeterminism and aborts loudly rather than
+//! silently forking the trajectory). Reconnecting workers are brought
+//! to round `s` over the existing rejoin catch-up (`TAG_RESTORE` with
+//! the snapshot's shard blobs), so the run's final model and per-round
+//! records are bitwise identical to an uninterrupted one — asserted by
+//! `tests/chaos_matrix.rs` and the smoke script's restart leg.
+
+use crate::coordinator::{RoundRecord, RoundTotals};
+use crate::wire::transport::{decode_frame, encode_frame};
+use std::fs::{self, File};
+use std::io::{self, Write};
+use std::path::{Path, PathBuf};
+
+const MAGIC: &[u8; 8] = b"SMXRLOG1";
+const BASE_FILE: &str = "base.bin";
+const JOURNAL_FILE: &str = "journal.bin";
+
+const RL_HEADER: u8 = 1;
+const RL_SNAPSHOT: u8 = 2;
+const RL_RECORD: u8 = 3;
+const RL_DOWNLINK: u8 = 4;
+
+/// FNV-1a over the canonical config JSON: cheap, dependency-free, and
+/// stable across platforms — enough to refuse resuming under a changed
+/// configuration (not a cryptographic commitment).
+pub fn config_hash(canonical_json: &str) -> u64 {
+    let mut h = 0xCBF2_9CE4_8422_2325u64;
+    for b in canonical_json.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// One committed checkpoint: everything the server needs to stand back
+/// up at round `round` exactly as it stood when the snapshot committed.
+#[derive(Clone, Debug, Default)]
+pub struct Snapshot {
+    /// the round whose post-`apply` state this is
+    pub round: u64,
+    /// [`ServerAlgo::save_state`](crate::methods::ServerAlgo::save_state) bytes
+    pub server_blob: Vec<u8>,
+    /// server [`Rng::save_state`](crate::util::rng::Rng::save_state) bytes
+    pub rng_blob: Vec<u8>,
+    /// cumulative communication totals through `round`
+    pub totals: RoundTotals,
+    /// per-shard worker blobs (`Rng` state ++ `WorkerAlgo` state), the
+    /// same bytes `TAG_RESTORE` ships to rejoining workers
+    pub shard_blobs: Vec<Vec<u8>>,
+}
+
+/// Everything [`RunLog::load`] recovers from disk.
+#[derive(Debug, Default)]
+pub struct LoadedRun {
+    pub config_hash: u64,
+    pub seed: u64,
+    /// `None` ⇒ the run died before its first committed snapshot; the
+    /// restart simply re-runs from round 0 (everything regenerates)
+    pub snapshot: Option<Snapshot>,
+    /// records emitted up to the snapshot round, in round order
+    pub records: Vec<RoundRecord>,
+    /// journal suffix: `(round, downlink body)` for rounds after the
+    /// snapshot, in round order
+    pub journal: Vec<(u64, Vec<u8>)>,
+}
+
+/// Open handle on a run directory; owns the journal append stream and
+/// the in-memory record history that each rotation makes durable.
+pub struct RunLog {
+    dir: PathBuf,
+    config_hash: u64,
+    seed: u64,
+    records: Vec<RoundRecord>,
+    journal: File,
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn get_u64(buf: &[u8], pos: &mut usize) -> io::Result<u64> {
+    let b = buf
+        .get(*pos..*pos + 8)
+        .ok_or_else(|| corrupt("truncated u64"))?;
+    *pos += 8;
+    Ok(u64::from_le_bytes(b.try_into().unwrap()))
+}
+
+fn put_bytes(out: &mut Vec<u8>, b: &[u8]) {
+    out.extend_from_slice(&(b.len() as u32).to_le_bytes());
+    out.extend_from_slice(b);
+}
+
+fn get_bytes(buf: &[u8], pos: &mut usize) -> io::Result<Vec<u8>> {
+    let hdr = buf
+        .get(*pos..*pos + 4)
+        .ok_or_else(|| corrupt("truncated length"))?;
+    let n = u32::from_le_bytes(hdr.try_into().unwrap()) as usize;
+    let body = buf
+        .get(*pos + 4..*pos + 4 + n)
+        .ok_or_else(|| corrupt("truncated bytes"))?;
+    *pos += 4 + n;
+    Ok(body.to_vec())
+}
+
+fn corrupt(what: &str) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, format!("corrupt run log: {what}"))
+}
+
+fn put_record(out: &mut Vec<u8>, r: &RoundRecord) {
+    put_u64(out, r.round as u64);
+    put_u64(out, r.residual.to_bits());
+    put_u64(out, r.coords_up);
+    put_u64(out, r.bits_up);
+    put_u64(out, r.coords_down);
+    put_u64(out, r.bytes_up);
+    put_u64(out, r.bytes_down);
+    put_u64(out, r.wall_secs.to_bits());
+}
+
+fn get_record(buf: &[u8], pos: &mut usize) -> io::Result<RoundRecord> {
+    Ok(RoundRecord {
+        round: get_u64(buf, pos)? as usize,
+        residual: f64::from_bits(get_u64(buf, pos)?),
+        coords_up: get_u64(buf, pos)?,
+        bits_up: get_u64(buf, pos)?,
+        coords_down: get_u64(buf, pos)?,
+        bytes_up: get_u64(buf, pos)?,
+        bytes_down: get_u64(buf, pos)?,
+        wall_secs: f64::from_bits(get_u64(buf, pos)?),
+    })
+}
+
+impl RunLog {
+    /// Start a fresh run log in `dir` (created if missing): writes the
+    /// header-only `base.bin` atomically and truncates the journal. Any
+    /// previous run's files in `dir` are replaced.
+    pub fn create(dir: &Path, config_hash: u64, seed: u64) -> io::Result<RunLog> {
+        fs::create_dir_all(dir)?;
+        let mut log = RunLog {
+            dir: dir.to_path_buf(),
+            config_hash,
+            seed,
+            records: Vec::new(),
+            journal: File::create(dir.join(JOURNAL_FILE))?,
+        };
+        log.write_base(None)?;
+        Ok(log)
+    }
+
+    /// Reopen a run directory after [`RunLog::load`], seeding the record
+    /// history. The on-disk journal is truncated: the resumed server
+    /// re-runs every post-snapshot round and re-appends the identical
+    /// downlink bodies (it verifies them against the loaded suffix), so
+    /// keeping the old bytes would only duplicate entries.
+    pub fn reopen(dir: &Path, loaded: &LoadedRun) -> io::Result<RunLog> {
+        Ok(RunLog {
+            dir: dir.to_path_buf(),
+            config_hash: loaded.config_hash,
+            seed: loaded.seed,
+            records: loaded.records.clone(),
+            journal: File::create(dir.join(JOURNAL_FILE))?,
+        })
+    }
+
+    /// Remember an emitted record. In-memory until the next rotation —
+    /// a lost tail of records re-emerges identically when the rounds
+    /// past the last snapshot re-run.
+    pub fn record(&mut self, rec: &RoundRecord) {
+        self.records.push(rec.clone());
+    }
+
+    /// Append one broadcast downlink body to the journal suffix. No
+    /// fsync here (see the module docs): the snapshot commit is the
+    /// durability point.
+    pub fn append_downlink(&mut self, round: u64, body: &[u8]) -> io::Result<()> {
+        let mut rec = Vec::with_capacity(1 + 8 + body.len());
+        rec.push(RL_DOWNLINK);
+        put_u64(&mut rec, round);
+        rec.extend_from_slice(body);
+        self.journal.write_all(&encode_frame(&rec, true))
+    }
+
+    /// Commit a snapshot: rotate `base.bin` (tmp + rename + fsync, with
+    /// the directory entry fsynced too) to hold the header, `snap`, and
+    /// all records through `snap.round`, then truncate the journal. If
+    /// the process dies between the two steps, stale journal entries
+    /// (round ≤ `snap.round`) are dropped at load by the round check.
+    pub fn commit(&mut self, snap: &Snapshot) -> io::Result<()> {
+        self.write_base(Some(snap))?;
+        self.journal = File::create(self.dir.join(JOURNAL_FILE))?;
+        self.journal.sync_all()
+    }
+
+    fn write_base(&self, snap: Option<&Snapshot>) -> io::Result<()> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        let mut body = vec![RL_HEADER];
+        put_u64(&mut body, self.config_hash);
+        put_u64(&mut body, self.seed);
+        out.extend_from_slice(&encode_frame(&body, true));
+        if let Some(s) = snap {
+            body.clear();
+            body.push(RL_SNAPSHOT);
+            put_u64(&mut body, s.round);
+            put_bytes(&mut body, &s.server_blob);
+            put_bytes(&mut body, &s.rng_blob);
+            put_u64(&mut body, s.totals.coords_up);
+            put_u64(&mut body, s.totals.bits_up);
+            put_u64(&mut body, s.totals.coords_down);
+            put_u64(&mut body, s.totals.bytes_up);
+            put_u64(&mut body, s.totals.bytes_down);
+            put_u64(&mut body, s.shard_blobs.len() as u64);
+            for blob in &s.shard_blobs {
+                put_bytes(&mut body, blob);
+            }
+            out.extend_from_slice(&encode_frame(&body, true));
+            for rec in self.records.iter().filter(|r| r.round as u64 <= s.round) {
+                body.clear();
+                body.push(RL_RECORD);
+                put_record(&mut body, rec);
+                out.extend_from_slice(&encode_frame(&body, true));
+            }
+        }
+        let tmp = self.dir.join("base.tmp");
+        let mut f = File::create(&tmp)?;
+        f.write_all(&out)?;
+        f.sync_all()?;
+        fs::rename(&tmp, self.dir.join(BASE_FILE))?;
+        #[cfg(unix)]
+        File::open(&self.dir)?.sync_all()?;
+        Ok(())
+    }
+
+    /// Load whatever a previous process left in `dir`. `Ok(None)` when
+    /// no run log exists there yet (fresh start). A leftover `base.tmp`
+    /// from a crash mid-rotation is ignored: the rename never happened,
+    /// so `base.bin` is still the previous consistent state.
+    pub fn load(dir: &Path) -> io::Result<Option<LoadedRun>> {
+        let data = match fs::read(dir.join(BASE_FILE)) {
+            Ok(d) => d,
+            Err(e) if e.kind() == io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => return Err(e),
+        };
+        if data.len() < MAGIC.len() || &data[..MAGIC.len()] != MAGIC {
+            return Err(corrupt("bad magic in base.bin"));
+        }
+        let mut loaded = LoadedRun::default();
+        let mut pos = MAGIC.len();
+        let mut body = Vec::new();
+        let mut saw_header = false;
+        while pos < data.len() {
+            // base.bin is rotated whole, so an incomplete frame here is
+            // corruption, not a torn append
+            let (consumed, _) = decode_frame(&data[pos..], &mut body)?
+                .ok_or_else(|| corrupt("truncated record in base.bin"))?;
+            pos += consumed;
+            let mut p = 1;
+            match body.first() {
+                Some(&RL_HEADER) => {
+                    loaded.config_hash = get_u64(&body, &mut p)?;
+                    loaded.seed = get_u64(&body, &mut p)?;
+                    saw_header = true;
+                }
+                Some(&RL_SNAPSHOT) => {
+                    let mut s = Snapshot {
+                        round: get_u64(&body, &mut p)?,
+                        server_blob: get_bytes(&body, &mut p)?,
+                        rng_blob: get_bytes(&body, &mut p)?,
+                        ..Snapshot::default()
+                    };
+                    s.totals = RoundTotals {
+                        coords_up: get_u64(&body, &mut p)?,
+                        bits_up: get_u64(&body, &mut p)?,
+                        coords_down: get_u64(&body, &mut p)?,
+                        bytes_up: get_u64(&body, &mut p)?,
+                        bytes_down: get_u64(&body, &mut p)?,
+                    };
+                    let n = get_u64(&body, &mut p)? as usize;
+                    for _ in 0..n {
+                        s.shard_blobs.push(get_bytes(&body, &mut p)?);
+                    }
+                    loaded.snapshot = Some(s);
+                }
+                Some(&RL_RECORD) => loaded.records.push(get_record(&body, &mut p)?),
+                _ => return Err(corrupt("unknown record tag in base.bin")),
+            }
+        }
+        if !saw_header {
+            return Err(corrupt("base.bin has no header record"));
+        }
+
+        let jdata = match fs::read(dir.join(JOURNAL_FILE)) {
+            Ok(d) => d,
+            Err(e) if e.kind() == io::ErrorKind::NotFound => Vec::new(),
+            Err(e) => return Err(e),
+        };
+        let snap_round = loaded.snapshot.as_ref().map(|s| s.round);
+        pos = 0;
+        while pos < jdata.len() {
+            match decode_frame(&jdata[pos..], &mut body)? {
+                Some((consumed, _)) => {
+                    pos += consumed;
+                    if body.first() != Some(&RL_DOWNLINK) {
+                        return Err(corrupt("unknown record tag in journal.bin"));
+                    }
+                    let mut p = 1;
+                    let round = get_u64(&body, &mut p)?;
+                    // stale entries from before a commit that died between
+                    // rotation and truncation
+                    if snap_round.is_some_and(|s| round <= s) {
+                        continue;
+                    }
+                    loaded.journal.push((round, body[p..].to_vec()));
+                }
+                // torn tail from a crash mid-append: the unfinished round
+                // re-runs from the snapshot, so drop it
+                None => break,
+            }
+        }
+        Ok(Some(loaded))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(round: usize) -> RoundRecord {
+        RoundRecord {
+            round,
+            residual: 1.0 / (round as f64 + 1.0),
+            coords_up: round as u64 * 10,
+            bits_up: round as u64 * 640,
+            coords_down: round as u64 * 100,
+            bytes_up: round as u64 * 90,
+            bytes_down: round as u64 * 800,
+            wall_secs: round as f64 * 0.25,
+        }
+    }
+
+    fn snap(round: u64) -> Snapshot {
+        Snapshot {
+            round,
+            server_blob: vec![1, 2, 3],
+            rng_blob: vec![9; 41],
+            totals: RoundTotals {
+                coords_up: 7,
+                bits_up: 448,
+                coords_down: 70,
+                bytes_up: 63,
+                bytes_down: 560,
+            },
+            shard_blobs: vec![vec![5; 10], vec![], vec![6, 7]],
+        }
+    }
+
+    fn tmp_dir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("smx_runlog_{name}"));
+        let _ = fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn create_commit_load_roundtrip_is_exact() {
+        let dir = tmp_dir("roundtrip");
+        let mut log = RunLog::create(&dir, 0xABCD, 77).unwrap();
+        // fresh log: loadable, empty
+        let l0 = RunLog::load(&dir).unwrap().unwrap();
+        assert_eq!((l0.config_hash, l0.seed), (0xABCD, 77));
+        assert!(l0.snapshot.is_none() && l0.records.is_empty() && l0.journal.is_empty());
+
+        for r in [0usize, 1, 2, 3] {
+            log.record(&rec(r));
+            if r > 0 {
+                log.append_downlink(r as u64, &[r as u8; 5]).unwrap();
+            }
+        }
+        log.commit(&snap(3)).unwrap();
+        // journal truncated at commit; suffix entries follow
+        log.append_downlink(4, &[0xE4; 6]).unwrap();
+        log.append_downlink(5, &[0xE5; 6]).unwrap();
+        log.journal.flush().unwrap();
+
+        let l = RunLog::load(&dir).unwrap().unwrap();
+        assert_eq!((l.config_hash, l.seed), (0xABCD, 77));
+        let s = l.snapshot.unwrap();
+        assert_eq!(s.round, 3);
+        assert_eq!(s.server_blob, vec![1, 2, 3]);
+        assert_eq!(s.rng_blob, vec![9; 41]);
+        assert_eq!(s.totals.bytes_down, 560);
+        assert_eq!(s.shard_blobs, vec![vec![5; 10], vec![], vec![6, 7]]);
+        assert_eq!(l.records.len(), 4);
+        for (i, r) in l.records.iter().enumerate() {
+            assert_eq!(r.round, i);
+            assert_eq!(r.residual.to_bits(), rec(i).residual.to_bits());
+            assert_eq!(r.bytes_up, rec(i).bytes_up);
+        }
+        assert_eq!(
+            l.journal,
+            vec![(4, vec![0xE4; 6]), (5, vec![0xE5; 6])],
+            "journal suffix must survive in round order"
+        );
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn reopen_truncates_the_journal_and_next_commit_rotates() {
+        let dir = tmp_dir("reopen");
+        let mut log = RunLog::create(&dir, 1, 2).unwrap();
+        log.record(&rec(0));
+        log.record(&rec(2));
+        log.commit(&snap(2)).unwrap();
+        log.append_downlink(3, &[3]).unwrap();
+        drop(log);
+
+        // load hands the suffix back for verification...
+        let l = RunLog::load(&dir).unwrap().unwrap();
+        assert_eq!(l.journal, vec![(3, vec![3])]);
+        // ...and reopen truncates it on disk: the resumed rounds re-append
+        // the same bodies, so nothing may linger from the previous process
+        let mut log = RunLog::reopen(&dir, &l).unwrap();
+        let empty = RunLog::load(&dir).unwrap().unwrap();
+        assert!(empty.journal.is_empty(), "reopen must truncate journal.bin");
+        assert_eq!(empty.records.len(), 2, "record history survives reopen");
+
+        log.append_downlink(3, &[3]).unwrap();
+        log.append_downlink(4, &[4]).unwrap();
+        log.record(&rec(4));
+        let l2 = RunLog::load(&dir).unwrap().unwrap();
+        assert_eq!(l2.journal, vec![(3, vec![3]), (4, vec![4])]);
+        // a later commit carries the grown record history and drops the
+        // now-stale journal suffix
+        log.commit(&snap(4)).unwrap();
+        let l3 = RunLog::load(&dir).unwrap().unwrap();
+        assert_eq!(l3.records.len(), 3);
+        assert!(l3.journal.is_empty());
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corruption_is_detected_and_torn_tail_tolerated() {
+        let dir = tmp_dir("corrupt");
+        let mut log = RunLog::create(&dir, 5, 6).unwrap();
+        log.record(&rec(0));
+        log.commit(&snap(0)).unwrap();
+        log.append_downlink(1, &[1, 1, 1]).unwrap();
+        log.journal.flush().unwrap();
+
+        // flip one bit inside base.bin → hard InvalidData at load
+        let base = dir.join(BASE_FILE);
+        let mut data = fs::read(&base).unwrap();
+        let mid = data.len() / 2;
+        data[mid] ^= 0x40;
+        fs::write(&base, &data).unwrap();
+        let e = RunLog::load(&dir).unwrap_err();
+        assert_eq!(e.kind(), io::ErrorKind::InvalidData);
+        data[mid] ^= 0x40;
+        fs::write(&base, &data).unwrap();
+
+        // flip a bit in a *complete* journal record → hard error too
+        let jpath = dir.join(JOURNAL_FILE);
+        let jdata = fs::read(&jpath).unwrap();
+        let mut bad = jdata.clone();
+        bad[6] ^= 0x01;
+        fs::write(&jpath, &bad).unwrap();
+        assert_eq!(
+            RunLog::load(&dir).unwrap_err().kind(),
+            io::ErrorKind::InvalidData
+        );
+
+        // a torn tail (partial append) is dropped, not an error
+        let mut torn = jdata.clone();
+        torn.extend_from_slice(&encode_frame(&[RL_DOWNLINK], true)[..3]);
+        fs::write(&jpath, &torn).unwrap();
+        let l = RunLog::load(&dir).unwrap().unwrap();
+        assert_eq!(l.journal, vec![(1, vec![1, 1, 1])]);
+
+        // stale entries at or before the snapshot round are dropped
+        fs::write(&jpath, &jdata).unwrap();
+        let mut log = RunLog::reopen(&dir, &l).unwrap();
+        log.commit(&snap(1)).unwrap();
+        drop(log);
+        let mut with_stale = Vec::new();
+        let mut body = vec![RL_DOWNLINK];
+        put_u64(&mut body, 1); // == snapshot round → stale
+        body.push(0xAA);
+        with_stale.extend_from_slice(&encode_frame(&body, true));
+        let mut body2 = vec![RL_DOWNLINK];
+        put_u64(&mut body2, 2);
+        body2.push(0xBB);
+        with_stale.extend_from_slice(&encode_frame(&body2, true));
+        fs::write(&jpath, &with_stale).unwrap();
+        let l = RunLog::load(&dir).unwrap().unwrap();
+        assert_eq!(l.journal, vec![(2, vec![0xBB])]);
+
+        // missing dir → clean None
+        assert!(RunLog::load(&tmp_dir("never_created")).unwrap().is_none());
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn config_hash_is_stable_and_discriminating() {
+        let a = config_hash("{\"seed\":1}");
+        assert_eq!(a, config_hash("{\"seed\":1}"));
+        assert_ne!(a, config_hash("{\"seed\":2}"));
+        // FNV-1a known answer for the empty string
+        assert_eq!(config_hash(""), 0xCBF2_9CE4_8422_2325);
+    }
+}

@@ -10,13 +10,13 @@
 //!    hosts (round-robin assignment, ascending), sending one uplink frame
 //!    per shard tagged with the shard index;
 //! 3. the server decodes uplinks into per-shard slots (order on the wire
-//!    is irrelevant; apply order equals `run_sim`'s) and advances.
+//!    is irrelevant; apply order equals the sim driver's) and advances.
 //!
 //! RNG streams are derived exactly as in
-//! [`run_sim`](crate::coordinator::run_sim) — `base.derive(i)` per shard
-//! `i`, `base.derive(u64::MAX)` for the server — which together with the
-//! lossless `f64` codec gives the bitwise-identity guarantee in the
-//! [module docs](crate::wire).
+//! [`run_sim_observed`](crate::coordinator::run_sim_observed) —
+//! `base.derive(i)` per shard `i`, `base.derive(u64::MAX)` for the server
+//! — which together with the lossless `f64` codec gives the
+//! bitwise-identity guarantee in the [module docs](crate::wire).
 //!
 //! # Connection lifecycle (server side)
 //!
@@ -93,11 +93,49 @@
 //! single-threaded and cannot beacon mid-`round_into`. `--worker-timeout
 //! 0` disables fault handling entirely: any worker failure aborts the run
 //! (the pre-elastic behavior).
+//!
+//! # Failure model
+//!
+//! What each failure class does to a run, and what recovers it — every
+//! path preserves the bitwise-identity guarantee:
+//!
+//! * **Worker crash** (SIGKILL, OOM, network partition): the server sees
+//!   EOF or grace-window silence, orphans the shards, and recovers via
+//!   the rejoin/reassignment paths above. The worker *process* itself
+//!   retries with seeded exponential backoff (`--max-retries`,
+//!   `--retry-base-ms`) whenever its connection drops, so a restarted or
+//!   momentarily unreachable server is rejoined automatically.
+//! * **Server crash** (SIGKILL mid-round): without `--run-dir`, the run
+//!   is lost. With `--run-dir`, the committed snapshot + journal suffix
+//!   persisted by [`runlog`](crate::wire::runlog) let a restarted
+//!   `smx serve --run-dir DIR` refuse-or-resume: the config identity and
+//!   seed must match, the server restores method/RNG/totals state at the
+//!   snapshot round, replays the recorded history into its observers,
+//!   and re-runs the suffix — verifying each regenerated downlink
+//!   byte-for-byte against the persisted journal. Workers ride the
+//!   restart out via their retry loop and are restored over the rejoin
+//!   path (`TAG_RESTORE` with the snapshot's shard blobs).
+//! * **Frame corruption** (flipped bit on the wire or on disk): every
+//!   frame carries a CRC32 trailer (unless `--no-crc`); a mismatch
+//!   surfaces as a connection error, the affected worker severs and
+//!   rejoins, and the journal retransmits the *clean* copy of the
+//!   corrupted downlink. Run-log records are CRC-framed the same way —
+//!   a torn journal tail is dropped, anything else corrupt refuses to
+//!   load rather than silently diverging.
+//! * **Slowness** (GC pause, CPU contention): heartbeats + the grace
+//!   window distinguish slow from dead; a worker declared dead while
+//!   merely slow simply reconnects and rejoins — its stale uplinks are
+//!   discarded by the per-round slot table.
+//!
+//! Faults of every class can be injected deterministically with
+//! [`FaultPlan`](crate::wire::fault::FaultPlan) (`--fault-plan`); the
+//! chaos matrix in `tests/chaos_matrix.rs` drives each recovery path and
+//! asserts bitwise identity against the sim driver.
 
 use crate::config::ExperimentConfig;
 use crate::coordinator::session::{Tick, Ticker};
 use crate::coordinator::{
-    CollectObserver, DistTransport, Driver, EngineFactory, RoundObserver, RunConfig, RunOutcome,
+    DistTransport, Driver, EngineFactory, RoundObserver, RoundRecord, RunConfig, RunOutcome,
     RunResult, Session,
 };
 use crate::experiments::runner::{self, Prepared};
@@ -106,13 +144,17 @@ use crate::methods::{build, Downlink, Method, MethodSpec, ServerAlgo, Uplink, Wo
 use crate::objective::Smoothness;
 use crate::runtime::native::NativeEngine;
 use crate::runtime::{EngineKind, GradEngine};
-use crate::util::rng::Rng;
+use crate::util::rng::{Rng, SplitMix64};
 use crate::util::timer::PhaseTimer;
 use crate::wire::codec::{self, Hello, Payload};
+use crate::wire::fault::{FaultPlan, KILLED_MARKER};
 use crate::wire::poll::Poller;
+use crate::wire::runlog::{self, RunLog};
 use crate::wire::transport::{loopback_pair, Tcp, Transport};
 use anyhow::{bail, ensure, Context, Result};
+use std::collections::VecDeque;
 use std::net::TcpListener;
+use std::path::Path;
 use std::time::{Duration, Instant};
 
 /// Per-round communication totals — the shared accounting struct, re-
@@ -121,7 +163,7 @@ pub use crate::coordinator::RoundTotals;
 
 /// One worker process from the server's perspective: a transport plus the
 /// shard indices it hosts. Used by the fixed-membership
-/// [`run_distributed`] driver (loopback tests and benches).
+/// [`run_distributed_observed`] driver core (loopback tests and benches).
 pub struct WorkerHost {
     pub transport: Box<dyn Transport>,
     pub shards: Vec<usize>,
@@ -289,23 +331,6 @@ pub fn run_distributed_observed(
     })
 }
 
-/// Pre-`Session` entry point for the fixed-membership distributed driver.
-#[deprecated(
-    note = "drive runs through `coordinator::Session` (Driver::Distributed); this shim wraps \
-            `run_distributed_observed` with the default collecting observer"
-)]
-pub fn run_distributed(
-    server: &mut dyn ServerAlgo,
-    name: &str,
-    hosts: &mut [WorkerHost],
-    x_star: &[f64],
-    cfg: &RunConfig,
-) -> Result<RunResult> {
-    let mut collect = CollectObserver::for_cfg(cfg);
-    let out = run_distributed_observed(server, name, hosts, x_star, cfg, &mut collect)?;
-    Ok(out.into_result(collect.into_records()))
-}
-
 // ---- worker side -------------------------------------------------------
 
 /// Everything one shard needs to run rounds on a worker process.
@@ -384,7 +409,7 @@ struct AdoptCtx {
 }
 
 /// Chaos / deployment knobs for [`worker_connect_with`].
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Debug)]
 pub struct WorkerOpts {
     /// Fault-injection hook (chaos tests, `smx worker --die-after N`):
     /// drop the connection immediately after receiving the N-th live
@@ -399,6 +424,32 @@ pub struct WorkerOpts {
     /// its run — proves the journal-truncating checkpoint path was
     /// actually exercised, rather than a silent full-journal replay.
     pub expect_restore: bool,
+    /// Scriptable worker-side fault schedule (`smx worker --fault-plan`;
+    /// grammar in [`crate::wire::fault`]): `kill`, `drop-uplink` and
+    /// `delay` events, counted in live downlinks this process has seen
+    /// (like `die_after`). Server-side events in the plan are ignored
+    /// here.
+    pub fault: Option<FaultPlan>,
+    /// Connection-loss resilience: how many times to retry the whole
+    /// session (reconnect, re-handshake, rejoin) after a connection
+    /// error before giving up. Rides out a `--run-dir` server restart.
+    pub max_retries: usize,
+    /// Base backoff delay in milliseconds; attempt `k` waits
+    /// `base * 2^min(k,5)` (capped at 10 s) plus deterministic jitter.
+    pub retry_base_ms: u64,
+}
+
+impl Default for WorkerOpts {
+    fn default() -> WorkerOpts {
+        WorkerOpts {
+            die_after: None,
+            pin: None,
+            expect_restore: false,
+            fault: None,
+            max_retries: 5,
+            retry_base_ms: 250,
+        }
+    }
 }
 
 /// Worker-process state: active shard runners, reserve halves for
@@ -413,6 +464,8 @@ pub struct WorkerState {
     payload: Payload,
     dim: usize,
     die_after: Option<usize>,
+    /// worker-side scriptable fault schedule (see [`WorkerOpts::fault`])
+    fault: Option<FaultPlan>,
     rounds_seen: usize,
     /// chaos assertion: fail unless a `TAG_RESTORE` arrived (see
     /// [`WorkerOpts::expect_restore`])
@@ -433,6 +486,7 @@ impl WorkerState {
             payload,
             dim,
             die_after: None,
+            fault: None,
             rounds_seen: 0,
             expect_restore: false,
             restored: false,
@@ -469,10 +523,32 @@ pub fn worker_loop(state: &mut WorkerState, transport: &mut dyn Transport) -> Re
                     // closes the socket, exactly like a SIGKILL here
                     return Ok(());
                 }
+                // scripted worker-side faults, counted like --die-after in
+                // live downlinks this process has seen
+                let mut live = true;
+                if let Some(plan) = &state.fault {
+                    let round = state.rounds_seen as u64;
+                    let shards: Vec<usize> = state.active.iter().map(|r| r.shard).collect();
+                    if plan.kill_worker_after(round, &shards) {
+                        return Ok(());
+                    }
+                    if let Some(d) = plan.delay_at(round, &shards) {
+                        std::thread::sleep(d);
+                    }
+                    if plan.drop_uplink_at(round, &shards) {
+                        // compute the round but sever before the uplink: the
+                        // server re-homes the shards and the replacement
+                        // replays a clean copy
+                        live = false;
+                    }
+                }
                 send_heartbeat(transport)?;
                 codec::get_downlink(&body, dim, &mut down)?;
                 for r in state.active.iter_mut() {
-                    r.step(&down, true, payload, &mut out, transport)?;
+                    r.step(&down, live, payload, &mut out, transport)?;
+                }
+                if !live {
+                    return Ok(());
                 }
             }
             codec::TAG_SNAP_REQ => {
@@ -698,25 +774,6 @@ pub fn run_distributed_loopback_observed(
     })
 }
 
-/// Pre-`Session` entry point for the loopback distributed driver.
-#[deprecated(
-    note = "drive runs through `coordinator::Session` (Driver::Distributed with \
-            DistTransport::Loopback); this shim wraps `run_distributed_loopback_observed` \
-            with the default collecting observer"
-)]
-pub fn run_distributed_loopback(
-    method: Method,
-    engine_factory: EngineFactory,
-    x_star: &[f64],
-    cfg: &RunConfig,
-    procs: usize,
-) -> Result<RunResult> {
-    let mut collect = CollectObserver::for_cfg(cfg);
-    let out =
-        run_distributed_loopback_observed(method, engine_factory, x_star, cfg, procs, &mut collect)?;
-    Ok(out.into_result(collect.into_records()))
-}
-
 // ---- elastic TCP server ------------------------------------------------
 
 /// Fault-handling policy of the elastic server.
@@ -816,6 +873,49 @@ struct ElasticServer {
     st: Scratch,
     body: Vec<u8>,
     events: Vec<u64>,
+    /// CRC32-trailer frames on every connection (`wire.crc`; `--no-crc`
+    /// disables)
+    crc: bool,
+    /// server-side scripted faults (`kill-server`, `corrupt-downlink`)
+    fault_plan: Option<FaultPlan>,
+    /// durable on-disk run log (`--run-dir`); mirrors the in-memory
+    /// journal + committed snapshot so a killed server can resume
+    runlog: Option<RunLog>,
+    /// server-side snapshot cut (method + RNG + totals state) staged when
+    /// the cadence round completes, committed together with the worker
+    /// blobs once they all land
+    staged_snap: Option<runlog::Snapshot>,
+    /// resuming from a run log: initial assignments are handed out as
+    /// *rejoins* so reconnecting workers get restore + replay
+    resume_mode: bool,
+    /// journal suffix loaded from the run log, kept as a verification
+    /// queue: each regenerated downlink must byte-equal its persisted
+    /// counterpart or the resume aborts loudly
+    resume_check: VecDeque<(u64, Vec<u8>)>,
+    /// bytes held by the in-memory journal (bounded; see
+    /// [`MAX_JOURNAL_BYTES`])
+    journal_bytes: usize,
+}
+
+/// Hard cap on the in-memory replay journal. Without checkpoints the
+/// journal grows O(rounds × frame size); past this bound the run aborts
+/// with a clean protocol error advising `--checkpoint-every` instead of
+/// consuming the host's memory.
+const MAX_JOURNAL_BYTES: usize = 256 * 1024 * 1024;
+
+/// Server-side state recovered from a durable run log, threaded into
+/// [`ElasticServer::run`] to continue a crashed run from its last
+/// committed snapshot.
+struct ResumeState {
+    /// the snapshot round; the loop resumes at `round + 1`
+    round: usize,
+    /// server RNG stream as of the end of `round`
+    server_rng: Rng,
+    /// cumulative communication totals through `round`
+    acc: RoundTotals,
+    /// records the crashed process emitted through `round`, replayed
+    /// into the observer stream before the loop continues
+    records: Vec<RoundRecord>,
 }
 
 fn fd_of_tcp(t: &Tcp) -> i32 {
@@ -886,6 +986,13 @@ impl ElasticServer {
             },
             body: Vec::new(),
             events: Vec::new(),
+            crc: true,
+            fault_plan: None,
+            runlog: None,
+            staged_snap: None,
+            resume_mode: false,
+            resume_check: VecDeque::new(),
+            journal_bytes: 0,
         })
     }
 
@@ -918,7 +1025,11 @@ impl ElasticServer {
     /// Give `tcp` work if any is waiting, else park it.
     fn place(&mut self, tcp: Tcp) -> Result<()> {
         if let Some(shards) = self.pending_assignments.pop() {
-            self.install(tcp, shards, false)?;
+            // on a run-log resume the "initial" assignments are really
+            // rejoins: the worker must restore from the snapshot and
+            // replay the journal suffix to land mid-run
+            let rejoin = self.resume_mode;
+            self.install(tcp, shards, rejoin)?;
         } else if !self.orphans.is_empty() {
             let shards = std::mem::take(&mut self.orphans);
             self.orphan_deadline = None;
@@ -945,6 +1056,9 @@ impl ElasticServer {
     /// arrival) instead of erroring the run.
     fn install(&mut self, mut tcp: Tcp, shards: Vec<usize>, rejoin: bool) -> Result<()> {
         tcp.set_nonblocking(true).context("nonblocking conn")?;
+        // the Hello (first frame out) already carries the CRC flag bit, so
+        // the worker learns the mode from it and mirrors
+        tcp.set_crc(self.crc);
         self.hello.shards = shards;
         self.body.clear();
         codec::put_hello(&mut self.body, &self.hello);
@@ -1104,6 +1218,20 @@ impl ElasticServer {
         let drop_n = (round - self.journal_base).min(self.journal.len());
         self.journal.drain(..drop_n);
         self.journal_base = round;
+        self.journal_bytes = self.journal.iter().map(Vec::len).sum();
+        // durable commit: marry the worker blobs to the server-side cut
+        // staged when the cadence round finished, and rotate the on-disk
+        // base. An IO failure here is fatal — a run log that silently
+        // stopped updating would resume from stale state later.
+        if let Some(rl) = &mut self.runlog {
+            if let Some(mut snap) = self.staged_snap.take() {
+                debug_assert_eq!(snap.round, round as u64);
+                snap.shard_blobs = blobs.clone();
+                if let Err(e) = rl.commit(&snap) {
+                    self.fatal = Some(format!("run log: snapshot commit failed: {e}"));
+                }
+            }
+        }
         self.snapshot = Some((round, blobs));
         crate::info!(
             "wire",
@@ -1364,19 +1492,74 @@ impl ElasticServer {
         server.downlink_into(&mut self.st.down);
         self.st.down_buf.clear();
         codec::put_downlink(&mut self.st.down_buf, &self.st.down, self.payload);
+
+        // resume verification: the downlink regenerated for this round
+        // must byte-equal the copy the crashed run persisted, or the
+        // "resume is bitwise identical" guarantee is already broken —
+        // abort loudly rather than silently diverge
+        if let Some((jr, expect)) = self.resume_check.pop_front() {
+            ensure!(
+                jr == round as u64 && expect == self.st.down_buf,
+                "resume verification failed at round {round}: the \
+                 regenerated downlink does not match the persisted journal \
+                 (round-log entry is for round {jr}); refusing to continue \
+                 a diverged run"
+            );
+        }
+
         if self.fault.enabled() {
             // the journal only exists to feed rejoin/adoption replays;
             // fail-fast mode can never consume it, so don't grow it
+            self.journal_bytes += self.st.down_buf.len();
+            ensure!(
+                self.journal_bytes <= MAX_JOURNAL_BYTES,
+                "replay journal exceeds {} MiB with no committed snapshot \
+                 to truncate it; set --checkpoint-every to bound recovery \
+                 memory",
+                MAX_JOURNAL_BYTES / (1024 * 1024)
+            );
             self.journal.push(self.st.down_buf.clone());
+        }
+        if let Some(rl) = &mut self.runlog {
+            rl.append_downlink(round as u64, &self.st.down_buf)
+                .context("run log: persisting downlink")?;
         }
         t.coords_down = (self.st.down.coords() * self.n_shards) as u64;
         let frame_len = (codec::FRAME_PREFIX + self.st.down_buf.len()) as u64;
+
+        // scripted corruption: flip one seeded bit in the frame sent to
+        // one connection. The worker's CRC check turns it into a
+        // connection error; the rejoin path retransmits the clean journal
+        // copy. Accounting is untouched — the corrupted frame was sent.
+        let corrupt = self
+            .fault_plan
+            .as_ref()
+            .and_then(|p| p.corrupt_downlink_at(round as u64));
+        let corrupt_tok = corrupt.map(|(shard, _)| {
+            let live = self.live_tokens();
+            shard
+                .and_then(|s| {
+                    live.iter()
+                        .copied()
+                        .find(|&t| self.conns[t].as_ref().is_some_and(|c| c.shards.contains(&s)))
+                })
+                .or_else(|| live.first().copied())
+        });
 
         self.st.seen.fill(false);
         self.st.up_bytes.fill(0);
         for tok in self.live_tokens() {
             let res = {
                 let conn = self.conns[tok].as_mut().expect("live conn");
+                if corrupt_tok == Some(Some(tok)) {
+                    let bit = corrupt.expect("corrupt_tok implies corrupt").1;
+                    crate::info!(
+                        "wire",
+                        "fault plan: corrupting round-{round} downlink to {} (bit {bit})",
+                        conn.peer
+                    );
+                    conn.tcp.corrupt_next_frame(bit);
+                }
                 conn.tcp.send(&self.st.down_buf)
             };
             match res {
@@ -1402,10 +1585,10 @@ impl ElasticServer {
         // as of the end of this round. Workers answer before touching the
         // next downlink (frames are processed in order), so the blobs are
         // a consistent cut; they are collected during the next gather and
-        // committed when the last one lands. Like the journal, snapshots
-        // only matter when fault handling can consume them.
+        // committed when the last one lands. Snapshots matter when fault
+        // handling can consume them OR a durable run log persists them.
         if self.checkpoint_every > 0
-            && self.fault.enabled()
+            && (self.fault.enabled() || self.runlog.is_some())
             && round % self.checkpoint_every == 0
         {
             let mut req = Vec::new();
@@ -1425,27 +1608,45 @@ impl ElasticServer {
     }
 
     /// Full run: same stopping/recording policy as every other driver,
-    /// metrics through `obs`.
+    /// metrics through `obs`. `denom` is the residual normalizer
+    /// `‖x0 − x*‖²` — passed in (rather than read off the iterate)
+    /// because a resumed server stands up mid-run, where the iterate is
+    /// no longer `x0`. With `resume` set, the run continues from the
+    /// recovered round: loaded records replay into the observer stream
+    /// and the loop picks up at the next round.
     fn run(
         &mut self,
         server: &mut dyn ServerAlgo,
         name: &str,
         x_star: &[f64],
+        denom: f64,
         cfg: &RunConfig,
+        resume: Option<ResumeState>,
         obs: &mut dyn RoundObserver,
     ) -> Result<RunOutcome> {
-        let mut server_rng = Rng::new(cfg.seed).derive(u64::MAX);
-        let denom = vector::dist2(server.iterate(), x_star).max(1e-300);
         let mut acc = RoundTotals::default();
         let mut phases = PhaseTimer::new();
         let ticker = Ticker::new(cfg);
-        let mut stopped = ticker.start(obs);
         let mut reached = false;
-        let mut rounds_run = 0;
+        let (start_round, mut server_rng, mut stopped) = match resume {
+            Some(rs) => {
+                acc = rs.acc;
+                let stopped = ticker.replay(&rs.records, obs);
+                (rs.round, rs.server_rng, stopped)
+            }
+            None => {
+                let (stopped, rec0) = ticker.start_with_record(obs);
+                if let Some(rl) = &mut self.runlog {
+                    rl.record(&rec0);
+                }
+                (0, Rng::new(cfg.seed).derive(u64::MAX), stopped)
+            }
+        };
+        let mut rounds_run = start_round;
         let mut failure = None;
 
         if !stopped {
-            for round in 1..=cfg.max_rounds {
+            for round in (start_round + 1)..=cfg.max_rounds {
                 rounds_run = round;
                 let totals = phases.time("dist_round", || {
                     self.round(round, server, &mut server_rng, cfg.float_bits)
@@ -1459,8 +1660,33 @@ impl ElasticServer {
                 };
                 acc.accumulate(&totals);
 
+                // stage the server-side snapshot cut *now*, while the state
+                // is exactly end-of-round: the worker blobs complete during
+                // the next round's gather, by which time `downlink_into`
+                // has already mutated the server again
+                if self.runlog.is_some()
+                    && self.pending_snap.as_ref().is_some_and(|(r, _)| *r == round)
+                {
+                    let mut server_blob = Vec::new();
+                    server.save_state(&mut server_blob);
+                    let mut rng_blob = Vec::new();
+                    server_rng.save_state(&mut rng_blob);
+                    self.staged_snap = Some(runlog::Snapshot {
+                        round: round as u64,
+                        server_blob,
+                        rng_blob,
+                        totals: acc,
+                        shard_blobs: Vec::new(),
+                    });
+                }
+
                 let res = vector::dist2(server.iterate(), x_star) / denom;
-                match ticker.tick(round, res, &acc, server.iterate(), obs) {
+                let (tick, rec) =
+                    ticker.tick_with_record(round, res, &acc, server.iterate(), obs);
+                if let (Some(rl), Some(rec)) = (self.runlog.as_mut(), rec.as_ref()) {
+                    rl.record(rec);
+                }
+                match tick {
                     Tick::Continue => {}
                     Tick::ReachedTarget => {
                         reached = true;
@@ -1470,6 +1696,19 @@ impl ElasticServer {
                         stopped = true;
                         break;
                     }
+                }
+
+                // planned server death: abort WITHOUT the clean shutdown.
+                // Workers must see a closed socket (as under SIGKILL), not
+                // a Stop frame — the chaos tests rely on them riding the
+                // restart out through their retry loop.
+                if self
+                    .fault_plan
+                    .as_ref()
+                    .is_some_and(|p| p.kill_server_after(round as u64))
+                {
+                    crate::info!("wire", "fault plan: killing server after round {round}");
+                    bail!("{KILLED_MARKER} after round {round}");
                 }
             }
         }
@@ -1590,6 +1829,97 @@ pub(crate) fn serve_observed(
     };
     let dim = spec.x0.len();
 
+    let fault_plan = match cfg.wire.fault_plan.as_deref() {
+        Some(spec) => {
+            let plan = FaultPlan::parse(spec, cfg.seed)?;
+            ensure!(
+                !plan.has_server_events() || fault.enabled(),
+                "--fault-plan server events (kill-server, corrupt-downlink) \
+                 need fault handling; set --worker-timeout > 0"
+            );
+            Some(plan)
+        }
+        None => None,
+    };
+
+    // durable run log: load (and resume) or create, refusing to marry a
+    // log to a different experiment. The identity hash covers only the
+    // trajectory-determining fields, so a restart may legitimately drop
+    // an already-fired --fault-plan or change plumbing like --listen.
+    let chash = runlog::config_hash(&cfg.canonical_identity());
+    let mut resume: Option<ResumeState> = None;
+    let mut resume_snapshot: Option<(usize, Vec<Vec<u8>>)> = None;
+    let mut resume_check: VecDeque<(u64, Vec<u8>)> = VecDeque::new();
+    let mut runlog_handle: Option<RunLog> = None;
+    if let Some(dir) = cfg.wire.run_dir.as_deref() {
+        let dir = Path::new(dir);
+        match RunLog::load(dir).with_context(|| format!("run log: loading {}", dir.display()))? {
+            Some(loaded) => {
+                ensure!(
+                    loaded.config_hash == chash,
+                    "run log in {} belongs to a different experiment \
+                     (config identity {:#018x}, ours {:#018x}); refusing to resume",
+                    dir.display(),
+                    loaded.config_hash,
+                    chash
+                );
+                ensure!(
+                    loaded.seed == cfg.seed,
+                    "run log in {} was seeded with {}, not {}; refusing to resume",
+                    dir.display(),
+                    loaded.seed,
+                    cfg.seed
+                );
+                if let Some(snap) = &loaded.snapshot {
+                    ensure!(
+                        snap.shard_blobs.len() == n,
+                        "run log snapshot holds {} shard blob(s), expected {n}",
+                        snap.shard_blobs.len()
+                    );
+                    ensure!(
+                        method.server.load_state(&snap.server_blob),
+                        "run log snapshot: malformed or wrong-shape server state"
+                    );
+                    let server_rng = Rng::load_state(&snap.rng_blob)
+                        .context("run log snapshot: malformed server RNG state")?;
+                    crate::info!(
+                        "wire",
+                        "resuming from {} at round {} ({} record(s), {} journaled \
+                         round(s) to verify)",
+                        dir.display(),
+                        snap.round,
+                        loaded.records.len(),
+                        loaded.journal.len()
+                    );
+                    resume = Some(ResumeState {
+                        round: snap.round as usize,
+                        server_rng,
+                        acc: snap.totals,
+                        records: loaded.records.clone(),
+                    });
+                    resume_snapshot = Some((snap.round as usize, snap.shard_blobs.clone()));
+                } else {
+                    crate::info!(
+                        "wire",
+                        "run log in {} has no committed snapshot; restarting from \
+                         round 0 ({} journaled round(s) to verify)",
+                        dir.display(),
+                        loaded.journal.len()
+                    );
+                }
+                resume_check = loaded.journal.iter().cloned().collect();
+                runlog_handle =
+                    Some(RunLog::reopen(dir, &loaded).context("run log: reopening")?);
+            }
+            None => {
+                runlog_handle = Some(
+                    RunLog::create(dir, chash, cfg.seed)
+                        .with_context(|| format!("run log: creating {}", dir.display()))?,
+                );
+            }
+        }
+    }
+
     let mut es = ElasticServer::new(
         listener,
         hello,
@@ -1600,8 +1930,30 @@ pub(crate) fn serve_observed(
         assignment,
         run_cfg.checkpoint_every,
     )?;
+    es.crc = cfg.wire.crc;
+    es.fault_plan = fault_plan;
+    es.runlog = runlog_handle;
+    es.resume_check = resume_check;
+    if let Some((round, blobs)) = resume_snapshot {
+        // initial assignments become rejoins: every connecting worker is
+        // restored to the snapshot round over the existing catch-up path
+        es.resume_mode = true;
+        es.journal_base = round;
+        es.snapshot = Some((round, blobs));
+    }
+    // the residual normalizer is ‖x0 − x*‖², NOT distance-from-current-
+    // iterate: a resumed server stands up mid-run where they differ
+    let denom = vector::dist2(&spec.x0, &prep.x_star).max(1e-300);
     es.accept_initial()?;
-    es.run(method.server.as_mut(), &method.name, &prep.x_star, run_cfg, obs)
+    es.run(
+        method.server.as_mut(),
+        &method.name,
+        &prep.x_star,
+        denom,
+        run_cfg,
+        resume,
+        obs,
+    )
 }
 
 /// `smx serve`: prepare the problem, run the elastic server (accept
@@ -1699,11 +2051,12 @@ pub fn worker_connect(addr: &str) -> Result<()> {
     worker_connect_with(addr, WorkerOpts::default())
 }
 
-/// [`worker_connect`] with chaos/pinning options: rebuild the assigned
-/// shards' state from the `Hello` handshake (deterministic, so worker
-/// state matches the server's reference build bit-for-bit), keep the
-/// unassigned worker halves in reserve for later adoption, and run the
-/// round loop until `Stop`.
+/// [`worker_connect`] with chaos/pinning/resilience options: run
+/// [`worker_session`] and, whenever it fails with a *connection*-class
+/// error (server restarted, socket reset, CRC-detected corruption),
+/// retry the whole session — reconnect, re-handshake, rejoin — with
+/// capped exponential backoff. Protocol violations and chaos assertions
+/// propagate immediately; they would only recur on retry.
 pub fn worker_connect_with(addr: &str, opts: WorkerOpts) -> Result<()> {
     if let Some(core) = opts.pin {
         let ok = crate::util::affinity::pin_to_core(core);
@@ -1713,10 +2066,72 @@ pub fn worker_connect_with(addr: &str, opts: WorkerOpts) -> Result<()> {
             if ok { "ok" } else { "unsupported (running unpinned)" }
         );
     }
+    let mut attempt: usize = 0;
+    loop {
+        match worker_session(addr, &opts) {
+            Ok(()) => return Ok(()),
+            Err(e) => {
+                let msg = format!("{e:#}");
+                if attempt >= opts.max_retries || !is_connection_error(&msg) {
+                    return Err(e);
+                }
+                attempt += 1;
+                let wait = retry_backoff(opts.retry_base_ms, attempt);
+                crate::info!(
+                    "wire",
+                    "connection lost ({msg}); retrying {attempt}/{} in {wait:?}",
+                    opts.max_retries
+                );
+                std::thread::sleep(wait);
+            }
+        }
+    }
+}
+
+/// Is this session failure worth a reconnect? The vendored `anyhow` shim
+/// flattens causes to strings, so classification matches on the context
+/// markers *our own* transport call sites attach (all of them wrap
+/// socket IO). Anything else — protocol violations, shape mismatches,
+/// the `--expect-restore` assertion — is deterministic and must NOT be
+/// swallowed by a retry.
+fn is_connection_error(msg: &str) -> bool {
+    const MARKERS: [&str; 8] = [
+        "connecting to",
+        "waiting for hello",
+        "worker recv",
+        "worker send",
+        "worker heartbeat",
+        "worker snapshot send",
+        "replay recv",
+        "restore recv",
+    ];
+    MARKERS.iter().any(|m| msg.contains(m))
+}
+
+/// Backoff for retry `attempt` (1-based): `base · 2^min(attempt,5)`
+/// capped at 10 s, plus sub-`base` jitter (seeded by pid ⊕ attempt so a
+/// worker fleet killed together does not reconnect in lockstep, yet each
+/// process backs off reproducibly).
+fn retry_backoff(base_ms: u64, attempt: usize) -> Duration {
+    let exp = base_ms.saturating_mul(1u64 << attempt.min(5));
+    let jitter =
+        SplitMix64::new(std::process::id() as u64 ^ attempt as u64).next_u64() % base_ms.max(1);
+    Duration::from_millis(exp.min(10_000) + jitter)
+}
+
+/// One worker session: connect, handshake, rebuild the assigned shards'
+/// state from the `Hello` (deterministic, so worker state matches the
+/// server's reference build bit-for-bit), keep the unassigned worker
+/// halves in reserve for later adoption, and run the round loop until
+/// `Stop`.
+fn worker_session(addr: &str, opts: &WorkerOpts) -> Result<()> {
     let mut t = Tcp::connect_retry(addr, 60, Duration::from_millis(250))
         .with_context(|| format!("connecting to {addr}"))?;
     let mut body = Vec::new();
     t.recv(&mut body).context("waiting for hello")?;
+    // mirror the server's frame-integrity mode: the Hello just told us
+    // whether frames carry CRC32 trailers
+    t.set_crc(t.crc_seen());
     // a standby replacement that was never needed is released with a Stop
     // instead of a Hello — that is a clean no-op exit
     if codec::frame_tag(&body)? == codec::TAG_STOP {
@@ -1793,6 +2208,7 @@ pub fn worker_connect_with(addr: &str, opts: WorkerOpts) -> Result<()> {
         payload: hello.payload,
         dim: hello.x0.len(),
         die_after: opts.die_after,
+        fault: opts.fault.clone(),
         rounds_seen: 0,
         expect_restore: opts.expect_restore,
         restored: false,

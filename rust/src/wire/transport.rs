@@ -8,6 +8,28 @@
 //! measured-byte accounting includes, so `bytes_up`/`bytes_down` equal
 //! what actually crosses the socket.
 //!
+//! # Frame integrity (CRC32 trailer)
+//!
+//! With [`Tcp::set_crc`] enabled (the default for `smx serve` runs via
+//! `wire.crc`), each sent frame sets [`FRAME_CRC_FLAG`] — the top bit of
+//! the length prefix, which a plain length can never carry because
+//! [`MAX_FRAME`] caps real lengths well below it — and appends a 4-byte
+//! little-endian [`crc32`] of the body. Receivers are self-describing:
+//! a flagged frame is always verified and stripped, an unflagged frame
+//! is passed through, so old and new senders interoperate frame by
+//! frame. A pre-CRC receiver sees a flagged prefix as an over-cap length
+//! and fails with `InvalidData` — the deliberate version bump. A CRC
+//! mismatch also surfaces as `InvalidData`: the elastic server treats it
+//! like a connection death, and the reconnect path retransmits the
+//! journaled frames, turning silent corruption into a detected,
+//! replayable event. The trailer (like the heartbeats) is protocol
+//! overhead, excluded from the `bytes_up`/`bytes_down` accounting.
+//!
+//! The pure [`encode_frame`]/[`decode_frame`] helpers implement exactly
+//! the on-wire framing without touching a socket; they are what the fuzz
+//! suite (and Miri) exercise, and what the durable run log reuses for
+//! its CRC-guarded records.
+//!
 //! [`Tcp`] owns its reassembly state (a rolling receive buffer instead of
 //! a `BufReader`), which lets the same endpoint serve both blocking use
 //! (workers, the loopback-style drivers) and the elastic server's
@@ -24,8 +46,106 @@ use std::time::Duration;
 
 /// Refuse frames above this size (a corrupt length prefix must not drive
 /// a huge allocation). Far above any real message: a dense f64 downlink
-/// at d = 10⁷ is 80 MB.
-const MAX_FRAME: usize = 1 << 30;
+/// at d = 10⁷ is 80 MB. Doubles as the guarantee that real lengths never
+/// collide with [`FRAME_CRC_FLAG`] in the prefix.
+pub const MAX_FRAME: usize = 1 << 30;
+
+/// Top bit of the `u32` length prefix: set ⇔ the frame carries a 4-byte
+/// CRC32 trailer after the body.
+pub const FRAME_CRC_FLAG: u32 = 1 << 31;
+
+/// Retain at most this much receive-buffer capacity once fully drained;
+/// one oversized frame (a dense downlink at large d) must not pin its
+/// peak footprint for the rest of the run (bounded per connection, not
+/// per run).
+const RBUF_RETAIN: usize = 256 * 1024;
+
+/// CRC-32 lookup table (IEEE 802.3, reflected polynomial `0xEDB88320`),
+/// generated at compile time.
+const CRC_TABLE: [u32; 256] = {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+};
+
+/// CRC-32 (IEEE 802.3) of `data`; `crc32(b"123456789") == 0xCBF43926`.
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in data {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+/// Encode one frame exactly as [`Tcp`] puts it on the wire: `u32` LE
+/// length prefix (with [`FRAME_CRC_FLAG`] set when `crc`), the body, and
+/// — when `crc` — the 4-byte LE [`crc32`] trailer of the body.
+///
+/// Panics if `body` exceeds [`MAX_FRAME`] (callers frame codec bodies,
+/// which are bounded far below it).
+pub fn encode_frame(body: &[u8], crc: bool) -> Vec<u8> {
+    assert!(body.len() <= MAX_FRAME, "frame body exceeds MAX_FRAME");
+    let mut out = Vec::with_capacity(4 + body.len() + if crc { 4 } else { 0 });
+    let mut prefix = body.len() as u32;
+    if crc {
+        prefix |= FRAME_CRC_FLAG;
+    }
+    out.extend_from_slice(&prefix.to_le_bytes());
+    out.extend_from_slice(body);
+    if crc {
+        out.extend_from_slice(&crc32(body).to_le_bytes());
+    }
+    out
+}
+
+/// Parse one frame from the front of `buf`. Returns
+/// `Ok(Some((consumed, had_crc)))` with `body` refilled when a complete
+/// frame is present — CRC verified and stripped if flagged — and
+/// `Ok(None)` when more bytes are needed. `Err(InvalidData)` on an
+/// over-[`MAX_FRAME`] length or a CRC mismatch (a truncation can never
+/// be mistaken for success: it parses as "more bytes needed").
+pub fn decode_frame(buf: &[u8], body: &mut Vec<u8>) -> io::Result<Option<(usize, bool)>> {
+    if buf.len() < 4 {
+        return Ok(None);
+    }
+    let prefix = u32::from_le_bytes([buf[0], buf[1], buf[2], buf[3]]);
+    let had_crc = prefix & FRAME_CRC_FLAG != 0;
+    let len = (prefix & !FRAME_CRC_FLAG) as usize;
+    if len > MAX_FRAME {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("frame length {len} exceeds cap"),
+        ));
+    }
+    let total = 4 + len + if had_crc { 4 } else { 0 };
+    if buf.len() < total {
+        return Ok(None);
+    }
+    let data = &buf[4..4 + len];
+    if had_crc {
+        let want = u32::from_le_bytes([buf[4 + len], buf[5 + len], buf[6 + len], buf[7 + len]]);
+        let got = crc32(data);
+        if got != want {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("frame CRC mismatch: computed {got:#010x}, trailer {want:#010x}"),
+            ));
+        }
+    }
+    body.clear();
+    body.extend_from_slice(data);
+    Ok(Some((total, had_crc)))
+}
 
 /// Give up on a nonblocking send that makes no progress for this long
 /// (peer alive-but-stalled: SIGSTOPped, wedged, or reading nothing while
@@ -102,6 +222,15 @@ pub struct Tcp {
     rpos: usize,
     /// fixed scratch for one kernel read
     chunk: Box<[u8; 64 * 1024]>,
+    /// append a CRC32 trailer (+ prefix flag) to every sent frame
+    crc_send: bool,
+    /// a CRC-flagged frame has been received — workers mirror the
+    /// server's choice from this
+    crc_seen: bool,
+    /// fault injection: XOR this bit into the next sent frame's body
+    /// *after* the CRC is computed (on-wire corruption the receiver's
+    /// check genuinely detects)
+    corrupt_next: Option<u64>,
 }
 
 impl Tcp {
@@ -113,7 +242,31 @@ impl Tcp {
             rbuf: Vec::new(),
             rpos: 0,
             chunk: Box::new([0u8; 64 * 1024]),
+            crc_send: false,
+            crc_seen: false,
+            corrupt_next: None,
         })
+    }
+
+    /// Enable/disable the CRC32 trailer on *sent* frames. Reception is
+    /// self-describing (the prefix flag), so this only shapes what the
+    /// peer sees.
+    pub fn set_crc(&mut self, on: bool) {
+        self.crc_send = on;
+    }
+
+    /// Whether any received frame carried the CRC flag — the worker's
+    /// cue to mirror the server and CRC its own uplinks.
+    pub fn crc_seen(&self) -> bool {
+        self.crc_seen
+    }
+
+    /// Fault injection ([`FaultPlan`](crate::wire::FaultPlan)): flip one
+    /// bit of the next sent frame's body on the wire, *after* the CRC
+    /// trailer is computed. `bit` selects position (mod body length), so
+    /// a seeded plan corrupts a reproducible bit.
+    pub fn corrupt_next_frame(&mut self, bit: u64) {
+        self.corrupt_next = Some(bit);
     }
 
     pub fn connect<A: ToSocketAddrs>(addr: A) -> io::Result<Tcp> {
@@ -161,32 +314,29 @@ impl Tcp {
         self.stream.peer_addr()
     }
 
-    /// Extract one complete frame from the rolling buffer, if present.
+    /// Extract one complete frame from the rolling buffer, if present
+    /// (CRC verified + stripped when the prefix is flagged).
     fn take_frame(&mut self, body: &mut Vec<u8>) -> io::Result<bool> {
-        let avail = self.rbuf.len() - self.rpos;
-        if avail < 4 {
-            return Ok(false);
+        match decode_frame(&self.rbuf[self.rpos..], body)? {
+            Some((consumed, had_crc)) => {
+                if had_crc {
+                    self.crc_seen = true;
+                }
+                self.rpos += consumed;
+                if self.rpos == self.rbuf.len() {
+                    // buffer fully drained: reset in place, keeping at
+                    // most RBUF_RETAIN of capacity so one oversized frame
+                    // doesn't pin its footprint for the rest of the run
+                    self.rbuf.clear();
+                    self.rpos = 0;
+                    if self.rbuf.capacity() > RBUF_RETAIN {
+                        self.rbuf.shrink_to(RBUF_RETAIN);
+                    }
+                }
+                Ok(true)
+            }
+            None => Ok(false),
         }
-        let p = &self.rbuf[self.rpos..self.rpos + 4];
-        let len = u32::from_le_bytes([p[0], p[1], p[2], p[3]]) as usize;
-        if len > MAX_FRAME {
-            return Err(io::Error::new(
-                io::ErrorKind::InvalidData,
-                format!("frame length {len} exceeds cap"),
-            ));
-        }
-        if avail < 4 + len {
-            return Ok(false);
-        }
-        body.clear();
-        body.extend_from_slice(&self.rbuf[self.rpos + 4..self.rpos + 4 + len]);
-        self.rpos += 4 + len;
-        if self.rpos == self.rbuf.len() {
-            // buffer fully drained: reset in place, keep the capacity
-            self.rbuf.clear();
-            self.rpos = 0;
-        }
-        Ok(true)
     }
 
     /// One kernel read into the rolling buffer. `Ok(0)` is EOF; maps a
@@ -232,16 +382,37 @@ impl Tcp {
 
 impl Transport for Tcp {
     fn send(&mut self, body: &[u8]) -> io::Result<()> {
-        let len = u32::try_from(body.len())
-            .map_err(|_| io::Error::new(io::ErrorKind::InvalidInput, "frame too large"))?;
+        if body.len() > MAX_FRAME {
+            return Err(io::Error::new(io::ErrorKind::InvalidInput, "frame too large"));
+        }
+        let mut len = body.len() as u32;
+        if self.crc_send {
+            len |= FRAME_CRC_FLAG;
+        }
         let prefix = len.to_le_bytes();
-        // write prefix + body fully, absorbing WouldBlock in nonblocking
-        // mode (the readiness loop never leaves a frame half-sent) — but
-        // only while the peer keeps draining: a no-progress stall past
-        // SEND_STALL_TIMEOUT errors out so the server can declare the
-        // connection dead instead of wedging forever
+        // trailer computed from the *uncorrupted* body: an injected
+        // bit-flip below is on-wire corruption the peer's check detects
+        let trailer = crc32(body).to_le_bytes();
+        let flipped;
+        let wire_body: &[u8] = match self.corrupt_next.take() {
+            Some(bit) if !body.is_empty() => {
+                let mut c = body.to_vec();
+                let pos = (bit / 8) as usize % c.len();
+                c[pos] ^= 1 << (bit % 8);
+                flipped = c;
+                &flipped
+            }
+            _ => body,
+        };
+        let tail: &[u8] = if self.crc_send { &trailer } else { &[] };
+        // write prefix + body (+ trailer) fully, absorbing WouldBlock in
+        // nonblocking mode (the readiness loop never leaves a frame
+        // half-sent) — but only while the peer keeps draining: a
+        // no-progress stall past SEND_STALL_TIMEOUT errors out so the
+        // server can declare the connection dead instead of wedging
+        // forever
         let mut last_progress = std::time::Instant::now();
-        for part in [&prefix[..], body] {
+        for part in [&prefix[..], wire_body, tail] {
             let mut off = 0usize;
             while off < part.len() {
                 match self.stream.write(&part[off..]) {
@@ -390,6 +561,68 @@ mod tests {
         assert!(!t.try_recv(&mut body).unwrap());
         t.send(&[1]).unwrap(); // release the client
         client.join().unwrap();
+    }
+
+    #[test]
+    fn crc32_known_answer_and_frame_helpers() {
+        // the IEEE 802.3 check value
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+
+        for crc in [false, true] {
+            let body: Vec<u8> = (0..57u8).collect();
+            let frame = encode_frame(&body, crc);
+            assert_eq!(frame.len(), 4 + body.len() + if crc { 4 } else { 0 });
+            let mut dec = Vec::new();
+            let (consumed, had_crc) = decode_frame(&frame, &mut dec).unwrap().unwrap();
+            assert_eq!((consumed, had_crc), (frame.len(), crc));
+            assert_eq!(dec, body);
+            // every strict prefix is "need more bytes", never success
+            for cut in 0..frame.len() {
+                assert!(decode_frame(&frame[..cut], &mut dec).unwrap().is_none());
+            }
+        }
+        // a flagged frame with any body bit flipped is *detected*
+        let frame = encode_frame(&[1, 2, 3, 4], true);
+        for byte in 4..8 {
+            for bit in 0..8 {
+                let mut bad = frame.clone();
+                bad[byte] ^= 1 << bit;
+                let mut dec = Vec::new();
+                let e = decode_frame(&bad, &mut dec).unwrap_err();
+                assert_eq!(e.kind(), io::ErrorKind::InvalidData);
+            }
+        }
+    }
+
+    #[test]
+    fn tcp_crc_roundtrip_mirroring_and_corruption_detection() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut t = Tcp::new(stream).unwrap();
+            t.set_crc(true);
+            t.send(&[10, 20, 30]).unwrap();
+            let mut buf = Vec::new();
+            t.recv(&mut buf).unwrap(); // mirrored (CRC'd) echo
+            assert_eq!(buf, vec![10, 20, 30]);
+            assert!(t.crc_seen(), "client should have mirrored the CRC flag");
+            // now corrupt a frame on the wire: the peer must detect it
+            t.corrupt_next_frame(0x1D);
+            t.send(&[7; 64]).unwrap();
+        });
+        let mut c = Tcp::connect_retry(addr, 20, Duration::from_millis(50)).unwrap();
+        let mut buf = Vec::new();
+        c.recv(&mut buf).unwrap();
+        assert_eq!(buf, vec![10, 20, 30]);
+        // worker-style mirroring: enable CRC once the server shows it
+        assert!(c.crc_seen());
+        c.set_crc(true);
+        c.send(&[10, 20, 30]).unwrap();
+        let e = c.recv(&mut buf).unwrap_err();
+        assert_eq!(e.kind(), io::ErrorKind::InvalidData, "bit flip must be detected: {e}");
+        server.join().unwrap();
     }
 
     #[test]

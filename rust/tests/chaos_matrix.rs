@@ -1,0 +1,265 @@
+//! Chaos matrix: scripted faults (`FaultPlan`) × methods, every cell
+//! asserting **bitwise identity** to the sim driver.
+//!
+//! The four failure modes from the `wire::runtime` failure model, each
+//! driven by a `--fault-plan` schedule instead of ad-hoc flags:
+//!
+//! * **Server kill + restart** — `kill-server@rN` aborts the run loop
+//!   without a clean shutdown (workers see EOF, as under SIGKILL); a
+//!   second `serve_on` pointed at the same `--run-dir` resumes from the
+//!   last committed snapshot + journal suffix while the *same* worker
+//!   threads ride out the gap on retry/backoff. `check_sim` inside the
+//!   resumed serve asserts final iterates AND coords_up against the sim
+//!   driver — the crash must be invisible in the trajectory.
+//! * **Corrupted downlink** — `corrupt-downlink@rN` flips one seeded bit
+//!   in a framed downlink. The CRC32 trailer turns that into a detected
+//!   receive error; the victim worker reconnects via backoff and the
+//!   journal replay retransmits the clean bytes.
+//! * **Scripted worker kill** — `kill@rN:wK` makes the worker hosting
+//!   shard K vanish on receipt of the round-N downlink (≡ the old
+//!   `--die-after`, but shard-addressed so the schedule is deterministic
+//!   even though assignment groups race between processes).
+//! * **Dropped uplink** — `drop-uplink@rN:wK` computes the round but
+//!   severs instead of replying; a parked standby inherits the shards
+//!   and the journal replay regenerates the missing uplink.
+//!
+//! Delay events (`delay@rN:MSms`) ride along in the worker-kill cell to
+//! show slowness is absorbed without trace. The restart cell runs for
+//! diana+, diana++ (sparse downlink + pending server message), and
+//! adiana+ (accelerated server state) — the three methods with the most
+//! server/worker state to lose.
+//!
+//! Every run is constructed through the `serve_on` front door, exactly
+//! like `smx serve`.
+
+use smx::config::ExperimentConfig;
+use smx::sampling::SamplingKind;
+use smx::wire::{serve_on, worker_connect, worker_connect_with, FaultPlan, WorkerOpts, KILLED_MARKER};
+use std::net::TcpListener;
+use std::path::Path;
+use std::time::Duration;
+
+fn chaos_cfg(method: &str, sampling: SamplingKind, scenario: &str) -> ExperimentConfig {
+    let slug = format!("smx_chaos_{scenario}_{}", method.replace('+', "p"));
+    ExperimentConfig {
+        dataset: "tiny".into(),
+        methods: vec![method.into()],
+        sampling,
+        tau: 2.0,
+        workers: 4,
+        max_rounds: 40,
+        target_residual: 0.0,
+        record_every: 1,
+        seed: 77,
+        out_dir: std::env::temp_dir().join(slug),
+        ..Default::default()
+    }
+}
+
+/// Generous retry budget so a worker rides out a full server
+/// kill-rebind-restart cycle; small base so the tests stay fast.
+fn resilient() -> WorkerOpts {
+    WorkerOpts {
+        max_retries: 20,
+        retry_base_ms: 25,
+        ..Default::default()
+    }
+}
+
+/// Rebind an address the previous listener just vacated. std's
+/// `TcpListener` sets SO_REUSEADDR, so lingering TIME_WAIT sockets from
+/// the killed server don't block this; the retry only covers the instant
+/// between the old listener's drop and the kernel releasing it.
+fn bind_retry(addr: &str) -> TcpListener {
+    for _ in 0..200 {
+        match TcpListener::bind(addr) {
+            Ok(l) => return l,
+            Err(_) => std::thread::sleep(Duration::from_millis(25)),
+        }
+    }
+    panic!("could not rebind {addr} for the restarted server");
+}
+
+fn fresh_dir(path: &Path) {
+    std::fs::remove_dir_all(path).ok();
+}
+
+#[test]
+fn server_kill_and_restart_resumes_bitwise_identical() {
+    // kill-server@r11 with checkpoint cadence 4: the round-8 snapshot is
+    // the last committed one, so the durable state at the kill is
+    // {snapshot@8} + {journal downlinks 9..11}. The restarted serve must
+    // (a) verify its regenerated downlinks against that journal suffix,
+    // (b) restore both rejoining workers from the snapshot blobs, and
+    // (c) finish rounds 9..40 bitwise identical to an undisturbed sim
+    // run. The workers are NOT restarted — the same threads reconnect
+    // through the retry/backoff loop while the port is down.
+    for (method, sampling) in [
+        ("diana+", SamplingKind::ImportanceDiana),
+        ("diana++", SamplingKind::Uniform),
+        ("adiana+", SamplingKind::Uniform),
+    ] {
+        let mut cfg = chaos_cfg(method, sampling, "restart");
+        let run_dir = std::env::temp_dir().join(format!(
+            "smx_chaos_rundir_{}",
+            method.replace('+', "p")
+        ));
+        fresh_dir(&run_dir);
+        cfg.checkpoint_every = 4;
+        cfg.wire.workers = 2;
+        cfg.wire.worker_timeout = 20.0;
+        cfg.wire.run_dir = Some(run_dir.display().to_string());
+        cfg.wire.fault_plan = Some("kill-server@r11".into());
+
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let workers: Vec<_> = (0..2)
+            .map(|_| {
+                let addr = addr.clone();
+                std::thread::spawn(move || worker_connect_with(&addr, resilient()))
+            })
+            .collect();
+
+        let err = serve_on(listener, &cfg, false)
+            .expect_err(&format!("{method}: planned kill must surface as an error"));
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains(KILLED_MARKER) && msg.contains("round 11"),
+            "{method}: expected the planned-kill marker, got: {msg}"
+        );
+        assert!(
+            run_dir.join("base.bin").is_file(),
+            "{method}: the kill left no committed run log behind"
+        );
+
+        // Restart: same trajectory identity (canonical config), no fault
+        // plan this time — re-arming the kill would just loop forever.
+        cfg.wire.fault_plan = None;
+        let listener = bind_retry(&addr);
+        serve_on(listener, &cfg, true).unwrap_or_else(|e| {
+            panic!("{method}: restarted serve_on --check-sim failed: {e:#}")
+        });
+        for w in workers {
+            w.join().unwrap().expect("worker must survive the restart via backoff");
+        }
+        fresh_dir(&run_dir);
+        fresh_dir(&cfg.out_dir);
+    }
+}
+
+#[test]
+fn corrupted_downlink_is_detected_and_retransmitted() {
+    // corrupt-downlink@r9 flips one seeded bit in the round-9 downlink
+    // frame to the first live connection. With CRC trailers on (the
+    // default) the victim's recv fails instead of silently poisoning the
+    // trajectory; the worker reconnects through its backoff loop and the
+    // rejoin replay streams the clean journal copy. check_sim then proves
+    // the corruption is invisible: final iterates and coords_up are
+    // bitwise identical to the sim driver.
+    let mut cfg = chaos_cfg("diana+", SamplingKind::ImportanceDiana, "corrupt");
+    cfg.wire.workers = 2;
+    cfg.wire.worker_timeout = 20.0;
+    cfg.wire.fault_plan = Some("corrupt-downlink@r9".into());
+    assert!(cfg.wire.crc, "CRC trailers must be on by default");
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let workers: Vec<_> = (0..2)
+        .map(|_| {
+            let addr = addr.clone();
+            std::thread::spawn(move || worker_connect_with(&addr, resilient()))
+        })
+        .collect();
+
+    serve_on(listener, &cfg, true).expect("serve_on --check-sim under downlink corruption");
+    for w in workers {
+        w.join().unwrap().expect("corrupted worker must recover via reconnect");
+    }
+    fresh_dir(&cfg.out_dir);
+}
+
+#[test]
+fn scripted_worker_kill_and_delay_with_standby_rejoin() {
+    // Both workers carry the same plan; `:w0` makes exactly the process
+    // hosting shard 0 vanish on the round-6 downlink, whichever thread
+    // that turned out to be (assignment groups are handed out in accept
+    // order, which races). The unqualified delay slows every worker's
+    // round 3 by 10 ms — slowness must leave no trace. A parked standby
+    // inherits the orphaned shards via journal replay.
+    let mut cfg = chaos_cfg("diana+", SamplingKind::ImportanceDiana, "kill");
+    cfg.wire.workers = 2;
+    cfg.wire.worker_timeout = 20.0;
+    let plan = FaultPlan::parse("kill@r6:w0;delay@r3:10ms", 0).unwrap();
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let initial: Vec<_> = (0..2)
+        .map(|_| {
+            let addr = addr.clone();
+            let fault = plan.clone();
+            std::thread::spawn(move || {
+                worker_connect_with(
+                    &addr,
+                    WorkerOpts {
+                        fault: Some(fault),
+                        ..Default::default()
+                    },
+                )
+            })
+        })
+        .collect();
+    let replacement = std::thread::spawn(move || {
+        std::thread::sleep(Duration::from_millis(400));
+        worker_connect(&addr)
+    });
+
+    serve_on(listener, &cfg, true).expect("serve_on --check-sim under scripted kill + delay");
+    for w in initial {
+        w.join().unwrap().expect("scripted worker (clean injected exit)");
+    }
+    replacement.join().unwrap().expect("replacement worker");
+    fresh_dir(&cfg.out_dir);
+}
+
+#[test]
+fn scripted_drop_uplink_severs_and_standby_replays() {
+    // drop-uplink@r5:w1 — the worker hosting shard 1 computes round 5 but
+    // severs instead of replying, so the round-5 uplink for its whole
+    // shard group simply never arrives. The standby is promoted, replays
+    // the journal (rounds 1..5), and answers round 5 live with the exact
+    // bytes the deserter would have sent. diana++ here so the replay also
+    // covers the sparse-downlink / model-replica path.
+    let mut cfg = chaos_cfg("diana++", SamplingKind::Uniform, "drop");
+    cfg.wire.workers = 2;
+    cfg.wire.worker_timeout = 20.0;
+    let plan = FaultPlan::parse("drop-uplink@r5:w1", 0).unwrap();
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let initial: Vec<_> = (0..2)
+        .map(|_| {
+            let addr = addr.clone();
+            let fault = plan.clone();
+            std::thread::spawn(move || {
+                worker_connect_with(
+                    &addr,
+                    WorkerOpts {
+                        fault: Some(fault),
+                        ..Default::default()
+                    },
+                )
+            })
+        })
+        .collect();
+    let replacement = std::thread::spawn(move || {
+        std::thread::sleep(Duration::from_millis(400));
+        worker_connect(&addr)
+    });
+
+    serve_on(listener, &cfg, true).expect("serve_on --check-sim under dropped uplink");
+    for w in initial {
+        w.join().unwrap().expect("severing worker (clean injected exit)");
+    }
+    replacement.join().unwrap().expect("replacement worker");
+    fresh_dir(&cfg.out_dir);
+}

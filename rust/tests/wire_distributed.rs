@@ -1,12 +1,12 @@
 //! Distributed-driver integration tests.
 //!
-//! * Under the lossless `f64` payload, `run_distributed` (loopback and
-//!   TCP) must produce iterates **bitwise identical** to `run_sim`, for
-//!   dense-downlink methods, ADIANA's two-message uplink, and DIANA++'s
-//!   sparse downlink — at one process per shard *and* with several shards
-//!   multiplexed per process.
-//! * Measured `bytes_up`/`bytes_down` recorded by `run_sim` equal the
-//!   bytes the distributed driver actually framed (procs = n).
+//! * Under the lossless `f64` payload, the distributed driver (loopback
+//!   and TCP) must produce iterates **bitwise identical** to the sim
+//!   driver, for dense-downlink methods, ADIANA's two-message uplink, and
+//!   DIANA++'s sparse downlink — at one process per shard *and* with
+//!   several shards multiplexed per process.
+//! * Measured `bytes_up`/`bytes_down` recorded by the sim driver equal
+//!   the bytes the distributed driver actually framed (procs = n).
 //! * Lossy payloads track the `f64` trajectory on a1a within the
 //!   tolerances documented in `wire/mod.rs`.
 //! * Chaos: a worker killed mid-run and replaced (rejoin + journal

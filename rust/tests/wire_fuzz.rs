@@ -13,7 +13,11 @@
 //!   what the in-process drivers record as measured bytes);
 //! * truncated frames decode to `Err`, never panic;
 //! * arbitrary single-byte corruption decodes to `Err` *or* a valid
-//!   message, never panics and never allocates unboundedly.
+//!   message, never panics and never allocates unboundedly;
+//! * the CRC32 frame layer ([`encode_frame`]/[`decode_frame`]) round-trips
+//!   both modes, parses every truncation as "more bytes needed", and never
+//!   hands back a corrupted body from a flagged frame — while an unflagged
+//!   frame demonstrably does (the gap the trailer exists to close).
 //!
 //! The base seed comes from `SMX_FUZZ_SEED` (decimal u64; CI sets and
 //! logs it — see `.github/workflows/ci.yml`), so any failure is
@@ -25,6 +29,7 @@ use smx::methods::{Downlink, Uplink};
 use smx::util::prop::{forall, PropConfig};
 use smx::util::rng::Rng;
 use smx::wire::codec::{self, FRAME_PREFIX};
+use smx::wire::transport::{crc32, decode_frame, encode_frame, FRAME_CRC_FLAG};
 use smx::wire::Payload;
 
 fn fuzz_seed() -> u64 {
@@ -369,6 +374,92 @@ fn fuzz_corrupted_frames_never_panic() {
                 // in an uncontrolled way
                 let mut ddec = dirty_downlink(rng);
                 let _ = codec::get_downlink(&bad, claim, &mut ddec);
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---- CRC frame layer ---------------------------------------------------
+
+#[test]
+fn fuzz_crc_framing_never_yields_a_corrupted_body() {
+    assert_eq!(crc32(b"123456789"), 0xCBF4_3926, "CRC-32 check vector");
+    forall(
+        PropConfig::cases(160, fuzz_seed() ^ 0xC2C),
+        "CRC frames reject flips; plain frames document the gap",
+        |rng| {
+            let body: Vec<u8> = (0..rng.below(257)).map(|_| rng.below(256) as u8).collect();
+            let mut out = Vec::new();
+            for crc in [false, true] {
+                let wire = encode_frame(&body, crc);
+                let prefix = u32::from_le_bytes(wire[..4].try_into().unwrap());
+                if (prefix & FRAME_CRC_FLAG != 0) != crc {
+                    return Err(format!("crc={crc}: prefix flag bit does not match mode"));
+                }
+                if wire.len() != 4 + body.len() + if crc { 4 } else { 0 } {
+                    return Err(format!("crc={crc}: unexpected frame length"));
+                }
+
+                // exact roundtrip; receivers are self-describing
+                match decode_frame(&wire, &mut out) {
+                    Ok(Some((consumed, had_crc))) => {
+                        if consumed != wire.len() || had_crc != crc || out != body {
+                            return Err(format!("crc={crc}: roundtrip mangled the frame"));
+                        }
+                    }
+                    other => return Err(format!("crc={crc}: roundtrip -> {other:?}")),
+                }
+
+                // every strict prefix parses as "need more bytes" — a
+                // truncation is never mistaken for a frame or an error
+                for cut in cut_points(rng, wire.len(), 16) {
+                    match decode_frame(&wire[..cut], &mut out) {
+                        Ok(None) => {}
+                        other => {
+                            return Err(format!("crc={crc}: truncation at {cut} -> {other:?}"))
+                        }
+                    }
+                }
+            }
+
+            // single-bit flips over the whole flagged frame: decoding may
+            // error or ask for more bytes, but it must never hand back a
+            // body that differs from what was sent (a prefix-flag flip
+            // legitimately decodes the intact body without verification)
+            let wire = encode_frame(&body, true);
+            for _ in 0..24 {
+                let bit = rng.below(wire.len() * 8);
+                let mut bad = wire.clone();
+                bad[bit / 8] ^= 1 << (bit % 8);
+                match decode_frame(&bad, &mut out) {
+                    Err(_) | Ok(None) => {}
+                    Ok(Some(_)) => {
+                        if out != body {
+                            return Err(format!(
+                                "bit {bit}: flagged frame decoded a corrupted body"
+                            ));
+                        }
+                    }
+                }
+            }
+
+            // ...whereas without the trailer the same flip is silently
+            // accepted — the failure mode the CRC layer exists to close
+            if !body.is_empty() {
+                let wire = encode_frame(&body, false);
+                let bit = 32 + rng.below(body.len() * 8);
+                let mut bad = wire.clone();
+                bad[bit / 8] ^= 1 << (bit % 8);
+                match decode_frame(&bad, &mut out) {
+                    Ok(Some((n, false))) if n == bad.len() && out != body => {}
+                    other => {
+                        return Err(format!(
+                            "plain-frame flip at bit {bit} -> {other:?} \
+                             (expected a silently corrupted decode)"
+                        ))
+                    }
+                }
             }
             Ok(())
         },

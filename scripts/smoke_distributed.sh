@@ -1,5 +1,5 @@
 #!/usr/bin/env bash
-# Multi-process smoke test for the wire subsystem, four legs:
+# Multi-process smoke test for the wire subsystem, five legs:
 #
 #  1. steady state — one `smx serve` coordinator and two `smx worker`
 #     processes on the synthetic tiny dataset (8 shards, 4 per worker
@@ -13,7 +13,14 @@
 #     truncated at each committed worker-state snapshot, so the
 #     replacement can only catch up via a snapshot restore — asserted by
 #     its own `--expect-restore` exit code;
-#  4. --driver distributed — the same protocol through the `Session`
+#  4. restart — durability: serve with `--run-dir` and a scripted
+#     `--fault-plan kill-server@r10` dies mid-run with exit 137 (the
+#     planned-kill code); the SAME worker processes ride out the gap on
+#     `--max-retries`/`--retry-base-ms` backoff while a fresh serve,
+#     pointed at the same run dir but without the fault plan, resumes
+#     from the last committed snapshot + journal suffix and finishes
+#     `--check-sim`-identical to the sim driver;
+#  5. --driver distributed — the same protocol through the `Session`
 #     front door from the plain `smx train` CLI (loopback transports, one
 #     process), asserted bitwise against a `--driver sim` run by diffing
 #     the residual-curve CSVs.
@@ -90,9 +97,66 @@ run_leg() {
   echo "distributed smoke OK ($name leg: bitwise identical to run_sim)"
 }
 
+# Leg 4 has a different shape (two serve invocations, one worker set), so
+# it gets its own driver instead of a run_leg case.
+restart_leg() {
+  local addr=$1
+  local run_dir="$OUT/runlog"
+  rm -rf "$run_dir"
+  local serve_args=(serve --dataset tiny --workers 8 --methods diana+
+    --sampling importance-diana --tau 2 --max-rounds 30
+    --listen "$addr" --wire-workers 2 --out-dir "$OUT"
+    --worker-timeout 60 --checkpoint-every 3 --run-dir "$run_dir")
+
+  timeout "${SMOKE_TIMEOUT:-300}" "$BIN" "${serve_args[@]}" \
+    --fault-plan kill-server@r10 &
+  local serve_pid=$!
+  "$BIN" worker --connect "$addr" --max-retries 20 --retry-base-ms 100 &
+  local w1=$!
+  "$BIN" worker --connect "$addr" --max-retries 20 --retry-base-ms 100 &
+  local w2=$!
+
+  local rc=0
+  wait "$serve_pid" || rc=$?
+  if [ "$rc" -ne 137 ]; then
+    echo "distributed smoke FAILED (restart leg: expected the planned kill's exit 137, got $rc)" >&2
+    exit 1
+  fi
+  if [ ! -f "$run_dir/base.bin" ]; then
+    echo "distributed smoke FAILED (restart leg: kill left no committed run log)" >&2
+    exit 1
+  fi
+
+  # Restart against the same run dir, without re-arming the kill. std's
+  # TcpListener sets SO_REUSEADDR, so the rebind should succeed at once;
+  # the retry only covers the instant between the old process's exit and
+  # the kernel releasing its listener.
+  local resumed=""
+  for attempt in 1 2 3; do
+    if timeout "${SMOKE_TIMEOUT:-300}" "$BIN" "${serve_args[@]}" --check-sim; then
+      resumed=yes
+      break
+    fi
+    echo "[restart] serve restart attempt $attempt failed; retrying" >&2
+    sleep 1
+  done
+  if [ -z "$resumed" ]; then
+    echo "distributed smoke FAILED (restart leg: resumed serve never matched the sim driver)" >&2
+    exit 1
+  fi
+
+  local i=1
+  for pid in "$w1" "$w2"; do
+    wait "$pid" || { echo "distributed smoke FAILED (restart leg: worker $i)" >&2; exit 1; }
+    i=$((i + 1))
+  done
+  echo "distributed smoke OK (restart leg: killed at round 10, resumed bitwise identical)"
+}
+
 run_leg steady "127.0.0.1:$PORT"
 run_leg chaos "127.0.0.1:$((PORT + 1))" --worker-timeout 60
 run_leg snapshot "127.0.0.1:$((PORT + 2))" --worker-timeout 60 --checkpoint-every 3
+restart_leg "127.0.0.1:$((PORT + 3))"
 
 # --driver distributed: the Session front door from the plain train CLI.
 # The wire protocol runs over loopback inside one process; its residual
