@@ -360,6 +360,53 @@ fn main() -> anyhow::Result<()> {
         ));
     }
 
+    // observability cost: the identical buffer-reusing diana+ round with
+    // the full per-round metrics hot path attached — rounds counter,
+    // duration histogram, and the seqlock round-block write the
+    // `/metrics` endpoint reads. The margin against "round e2e diana+
+    // (buffer-reusing, n=8)" is the per-round price of `--metrics-addr`.
+    {
+        let mspec = MethodSpec::new("diana+", 4.0, SamplingKind::Uniform, 1e-3, vec![0.0; sm.dim]);
+        let mut method = build(&mspec, &sm)?;
+        let mut engines: Vec<Box<dyn GradEngine>> = shards
+            .iter()
+            .map(|s| Box::new(NativeEngine::from_shard(s, 1e-3)) as Box<dyn GradEngine>)
+            .collect();
+        let base = Rng::new(1);
+        let mut server_rng = base.derive(u64::MAX);
+        let mut worker_rngs: Vec<Rng> = (0..shards.len()).map(|i| base.derive(i as u64)).collect();
+        let mut bufs = RoundBuffers::new(shards.len());
+        let registry = smx::obs::Registry::new(shards.len());
+        let mut rec = smx::coordinator::RoundRecord {
+            round: 0,
+            residual: 1.0,
+            coords_up: 0,
+            bits_up: 0,
+            coords_down: 0,
+            bytes_up: 0,
+            bytes_down: 0,
+            wall_secs: 0.0,
+            compute_secs: 0.0,
+            encode_secs: 0.0,
+            wire_secs: 0.0,
+        };
+        rows.push(bench("round e2e diana+ (metrics on, n=8)", 400, || {
+            let t = std::time::Instant::now();
+            sync_round(
+                &mut method,
+                &mut engines,
+                &mut server_rng,
+                &mut worker_rngs,
+                &mut bufs,
+            );
+            rec.round += 1;
+            rec.bytes_up += 4096;
+            registry.rounds.inc();
+            registry.round_duration.observe(t.elapsed().as_secs_f64());
+            registry.round.write(&rec);
+        }));
+    }
+
     // distributed round over loopback transports: the same diana+ round,
     // but messages travel the wire codec between the server and 2 worker
     // threads (4 shards each)

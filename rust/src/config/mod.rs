@@ -87,6 +87,13 @@ pub struct WireConfig {
     /// [`crate::wire::fault`]). Server-side events only — workers take
     /// their plans on their own command line.
     pub fault_plan: Option<String>,
+    /// observability HTTP listener address (`--metrics-addr`): `smx
+    /// serve` multiplexes a Prometheus-text `GET /metrics` + `GET
+    /// /healthz` endpoint onto its epoll loop there (see
+    /// [`crate::obs`]). None ⇒ no listener. Pure plumbing — cannot
+    /// affect the trajectory and is excluded from
+    /// [`ExperimentConfig::canonical_identity`].
+    pub metrics_addr: Option<String>,
 }
 
 impl Default for WireConfig {
@@ -100,6 +107,7 @@ impl Default for WireConfig {
             run_dir: None,
             crc: true,
             fault_plan: None,
+            metrics_addr: None,
         }
     }
 }
@@ -143,6 +151,9 @@ impl WireConfig {
                 "fault_plan" => {
                     w.fault_plan = Some(v.as_str().context("wire.fault_plan")?.to_string())
                 }
+                "metrics_addr" => {
+                    w.metrics_addr = Some(v.as_str().context("wire.metrics_addr")?.to_string())
+                }
                 other => bail!("unknown wire config key '{other}'"),
             }
         }
@@ -165,6 +176,9 @@ impl WireConfig {
         }
         if let Some(p) = &self.fault_plan {
             fields.push(("fault_plan", Json::Str(p.clone())));
+        }
+        if let Some(a) = &self.metrics_addr {
+            fields.push(("metrics_addr", Json::Str(a.clone())));
         }
         Json::obj(fields)
     }
@@ -207,6 +221,13 @@ pub struct ExperimentConfig {
     /// (`sched_setaffinity`; no-op off Linux). Cannot affect results —
     /// asserted by the pinned column in `tests/driver_matrix.rs`.
     pub pin: bool,
+    /// live terminal dashboard (`--watch`): attach a
+    /// [`WatchObserver`](crate::obs::WatchObserver) that redraws round
+    /// rate, residual sparkline, measured-vs-modeled bytes, and worker
+    /// liveness on stderr. A plain observer — cannot perturb the
+    /// trajectory (asserted by `tests/obs_endpoint.rs`) and is excluded
+    /// from [`ExperimentConfig::canonical_identity`].
+    pub watch: bool,
     /// wire subsystem: payload encoding, serve address, process count,
     /// fault-tolerance grace window
     pub wire: WireConfig,
@@ -234,6 +255,7 @@ impl Default for ExperimentConfig {
             practical_adiana: true,
             jobs: 0,
             pin: false,
+            watch: false,
             wire: WireConfig::default(),
         }
     }
@@ -306,6 +328,7 @@ impl ExperimentConfig {
                 }
                 "jobs" => c.jobs = v.as_usize().context("jobs")?,
                 "pin" => c.pin = v.as_bool().context("pin")?,
+                "watch" => c.watch = v.as_bool().context("watch")?,
                 "wire" => c.wire = WireConfig::from_json(v).context("wire")?,
                 other => bail!("unknown config key '{other}'"),
             }
@@ -378,6 +401,9 @@ impl ExperimentConfig {
         if args.has("pin") {
             self.pin = args.bool_or("pin", self.pin);
         }
+        if args.has("watch") {
+            self.watch = args.bool_or("watch", self.watch);
+        }
         if args.has("worker-timeout") {
             self.wire.worker_timeout =
                 args.f64_or("worker-timeout", self.wire.worker_timeout);
@@ -406,6 +432,9 @@ impl ExperimentConfig {
         }
         if let Some(p) = args.get("fault-plan") {
             self.wire.fault_plan = Some(p.to_string());
+        }
+        if let Some(a) = args.get("metrics-addr") {
+            self.wire.metrics_addr = Some(a.to_string());
         }
         self.validate()
     }
@@ -510,6 +539,7 @@ impl ExperimentConfig {
             ("practical_adiana", Json::Bool(self.practical_adiana)),
             ("jobs", Json::Num(self.jobs as f64)),
             ("pin", Json::Bool(self.pin)),
+            ("watch", Json::Bool(self.watch)),
             ("wire", self.wire.to_json()),
         ])
     }
@@ -599,26 +629,33 @@ mod tests {
     #[test]
     fn durability_and_fault_keys_parse() {
         let j = Json::parse(
-            r#"{"wire": {"run_dir": "/tmp/r", "crc": false, "fault_plan": "kill@r3"}}"#,
+            r#"{"watch": true, "wire": {"run_dir": "/tmp/r", "crc": false,
+                "fault_plan": "kill@r3", "metrics_addr": "127.0.0.1:9090"}}"#,
         )
         .unwrap();
         let c = ExperimentConfig::from_json(&j).unwrap();
         assert_eq!(c.wire.run_dir.as_deref(), Some("/tmp/r"));
         assert!(!c.wire.crc);
         assert_eq!(c.wire.fault_plan.as_deref(), Some("kill@r3"));
-        // JSON roundtrip keeps all three
+        assert_eq!(c.wire.metrics_addr.as_deref(), Some("127.0.0.1:9090"));
+        assert!(c.watch);
+        // JSON roundtrip keeps all of them
         let c2 = ExperimentConfig::from_json(&c.to_json()).unwrap();
         assert_eq!(c2.wire.run_dir, c.wire.run_dir);
         assert!(!c2.wire.crc);
         assert_eq!(c2.wire.fault_plan, c.wire.fault_plan);
-        // defaults: CRC on, no run dir, no plan
+        assert_eq!(c2.wire.metrics_addr, c.wire.metrics_addr);
+        assert!(c2.watch);
+        // defaults: CRC on, no run dir, no plan, no metrics listener
         let d = ExperimentConfig::default();
         assert!(d.wire.crc && d.wire.run_dir.is_none() && d.wire.fault_plan.is_none());
+        assert!(d.wire.metrics_addr.is_none() && !d.watch);
 
         // CLI overrides
         let mut c3 = ExperimentConfig::default();
         let args = Args::parse(
-            "--run-dir runs/x --no-crc --fault-plan kill-server@r10"
+            "--run-dir runs/x --no-crc --fault-plan kill-server@r10 \
+             --metrics-addr 127.0.0.1:9091 --watch"
                 .split_whitespace()
                 .map(String::from),
             false,
@@ -627,6 +664,8 @@ mod tests {
         assert_eq!(c3.wire.run_dir.as_deref(), Some("runs/x"));
         assert!(!c3.wire.crc);
         assert_eq!(c3.wire.fault_plan.as_deref(), Some("kill-server@r10"));
+        assert_eq!(c3.wire.metrics_addr.as_deref(), Some("127.0.0.1:9091"));
+        assert!(c3.watch);
 
         // a malformed plan is rejected at validation, not at fire time
         assert!(ExperimentConfig::from_json(
@@ -652,6 +691,8 @@ mod tests {
         b.wire.crc = false;
         b.wire.worker_timeout = 1.0;
         b.checkpoint_every = 7;
+        b.wire.metrics_addr = Some("127.0.0.1:9090".into());
+        b.watch = true;
         assert_eq!(a.canonical_identity(), b.canonical_identity());
         // trajectory-determining fields do not
         b.seed = 43;

@@ -21,6 +21,14 @@ pub struct RoundRecord {
     /// cumulative *measured* bytes server→workers
     pub bytes_down: u64,
     pub wall_secs: f64,
+    /// cumulative seconds spent in compute phases (worker gradient
+    /// rounds + server apply) — see `util::timer::phase_bucket`
+    pub compute_secs: f64,
+    /// cumulative seconds spent encoding messages (downlink/uplink
+    /// construction)
+    pub encode_secs: f64,
+    /// cumulative seconds spent on the wire (scatter/gather/poll waits)
+    pub wire_secs: f64,
 }
 
 /// Cumulative communication totals, shared by every driver (the sim and
@@ -124,12 +132,15 @@ impl RunResult {
                     r.bytes_up.to_string(),
                     r.bytes_down.to_string(),
                     format!("{:.6}", r.wall_secs),
+                    format!("{:.6}", r.compute_secs),
+                    format!("{:.6}", r.encode_secs),
+                    format!("{:.6}", r.wire_secs),
                 ]
             })
             .collect()
     }
 
-    pub fn csv_header() -> [&'static str; 9] {
+    pub fn csv_header() -> [&'static str; 12] {
         [
             "method",
             "round",
@@ -140,6 +151,9 @@ impl RunResult {
             "bytes_up",
             "bytes_down",
             "wall_secs",
+            "compute_secs",
+            "encode_secs",
+            "wire_secs",
         ]
     }
 }
@@ -163,6 +177,9 @@ mod tests {
                     bytes_up: (i * 90) as u64,
                     bytes_down: (i * 800) as u64,
                     wall_secs: i as f64 * 0.1,
+                    compute_secs: i as f64 * 0.05,
+                    encode_secs: i as f64 * 0.01,
+                    wire_secs: i as f64 * 0.02,
                 })
                 .collect(),
             final_x: vec![],

@@ -201,7 +201,7 @@ pub fn run_sim_observed(
             });
 
             let res = residual(method.server.iterate(), x_star, denom);
-            match ticker.tick(round, res, &acc, method.server.iterate(), obs) {
+            match ticker.tick(round, res, &acc, method.server.iterate(), &phases, obs) {
                 Tick::Continue => {}
                 Tick::ReachedTarget => {
                     reached = true;
@@ -369,7 +369,7 @@ pub fn run_threaded_observed(
             }
 
             let res = residual(method.server.iterate(), x_star, denom);
-            match ticker.tick(round, res, &acc, method.server.iterate(), obs) {
+            match ticker.tick(round, res, &acc, method.server.iterate(), &phases, obs) {
                 Tick::Continue => {}
                 Tick::ReachedTarget => {
                     reached = true;

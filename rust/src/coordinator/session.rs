@@ -68,10 +68,12 @@ use crate::experiments::runner::{self, Prepared};
 use crate::methods::{build, MethodSpec};
 use crate::objective::Smoothness;
 use crate::runtime::{EngineKind, GradEngine};
+use crate::util::timer::PhaseTimer;
 use anyhow::{bail, ensure, Context, Result};
 use std::io::Write;
 use std::net::TcpListener;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 use std::time::Instant;
 
 // ---- observers ---------------------------------------------------------
@@ -164,7 +166,8 @@ impl RoundObserver for JsonlObserver {
             let res = writeln!(
                 self.w,
                 "{{\"round\":{},\"residual\":{:e},\"coords_up\":{},\"bits_up\":{},\
-                 \"coords_down\":{},\"bytes_up\":{},\"bytes_down\":{},\"wall_secs\":{:.6}}}",
+                 \"coords_down\":{},\"bytes_up\":{},\"bytes_down\":{},\"wall_secs\":{:.6},\
+                 \"compute_secs\":{:.6},\"encode_secs\":{:.6},\"wire_secs\":{:.6}}}",
                 rec.round,
                 rec.residual,
                 rec.coords_up,
@@ -172,7 +175,10 @@ impl RoundObserver for JsonlObserver {
                 rec.coords_down,
                 rec.bytes_up,
                 rec.bytes_down,
-                rec.wall_secs
+                rec.wall_secs,
+                rec.compute_secs,
+                rec.encode_secs,
+                rec.wire_secs
             );
             if let Err(e) = res {
                 crate::info!("session", "jsonl observer write failed ({e}); stream stops");
@@ -200,7 +206,8 @@ impl CsvObserver {
         let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
         writeln!(
             w,
-            "round,residual,coords_up,bits_up,coords_down,bytes_up,bytes_down,wall_secs"
+            "round,residual,coords_up,bits_up,coords_down,bytes_up,bytes_down,wall_secs,\
+             compute_secs,encode_secs,wire_secs"
         )?;
         Ok(CsvObserver { w, failed: false })
     }
@@ -211,7 +218,7 @@ impl RoundObserver for CsvObserver {
         if !self.failed {
             let res = writeln!(
                 self.w,
-                "{},{:.6e},{},{},{},{},{},{:.6}",
+                "{},{:.6e},{},{},{},{},{},{:.6},{:.6},{:.6},{:.6}",
                 rec.round,
                 rec.residual,
                 rec.coords_up,
@@ -219,7 +226,10 @@ impl RoundObserver for CsvObserver {
                 rec.coords_down,
                 rec.bytes_up,
                 rec.bytes_down,
-                rec.wall_secs
+                rec.wall_secs,
+                rec.compute_secs,
+                rec.encode_secs,
+                rec.wire_secs
             );
             if let Err(e) = res {
                 crate::info!("session", "csv observer write failed ({e}); stream stops");
@@ -378,6 +388,9 @@ impl Ticker {
             bytes_up: 0,
             bytes_down: 0,
             wall_secs: 0.0,
+            compute_secs: 0.0,
+            encode_secs: 0.0,
+            wire_secs: 0.0,
         };
         (obs.on_round(&rec) == ObserverControl::Stop, rec)
     }
@@ -394,16 +407,19 @@ impl Ticker {
         stop
     }
 
-    /// Post-apply bookkeeping for `round`.
+    /// Post-apply bookkeeping for `round`. `phases` is the driver's
+    /// cumulative phase timer; its bucket totals become the record's
+    /// `compute_secs`/`encode_secs`/`wire_secs` columns.
     pub fn tick(
         &self,
         round: usize,
         residual: f64,
         acc: &RoundTotals,
         x: &[f64],
+        phases: &PhaseTimer,
         obs: &mut dyn RoundObserver,
     ) -> Tick {
-        self.tick_with_record(round, residual, acc, x, obs).0
+        self.tick_with_record(round, residual, acc, x, phases, obs).0
     }
 
     /// [`Ticker::tick`], also handing back the record it emitted (`None`
@@ -414,12 +430,14 @@ impl Ticker {
         residual: f64,
         acc: &RoundTotals,
         x: &[f64],
+        phases: &PhaseTimer,
         obs: &mut dyn RoundObserver,
     ) -> (Tick, Option<RoundRecord>) {
         let hit_target = self.target_residual > 0.0 && residual <= self.target_residual;
         let mut stop = false;
         let mut emitted = None;
         if round % self.record_every == 0 || round == self.max_rounds || hit_target {
+            let (compute_secs, encode_secs, wire_secs) = phases.bucket_totals();
             let rec = RoundRecord {
                 round,
                 residual,
@@ -429,6 +447,9 @@ impl Ticker {
                 bytes_up: acc.bytes_up,
                 bytes_down: acc.bytes_down,
                 wall_secs: self.t0.elapsed().as_secs_f64(),
+                compute_secs,
+                encode_secs,
+                wire_secs,
             };
             stop = obs.on_round(&rec) == ObserverControl::Stop;
             emitted = Some(rec);
@@ -534,6 +555,7 @@ pub struct Session<'a> {
     factory: Option<EngineFactory>,
     observers: Vec<Box<dyn RoundObserver + 'a>>,
     listener: Option<TcpListener>,
+    metrics: Option<Arc<crate::obs::Registry>>,
 }
 
 impl<'a> Session<'a> {
@@ -552,6 +574,7 @@ impl<'a> Session<'a> {
             factory: None,
             observers: Vec::new(),
             listener: None,
+            metrics: None,
         }
     }
 
@@ -575,6 +598,7 @@ impl<'a> Session<'a> {
             factory: None,
             observers: Vec::new(),
             listener: None,
+            metrics: None,
         }
     }
 
@@ -660,6 +684,18 @@ impl<'a> Session<'a> {
     /// port 0 and hand the ephemeral address to their workers).
     pub fn tcp_listener(mut self, listener: TcpListener) -> Session<'a> {
         self.listener = Some(listener);
+        self
+    }
+
+    /// Feed the run's live counters/gauges into a shared
+    /// [`Registry`](crate::obs::Registry). Under the distributed TCP
+    /// driver the elastic server instruments worker liveness, journal
+    /// depth, CRC errors and the per-round totals into it; the `/metrics`
+    /// HTTP endpoint and the `--watch` dashboard read from the same
+    /// registry. Updates are plain atomic stores — the registry cannot
+    /// perturb the trajectory.
+    pub fn metrics_registry(mut self, registry: Arc<crate::obs::Registry>) -> Session<'a> {
+        self.metrics = Some(registry);
         self
     }
 
@@ -879,7 +915,13 @@ impl<'a> Session<'a> {
                             .with_context(|| format!("binding {}", wire_cfg.wire.listen))?,
                     };
                     crate::wire::runtime::serve_observed(
-                        listener, &wire_cfg, &spec, prep, &run_cfg, &mut fan,
+                        listener,
+                        &wire_cfg,
+                        &spec,
+                        prep,
+                        &run_cfg,
+                        self.metrics.take(),
+                        &mut fan,
                     )?
                 }
             }

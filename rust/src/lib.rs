@@ -39,6 +39,7 @@ pub mod data;
 pub mod experiments;
 pub mod linalg;
 pub mod methods;
+pub mod obs;
 pub mod objective;
 pub mod runtime;
 pub mod sampling;

@@ -9,6 +9,7 @@
 //!   info     print dataset/smoothness diagnostics
 //!   serve    distributed coordinator: accept worker processes over TCP
 //!   worker   join a serve run (--connect HOST:PORT)
+//!   runs     inspect/compare/resume --run-dir artifacts (list|show|diff|resume)
 //!
 //! Common flags: --dataset --workers --tau --methods --sampling
 //! --max-rounds --target-residual --seed --engine native|pjrt
@@ -28,7 +29,7 @@ use smx::experiments::{figures, runner, tables};
 use smx::sampling::SamplingKind;
 use smx::util::cli::Args;
 
-const USAGE: &str = "usage: smx <train|figures|tables|solve|info|serve|worker> [flags]
+const USAGE: &str = "usage: smx <train|figures|tables|solve|info|serve|worker|runs> [flags]
   smx train   --dataset a1a --methods diana,diana+ --tau 1 --sampling uniform
   smx figures --figure 1 --datasets a1a,mushrooms
   smx tables  --table 2 --datasets a1a,mushrooms,phishing
@@ -37,8 +38,13 @@ const USAGE: &str = "usage: smx <train|figures|tables|solve|info|serve|worker> [
   smx serve   --dataset a1a --methods diana+ --listen 127.0.0.1:4950 \\
               --wire-workers 2 --payload f32 [--check-sim] [--worker-timeout S]
               [--run-dir DIR] [--fault-plan PLAN] [--no-crc]
+              [--metrics-addr HOST:PORT] [--watch]
   smx worker  --connect 127.0.0.1:4950 [--pin-core N] [--die-after K]
               [--max-retries N] [--retry-base-ms MS] [--fault-plan PLAN]
+  smx runs    list [ROOT] | show DIR | diff A B | resume DIR
+              (run-dir artifact store: enumerate runs, inspect one, compare
+              two record streams on the deterministic columns, or resume an
+              unfinished run from its stored config)
 flags: --workers N --mu F --max-rounds N --target-residual F --seed N
        --engine native|pjrt --config FILE --out-dir DIR --data-dir DIR
        --record-every N --start-near-opt --jobs N (0 = all cores)
@@ -59,6 +65,10 @@ wire:  --payload f64|f32|q16|q8|q4 --listen HOST:PORT --wire-workers N
        same config + --run-dir resumes bit-for-bit from its last
        committed snapshot — exit code 137 marks a planned kill)
        --no-crc (disable the CRC32 frame trailers; on by default)
+       --metrics-addr HOST:PORT (serve Prometheus text at GET /metrics and
+       a liveness probe at GET /healthz, multiplexed onto the server loop)
+       --watch (live terminal dashboard on stderr: round rate, residual
+       sparkline, measured-vs-modeled bytes, per-worker liveness)
        --fault-plan 'kill-server@r12;drop-uplink@r5:w1;corrupt-downlink@r9;
        delay@r7:50ms' (scripted faults; server events on serve, worker
        events on worker) --max-retries N --retry-base-ms MS (worker
@@ -235,6 +245,19 @@ fn run() -> Result<()> {
                     .unwrap_or_else(|| smx::wire::WorkerOpts::default().retry_base_ms),
             };
             smx::wire::worker_connect_with(addr, opts)?;
+        }
+        "runs" => {
+            // `resume` hands back the stored config pointed at its run
+            // dir; re-enter the serve path exactly as `smx serve` would
+            if let Some(cfg) = smx::obs::runs::cmd(&args)? {
+                if let Err(e) = smx::wire::serve(&cfg, false) {
+                    if format!("{e:#}").contains(smx::wire::KILLED_MARKER) {
+                        eprintln!("{e:#}");
+                        std::process::exit(137);
+                    }
+                    return Err(e);
+                }
+            }
         }
         "info" => {
             let cfg = config_from(&args)?;

@@ -1,0 +1,432 @@
+//! Minimal HTTP endpoint serving `GET /metrics` (Prometheus text
+//! format) and `GET /healthz`.
+//!
+//! Two hosting modes, one implementation:
+//!
+//! * **Multiplexed** — the elastic server registers the listener in its
+//!   own [`Poller`] under [`METRICS_LISTENER_TOKEN`] and forwards
+//!   readiness tokens to [`HttpEndpoint::on_token`]. The token space is
+//!   partitioned so HTTP traffic can never be mistaken for a worker
+//!   connection: worker slots are small indices, the wire listener is
+//!   `u64::MAX`, the metrics listener `u64::MAX - 1`, and HTTP
+//!   connections live at [`HTTP_CONN_TOKEN_BASE`]` + slot`.
+//! * **Standalone** — [`HttpEndpoint::spawn`] runs the same endpoint on
+//!   a dedicated thread with its own poller, for loopback/sim runs and
+//!   tests that have no server event loop to piggyback on.
+//!
+//! Everything is nonblocking reads + WouldBlock absorption, so the
+//! fallback poll backend (`SMX_NO_EPOLL=1`), which reports every token
+//! as may-be-ready, is handled by construction. Responses are small and
+//! written with a short blocking write timeout — this is a diagnostics
+//! endpoint, not a general web server.
+
+use crate::obs::registry::Registry;
+use crate::wire::poll::Poller;
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Poller token for the metrics listening socket. The wire runtime's
+/// worker listener owns `u64::MAX`; this sits just below it.
+pub const METRICS_LISTENER_TOKEN: u64 = u64::MAX - 1;
+
+/// Base for HTTP connection tokens: far above any worker slot index the
+/// elastic server will ever allocate.
+pub const HTTP_CONN_TOKEN_BASE: u64 = 1 << 48;
+
+/// Request-header cap; anything longer gets a 400 and a closed socket.
+const MAX_REQUEST_BYTES: usize = 8 * 1024;
+
+struct HttpConn {
+    stream: TcpStream,
+    buf: Vec<u8>,
+}
+
+enum Step {
+    /// no complete request yet; keep the connection registered
+    Wait,
+    /// peer hung up or errored
+    Close,
+    /// a complete request-head arrived
+    Respond { status: u32, content_type: &'static str, body: String },
+}
+
+pub struct HttpEndpoint {
+    listener: TcpListener,
+    registry: Arc<Registry>,
+    conns: Vec<Option<HttpConn>>,
+}
+
+fn fd_of(stream: &TcpStream) -> i32 {
+    #[cfg(unix)]
+    {
+        use std::os::unix::io::AsRawFd;
+        stream.as_raw_fd()
+    }
+    #[cfg(not(unix))]
+    {
+        -1
+    }
+}
+
+impl HttpEndpoint {
+    /// Bind the listener (nonblocking) without registering it anywhere.
+    pub fn bind(addr: &str, registry: Arc<Registry>) -> io::Result<HttpEndpoint> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        Ok(HttpEndpoint {
+            listener,
+            registry,
+            conns: Vec::new(),
+        })
+    }
+
+    pub fn local_addr(&self) -> io::Result<SocketAddr> {
+        self.listener.local_addr()
+    }
+
+    /// Register the listening socket with `poller` under
+    /// [`METRICS_LISTENER_TOKEN`].
+    pub fn register(&self, poller: &mut Poller) -> io::Result<()> {
+        #[cfg(unix)]
+        {
+            use std::os::unix::io::AsRawFd;
+            poller.register(self.listener.as_raw_fd(), METRICS_LISTENER_TOKEN)
+        }
+        #[cfg(not(unix))]
+        {
+            poller.register(-1, METRICS_LISTENER_TOKEN)
+        }
+    }
+
+    /// Does `token` belong to this endpoint (listener or connection)?
+    pub fn owns(token: u64) -> bool {
+        token == METRICS_LISTENER_TOKEN || token >= HTTP_CONN_TOKEN_BASE
+    }
+
+    /// Dispatch one readiness token owned by this endpoint. Spurious
+    /// tokens (fallback backend, already-closed slots) are no-ops.
+    pub fn on_token(&mut self, token: u64, poller: &mut Poller) {
+        if token == METRICS_LISTENER_TOKEN {
+            self.accept_pending(poller);
+        } else if token >= HTTP_CONN_TOKEN_BASE {
+            self.drive_conn((token - HTTP_CONN_TOKEN_BASE) as usize, poller);
+        }
+    }
+
+    /// Accept every pending HTTP connection and register it.
+    pub fn accept_pending(&mut self, poller: &mut Poller) {
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    if stream.set_nonblocking(true).is_err() {
+                        continue; // drop it; diagnostics must never kill the run
+                    }
+                    let slot = self
+                        .conns
+                        .iter()
+                        .position(|c| c.is_none())
+                        .unwrap_or_else(|| {
+                            self.conns.push(None);
+                            self.conns.len() - 1
+                        });
+                    if poller
+                        .register(fd_of(&stream), HTTP_CONN_TOKEN_BASE + slot as u64)
+                        .is_err()
+                    {
+                        continue;
+                    }
+                    self.conns[slot] = Some(HttpConn {
+                        stream,
+                        buf: Vec::new(),
+                    });
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => return,
+            }
+        }
+    }
+
+    fn drive_conn(&mut self, slot: usize, poller: &mut Poller) {
+        // Read phase: Some(step) decides immediately (close / overflow /
+        // would-block), None means the request head is complete and gets
+        // routed once the mutable borrow of the connection has ended.
+        let read_step = {
+            let Some(conn) = self.conns.get_mut(slot).and_then(|c| c.as_mut()) else {
+                return;
+            };
+            let mut tmp = [0u8; 1024];
+            loop {
+                match conn.stream.read(&mut tmp) {
+                    Ok(0) => break Some(Step::Close),
+                    Ok(n) => {
+                        conn.buf.extend_from_slice(&tmp[..n]);
+                        if conn.buf.len() > MAX_REQUEST_BYTES {
+                            break Some(Step::Respond {
+                                status: 400,
+                                content_type: "text/plain; charset=utf-8",
+                                body: "request too large\n".to_string(),
+                            });
+                        }
+                        if conn.buf.windows(4).any(|w| w == b"\r\n\r\n") {
+                            break None;
+                        }
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => break Some(Step::Wait),
+                    Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                    Err(_) => break Some(Step::Close),
+                }
+            }
+        };
+        let step = match read_step {
+            Some(s) => s,
+            None => match self.conns.get(slot).and_then(|c| c.as_ref()) {
+                Some(conn) => self.route(&conn.buf).unwrap_or(Step::Wait),
+                None => return,
+            },
+        };
+        match step {
+            Step::Wait => {}
+            Step::Close => self.close(slot, poller),
+            Step::Respond {
+                status,
+                content_type,
+                body,
+            } => {
+                self.write_response(slot, status, content_type, &body);
+                self.close(slot, poller);
+            }
+        }
+    }
+
+    /// Route a buffered request once its head is complete. `None` while
+    /// the head is still partial.
+    fn route(&self, buf: &[u8]) -> Option<Step> {
+        let head_end = buf.windows(4).position(|w| w == b"\r\n\r\n")?;
+        let head = String::from_utf8_lossy(&buf[..head_end]);
+        let mut parts = head.lines().next().unwrap_or("").split_whitespace();
+        let method = parts.next().unwrap_or("");
+        let path = parts.next().unwrap_or("");
+        Some(if method != "GET" {
+            Step::Respond {
+                status: 405,
+                content_type: "text/plain; charset=utf-8",
+                body: "method not allowed\n".to_string(),
+            }
+        } else {
+            match path {
+                "/metrics" => {
+                    self.registry.scrapes.inc();
+                    Step::Respond {
+                        status: 200,
+                        content_type: "text/plain; version=0.0.4; charset=utf-8",
+                        body: self.registry.render(),
+                    }
+                }
+                "/healthz" => Step::Respond {
+                    status: 200,
+                    content_type: "text/plain; charset=utf-8",
+                    body: "ok\n".to_string(),
+                },
+                _ => Step::Respond {
+                    status: 404,
+                    content_type: "text/plain; charset=utf-8",
+                    body: "not found (try /metrics or /healthz)\n".to_string(),
+                },
+            }
+        })
+    }
+
+    /// Write the full response with a short blocking write timeout.
+    /// Responses are a few KiB; a stuck scraper costs at most the
+    /// timeout, never a hung run.
+    fn write_response(&mut self, slot: usize, status: u32, content_type: &str, body: &str) {
+        let Some(conn) = self.conns.get_mut(slot).and_then(|c| c.as_mut()) else {
+            return;
+        };
+        let reason = match status {
+            200 => "OK",
+            400 => "Bad Request",
+            404 => "Not Found",
+            405 => "Method Not Allowed",
+            _ => "Error",
+        };
+        let head = format!(
+            "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\n\
+             Content-Length: {}\r\nConnection: close\r\n\r\n",
+            body.len()
+        );
+        let _ = conn.stream.set_nonblocking(false);
+        let _ = conn.stream.set_write_timeout(Some(Duration::from_secs(2)));
+        let _ = conn
+            .stream
+            .write_all(head.as_bytes())
+            .and_then(|_| conn.stream.write_all(body.as_bytes()))
+            .and_then(|_| conn.stream.flush());
+    }
+
+    fn close(&mut self, slot: usize, poller: &mut Poller) {
+        if let Some(conn) = self.conns.get_mut(slot).and_then(|c| c.take()) {
+            let _ = poller.deregister(fd_of(&conn.stream), HTTP_CONN_TOKEN_BASE + slot as u64);
+            // conn drops here, closing the socket
+        }
+    }
+
+    /// Run this endpoint standalone on a dedicated thread with its own
+    /// poller, until the returned handle is stopped or dropped. For
+    /// runs that have no server event loop to multiplex onto (loopback
+    /// drivers, tests).
+    pub fn spawn(addr: &str, registry: Arc<Registry>) -> io::Result<HttpServerHandle> {
+        let mut ep = HttpEndpoint::bind(addr, registry)?;
+        let local = ep.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name("smx-metrics-http".to_string())
+            .spawn(move || {
+                let Ok(mut poller) = Poller::new() else {
+                    return;
+                };
+                if ep.register(&mut poller).is_err() {
+                    return;
+                }
+                let mut events = Vec::new();
+                while !stop2.load(Ordering::Relaxed) {
+                    if poller.wait(Duration::from_millis(25), &mut events).is_err() {
+                        return;
+                    }
+                    // accept opportunistically every slice: one cheap
+                    // nonblocking syscall, and it makes the fallback
+                    // backend (which reports everything) uniform with
+                    // the kernel ones
+                    ep.accept_pending(&mut poller);
+                    for i in 0..events.len() {
+                        let tok = events[i];
+                        if tok != METRICS_LISTENER_TOKEN {
+                            ep.on_token(tok, &mut poller);
+                        }
+                    }
+                }
+            })?;
+        Ok(HttpServerHandle {
+            addr: local,
+            stop,
+            handle: Some(handle),
+        })
+    }
+}
+
+/// Handle on a standalone endpoint thread; stops and joins it on
+/// [`HttpServerHandle::stop`] or drop.
+pub struct HttpServerHandle {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl HttpServerHandle {
+    /// The bound address (useful after binding port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for HttpServerHandle {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Blocking one-shot HTTP GET against `addr`; returns `(head, body)`.
+/// Test/scripting helper — the CLI and tests use it to scrape a live
+/// endpoint without external tooling.
+pub fn http_get(addr: SocketAddr, path: &str) -> io::Result<(String, String)> {
+    let mut s = TcpStream::connect(addr)?;
+    s.set_read_timeout(Some(Duration::from_secs(10)))?;
+    write!(
+        s,
+        "GET {path} HTTP/1.1\r\nHost: smx\r\nConnection: close\r\n\r\n"
+    )?;
+    s.flush()?;
+    let mut raw = String::new();
+    s.read_to_string(&mut raw)?;
+    match raw.split_once("\r\n\r\n") {
+        Some((head, body)) => Ok((head.to_string(), body.to_string())),
+        None => Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            "malformed HTTP response (no header terminator)",
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn standalone_endpoint_serves_metrics_healthz_and_404() {
+        let reg = Arc::new(Registry::new(2));
+        reg.rounds.add(5);
+        reg.set_live(1, true);
+        let srv = HttpEndpoint::spawn("127.0.0.1:0", reg.clone()).unwrap();
+        let addr = srv.addr();
+
+        let (head, body) = http_get(addr, "/healthz").unwrap();
+        assert!(head.starts_with("HTTP/1.1 200"), "head: {head}");
+        assert_eq!(body, "ok\n");
+
+        let (head, body) = http_get(addr, "/metrics").unwrap();
+        assert!(head.starts_with("HTTP/1.1 200"));
+        assert!(head.contains("text/plain; version=0.0.4"));
+        assert!(body.contains("smx_rounds_total 5"));
+        assert!(body.contains("smx_worker_live{shard=\"1\"} 1"));
+
+        let (head, _) = http_get(addr, "/nope").unwrap();
+        assert!(head.starts_with("HTTP/1.1 404"));
+
+        // scrapes counted exactly once per /metrics hit
+        assert_eq!(reg.scrapes.get(), 1);
+        let _ = http_get(addr, "/metrics").unwrap();
+        assert_eq!(reg.scrapes.get(), 2);
+        srv.stop();
+    }
+
+    #[test]
+    fn non_get_is_rejected() {
+        let reg = Arc::new(Registry::new(0));
+        let srv = HttpEndpoint::spawn("127.0.0.1:0", reg).unwrap();
+        let mut s = TcpStream::connect(srv.addr()).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        write!(s, "POST /metrics HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let mut raw = String::new();
+        s.read_to_string(&mut raw).unwrap();
+        assert!(raw.starts_with("HTTP/1.1 405"), "got: {raw}");
+        srv.stop();
+    }
+
+    #[test]
+    fn token_space_partition() {
+        assert!(HttpEndpoint::owns(METRICS_LISTENER_TOKEN));
+        assert!(HttpEndpoint::owns(HTTP_CONN_TOKEN_BASE));
+        assert!(HttpEndpoint::owns(HTTP_CONN_TOKEN_BASE + 17));
+        assert!(!HttpEndpoint::owns(0));
+        assert!(!HttpEndpoint::owns(1024));
+        // the wire listener token is u64::MAX, which owns() must also
+        // claim nothing about here — the server checks it first
+        assert_ne!(METRICS_LISTENER_TOKEN, u64::MAX);
+    }
+}

@@ -1,0 +1,45 @@
+//! Production observability for long-running serve/train sessions.
+//!
+//! Four connected pieces, all dependency-free:
+//!
+//! * [`registry`] — a lock-free metrics [`Registry`] (atomic counters,
+//!   gauges, a seqlock-guarded per-round block mirroring the latest
+//!   [`RoundRecord`](crate::coordinator::RoundRecord), a fixed-bucket
+//!   round-duration histogram, and preallocated per-shard liveness
+//!   slots). Writers touch only atomics — the hot round loop stays
+//!   alloc-free; rendering to Prometheus text allocates at scrape time
+//!   only.
+//! * [`http`] — a minimal `GET /metrics` + `GET /healthz` HTTP listener
+//!   ([`HttpEndpoint`]) that multiplexes onto the elastic server's
+//!   existing [`Poller`](crate::wire::poll::Poller) loop (token-space
+//!   partitioned; see [`METRICS_LISTENER_TOKEN`]) or runs standalone on
+//!   its own thread ([`HttpEndpoint::spawn`]) for non-serve runs and
+//!   tests.
+//! * [`watch`] — [`WatchObserver`], a live terminal dashboard
+//!   implemented as a plain
+//!   [`RoundObserver`](crate::coordinator::RoundObserver): round rate,
+//!   residual sparkline, measured-vs-modeled bytes, per-worker
+//!   liveness. Observers receive shared references post-apply, so the
+//!   dashboard cannot perturb the trajectory by construction (and
+//!   `tests/obs_endpoint.rs` asserts it bitwise).
+//! * [`runs`] — the `smx runs` subcommand family (`list` / `show` /
+//!   `diff` / `resume`) that treats `--run-dir` run logs
+//!   ([`crate::wire::runlog`]) as a managed artifact store: every run
+//!   dir carries its config JSON, seed, records and completion marker,
+//!   so finished runs can be enumerated, inspected, compared
+//!   record-by-record and resumed without the original command line.
+//!
+//! The byte counters exposed at `/metrics` come from the same
+//! cumulative [`RoundTotals`](crate::coordinator::RoundTotals) the
+//! record stream is cut from, so `smx_bytes_up_total` agrees *exactly*
+//! with the `bytes_up` column of the CSV/JSONL output at every recorded
+//! round — asserted by `tests/obs_endpoint.rs`.
+
+pub mod http;
+pub mod registry;
+pub mod runs;
+pub mod watch;
+
+pub use http::{HttpEndpoint, HttpServerHandle, HTTP_CONN_TOKEN_BASE, METRICS_LISTENER_TOKEN};
+pub use registry::{Counter, Gauge, Histogram, MetricsObserver, Registry};
+pub use watch::WatchObserver;

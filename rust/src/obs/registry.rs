@@ -1,0 +1,617 @@
+//! Lock-free metrics registry with Prometheus text rendering.
+//!
+//! Every instrument is a plain `AtomicU64` (or a fixed, preallocated
+//! array of them), so producers — the elastic server's round loop, the
+//! wire runtime's connection state machine, observers — never allocate
+//! or lock. The only multi-word value, the latest-round block, is
+//! guarded by a seqlock: the single writer bumps a sequence number to
+//! odd, stores the fields, bumps back to even; readers retry while the
+//! sequence is odd or changed underfoot. Since the fields themselves
+//! are atomics with `Relaxed` ordering, the retry loop is fully defined
+//! behavior (no data races), and the `Acquire`/`Release` pairs on the
+//! sequence number make a stable read a consistent snapshot.
+//!
+//! Rendering ([`Registry::render`]) produces Prometheus text exposition
+//! format (version 0.0.4) and allocates only at scrape time. Metric
+//! names are prefixed `smx_`.
+
+use crate::coordinator::{ObserverControl, RoundObserver, RoundRecord};
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Monotonically increasing counter (rendered with a `_total` name).
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins gauge.
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Upper bounds (seconds) of the round-duration histogram buckets; the
+/// final implicit bucket is `+Inf`. Exponential-ish ladder spanning the
+/// sub-millisecond loopback rounds and multi-second WAN rounds alike.
+pub const DURATION_BUCKETS: [f64; 14] = [
+    0.0001, 0.00025, 0.0005, 0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5,
+];
+
+/// Fixed-bucket histogram of seconds. Bucket counts are stored
+/// per-bucket and accumulated to the cumulative form Prometheus expects
+/// at render time; the sum is kept in integer nanoseconds so producers
+/// need no compare-and-swap loop.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; DURATION_BUCKETS.len() + 1],
+    sum_nanos: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum_nanos: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    pub fn observe(&self, secs: f64) {
+        let idx = DURATION_BUCKETS
+            .iter()
+            .position(|&b| secs <= b)
+            .unwrap_or(DURATION_BUCKETS.len());
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.sum_nanos
+            .fetch_add((secs.max(0.0) * 1e9) as u64, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    fn render(&self, out: &mut String, name: &str, help: &str) {
+        let _ = writeln!(out, "# HELP {name} {help}");
+        let _ = writeln!(out, "# TYPE {name} histogram");
+        let mut cum = 0u64;
+        for (i, bound) in DURATION_BUCKETS.iter().enumerate() {
+            cum += self.buckets[i].load(Ordering::Relaxed);
+            let _ = writeln!(out, "{name}_bucket{{le=\"{bound}\"}} {cum}");
+        }
+        cum += self.buckets[DURATION_BUCKETS.len()].load(Ordering::Relaxed);
+        let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {cum}");
+        let _ = writeln!(
+            out,
+            "{name}_sum {:.9}",
+            self.sum_nanos.load(Ordering::Relaxed) as f64 / 1e9
+        );
+        let _ = writeln!(out, "{name}_count {}", self.count.load(Ordering::Relaxed));
+    }
+}
+
+/// Seqlock-guarded copy of the most recent [`RoundRecord`]. One writer
+/// (the driving loop), any number of scraping readers.
+#[derive(Debug, Default)]
+pub struct RoundBlock {
+    /// even = stable, odd = write in progress; 0 = never written
+    seq: AtomicU64,
+    round: AtomicU64,
+    residual_bits: AtomicU64,
+    coords_up: AtomicU64,
+    bits_up: AtomicU64,
+    coords_down: AtomicU64,
+    bytes_up: AtomicU64,
+    bytes_down: AtomicU64,
+    wall_bits: AtomicU64,
+    compute_bits: AtomicU64,
+    encode_bits: AtomicU64,
+    wire_bits: AtomicU64,
+}
+
+impl RoundBlock {
+    /// Publish `rec` as the latest round. Single-writer only.
+    pub fn write(&self, rec: &RoundRecord) {
+        let s = self.seq.load(Ordering::Relaxed);
+        self.seq.store(s + 1, Ordering::Release);
+        self.round.store(rec.round as u64, Ordering::Relaxed);
+        self.residual_bits
+            .store(rec.residual.to_bits(), Ordering::Relaxed);
+        self.coords_up.store(rec.coords_up, Ordering::Relaxed);
+        self.bits_up.store(rec.bits_up, Ordering::Relaxed);
+        self.coords_down.store(rec.coords_down, Ordering::Relaxed);
+        self.bytes_up.store(rec.bytes_up, Ordering::Relaxed);
+        self.bytes_down.store(rec.bytes_down, Ordering::Relaxed);
+        self.wall_bits
+            .store(rec.wall_secs.to_bits(), Ordering::Relaxed);
+        self.compute_bits
+            .store(rec.compute_secs.to_bits(), Ordering::Relaxed);
+        self.encode_bits
+            .store(rec.encode_secs.to_bits(), Ordering::Relaxed);
+        self.wire_bits
+            .store(rec.wire_secs.to_bits(), Ordering::Relaxed);
+        self.seq.store(s + 2, Ordering::Release);
+    }
+
+    /// A consistent snapshot of the latest round, or `None` if nothing
+    /// was ever published. Retries while a write is in flight.
+    pub fn snapshot(&self) -> Option<RoundRecord> {
+        loop {
+            let s1 = self.seq.load(Ordering::Acquire);
+            if s1 == 0 {
+                return None;
+            }
+            if s1 % 2 == 1 {
+                std::hint::spin_loop();
+                continue;
+            }
+            let rec = RoundRecord {
+                round: self.round.load(Ordering::Relaxed) as usize,
+                residual: f64::from_bits(self.residual_bits.load(Ordering::Relaxed)),
+                coords_up: self.coords_up.load(Ordering::Relaxed),
+                bits_up: self.bits_up.load(Ordering::Relaxed),
+                coords_down: self.coords_down.load(Ordering::Relaxed),
+                bytes_up: self.bytes_up.load(Ordering::Relaxed),
+                bytes_down: self.bytes_down.load(Ordering::Relaxed),
+                wall_secs: f64::from_bits(self.wall_bits.load(Ordering::Relaxed)),
+                compute_secs: f64::from_bits(self.compute_bits.load(Ordering::Relaxed)),
+                encode_secs: f64::from_bits(self.encode_bits.load(Ordering::Relaxed)),
+                wire_secs: f64::from_bits(self.wire_bits.load(Ordering::Relaxed)),
+            };
+            let s2 = self.seq.load(Ordering::Acquire);
+            if s1 == s2 {
+                return Some(rec);
+            }
+        }
+    }
+}
+
+/// The process-wide metrics registry. All fields are preallocated at
+/// construction — producers never allocate. Share it as an
+/// `Arc<Registry>` between the driving loop, the HTTP endpoint and any
+/// observers.
+#[derive(Debug)]
+pub struct Registry {
+    // counters (rendered with a `_total` suffix)
+    /// optimization rounds completed
+    pub rounds: Counter,
+    /// snapshots committed (journal truncations)
+    pub snapshots_committed: Counter,
+    /// worker connections accepted
+    pub worker_connects: Counter,
+    /// workers declared dead (timeout, connection error, CRC failure)
+    pub worker_deaths: Counter,
+    /// rejoin/adoption catch-ups sent (replay announcements)
+    pub worker_rejoins: Counter,
+    /// connection errors whose kind was `InvalidData` — CRC mismatches
+    /// and frame-decode failures
+    pub crc_errors: Counter,
+    /// all other connection errors (resets, EOFs, timeouts)
+    pub conn_errors: Counter,
+    /// journal frames retransmitted to catch workers up
+    pub journal_replays: Counter,
+    /// snapshot-state restores shipped to rejoiners/adopters
+    pub state_restores: Counter,
+    /// `/metrics` scrapes served
+    pub scrapes: Counter,
+    // gauges
+    /// rounds currently held by the in-memory replay journal
+    pub journal_rounds: Gauge,
+    /// bytes currently held by the in-memory replay journal
+    pub journal_bytes: Gauge,
+    /// latest recorded round (seqlock-guarded multi-field block)
+    pub round: RoundBlock,
+    /// wall-clock duration of each completed round
+    pub round_duration: Histogram,
+    /// per-shard liveness slots (1 = hosted by a live worker); sized at
+    /// construction so membership churn never reallocates
+    live: Box<[AtomicU64]>,
+}
+
+impl Registry {
+    /// A registry with `n_shards` preallocated liveness slots (0 is fine
+    /// for non-distributed runs: the per-shard series just vanish).
+    pub fn new(n_shards: usize) -> Registry {
+        Registry {
+            rounds: Counter::default(),
+            snapshots_committed: Counter::default(),
+            worker_connects: Counter::default(),
+            worker_deaths: Counter::default(),
+            worker_rejoins: Counter::default(),
+            crc_errors: Counter::default(),
+            conn_errors: Counter::default(),
+            journal_replays: Counter::default(),
+            state_restores: Counter::default(),
+            scrapes: Counter::default(),
+            journal_rounds: Gauge::default(),
+            journal_bytes: Gauge::default(),
+            round: RoundBlock::default(),
+            round_duration: Histogram::default(),
+            live: (0..n_shards).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.live.len()
+    }
+
+    /// Mark shard `s` as hosted by a live worker (or not). Out-of-range
+    /// shards are ignored (defensive: the registry may be sized 0).
+    pub fn set_live(&self, shard: usize, live: bool) {
+        if let Some(slot) = self.live.get(shard) {
+            slot.store(live as u64, Ordering::Relaxed);
+        }
+    }
+
+    pub fn is_live(&self, shard: usize) -> bool {
+        self.live
+            .get(shard)
+            .map(|s| s.load(Ordering::Relaxed) == 1)
+            .unwrap_or(false)
+    }
+
+    /// Number of shards currently hosted by live workers.
+    pub fn live_count(&self) -> usize {
+        self.live
+            .iter()
+            .filter(|s| s.load(Ordering::Relaxed) == 1)
+            .count()
+    }
+
+    /// Publish `rec` as the latest round block. Alloc-free.
+    pub fn observe_record(&self, rec: &RoundRecord) {
+        self.round.write(rec);
+    }
+
+    /// Render the whole registry in Prometheus text exposition format
+    /// (one allocation per scrape; producers are untouched).
+    pub fn render(&self) -> String {
+        let mut out = String::with_capacity(4096);
+        let counter = |out: &mut String, name: &str, help: &str, v: u64| {
+            let _ = writeln!(out, "# HELP {name} {help}");
+            let _ = writeln!(out, "# TYPE {name} counter");
+            let _ = writeln!(out, "{name} {v}");
+        };
+        let gauge = |out: &mut String, name: &str, help: &str, v: &dyn std::fmt::Display| {
+            let _ = writeln!(out, "# HELP {name} {help}");
+            let _ = writeln!(out, "# TYPE {name} gauge");
+            let _ = writeln!(out, "{name} {v}");
+        };
+
+        counter(
+            &mut out,
+            "smx_rounds_total",
+            "Optimization rounds completed.",
+            self.rounds.get(),
+        );
+        counter(
+            &mut out,
+            "smx_snapshots_committed_total",
+            "Checkpoint snapshots committed (journal truncations).",
+            self.snapshots_committed.get(),
+        );
+        counter(
+            &mut out,
+            "smx_worker_connects_total",
+            "Worker connections accepted.",
+            self.worker_connects.get(),
+        );
+        counter(
+            &mut out,
+            "smx_worker_deaths_total",
+            "Workers declared dead (timeout or connection error).",
+            self.worker_deaths.get(),
+        );
+        counter(
+            &mut out,
+            "smx_worker_rejoins_total",
+            "Rejoin/adoption catch-ups sent.",
+            self.worker_rejoins.get(),
+        );
+        counter(
+            &mut out,
+            "smx_crc_errors_total",
+            "Connection errors from CRC mismatches or malformed frames.",
+            self.crc_errors.get(),
+        );
+        counter(
+            &mut out,
+            "smx_conn_errors_total",
+            "Connection errors other than CRC/frame failures.",
+            self.conn_errors.get(),
+        );
+        counter(
+            &mut out,
+            "smx_journal_replays_total",
+            "Journal frames retransmitted to catch workers up.",
+            self.journal_replays.get(),
+        );
+        counter(
+            &mut out,
+            "smx_state_restores_total",
+            "Snapshot-state restores shipped to rejoiners/adopters.",
+            self.state_restores.get(),
+        );
+        counter(
+            &mut out,
+            "smx_scrapes_total",
+            "Scrapes served by this /metrics endpoint.",
+            self.scrapes.get(),
+        );
+        gauge(
+            &mut out,
+            "smx_journal_rounds",
+            "Rounds held by the in-memory replay journal.",
+            &self.journal_rounds.get(),
+        );
+        gauge(
+            &mut out,
+            "smx_journal_bytes",
+            "Bytes held by the in-memory replay journal.",
+            &self.journal_bytes.get(),
+        );
+
+        if let Some(rec) = self.round.snapshot() {
+            gauge(
+                &mut out,
+                "smx_round",
+                "Latest recorded round.",
+                &rec.round,
+            );
+            gauge(
+                &mut out,
+                "smx_residual",
+                "Relative residual at the latest recorded round.",
+                &format_args!("{:e}", rec.residual),
+            );
+            counter(
+                &mut out,
+                "smx_coords_up_total",
+                "Cumulative coordinates sent worker to server.",
+                rec.coords_up,
+            );
+            counter(
+                &mut out,
+                "smx_bits_up_total",
+                "Cumulative modeled uplink bits.",
+                rec.bits_up,
+            );
+            counter(
+                &mut out,
+                "smx_coords_down_total",
+                "Cumulative coordinates sent server to workers.",
+                rec.coords_down,
+            );
+            counter(
+                &mut out,
+                "smx_bytes_up_total",
+                "Cumulative measured uplink bytes (exact frame sizes).",
+                rec.bytes_up,
+            );
+            counter(
+                &mut out,
+                "smx_bytes_down_total",
+                "Cumulative measured downlink bytes (exact frame sizes).",
+                rec.bytes_down,
+            );
+            gauge(
+                &mut out,
+                "smx_wall_seconds",
+                "Wall-clock seconds at the latest recorded round.",
+                &format_args!("{:.6}", rec.wall_secs),
+            );
+            gauge(
+                &mut out,
+                "smx_compute_seconds",
+                "Cumulative seconds in compute phases.",
+                &format_args!("{:.6}", rec.compute_secs),
+            );
+            gauge(
+                &mut out,
+                "smx_encode_seconds",
+                "Cumulative seconds encoding messages.",
+                &format_args!("{:.6}", rec.encode_secs),
+            );
+            gauge(
+                &mut out,
+                "smx_wire_seconds",
+                "Cumulative seconds on the wire.",
+                &format_args!("{:.6}", rec.wire_secs),
+            );
+        }
+
+        if !self.live.is_empty() {
+            gauge(
+                &mut out,
+                "smx_workers_live",
+                "Shards currently hosted by live workers.",
+                &self.live_count(),
+            );
+            let _ = writeln!(out, "# HELP smx_worker_live Per-shard liveness (1 = hosted).");
+            let _ = writeln!(out, "# TYPE smx_worker_live gauge");
+            for (s, slot) in self.live.iter().enumerate() {
+                let _ = writeln!(
+                    out,
+                    "smx_worker_live{{shard=\"{s}\"}} {}",
+                    slot.load(Ordering::Relaxed)
+                );
+            }
+        }
+
+        self.round_duration.render(
+            &mut out,
+            "smx_round_duration_seconds",
+            "Wall-clock duration of each completed round.",
+        );
+        out
+    }
+}
+
+/// [`RoundObserver`] that mirrors every record into a shared
+/// [`Registry`]: the round block tracks the latest record, the `rounds`
+/// counter advances by the round delta between consecutive records.
+/// Used by the loopback drivers and tests; the elastic TCP server feeds
+/// its registry directly from the round loop instead.
+pub struct MetricsObserver {
+    registry: Arc<Registry>,
+    last_round: u64,
+}
+
+impl MetricsObserver {
+    pub fn new(registry: Arc<Registry>) -> MetricsObserver {
+        MetricsObserver {
+            registry,
+            last_round: 0,
+        }
+    }
+}
+
+impl RoundObserver for MetricsObserver {
+    fn on_round(&mut self, rec: &RoundRecord) -> ObserverControl {
+        let r = rec.round as u64;
+        if r > self.last_round {
+            self.registry.rounds.add(r - self.last_round);
+            self.last_round = r;
+        }
+        self.registry.observe_record(rec);
+        ObserverControl::Continue
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(round: usize) -> RoundRecord {
+        RoundRecord {
+            round,
+            residual: 0.5_f64.powi(round as i32),
+            coords_up: round as u64 * 10,
+            bits_up: round as u64 * 640,
+            coords_down: round as u64 * 100,
+            bytes_up: round as u64 * 90,
+            bytes_down: round as u64 * 800,
+            wall_secs: round as f64 * 0.1,
+            compute_secs: round as f64 * 0.05,
+            encode_secs: round as f64 * 0.01,
+            wire_secs: round as f64 * 0.02,
+        }
+    }
+
+    #[test]
+    fn round_block_roundtrips_bitwise() {
+        let b = RoundBlock::default();
+        assert!(b.snapshot().is_none(), "unwritten block must read None");
+        b.write(&rec(7));
+        let s = b.snapshot().unwrap();
+        assert_eq!(s.round, 7);
+        assert_eq!(s.residual.to_bits(), rec(7).residual.to_bits());
+        assert_eq!(s.bytes_up, 630);
+        assert_eq!(s.wire_secs.to_bits(), rec(7).wire_secs.to_bits());
+    }
+
+    #[test]
+    fn round_block_survives_concurrent_scrapes() {
+        let reg = Arc::new(Registry::new(0));
+        let r2 = reg.clone();
+        let reader = std::thread::spawn(move || {
+            // every observed snapshot must be internally consistent:
+            // all fields from the same write (round k ⇒ bytes_up = 90k)
+            for _ in 0..20_000 {
+                if let Some(s) = r2.round.snapshot() {
+                    assert_eq!(s.bytes_up, s.round as u64 * 90, "torn read at {}", s.round);
+                }
+            }
+        });
+        for i in 0..20_000 {
+            reg.round.write(&rec(i % 999));
+        }
+        reader.join().unwrap();
+    }
+
+    #[test]
+    fn histogram_buckets_and_sum() {
+        let h = Histogram::default();
+        h.observe(0.0002); // bucket le=0.00025
+        h.observe(0.003); // bucket le=0.005
+        h.observe(100.0); // +Inf
+        assert_eq!(h.count(), 3);
+        let mut out = String::new();
+        h.render(&mut out, "t_seconds", "test");
+        assert!(out.contains("t_seconds_bucket{le=\"0.00025\"} 1"));
+        assert!(out.contains("t_seconds_bucket{le=\"0.005\"} 2"));
+        assert!(out.contains("t_seconds_bucket{le=\"+Inf\"} 3"));
+        assert!(out.contains("t_seconds_count 3"));
+    }
+
+    #[test]
+    fn liveness_slots_are_fixed_size() {
+        let reg = Registry::new(3);
+        assert_eq!(reg.live_count(), 0);
+        reg.set_live(0, true);
+        reg.set_live(2, true);
+        reg.set_live(99, true); // out of range: ignored, no growth
+        assert_eq!(reg.live_count(), 2);
+        assert!(reg.is_live(0) && !reg.is_live(1) && reg.is_live(2));
+        assert_eq!(reg.n_shards(), 3);
+        reg.set_live(0, false);
+        assert_eq!(reg.live_count(), 1);
+    }
+
+    #[test]
+    fn render_exposes_expected_series() {
+        let reg = Registry::new(2);
+        reg.rounds.add(30);
+        reg.worker_connects.inc();
+        reg.set_live(1, true);
+        reg.observe_record(&rec(30));
+        reg.round_duration.observe(0.002);
+        let text = reg.render();
+        assert!(text.contains("smx_rounds_total 30"));
+        assert!(text.contains("smx_worker_connects_total 1"));
+        assert!(text.contains("smx_bytes_up_total 2700"));
+        assert!(text.contains("smx_worker_live{shard=\"0\"} 0"));
+        assert!(text.contains("smx_worker_live{shard=\"1\"} 1"));
+        assert!(text.contains("smx_workers_live 1"));
+        assert!(text.contains("smx_round 30"));
+        assert!(text.contains("# TYPE smx_round_duration_seconds histogram"));
+        // a registry with no shards renders no per-shard series
+        assert!(!Registry::new(0).render().contains("smx_worker_live"));
+    }
+
+    #[test]
+    fn metrics_observer_tracks_round_deltas() {
+        let reg = Arc::new(Registry::new(0));
+        let mut obs = MetricsObserver::new(reg.clone());
+        for r in [0usize, 10, 20, 30] {
+            assert_eq!(obs.on_round(&rec(r)), ObserverControl::Continue);
+        }
+        assert_eq!(reg.rounds.get(), 30);
+        assert_eq!(reg.round.snapshot().unwrap().round, 30);
+    }
+}

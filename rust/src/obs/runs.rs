@@ -1,0 +1,405 @@
+//! `smx runs` — treat `--run-dir` run logs as a managed artifact store.
+//!
+//! A run directory ([`crate::wire::runlog`]) carries everything needed
+//! to understand a run after the fact: config hash + full config JSON,
+//! seed, the durable record stream, the latest server snapshot, the
+//! downlink journal, and (since runlog v2) a completion marker. This
+//! module turns that into a small artifact-store CLI:
+//!
+//! * `smx runs list [root]` — enumerate run dirs under `root` (or
+//!   `root` itself when it is one) with seed / progress / status.
+//! * `smx runs show <dir>` — one run in detail, including its stored
+//!   config JSON pretty-printed.
+//! * `smx runs diff <a> <b>` — compare two record streams on the
+//!   *deterministic* columns only (round, residual bits, coordinate and
+//!   byte counters). Wall/phase timings always differ between runs and
+//!   are deliberately excluded, so two runs of the same config + seed
+//!   report `identical` — the golden test in `tests/obs_endpoint.rs`
+//!   relies on exactly this.
+//! * `smx runs resume <dir>` — rebuild the [`ExperimentConfig`] from
+//!   the stored config JSON and hand it back to `main` to re-enter
+//!   `smx serve` against the same directory; refuses finished runs.
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::RoundRecord;
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::wire::runlog::{LoadedRun, RunLog, BASE_FILE};
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One line of `smx runs list` / header of `show`.
+#[derive(Clone, Debug)]
+pub struct RunSummary {
+    pub dir: PathBuf,
+    pub config_hash: u64,
+    pub seed: u64,
+    pub finished: bool,
+    pub records: usize,
+    pub last_round: Option<usize>,
+    pub last_residual: Option<f64>,
+    pub snapshot_round: Option<u64>,
+    pub journal_rounds: usize,
+    pub has_config: bool,
+}
+
+impl RunSummary {
+    fn from_loaded(dir: &Path, l: &LoadedRun) -> RunSummary {
+        RunSummary {
+            dir: dir.to_path_buf(),
+            config_hash: l.config_hash,
+            seed: l.seed,
+            finished: l.finished,
+            records: l.records.len(),
+            last_round: l.records.last().map(|r| r.round),
+            last_residual: l.records.last().map(|r| r.residual),
+            snapshot_round: l.snapshot.as_ref().map(|s| s.round),
+            journal_rounds: l.journal.len(),
+            has_config: l.config_json.is_some(),
+        }
+    }
+
+    fn status(&self) -> &'static str {
+        if self.finished {
+            "finished"
+        } else {
+            "in-progress"
+        }
+    }
+}
+
+fn load(dir: &Path) -> Result<LoadedRun> {
+    RunLog::load(dir)
+        .with_context(|| format!("reading run dir {}", dir.display()))?
+        .with_context(|| format!("{} is not a run dir (no {BASE_FILE})", dir.display()))
+}
+
+/// Summarize one run directory.
+pub fn summarize(dir: &Path) -> Result<RunSummary> {
+    Ok(RunSummary::from_loaded(dir, &load(dir)?))
+}
+
+/// Enumerate run dirs: `root` itself if it holds a `base.bin`,
+/// otherwise its immediate subdirectories that do (sorted by name).
+/// Unreadable entries are skipped, not fatal — listing an artifact
+/// store must survive one corrupt member.
+pub fn list(root: &Path) -> Result<Vec<RunSummary>> {
+    if root.join(BASE_FILE).is_file() {
+        return Ok(vec![summarize(root)?]);
+    }
+    let rd = std::fs::read_dir(root)
+        .with_context(|| format!("listing {} (expected a run dir or a directory of run dirs)", root.display()))?;
+    let mut dirs: Vec<PathBuf> = rd
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.join(BASE_FILE).is_file())
+        .collect();
+    dirs.sort();
+    Ok(dirs.iter().filter_map(|d| summarize(d).ok()).collect())
+}
+
+/// Result of comparing two record streams on deterministic fields.
+#[derive(Clone, Debug, PartialEq)]
+pub enum DiffOutcome {
+    /// Same length, every deterministic field bitwise equal.
+    Identical { records: usize },
+    /// First index where a deterministic field differs.
+    Diverged {
+        index: usize,
+        round: usize,
+        field: &'static str,
+        a: String,
+        b: String,
+    },
+    /// Common prefix identical, but one stream is longer.
+    Truncated { shorter: usize, longer: usize },
+}
+
+/// Deterministic fields only: timings (`wall_secs` and the phase
+/// columns) always differ between runs and never gate equality.
+fn det_fields(r: &RoundRecord) -> [(&'static str, String); 7] {
+    [
+        ("round", r.round.to_string()),
+        ("residual", format!("{:.17e} ({:#x})", r.residual, r.residual.to_bits())),
+        ("coords_up", r.coords_up.to_string()),
+        ("bits_up", r.bits_up.to_string()),
+        ("coords_down", r.coords_down.to_string()),
+        ("bytes_up", r.bytes_up.to_string()),
+        ("bytes_down", r.bytes_down.to_string()),
+    ]
+}
+
+/// Compare two record streams; see [`DiffOutcome`].
+pub fn diff_records(a: &[RoundRecord], b: &[RoundRecord]) -> DiffOutcome {
+    let n = a.len().min(b.len());
+    for i in 0..n {
+        let (fa, fb) = (det_fields(&a[i]), det_fields(&b[i]));
+        for (x, y) in fa.iter().zip(fb.iter()) {
+            if x.1 != y.1 {
+                return DiffOutcome::Diverged {
+                    index: i,
+                    round: a[i].round,
+                    field: x.0,
+                    a: x.1.clone(),
+                    b: y.1.clone(),
+                };
+            }
+        }
+    }
+    if a.len() != b.len() {
+        DiffOutcome::Truncated {
+            shorter: n,
+            longer: a.len().max(b.len()),
+        }
+    } else {
+        DiffOutcome::Identical { records: n }
+    }
+}
+
+/// Load and compare two run dirs.
+pub fn diff_runs(a: &Path, b: &Path) -> Result<DiffOutcome> {
+    Ok(diff_records(&load(a)?.records, &load(b)?.records))
+}
+
+fn print_summary_line(s: &RunSummary) {
+    let progress = match (s.last_round, s.last_residual) {
+        (Some(r), Some(res)) => format!("round {r} residual {res:.3e}"),
+        _ => "no records".to_string(),
+    };
+    println!(
+        "{:<28} seed {:<6} cfg {:016x}  {:<11} {} ({} records, snapshot {})",
+        s.dir.display(),
+        s.seed,
+        s.config_hash,
+        s.status(),
+        progress,
+        s.records,
+        s.snapshot_round
+            .map(|r| r.to_string())
+            .unwrap_or_else(|| "none".to_string()),
+    );
+}
+
+/// CLI entry for the `runs` subcommand. Returns `Some(config)` only for
+/// `resume`, in which case `main` re-enters the serve path with it —
+/// this module never starts a run itself.
+pub fn cmd(args: &Args) -> Result<Option<ExperimentConfig>> {
+    let action = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .context("usage: smx runs <list|show|diff|resume> [paths...]")?;
+    match action {
+        "list" => {
+            let root = PathBuf::from(args.positional.get(1).map(String::as_str).unwrap_or("."));
+            let runs = list(&root)?;
+            if runs.is_empty() {
+                println!("no run dirs under {}", root.display());
+            }
+            for s in &runs {
+                print_summary_line(s);
+            }
+            Ok(None)
+        }
+        "show" => {
+            let dir = PathBuf::from(
+                args.positional
+                    .get(1)
+                    .context("usage: smx runs show <dir>")?,
+            );
+            let loaded = load(&dir)?;
+            let s = RunSummary::from_loaded(&dir, &loaded);
+            print_summary_line(&s);
+            println!(
+                "journal: {} buffered downlink round(s) past the snapshot",
+                s.journal_rounds
+            );
+            match &loaded.config_json {
+                Some(raw) if !raw.is_empty() => match Json::parse(raw) {
+                    Ok(j) => print!("config:\n{}", j.to_string_pretty()),
+                    Err(_) => println!("config (unparsed): {raw}"),
+                },
+                _ => println!("config: not stored (pre-v2 run dir)"),
+            }
+            Ok(None)
+        }
+        "diff" => {
+            let a = PathBuf::from(args.positional.get(1).context("usage: smx runs diff <a> <b>")?);
+            let b = PathBuf::from(args.positional.get(2).context("usage: smx runs diff <a> <b>")?);
+            match diff_runs(&a, &b)? {
+                DiffOutcome::Identical { records } => {
+                    println!("identical: {records} records agree on all deterministic fields");
+                    Ok(None)
+                }
+                DiffOutcome::Diverged {
+                    index,
+                    round,
+                    field,
+                    a: va,
+                    b: vb,
+                } => bail!(
+                    "diverged at record {index} (round {round}): {field} {va} vs {vb}"
+                ),
+                DiffOutcome::Truncated { shorter, longer } => bail!(
+                    "prefix identical for {shorter} records, but lengths differ ({shorter} vs {longer})"
+                ),
+            }
+        }
+        "resume" => {
+            let dir = PathBuf::from(
+                args.positional
+                    .get(1)
+                    .context("usage: smx runs resume <dir>")?,
+            );
+            let loaded = load(&dir)?;
+            if loaded.finished {
+                bail!(
+                    "{} is a finished run; refusing to resume (use `smx runs show` to inspect it)",
+                    dir.display()
+                );
+            }
+            let raw = loaded.config_json.as_deref().filter(|s| !s.is_empty()).with_context(|| {
+                format!(
+                    "{} stores no config JSON (pre-v2 run dir); resume it with the original command line instead",
+                    dir.display()
+                )
+            })?;
+            let j = Json::parse(raw)
+                .with_context(|| format!("parsing stored config of {}", dir.display()))?;
+            let mut cfg = ExperimentConfig::from_json(&j)
+                .with_context(|| format!("stored config of {}", dir.display()))?;
+            cfg.wire.run_dir = Some(dir.display().to_string());
+            Ok(Some(cfg))
+        }
+        other => bail!("unknown runs action '{other}' (expected list|show|diff|resume)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn tmp_dir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("smx_runs_{name}"));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn rec(round: usize, seed: u64, wall_bias: f64) -> RoundRecord {
+        // deterministic pseudo-content so two equal-seed dirs agree on
+        // every deterministic column and different seeds split at
+        // round 1; wall_bias perturbs the timing columns only
+        let jitter = if round == 0 { 0 } else { seed };
+        RoundRecord {
+            round,
+            residual: 1.0 / (round as f64 + 1.0 + jitter as f64 * 1e-3),
+            coords_up: 10 + round as u64 + jitter,
+            bits_up: 640,
+            coords_down: 5,
+            bytes_up: 80 + jitter,
+            bytes_down: 40,
+            wall_secs: 0.1 * round as f64 + wall_bias, // never compared
+            compute_secs: wall_bias,                   // never compared
+            encode_secs: 0.0,
+            wire_secs: wall_bias * 0.5,
+        }
+    }
+
+    fn synth(dir: &Path, seed: u64, rounds: usize, finish: bool, config: &str) {
+        synth_biased(dir, seed, rounds, finish, config, 0.0)
+    }
+
+    fn synth_biased(dir: &Path, seed: u64, rounds: usize, finish: bool, config: &str, wall_bias: f64) {
+        let mut log = RunLog::create(dir, 0xC0FFEE, seed, config).unwrap();
+        for r in 0..rounds {
+            log.record(&rec(r, seed, wall_bias));
+        }
+        if finish {
+            log.finish().unwrap();
+        }
+    }
+
+    #[test]
+    fn summarize_and_list_see_the_store() {
+        let root = tmp_dir("store");
+        synth(&root.join("a"), 1, 3, true, "{\"seed\": 1}");
+        synth(&root.join("b"), 2, 5, false, "{\"seed\": 2}");
+        std::fs::create_dir_all(root.join("not_a_run")).unwrap();
+
+        let runs = list(&root).unwrap();
+        assert_eq!(runs.len(), 2);
+        assert_eq!(runs[0].seed, 1);
+        assert!(runs[0].finished && runs[0].records == 3);
+        assert_eq!(runs[1].seed, 2);
+        assert!(!runs[1].finished && runs[1].records == 5);
+        assert_eq!(runs[1].last_round, Some(4));
+
+        // a run dir passed directly lists itself
+        let one = list(&root.join("a")).unwrap();
+        assert_eq!(one.len(), 1);
+        assert_eq!(one[0].config_hash, 0xC0FFEE);
+    }
+
+    #[test]
+    fn diff_is_deterministic_fields_only() {
+        let root = tmp_dir("diff");
+        synth_biased(&root.join("s42a"), 42, 4, true, "", 0.0);
+        synth_biased(&root.join("s42b"), 42, 4, true, "", 7.5);
+        synth(&root.join("s43"), 43, 4, true, "");
+        synth(&root.join("s42short"), 42, 2, false, "");
+
+        // same seed but very different wall/compute timings: the
+        // deterministic columns agree → identical
+        match diff_runs(&root.join("s42a"), &root.join("s42b")).unwrap() {
+            DiffOutcome::Identical { records } => assert_eq!(records, 4),
+            other => panic!("expected identical, got {other:?}"),
+        }
+        // different seed: fixture makes round 0 agree, round 1 split
+        match diff_runs(&root.join("s42a"), &root.join("s43")).unwrap() {
+            DiffOutcome::Diverged { index, round, field, .. } => {
+                assert_eq!((index, round), (1, 1));
+                assert_eq!(field, "residual");
+            }
+            other => panic!("expected divergence, got {other:?}"),
+        }
+        // prefix of itself: truncated, not diverged
+        match diff_runs(&root.join("s42a"), &root.join("s42short")).unwrap() {
+            DiffOutcome::Truncated { shorter, longer } => assert_eq!((shorter, longer), (2, 4)),
+            other => panic!("expected truncation, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn resume_rebuilds_config_and_refuses_finished_runs() {
+        let root = tmp_dir("resume");
+        let cfg_json = "{\"seed\": 9, \"max_rounds\": 50}";
+        synth(&root.join("open"), 9, 2, false, cfg_json);
+        synth(&root.join("done"), 9, 2, true, cfg_json);
+        synth(&root.join("bare"), 9, 2, false, "");
+
+        let args = |v: &[&str]| {
+            Args::parse(
+                std::iter::once("runs".to_string()).chain(v.iter().map(|s| s.to_string())),
+                true,
+            )
+        };
+
+        let cfg = cmd(&args(&["resume", root.join("open").to_str().unwrap()]))
+            .unwrap()
+            .expect("resume returns a config");
+        assert_eq!(cfg.seed, 9);
+        assert_eq!(cfg.max_rounds, 50);
+        assert_eq!(
+            cfg.wire.run_dir.as_deref(),
+            root.join("open").to_str(),
+            "resume must point the config back at the run dir"
+        );
+
+        let err = cmd(&args(&["resume", root.join("done").to_str().unwrap()])).unwrap_err();
+        assert!(err.to_string().contains("finished"), "{err}");
+        let err = cmd(&args(&["resume", root.join("bare").to_str().unwrap()])).unwrap_err();
+        assert!(err.to_string().contains("no config JSON"), "{err}");
+        let err = cmd(&args(&["bogus"])).unwrap_err();
+        assert!(err.to_string().contains("unknown runs action"), "{err}");
+    }
+}

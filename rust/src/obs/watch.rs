@@ -1,0 +1,344 @@
+//! `--watch`: a live terminal dashboard for any run, implemented as a
+//! plain [`RoundObserver`].
+//!
+//! The dashboard hangs off the same observer seam as the CSV/JSONL
+//! writers: it receives each recorded [`RoundRecord`] *after* the
+//! server step has been applied, by shared reference, and returns
+//! [`ObserverControl::Continue`] unconditionally. It therefore cannot
+//! perturb the trajectory by construction — `tests/obs_endpoint.rs`
+//! additionally asserts bitwise-identical residuals with and without a
+//! watcher attached.
+//!
+//! Rendering is plain ANSI (cursor-up + erase-line redraw, a Unicode
+//! sparkline) on stderr, so it composes with `--csv`/`--jsonl` on
+//! stdout and needs no terminal library. Redraws are throttled to
+//! ~10 Hz; the record stream itself is already throttled by
+//! `record_every`.
+
+use crate::coordinator::{ObserverControl, RoundObserver, RoundRecord, RunResult};
+use crate::obs::registry::Registry;
+use std::collections::VecDeque;
+use std::io::{self, Write};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Residuals kept for the sparkline.
+const RING: usize = 48;
+/// Worker liveness cells rendered before eliding.
+const MAX_WORKER_CELLS: usize = 32;
+
+const SPARK_LEVELS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+
+/// Map residuals to sparkline characters on a log scale across the
+/// window's own min..max range.
+fn spark(vals: &[f64]) -> String {
+    if vals.is_empty() {
+        return String::new();
+    }
+    let logs: Vec<f64> = vals.iter().map(|v| v.max(1e-300).log10()).collect();
+    let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &l in &logs {
+        lo = lo.min(l);
+        hi = hi.max(l);
+    }
+    let span = (hi - lo).max(1e-12);
+    logs.iter()
+        .map(|&l| {
+            let t = (l - lo) / span; // 0 = window min, 1 = window max
+            let idx = (t * (SPARK_LEVELS.len() - 1) as f64).round() as usize;
+            SPARK_LEVELS[idx.min(SPARK_LEVELS.len() - 1)]
+        })
+        .collect()
+}
+
+/// `1536 → "1.5 KiB"` — scrape-time formatting only.
+fn human_bytes(n: u64) -> String {
+    const UNITS: [&str; 4] = ["B", "KiB", "MiB", "GiB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u + 1 < UNITS.len() {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{n} B")
+    } else {
+        format!("{v:.1} {}", UNITS[u])
+    }
+}
+
+/// Live terminal dashboard; see the module docs. Build with
+/// [`WatchObserver::new`] (stderr, throttled) or
+/// [`WatchObserver::to_sink`] (tests: unthrottled, any writer), then
+/// optionally attach a [`Registry`] for the per-worker liveness row.
+pub struct WatchObserver {
+    sink: Box<dyn Write + Send>,
+    registry: Option<Arc<Registry>>,
+    min_redraw: Duration,
+    last_draw: Option<Instant>,
+    /// lines the previous frame occupied (for the cursor-up rewind)
+    frame_lines: usize,
+    ring: VecDeque<f64>,
+    last: Option<RoundRecord>,
+    frames: u64,
+}
+
+impl WatchObserver {
+    /// Dashboard on stderr, redrawn at most every 100 ms.
+    pub fn new() -> WatchObserver {
+        WatchObserver {
+            sink: Box::new(io::stderr()),
+            registry: None,
+            min_redraw: Duration::from_millis(100),
+            last_draw: None,
+            frame_lines: 0,
+            ring: VecDeque::with_capacity(RING),
+            last: None,
+            frames: 0,
+        }
+    }
+
+    /// Dashboard into an arbitrary writer with no redraw throttle —
+    /// every recorded round produces a frame. Used by tests.
+    pub fn to_sink(sink: Box<dyn Write + Send>) -> WatchObserver {
+        WatchObserver {
+            sink,
+            min_redraw: Duration::ZERO,
+            ..WatchObserver::new()
+        }
+    }
+
+    /// Attach a metrics registry; adds the per-worker liveness row.
+    pub fn registry(mut self, registry: Arc<Registry>) -> WatchObserver {
+        self.registry = Some(registry);
+        self
+    }
+
+    /// Frames actually written (post-throttle).
+    pub fn frames_drawn(&self) -> u64 {
+        self.frames
+    }
+
+    fn worker_row(&self) -> Option<String> {
+        let reg = self.registry.as_ref()?;
+        let n = reg.n_shards();
+        if n == 0 {
+            return None;
+        }
+        let mut cells = String::with_capacity(n.min(MAX_WORKER_CELLS) + 8);
+        for s in 0..n.min(MAX_WORKER_CELLS) {
+            cells.push(if reg.is_live(s) { '#' } else { '.' });
+        }
+        if n > MAX_WORKER_CELLS {
+            cells.push('…');
+        }
+        Some(format!(
+            "workers {}/{} live  [{}]  deaths {}  rejoins {}",
+            reg.live_count(),
+            n,
+            cells,
+            reg.worker_deaths.get(),
+            reg.worker_rejoins.get(),
+        ))
+    }
+
+    fn draw(&mut self) {
+        let Some(rec) = self.last.clone() else {
+            return;
+        };
+        // rounds/s from the run's own cumulative wall clock, so the
+        // number matches what the CSV wall_secs column implies
+        let rate = if rec.wall_secs > 0.0 {
+            rec.round as f64 / rec.wall_secs
+        } else {
+            0.0
+        };
+        let modeled = (rec.bits_up + 7) / 8; // div_ceil needs Rust 1.73; MSRV is 1.70
+        let ratio = if modeled > 0 {
+            rec.bytes_up as f64 / modeled as f64
+        } else {
+            0.0
+        };
+        let residuals: Vec<f64> = self.ring.iter().copied().collect();
+
+        let mut lines: Vec<String> = Vec::with_capacity(4);
+        lines.push(format!(
+            "smx watch · round {} · residual {:.3e} · {:.1} rounds/s",
+            rec.round, rec.residual, rate
+        ));
+        lines.push(format!("resid  {}", spark(&residuals)));
+        lines.push(format!(
+            "bytes  up {} measured · {} modeled (x{:.2}) · down {}",
+            human_bytes(rec.bytes_up),
+            human_bytes(modeled),
+            ratio,
+            human_bytes(rec.bytes_down),
+        ));
+        if let Some(row) = self.worker_row() {
+            lines.push(row);
+        }
+
+        let mut frame = String::new();
+        if self.frame_lines > 0 {
+            frame.push_str(&format!("\x1b[{}A", self.frame_lines));
+        }
+        for l in &lines {
+            frame.push_str("\x1b[2K");
+            frame.push_str(l);
+            frame.push('\n');
+        }
+        if self.sink.write_all(frame.as_bytes()).is_ok() {
+            let _ = self.sink.flush();
+            self.frame_lines = lines.len();
+            self.frames += 1;
+        }
+        self.last_draw = Some(Instant::now());
+    }
+}
+
+impl Default for WatchObserver {
+    fn default() -> Self {
+        WatchObserver::new()
+    }
+}
+
+impl RoundObserver for WatchObserver {
+    fn on_round(&mut self, rec: &RoundRecord) -> ObserverControl {
+        if self.ring.len() == RING {
+            self.ring.pop_front();
+        }
+        self.ring.push_back(rec.residual);
+        self.last = Some(rec.clone());
+        let due = match self.last_draw {
+            None => true,
+            Some(t) => t.elapsed() >= self.min_redraw,
+        };
+        if due {
+            self.draw();
+        }
+        ObserverControl::Continue
+    }
+
+    fn on_done(&mut self, result: &RunResult) {
+        self.draw(); // final state, even if the throttle just fired
+        let verdict = if result.reached_target {
+            "reached target"
+        } else if result.stopped_by_observer {
+            "stopped by observer"
+        } else {
+            "round budget exhausted"
+        };
+        let _ = writeln!(
+            self.sink,
+            "smx watch · done: {} after {} rounds ({})",
+            verdict, result.rounds_run, result.method
+        );
+        let _ = self.sink.flush();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::RunResult;
+    use crate::util::timer::PhaseTimer;
+    use std::sync::Mutex;
+
+    /// `Write` into a shared buffer the test can inspect after the
+    /// observer (which owns its sink) is done with it.
+    struct SharedBuf(Arc<Mutex<Vec<u8>>>);
+    impl Write for SharedBuf {
+        fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+            self.0.lock().unwrap().extend_from_slice(buf);
+            Ok(buf.len())
+        }
+        fn flush(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+    }
+
+    fn rec(round: usize, residual: f64) -> RoundRecord {
+        RoundRecord {
+            round,
+            residual,
+            coords_up: 10 * round as u64,
+            bits_up: 640 * round as u64,
+            coords_down: 5 * round as u64,
+            bytes_up: 80 * round as u64,
+            bytes_down: 40 * round as u64,
+            wall_secs: 0.01 * round as f64,
+            compute_secs: 0.0,
+            encode_secs: 0.0,
+            wire_secs: 0.0,
+        }
+    }
+
+    fn result(rounds: usize) -> RunResult {
+        RunResult {
+            method: "diana+".to_string(),
+            final_x: vec![0.0],
+            rounds_run: rounds,
+            reached_target: true,
+            stopped_by_observer: false,
+            phases: PhaseTimer::new(),
+        }
+    }
+
+    #[test]
+    fn sparkline_is_log_scaled_and_spans_the_window() {
+        let s = spark(&[1.0, 1e-2, 1e-4, 1e-6]);
+        let chars: Vec<char> = s.chars().collect();
+        assert_eq!(chars.len(), 4);
+        assert_eq!(chars[0], '█'); // window max
+        assert_eq!(chars[3], '▁'); // window min
+        // log scale → equal decades step evenly, so strictly decreasing
+        for w in chars.windows(2) {
+            assert!(w[0] > w[1], "not decreasing: {s}");
+        }
+        assert_eq!(spark(&[]), "");
+        // constant window must not divide by zero
+        assert_eq!(spark(&[0.5, 0.5]).chars().count(), 2);
+    }
+
+    #[test]
+    fn human_bytes_picks_sane_units() {
+        assert_eq!(human_bytes(0), "0 B");
+        assert_eq!(human_bytes(1023), "1023 B");
+        assert_eq!(human_bytes(1536), "1.5 KiB");
+        assert_eq!(human_bytes(3 * 1024 * 1024), "3.0 MiB");
+    }
+
+    #[test]
+    fn frames_track_records_and_done_prints_a_summary() {
+        let buf = Arc::new(Mutex::new(Vec::new()));
+        let mut w = WatchObserver::to_sink(Box::new(SharedBuf(buf.clone())));
+        for r in 1..=3 {
+            assert_eq!(
+                w.on_round(&rec(r, 10f64.powi(-(r as i32)))),
+                ObserverControl::Continue
+            );
+        }
+        assert_eq!(w.frames_drawn(), 3);
+        w.on_done(&result(3));
+        let text = String::from_utf8_lossy(&buf.lock().unwrap()).to_string();
+        assert!(text.contains("round 3"), "missing last round: {text}");
+        assert!(text.contains("residual 1.000e-3"), "residual: {text}");
+        assert!(text.contains("240 B measured"), "bytes row: {text}");
+        assert!(text.contains("reached target"), "summary: {text}");
+        assert!(text.contains("\x1b[2K"), "no erase-line redraw: {text}");
+    }
+
+    #[test]
+    fn registry_adds_a_worker_liveness_row() {
+        let reg = Arc::new(Registry::new(4));
+        reg.set_live(0, true);
+        reg.set_live(2, true);
+        let buf = Arc::new(Mutex::new(Vec::new()));
+        let mut w =
+            WatchObserver::to_sink(Box::new(SharedBuf(buf.clone()))).registry(reg);
+        w.on_round(&rec(1, 0.5));
+        let text = String::from_utf8_lossy(&buf.lock().unwrap()).to_string();
+        assert!(text.contains("workers 2/4 live"), "{text}");
+        assert!(text.contains("[#.#.]"), "{text}");
+    }
+}

@@ -32,6 +32,19 @@ impl Stopwatch {
     }
 }
 
+/// Maps a fine-grained phase name onto one of the three coarse buckets
+/// the per-round records expose (`compute` / `encode` / `wire`), or
+/// `None` for phases that must not be attributed (whole-round umbrella
+/// spans like `dist_round` would double-count their children).
+pub fn phase_bucket(phase: &str) -> Option<&'static str> {
+    match phase {
+        "worker_round" | "server_apply" => Some("compute"),
+        "server_downlink" | "encode" => Some("encode"),
+        "scatter" | "gather" | "wire_wait" => Some("wire"),
+        _ => None,
+    }
+}
+
 /// Accumulates durations per named phase; used to break down where a
 /// coordinator round spends its time (grad / compress / network / server).
 #[derive(Debug, Default, Clone)]
@@ -67,6 +80,22 @@ impl PhaseTimer {
 
     pub fn count(&self, phase: &str) -> u64 {
         self.acc.get(phase).map(|(_, c)| *c).unwrap_or(0)
+    }
+
+    /// Cumulative seconds folded into the three coarse buckets of
+    /// [`phase_bucket`], in `(compute, encode, wire)` order. Phases
+    /// mapping to `None` are excluded.
+    pub fn bucket_totals(&self) -> (f64, f64, f64) {
+        let (mut compute, mut encode, mut wire) = (0.0, 0.0, 0.0);
+        for (phase, (d, _)) in &self.acc {
+            match phase_bucket(phase) {
+                Some("compute") => compute += d.as_secs_f64(),
+                Some("encode") => encode += d.as_secs_f64(),
+                Some("wire") => wire += d.as_secs_f64(),
+                _ => {}
+            }
+        }
+        (compute, encode, wire)
     }
 
     pub fn merge(&mut self, other: &PhaseTimer) {
@@ -123,6 +152,23 @@ mod tests {
         let x = pt.time("work", || 21 * 2);
         assert_eq!(x, 42);
         assert_eq!(pt.count("work"), 1);
+    }
+
+    #[test]
+    fn bucket_totals_fold_known_phases_and_skip_umbrellas() {
+        let mut pt = PhaseTimer::new();
+        pt.add("worker_round", Duration::from_millis(10));
+        pt.add("server_apply", Duration::from_millis(5));
+        pt.add("server_downlink", Duration::from_millis(2));
+        pt.add("gather", Duration::from_millis(7));
+        pt.add("wire_wait", Duration::from_millis(3));
+        pt.add("dist_round", Duration::from_millis(100)); // umbrella: excluded
+        let (c, e, w) = pt.bucket_totals();
+        assert!((c - 0.015).abs() < 1e-9, "compute {c}");
+        assert!((e - 0.002).abs() < 1e-9, "encode {e}");
+        assert!((w - 0.010).abs() < 1e-9, "wire {w}");
+        assert_eq!(phase_bucket("dist_round"), None);
+        assert_eq!(phase_bucket("scatter"), Some("wire"));
     }
 
     #[test]

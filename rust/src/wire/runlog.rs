@@ -9,11 +9,16 @@
 //! * **`base.bin`** — atomically rotated (tmp + rename + fsync, the
 //!   idiom of `coordinator::session::write_checkpoint`) at every
 //!   committed snapshot. Holds the run header (config hash + seed), the
-//!   committed [`Snapshot`] (server method state via
+//!   full config JSON (so `smx runs show`/`resume` can reconstruct the
+//!   run without the original command line), the committed [`Snapshot`]
+//!   (server method state via
 //!   [`ServerAlgo::save_state`](crate::methods::ServerAlgo::save_state),
 //!   server RNG, cumulative [`RoundTotals`], and the per-shard worker
 //!   blobs the rejoin path restores over `TAG_RESTORE`), and every
-//!   [`RoundRecord`] emitted up to the snapshot round.
+//!   [`RoundRecord`] emitted up to the snapshot round. When a run ends
+//!   cleanly, [`RunLog::finish`] rotates one final time with *every*
+//!   record (snapshot-gated or not) plus a `finished` marker, turning
+//!   the run dir into a complete, diffable artifact for `smx runs`.
 //! * **`journal.bin`** — append-only journal *suffix*: the encoded
 //!   downlink bodies broadcast after the last committed snapshot, in
 //!   round order. Truncated at each rotation, appended per round
@@ -48,14 +53,22 @@ use std::fs::{self, File};
 use std::io::{self, Write};
 use std::path::{Path, PathBuf};
 
-const MAGIC: &[u8; 8] = b"SMXRLOG1";
-const BASE_FILE: &str = "base.bin";
+// v2 (SMXRLOG2): records carry the per-phase time columns, and base.bin
+// gained the RL_CONFIG / RL_FINISHED frames. v1 dirs fail the magic
+// check at load — a clean refusal, never a silent misparse.
+const MAGIC: &[u8; 8] = b"SMXRLOG2";
+/// `base.bin` inside a run dir — the atomically-rotated committed state.
+pub const BASE_FILE: &str = "base.bin";
 const JOURNAL_FILE: &str = "journal.bin";
 
 const RL_HEADER: u8 = 1;
 const RL_SNAPSHOT: u8 = 2;
 const RL_RECORD: u8 = 3;
 const RL_DOWNLINK: u8 = 4;
+/// Full config JSON (UTF-8 body), written right after the header.
+const RL_CONFIG: u8 = 5;
+/// Marker frame: the run completed cleanly (records are exhaustive).
+const RL_FINISHED: u8 = 6;
 
 /// FNV-1a over the canonical config JSON: cheap, dependency-free, and
 /// stable across platforms — enough to refuse resuming under a changed
@@ -91,10 +104,17 @@ pub struct Snapshot {
 pub struct LoadedRun {
     pub config_hash: u64,
     pub seed: u64,
+    /// full config JSON as persisted at create time (`None` only for a
+    /// log created with an empty config string)
+    pub config_json: Option<String>,
+    /// the run completed cleanly ([`RunLog::finish`] rotated the base);
+    /// its records are exhaustive and `smx serve` refuses to resume it
+    pub finished: bool,
     /// `None` ⇒ the run died before its first committed snapshot; the
     /// restart simply re-runs from round 0 (everything regenerates)
     pub snapshot: Option<Snapshot>,
-    /// records emitted up to the snapshot round, in round order
+    /// records emitted up to the snapshot round (all records when
+    /// `finished`), in round order
     pub records: Vec<RoundRecord>,
     /// journal suffix: `(round, downlink body)` for rounds after the
     /// snapshot, in round order
@@ -107,7 +127,11 @@ pub struct RunLog {
     dir: PathBuf,
     config_hash: u64,
     seed: u64,
+    config_json: String,
     records: Vec<RoundRecord>,
+    /// last committed snapshot, kept so [`RunLog::finish`] can rotate a
+    /// base that still carries it
+    last_snap: Option<Snapshot>,
     journal: File,
 }
 
@@ -153,6 +177,9 @@ fn put_record(out: &mut Vec<u8>, r: &RoundRecord) {
     put_u64(out, r.bytes_up);
     put_u64(out, r.bytes_down);
     put_u64(out, r.wall_secs.to_bits());
+    put_u64(out, r.compute_secs.to_bits());
+    put_u64(out, r.encode_secs.to_bits());
+    put_u64(out, r.wire_secs.to_bits());
 }
 
 fn get_record(buf: &[u8], pos: &mut usize) -> io::Result<RoundRecord> {
@@ -165,23 +192,30 @@ fn get_record(buf: &[u8], pos: &mut usize) -> io::Result<RoundRecord> {
         bytes_up: get_u64(buf, pos)?,
         bytes_down: get_u64(buf, pos)?,
         wall_secs: f64::from_bits(get_u64(buf, pos)?),
+        compute_secs: f64::from_bits(get_u64(buf, pos)?),
+        encode_secs: f64::from_bits(get_u64(buf, pos)?),
+        wire_secs: f64::from_bits(get_u64(buf, pos)?),
     })
 }
 
 impl RunLog {
     /// Start a fresh run log in `dir` (created if missing): writes the
-    /// header-only `base.bin` atomically and truncates the journal. Any
-    /// previous run's files in `dir` are replaced.
-    pub fn create(dir: &Path, config_hash: u64, seed: u64) -> io::Result<RunLog> {
+    /// header + config `base.bin` atomically and truncates the journal.
+    /// Any previous run's files in `dir` are replaced. `config_json` is
+    /// the full experiment config, persisted verbatim so the dir is a
+    /// self-contained artifact (`smx runs show`/`resume`).
+    pub fn create(dir: &Path, config_hash: u64, seed: u64, config_json: &str) -> io::Result<RunLog> {
         fs::create_dir_all(dir)?;
         let mut log = RunLog {
             dir: dir.to_path_buf(),
             config_hash,
             seed,
+            config_json: config_json.to_string(),
             records: Vec::new(),
+            last_snap: None,
             journal: File::create(dir.join(JOURNAL_FILE))?,
         };
-        log.write_base(None)?;
+        log.write_base(None, false)?;
         Ok(log)
     }
 
@@ -195,7 +229,9 @@ impl RunLog {
             dir: dir.to_path_buf(),
             config_hash: loaded.config_hash,
             seed: loaded.seed,
+            config_json: loaded.config_json.clone().unwrap_or_default(),
             records: loaded.records.clone(),
+            last_snap: loaded.snapshot.clone(),
             journal: File::create(dir.join(JOURNAL_FILE))?,
         })
     }
@@ -224,18 +260,38 @@ impl RunLog {
     /// the process dies between the two steps, stale journal entries
     /// (round ≤ `snap.round`) are dropped at load by the round check.
     pub fn commit(&mut self, snap: &Snapshot) -> io::Result<()> {
-        self.write_base(Some(snap))?;
+        self.write_base(Some(snap), false)?;
+        self.last_snap = Some(snap.clone());
         self.journal = File::create(self.dir.join(JOURNAL_FILE))?;
         self.journal.sync_all()
     }
 
-    fn write_base(&self, snap: Option<&Snapshot>) -> io::Result<()> {
+    /// Mark the run as cleanly completed: rotate `base.bin` one final
+    /// time carrying the last committed snapshot (if any), *every*
+    /// record — including those past the snapshot round, which a crash
+    /// would have regenerated but a finished run never re-runs — and an
+    /// `RL_FINISHED` marker, then truncate the journal (nothing is left
+    /// to replay). `smx runs` treats such a dir as a complete artifact;
+    /// `smx serve` refuses to resume it.
+    pub fn finish(&mut self) -> io::Result<()> {
+        self.write_base(self.last_snap.clone().as_ref(), true)?;
+        self.journal = File::create(self.dir.join(JOURNAL_FILE))?;
+        self.journal.sync_all()
+    }
+
+    fn write_base(&self, snap: Option<&Snapshot>, finished: bool) -> io::Result<()> {
         let mut out = Vec::new();
         out.extend_from_slice(MAGIC);
         let mut body = vec![RL_HEADER];
         put_u64(&mut body, self.config_hash);
         put_u64(&mut body, self.seed);
         out.extend_from_slice(&encode_frame(&body, true));
+        if !self.config_json.is_empty() {
+            body.clear();
+            body.push(RL_CONFIG);
+            body.extend_from_slice(self.config_json.as_bytes());
+            out.extend_from_slice(&encode_frame(&body, true));
+        }
         if let Some(s) = snap {
             body.clear();
             body.push(RL_SNAPSHOT);
@@ -252,12 +308,24 @@ impl RunLog {
                 put_bytes(&mut body, blob);
             }
             out.extend_from_slice(&encode_frame(&body, true));
-            for rec in self.records.iter().filter(|r| r.round as u64 <= s.round) {
+        }
+        if snap.is_some() || finished {
+            // crash-resume keeps only snapshot-gated records (later ones
+            // regenerate); a finished run persists the full history
+            let cutoff = if finished {
+                u64::MAX
+            } else {
+                snap.map(|s| s.round).unwrap_or(0)
+            };
+            for rec in self.records.iter().filter(|r| r.round as u64 <= cutoff) {
                 body.clear();
                 body.push(RL_RECORD);
                 put_record(&mut body, rec);
                 out.extend_from_slice(&encode_frame(&body, true));
             }
+        }
+        if finished {
+            out.extend_from_slice(&encode_frame(&[RL_FINISHED], true));
         }
         let tmp = self.dir.join("base.tmp");
         let mut f = File::create(&tmp)?;
@@ -320,6 +388,12 @@ impl RunLog {
                     loaded.snapshot = Some(s);
                 }
                 Some(&RL_RECORD) => loaded.records.push(get_record(&body, &mut p)?),
+                Some(&RL_CONFIG) => {
+                    let json = std::str::from_utf8(&body[1..])
+                        .map_err(|_| corrupt("non-UTF8 config in base.bin"))?;
+                    loaded.config_json = Some(json.to_string());
+                }
+                Some(&RL_FINISHED) => loaded.finished = true,
                 _ => return Err(corrupt("unknown record tag in base.bin")),
             }
         }
@@ -373,6 +447,9 @@ mod tests {
             bytes_up: round as u64 * 90,
             bytes_down: round as u64 * 800,
             wall_secs: round as f64 * 0.25,
+            compute_secs: round as f64 * 0.125,
+            encode_secs: round as f64 * 0.03125,
+            wire_secs: round as f64 * 0.0625,
         }
     }
 
@@ -401,10 +478,12 @@ mod tests {
     #[test]
     fn create_commit_load_roundtrip_is_exact() {
         let dir = tmp_dir("roundtrip");
-        let mut log = RunLog::create(&dir, 0xABCD, 77).unwrap();
-        // fresh log: loadable, empty
+        let mut log = RunLog::create(&dir, 0xABCD, 77, "{\"dataset\":\"tiny\"}").unwrap();
+        // fresh log: loadable, empty, config carried
         let l0 = RunLog::load(&dir).unwrap().unwrap();
         assert_eq!((l0.config_hash, l0.seed), (0xABCD, 77));
+        assert_eq!(l0.config_json.as_deref(), Some("{\"dataset\":\"tiny\"}"));
+        assert!(!l0.finished);
         assert!(l0.snapshot.is_none() && l0.records.is_empty() && l0.journal.is_empty());
 
         for r in [0usize, 1, 2, 3] {
@@ -432,6 +511,9 @@ mod tests {
             assert_eq!(r.round, i);
             assert_eq!(r.residual.to_bits(), rec(i).residual.to_bits());
             assert_eq!(r.bytes_up, rec(i).bytes_up);
+            assert_eq!(r.compute_secs.to_bits(), rec(i).compute_secs.to_bits());
+            assert_eq!(r.encode_secs.to_bits(), rec(i).encode_secs.to_bits());
+            assert_eq!(r.wire_secs.to_bits(), rec(i).wire_secs.to_bits());
         }
         assert_eq!(
             l.journal,
@@ -444,7 +526,7 @@ mod tests {
     #[test]
     fn reopen_truncates_the_journal_and_next_commit_rotates() {
         let dir = tmp_dir("reopen");
-        let mut log = RunLog::create(&dir, 1, 2).unwrap();
+        let mut log = RunLog::create(&dir, 1, 2, "").unwrap();
         log.record(&rec(0));
         log.record(&rec(2));
         log.commit(&snap(2)).unwrap();
@@ -478,7 +560,7 @@ mod tests {
     #[test]
     fn corruption_is_detected_and_torn_tail_tolerated() {
         let dir = tmp_dir("corrupt");
-        let mut log = RunLog::create(&dir, 5, 6).unwrap();
+        let mut log = RunLog::create(&dir, 5, 6, "").unwrap();
         log.record(&rec(0));
         log.commit(&snap(0)).unwrap();
         log.append_downlink(1, &[1, 1, 1]).unwrap();
@@ -533,6 +615,35 @@ mod tests {
 
         // missing dir → clean None
         assert!(RunLog::load(&tmp_dir("never_created")).unwrap().is_none());
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn finish_persists_full_history_and_marks_complete() {
+        let dir = tmp_dir("finish");
+        let mut log = RunLog::create(&dir, 0xF1, 9, "{\"seed\":9}").unwrap();
+        for r in 0..5usize {
+            log.record(&rec(r));
+        }
+        // commit mid-run: only rounds ≤ 2 are persisted by the rotation
+        log.commit(&snap(2)).unwrap();
+        log.append_downlink(3, &[0xD3]).unwrap();
+        log.journal.flush().unwrap();
+        let mid = RunLog::load(&dir).unwrap().unwrap();
+        assert_eq!(mid.records.len(), 3);
+        assert!(!mid.finished);
+
+        // finish(): every record is persisted, past the snapshot round too,
+        // the completion marker lands, and the journal is truncated
+        log.finish().unwrap();
+        let l = RunLog::load(&dir).unwrap().unwrap();
+        assert!(l.finished, "RL_FINISHED marker must survive a reload");
+        assert_eq!(l.records.len(), 5, "finish persists records past the snapshot");
+        assert_eq!(l.records[4].round, 4);
+        assert_eq!(l.config_json.as_deref(), Some("{\"seed\":9}"));
+        let s = l.snapshot.expect("last committed snapshot survives finish");
+        assert_eq!(s.round, 2);
+        assert!(l.journal.is_empty(), "finish truncates the journal");
         fs::remove_dir_all(&dir).ok();
     }
 

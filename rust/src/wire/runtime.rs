@@ -131,6 +131,29 @@
 //! [`FaultPlan`](crate::wire::fault::FaultPlan) (`--fault-plan`); the
 //! chaos matrix in `tests/chaos_matrix.rs` drives each recovery path and
 //! asserts bitwise identity against the sim driver.
+//!
+//! # Observability: the `/metrics` HTTP listener
+//!
+//! With `--metrics-addr HOST:PORT` (`wire.metrics_addr`) the server
+//! multiplexes a second listening socket onto the **same** poller loop
+//! that drives worker traffic: no extra thread touches server state, so
+//! the lock-free [`Registry`](crate::obs::Registry) the round loop
+//! writes (rounds, per-worker liveness, journal depth, CRC errors,
+//! rejoin/replay counts, and a seqlock-guarded copy of the latest
+//! [`RoundRecord`]) can be scraped at any moment without perturbing the
+//! trajectory. Token space keeps the two listeners apart: worker
+//! connections use small slot indices, the worker listener is
+//! `u64::MAX`, the metrics listener
+//! [`METRICS_LISTENER_TOKEN`](crate::obs::METRICS_LISTENER_TOKEN)
+//! (`u64::MAX - 1`), and HTTP connections live at
+//! [`HTTP_CONN_TOKEN_BASE`](crate::obs::HTTP_CONN_TOKEN_BASE) and up.
+//! `pump` routes those tokens to [`HttpEndpoint`](crate::obs::HttpEndpoint)
+//! before the worker dispatch, so a scrape costs one poll wake-up.
+//! `GET /metrics` serves Prometheus text format; `GET /healthz` answers
+//! `ok` while the loop is alive. The byte counters in the round block
+//! come from the same cumulative totals the record stream is cut from —
+//! `smx_bytes_up_total` agrees exactly with the `bytes_up` CSV column at
+//! every recorded round (asserted by `tests/obs_endpoint.rs`).
 
 use crate::config::ExperimentConfig;
 use crate::coordinator::session::{Tick, Ticker};
@@ -141,6 +164,7 @@ use crate::coordinator::{
 use crate::experiments::runner::{self, Prepared};
 use crate::linalg::vector;
 use crate::methods::{build, Downlink, Method, MethodSpec, ServerAlgo, Uplink, WorkerAlgo};
+use crate::obs::{HttpEndpoint, HTTP_CONN_TOKEN_BASE, METRICS_LISTENER_TOKEN};
 use crate::objective::Smoothness;
 use crate::runtime::native::NativeEngine;
 use crate::runtime::{EngineKind, GradEngine};
@@ -155,6 +179,7 @@ use anyhow::{bail, ensure, Context, Result};
 use std::collections::VecDeque;
 use std::net::TcpListener;
 use std::path::Path;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Per-round communication totals — the shared accounting struct, re-
@@ -301,7 +326,7 @@ pub fn run_distributed_observed(
             acc.accumulate(&totals);
 
             let res = vector::dist2(server.iterate(), x_star) / denom;
-            match ticker.tick(round, res, &acc, server.iterate(), obs) {
+            match ticker.tick(round, res, &acc, server.iterate(), &phases, obs) {
                 Tick::Continue => {}
                 Tick::ReachedTarget => {
                     reached = true;
@@ -895,6 +920,14 @@ struct ElasticServer {
     /// bytes held by the in-memory journal (bounded; see
     /// [`MAX_JOURNAL_BYTES`])
     journal_bytes: usize,
+    /// lock-free metrics fed by every loop below; shared with the
+    /// `/metrics` endpoint and any `--watch` dashboard. Always present
+    /// (a zero-shard placeholder when observability is off) so the hot
+    /// paths stay branch-free.
+    registry: Arc<crate::obs::Registry>,
+    /// `--metrics-addr` HTTP endpoint multiplexed onto `self.poller`;
+    /// see the module docs
+    metrics_http: Option<HttpEndpoint>,
 }
 
 /// Hard cap on the in-memory replay journal. Without checkpoints the
@@ -993,6 +1026,8 @@ impl ElasticServer {
             resume_mode: false,
             resume_check: VecDeque::new(),
             journal_bytes: 0,
+            registry: Arc::new(crate::obs::Registry::new(0)),
+            metrics_http: None,
         })
     }
 
@@ -1013,6 +1048,7 @@ impl ElasticServer {
                 Ok((stream, peer)) => {
                     let tcp = Tcp::new(stream).context("wrapping accepted stream")?;
                     crate::info!("wire", "accepted connection from {peer}");
+                    self.registry.worker_connects.inc();
                     self.place(tcp)?;
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return Ok(()),
@@ -1132,6 +1168,10 @@ impl ElasticServer {
             return;
         };
         let _ = self.poller.deregister(fd_of_tcp(&conn.tcp), tok as u64);
+        self.registry.worker_deaths.inc();
+        for &s in &conn.shards {
+            self.registry.set_live(s, false);
+        }
         crate::info!(
             "wire",
             "worker {} ({} shard(s)) lost: {why}",
@@ -1173,6 +1213,13 @@ impl ElasticServer {
         let count = self.journal.len();
         let mut announce = Vec::new();
         let restore = self.snapshot.is_some();
+        if adopt.is_none() {
+            self.registry.worker_rejoins.inc();
+        }
+        self.registry.journal_replays.add(count as u64);
+        if restore {
+            self.registry.state_restores.inc();
+        }
         match adopt {
             Some(shards) => codec::put_adopt(&mut announce, shards, count, restore),
             None => codec::put_replay(&mut announce, count, restore),
@@ -1233,6 +1280,9 @@ impl ElasticServer {
             }
         }
         self.snapshot = Some((round, blobs));
+        self.registry.snapshots_committed.inc();
+        self.registry.journal_rounds.set(self.journal.len() as u64);
+        self.registry.journal_bytes.set(self.journal_bytes as u64);
         crate::info!(
             "wire",
             "snapshot committed at round {round}; journal truncated to {} frame(s)",
@@ -1293,6 +1343,14 @@ impl ElasticServer {
             match got {
                 Ok(false) => return Ok(()),
                 Err(e) => {
+                    // a CRC-trailer mismatch surfaces as InvalidData; its
+                    // count is split out so a flaky link is diagnosable
+                    // from /metrics without grepping logs
+                    if e.kind() == std::io::ErrorKind::InvalidData {
+                        self.registry.crc_errors.inc();
+                    } else {
+                        self.registry.conn_errors.inc();
+                    }
                     self.mark_dead(tok, &format!("connection error: {e}"));
                     return Ok(());
                 }
@@ -1312,6 +1370,9 @@ impl ElasticServer {
                         Phase::Live => bail!("worker {} acked twice", conn.peer),
                     };
                     conn.phase = Phase::Live;
+                    for &s in &conn.shards {
+                        self.registry.set_live(s, true);
+                    }
                     crate::info!("wire", "worker {} is live", conn.peer);
                     if replay && (!self.journal.is_empty() || self.snapshot.is_some()) {
                         self.send_catchup(tok, None);
@@ -1433,6 +1494,16 @@ impl ElasticServer {
         // test for (one nonblocking accept)
         self.accept_pending()?;
         for &tok in events.iter().filter(|&&t| t != LISTENER_TOKEN) {
+            // HTTP scrape traffic shares the poller but never reaches the
+            // worker dispatch: the token space is partitioned (see the
+            // module docs) and endpoint failures are absorbed — a broken
+            // scraper must not kill the run
+            if tok == METRICS_LISTENER_TOKEN || tok >= HTTP_CONN_TOKEN_BASE {
+                if let Some(ep) = self.metrics_http.as_mut() {
+                    ep.on_token(tok, &mut self.poller);
+                }
+                continue;
+            }
             self.drain_conn(tok as usize, gathering)?;
         }
         self.events = events;
@@ -1487,11 +1558,14 @@ impl ElasticServer {
         server: &mut dyn ServerAlgo,
         server_rng: &mut Rng,
         float_bits: u32,
+        phases: &mut PhaseTimer,
     ) -> Result<RoundTotals> {
         let mut t = RoundTotals::default();
+        let t_down = Instant::now();
         server.downlink_into(&mut self.st.down);
         self.st.down_buf.clear();
         codec::put_downlink(&mut self.st.down_buf, &self.st.down, self.payload);
+        phases.add("server_downlink", t_down.elapsed());
 
         // resume verification: the downlink regenerated for this round
         // must byte-equal the copy the crashed run persisted, or the
@@ -1519,6 +1593,8 @@ impl ElasticServer {
                 MAX_JOURNAL_BYTES / (1024 * 1024)
             );
             self.journal.push(self.st.down_buf.clone());
+            self.registry.journal_rounds.set(self.journal.len() as u64);
+            self.registry.journal_bytes.set(self.journal_bytes as u64);
         }
         if let Some(rl) = &mut self.runlog {
             rl.append_downlink(round as u64, &self.st.down_buf)
@@ -1570,16 +1646,20 @@ impl ElasticServer {
 
         // gather: complete when every shard's uplink (from its *current*
         // owner) has been applied to the slot table
+        let t_wait = Instant::now();
         while !self.st.seen.iter().all(|&s| s) {
             self.pump(true)?;
         }
+        phases.add("wire_wait", t_wait.elapsed());
 
         for i in 0..self.n_shards {
             t.coords_up += self.st.ups[i].coords() as u64;
             t.bits_up += crate::coordinator::bits_of(&self.st.ups[i], self.dim, float_bits);
             t.bytes_up += self.st.up_bytes[i];
         }
+        let t_apply = Instant::now();
         server.apply(&self.st.ups, server_rng);
+        phases.add("server_apply", t_apply.elapsed());
 
         // checkpoint cadence: ask every live worker for its shards' state
         // as of the end of this round. Workers answer before touching the
@@ -1632,6 +1712,9 @@ impl ElasticServer {
             Some(rs) => {
                 acc = rs.acc;
                 let stopped = ticker.replay(&rs.records, obs);
+                if let Some(last) = rs.records.last() {
+                    self.registry.round.write(last);
+                }
                 (rs.round, rs.server_rng, stopped)
             }
             None => {
@@ -1639,6 +1722,9 @@ impl ElasticServer {
                 if let Some(rl) = &mut self.runlog {
                     rl.record(&rec0);
                 }
+                // seed the scrapeable round block so /metrics shows the
+                // starting residual before the first recorded round lands
+                self.registry.round.write(&rec0);
                 (0, Rng::new(cfg.seed).derive(u64::MAX), stopped)
             }
         };
@@ -1648,9 +1734,13 @@ impl ElasticServer {
         if !stopped {
             for round in (start_round + 1)..=cfg.max_rounds {
                 rounds_run = round;
-                let totals = phases.time("dist_round", || {
-                    self.round(round, server, &mut server_rng, cfg.float_bits)
-                });
+                // timed explicitly (not via `phases.time`) because
+                // `round` itself records sub-spans into the same timer
+                let t_round = Instant::now();
+                let totals =
+                    self.round(round, server, &mut server_rng, cfg.float_bits, &mut phases);
+                let round_elapsed = t_round.elapsed();
+                phases.add("dist_round", round_elapsed);
                 let totals = match totals {
                     Ok(t) => t,
                     Err(e) => {
@@ -1658,6 +1748,10 @@ impl ElasticServer {
                         break;
                     }
                 };
+                self.registry.rounds.inc();
+                self.registry
+                    .round_duration
+                    .observe(round_elapsed.as_secs_f64());
                 acc.accumulate(&totals);
 
                 // stage the server-side snapshot cut *now*, while the state
@@ -1682,7 +1776,13 @@ impl ElasticServer {
 
                 let res = vector::dist2(server.iterate(), x_star) / denom;
                 let (tick, rec) =
-                    ticker.tick_with_record(round, res, &acc, server.iterate(), obs);
+                    ticker.tick_with_record(round, res, &acc, server.iterate(), &phases, obs);
+                if let Some(rec) = rec.as_ref() {
+                    // the block and the record are cut from the same
+                    // `acc`, giving the exact-equality guarantee between
+                    // /metrics byte counters and the CSV columns
+                    self.registry.round.write(rec);
+                }
                 if let (Some(rl), Some(rec)) = (self.runlog.as_mut(), rec.as_ref()) {
                     rl.record(rec);
                 }
@@ -1716,6 +1816,12 @@ impl ElasticServer {
         self.shutdown();
         if let Some(e) = failure {
             return Err(e);
+        }
+        // clean completion: seal the run log (full history into the base,
+        // finished marker, journal truncated). Failure/kill paths return
+        // above, leaving the log resumable.
+        if let Some(rl) = &mut self.runlog {
+            rl.finish().context("run log: finishing")?;
         }
         Ok(RunOutcome {
             method: name.to_string(),
@@ -1753,6 +1859,7 @@ pub(crate) fn serve_observed(
     spec: &MethodSpec,
     prep: &Prepared,
     run_cfg: &RunConfig,
+    metrics: Option<Arc<crate::obs::Registry>>,
     obs: &mut dyn RoundObserver,
 ) -> Result<RunOutcome> {
     let method_name = spec.name.clone();
@@ -1856,6 +1963,13 @@ pub(crate) fn serve_observed(
         match RunLog::load(dir).with_context(|| format!("run log: loading {}", dir.display()))? {
             Some(loaded) => {
                 ensure!(
+                    !loaded.finished,
+                    "run log in {} is a finished run; refusing to overwrite or \
+                     resume it (inspect with `smx runs show`, or point \
+                     --run-dir at a fresh directory)",
+                    dir.display()
+                );
+                ensure!(
                     loaded.config_hash == chash,
                     "run log in {} belongs to a different experiment \
                      (config identity {:#018x}, ours {:#018x}); refusing to resume",
@@ -1912,8 +2026,10 @@ pub(crate) fn serve_observed(
                     Some(RunLog::reopen(dir, &loaded).context("run log: reopening")?);
             }
             None => {
+                // the stored config JSON is what lets `smx runs resume`
+                // stand the run back up without the original command line
                 runlog_handle = Some(
-                    RunLog::create(dir, chash, cfg.seed)
+                    RunLog::create(dir, chash, cfg.seed, &cfg.to_json().to_string())
                         .with_context(|| format!("run log: creating {}", dir.display()))?,
                 );
             }
@@ -1934,6 +2050,20 @@ pub(crate) fn serve_observed(
     es.fault_plan = fault_plan;
     es.runlog = runlog_handle;
     es.resume_check = resume_check;
+    // observability: adopt the Session's registry (sized per shard) or
+    // make one if only --metrics-addr asked for it, then multiplex the
+    // HTTP listener onto the server's poller
+    es.registry = metrics.unwrap_or_else(|| Arc::new(crate::obs::Registry::new(n)));
+    if let Some(addr) = cfg.wire.metrics_addr.as_deref() {
+        let ep = HttpEndpoint::bind(addr, es.registry.clone())
+            .with_context(|| format!("binding metrics endpoint {addr}"))?;
+        ep.register(&mut es.poller)
+            .context("registering metrics listener")?;
+        if let Ok(local) = ep.local_addr() {
+            crate::info!("wire", "metrics endpoint on http://{local}/metrics");
+        }
+        es.metrics_http = Some(ep);
+    }
     if let Some((round, blobs)) = resume_snapshot {
         // initial assignments become rejoins: every connecting worker is
         // restored to the snapshot round over the existing catch-up path
@@ -1991,7 +2121,7 @@ pub fn serve_on(listener: TcpListener, cfg: &ExperimentConfig, check_sim: bool) 
         );
     }
     let prep = runner::prepare(cfg)?;
-    let result = Session::from_config(cfg)
+    let mut session = Session::from_config(cfg)
         .prepared(&prep)
         .driver(Driver::Distributed {
             transport: DistTransport::Tcp {
@@ -1999,8 +2129,17 @@ pub fn serve_on(listener: TcpListener, cfg: &ExperimentConfig, check_sim: bool) 
                 workers: cfg.wire.workers,
             },
         })
-        .tcp_listener(listener)
-        .run()?;
+        .tcp_listener(listener);
+    // one registry serves both consumers: the /metrics endpoint (inside
+    // serve_observed) and the --watch dashboard's liveness row
+    if cfg.watch || cfg.wire.metrics_addr.is_some() {
+        let reg = Arc::new(crate::obs::Registry::new(prep.shards.len()));
+        if cfg.watch {
+            session = session.observer(crate::obs::WatchObserver::new().registry(reg.clone()));
+        }
+        session = session.metrics_registry(reg);
+    }
+    let result = session.run()?;
 
     let last = result.records.last().unwrap();
     println!(

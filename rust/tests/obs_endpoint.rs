@@ -1,0 +1,274 @@
+//! Observability-layer acceptance tests.
+//!
+//! * A live `/metrics` scrape during a loopback run must agree
+//!   **exactly** with the record stream: `smx_bytes_up_total` equals the
+//!   `bytes_up` column of the record the scrape observed, and the rounds
+//!   counter is monotone across scrapes. Both are cut from the same
+//!   cumulative totals, so equality is exact, not approximate.
+//! * `smx runs diff` golden: two runs of the same config + seed are
+//!   `identical` on the deterministic columns even though their wall
+//!   times differ; a different seed diverges.
+//! * `--watch` is non-perturbing: attaching a [`WatchObserver`] leaves
+//!   the trajectory bitwise unchanged.
+
+use smx::coordinator::{
+    DistTransport, Driver, EngineFactory, ObserverControl, RoundObserver, RoundRecord, RunConfig,
+    RunResult, Session,
+};
+use smx::data::synth;
+use smx::methods::MethodSpec;
+use smx::obs::http::http_get;
+use smx::obs::runs::{diff_runs, summarize, DiffOutcome};
+use smx::obs::{HttpEndpoint, MetricsObserver, Registry, WatchObserver};
+use smx::objective::Smoothness;
+use smx::runtime::native::NativeEngine;
+use smx::runtime::GradEngine;
+use smx::sampling::SamplingKind;
+use smx::wire::runlog::RunLog;
+use std::cell::RefCell;
+use std::io::{self, Write};
+use std::net::SocketAddr;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+fn bits(xs: &[f64]) -> Vec<u64> {
+    xs.iter().map(|v| v.to_bits()).collect()
+}
+
+struct Cell {
+    sm: Smoothness,
+    x_star: Vec<f64>,
+    mu: f64,
+    factory: EngineFactory,
+}
+
+impl Cell {
+    fn new(n_shards: usize) -> Cell {
+        let mu = 1e-3;
+        let ds = synth::generate(&synth::tiny_spec(), 11);
+        let (_, shards) = ds.prepare(n_shards, 11);
+        let sm = Smoothness::build(&shards, mu);
+        let x_star = vec![0.0; sm.dim];
+        let factory: EngineFactory = Arc::new(move |i| {
+            Box::new(NativeEngine::from_shard(&shards[i], mu)) as Box<dyn GradEngine>
+        });
+        Cell {
+            sm,
+            x_star,
+            mu,
+            factory,
+        }
+    }
+
+    fn spec(&self) -> MethodSpec {
+        MethodSpec::new(
+            "diana+",
+            2.0,
+            SamplingKind::Uniform,
+            self.mu,
+            vec![0.0; self.sm.dim],
+        )
+    }
+
+    fn session(&self, cfg: &RunConfig) -> Session<'_> {
+        Session::new(self.spec())
+            .smoothness(&self.sm)
+            .x_star(&self.x_star)
+            .driver(Driver::Distributed {
+                transport: DistTransport::Loopback { procs: 2 },
+            })
+            .run_config(cfg.clone())
+            .engine_factory(self.factory.clone())
+    }
+}
+
+fn cfg_with_seed(seed: u64) -> RunConfig {
+    RunConfig {
+        max_rounds: 20,
+        record_every: 5,
+        seed,
+        ..Default::default()
+    }
+}
+
+fn metric_u64(body: &str, name: &str) -> Option<u64> {
+    body.lines()
+        .find_map(|l| l.strip_prefix(name).and_then(|rest| rest.strip_prefix(' ')))
+        .and_then(|v| v.trim().parse().ok())
+}
+
+/// Observer that scrapes the live endpoint on every recorded round and
+/// keeps `(record, scraped bytes_up, scraped rounds_total)` samples.
+struct Scraper<'a> {
+    addr: SocketAddr,
+    samples: &'a RefCell<Vec<(RoundRecord, u64, u64)>>,
+}
+
+impl RoundObserver for Scraper<'_> {
+    fn on_round(&mut self, rec: &RoundRecord) -> ObserverControl {
+        let (head, body) = http_get(self.addr, "/metrics").expect("scrape");
+        assert!(head.starts_with("HTTP/1.1 200"), "scrape head: {head}");
+        let bytes_up = metric_u64(&body, "smx_bytes_up_total").expect("bytes_up series");
+        let rounds = metric_u64(&body, "smx_rounds_total").expect("rounds series");
+        self.samples.borrow_mut().push((rec.clone(), bytes_up, rounds));
+        ObserverControl::Continue
+    }
+}
+
+#[test]
+fn live_scrapes_agree_exactly_with_the_record_stream() {
+    let cell = Cell::new(4);
+    let registry = Arc::new(Registry::new(4));
+    let server = HttpEndpoint::spawn("127.0.0.1:0", registry.clone()).expect("spawn endpoint");
+    let addr = server.addr();
+
+    let (head, body) = http_get(addr, "/healthz").expect("healthz");
+    assert!(head.starts_with("HTTP/1.1 200"));
+    assert_eq!(body, "ok\n");
+
+    let samples = RefCell::new(Vec::new());
+    let cfg = cfg_with_seed(11);
+    // order matters: the MetricsObserver publishes the record into the
+    // registry, then the scraper reads it back over real HTTP
+    let result = cell
+        .session(&cfg)
+        .observer(MetricsObserver::new(registry.clone()))
+        .observer(Scraper {
+            addr,
+            samples: &samples,
+        })
+        .run()
+        .expect("observed run");
+
+    let samples = samples.into_inner();
+    assert_eq!(
+        samples.len(),
+        result.records.len(),
+        "one scrape per recorded round"
+    );
+    let mut prev_rounds = 0u64;
+    for (rec, scraped_bytes_up, scraped_rounds) in &samples {
+        // exact equality: the round block mirrors the record that was
+        // cut from the same cumulative totals — not a near-miss check
+        assert_eq!(
+            *scraped_bytes_up, rec.bytes_up,
+            "round {}: /metrics bytes_up diverged from the record stream",
+            rec.round
+        );
+        assert!(
+            *scraped_rounds >= prev_rounds,
+            "rounds counter went backwards ({prev_rounds} -> {scraped_rounds})"
+        );
+        prev_rounds = *scraped_rounds;
+    }
+    let (last, _, last_rounds) = samples.last().expect("non-empty");
+    assert_eq!(last.round, result.records.last().unwrap().round);
+    assert_eq!(
+        *last_rounds as usize, last.round,
+        "rounds counter tracks the recorded round"
+    );
+
+    // one more scrape after the run: the final state stays readable
+    let (_, body) = http_get(addr, "/metrics").expect("final scrape");
+    assert_eq!(
+        metric_u64(&body, "smx_bytes_up_total"),
+        Some(result.records.last().unwrap().bytes_up)
+    );
+    assert_eq!(
+        metric_u64(&body, "smx_scrapes_total"),
+        Some(samples.len() as u64 + 1),
+        "every /metrics hit counted"
+    );
+    server.stop();
+}
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("smx_obs_endpoint_{name}"));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn record_run(dir: &Path, seed: u64, result: &RunResult) {
+    let mut log = RunLog::create(dir, 0xD1FF, seed, "").expect("create run log");
+    for rec in &result.records {
+        log.record(rec);
+    }
+    log.finish().expect("finish run log");
+}
+
+#[test]
+fn runs_diff_is_golden_on_equal_seeds_and_splits_on_different_ones() {
+    let cell = Cell::new(4);
+    let (a, b, c) = (tmp_dir("seed11_a"), tmp_dir("seed11_b"), tmp_dir("seed12"));
+    // two independent runs, same seed: wall/phase timings differ for
+    // sure, the deterministic columns must not
+    record_run(&a, 11, &cell.session(&cfg_with_seed(11)).run().unwrap());
+    record_run(&b, 11, &cell.session(&cfg_with_seed(11)).run().unwrap());
+    record_run(&c, 12, &cell.session(&cfg_with_seed(12)).run().unwrap());
+
+    match diff_runs(&a, &b).expect("diff a b") {
+        DiffOutcome::Identical { records } => assert!(records > 0, "trivial golden run"),
+        other => panic!("equal-seed runs must diff as identical, got {other:?}"),
+    }
+    match diff_runs(&a, &c).expect("diff a c") {
+        DiffOutcome::Diverged { round, .. } => {
+            assert!(round > 0, "round 0 is seed-independent (residual 1.0)")
+        }
+        other => panic!("different-seed runs must diverge, got {other:?}"),
+    }
+
+    // the artifact store sees what the run log wrote
+    let s = summarize(&a).expect("summarize");
+    assert!(s.finished);
+    assert_eq!(s.seed, 11);
+    assert_eq!(s.records, 5, "20 rounds at record_every=5, plus round 0");
+}
+
+/// `Write` into a shared buffer (the observer owns its sink; the test
+/// keeps the other handle).
+struct SharedBuf(Arc<Mutex<Vec<u8>>>);
+impl Write for SharedBuf {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        self.0.lock().unwrap().extend_from_slice(buf);
+        Ok(buf.len())
+    }
+    fn flush(&mut self) -> io::Result<()> {
+        Ok(())
+    }
+}
+
+#[test]
+fn watch_observer_is_bitwise_non_perturbing() {
+    let cell = Cell::new(4);
+    let cfg = cfg_with_seed(11);
+    let plain = cell.session(&cfg).run().expect("plain run");
+
+    let sink = Arc::new(Mutex::new(Vec::new()));
+    let registry = Arc::new(Registry::new(4));
+    let watched = cell
+        .session(&cfg)
+        .observer(
+            WatchObserver::to_sink(Box::new(SharedBuf(sink.clone()))).registry(registry),
+        )
+        .run()
+        .expect("watched run");
+
+    assert_eq!(
+        bits(&plain.final_x),
+        bits(&watched.final_x),
+        "--watch perturbed the trajectory"
+    );
+    assert_eq!(plain.records.len(), watched.records.len());
+    for (p, w) in plain.records.iter().zip(&watched.records) {
+        assert_eq!(p.round, w.round);
+        assert_eq!(p.residual.to_bits(), w.residual.to_bits());
+        assert_eq!(p.bytes_up, w.bytes_up);
+        assert_eq!(p.coords_up, w.coords_up);
+    }
+    let drawn = sink.lock().unwrap();
+    let text = String::from_utf8_lossy(&drawn);
+    assert!(
+        text.contains("smx watch"),
+        "dashboard never drew: {text:?}"
+    );
+}

@@ -1,5 +1,5 @@
 #!/usr/bin/env bash
-# Multi-process smoke test for the wire subsystem, five legs:
+# Multi-process smoke test for the wire subsystem, six legs:
 #
 #  1. steady state — one `smx serve` coordinator and two `smx worker`
 #     processes on the synthetic tiny dataset (8 shards, 4 per worker
@@ -23,7 +23,12 @@
 #  5. --driver distributed — the same protocol through the `Session`
 #     front door from the plain `smx train` CLI (loopback transports, one
 #     process), asserted bitwise against a `--driver sim` run by diffing
-#     the residual-curve CSVs.
+#     the residual-curve CSVs;
+#  6. observability — serve again with `--metrics-addr` and `--run-dir`,
+#     scrape `GET /metrics` and `GET /healthz` off the live server (the
+#     endpoint shares the serve loop's poller), assert known series are
+#     present, then walk the finished artifact store with `smx runs
+#     list`/`show`.
 #
 # The serve legs pass `--check-sim`, which makes the server re-run the
 # identical configuration through the in-process sim driver and exit
@@ -153,10 +158,78 @@ restart_leg() {
   echo "distributed smoke OK (restart leg: killed at round 10, resumed bitwise identical)"
 }
 
+# Leg 6: the serve topology again, with the Prometheus endpoint live and
+# a run dir recording the stream. The endpoint is up from the moment
+# serve binds (it answers while serve still waits in accept() for the
+# workers), so the scrape loop below is guaranteed a window; it keeps
+# retrying until the listener answers or the server exits.
+metrics_leg() {
+  local addr=$1
+  local maddr=$2
+  local run_dir="$OUT/metrics_runlog"
+  rm -rf "$run_dir"
+  timeout "${SMOKE_TIMEOUT:-300}" "$BIN" serve --dataset tiny --workers 8 --methods diana+ \
+    --sampling importance-diana --tau 2 --max-rounds 30 \
+    --listen "$addr" --wire-workers 2 --out-dir "$OUT" --check-sim \
+    --run-dir "$run_dir" --metrics-addr "$maddr" &
+  local serve_pid=$!
+  "$BIN" worker --connect "$addr" &
+  local w1=$!
+  "$BIN" worker --connect "$addr" &
+  local w2=$!
+
+  local health="" scraped=""
+  for _ in {1..100}; do
+    if health=$(curl -fsS --max-time 2 "http://$maddr/healthz" 2>/dev/null) &&
+       scraped=$(curl -fsS --max-time 2 "http://$maddr/metrics" 2>/dev/null); then
+      break
+    fi
+    kill -0 "$serve_pid" 2>/dev/null || break
+    sleep 0.1
+  done
+
+  local rc=0
+  wait "$serve_pid" || rc=1
+  local i=1
+  for pid in "$w1" "$w2"; do
+    wait "$pid" || { echo "[metrics] worker $i failed" >&2; rc=1; }
+    i=$((i + 1))
+  done
+  if [ "$rc" -ne 0 ]; then
+    echo "distributed smoke FAILED (metrics leg: run)" >&2
+    exit 1
+  fi
+
+  if [ "$health" != "ok" ]; then
+    echo "distributed smoke FAILED (metrics leg: /healthz answered '$health', wanted 'ok')" >&2
+    exit 1
+  fi
+  for series in smx_rounds_total smx_worker_connects_total smx_workers_live; do
+    if ! grep -q "^$series " <<<"$scraped"; then
+      echo "distributed smoke FAILED (metrics leg: /metrics is missing the $series series)" >&2
+      echo "$scraped" >&2
+      exit 1
+    fi
+  done
+
+  # the finished run is now an artifact: the store must enumerate and
+  # open it
+  if ! "$BIN" runs list "$OUT" | grep -q "metrics_runlog"; then
+    echo "distributed smoke FAILED (metrics leg: smx runs list does not see $run_dir)" >&2
+    exit 1
+  fi
+  if ! "$BIN" runs show "$run_dir" >/dev/null; then
+    echo "distributed smoke FAILED (metrics leg: smx runs show $run_dir)" >&2
+    exit 1
+  fi
+  echo "distributed smoke OK (metrics leg: live scrape + runs list/show)"
+}
+
 run_leg steady "127.0.0.1:$PORT"
 run_leg chaos "127.0.0.1:$((PORT + 1))" --worker-timeout 60
 run_leg snapshot "127.0.0.1:$((PORT + 2))" --worker-timeout 60 --checkpoint-every 3
 restart_leg "127.0.0.1:$((PORT + 3))"
+metrics_leg "127.0.0.1:$((PORT + 4))" "127.0.0.1:$((PORT + 5))"
 
 # --driver distributed: the Session front door from the plain train CLI.
 # The wire protocol runs over loopback inside one process; its residual
