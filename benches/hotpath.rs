@@ -9,7 +9,8 @@
 //!   sampling: Bernoulli draw + water-filling solve
 //!   wire:    codec encode/decode (f64/f32/q8 payloads, delta-varint idx)
 //!   rounds:  dcgd+/diana+ end-to-end, buffer-reusing vs pre-opt
-//!            allocating, and distributed(loopback) across worker threads
+//!            allocating, dcgd under the sa-quant compressor, and
+//!            distributed(loopback) across worker threads
 //!
 //!     cargo bench --bench hotpath
 //!
@@ -270,13 +271,13 @@ fn main() -> anyhow::Result<()> {
                 300,
                 || {
                     enc.clear();
-                    wcodec::put_uplink(&mut enc, black_box(&up), 0, p);
+                    wcodec::put_uplink(&mut enc, black_box(&up), 0, p).unwrap();
                     black_box(enc.len());
                 },
             ));
         }
         enc.clear();
-        wcodec::put_uplink(&mut enc, &up, 0, Payload::F64);
+        wcodec::put_uplink(&mut enc, &up, 0, Payload::F64).unwrap();
         let mut dec = Uplink::default();
         rows.push(bench("codec decode uplink top-128 d=7129 (f64)", 300, || {
             black_box(wcodec::get_uplink(black_box(&enc), 7129, &mut dec).unwrap());
@@ -289,7 +290,7 @@ fn main() -> anyhow::Result<()> {
         let mut dbuf = Vec::new();
         rows.push(bench("codec encode dense downlink d=123 (f64)", 300, || {
             dbuf.clear();
-            wcodec::put_downlink(&mut dbuf, black_box(&down), Payload::F64);
+            wcodec::put_downlink(&mut dbuf, black_box(&down), Payload::F64).unwrap();
         }));
         let mut ddec = smx::methods::Downlink::Init { x: Vec::new() };
         rows.push(bench("codec decode dense downlink d=123 (f64)", 300, || {
@@ -358,6 +359,35 @@ fn main() -> anyhow::Result<()> {
                 method2.server.apply(&ups, &mut server_rng2);
             },
         ));
+    }
+
+    // smoothness-aware quantization round: plain dcgd with the sa-quant
+    // uplink compressor (diag weighting, s=4 levels). The margin against
+    // "round e2e dcgd+ (buffer-reusing, n=8)" is the per-round price of
+    // quantize+dequantize relative to the matrix-aware sketch.
+    {
+        let mut mspec =
+            MethodSpec::new("dcgd", 4.0, SamplingKind::Uniform, 1e-3, vec![0.0; sm.dim]);
+        mspec.compressor = smx::compress::CompressorKind::SaQuant;
+        mspec.sa_levels = 4;
+        let mut method = build(&mspec, &sm)?;
+        let mut engines: Vec<Box<dyn GradEngine>> = shards
+            .iter()
+            .map(|s| Box::new(NativeEngine::from_shard(s, 1e-3)) as Box<dyn GradEngine>)
+            .collect();
+        let base = Rng::new(1);
+        let mut server_rng = base.derive(u64::MAX);
+        let mut worker_rngs: Vec<Rng> = (0..shards.len()).map(|i| base.derive(i as u64)).collect();
+        let mut bufs = RoundBuffers::new(shards.len());
+        rows.push(bench("round e2e dcgd sa-quant (buffer-reusing, n=8)", 400, || {
+            sync_round(
+                &mut method,
+                &mut engines,
+                &mut server_rng,
+                &mut worker_rngs,
+                &mut bufs,
+            );
+        }));
     }
 
     // observability cost: the identical buffer-reusing diana+ round with

@@ -1,13 +1,16 @@
 //! Compression: sparse messages with communication accounting, the
 //! standard diagonal sketch, the paper's matrix-smoothness-aware protocol
-//! (Definition 3 / eq. 7), greedy top-k, and the Appendix-C lower-bound
-//! laboratory.
+//! (Definition 3 / eq. 7), smoothness-aware quantization (the sequel
+//! paper, arXiv:2106.03524), greedy top-k, and the Appendix-C
+//! lower-bound laboratory.
 
 pub mod lowerbound;
 pub mod message;
 pub mod ops;
+pub mod quant;
 pub mod topk;
 
 pub use message::{index_bits, CommStats, SparseMsg};
 pub use ops::{sketch_apply, sketch_compress, MatrixAware};
+pub use quant::{CompressorKind, QuantWeighting, SaQuant, UplinkCompressor, UplinkDecompressor};
 pub use topk::{topk_alpha, topk_compress};

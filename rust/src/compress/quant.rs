@@ -1,0 +1,479 @@
+//! Smoothness-aware stochastic quantization (Wang, Safaryan, Richtárik —
+//! arXiv:2106.03524), the direct sequel to the source paper's
+//! matrix-aware *sparsification*.
+//!
+//! The compressor is `g = W · Q_s(W⁻¹ x)` where `Q_s` is QSGD-style
+//! random dithering with `s` levels and `W` is driven by the worker's
+//! local smoothness matrix **L_i**:
+//!
+//! * [`QuantWeighting::Diag`] — `W = Diag(L_i)^{1/2}` (cheap, sparse
+//!   decompression);
+//! * [`QuantWeighting::Root`] — `W = L_i^{1/2}` via the shared
+//!   [`PsdRoot`] (full matrix whitening, like [`MatrixAware`]).
+//!
+//! `Q_s` is unbiased and `W·W⁻¹ = I` on the relevant range, so the whole
+//! operator is unbiased with variance factor `ω_q = min(d/s², √d/s)`
+//! *in the whitened geometry* — which is exactly where the smoothness
+//! matrices make the variance cheap. `levels = 0` is the exact-passthrough
+//! sentinel (`ω_q = 0`), used by the lossless tests and as the "max
+//! levels" limit.
+//!
+//! [`UplinkCompressor`]/[`UplinkDecompressor`] are the runtime seam the
+//! methods build against: the sketch family, sa-quant, and top-k all fit
+//! behind the same `compress` / `accumulate` pair, so DCGD/DIANA/ADIANA
+//! pick any of them up from `MethodSpec` with zero driver changes.
+//! `UplinkDecompressor::Identity` reproduces the historical sparse
+//! scatter loops op-for-op, preserving bitwise identity for the sketch
+//! methods.
+//!
+//! [`MatrixAware`]: crate::compress::MatrixAware
+
+use std::sync::Arc;
+
+use crate::compress::message::SparseMsg;
+use crate::compress::ops::sketch_compress;
+use crate::compress::topk::topk_compress;
+use crate::linalg::psd::PsdRoot;
+use crate::sampling::IndependentSampling;
+use crate::util::rng::Rng;
+
+/// Which uplink compressor family a run uses (`--compressor`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CompressorKind {
+    /// Whatever the method's theory prescribes: the diagonal sketch for
+    /// the baselines, the matrix-aware protocol for the `+` family.
+    Default,
+    /// Standard unbiased diagonal sketch (eq. 6) — baselines only.
+    Sketch,
+    /// The source paper's matrix-aware sparsification (Def. 3 / eq. 7).
+    MatrixAware,
+    /// Smoothness-aware quantization (arXiv:2106.03524).
+    SaQuant,
+    /// Greedy top-k (biased; DCGD-only heuristic baseline).
+    TopK,
+}
+
+impl CompressorKind {
+    pub fn parse(s: &str) -> Option<CompressorKind> {
+        match s {
+            "default" => Some(CompressorKind::Default),
+            "sketch" => Some(CompressorKind::Sketch),
+            "matrix-aware" => Some(CompressorKind::MatrixAware),
+            "sa-quant" => Some(CompressorKind::SaQuant),
+            "topk" => Some(CompressorKind::TopK),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            CompressorKind::Default => "default",
+            CompressorKind::Sketch => "sketch",
+            CompressorKind::MatrixAware => "matrix-aware",
+            CompressorKind::SaQuant => "sa-quant",
+            CompressorKind::TopK => "topk",
+        }
+    }
+}
+
+/// The `W` in `g = W·Q_s(W⁻¹x)` (`--sa-weighting`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QuantWeighting {
+    /// `W = Diag(L_i)^{1/2}` — sparse decompression, the paper's cheap
+    /// variant.
+    Diag,
+    /// `W = L_i^{1/2}` via the PSD root — full-matrix whitening.
+    Root,
+}
+
+impl QuantWeighting {
+    pub fn parse(s: &str) -> Option<QuantWeighting> {
+        match s {
+            "diag" => Some(QuantWeighting::Diag),
+            "root" => Some(QuantWeighting::Root),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            QuantWeighting::Diag => "diag",
+            QuantWeighting::Root => "root",
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+enum SaWeights {
+    /// Pre-inverted diagonal weights 1/w_j (w_j = √L_jj, or 1 where
+    /// L_jj = 0 so the coordinate passes through untouched).
+    Diag { inv: Vec<f64> },
+    Root { root: Arc<PsdRoot> },
+}
+
+/// One worker's smoothness-aware quantizer: owns the whitening scratch
+/// so the per-round compress path stays allocation-free.
+#[derive(Clone, Debug)]
+pub struct SaQuant {
+    /// Dither levels `s`; 0 is the exact-passthrough sentinel.
+    pub levels: u32,
+    weights: SaWeights,
+    whiten_scratch: Vec<f64>,
+    coeff_scratch: Vec<f64>,
+}
+
+impl SaQuant {
+    /// Diagonal weighting from the worker's local `diag(L_i)`.
+    pub fn diag(levels: u32, ldiag: &[f64]) -> SaQuant {
+        let inv = ldiag
+            .iter()
+            .map(|&l| if l > 0.0 { 1.0 / l.sqrt() } else { 1.0 })
+            .collect::<Vec<f64>>();
+        SaQuant {
+            levels,
+            whiten_scratch: vec![0.0; inv.len()],
+            coeff_scratch: Vec::new(),
+            weights: SaWeights::Diag { inv },
+        }
+    }
+
+    /// Full-matrix weighting via the worker's shared PSD root.
+    pub fn root(levels: u32, root: Arc<PsdRoot>) -> SaQuant {
+        SaQuant {
+            levels,
+            whiten_scratch: vec![0.0; root.dim()],
+            coeff_scratch: Vec::new(),
+            weights: SaWeights::Root { root },
+        }
+    }
+
+    /// QSGD variance factor `ω_q = min(d/s², √d/s)` (the sequel paper's
+    /// ω expression); 0 for the exact sentinel.
+    pub fn omega(dim: usize, levels: u32) -> f64 {
+        if levels == 0 {
+            return 0.0;
+        }
+        let d = dim as f64;
+        let s = levels as f64;
+        (d / (s * s)).min(d.sqrt() / s)
+    }
+
+    /// Worker side: msg = Q_s(W⁻¹x) in the whitened coordinates (sparse,
+    /// ascending indices; *not* unbiased on its own — pair with the
+    /// matching [`UplinkDecompressor`]).
+    pub fn compress(&mut self, x: &[f64], rng: &mut Rng, out: &mut SparseMsg) {
+        match &self.weights {
+            SaWeights::Diag { inv } => {
+                for (j, &w) in inv.iter().enumerate() {
+                    self.whiten_scratch[j] = x[j] * w;
+                }
+            }
+            SaWeights::Root { root } => {
+                root.apply_pow_into_with(-0.5, x, &mut self.whiten_scratch, &mut self.coeff_scratch);
+            }
+        }
+        quantize_into(&self.whiten_scratch, self.levels, rng, out);
+    }
+
+    /// The server-side inverse of this worker's whitening.
+    pub fn decompressor(&self) -> UplinkDecompressor {
+        match &self.weights {
+            SaWeights::Diag { inv } => UplinkDecompressor::Diag(
+                inv.iter()
+                    .map(|&w| if w != 0.0 { 1.0 / w } else { 0.0 })
+                    .collect(),
+            ),
+            SaWeights::Root { root } => UplinkDecompressor::Root {
+                root: root.clone(),
+                scratch: vec![0.0; root.dim()],
+                coeff: Vec::new(),
+            },
+        }
+    }
+}
+
+/// QSGD random dithering with `levels` levels (`levels = 0` ⇒ exact
+/// nonzero passthrough). One uniform draw per coordinate keeps the RNG
+/// consumption independent of the values, so the three drivers stay
+/// bitwise-aligned.
+fn quantize_into(w: &[f64], levels: u32, rng: &mut Rng, out: &mut SparseMsg) {
+    out.clear();
+    if levels == 0 {
+        for (j, &v) in w.iter().enumerate() {
+            if v != 0.0 {
+                out.push(j as u32, v);
+            }
+        }
+        return;
+    }
+    let norm = w.iter().map(|v| v * v).sum::<f64>().sqrt();
+    if norm == 0.0 {
+        return;
+    }
+    let s = levels as f64;
+    for (j, &v) in w.iter().enumerate() {
+        let u = v.abs() / norm * s;
+        let base = u.floor();
+        let level = base + if rng.bernoulli(u - base) { 1.0 } else { 0.0 };
+        if level > 0.0 {
+            out.push(j as u32, v.signum() * norm * level / s);
+        }
+    }
+}
+
+/// The uplink-compression seam the methods build against.
+#[derive(Clone, Debug)]
+pub enum UplinkCompressor {
+    Sketch(IndependentSampling),
+    SaQuant(SaQuant),
+    TopK(usize),
+}
+
+impl UplinkCompressor {
+    pub fn compress(&mut self, x: &[f64], rng: &mut Rng, out: &mut SparseMsg) {
+        match self {
+            UplinkCompressor::Sketch(s) => sketch_compress(x, s, rng, out),
+            UplinkCompressor::SaQuant(q) => q.compress(x, rng, out),
+            UplinkCompressor::TopK(k) => topk_compress(x, *k, out),
+        }
+    }
+}
+
+/// Server-side accumulation of one worker's uplink into a dense buffer.
+///
+/// `Identity` is the historical sparse scatter (`acc[i] += val`) op-for-op
+/// — the sketch and top-k paths route through it unchanged, so their
+/// trajectories stay bitwise identical to before this seam existed.
+#[derive(Clone, Debug)]
+pub enum UplinkDecompressor {
+    Identity,
+    /// Sparse unwhiten: `acc[i] += w_i · val` with `w = diag(L)^{1/2}`.
+    Diag(Vec<f64>),
+    /// Dense unwhiten: `acc += L^{1/2} · msg`.
+    Root {
+        root: Arc<PsdRoot>,
+        scratch: Vec<f64>,
+        coeff: Vec<f64>,
+    },
+}
+
+impl UplinkDecompressor {
+    pub fn accumulate(&mut self, msg: &SparseMsg, acc: &mut [f64]) {
+        self.accumulate_scaled(msg, 1.0, acc);
+    }
+
+    /// `acc += alpha · W · msg` (alpha folded in so DIANA's shift update
+    /// stays a single pass).
+    pub fn accumulate_scaled(&mut self, msg: &SparseMsg, alpha: f64, acc: &mut [f64]) {
+        match self {
+            UplinkDecompressor::Identity => {
+                if alpha == 1.0 {
+                    for (k, &i) in msg.idx.iter().enumerate() {
+                        acc[i as usize] += msg.val[k];
+                    }
+                } else {
+                    for (k, &i) in msg.idx.iter().enumerate() {
+                        acc[i as usize] += alpha * msg.val[k];
+                    }
+                }
+            }
+            UplinkDecompressor::Diag(w) => {
+                for (k, &i) in msg.idx.iter().enumerate() {
+                    acc[i as usize] += alpha * w[i as usize] * msg.val[k];
+                }
+            }
+            UplinkDecompressor::Root {
+                root,
+                scratch,
+                coeff,
+            } => {
+                root.apply_pow_sparse_into_with(0.5, &msg.idx, &msg.val, scratch, coeff);
+                for (j, &v) in scratch.iter().enumerate() {
+                    acc[j] += alpha * v;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::dense::Mat;
+    use crate::linalg::vector;
+
+    fn toy_root(d: usize, seed: u64) -> PsdRoot {
+        let mut rng = Rng::new(seed);
+        let b = Mat::from_rows(
+            (0..d + 2)
+                .map(|_| (0..d).map(|_| rng.normal()).collect())
+                .collect(),
+        );
+        let mut l = b.gram();
+        l.scale(0.1);
+        l.add_diag(1e-3);
+        PsdRoot::from_dense(&l)
+    }
+
+    fn roundtrip(q: &mut SaQuant, x: &[f64], rng: &mut Rng, g: &mut [f64]) {
+        let mut msg = SparseMsg::new();
+        q.compress(x, rng, &mut msg);
+        let mut dec = q.decompressor();
+        g.fill(0.0);
+        dec.accumulate(&msg, g);
+    }
+
+    #[test]
+    fn parse_and_name_roundtrip() {
+        for k in [
+            CompressorKind::Default,
+            CompressorKind::Sketch,
+            CompressorKind::MatrixAware,
+            CompressorKind::SaQuant,
+            CompressorKind::TopK,
+        ] {
+            assert_eq!(CompressorKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(CompressorKind::parse("bogus"), None);
+        for w in [QuantWeighting::Diag, QuantWeighting::Root] {
+            assert_eq!(QuantWeighting::parse(w.name()), Some(w));
+        }
+        assert_eq!(QuantWeighting::parse("bogus"), None);
+    }
+
+    #[test]
+    fn diag_quantizer_is_unbiased() {
+        let d = 10;
+        let mut rng = Rng::new(11);
+        let x: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        let ldiag: Vec<f64> = (0..d).map(|_| 0.1 + rng.uniform()).collect();
+        let mut q = SaQuant::diag(4, &ldiag);
+        let trials = 60_000;
+        let mut mean = vec![0.0; d];
+        let mut g = vec![0.0; d];
+        for _ in 0..trials {
+            roundtrip(&mut q, &x, &mut rng, &mut g);
+            vector::axpy(1.0, &g, &mut mean);
+        }
+        for j in 0..d {
+            let m = mean[j] / trials as f64;
+            assert!(
+                (m - x[j]).abs() < 0.05 * (1.0 + x[j].abs()),
+                "E[g]_{j}={m} x_{j}={}",
+                x[j]
+            );
+        }
+    }
+
+    #[test]
+    fn root_quantizer_is_unbiased() {
+        let d = 8;
+        let root = Arc::new(toy_root(d, 12));
+        let mut rng = Rng::new(13);
+        let x: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        let mut q = SaQuant::root(4, root);
+        let trials = 60_000;
+        let mut mean = vec![0.0; d];
+        let mut g = vec![0.0; d];
+        for _ in 0..trials {
+            roundtrip(&mut q, &x, &mut rng, &mut g);
+            vector::axpy(1.0, &g, &mut mean);
+        }
+        for j in 0..d {
+            let m = mean[j] / trials as f64;
+            assert!(
+                (m - x[j]).abs() < 0.06 * (1.0 + x[j].abs()),
+                "E[g]_{j}={m} x_{j}={}",
+                x[j]
+            );
+        }
+    }
+
+    #[test]
+    fn dither_variance_within_omega_bound() {
+        // E‖Q_s(w) − w‖² ≤ ω_q‖w‖² with ω_q = min(d/s², √d/s) — checked in
+        // the whitened geometry where the QSGD bound is stated.
+        let d = 12;
+        let mut rng = Rng::new(14);
+        let w: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        for levels in [1u32, 2, 4, 8] {
+            let omega = SaQuant::omega(d, levels);
+            let trials = 40_000;
+            let mut acc = 0.0;
+            let mut msg = SparseMsg::new();
+            let mut dense = vec![0.0; d];
+            for _ in 0..trials {
+                quantize_into(&w, levels, &mut rng, &mut msg);
+                msg.scatter_into(&mut dense);
+                acc += vector::dist2(&dense, &w);
+            }
+            let emp = acc / trials as f64;
+            assert!(
+                emp <= omega * vector::norm2(&w) * 1.05,
+                "levels={levels} emp={emp} bound={}",
+                omega * vector::norm2(&w)
+            );
+        }
+    }
+
+    #[test]
+    fn exact_sentinel_is_lossless() {
+        let d = 9;
+        let mut rng = Rng::new(15);
+        let x: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        let ldiag: Vec<f64> = (0..d).map(|_| 0.2 + rng.uniform()).collect();
+        let mut g = vec![0.0; d];
+        let mut q = SaQuant::diag(0, &ldiag);
+        roundtrip(&mut q, &x, &mut rng, &mut g);
+        for j in 0..d {
+            assert!((g[j] - x[j]).abs() < 1e-12, "diag lossless failed at {j}");
+        }
+        let root = Arc::new(toy_root(d, 16));
+        let mut q = SaQuant::root(0, root);
+        roundtrip(&mut q, &x, &mut rng, &mut g);
+        for j in 0..d {
+            assert!((g[j] - x[j]).abs() < 1e-9, "root lossless failed at {j}");
+        }
+    }
+
+    #[test]
+    fn quantized_levels_shrink_the_message() {
+        // coarse dithering sends strictly fewer coordinates than the exact
+        // sentinel on a generic dense vector
+        let d = 64;
+        let mut rng = Rng::new(17);
+        let x: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        let ldiag = vec![1.0; d];
+        let mut coarse = SaQuant::diag(1, &ldiag);
+        let mut exact = SaQuant::diag(0, &ldiag);
+        let mut m1 = SparseMsg::new();
+        let mut m0 = SparseMsg::new();
+        coarse.compress(&x, &mut rng, &mut m1);
+        exact.compress(&x, &mut rng, &mut m0);
+        assert_eq!(m0.coords(), d);
+        assert!(m1.coords() < d, "s=1 dither kept all {d} coords");
+        // ascending indices (the codec's sorted-gap wire mode)
+        assert!(m1.idx.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn identity_decompressor_matches_sparse_scatter() {
+        let mut msg = SparseMsg::new();
+        msg.push(1, 2.0);
+        msg.push(3, -4.0);
+        let mut acc = vec![1.0; 5];
+        UplinkDecompressor::Identity.accumulate(&msg, &mut acc);
+        assert_eq!(acc, vec![1.0, 3.0, 1.0, -3.0, 1.0]);
+        UplinkDecompressor::Identity.accumulate_scaled(&msg, 0.5, &mut acc);
+        assert_eq!(acc, vec![1.0, 4.0, 1.0, -5.0, 1.0]);
+    }
+
+    #[test]
+    fn omega_expression() {
+        // small s: d/s² dominates is false — min picks √d/s; large s: d/s²
+        let d = 16;
+        assert!((SaQuant::omega(d, 1) - 4.0).abs() < 1e-12); // min(16, 4)
+        assert!((SaQuant::omega(d, 8) - 0.25).abs() < 1e-12); // min(0.25, 0.5)
+        assert_eq!(SaQuant::omega(d, 0), 0.0);
+    }
+}

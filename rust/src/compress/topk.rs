@@ -14,12 +14,12 @@ pub fn topk_compress(x: &[f64], k: usize, out: &mut SparseMsg) {
     }
     let k = k.min(x.len());
     // Partial selection: indices sorted by |x| descending, take k.
+    // total_cmp instead of partial_cmp().unwrap(): NaN input must not
+    // panic, and the total order makes tie-breaking deterministic across
+    // platforms (total_cmp ranks |NaN| above +inf, so NaNs are "largest").
     let mut order: Vec<u32> = (0..x.len() as u32).collect();
     order.select_nth_unstable_by(k - 1, |&a, &b| {
-        x[b as usize]
-            .abs()
-            .partial_cmp(&x[a as usize].abs())
-            .unwrap()
+        x[b as usize].abs().total_cmp(&x[a as usize].abs())
     });
     let mut sel: Vec<u32> = order[..k].to_vec();
     sel.sort_unstable();
@@ -75,6 +75,26 @@ mod tests {
             prev = a;
         }
         assert_eq!(topk_alpha(&x, 50), 0.0);
+    }
+
+    #[test]
+    fn non_finite_inputs_do_not_panic() {
+        // regression: the old partial_cmp(..).unwrap() comparator panicked
+        // on NaN. total_cmp ranks |NaN| above +inf, so the pathological
+        // coordinates are *selected* (visible downstream) rather than
+        // silently dropped or fatal.
+        let x = [1.0, f64::NAN, -3.0, f64::INFINITY, f64::NEG_INFINITY, 0.5];
+        let mut m = SparseMsg::new();
+        topk_compress(&x, 3, &mut m);
+        assert_eq!(m.coords(), 3);
+        assert_eq!(m.idx, vec![1, 3, 4]);
+        assert!(m.val[0].is_nan());
+        assert_eq!(m.val[1], f64::INFINITY);
+        assert_eq!(m.val[2], f64::NEG_INFINITY);
+        // all-NaN input: still no panic, deterministic selection
+        let y = [f64::NAN; 4];
+        topk_compress(&y, 2, &mut m);
+        assert_eq!(m.coords(), 2);
     }
 
     #[test]

@@ -47,6 +47,7 @@
 //! injection (see [`crate::wire::fault`]). The top-level `pin` key
 //! (`--pin`) opts into per-worker core pinning in the threaded driver.
 
+use crate::compress::{CompressorKind, QuantWeighting};
 use crate::coordinator::DriverKind;
 use crate::data::{spec_by_name, synth};
 use crate::runtime::EngineKind;
@@ -213,6 +214,17 @@ pub struct ExperimentConfig {
     /// start near the optimum (Figure 2's setup)
     pub start_near_opt: bool,
     pub practical_adiana: bool,
+    /// uplink compressor family (`--compressor
+    /// default|sketch|matrix-aware|sa-quant|topk`): `default` keeps each
+    /// method's theory-prescribed compressor; the rest override it where
+    /// applicable (enforced at build time by
+    /// [`crate::methods::MethodSpec::build`])
+    pub compressor: CompressorKind,
+    /// quantization levels s for `sa-quant` (`--sa-levels`; 0 = exact
+    /// passthrough sentinel, ω_q = 0)
+    pub sa_levels: u32,
+    /// `sa-quant` whitening matrix (`--sa-weighting diag|root`)
+    pub sa_weighting: QuantWeighting,
     /// sweep-cell parallelism: 0 ⇒ all cores, 1 ⇒ sequential, k ⇒ k threads.
     /// Output is bitwise identical for every value (deterministic per-cell
     /// seeds; see `experiments::pool`).
@@ -253,6 +265,9 @@ impl Default for ExperimentConfig {
             out_dir: std::path::PathBuf::from("results"),
             start_near_opt: false,
             practical_adiana: true,
+            compressor: CompressorKind::Default,
+            sa_levels: 4,
+            sa_weighting: QuantWeighting::Diag,
             jobs: 0,
             pin: false,
             watch: false,
@@ -326,6 +341,18 @@ impl ExperimentConfig {
                 "practical_adiana" => {
                     c.practical_adiana = v.as_bool().context("practical_adiana")?
                 }
+                "compressor" => {
+                    let s = v.as_str().context("compressor")?;
+                    c.compressor = CompressorKind::parse(s).with_context(|| {
+                        format!("bad compressor '{s}' (default|sketch|matrix-aware|sa-quant|topk)")
+                    })?
+                }
+                "sa_levels" => c.sa_levels = v.as_usize().context("sa_levels")? as u32,
+                "sa_weighting" => {
+                    let s = v.as_str().context("sa_weighting")?;
+                    c.sa_weighting = QuantWeighting::parse(s)
+                        .with_context(|| format!("bad sa_weighting '{s}' (diag|root)"))?
+                }
                 "jobs" => c.jobs = v.as_usize().context("jobs")?,
                 "pin" => c.pin = v.as_bool().context("pin")?,
                 "watch" => c.watch = v.as_bool().context("watch")?,
@@ -394,6 +421,18 @@ impl ExperimentConfig {
         }
         if args.has("start-near-opt") {
             self.start_near_opt = args.bool_or("start-near-opt", self.start_near_opt);
+        }
+        if let Some(s) = args.get("compressor") {
+            self.compressor = CompressorKind::parse(s).with_context(|| {
+                format!("bad compressor '{s}' (default|sketch|matrix-aware|sa-quant|topk)")
+            })?;
+        }
+        if args.has("sa-levels") {
+            self.sa_levels = args.usize_or("sa-levels", self.sa_levels as usize) as u32;
+        }
+        if let Some(s) = args.get("sa-weighting") {
+            self.sa_weighting = QuantWeighting::parse(s)
+                .with_context(|| format!("bad sa_weighting '{s}' (diag|root)"))?;
         }
         if args.has("jobs") {
             self.jobs = args.usize_or("jobs", self.jobs);
@@ -498,7 +537,7 @@ impl ExperimentConfig {
         format!(
             "dataset={};shards={};mu={:e};tau={:e};methods={};sampling={};max_rounds={};\
              target_residual={:e};record_every={};seed={};engine={};payload={};float_bits={};\
-             start_near_opt={};practical_adiana={}",
+             start_near_opt={};practical_adiana={};compressor={};sa_levels={};sa_weighting={}",
             self.dataset,
             self.effective_workers(),
             self.mu,
@@ -514,6 +553,9 @@ impl ExperimentConfig {
             self.wire.effective_float_bits(),
             self.start_near_opt,
             self.practical_adiana,
+            self.compressor.name(),
+            self.sa_levels,
+            self.sa_weighting.name(),
         )
     }
 
@@ -537,6 +579,9 @@ impl ExperimentConfig {
             ("checkpoint_every", Json::Num(self.checkpoint_every as f64)),
             ("start_near_opt", Json::Bool(self.start_near_opt)),
             ("practical_adiana", Json::Bool(self.practical_adiana)),
+            ("compressor", Json::Str(self.compressor.name().to_string())),
+            ("sa_levels", Json::Num(self.sa_levels as f64)),
+            ("sa_weighting", Json::Str(self.sa_weighting.name().to_string())),
             ("jobs", Json::Num(self.jobs as f64)),
             ("pin", Json::Bool(self.pin)),
             ("watch", Json::Bool(self.watch)),
@@ -700,6 +745,59 @@ mod tests {
         let mut c = ExperimentConfig::default();
         c.wire.payload = Payload::Q8;
         assert_ne!(a.canonical_identity(), c.canonical_identity());
+        // the compressor family and its knobs pick the trajectory too
+        let mut q = ExperimentConfig::default();
+        q.compressor = CompressorKind::SaQuant;
+        assert_ne!(a.canonical_identity(), q.canonical_identity());
+        let mut q2 = q.clone();
+        q2.sa_levels = 8;
+        assert_ne!(q.canonical_identity(), q2.canonical_identity());
+        let mut q3 = q.clone();
+        q3.sa_weighting = QuantWeighting::Root;
+        assert_ne!(q.canonical_identity(), q3.canonical_identity());
+    }
+
+    #[test]
+    fn compressor_keys_parse_roundtrip_and_reject_bad_values() {
+        let j = Json::parse(
+            r#"{"compressor": "sa-quant", "sa_levels": 8, "sa_weighting": "root"}"#,
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(c.compressor, CompressorKind::SaQuant);
+        assert_eq!(c.sa_levels, 8);
+        assert_eq!(c.sa_weighting, QuantWeighting::Root);
+        // JSON roundtrip keeps all three
+        let c2 = ExperimentConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2.compressor, CompressorKind::SaQuant);
+        assert_eq!(c2.sa_levels, 8);
+        assert_eq!(c2.sa_weighting, QuantWeighting::Root);
+        // defaults: theory-prescribed compressor, s = 4, diagonal weights
+        let d = ExperimentConfig::default();
+        assert_eq!(d.compressor, CompressorKind::Default);
+        assert_eq!(d.sa_levels, 4);
+        assert_eq!(d.sa_weighting, QuantWeighting::Diag);
+        // CLI overrides
+        let mut c3 = ExperimentConfig::default();
+        let args = Args::parse(
+            "--compressor topk --sa-levels 2 --sa-weighting root"
+                .split_whitespace()
+                .map(String::from),
+            false,
+        );
+        c3.apply_args(&args).unwrap();
+        assert_eq!(c3.compressor, CompressorKind::TopK);
+        assert_eq!(c3.sa_levels, 2);
+        assert_eq!(c3.sa_weighting, QuantWeighting::Root);
+        // bad names are rejected at parse time
+        assert!(ExperimentConfig::from_json(
+            &Json::parse(r#"{"compressor": "gzip"}"#).unwrap()
+        )
+        .is_err());
+        assert!(ExperimentConfig::from_json(
+            &Json::parse(r#"{"sa_weighting": "dense"}"#).unwrap()
+        )
+        .is_err());
     }
 
     #[test]

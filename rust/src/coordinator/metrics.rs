@@ -113,6 +113,24 @@ impl RunResult {
             .map(|r| r.coords_up)
     }
 
+    /// Measured uplink bytes (exact encoded frame sizes) needed to first
+    /// reach `residual ≤ eps` — the currency of the quantization-vs-
+    /// sparsification comparison.
+    pub fn bytes_to(&self, eps: f64) -> Option<u64> {
+        self.records
+            .iter()
+            .find(|r| r.residual <= eps)
+            .map(|r| r.bytes_up)
+    }
+
+    /// Modeled uplink bits to first reach `residual ≤ eps`.
+    pub fn bits_to(&self, eps: f64) -> Option<u64> {
+        self.records
+            .iter()
+            .find(|r| r.residual <= eps)
+            .map(|r| r.bits_up)
+    }
+
     pub fn final_residual(&self) -> f64 {
         self.records.last().map(|r| r.residual).unwrap_or(f64::NAN)
     }

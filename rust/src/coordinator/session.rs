@@ -769,6 +769,9 @@ impl<'a> Session<'a> {
                 let mut s =
                     MethodSpec::new(&cfg.methods[0], cfg.tau, cfg.sampling, cfg.mu, prep.x0(cfg));
                 s.practical_adiana = cfg.practical_adiana;
+                s.compressor = cfg.compressor;
+                s.sa_levels = cfg.sa_levels;
+                s.sa_weighting = cfg.sa_weighting;
                 s
             }
         };

@@ -22,24 +22,9 @@ pub fn fig1(cfg: &ExperimentConfig) -> Result<()> {
     c.methods = vec!["diana+".into(), "diana".into()];
     let prep = runner::prepare(&c)?;
     let variants = vec![
-        Variant {
-            label: "diana+-importance".into(),
-            method: "diana+",
-            sampling: SamplingKind::ImportanceDiana,
-            tau: c.tau,
-        },
-        Variant {
-            label: "diana+-uniform".into(),
-            method: "diana+",
-            sampling: SamplingKind::Uniform,
-            tau: c.tau,
-        },
-        Variant {
-            label: "diana-uniform".into(),
-            method: "diana",
-            sampling: SamplingKind::Uniform,
-            tau: c.tau,
-        },
+        Variant::new("diana+-importance", "diana+", SamplingKind::ImportanceDiana, c.tau),
+        Variant::new("diana+-uniform", "diana+", SamplingKind::Uniform, c.tau),
+        Variant::new("diana-uniform", "diana", SamplingKind::Uniform, c.tau),
     ];
     let results = runner::run_variants(&prep, &c, &variants, &format!("fig1_{}", c.dataset))?;
     summarize_ordering(
@@ -68,9 +53,8 @@ pub fn fig2(cfg: &ExperimentConfig) -> Result<()> {
     let variants: Vec<Variant> = c
         .methods
         .iter()
-        .map(|m| Variant {
-            label: m.clone(),
-            method: match m.as_str() {
+        .map(|m| {
+            let method = match m.as_str() {
                 "dcgd" => "dcgd",
                 "dcgd+" => "dcgd+",
                 "diana" => "diana",
@@ -78,9 +62,8 @@ pub fn fig2(cfg: &ExperimentConfig) -> Result<()> {
                 "adiana" => "adiana",
                 "adiana+" => "adiana+",
                 _ => unreachable!(),
-            },
-            sampling: SamplingKind::Uniform,
-            tau: c.tau,
+            };
+            Variant::new(m.clone(), method, SamplingKind::Uniform, c.tau)
         })
         .collect();
     let results = runner::run_variants(&prep, &c, &variants, &format!("fig2_{}", c.dataset))?;
@@ -116,12 +99,12 @@ pub fn fig34(cfg: &ExperimentConfig) -> Result<()> {
             (SamplingKind::ImportanceDiana, "importance"),
             (SamplingKind::Uniform, "uniform"),
         ] {
-            variants.push(Variant {
-                label: format!("tau{}-{}", tau as usize, sname),
-                method: "diana+",
-                sampling: skind,
+            variants.push(Variant::new(
+                format!("tau{}-{}", tau as usize, sname),
+                "diana+",
+                skind,
                 tau,
-            });
+            ));
         }
     }
     let results = runner::run_variants(&prep, &c, &variants, &format!("fig34_{}", c.dataset))?;
@@ -133,6 +116,61 @@ pub fn fig34(cfg: &ExperimentConfig) -> Result<()> {
         match (r.rounds_to(1e-6), r.coords_to(1e-6)) {
             (Some(it), Some(cc)) => println!("  {label:<22} {it:>8} rounds  {cc:>12} coords"),
             _ => println!("  {label:<22} (target not reached in {} rounds)", r.rounds_run),
+        }
+    }
+    Ok(())
+}
+
+/// Quantization-vs-sparsification sweep (the sequel paper's comparison,
+/// arXiv:2106.03524 §experiments): for DCGD and DIANA, race the
+/// smoothness-aware quantizer (diag and root weightings) against the
+/// uniform sketch and the matrix-aware sparsifier (which runs via the
+/// corresponding `+` method), and report *measured* uplink bytes to a
+/// target residual — bytes, not coordinates, are the currency that makes
+/// a 4-level quantized coordinate comparable to an f64 sparse one.
+pub fn fig_quant(cfg: &ExperimentConfig) -> Result<()> {
+    use crate::compress::{CompressorKind, QuantWeighting};
+
+    let mut c = cfg.clone();
+    c.methods = vec!["dcgd".into(), "dcgd+".into(), "diana".into(), "diana+".into()];
+    let prep = runner::prepare(&c)?;
+    let s = c.sa_levels.max(1);
+    let mut variants = Vec::new();
+    for (base, plus) in [("dcgd", "dcgd+"), ("diana", "diana+")] {
+        variants.push(
+            Variant::new(format!("{base}-sketch"), base, SamplingKind::Uniform, c.tau)
+                .with_compressor(CompressorKind::Sketch),
+        );
+        variants.push(
+            Variant::new(format!("{plus}-matrix-aware"), plus, SamplingKind::Uniform, c.tau)
+                .with_compressor(CompressorKind::Default),
+        );
+        for (w, wname) in [(QuantWeighting::Diag, "diag"), (QuantWeighting::Root, "root")] {
+            variants.push(
+                Variant::new(format!("{base}-sa-quant-{wname}-s{s}"), base, SamplingKind::Uniform, c.tau)
+                    .with_sa_quant(s, w),
+            );
+        }
+    }
+    let results =
+        runner::run_variants(&prep, &c, &variants, &format!("fig_quant_{}", c.dataset))?;
+
+    // bytes-to-ε table: what the sequel paper's comparison turns on
+    let eps = 1e-6;
+    println!(
+        "\n[quant {}] measured uplink bytes (and rounds) to residual ≤ {eps:.0e}:",
+        c.dataset
+    );
+    for (label, r) in &results {
+        match (r.bytes_to(eps), r.rounds_to(eps)) {
+            (Some(by), Some(it)) => {
+                println!("  {label:<28} {by:>14} bytes  {it:>8} rounds")
+            }
+            _ => println!(
+                "  {label:<28} (target not reached in {} rounds; final {:.3e})",
+                r.rounds_run,
+                r.final_residual()
+            ),
         }
     }
     Ok(())

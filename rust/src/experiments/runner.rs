@@ -1,6 +1,7 @@
 //! Shared experiment runner: dataset preparation, x* solving, method
 //! construction and execution, CSV output.
 
+use crate::compress::{CompressorKind, QuantWeighting};
 use crate::config::ExperimentConfig;
 use crate::coordinator::{DriverKind, EngineFactory, RunConfig, RunResult, Session};
 use crate::data::{self, Dataset, Shard};
@@ -170,6 +171,9 @@ pub fn run_one_seeded(
 ) -> Result<RunResult> {
     let mut spec = MethodSpec::new(method_name, tau, sampling, cfg.mu, prep.x0(cfg));
     spec.practical_adiana = cfg.practical_adiana;
+    spec.compressor = cfg.compressor;
+    spec.sa_levels = cfg.sa_levels;
+    spec.sa_weighting = cfg.sa_weighting;
     let run_cfg = RunConfig {
         seed,
         ..run_config(cfg)
@@ -187,6 +191,61 @@ pub struct Variant {
     pub method: &'static str,
     pub sampling: SamplingKind,
     pub tau: f64,
+    /// uplink compressor override for this cell (None ⇒ `cfg.compressor`)
+    pub compressor: Option<CompressorKind>,
+    /// `sa-quant` level count override (None ⇒ `cfg.sa_levels`)
+    pub sa_levels: Option<u32>,
+    /// `sa-quant` weighting override (None ⇒ `cfg.sa_weighting`)
+    pub sa_weighting: Option<QuantWeighting>,
+}
+
+impl Variant {
+    pub fn new(
+        label: impl Into<String>,
+        method: &'static str,
+        sampling: SamplingKind,
+        tau: f64,
+    ) -> Variant {
+        Variant {
+            label: label.into(),
+            method,
+            sampling,
+            tau,
+            compressor: None,
+            sa_levels: None,
+            sa_weighting: None,
+        }
+    }
+
+    /// Pin this cell to a compressor family (figures compare families
+    /// side by side within one sweep CSV).
+    pub fn with_compressor(mut self, kind: CompressorKind) -> Variant {
+        self.compressor = Some(kind);
+        self
+    }
+
+    pub fn with_sa_quant(mut self, levels: u32, weighting: QuantWeighting) -> Variant {
+        self.compressor = Some(CompressorKind::SaQuant);
+        self.sa_levels = Some(levels);
+        self.sa_weighting = Some(weighting);
+        self
+    }
+
+    /// The experiment config this cell actually runs under: the shared
+    /// sweep config with this variant's compressor overrides applied.
+    pub fn cell_config(&self, cfg: &ExperimentConfig) -> ExperimentConfig {
+        let mut c = cfg.clone();
+        if let Some(k) = self.compressor {
+            c.compressor = k;
+        }
+        if let Some(s) = self.sa_levels {
+            c.sa_levels = s;
+        }
+        if let Some(w) = self.sa_weighting {
+            c.sa_weighting = w;
+        }
+        c
+    }
 }
 
 /// Run a set of variants and write one CSV (long format with a `label`
@@ -222,7 +281,7 @@ pub fn run_variants(
     let cells: Vec<Result<RunResult>> =
         crate::experiments::pool::run_cells(variants.len(), jobs, |i| {
             let v = &variants[i];
-            run_one(prep, cfg, v.method, v.sampling, v.tau)
+            run_one(prep, &v.cell_config(cfg), v.method, v.sampling, v.tau)
         });
     let mut results = Vec::new();
     for (v, r) in variants.iter().zip(cells) {
@@ -358,11 +417,8 @@ mod tests {
         let variants: Vec<Variant> = cells
             .iter()
             .enumerate()
-            .map(|(i, &(method, tau))| Variant {
-                label: format!("v{i}"),
-                method,
-                sampling: SamplingKind::Uniform,
-                tau,
+            .map(|(i, &(method, tau))| {
+                Variant::new(format!("v{i}"), method, SamplingKind::Uniform, tau)
             })
             .collect();
 
@@ -394,12 +450,12 @@ mod tests {
     fn run_variants_writes_csv() {
         let cfg = tiny_cfg();
         let prep = prepare(&cfg).unwrap();
-        let variants = vec![Variant {
-            label: "dcgd-uniform".into(),
-            method: "dcgd",
-            sampling: SamplingKind::Uniform,
-            tau: 1.0,
-        }];
+        let variants = vec![Variant::new(
+            "dcgd-uniform",
+            "dcgd",
+            SamplingKind::Uniform,
+            1.0,
+        )];
         let results = run_variants(&prep, &cfg, &variants, "test_out").unwrap();
         assert_eq!(results.len(), 1);
         let csv = std::fs::read_to_string(cfg.out_dir.join("test_out.csv")).unwrap();

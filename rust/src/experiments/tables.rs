@@ -95,6 +95,68 @@ fn adiana_complexity(n: f64, mu: f64, l: f64, omega: f64, variance: f64) -> f64 
     }
 }
 
+/// Quantization-constants table (arXiv:2106.03524's Table-1 analogue):
+/// per dataset, the sketch's variance constants (ω, 𝓛̃) next to the
+/// smoothness-aware quantizer's (ω_q = min(d/s², √d/s) and
+/// 𝓛̃_q = ω_q·max_j L_jj under diag weighting, ω_q·λ_max(L_i) under
+/// root), plus the predicted DCGD iteration complexity under each — the
+/// theory side of the measured `smx figures --figure quant` race.
+pub fn table_quant(cfg: &ExperimentConfig, datasets: &[String]) -> Result<Vec<Vec<String>>> {
+    use crate::compress::{QuantWeighting, SaQuant};
+    use crate::methods::sa_quant_family;
+
+    let s = cfg.sa_levels.max(1);
+    let header = [
+        "dataset", "d", "s", "omega_sketch", "omega_q", "tilde_l_sketch_uni", "tilde_lq_diag",
+        "tilde_lq_root", "k_dcgd_sketch", "k_dcgd_saq_diag", "k_dcgd_saq_root",
+    ];
+    println!("{}", header.join(","));
+    let mut rows = Vec::new();
+    for ds in datasets {
+        let mut c = cfg.clone();
+        c.dataset = ds.clone();
+        let prep = runner::prepare_with(&c, false)?;
+        let sm = &prep.sm;
+        let n = sm.n() as f64;
+        let d = sm.dim as f64;
+        let mu = sm.mu;
+        let tau = (d / n).max(1.0);
+        let omega = d / tau - 1.0;
+
+        let mut tilde_uni: f64 = 0.0;
+        for loc in &sm.locals {
+            let s_uni = SamplingKind::Uniform.build(&loc.diag, tau, mu, sm.n());
+            tilde_uni = tilde_uni.max(s_uni.tilde_l(&loc.diag));
+        }
+
+        let omega_q = SaQuant::omega(sm.dim, s);
+        let (_, _, tilde_diag) = sa_quant_family(sm, s, QuantWeighting::Diag);
+        let (_, _, tilde_root) = sa_quant_family(sm, s, QuantWeighting::Root);
+
+        let k_sketch = sm.l / mu + omega * sm.l_max / (n * mu);
+        let k_diag = sm.l / mu + tilde_diag / (n * mu);
+        let k_root = sm.l / mu + tilde_root / (n * mu);
+
+        let row = vec![
+            ds.clone(),
+            format!("{}", sm.dim),
+            format!("{s}"),
+            format!("{omega:.1}"),
+            format!("{omega_q:.3}"),
+            format!("{tilde_uni:.4e}"),
+            format!("{tilde_diag:.4e}"),
+            format!("{tilde_root:.4e}"),
+            format!("{k_sketch:.3e}"),
+            format!("{k_diag:.3e}"),
+            format!("{k_root:.3e}"),
+        ];
+        println!("{}", row.join(","));
+        rows.push(row);
+    }
+    crate::util::write_csv(&cfg.out_dir.join("table_quant.csv"), &header, &rows)?;
+    Ok(rows)
+}
+
 /// Table 3: dataset statistics (ours vs the paper's shapes — identical by
 /// construction for the synthetic generators).
 pub fn table3(cfg: &ExperimentConfig, datasets: &[String]) -> Result<Vec<Vec<String>>> {
@@ -181,6 +243,13 @@ mod tests {
         assert_eq!(t3[0][1], "120");
         let t6 = table6(&cfg, &ds).unwrap();
         assert_eq!(t6.len(), 1);
+        let tq = table_quant(&cfg, &ds).unwrap();
+        assert_eq!(tq.len(), 1);
+        // ω_q, 𝓛̃ and both 𝓛̃_q constants must come out finite and positive
+        for col in 4..8 {
+            let v: f64 = tq[0][col].parse().unwrap();
+            assert!(v.is_finite() && v > 0.0, "col {col} = {v}");
+        }
         std::fs::remove_dir_all(&cfg.out_dir).ok();
     }
 }

@@ -3,8 +3,8 @@
 //!
 //! Subcommands:
 //!   train    run method(s) on one dataset, write residual curves
-//!   figures  regenerate a paper figure (--figure 1|2|3|4|5)
-//!   tables   regenerate a paper table (--table 2|3|6)
+//!   figures  regenerate a paper figure (--figure 1|2|3|4|5|quant)
+//!   tables   regenerate a paper table (--table 2|3|6|quant)
 //!   solve    compute x* and problem constants for a dataset
 //!   info     print dataset/smoothness diagnostics
 //!   serve    distributed coordinator: accept worker processes over TCP
@@ -54,6 +54,11 @@ flags: --workers N --mu F --max-rounds N --target-residual F --seed N
        over loopback with --wire-workers threads)
        --checkpoint-every N (observer checkpoints every N rounds; under
        serve also snapshots worker state + truncates the replay journal)
+       --compressor default|sketch|matrix-aware|sa-quant|topk (uplink
+       compressor family; default = the method's theory choice)
+       --sa-levels N (sa-quant quantization levels s; 0 = exact
+       passthrough) --sa-weighting diag|root (sa-quant weighting: the
+       diagonal of L_i or its full PSD root)
 wire:  --payload f64|f32|q16|q8|q4 --listen HOST:PORT --wire-workers N
        (0 = one process per shard) --float-bits N (modeled-bit override)
        --worker-timeout SECS (fault-tolerance grace window; 0 = fail fast)
@@ -121,12 +126,12 @@ fn run() -> Result<()> {
                         .find(|n| *n == m)
                         .copied()
                         .unwrap();
-                    runner::Variant {
-                        label: format!("{m}-{}", cfg.sampling.name()),
+                    runner::Variant::new(
+                        format!("{m}-{}", cfg.sampling.name()),
                         method,
-                        sampling: cfg.sampling,
-                        tau: cfg.tau,
-                    }
+                        cfg.sampling,
+                        cfg.tau,
+                    )
                 })
                 .collect();
             let results =
@@ -147,19 +152,20 @@ fn run() -> Result<()> {
             let fig = args.str_or("figure", "1");
             let datasets = datasets_from(&args);
             match fig.as_str() {
-                "1" | "2" | "3" | "4" | "34" => {
+                "1" | "2" | "3" | "4" | "34" | "quant" => {
                     for ds in &datasets {
                         let mut c = cfg.clone();
                         c.dataset = ds.clone();
                         match fig.as_str() {
                             "1" => figures::fig1(&c)?,
                             "2" => figures::fig2(&c)?,
+                            "quant" => figures::fig_quant(&c)?,
                             _ => figures::fig34(&c)?,
                         }
                     }
                 }
                 "5" => figures::fig5(&cfg)?,
-                other => bail!("unknown figure '{other}' (1|2|3|4|5)"),
+                other => bail!("unknown figure '{other}' (1|2|3|4|5|quant)"),
             }
         }
         "tables" => {
@@ -175,7 +181,10 @@ fn run() -> Result<()> {
                 "6" => {
                     tables::table6(&cfg, &datasets)?;
                 }
-                other => bail!("unknown table '{other}' (2|3|6)"),
+                "quant" => {
+                    tables::table_quant(&cfg, &datasets)?;
+                }
+                other => bail!("unknown table '{other}' (2|3|6|quant)"),
             }
         }
         "solve" => {

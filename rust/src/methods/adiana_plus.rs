@@ -13,18 +13,23 @@
 //! `δ_i = C_i' L_i^{†1/2}(∇f_i(w^k) − h_i)` (independent sketches), and
 //! shift `h_i ← h_i + α L_i^{1/2} δ_i`.
 
-use crate::compress::{sketch_compress, MatrixAware, SparseMsg};
+use crate::compress::{
+    sketch_compress, CompressorKind, MatrixAware, SaQuant, SparseMsg, UplinkDecompressor,
+};
 use crate::linalg::psd::PsdRoot;
 use crate::methods::prox::Prox;
 use crate::methods::stepsize::{self, AdianaParams};
-use crate::methods::{dense_downlink_into, Downlink, MethodSpec, ServerAlgo, Uplink, WorkerAlgo};
+use crate::methods::{
+    dense_downlink_into, sa_quant_family, Downlink, MethodSpec, ServerAlgo, Uplink, WorkerAlgo,
+};
 use crate::objective::Smoothness;
 use crate::runtime::GradEngine;
 use crate::sampling::IndependentSampling;
 use crate::util::rng::Rng;
 use std::sync::Arc;
 
-/// Worker: matrix-aware if `root` is Some, standard sketch otherwise.
+/// Worker: matrix-aware if `root` is Some, sa-quant if `quant` is Some,
+/// standard sketch otherwise.
 pub struct AccelWorker {
     sampling: IndependentSampling,
     root: Option<Arc<PsdRoot>>,
@@ -36,12 +41,19 @@ pub struct AccelWorker {
     dbar: Vec<f64>,
     coeff: Vec<f64>,
     compressor: Option<MatrixAware>,
+    quant: Option<SaQuant>,
+    /// sa-quant's unwhitener for the worker-local shift update
+    quant_dec: Option<UplinkDecompressor>,
 }
 
 impl AccelWorker {
     fn compress(&mut self, v_is_x: bool, rng: &mut Rng, out: &mut SparseMsg) {
         // self.diff already holds (∇f(·) − h)
         let _ = v_is_x;
+        if let Some(q) = &mut self.quant {
+            q.compress(&self.diff, rng, out);
+            return;
+        }
         match (&mut self.compressor, &self.root) {
             (Some(c), Some(root)) => c.compress(root, &self.diff, rng, out),
             _ => sketch_compress(&self.diff, &self.sampling, rng, out),
@@ -85,6 +97,10 @@ impl WorkerAlgo for AccelWorker {
         self.compress(false, rng, delta2);
 
         // h_i ← h_i + α·decompress(δ_i)
+        if let Some(qd) = &mut self.quant_dec {
+            qd.accumulate_scaled(delta2, self.alpha, &mut self.h);
+            return;
+        }
         match &self.root {
             Some(root) => {
                 root.apply_pow_sparse_into_with(
@@ -133,6 +149,9 @@ pub struct AccelServer {
     h: Vec<f64>,
     /// None ⇒ standard sketches (original ADIANA)
     roots: Option<Vec<Arc<PsdRoot>>>,
+    /// Some ⇒ sa-quant: per-worker unwhiteners (takes precedence over
+    /// `roots`, which is None in that mode)
+    quant_decomp: Option<Vec<UplinkDecompressor>>,
     dbar: Vec<f64>,
     delta_bar: Vec<f64>,
     scratch: Vec<f64>,
@@ -150,6 +169,10 @@ impl AccelServer {
             } else {
                 &u.delta
             };
+            if let Some(decomp) = &mut self.quant_decomp {
+                decomp[i].accumulate(msg, &mut self.dbar);
+                continue;
+            }
             match &self.roots {
                 Some(roots) => {
                     roots[i].apply_pow_sparse_into_with(
@@ -270,6 +293,9 @@ pub fn build_accel(
 ) -> (Box<dyn ServerAlgo>, Vec<Box<dyn WorkerAlgo + Send>>) {
     let dim = sm.dim;
     let n = sm.n();
+    // sa-quant replaces the sketch on the original-ADIANA baseline only
+    // (the builder's applicability check upholds this)
+    let sa_quant = !matrix_aware && spec.compressor == CompressorKind::SaQuant;
 
     let (samplings, roots): (Vec<IndependentSampling>, Option<Vec<Arc<PsdRoot>>>) =
         if matrix_aware {
@@ -286,8 +312,21 @@ pub fn build_accel(
             ((0..n).map(|_| s.clone()).collect(), None)
         };
 
-    let omega_max = samplings.iter().map(|s| s.omega()).fold(0.0, f64::max);
-    let variance_scale = if matrix_aware {
+    let (mut quants, quant_decomp, quant_tilde) = if sa_quant {
+        let (q, d, t) = sa_quant_family(sm, spec.sa_levels, spec.sa_weighting);
+        (q, Some(d), t)
+    } else {
+        (Vec::new(), None, 0.0)
+    };
+
+    let omega_max = if sa_quant {
+        SaQuant::omega(dim, spec.sa_levels)
+    } else {
+        samplings.iter().map(|s| s.omega()).fold(0.0, f64::max)
+    };
+    let variance_scale = if sa_quant {
+        quant_tilde
+    } else if matrix_aware {
         samplings
             .iter()
             .zip(&sm.locals)
@@ -303,6 +342,14 @@ pub fn build_accel(
         .enumerate()
         .map(|(i, s)| {
             let root = roots.as_ref().map(|r| r[i].clone());
+            let quant = if sa_quant {
+                Some(std::mem::replace(
+                    &mut quants[i],
+                    SaQuant::diag(0, &[]),
+                ))
+            } else {
+                None
+            };
             Box::new(AccelWorker {
                 compressor: root.as_ref().map(|_| MatrixAware::new(s.clone())),
                 sampling: s,
@@ -314,6 +361,8 @@ pub fn build_accel(
                 diff: vec![0.0; dim],
                 dbar: vec![0.0; dim],
                 coeff: Vec::new(),
+                quant_dec: quant.as_ref().map(|q| q.decompressor()),
+                quant,
             }) as Box<dyn WorkerAlgo + Send>
         })
         .collect();
@@ -328,6 +377,7 @@ pub fn build_accel(
         w: spec.x0.clone(),
         h: vec![0.0; dim],
         roots,
+        quant_decomp,
         dbar: vec![0.0; dim],
         delta_bar: vec![0.0; dim],
         scratch: vec![0.0; dim],

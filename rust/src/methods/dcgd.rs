@@ -2,11 +2,19 @@
 //! the original baseline with *standard* (smoothness-unaware) unbiased
 //! sparsification `C_i ∇f_i(x^k)`. Converges linearly only to a
 //! neighborhood of x* (Theorem 2 analogue with 𝓛̃ → ωL_max).
+//!
+//! Also the host for the alternative uplink families selectable via
+//! `MethodSpec::compressor`:
+//! * `sa-quant` — smoothness-aware quantization (arXiv:2106.03524),
+//!   stepsize from Theorem 2's 𝓛̃ with 𝓛̃ = ω_q·λ_max(W_i²);
+//! * `topk` — greedy top-k (biased; stepsize heuristic treats it like an
+//!   ω = d/k − 1 unbiased sketch, a documented baseline convention).
 
-use crate::compress::sketch_compress;
+use crate::compress::{UplinkCompressor, UplinkDecompressor};
 use crate::methods::prox::Prox;
 use crate::methods::{
-    dense_downlink_into, stepsize, Downlink, MethodSpec, ServerAlgo, Uplink, WorkerAlgo,
+    dense_downlink_into, sa_quant_family, stepsize, Downlink, MethodSpec, ServerAlgo, Uplink,
+    WorkerAlgo,
 };
 use crate::objective::Smoothness;
 use crate::runtime::GradEngine;
@@ -14,7 +22,7 @@ use crate::sampling::IndependentSampling;
 use crate::util::rng::Rng;
 
 pub struct DcgdWorker {
-    sampling: IndependentSampling,
+    compressor: UplinkCompressor,
     grad: Vec<f64>,
 }
 
@@ -37,7 +45,7 @@ impl WorkerAlgo for DcgdWorker {
             _ => unreachable!("dcgd uses dense downlinks"),
         };
         engine.grad_into(x, &mut self.grad);
-        sketch_compress(&self.grad, &self.sampling, rng, &mut up.delta);
+        self.compressor.compress(&self.grad, rng, &mut up.delta);
         up.delta2 = None;
     }
 
@@ -51,6 +59,9 @@ pub struct DcgdServer {
     gamma: f64,
     prox: Prox,
     g: Vec<f64>,
+    /// one per worker, in shard order (sa-quant unwhitens with that
+    /// worker's W_i; Identity for the sketch/top-k families)
+    decomp: Vec<UplinkDecompressor>,
 }
 
 impl ServerAlgo for DcgdServer {
@@ -66,10 +77,8 @@ impl ServerAlgo for DcgdServer {
 
     fn apply(&mut self, ups: &[Uplink], _rng: &mut Rng) {
         self.g.fill(0.0);
-        for u in ups {
-            for (k, &i) in u.delta.idx.iter().enumerate() {
-                self.g[i as usize] += u.delta.val[k];
-            }
+        for (u, dec) in ups.iter().zip(self.decomp.iter_mut()) {
+            dec.accumulate(&u.delta, &mut self.g);
         }
         let step = self.gamma / ups.len() as f64;
         for j in 0..self.x.len() {
@@ -104,21 +113,60 @@ pub fn build(
     spec: &MethodSpec,
     sm: &Smoothness,
 ) -> (Box<dyn ServerAlgo>, Vec<Box<dyn WorkerAlgo + Send>>) {
+    use crate::compress::CompressorKind;
+
     let dim = sm.dim;
-    // the original method always uses uniform (smoothness-unaware) sampling
-    let sampling = IndependentSampling::uniform(dim, spec.tau);
-    let omega = sampling.omega();
-    let gamma = stepsize::dcgd_gamma(sm, omega);
+    let n = sm.n();
+    let (compressors, decomp, gamma): (Vec<UplinkCompressor>, Vec<UplinkDecompressor>, f64) =
+        match spec.compressor {
+            CompressorKind::SaQuant => {
+                let (quants, decomp, tilde_max) =
+                    sa_quant_family(sm, spec.sa_levels, spec.sa_weighting);
+                let gamma = stepsize::dcgd_plus_gamma(sm, tilde_max);
+                (
+                    quants.into_iter().map(UplinkCompressor::SaQuant).collect(),
+                    decomp,
+                    gamma,
+                )
+            }
+            CompressorKind::TopK => {
+                let k = (spec.tau.round() as usize).clamp(1, dim);
+                // top-k is biased; the unified theory has no γ for it, so
+                // take the ω an unbiased sketch of the same budget has
+                let omega = dim as f64 / k as f64 - 1.0;
+                (
+                    (0..n).map(|_| UplinkCompressor::TopK(k)).collect(),
+                    (0..n).map(|_| UplinkDecompressor::Identity).collect(),
+                    stepsize::dcgd_gamma(sm, omega),
+                )
+            }
+            _ => {
+                // the original method always uses the uniform
+                // (smoothness-unaware) sketch
+                let sampling = IndependentSampling::uniform(dim, spec.tau);
+                let omega = sampling.omega();
+                let gamma = stepsize::dcgd_gamma(sm, omega);
+                (
+                    (0..n)
+                        .map(|_| UplinkCompressor::Sketch(sampling.clone()))
+                        .collect(),
+                    (0..n).map(|_| UplinkDecompressor::Identity).collect(),
+                    gamma,
+                )
+            }
+        };
     let server = Box::new(DcgdServer {
         x: spec.x0.clone(),
         gamma,
         prox: Prox::None,
         g: vec![0.0; dim],
+        decomp,
     });
-    let workers = (0..sm.n())
-        .map(|_| {
+    let workers = compressors
+        .into_iter()
+        .map(|c| {
             Box::new(DcgdWorker {
-                sampling: sampling.clone(),
+                compressor: c,
                 grad: vec![0.0; dim],
             }) as Box<dyn WorkerAlgo + Send>
         })

@@ -5,11 +5,18 @@
 //! convergence to x* (unlike DCGD).
 //!
 //! Theory parameters: γ = 1/(L + 6ωL_max/n), α = 1/(1+ω).
+//!
+//! With `MethodSpec::compressor = sa-quant` the sketch is replaced by
+//! smoothness-aware quantization (arXiv:2106.03524): the message lives in
+//! the whitened geometry, so both the server's aggregation *and* the
+//! worker's own shift update route through the matching decompressor,
+//! and the stepsize takes Theorem 3's 𝓛̃ form with 𝓛̃ = ω_q·λ_max(W_i²).
 
-use crate::compress::sketch_compress;
+use crate::compress::{UplinkCompressor, UplinkDecompressor};
 use crate::methods::prox::Prox;
 use crate::methods::{
-    dense_downlink_into, stepsize, Downlink, MethodSpec, ServerAlgo, Uplink, WorkerAlgo,
+    dense_downlink_into, sa_quant_family, stepsize, Downlink, MethodSpec, ServerAlgo, Uplink,
+    WorkerAlgo,
 };
 use crate::objective::Smoothness;
 use crate::runtime::GradEngine;
@@ -17,7 +24,10 @@ use crate::sampling::IndependentSampling;
 use crate::util::rng::Rng;
 
 pub struct DianaWorker {
-    sampling: IndependentSampling,
+    compressor: UplinkCompressor,
+    /// this worker's own unwhitener — the shift h_i lives in gradient
+    /// space while the message is whitened (Identity under the sketch)
+    decomp: UplinkDecompressor,
     alpha: f64,
     h: Vec<f64>,
     diff: Vec<f64>,
@@ -46,11 +56,10 @@ impl WorkerAlgo for DianaWorker {
         for j in 0..self.diff.len() {
             self.diff[j] = self.grad[j] - self.h[j];
         }
-        sketch_compress(&self.diff, &self.sampling, rng, &mut up.delta);
+        self.compressor.compress(&self.diff, rng, &mut up.delta);
         // h_i ← h_i + α·Ĉ(∇f_i − h_i)  (same compressed message)
-        for (k, &i) in up.delta.idx.iter().enumerate() {
-            self.h[i as usize] += self.alpha * up.delta.val[k];
-        }
+        self.decomp
+            .accumulate_scaled(&up.delta, self.alpha, &mut self.h);
         up.delta2 = None;
     }
 
@@ -75,6 +84,8 @@ pub struct DianaServer {
     alpha: f64,
     prox: Prox,
     dbar: Vec<f64>,
+    /// one per worker, in shard order
+    decomp: Vec<UplinkDecompressor>,
 }
 
 impl ServerAlgo for DianaServer {
@@ -90,10 +101,8 @@ impl ServerAlgo for DianaServer {
 
     fn apply(&mut self, ups: &[Uplink], _rng: &mut Rng) {
         self.dbar.fill(0.0);
-        for u in ups {
-            for (k, &i) in u.delta.idx.iter().enumerate() {
-                self.dbar[i as usize] += u.delta.val[k];
-            }
+        for (u, dec) in ups.iter().zip(self.decomp.iter_mut()) {
+            dec.accumulate(&u.delta, &mut self.dbar);
         }
         let inv_n = 1.0 / ups.len() as f64;
         for j in 0..self.x.len() {
@@ -134,11 +143,44 @@ pub fn build(
     spec: &MethodSpec,
     sm: &Smoothness,
 ) -> (Box<dyn ServerAlgo>, Vec<Box<dyn WorkerAlgo + Send>>) {
+    use crate::compress::{CompressorKind, SaQuant};
+
     let dim = sm.dim;
-    let sampling = IndependentSampling::uniform(dim, spec.tau);
-    let omega = sampling.omega();
-    let gamma = stepsize::diana_gamma(sm, omega);
-    let alpha = stepsize::diana_alpha(omega);
+    let n = sm.n();
+    let (compressors, worker_decomp, server_decomp, gamma, alpha): (
+        Vec<UplinkCompressor>,
+        Vec<UplinkDecompressor>,
+        Vec<UplinkDecompressor>,
+        f64,
+        f64,
+    ) = match spec.compressor {
+        CompressorKind::SaQuant => {
+            let (quants, server_decomp, tilde_max) =
+                sa_quant_family(sm, spec.sa_levels, spec.sa_weighting);
+            let omega_q = SaQuant::omega(dim, spec.sa_levels);
+            let worker_decomp = quants.iter().map(|q| q.decompressor()).collect();
+            (
+                quants.into_iter().map(UplinkCompressor::SaQuant).collect(),
+                worker_decomp,
+                server_decomp,
+                stepsize::diana_plus_gamma(sm, tilde_max),
+                stepsize::diana_alpha(omega_q),
+            )
+        }
+        _ => {
+            let sampling = IndependentSampling::uniform(dim, spec.tau);
+            let omega = sampling.omega();
+            (
+                (0..n)
+                    .map(|_| UplinkCompressor::Sketch(sampling.clone()))
+                    .collect(),
+                (0..n).map(|_| UplinkDecompressor::Identity).collect(),
+                (0..n).map(|_| UplinkDecompressor::Identity).collect(),
+                stepsize::diana_gamma(sm, omega),
+                stepsize::diana_alpha(omega),
+            )
+        }
+    };
     let server = Box::new(DianaServer {
         x: spec.x0.clone(),
         h: vec![0.0; dim],
@@ -146,11 +188,15 @@ pub fn build(
         alpha,
         prox: Prox::None,
         dbar: vec![0.0; dim],
+        decomp: server_decomp,
     });
-    let workers = (0..sm.n())
-        .map(|_| {
+    let workers = compressors
+        .into_iter()
+        .zip(worker_decomp)
+        .map(|(c, d)| {
             Box::new(DianaWorker {
-                sampling: sampling.clone(),
+                compressor: c,
+                decomp: d,
                 alpha,
                 h: vec![0.0; dim],
                 diff: vec![0.0; dim],

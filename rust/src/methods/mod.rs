@@ -40,9 +40,11 @@ pub mod single;
 pub mod solve;
 pub mod stepsize;
 
-use crate::compress::SparseMsg;
+use crate::compress::{QuantWeighting, SaQuant, SparseMsg, UplinkDecompressor};
+use crate::objective::Smoothness;
 use crate::runtime::GradEngine;
 use crate::util::rng::Rng;
+use std::sync::Arc;
 
 /// Server → workers payload.
 #[derive(Clone, Debug)]
@@ -295,11 +297,41 @@ pub const METHOD_NAMES: [&str; 9] = [
     "dgd", "dcgd", "dcgd+", "diana", "diana+", "adiana", "adiana+", "isega+", "diana++",
 ];
 
+/// One [`SaQuant`] per worker (from its local L_i), the matching
+/// server-side decompressors, and the effective variance bound
+/// 𝓛̃ = ω_q·λ_max(W_i²) the `+`-family stepsizes take (ω_q is stated in
+/// the whitened geometry, so un-whitening scales it by the largest
+/// eigenvalue of W² — max_j L_jj for Diag weighting, λ_max(L_i) for Root).
+pub(crate) fn sa_quant_family(
+    sm: &Smoothness,
+    levels: u32,
+    weighting: QuantWeighting,
+) -> (Vec<SaQuant>, Vec<UplinkDecompressor>, f64) {
+    let omega_q = SaQuant::omega(sm.dim, levels);
+    let mut quants = Vec::with_capacity(sm.n());
+    let mut scale_max = 0.0f64;
+    for loc in &sm.locals {
+        match weighting {
+            QuantWeighting::Diag => {
+                scale_max = scale_max.max(loc.diag.iter().cloned().fold(0.0, f64::max));
+                quants.push(SaQuant::diag(levels, &loc.diag));
+            }
+            QuantWeighting::Root => {
+                let root = Arc::new(loc.root.clone());
+                scale_max = scale_max.max(root.lambda_max());
+                quants.push(SaQuant::root(levels, root));
+            }
+        }
+    }
+    let decomp = quants.iter().map(|q| q.decompressor()).collect();
+    (quants, decomp, omega_q * scale_max)
+}
+
 pub use builder::{build, MethodSpec};
 
 mod builder {
     use super::*;
-    use crate::objective::Smoothness;
+    use crate::compress::CompressorKind;
     use crate::sampling::SamplingKind;
 
     /// Everything needed to instantiate a method.
@@ -313,6 +345,14 @@ mod builder {
         pub x0: Vec<f64>,
         /// relax ADIANA(+) constants as the paper's §6.1 does
         pub practical_adiana: bool,
+        /// uplink compressor family (`Default` = what the method's theory
+        /// prescribes — the diagonal sketch for baselines, matrix-aware
+        /// for the `+` family)
+        pub compressor: CompressorKind,
+        /// sa-quant dither levels `s` (0 = exact passthrough sentinel)
+        pub sa_levels: u32,
+        /// sa-quant weighting `W` (diag = Diag(L_i)^{1/2}, root = L_i^{1/2})
+        pub sa_weighting: QuantWeighting,
     }
 
     impl MethodSpec {
@@ -324,13 +364,44 @@ mod builder {
                 mu,
                 x0,
                 practical_adiana: true,
+                compressor: CompressorKind::Default,
+                sa_levels: 4,
+                sa_weighting: QuantWeighting::Diag,
             }
         }
+    }
+
+    /// Which methods each non-default compressor family applies to: the
+    /// baselines own the smoothness-*unaware* families (sketch, sa-quant's
+    /// whitening replaces their sketch; top-k is the DCGD-only biased
+    /// heuristic), while the `+` family is matrix-aware by construction.
+    fn check_compressor(name: &str, spec: &MethodSpec) -> anyhow::Result<()> {
+        let ok = match spec.compressor {
+            CompressorKind::Default => true,
+            CompressorKind::Sketch | CompressorKind::SaQuant => {
+                matches!(name, "dcgd" | "diana" | "adiana")
+            }
+            CompressorKind::MatrixAware => {
+                matches!(name, "dcgd+" | "diana+" | "adiana+" | "isega+" | "diana++")
+            }
+            CompressorKind::TopK => name == "dcgd",
+        };
+        if !ok {
+            anyhow::bail!(
+                "compressor '{}' is not applicable to method '{name}' \
+                 (sketch/sa-quant: dcgd|diana|adiana; matrix-aware: \
+                 dcgd+|diana+|adiana+|isega+|diana++; topk: dcgd; \
+                 default: any method)",
+                spec.compressor.name()
+            );
+        }
+        Ok(())
     }
 
     /// Build a method instance from its spec and the problem smoothness.
     pub fn build(spec: &MethodSpec, sm: &Smoothness) -> anyhow::Result<Method> {
         let name = spec.name.as_str();
+        check_compressor(name, spec)?;
         let (server, workers): (Box<dyn ServerAlgo>, Vec<Box<dyn WorkerAlgo + Send>>) = match name
         {
             "dgd" => dgd::build(spec, sm),
@@ -463,6 +534,106 @@ mod tests {
         assert_eq!(up_a.delta, up_b.delta, "restored worker diverged");
         // malformed blobs are rejected
         assert!(!w2.load_state(&blob[..blob.len() - 1]));
+    }
+
+    #[test]
+    fn compressor_applicability_is_enforced() {
+        use crate::compress::CompressorKind;
+        use crate::data::synth;
+        use crate::sampling::SamplingKind;
+
+        let ds = synth::generate(&synth::tiny_spec(), 5);
+        let (global, shards) = ds.prepare(2, 5);
+        let sm = Smoothness::build(&shards, 1e-3).with_global(&global.a);
+        let mk = |name: &str, c: CompressorKind| {
+            let mut s = MethodSpec::new(name, 2.0, SamplingKind::Uniform, 1e-3, vec![0.0; sm.dim]);
+            s.compressor = c;
+            s
+        };
+        // allowed combinations build
+        for (name, c) in [
+            ("dcgd", CompressorKind::Sketch),
+            ("dcgd", CompressorKind::SaQuant),
+            ("dcgd", CompressorKind::TopK),
+            ("diana", CompressorKind::SaQuant),
+            ("adiana", CompressorKind::SaQuant),
+            ("diana+", CompressorKind::MatrixAware),
+            ("dgd", CompressorKind::Default),
+        ] {
+            assert!(build(&mk(name, c), &sm).is_ok(), "{name} + {}", c.name());
+        }
+        // disallowed combinations bail with a clear message
+        for (name, c) in [
+            ("dgd", CompressorKind::Sketch),
+            ("dcgd+", CompressorKind::SaQuant),
+            ("diana", CompressorKind::TopK),
+            ("diana+", CompressorKind::Sketch),
+            ("adiana+", CompressorKind::SaQuant),
+        ] {
+            let err = build(&mk(name, c), &sm).unwrap_err().to_string();
+            assert!(
+                err.contains("not applicable"),
+                "{name} + {} gave: {err}",
+                c.name()
+            );
+        }
+    }
+
+    #[test]
+    fn sa_quant_methods_run_and_snapshot_roundtrip() {
+        // the diana worker/server state machinery must survive sa-quant's
+        // whitened messages (shift updates route through the decompressor)
+        use crate::compress::{CompressorKind, QuantWeighting};
+        use crate::data::synth;
+        use crate::runtime::native::NativeEngine;
+        use crate::sampling::SamplingKind;
+
+        let ds = synth::generate(&synth::tiny_spec(), 5);
+        let (_, shards) = ds.prepare(2, 5);
+        let sm = Smoothness::build(&shards, 1e-3);
+        for name in ["dcgd", "diana", "adiana"] {
+            for weighting in [QuantWeighting::Diag, QuantWeighting::Root] {
+                let mut spec =
+                    MethodSpec::new(name, 2.0, SamplingKind::Uniform, 1e-3, vec![0.0; sm.dim]);
+                spec.compressor = CompressorKind::SaQuant;
+                spec.sa_levels = 4;
+                spec.sa_weighting = weighting;
+                let mut m = build(&spec, &sm).unwrap();
+                let mut m2 = build(&spec, &sm).unwrap();
+                let mut engines: Vec<Box<dyn GradEngine>> = shards
+                    .iter()
+                    .map(|s| Box::new(NativeEngine::from_shard(s, 1e-3)) as Box<dyn GradEngine>)
+                    .collect();
+                let mut server_rng = Rng::new(3).derive(u64::MAX);
+                let mut worker_rngs: Vec<Rng> =
+                    (0..shards.len() as u64).map(|i| Rng::new(3).derive(i)).collect();
+                let mut bufs = RoundBuffers::new(shards.len());
+                for _ in 0..4 {
+                    sync_round(&mut m, &mut engines, &mut server_rng, &mut worker_rngs, &mut bufs);
+                }
+                assert!(
+                    m.server.iterate().iter().all(|v| v.is_finite()),
+                    "{name}/{:?}: non-finite iterate",
+                    weighting
+                );
+                let mut blob = Vec::new();
+                m.server.save_state(&mut blob);
+                assert!(m2.server.load_state(&blob), "{name}: server blob must load");
+                for (w, w2) in m.workers.iter().zip(m2.workers.iter_mut()) {
+                    let mut wb = Vec::new();
+                    w.save_state(&mut wb);
+                    assert!(w2.load_state(&wb), "{name}: worker blob must load");
+                }
+                let mut rng_b = server_rng.clone();
+                let mut wr_b = worker_rngs.clone();
+                let mut bufs_b = RoundBuffers::new(shards.len());
+                sync_round(&mut m, &mut engines, &mut server_rng, &mut worker_rngs, &mut bufs);
+                sync_round(&mut m2, &mut engines, &mut rng_b, &mut wr_b, &mut bufs_b);
+                let a: Vec<u64> = m.server.iterate().iter().map(|v| v.to_bits()).collect();
+                let b: Vec<u64> = m2.server.iterate().iter().map(|v| v.to_bits()).collect();
+                assert_eq!(a, b, "{name}/{weighting:?}: restored server diverged");
+            }
+        }
     }
 
     #[test]

@@ -22,7 +22,7 @@
 //! `(q/qmax)·scale`. Tests assert both the exact spec and the implied
 //! error bound `|v̂ − v| ≤ scale/(2·qmax)`.
 
-use crate::compress::SparseMsg;
+use crate::compress::{CompressorKind, QuantWeighting, SparseMsg};
 use crate::methods::{Downlink, Uplink};
 use crate::sampling::SamplingKind;
 use crate::util::json::Json;
@@ -279,9 +279,9 @@ fn quantize(v: f64, scale: f64, qmax: f64) -> i32 {
     (v / scale * qmax).round().clamp(-qmax, qmax) as i32
 }
 
-fn put_values(out: &mut Vec<u8>, vals: &[f64], payload: Payload) {
+fn put_values(out: &mut Vec<u8>, vals: &[f64], payload: Payload) -> Result<()> {
     if vals.is_empty() {
-        return;
+        return Ok(());
     }
     match payload {
         Payload::F64 => {
@@ -295,6 +295,17 @@ fn put_values(out: &mut Vec<u8>, vals: &[f64], payload: Payload) {
             }
         }
         Payload::Q16 | Payload::Q8 | Payload::Q4 => {
+            // A NaN or ±inf poisons the whole block: block_scale becomes
+            // non-finite (or NaN-skipped), and every quantize() in the
+            // block silently decodes to garbage. The float payloads carry
+            // non-finite values bit-transparently, so only the q-path
+            // refuses them.
+            if let Some(bad) = vals.iter().find(|v| !v.is_finite()) {
+                return Err(WireError::new(format!(
+                    "non-finite value {bad} cannot be encoded under a quantized payload ({})",
+                    payload.name()
+                )));
+            }
             let scale = block_scale(vals);
             let qmax = payload.qmax();
             out.extend_from_slice(&scale.to_bits().to_le_bytes());
@@ -325,6 +336,7 @@ fn put_values(out: &mut Vec<u8>, vals: &[f64], payload: Payload) {
             }
         }
     }
+    Ok(())
 }
 
 fn get_values(
@@ -422,11 +434,11 @@ fn idx_sorted(idx: &[u32]) -> bool {
     idx.windows(2).all(|w| w[0] < w[1])
 }
 
-fn put_sparse(out: &mut Vec<u8>, msg: &SparseMsg, payload: Payload) {
+fn put_sparse(out: &mut Vec<u8>, msg: &SparseMsg, payload: Payload) -> Result<()> {
     let k = msg.idx.len();
     put_varint(out, k as u64);
     if k == 0 {
-        return;
+        return Ok(());
     }
     if idx_sorted(&msg.idx) {
         out.push(IDX_SORTED_GAP);
@@ -440,7 +452,7 @@ fn put_sparse(out: &mut Vec<u8>, msg: &SparseMsg, payload: Payload) {
             put_varint(out, i as u64);
         }
     }
-    put_values(out, &msg.val, payload);
+    put_values(out, &msg.val, payload)
 }
 
 fn get_sparse(
@@ -504,9 +516,9 @@ fn dense_len(n: usize, payload: Payload) -> usize {
     varint_len(n as u64) + values_len(n, payload)
 }
 
-fn put_dense(out: &mut Vec<u8>, vals: &[f64], payload: Payload) {
+fn put_dense(out: &mut Vec<u8>, vals: &[f64], payload: Payload) -> Result<()> {
     put_varint(out, vals.len() as u64);
-    put_values(out, vals, payload);
+    put_values(out, vals, payload)
 }
 
 fn get_dense(
@@ -526,15 +538,20 @@ fn get_dense(
 // ---- uplink frames -----------------------------------------------------
 
 /// Serialize `up` (frame body only — transports add the length prefix).
-pub fn put_uplink(out: &mut Vec<u8>, up: &Uplink, shard: usize, payload: Payload) {
+///
+/// Fails without writing a decodable frame when a quantized payload meets
+/// a non-finite value; callers must treat the buffer as poisoned (every
+/// runtime call site clears or drops it on error).
+pub fn put_uplink(out: &mut Vec<u8>, up: &Uplink, shard: usize, payload: Payload) -> Result<()> {
     out.push(TAG_UPLINK);
     put_varint(out, shard as u64);
     out.push(payload.id());
     out.push(up.delta2.is_some() as u8);
-    put_sparse(out, &up.delta, payload);
+    put_sparse(out, &up.delta, payload)?;
     if let Some(d2) = &up.delta2 {
-        put_sparse(out, d2, payload);
+        put_sparse(out, d2, payload)?;
     }
+    Ok(())
 }
 
 /// Read the shard index of an uplink frame without decoding the message —
@@ -586,31 +603,33 @@ pub fn uplink_frame_len(up: &Uplink, shard: usize, payload: Payload) -> usize {
 
 // ---- downlink frames ---------------------------------------------------
 
-/// Serialize `down` (frame body only).
-pub fn put_downlink(out: &mut Vec<u8>, down: &Downlink, payload: Payload) {
+/// Serialize `down` (frame body only). Errs like [`put_uplink`] when a
+/// quantized payload meets a non-finite value.
+pub fn put_downlink(out: &mut Vec<u8>, down: &Downlink, payload: Payload) -> Result<()> {
     out.push(TAG_DOWNLINK);
     out.push(payload.id());
     match down {
         Downlink::Dense { x, w } => match w {
             Some(w) => {
                 out.push(DOWN_DENSE_W);
-                put_dense(out, x, payload);
-                put_dense(out, w, payload);
+                put_dense(out, x, payload)?;
+                put_dense(out, w, payload)?;
             }
             None => {
                 out.push(DOWN_DENSE);
-                put_dense(out, x, payload);
+                put_dense(out, x, payload)?;
             }
         },
         Downlink::Sparse { delta } => {
             out.push(DOWN_SPARSE);
-            put_sparse(out, delta, payload);
+            put_sparse(out, delta, payload)?;
         }
         Downlink::Init { x } => {
             out.push(DOWN_INIT);
-            put_dense(out, x, payload);
+            put_dense(out, x, payload)?;
         }
     }
+    Ok(())
 }
 
 /// Decode a downlink frame body into `down`, reusing its buffers when the
@@ -857,6 +876,12 @@ pub struct Hello {
     pub sampling: SamplingKind,
     pub method: String,
     pub practical_adiana: bool,
+    /// uplink compressor family (trajectory-defining, like `method`)
+    pub compressor: CompressorKind,
+    /// quantization levels s for `sa-quant`
+    pub sa_levels: u32,
+    /// diag-vs-root weighting for `sa-quant`
+    pub sa_weighting: QuantWeighting,
     pub payload: Payload,
     pub need_global: bool,
     /// shard indices this process hosts (ascending)
@@ -880,6 +905,9 @@ pub fn put_hello(out: &mut Vec<u8>, h: &Hello) {
         ("sampling", Json::Str(h.sampling.name().to_string())),
         ("method", Json::Str(h.method.clone())),
         ("practical_adiana", Json::Bool(h.practical_adiana)),
+        ("compressor", Json::Str(h.compressor.name().to_string())),
+        ("sa_levels", Json::Num(h.sa_levels as f64)),
+        ("sa_weighting", Json::Str(h.sa_weighting.name().to_string())),
         ("payload", Json::Str(h.payload.name().to_string())),
         ("need_global", Json::Bool(h.need_global)),
         (
@@ -922,6 +950,23 @@ pub fn get_hello(body: &[u8]) -> Result<Hello> {
     };
     let sampling_name = str_field("sampling")?;
     let payload_name = str_field("payload")?;
+    // compressor fields are absent in pre-compressor hellos: default them
+    // ("default"/4/"diag") so old peers keep working, but reject garbage
+    let compressor = match j.get("compressor").as_str() {
+        None => CompressorKind::Default,
+        Some(s) => CompressorKind::parse(s)
+            .ok_or_else(|| WireError::new(format!("hello: bad compressor '{s}'")))?,
+    };
+    let sa_levels = match j.get("sa_levels").as_f64() {
+        None => 4,
+        Some(v) if v >= 0.0 && v <= u32::MAX as f64 && v.fract() == 0.0 => v as u32,
+        Some(v) => return Err(WireError::new(format!("hello: bad sa_levels {v}"))),
+    };
+    let sa_weighting = match j.get("sa_weighting").as_str() {
+        None => QuantWeighting::Diag,
+        Some(s) => QuantWeighting::parse(s)
+            .ok_or_else(|| WireError::new(format!("hello: bad sa_weighting '{s}'")))?,
+    };
     let shards = j
         .get("shards")
         .as_arr()
@@ -956,6 +1001,9 @@ pub fn get_hello(body: &[u8]) -> Result<Hello> {
             .ok_or_else(|| WireError::new(format!("hello: bad sampling '{sampling_name}'")))?,
         method: str_field("method")?,
         practical_adiana: j.get("practical_adiana").as_bool().unwrap_or(true),
+        compressor,
+        sa_levels,
+        sa_weighting,
         payload: Payload::parse(&payload_name)
             .ok_or_else(|| WireError::new(format!("hello: bad payload '{payload_name}'")))?,
         need_global: j.get("need_global").as_bool().unwrap_or(false),
@@ -1007,7 +1055,7 @@ mod tests {
             delta2: Some(msg(&[(5, 1e300)])),
         };
         let mut body = Vec::new();
-        put_uplink(&mut body, &up, 42, Payload::F64);
+        put_uplink(&mut body, &up, 42, Payload::F64).unwrap();
         assert_eq!(
             body.len() + FRAME_PREFIX,
             uplink_frame_len(&up, 42, Payload::F64)
@@ -1026,7 +1074,7 @@ mod tests {
             delta2: None,
         };
         let mut body = Vec::new();
-        put_uplink(&mut body, &up, 0, Payload::F64);
+        put_uplink(&mut body, &up, 0, Payload::F64).unwrap();
         let mut dec = Uplink::default();
         get_uplink(&body, 10, &mut dec).unwrap();
         assert_eq!(dec.delta, up.delta);
@@ -1037,7 +1085,7 @@ mod tests {
         for p in Payload::ALL {
             let up = Uplink::default();
             let mut body = Vec::new();
-            put_uplink(&mut body, &up, 3, p);
+            put_uplink(&mut body, &up, 3, p).unwrap();
             assert_eq!(body.len() + FRAME_PREFIX, uplink_frame_len(&up, 3, p));
             let mut dec = Uplink {
                 delta: msg(&[(1, 1.0)]),
@@ -1061,7 +1109,7 @@ mod tests {
                 delta2: None,
             };
             let mut body = Vec::new();
-            put_uplink(&mut body, &up, 0, p);
+            put_uplink(&mut body, &up, 0, p).unwrap();
             let mut dec = Uplink::default();
             get_uplink(&body, 10, &mut dec).unwrap();
             let bound = p.max_abs_err(scale) * (1.0 + 1e-12);
@@ -1099,7 +1147,7 @@ mod tests {
         ];
         for orig in &cases {
             let mut body = Vec::new();
-            put_downlink(&mut body, orig, Payload::F64);
+            put_downlink(&mut body, orig, Payload::F64).unwrap();
             assert_eq!(
                 body.len() + FRAME_PREFIX,
                 downlink_frame_len(orig, Payload::F64)
@@ -1131,7 +1179,8 @@ mod tests {
             },
             1,
             Payload::F64,
-        );
+        )
+        .unwrap();
         // truncations at every prefix length
         for cut in 0..body.len() {
             let mut dec = Uplink::default();
@@ -1158,6 +1207,9 @@ mod tests {
             sampling: SamplingKind::ImportanceDiana,
             method: "diana+".into(),
             practical_adiana: false,
+            compressor: CompressorKind::SaQuant,
+            sa_levels: 8,
+            sa_weighting: QuantWeighting::Root,
             payload: Payload::Q8,
             need_global: true,
             shards: vec![1, 54, 107 - 1],
@@ -1175,6 +1227,9 @@ mod tests {
         assert_eq!(d.sampling, h.sampling);
         assert_eq!(d.method, h.method);
         assert_eq!(d.practical_adiana, h.practical_adiana);
+        assert_eq!(d.compressor, h.compressor);
+        assert_eq!(d.sa_levels, h.sa_levels);
+        assert_eq!(d.sa_weighting, h.sa_weighting);
         assert_eq!(d.payload, h.payload);
         assert_eq!(d.need_global, h.need_global);
         assert_eq!(d.shards, h.shards);
@@ -1253,6 +1308,68 @@ mod tests {
         // cross-tag rejection
         assert!(get_restore(&[TAG_SNAP_REQ, 1]).is_err());
         assert!(get_snap_req(&[TAG_RESTORE, 1, 0]).is_err());
+    }
+
+    #[test]
+    fn hello_without_compressor_fields_defaults() {
+        // a pre-compressor peer's hello header omits the three new keys;
+        // decode must fall back to the historical behaviour, not error
+        let json = concat!(
+            r#"{"dataset":"tiny","seed":"7","workers":4,"mu":0.001,"tau":2,"#,
+            r#""sampling":"uniform","method":"dcgd","practical_adiana":true,"#,
+            r#""payload":"f64","need_global":false,"shards":[0]}"#
+        );
+        let mut body = vec![TAG_HELLO];
+        body.extend_from_slice(&(json.len() as u32).to_le_bytes());
+        body.extend_from_slice(json.as_bytes());
+        body.extend_from_slice(&2u32.to_le_bytes());
+        for v in [0.5f64, -1.0] {
+            body.extend_from_slice(&v.to_bits().to_le_bytes());
+        }
+        let h = get_hello(&body).unwrap();
+        assert_eq!(h.compressor, CompressorKind::Default);
+        assert_eq!(h.sa_levels, 4);
+        assert_eq!(h.sa_weighting, QuantWeighting::Diag);
+    }
+
+    #[test]
+    fn non_finite_values_reject_quantized_payloads() {
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let up = Uplink {
+                delta: msg(&[(0, 1.0), (4, bad), (9, -2.0)]),
+                delta2: None,
+            };
+            for p in [Payload::Q16, Payload::Q8, Payload::Q4] {
+                let mut body = Vec::new();
+                let err = put_uplink(&mut body, &up, 0, p).unwrap_err();
+                assert!(
+                    err.to_string().contains("non-finite"),
+                    "{}: unexpected error {err}",
+                    p.name()
+                );
+                let mut dbody = Vec::new();
+                assert!(put_downlink(
+                    &mut dbody,
+                    &Downlink::Sparse {
+                        delta: up.delta.clone()
+                    },
+                    p
+                )
+                .is_err());
+            }
+            // the float payloads stay transparent: f64 bit-exact (NaN
+            // included), f32 via the `v as f32` cast
+            for (p, expect) in [
+                (Payload::F64, bad.to_bits()),
+                (Payload::F32, f64::from(bad as f32).to_bits()),
+            ] {
+                let mut body = Vec::new();
+                put_uplink(&mut body, &up, 0, p).unwrap();
+                let mut dec = Uplink::default();
+                get_uplink(&body, 10, &mut dec).unwrap();
+                assert_eq!(dec.delta.val[1].to_bits(), expect, "{}", p.name());
+            }
+        }
     }
 
     #[test]

@@ -13,7 +13,11 @@
 //!   ([`Payload`]): `f64` (lossless, the reference), `f32`, and `q16`/`q8`/
 //!   `q4` scaled-integer quantization (per-message scale = max |v|, so the
 //!   quantization error is *relative* to the message magnitude and shrinks
-//!   as the method converges). Sparse indices use **delta-varint** coding:
+//!   as the method converges). The float payloads carry non-finite values
+//!   transparently (`f64` bit-for-bit); the quantized payloads *refuse*
+//!   them — `put_uplink`/`put_downlink` return a [`WireError`] rather
+//!   than let one NaN/±inf poison the block's scale and decode to silent
+//!   garbage. Sparse indices use **delta-varint** coding:
 //!   strictly-increasing index sequences (what the sketches and Top-k
 //!   emit) are stored as LEB128 gaps, beating the modeled
 //!   `coords · (float_bits + ⌈log₂ d⌉)` bit account for large-d uplinks;

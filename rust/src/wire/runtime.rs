@@ -238,7 +238,7 @@ pub fn server_round(
 
     server.downlink_into(&mut st.down);
     st.down_buf.clear();
-    codec::put_downlink(&mut st.down_buf, &st.down, payload);
+    codec::put_downlink(&mut st.down_buf, &st.down, payload)?;
     t.coords_down = (st.down.coords() * n) as u64;
     t.bytes_down = ((codec::FRAME_PREFIX + st.down_buf.len()) * hosts.len()) as u64;
     for h in hosts.iter_mut() {
@@ -396,7 +396,7 @@ impl ShardRunner {
             .round_into(down, self.engine.as_mut(), &mut self.rng, &mut self.up);
         if live {
             out.clear();
-            codec::put_uplink(out, &self.up, self.shard, payload);
+            codec::put_uplink(out, &self.up, self.shard, payload)?;
             transport.send(out).context("worker send")?;
         }
         Ok(())
@@ -1564,7 +1564,7 @@ impl ElasticServer {
         let t_down = Instant::now();
         server.downlink_into(&mut self.st.down);
         self.st.down_buf.clear();
-        codec::put_downlink(&mut self.st.down_buf, &self.st.down, self.payload);
+        codec::put_downlink(&mut self.st.down_buf, &self.st.down, self.payload)?;
         phases.add("server_downlink", t_down.elapsed());
 
         // resume verification: the downlink regenerated for this round
@@ -1929,6 +1929,9 @@ pub(crate) fn serve_observed(
         sampling: spec.sampling,
         method: method_name.clone(),
         practical_adiana: spec.practical_adiana,
+        compressor: spec.compressor,
+        sa_levels: spec.sa_levels,
+        sa_weighting: spec.sa_weighting,
         payload,
         need_global: method_name == "diana++",
         shards: Vec::new(),
@@ -2317,6 +2320,9 @@ fn worker_session(addr: &str, opts: &WorkerOpts) -> Result<()> {
         hello.x0.clone(),
     );
     spec.practical_adiana = hello.practical_adiana;
+    spec.compressor = hello.compressor;
+    spec.sa_levels = hello.sa_levels;
+    spec.sa_weighting = hello.sa_weighting;
     let method = build(&spec, &sm)?;
     ensure!(
         hello.shards.iter().all(|&i| i < method.workers.len()),

@@ -187,6 +187,88 @@ fn drivers_bitwise_identical_over_method_sampling_shard_grid() {
 }
 
 #[test]
+fn sa_quant_drivers_bitwise_identical() {
+    // The smoothness-aware quantizer draws one uniform per coordinate
+    // unconditionally, so its RNG consumption is value-independent and
+    // the sim ≡ threaded ≡ distributed(f64) identity must hold exactly —
+    // on both weightings (diag hits the Diag decompressor, root the
+    // PSD-root path) and on the exact-passthrough levels=0 sentinel.
+    use smx::compress::{CompressorKind, QuantWeighting};
+
+    let cell = Cell::new(4);
+    for method in ["dcgd", "diana"] {
+        for (levels, weighting) in [
+            (4u32, QuantWeighting::Diag),
+            (4u32, QuantWeighting::Root),
+            (0u32, QuantWeighting::Diag),
+        ] {
+            let cellname = format!("{method}/sa-quant/{}/s={levels}", weighting.name());
+            let mut spec =
+                MethodSpec::new(method, 1.0, SamplingKind::Uniform, cell.mu, vec![0.0; cell.sm.dim]);
+            spec.compressor = CompressorKind::SaQuant;
+            spec.sa_levels = levels;
+            spec.sa_weighting = weighting;
+
+            let r_sim = cell.run(&spec, Driver::Sim, &cell.cfg);
+            let sim_last = r_sim.records.last().unwrap().clone();
+
+            let r_thr = cell.run(&spec, Driver::Threaded, &cell.cfg);
+            assert_eq!(
+                bits(&r_sim.final_x),
+                bits(&r_thr.final_x),
+                "{cellname}: threaded diverged from sim"
+            );
+            let thr_last = r_thr.records.last().unwrap();
+            assert_eq!(sim_last.coords_up, thr_last.coords_up, "{cellname}: coords_up (threaded)");
+            assert_eq!(sim_last.bits_up, thr_last.bits_up, "{cellname}: bits_up (threaded)");
+            assert_eq!(sim_last.bytes_up, thr_last.bytes_up, "{cellname}: bytes_up (threaded)");
+
+            for procs in [4usize, 2] {
+                let r_dist = cell.run(
+                    &spec,
+                    Driver::Distributed {
+                        transport: DistTransport::Loopback { procs },
+                    },
+                    &cell.cfg,
+                );
+                assert_eq!(
+                    bits(&r_sim.final_x),
+                    bits(&r_dist.final_x),
+                    "{cellname}: distributed(procs={procs}) diverged from sim"
+                );
+                let dist_last = r_dist.records.last().unwrap();
+                assert_eq!(
+                    sim_last.coords_up, dist_last.coords_up,
+                    "{cellname}: coords_up (distributed, procs={procs})"
+                );
+                assert_eq!(
+                    sim_last.bits_up, dist_last.bits_up,
+                    "{cellname}: bits_up (distributed, procs={procs})"
+                );
+                assert_eq!(
+                    sim_last.bytes_up, dist_last.bytes_up,
+                    "{cellname}: measured bytes_up (distributed, procs={procs})"
+                );
+            }
+
+            // quantization must actually perturb the trajectory relative
+            // to the exact method (else the compressor isn't wired in) —
+            // except under the levels=0 exact-passthrough sentinel
+            let exact_spec =
+                MethodSpec::new(method, 1.0, SamplingKind::Uniform, cell.mu, vec![0.0; cell.sm.dim]);
+            let r_exact = cell.run(&exact_spec, Driver::Sim, &cell.cfg);
+            if levels > 0 {
+                assert_ne!(
+                    bits(&r_sim.final_x),
+                    bits(&r_exact.final_x),
+                    "{cellname}: sa-quant trajectory identical to uncompressed — compressor not applied"
+                );
+            }
+        }
+    }
+}
+
+#[test]
 fn streaming_observers_do_not_perturb_the_trajectory() {
     // Observers receive shared references after the server applies each
     // round; attaching a JSONL streaming sink (plus a counting observer)

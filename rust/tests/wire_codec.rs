@@ -70,7 +70,7 @@ fn prop_uplink_f64_roundtrip_bitwise() {
         let up = Uplink { delta, delta2 };
         let shard = rng.below(100_000);
         let mut body = Vec::new();
-        put_uplink(&mut body, &up, shard, Payload::F64);
+        put_uplink(&mut body, &up, shard, Payload::F64).unwrap();
         prop_assert!(
             body.len() + FRAME_PREFIX == uplink_frame_len(&up, shard, Payload::F64),
             "frame_len {} != encoded {}",
@@ -110,7 +110,7 @@ fn prop_frame_len_consistency_all_payloads() {
         let shard = rng.below(300);
         for p in Payload::ALL {
             let mut body = Vec::new();
-            put_uplink(&mut body, &up, shard, p);
+            put_uplink(&mut body, &up, shard, p).unwrap();
             prop_assert!(
                 body.len() + FRAME_PREFIX == uplink_frame_len(&up, shard, p),
                 "{}: frame_len {} != encoded {}",
@@ -139,7 +139,7 @@ fn prop_lossy_payloads_within_error_bounds() {
         let scale = up.delta.val.iter().fold(0.0f64, |a, &v| a.max(v.abs()));
         for p in [Payload::F32, Payload::Q16, Payload::Q8, Payload::Q4] {
             let mut body = Vec::new();
-            put_uplink(&mut body, &up, 0, p);
+            put_uplink(&mut body, &up, 0, p).unwrap();
             let mut dec = Uplink::default();
             get_uplink(&body, d, &mut dec).map_err(|e| e.to_string())?;
             prop_assert!(dec.delta.idx == up.delta.idx, "{}: idx changed", p.name());
@@ -172,7 +172,7 @@ fn empty_and_full_dimension_messages() {
             // empty
             let empty = Uplink::default();
             let mut body = Vec::new();
-            put_uplink(&mut body, &empty, 0, p);
+            put_uplink(&mut body, &empty, 0, p).unwrap();
             assert_eq!(body.len() + FRAME_PREFIX, uplink_frame_len(&empty, 0, p));
             let mut dec = Uplink::default();
             get_uplink(&body, d, &mut dec).unwrap();
@@ -184,7 +184,7 @@ fn empty_and_full_dimension_messages() {
                 full.delta.push(j as u32, rng.uniform_in(-1.0, 1.0));
             }
             body.clear();
-            put_uplink(&mut body, &full, 1, p);
+            put_uplink(&mut body, &full, 1, p).unwrap();
             assert_eq!(body.len() + FRAME_PREFIX, uplink_frame_len(&full, 1, p));
             let mut dec = Uplink::default();
             get_uplink(&body, d, &mut dec).unwrap();
@@ -213,7 +213,7 @@ fn dense_downlink_roundtrip_and_len_all_payloads() {
                 Downlink::Init { x: x.clone() },
             ] {
                 let mut body = Vec::new();
-                put_downlink(&mut body, &down, p);
+                put_downlink(&mut body, &down, p).unwrap();
                 assert_eq!(
                     body.len() + FRAME_PREFIX,
                     downlink_frame_len(&down, p),
@@ -266,7 +266,7 @@ fn topk_measured_bytes_beat_modeled_bits() {
         assert!(measured32 <= up.delta.bits(d, 32) / 8);
         // sanity: the length helper matches a real encode
         let mut body = Vec::new();
-        put_uplink(&mut body, &up, 0, Payload::F64);
+        put_uplink(&mut body, &up, 0, Payload::F64).unwrap();
         assert_eq!(measured as usize, body.len() + FRAME_PREFIX);
     }
 }

@@ -12,6 +12,9 @@
 //! * the `*_frame_len` helpers predict the encoded size exactly (they are
 //!   what the in-process drivers record as measured bytes);
 //! * truncated frames decode to `Err`, never panic;
+//! * non-finite values round-trip bit-exactly under `f64` but are
+//!   *refused* (an `Err`, not a silently-poisoned block) by the
+//!   quantized payloads;
 //! * arbitrary single-byte corruption decodes to `Err` *or* a valid
 //!   message, never panics and never allocates unboundedly;
 //! * the CRC32 frame layer ([`encode_frame`]/[`decode_frame`]) round-trips
@@ -191,7 +194,8 @@ fn fuzz_uplink_roundtrip_per_payload_semantics() {
             let shard = rng.below(1 << 20);
 
             let mut body = Vec::new();
-            codec::put_uplink(&mut body, &up, shard, payload);
+            codec::put_uplink(&mut body, &up, shard, payload)
+                .map_err(|e| format!("{}: encode failed: {e}", payload.name()))?;
             if body.len() + FRAME_PREFIX != codec::uplink_frame_len(&up, shard, payload) {
                 return Err(format!(
                     "{}: frame_len {} != encoded {}",
@@ -254,7 +258,8 @@ fn fuzz_downlink_roundtrip_per_payload_semantics() {
             };
 
             let mut body = Vec::new();
-            codec::put_downlink(&mut body, &down, payload);
+            codec::put_downlink(&mut body, &down, payload)
+                .map_err(|e| format!("{}: encode failed: {e}", payload.name()))?;
             if body.len() + FRAME_PREFIX != codec::downlink_frame_len(&down, payload) {
                 return Err(format!("{}: downlink frame_len mismatch", payload.name()));
             }
@@ -314,7 +319,7 @@ fn fuzz_truncated_frames_decode_to_err() {
                 delta2: rng.bernoulli(0.3).then(|| random_msg(rng, dim, payload)),
             };
             let mut body = Vec::new();
-            codec::put_uplink(&mut body, &up, rng.below(64), payload);
+            codec::put_uplink(&mut body, &up, rng.below(64), payload).unwrap();
             for cut in cut_points(rng, body.len(), 32) {
                 let mut dec = Uplink::default();
                 if codec::get_uplink(&body[..cut], dim, &mut dec).is_ok() {
@@ -327,7 +332,7 @@ fn fuzz_truncated_frames_decode_to_err() {
                 w: None,
             };
             let mut dbody = Vec::new();
-            codec::put_downlink(&mut dbody, &down, payload);
+            codec::put_downlink(&mut dbody, &down, payload).unwrap();
             for cut in cut_points(rng, dbody.len(), 32) {
                 let mut dec = dirty_downlink(rng);
                 if codec::get_downlink(&dbody[..cut], dim, &mut dec).is_ok() {
@@ -355,7 +360,7 @@ fn fuzz_corrupted_frames_never_panic() {
                 delta2: rng.bernoulli(0.3).then(|| random_msg(rng, dim, payload)),
             };
             let mut body = Vec::new();
-            codec::put_uplink(&mut body, &up, rng.below(64), payload);
+            codec::put_uplink(&mut body, &up, rng.below(64), payload).unwrap();
             if body.is_empty() {
                 return Ok(());
             }
@@ -374,6 +379,69 @@ fn fuzz_corrupted_frames_never_panic() {
                 // in an uncontrolled way
                 let mut ddec = dirty_downlink(rng);
                 let _ = codec::get_downlink(&bad, claim, &mut ddec);
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---- non-finite values --------------------------------------------------
+
+/// Non-finite values are part of the codec contract, not outside it: the
+/// `f64` payload must round-trip them bit-for-bit, while every quantized
+/// payload must refuse to encode them (a NaN/±inf would otherwise poison
+/// the whole block's scale and decode to silent garbage).
+#[test]
+fn fuzz_non_finite_values_per_payload_contract() {
+    forall(
+        PropConfig::cases(96, fuzz_seed() ^ 0xF1317E),
+        "NaN/±inf: f64 bit-transparent, q-payloads refuse",
+        |rng| {
+            let dim = 2 + rng.below(128);
+            let mut up = Uplink {
+                delta: random_msg(rng, dim, Payload::F64),
+                delta2: None,
+            };
+            // plant 1..4 non-finite values at random slots (growing the
+            // message first if the generator rolled an empty one)
+            if up.delta.idx.is_empty() {
+                up.delta.push(rng.below(dim) as u32, 1.0);
+            }
+            let poisons = [f64::NAN, f64::INFINITY, f64::NEG_INFINITY, -f64::NAN];
+            for _ in 0..1 + rng.below(4) {
+                let slot = rng.below(up.delta.val.len());
+                up.delta.val[slot] = poisons[rng.below(poisons.len())];
+            }
+
+            // f64: exact bit transparency, same as for finite values
+            let mut body = Vec::new();
+            codec::put_uplink(&mut body, &up, 0, Payload::F64)
+                .map_err(|e| format!("f64 refused a non-finite value: {e}"))?;
+            let mut dec = dirty_uplink(rng);
+            codec::get_uplink(&body, dim, &mut dec).map_err(|e| format!("f64 decode: {e}"))?;
+            let ob: Vec<u64> = up.delta.val.iter().map(|v| v.to_bits()).collect();
+            let db: Vec<u64> = dec.delta.val.iter().map(|v| v.to_bits()).collect();
+            if ob != db {
+                return Err("f64: non-finite values not bitwise exact".into());
+            }
+
+            // q16/q8/q4: encode must error (and must not have produced a
+            // frame a decoder would accept as complete)
+            for payload in [Payload::Q16, Payload::Q8, Payload::Q4] {
+                let mut body = Vec::new();
+                match codec::put_uplink(&mut body, &up, 0, payload) {
+                    Err(e) => {
+                        if !e.to_string().contains("non-finite") {
+                            return Err(format!("{}: wrong error: {e}", payload.name()));
+                        }
+                    }
+                    Ok(()) => {
+                        return Err(format!(
+                            "{}: silently encoded a non-finite block",
+                            payload.name()
+                        ))
+                    }
+                }
             }
             Ok(())
         },

@@ -1,5 +1,5 @@
 #!/usr/bin/env bash
-# Multi-process smoke test for the wire subsystem, six legs:
+# Multi-process smoke test for the wire subsystem, seven legs:
 #
 #  1. steady state — one `smx serve` coordinator and two `smx worker`
 #     processes on the synthetic tiny dataset (8 shards, 4 per worker
@@ -24,7 +24,12 @@
 #     front door from the plain `smx train` CLI (loopback transports, one
 #     process), asserted bitwise against a `--driver sim` run by diffing
 #     the residual-curve CSVs;
-#  6. observability — serve again with `--metrics-addr` and `--run-dir`,
+#  6. sa-quant — steady state again, but plain DCGD under the
+#     smoothness-aware quantization compressor (`--compressor sa-quant`),
+#     `--check-sim`-asserted bitwise against the sim driver so the
+#     quantizer's RNG discipline and the Hello compressor fields are
+#     exercised across real processes;
+#  7. observability — serve again with `--metrics-addr` and `--run-dir`,
 #     scrape `GET /metrics` and `GET /healthz` off the live server (the
 #     endpoint shares the serve loop's poller), assert known series are
 #     present, then walk the finished artifact store with `smx runs
@@ -100,6 +105,36 @@ run_leg() {
     exit 1
   fi
   echo "distributed smoke OK ($name leg: bitwise identical to run_sim)"
+}
+
+# sa-quant leg: the steady-state topology, but plain DCGD under the
+# smoothness-aware quantization compressor. --check-sim again asserts the
+# distributed iterates bitwise against the sim driver, which exercises
+# the quantizer's value-independent RNG consumption and the Hello
+# handshake's compressor/sa_levels/sa_weighting fields end to end.
+sa_quant_leg() {
+  local addr=$1
+  timeout "${SMOKE_TIMEOUT:-300}" "$BIN" serve --dataset tiny --workers 8 --methods dcgd \
+    --sampling uniform --compressor sa-quant --sa-levels 4 --sa-weighting diag \
+    --max-rounds 30 --listen "$addr" --wire-workers 2 --out-dir "$OUT" --check-sim &
+  local serve_pid=$!
+  "$BIN" worker --connect "$addr" &
+  local w1=$!
+  "$BIN" worker --connect "$addr" &
+  local w2=$!
+
+  local rc=0
+  wait "$serve_pid" || rc=1
+  local i=1
+  for pid in "$w1" "$w2"; do
+    wait "$pid" || { echo "[sa-quant] worker $i failed" >&2; rc=1; }
+    i=$((i + 1))
+  done
+  if [ "$rc" -ne 0 ]; then
+    echo "distributed smoke FAILED (sa-quant leg)" >&2
+    exit 1
+  fi
+  echo "distributed smoke OK (sa-quant leg: bitwise identical to run_sim)"
 }
 
 # Leg 4 has a different shape (two serve invocations, one worker set), so
@@ -230,6 +265,7 @@ run_leg chaos "127.0.0.1:$((PORT + 1))" --worker-timeout 60
 run_leg snapshot "127.0.0.1:$((PORT + 2))" --worker-timeout 60 --checkpoint-every 3
 restart_leg "127.0.0.1:$((PORT + 3))"
 metrics_leg "127.0.0.1:$((PORT + 4))" "127.0.0.1:$((PORT + 5))"
+sa_quant_leg "127.0.0.1:$((PORT + 6))"
 
 # --driver distributed: the Session front door from the plain train CLI.
 # The wire protocol runs over loopback inside one process; its residual
