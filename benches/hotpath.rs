@@ -283,6 +283,24 @@ fn main() -> anyhow::Result<()> {
             black_box(wcodec::get_uplink(black_box(&enc), 7129, &mut dec).unwrap());
         }));
 
+        // relay merge: combine 8 sibling top-128 uplinks into one
+        // aggregate envelope — the per-round hot path of an `smx relay`
+        // tier. Gated row (see scripts/bench_gate.py): the merge is pure
+        // header parsing + verbatim copies and must stay that way.
+        let sibs: Vec<Vec<u8>> = (0..8)
+            .map(|shard| {
+                let mut f = Vec::new();
+                wcodec::put_uplink(&mut f, &up, shard, Payload::F64).unwrap();
+                f
+            })
+            .collect();
+        let refs: Vec<&[u8]> = sibs.iter().map(|f| f.as_slice()).collect();
+        let mut merged = Vec::new();
+        rows.push(bench("relay merge 8x top-128 d=7129 (f64)", 300, || {
+            wcodec::merge_uplinks(&mut merged, black_box(&refs)).unwrap();
+            black_box(merged.len());
+        }));
+
         let down = smx::methods::Downlink::Dense {
             x: x.clone(),
             w: None,

@@ -95,6 +95,16 @@ pub struct WireConfig {
     /// affect the trajectory and is excluded from
     /// [`ExperimentConfig::canonical_identity`].
     pub metrics_addr: Option<String>,
+    /// relay-tier topology spec (`--relay`): comma-separated branch
+    /// factors per tier below the server, e.g. `"2"` (server talks to 2
+    /// relays, workers hang off them) or `"2,2"` (two relay tiers). When
+    /// set, `smx serve` expects `tier-1` direct connections instead of
+    /// `effective_procs` — each a `smx relay` process that fans the rest
+    /// of the tree out. Pure plumbing: relays merge uplink frames
+    /// verbatim ([`crate::wire::codec::merge_uplinks`]) so the topology
+    /// cannot affect the trajectory, and this field is excluded from
+    /// [`ExperimentConfig::canonical_identity`]. None ⇒ flat topology.
+    pub relays: Option<String>,
 }
 
 impl Default for WireConfig {
@@ -109,6 +119,7 @@ impl Default for WireConfig {
             crc: true,
             fault_plan: None,
             metrics_addr: None,
+            relays: None,
         }
     }
 }
@@ -127,6 +138,41 @@ impl WireConfig {
         } else {
             self.workers.min(n_shards)
         }
+    }
+
+    /// Parsed relay topology: branch factors per tier below the server,
+    /// or None for the flat topology. Errors on empty/zero/non-numeric
+    /// tiers (`"2"` and `"2,2"` are valid; `"2,0"` is not).
+    pub fn relay_tiers(&self) -> Result<Option<Vec<usize>>> {
+        let Some(spec) = &self.relays else {
+            return Ok(None);
+        };
+        let mut tiers = Vec::new();
+        for part in spec.split(',') {
+            let n: usize = part
+                .trim()
+                .parse()
+                .ok()
+                .filter(|&n| n > 0)
+                .with_context(|| {
+                    format!(
+                        "bad relay topology '{spec}': tiers are comma-separated \
+                         positive branch factors (e.g. '2' or '2,2')"
+                    )
+                })?;
+            tiers.push(n);
+        }
+        Ok(Some(tiers))
+    }
+
+    /// Direct connections `smx serve` should accept: the first relay
+    /// tier's width when a relay topology is set, else one per worker
+    /// process.
+    pub fn direct_peers(&self, n_shards: usize) -> Result<usize> {
+        Ok(match self.relay_tiers()? {
+            Some(tiers) => tiers[0].min(n_shards),
+            None => self.effective_procs(n_shards),
+        })
     }
 
     fn from_json(j: &Json) -> Result<WireConfig> {
@@ -155,6 +201,7 @@ impl WireConfig {
                 "metrics_addr" => {
                     w.metrics_addr = Some(v.as_str().context("wire.metrics_addr")?.to_string())
                 }
+                "relays" => w.relays = Some(v.as_str().context("wire.relays")?.to_string()),
                 other => bail!("unknown wire config key '{other}'"),
             }
         }
@@ -180,6 +227,9 @@ impl WireConfig {
         }
         if let Some(a) = &self.metrics_addr {
             fields.push(("metrics_addr", Json::Str(a.clone())));
+        }
+        if let Some(r) = &self.relays {
+            fields.push(("relays", Json::Str(r.clone())));
         }
         Json::obj(fields)
     }
@@ -475,6 +525,9 @@ impl ExperimentConfig {
         if let Some(a) = args.get("metrics-addr") {
             self.wire.metrics_addr = Some(a.to_string());
         }
+        if let Some(r) = args.get("relay") {
+            self.wire.relays = Some(r.to_string());
+        }
         self.validate()
     }
 
@@ -522,6 +575,7 @@ impl ExperimentConfig {
                 );
             }
         }
+        self.wire.relay_tiers()?;
         Ok(())
     }
 
@@ -726,6 +780,39 @@ mod tests {
     }
 
     #[test]
+    fn relay_topology_parses_roundtrips_and_rejects_bad_tiers() {
+        let c = ExperimentConfig::from_json(
+            &Json::parse(r#"{"wire": {"relays": "2,3"}}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(c.wire.relays.as_deref(), Some("2,3"));
+        assert_eq!(c.wire.relay_tiers().unwrap(), Some(vec![2, 3]));
+        // serve's direct-peer count follows tier 1, capped by the shard count
+        assert_eq!(c.wire.direct_peers(10).unwrap(), 2);
+        assert_eq!(c.wire.direct_peers(1).unwrap(), 1);
+        // JSON roundtrip keeps the spec
+        let c2 = ExperimentConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2.wire.relays, c.wire.relays);
+        // CLI override
+        let mut c3 = ExperimentConfig::default();
+        let args = Args::parse(
+            "--relay 2".split_whitespace().map(String::from),
+            false,
+        );
+        c3.apply_args(&args).unwrap();
+        assert_eq!(c3.wire.relay_tiers().unwrap(), Some(vec![2]));
+        // flat default: no relays, direct peers = effective procs
+        let d = ExperimentConfig::default();
+        assert_eq!(d.wire.relay_tiers().unwrap(), None);
+        assert_eq!(d.wire.direct_peers(7).unwrap(), 7);
+        // zero / non-numeric / empty tiers are rejected at validation
+        for bad in ["0", "2,0", "two", "", "2,,2"] {
+            let j = Json::parse(&format!(r#"{{"wire": {{"relays": "{bad}"}}}}"#)).unwrap();
+            assert!(ExperimentConfig::from_json(&j).is_err(), "accepted '{bad}'");
+        }
+    }
+
+    #[test]
     fn canonical_identity_pins_the_trajectory_not_the_plumbing() {
         let a = ExperimentConfig::default();
         let mut b = ExperimentConfig::default();
@@ -738,6 +825,8 @@ mod tests {
         b.checkpoint_every = 7;
         b.wire.metrics_addr = Some("127.0.0.1:9090".into());
         b.watch = true;
+        // the relay tier is exact partial aggregation — pure plumbing
+        b.wire.relays = Some("2,2".into());
         assert_eq!(a.canonical_identity(), b.canonical_identity());
         // trajectory-determining fields do not
         b.seed = 43;

@@ -493,8 +493,17 @@ pub enum DistTransport {
     /// The elastic TCP server (`smx serve`): bind `listen`, wait for
     /// `workers` worker processes (0 = one per shard), survive their
     /// deaths. Requires [`Session::from_config`] — the handshake ships
-    /// the dataset recipe to the worker processes.
-    Tcp { listen: String, workers: usize },
+    /// the dataset recipe to the worker processes. `relays` is the
+    /// optional aggregation-tier spec (comma-separated branch factors,
+    /// see [`crate::config::WireConfig::relay_tiers`]): when set the
+    /// server expects that many `smx relay` peers instead of direct
+    /// workers. Topology is pure plumbing — the result is bitwise
+    /// identical either way.
+    Tcp {
+        listen: String,
+        workers: usize,
+        relays: Option<String>,
+    },
 }
 
 /// Config-file / CLI driver selection (`--driver`, `"driver"` key);
@@ -893,7 +902,12 @@ impl<'a> Session<'a> {
                     )?
                 }
                 Driver::Distributed {
-                    transport: DistTransport::Tcp { listen, workers },
+                    transport:
+                        DistTransport::Tcp {
+                            listen,
+                            workers,
+                            relays,
+                        },
                 } => {
                     let cfg = self.cfg.context(
                         "the TCP transport needs Session::from_config (the worker \
@@ -912,6 +926,7 @@ impl<'a> Session<'a> {
                     let mut wire_cfg = cfg.clone();
                     wire_cfg.wire.listen = listen;
                     wire_cfg.wire.workers = workers;
+                    wire_cfg.wire.relays = relays;
                     let listener = match self.listener.take() {
                         Some(l) => l,
                         None => TcpListener::bind(&wire_cfg.wire.listen)

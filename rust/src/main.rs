@@ -9,6 +9,7 @@
 //!   info     print dataset/smoothness diagnostics
 //!   serve    distributed coordinator: accept worker processes over TCP
 //!   worker   join a serve run (--connect HOST:PORT)
+//!   relay    aggregation-tier relay between serve and its workers
 //!   runs     inspect/compare/resume --run-dir artifacts (list|show|diff|resume)
 //!
 //! Common flags: --dataset --workers --tau --methods --sampling
@@ -29,7 +30,7 @@ use smx::experiments::{figures, runner, tables};
 use smx::sampling::SamplingKind;
 use smx::util::cli::Args;
 
-const USAGE: &str = "usage: smx <train|figures|tables|solve|info|serve|worker|runs> [flags]
+const USAGE: &str = "usage: smx <train|figures|tables|solve|info|serve|worker|relay|runs> [flags]
   smx train   --dataset a1a --methods diana,diana+ --tau 1 --sampling uniform
   smx figures --figure 1 --datasets a1a,mushrooms
   smx tables  --table 2 --datasets a1a,mushrooms,phishing
@@ -41,6 +42,13 @@ const USAGE: &str = "usage: smx <train|figures|tables|solve|info|serve|worker|ru
               [--metrics-addr HOST:PORT] [--watch]
   smx worker  --connect 127.0.0.1:4950 [--pin-core N] [--die-after K]
               [--max-retries N] [--retry-base-ms MS] [--fault-plan PLAN]
+  smx relay   --connect 127.0.0.1:4950 --listen 127.0.0.1:4951
+              [--downstream N] [--max-retries N] [--retry-base-ms MS]
+              [--die-after K] [--fault-plan PLAN]
+              (aggregation tier: accepts worker/relay children on --listen,
+              merges their uplink frames verbatim, forwards one combined
+              frame upstream per round — bitwise identical to the flat
+              topology; pair with serve --relay TIERS)
   smx runs    list [ROOT] | show DIR | diff A B | resume DIR
               (run-dir artifact store: enumerate runs, inspect one, compare
               two record streams on the deterministic columns, or resume an
@@ -75,9 +83,13 @@ wire:  --payload f64|f32|q16|q8|q4 --listen HOST:PORT --wire-workers N
        --watch (live terminal dashboard on stderr: round rate, residual
        sparkline, measured-vs-modeled bytes, per-worker liveness)
        --fault-plan 'kill-server@r12;drop-uplink@r5:w1;corrupt-downlink@r9;
-       delay@r7:50ms' (scripted faults; server events on serve, worker
-       events on worker) --max-retries N --retry-base-ms MS (worker
-       reconnect backoff after a connection loss)";
+       delay@r7:50ms;kill@r6:relay' (scripted faults; server events on
+       serve, worker events on worker, :relay kills on relay)
+       --max-retries N --retry-base-ms MS (worker/relay reconnect backoff
+       after a connection loss)
+       --relay TIERS (serve: expect a relay topology instead of direct
+       workers; comma-separated branch factors, e.g. --relay 2 for one
+       tier of 2 relays) --downstream N (relay: children to accept)";
 
 fn main() {
     smx::util::log::init_from_env();
@@ -254,6 +266,59 @@ fn run() -> Result<()> {
                     .unwrap_or_else(|| smx::wire::WorkerOpts::default().retry_base_ms),
             };
             smx::wire::worker_connect_with(addr, opts)?;
+        }
+        "relay" => {
+            let upstream = args
+                .get("connect")
+                .ok_or_else(|| anyhow::anyhow!("smx relay requires --connect HOST:PORT"))?;
+            let listen = args
+                .get("listen")
+                .ok_or_else(|| anyhow::anyhow!("smx relay requires --listen HOST:PORT"))?;
+            let defaults = smx::wire::RelayOpts::default();
+            let opts = smx::wire::RelayOpts {
+                downstream: args
+                    .get("downstream")
+                    .map(|s| {
+                        s.parse::<usize>()
+                            .ok()
+                            .filter(|&n| n > 0)
+                            .ok_or_else(|| {
+                                anyhow::anyhow!("--downstream expects a positive child count")
+                            })
+                    })
+                    .transpose()?
+                    .unwrap_or(defaults.downstream),
+                max_retries: args
+                    .get("max-retries")
+                    .map(|s| {
+                        s.parse::<usize>()
+                            .map_err(|_| anyhow::anyhow!("--max-retries expects a count"))
+                    })
+                    .transpose()?
+                    .unwrap_or(defaults.max_retries),
+                retry_base_ms: args
+                    .get("retry-base-ms")
+                    .map(|s| {
+                        s.parse::<u64>()
+                            .map_err(|_| anyhow::anyhow!("--retry-base-ms expects milliseconds"))
+                    })
+                    .transpose()?
+                    .unwrap_or(defaults.retry_base_ms),
+                die_after: args
+                    .get("die-after")
+                    .map(|s| {
+                        s.parse::<u64>()
+                            .map_err(|_| anyhow::anyhow!("--die-after expects a round count"))
+                    })
+                    .transpose()?,
+                // relay-side fault events never use the seeded corrupt
+                // bit, so the plan seed is irrelevant here
+                fault: args
+                    .get("fault-plan")
+                    .map(|p| smx::wire::FaultPlan::parse(p, 0))
+                    .transpose()?,
+            };
+            smx::wire::relay_connect(upstream, listen, opts)?;
         }
         "runs" => {
             // `resume` hands back the stored config pointed at its run

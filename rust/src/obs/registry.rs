@@ -217,6 +217,13 @@ pub struct Registry {
     pub journal_replays: Counter,
     /// snapshot-state restores shipped to rejoiners/adopters
     pub state_restores: Counter,
+    /// relay tier: merged `TAG_AGG_UPLINK` frames received
+    pub relay_merged_frames: Counter,
+    /// relay tier: constituent per-shard uplinks carried inside merged
+    /// frames (merged ÷ fan-in ≈ branch factor)
+    pub relay_fan_in: Counter,
+    /// relay tier: total bytes of merged uplink frames (prefix included)
+    pub relay_forwarded_bytes: Counter,
     /// `/metrics` scrapes served
     pub scrapes: Counter,
     // gauges
@@ -247,6 +254,9 @@ impl Registry {
             conn_errors: Counter::default(),
             journal_replays: Counter::default(),
             state_restores: Counter::default(),
+            relay_merged_frames: Counter::default(),
+            relay_fan_in: Counter::default(),
+            relay_forwarded_bytes: Counter::default(),
             scrapes: Counter::default(),
             journal_rounds: Gauge::default(),
             journal_bytes: Gauge::default(),
@@ -356,6 +366,24 @@ impl Registry {
             "smx_state_restores_total",
             "Snapshot-state restores shipped to rejoiners/adopters.",
             self.state_restores.get(),
+        );
+        counter(
+            &mut out,
+            "smx_relay_merged_frames_total",
+            "Merged (relay-aggregated) uplink frames received.",
+            self.relay_merged_frames.get(),
+        );
+        counter(
+            &mut out,
+            "smx_relay_fan_in_total",
+            "Per-shard uplinks carried inside merged relay frames.",
+            self.relay_fan_in.get(),
+        );
+        counter(
+            &mut out,
+            "smx_relay_forwarded_bytes_total",
+            "Bytes of merged relay uplink frames, length prefix included.",
+            self.relay_forwarded_bytes.get(),
         );
         counter(
             &mut out,
@@ -589,11 +617,17 @@ mod tests {
         reg.rounds.add(30);
         reg.worker_connects.inc();
         reg.set_live(1, true);
+        reg.relay_merged_frames.inc();
+        reg.relay_fan_in.add(4);
+        reg.relay_forwarded_bytes.add(512);
         reg.observe_record(&rec(30));
         reg.round_duration.observe(0.002);
         let text = reg.render();
         assert!(text.contains("smx_rounds_total 30"));
         assert!(text.contains("smx_worker_connects_total 1"));
+        assert!(text.contains("smx_relay_merged_frames_total 1"));
+        assert!(text.contains("smx_relay_fan_in_total 4"));
+        assert!(text.contains("smx_relay_forwarded_bytes_total 512"));
         assert!(text.contains("smx_bytes_up_total 2700"));
         assert!(text.contains("smx_worker_live{shard=\"0\"} 0"));
         assert!(text.contains("smx_worker_live{shard=\"1\"} 1"));

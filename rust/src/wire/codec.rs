@@ -6,6 +6,9 @@
 //! ```text
 //! uplink frame body:    TAG_UPLINK  shard:varint  payload:u8  flags:u8
 //!                       sparse(delta)  [sparse(delta2) if flags&1]
+//! agg uplink body:      TAG_AGG_UPLINK  payload:u8  nwords:varint
+//!                       bitmap:u64×nwords  count:varint
+//!                       (len:varint  uplink-body)×count, shard-ascending
 //! downlink frame body:  TAG_DOWNLINK  payload:u8  kind:u8  dense|sparse…
 //! sparse block:         count:varint  [mode:u8  indices…  values…]
 //!   mode 0 (sorted-gap) idx[0]:varint  (idx[k]−idx[k−1]):varint …
@@ -64,6 +67,14 @@ pub const TAG_SNAP_STATE: u8 = 10;
 /// restore flag is set; the replay then covers only the journaled rounds
 /// *after* the snapshot.
 pub const TAG_RESTORE: u8 = 11;
+/// Relay → server: one frame carrying several shards' uplink bodies
+/// *verbatim* (each byte-identical to the frame its worker sent), plus a
+/// contributing-shard bitmap. Aggregation stays exact — and therefore
+/// topology-invariant down to the bit — because the constituents are
+/// never re-encoded: the server unpacks each into its per-shard decode
+/// slot exactly as if it had arrived on its own connection. See
+/// [`merge_uplinks`].
+pub const TAG_AGG_UPLINK: u8 = 12;
 
 const IDX_SORTED_GAP: u8 = 0;
 const IDX_RAW: u8 = 1;
@@ -601,6 +612,155 @@ pub fn uplink_frame_len(up: &Uplink, shard: usize, payload: Payload) -> usize {
         + up.delta2.as_ref().map_or(0, |m| sparse_len(m, payload))
 }
 
+// ---- aggregated uplink frames (relay tier) -----------------------------
+
+/// Merge sibling uplink frame bodies into one [`TAG_AGG_UPLINK`] body.
+///
+/// The merge is *structural*, never arithmetic: each constituent body is
+/// carried verbatim (canonicalized to ascending shard order), so the
+/// server decodes every shard's message from exactly the bytes its worker
+/// encoded. Summing values at the relay would be wrong twice over — the
+/// server applies a *per-shard* smoothness root to each uplink before
+/// accumulating, and f64 addition is non-associative — whereas forwarding
+/// frames intact keeps the flat and tree topologies bitwise identical for
+/// every payload, lossless or quantized.
+///
+/// Inputs may themselves be aggregated frames (a 3-level tree's middle
+/// tier): they are flattened one level. Errors on an empty input, a
+/// non-uplink tag, duplicate shards, or — the failure mode worth a loud
+/// message — siblings that disagree on the payload encoding (mixed
+/// float-bits cannot share one aggregate header).
+pub fn merge_uplinks(out: &mut Vec<u8>, frames: &[&[u8]]) -> Result<()> {
+    out.clear();
+    if frames.is_empty() {
+        return Err(WireError::new("merging zero uplink frames"));
+    }
+    let mut parts: Vec<(usize, u8, &[u8])> = Vec::with_capacity(frames.len());
+    let mut scratch = Vec::new();
+    for &f in frames {
+        match frame_tag(f)? {
+            TAG_UPLINK => {
+                let mut pos = 1usize;
+                let shard = get_varint(f, &mut pos)? as usize;
+                let pid = take1(f, &mut pos)?;
+                Payload::from_id(pid)?;
+                parts.push((shard, pid, f));
+            }
+            TAG_AGG_UPLINK => {
+                let payload = get_agg_uplink(f, &mut scratch)?;
+                for &(shard, start, end) in &scratch {
+                    parts.push((shard, payload.id(), &f[start..end]));
+                }
+            }
+            other => {
+                return Err(WireError::new(format!(
+                    "merge: frame tag {other} is not an uplink"
+                )))
+            }
+        }
+    }
+    let pid = parts[0].1;
+    if let Some(&(_, other, _)) = parts.iter().find(|p| p.1 != pid) {
+        return Err(WireError::new(format!(
+            "merge: sibling uplinks disagree on payload encoding ({} vs {}); \
+             refusing to aggregate incompatible frames",
+            Payload::from_id(pid)?.name(),
+            Payload::from_id(other)?.name()
+        )));
+    }
+    parts.sort_by_key(|p| p.0);
+    if let Some(w) = parts.windows(2).find(|w| w[0].0 == w[1].0) {
+        return Err(WireError::new(format!(
+            "merge: shard {} appears in two sibling uplinks",
+            w[0].0
+        )));
+    }
+    let nwords = parts.last().unwrap().0 / 64 + 1;
+    let mut words = vec![0u64; nwords];
+    for &(shard, _, _) in &parts {
+        words[shard / 64] |= 1u64 << (shard % 64);
+    }
+    out.push(TAG_AGG_UPLINK);
+    out.push(pid);
+    put_varint(out, nwords as u64);
+    for w in &words {
+        out.extend_from_slice(&w.to_le_bytes());
+    }
+    put_varint(out, parts.len() as u64);
+    for &(_, _, body) in &parts {
+        put_varint(out, body.len() as u64);
+        out.extend_from_slice(body);
+    }
+    Ok(())
+}
+
+/// Walk a [`TAG_AGG_UPLINK`] body, filling `parts` with
+/// `(shard, start, end)` such that `body[start..end]` is the constituent's
+/// full [`TAG_UPLINK`] body. Returns the aggregate's payload.
+///
+/// Validates the envelope — bitmap/count agreement, strictly ascending
+/// shards, every constituent's header matching the aggregate payload, no
+/// trailing bytes — but not the constituent *values*; the caller decodes
+/// each slice with [`get_uplink`], which finishes the job.
+pub fn get_agg_uplink(body: &[u8], parts: &mut Vec<(usize, usize, usize)>) -> Result<Payload> {
+    parts.clear();
+    let mut pos = 0usize;
+    if take1(body, &mut pos)? != TAG_AGG_UPLINK {
+        return Err(WireError::new("expected aggregated uplink frame"));
+    }
+    let payload = Payload::from_id(take1(body, &mut pos)?)?;
+    let nwords = get_varint(body, &mut pos)? as usize;
+    if nwords == 0 {
+        return Err(WireError::new("aggregated uplink with empty bitmap"));
+    }
+    let words = take(body, &mut pos, nwords.checked_mul(8).ok_or_else(|| {
+        WireError::new("aggregated uplink bitmap overflows")
+    })?)?;
+    let word = |k: usize| u64::from_le_bytes(words[8 * k..8 * k + 8].try_into().unwrap());
+    let popcount: u64 = (0..nwords).map(|k| word(k).count_ones() as u64).sum();
+    let count = get_varint(body, &mut pos)?;
+    if count == 0 {
+        return Err(WireError::new("aggregated uplink carries no frames"));
+    }
+    if count != popcount {
+        return Err(WireError::new(format!(
+            "aggregated uplink bitmap names {popcount} shard(s) but carries {count} frame(s)"
+        )));
+    }
+    let mut prev: Option<usize> = None;
+    for _ in 0..count {
+        let len = get_varint(body, &mut pos)? as usize;
+        let start = pos;
+        let sub = take(body, &mut pos, len)?;
+        let mut sp = 0usize;
+        if take1(sub, &mut sp)? != TAG_UPLINK {
+            return Err(WireError::new("aggregated uplink constituent is not an uplink"));
+        }
+        let shard = get_varint(sub, &mut sp)? as usize;
+        if Payload::from_id(take1(sub, &mut sp)?)? != payload {
+            return Err(WireError::new(
+                "aggregated uplink constituent disagrees with the aggregate payload",
+            ));
+        }
+        if prev.is_some_and(|p| shard <= p) {
+            return Err(WireError::new(
+                "aggregated uplink constituents out of shard order",
+            ));
+        }
+        prev = Some(shard);
+        if shard / 64 >= nwords || (word(shard / 64) >> (shard % 64)) & 1 == 0 {
+            return Err(WireError::new(format!(
+                "aggregated uplink shard {shard} missing from the bitmap"
+            )));
+        }
+        parts.push((shard, start, pos));
+    }
+    if pos != body.len() {
+        return Err(WireError::new("trailing bytes in aggregated uplink frame"));
+    }
+    Ok(payload)
+}
+
 // ---- downlink frames ---------------------------------------------------
 
 /// Serialize `down` (frame body only). Errs like [`put_uplink`] when a
@@ -1065,6 +1225,97 @@ mod tests {
         assert_eq!(shard, 42);
         assert_eq!(dec.delta, up.delta);
         assert_eq!(dec.delta2, up.delta2);
+    }
+
+    fn uplink_body(shard: usize, payload: Payload, pairs: &[(u32, f64)]) -> Vec<u8> {
+        let up = Uplink {
+            delta: msg(pairs),
+            delta2: None,
+        };
+        let mut body = Vec::new();
+        put_uplink(&mut body, &up, shard, payload).unwrap();
+        body
+    }
+
+    #[test]
+    fn merge_uplinks_carries_constituents_verbatim() {
+        let a = uplink_body(2, Payload::F64, &[(0, 1.5), (7, -0.0)]);
+        let b = uplink_body(5, Payload::F64, &[(3, 1e300)]);
+        let c = uplink_body(70, Payload::F64, &[]);
+        let mut agg = Vec::new();
+        // input order must not matter: the aggregate canonicalizes
+        merge_uplinks(&mut agg, &[&c, &a, &b]).unwrap();
+        let mut parts = Vec::new();
+        assert_eq!(get_agg_uplink(&agg, &mut parts).unwrap(), Payload::F64);
+        assert_eq!(parts.len(), 3);
+        let shards: Vec<usize> = parts.iter().map(|p| p.0).collect();
+        assert_eq!(shards, vec![2, 5, 70]);
+        // byte-for-byte identity of each constituent is the whole point
+        assert_eq!(&agg[parts[0].1..parts[0].2], &a[..]);
+        assert_eq!(&agg[parts[1].1..parts[1].2], &b[..]);
+        assert_eq!(&agg[parts[2].1..parts[2].2], &c[..]);
+        // ...and each slice decodes exactly as the original frame would
+        let mut dec = Uplink::default();
+        assert_eq!(get_uplink(&agg[parts[0].1..parts[0].2], 100, &mut dec).unwrap(), 2);
+        assert_eq!(dec.delta, msg(&[(0, 1.5), (7, -0.0)]));
+    }
+
+    #[test]
+    fn merge_uplinks_flattens_nested_aggregates() {
+        let a = uplink_body(0, Payload::F64, &[(1, 1.0)]);
+        let b = uplink_body(3, Payload::F64, &[(2, 2.0)]);
+        let c = uplink_body(1, Payload::F64, &[(4, 4.0)]);
+        let mut inner = Vec::new();
+        merge_uplinks(&mut inner, &[&a, &b]).unwrap();
+        let mut outer = Vec::new();
+        merge_uplinks(&mut outer, &[&inner, &c]).unwrap();
+        let mut parts = Vec::new();
+        get_agg_uplink(&outer, &mut parts).unwrap();
+        let shards: Vec<usize> = parts.iter().map(|p| p.0).collect();
+        assert_eq!(shards, vec![0, 1, 3]);
+        // flattening is canonical: a 3-level tree emits the same bytes as
+        // a 2-level tree over the same constituents
+        let mut flat = Vec::new();
+        merge_uplinks(&mut flat, &[&a, &c, &b]).unwrap();
+        assert_eq!(outer, flat);
+    }
+
+    #[test]
+    fn merge_uplinks_rejects_incompatible_siblings() {
+        let a = uplink_body(0, Payload::F64, &[(1, 1.0)]);
+        let b32 = uplink_body(1, Payload::F32, &[(2, 2.0)]);
+        let dup = uplink_body(0, Payload::F64, &[(3, 3.0)]);
+        let mut out = Vec::new();
+        let err = merge_uplinks(&mut out, &[&a, &b32]).unwrap_err();
+        assert!(err.to_string().contains("payload"), "got: {err}");
+        assert!(merge_uplinks(&mut out, &[&a, &dup]).is_err(), "duplicate shard");
+        assert!(merge_uplinks(&mut out, &[]).is_err(), "empty merge");
+        assert!(
+            merge_uplinks(&mut out, &[&[TAG_HEARTBEAT][..]]).is_err(),
+            "non-uplink tag"
+        );
+    }
+
+    #[test]
+    fn agg_uplink_rejects_tampered_envelopes() {
+        let a = uplink_body(1, Payload::F64, &[(0, 1.0)]);
+        let b = uplink_body(9, Payload::F64, &[(5, -2.0)]);
+        let mut agg = Vec::new();
+        merge_uplinks(&mut agg, &[&a, &b]).unwrap();
+        let mut parts = Vec::new();
+        // truncation anywhere must error, never panic
+        for cut in 0..agg.len() {
+            assert!(get_agg_uplink(&agg[..cut], &mut parts).is_err(), "cut {cut}");
+        }
+        // trailing garbage
+        let mut long = agg.clone();
+        long.push(0);
+        assert!(get_agg_uplink(&long, &mut parts).is_err());
+        // clearing a bitmap bit breaks the popcount/count agreement
+        let mut bad = agg.clone();
+        bad[3] &= !(1u8 << 1);
+        assert!(get_agg_uplink(&bad, &mut parts).is_err());
+        get_agg_uplink(&agg, &mut parts).unwrap();
     }
 
     #[test]

@@ -10,7 +10,7 @@
 //! ```text
 //! plan    := event (';' event)*
 //! event   := action '@r' ROUND suffix*
-//! suffix  := ':w' SHARD | ':' MILLIS 'ms'
+//! suffix  := ':w' SHARD | ':' MILLIS 'ms' | ':relay'
 //! action  := 'kill' | 'drop-uplink' | 'delay' | 'kill-server'
 //!          | 'corrupt-downlink'
 //! ```
@@ -32,6 +32,11 @@
 //!   rerun corrupts the same bit — in the CRC trailer'd frame sent to
 //!   one connection (`:wK` picks the worker hosting shard *K*, default
 //!   the first live connection), and therefore requires `wire.crc`.
+//! * **Relay side** (`kill` with the `:relay` suffix): passed via
+//!   `RelayOpts::fault`. The relay vanishes on receiving that round's
+//!   downlink, before forwarding it — its whole subtree is orphaned at
+//!   once, the chaos case `tests/chaos_matrix.rs` pins. Relay events
+//!   never fire on workers and vice versa.
 //!
 //! The plan is *descriptive*, not imperative: parsing never touches the
 //! network, and a plan whose rounds are never reached simply never
@@ -67,12 +72,14 @@ pub enum FaultAction {
     CorruptDownlink,
 }
 
-/// One parsed `action@rN[:wK][:MSms]` event.
+/// One parsed `action@rN[:wK][:MSms][:relay]` event.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct FaultEvent {
     pub round: u64,
     /// `:wK` — restrict to the worker/connection hosting this shard
     pub shard: Option<usize>,
+    /// `:relay` — the event targets the relay tier, not a worker
+    pub relay: bool,
     pub action: FaultAction,
 }
 
@@ -129,6 +136,14 @@ impl FaultPlan {
             .is_some()
     }
 
+    /// relay: vanish on receiving this round's downlink, before
+    /// forwarding it (`kill@rN:relay`)?
+    pub fn kill_relay_after(&self, round: u64) -> bool {
+        self.events
+            .iter()
+            .any(|e| e.relay && e.round == round && e.action == FaultAction::Kill)
+    }
+
     /// worker: sever instead of sending this round's uplink?
     pub fn drop_uplink_at(&self, round: u64, shards: &[usize]) -> bool {
         self.worker_event(round, shards, |a| a == FaultAction::DropUplink)
@@ -151,7 +166,8 @@ impl FaultPlan {
         pred: impl Fn(FaultAction) -> bool,
     ) -> Option<&FaultEvent> {
         self.events.iter().find(|e| {
-            e.round == round
+            !e.relay
+                && e.round == round
                 && pred(e.action)
                 && e.shard.map_or(true, |s| shards.contains(&s))
         })
@@ -177,8 +193,12 @@ fn parse_event(tok: &str) -> Result<FaultEvent> {
         .map_err(|_| anyhow!("fault event `{tok}`: bad round number"))?;
     let mut shard = None;
     let mut ms = None;
+    let mut relay = false;
     for p in parts {
-        if let Some(w) = p.strip_prefix('w') {
+        if p == "relay" {
+            ensure!(!relay, "fault event `{tok}`: duplicate :relay suffix");
+            relay = true;
+        } else if let Some(w) = p.strip_prefix('w') {
             ensure!(shard.is_none(), "fault event `{tok}`: duplicate :w suffix");
             shard = Some(
                 w.parse::<usize>()
@@ -191,7 +211,10 @@ fn parse_event(tok: &str) -> Result<FaultEvent> {
                     .map_err(|_| anyhow!("fault event `{tok}`: bad delay in `:{p}`"))?,
             );
         } else {
-            bail!("fault event `{tok}`: unknown suffix `:{p}` (want `:wK` or `:MSms`)");
+            bail!(
+                "fault event `{tok}`: unknown suffix `:{p}` (want `:wK`, `:MSms` \
+                 or `:relay`)"
+            );
         }
     }
     let action = match action_s {
@@ -218,7 +241,15 @@ fn parse_event(tok: &str) -> Result<FaultEvent> {
         ms.is_none() || matches!(action, FaultAction::Delay(_)),
         "fault event `{tok}`: only delay takes a `:MSms` suffix"
     );
-    Ok(FaultEvent { round, shard, action })
+    ensure!(
+        !relay || action == FaultAction::Kill,
+        "fault event `{tok}`: only kill takes a `:relay` suffix"
+    );
+    ensure!(
+        !(relay && shard.is_some()),
+        "fault event `{tok}`: `:relay` and `:wK` are mutually exclusive"
+    );
+    Ok(FaultEvent { round, shard, relay, action })
 }
 
 #[cfg(test)]
@@ -228,27 +259,37 @@ mod tests {
     #[test]
     fn parses_the_full_grammar() {
         let p = FaultPlan::parse(
-            "kill-server@r12; drop-uplink@r5:w1 ;corrupt-downlink@r9;delay@r7:50ms;kill@r3:w2",
+            "kill-server@r12; drop-uplink@r5:w1 ;corrupt-downlink@r9;delay@r7:50ms;\
+             kill@r3:w2;kill@r6:relay",
             99,
         )
         .unwrap();
-        assert_eq!(p.events.len(), 5);
+        assert_eq!(p.events.len(), 6);
         assert_eq!(
             p.events[0],
-            FaultEvent { round: 12, shard: None, action: FaultAction::KillServer }
+            FaultEvent { round: 12, shard: None, relay: false, action: FaultAction::KillServer }
         );
         assert_eq!(
             p.events[1],
-            FaultEvent { round: 5, shard: Some(1), action: FaultAction::DropUplink }
+            FaultEvent { round: 5, shard: Some(1), relay: false, action: FaultAction::DropUplink }
         );
         assert_eq!(
             p.events[3],
-            FaultEvent { round: 7, shard: None, action: FaultAction::Delay(50) }
+            FaultEvent { round: 7, shard: None, relay: false, action: FaultAction::Delay(50) }
+        );
+        assert_eq!(
+            p.events[5],
+            FaultEvent { round: 6, shard: None, relay: true, action: FaultAction::Kill }
         );
         assert!(p.has_server_events());
         assert!(p.kill_server_after(12) && !p.kill_server_after(11));
         assert!(p.kill_worker_after(3, &[2, 5]));
         assert!(!p.kill_worker_after(3, &[0, 1]), ":w2 must not fire elsewhere");
+        assert!(p.kill_relay_after(6) && !p.kill_relay_after(5));
+        assert!(
+            !p.kill_worker_after(6, &[0, 1, 2]),
+            ":relay events must never fire on workers"
+        );
         assert!(p.drop_uplink_at(5, &[1]) && !p.drop_uplink_at(5, &[0]));
         assert_eq!(p.delay_at(7, &[0]), Some(Duration::from_millis(50)));
         assert_eq!(p.delay_at(8, &[0]), None);
@@ -283,6 +324,9 @@ mod tests {
             "kill@r3:q9",              // unknown suffix
             "kill@r3:w1:w2",           // duplicate suffix
             "delay@r3:10ms:20ms",      // duplicate delay
+            "kill@r3:relay:relay",     // duplicate relay
+            "kill@r3:w1:relay",        // relay is not per-shard
+            "delay@r3:50ms:relay",     // only kill targets the relay
         ] {
             assert!(FaultPlan::parse(bad, 0).is_err(), "`{bad}` must not parse");
         }

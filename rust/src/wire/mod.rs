@@ -51,10 +51,17 @@
 //!
 //! Two robustness layers complete the picture: [`fault`] parses the
 //! scriptable `--fault-plan` schedule (worker kills, dropped uplinks,
-//! frame corruption, delays, server kills) that the chaos tests drive
-//! recovery with, and [`runlog`] persists the journal + committed
+//! frame corruption, delays, server and relay kills) that the chaos tests
+//! drive recovery with, and [`runlog`] persists the journal + committed
 //! snapshots to disk (`--run-dir`) so even the *server* process is
 //! expendable — a SIGKILLed `smx serve` restarts and resumes bit-for-bit.
+//!
+//! For scale-out, [`relay`] adds an optional aggregation tier (`smx relay`)
+//! between server and workers: each relay merges its children's uplink
+//! frames *structurally* (verbatim constituent bodies, never arithmetic)
+//! into one `TAG_AGG_UPLINK` frame per round, so a tree of relays produces
+//! bit-for-bit the same final model as the flat topology — asserted by
+//! `rust/tests/topology_matrix.rs` across 1/2/3-level trees.
 //!
 //! # Guarantees
 //!
@@ -112,12 +119,14 @@
 pub mod codec;
 pub mod fault;
 pub mod poll;
+pub mod relay;
 pub mod runlog;
 pub mod runtime;
 pub mod transport;
 
 pub use codec::{Payload, WireError};
 pub use fault::{FaultAction, FaultPlan, KILLED_MARKER};
+pub use relay::{relay_connect, relay_on, RelayOpts};
 pub use runlog::{config_hash, LoadedRun, RunLog, Snapshot};
 pub use runtime::{
     run_distributed_loopback_observed, run_distributed_observed, serve, serve_on, worker_connect,

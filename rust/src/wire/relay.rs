@@ -1,0 +1,527 @@
+//! Hierarchical aggregation relay (`smx relay`).
+//!
+//! A relay sits between the server and a group of workers, turning the
+//! server's O(workers) fan-in into O(branch factor): it joins the run
+//! like one big worker, re-fans its assigned shard group out to the
+//! `downstream` worker processes that connect to it, and per round
+//! merges their uplink frames into a single [`TAG_AGG_UPLINK`]
+//! (`codec::merge_uplinks`) before forwarding upstream. Relays stack —
+//! a relay's "worker" may itself be another relay (the merge flattens
+//! nested aggregates), giving arbitrary tree depths.
+//!
+//! # Exactness and topology invariance
+//!
+//! The relay never decodes a message to dense and never re-encodes a
+//! value: constituent uplink bodies travel verbatim inside the
+//! aggregate, and downlinks/stop/snapshot traffic is fanned out
+//! byte-identically. The server therefore decodes exactly the bytes
+//! each worker produced, in its usual per-shard slots — which is why
+//! flat, 2-level and 3-level topologies produce bitwise-identical
+//! trajectories for *every* payload (f64 through q4) and every method.
+//! `tests/topology_matrix.rs` pins that guarantee.
+//!
+//! # Fault model
+//!
+//! The relay is deliberately stateless: it holds no journal and no
+//! model state, so its failure domain is "this subtree, for one rejoin
+//! round-trip". Any connection loss — upstream or any child — tears the
+//! whole session down and retries it from scratch (capped backoff, like
+//! `smx worker`): the server orphans the relay's shard group into the
+//! PR-4 grace window, the children's own retry loops reconnect to the
+//! relay's listen address, and the rejoined session is caught up via
+//! the server's snapshot + journal replay, bitwise identically. A
+//! SIGKILLed relay is recovered the same way by just starting a new
+//! `smx relay` on the same address.
+
+use crate::wire::codec::{self, Hello};
+use crate::wire::fault::FaultPlan;
+use crate::wire::poll::Poller;
+use crate::wire::runtime::{fd_of_tcp, is_connection_error, retry_backoff};
+use crate::wire::transport::{Tcp, Transport};
+use anyhow::{bail, ensure, Context, Result};
+use std::collections::BTreeSet;
+use std::net::TcpListener;
+use std::time::{Duration, Instant};
+
+/// One kernel wait per loop iteration; mirrors the elastic server.
+const WAIT_SLICE: Duration = Duration::from_millis(25);
+/// Idle upstream heartbeat cadence — insurance for the server's grace
+/// clock while children compute long rounds.
+const IDLE_HEARTBEAT: Duration = Duration::from_secs(1);
+/// Poller token for the upstream socket (children use their index).
+const UPSTREAM_TOKEN: u64 = u64::MAX;
+
+/// Knobs for [`relay_connect`]: fan-out, resilience, chaos injection.
+#[derive(Clone, Debug)]
+pub struct RelayOpts {
+    /// Worker (or next-tier relay) connections to accept and fan the
+    /// shard group across. Capped at the group size.
+    pub downstream: usize,
+    /// Session retries after connection-class failures (either side).
+    pub max_retries: usize,
+    /// Base backoff between retries, milliseconds.
+    pub retry_base_ms: u64,
+    /// Chaos: vanish (without forwarding) on receiving this many live
+    /// downlinks — the relay-tier `--die-after`.
+    pub die_after: Option<u64>,
+    /// Chaos: a parsed `--fault-plan`; the relay honors `kill@rN:relay`.
+    pub fault: Option<FaultPlan>,
+}
+
+impl Default for RelayOpts {
+    fn default() -> RelayOpts {
+        RelayOpts {
+            downstream: 2,
+            max_retries: 0,
+            retry_base_ms: 250,
+            die_after: None,
+            fault: None,
+        }
+    }
+}
+
+/// `smx relay --connect UP --listen ADDR`: bind the downstream listener
+/// and run relay sessions (with reconnect/retry) until the run stops.
+pub fn relay_connect(upstream: &str, listen: &str, opts: RelayOpts) -> Result<()> {
+    let listener =
+        TcpListener::bind(listen).with_context(|| format!("relay binding {listen}"))?;
+    relay_on(listener, upstream, opts)
+}
+
+/// [`relay_connect`] against an already-bound listener (tests bind port
+/// 0 and hand the address to their worker threads). Retries the whole
+/// session on connection-class errors, exactly like `smx worker`.
+pub fn relay_on(listener: TcpListener, upstream: &str, opts: RelayOpts) -> Result<()> {
+    ensure!(opts.downstream >= 1, "relay needs --downstream >= 1");
+    let mut attempt: usize = 0;
+    loop {
+        match relay_session(&listener, upstream, &opts) {
+            Ok(()) => return Ok(()),
+            Err(e) => {
+                let msg = format!("{e:#}");
+                if attempt >= opts.max_retries || !is_connection_error(&msg) {
+                    return Err(e);
+                }
+                attempt += 1;
+                let wait = retry_backoff(opts.retry_base_ms, attempt);
+                crate::info!(
+                    "wire",
+                    "relay session lost ({msg}); retrying {attempt}/{} in {wait:?}",
+                    opts.max_retries
+                );
+                std::thread::sleep(wait);
+            }
+        }
+    }
+}
+
+/// A downstream connection and the shards currently homed through it.
+struct Child {
+    tcp: Tcp,
+    shards: BTreeSet<usize>,
+    peer: String,
+}
+
+/// Per-round uplink collection: which shards still owe an uplink, which
+/// are already covered by a buffered frame, and the frames themselves
+/// (kept verbatim for the merge).
+#[derive(Default)]
+struct Gather {
+    pending: BTreeSet<usize>,
+    covered: BTreeSet<usize>,
+    frames: Vec<Vec<u8>>,
+}
+
+impl Gather {
+    /// Start a fresh collection over `shards` (a live downlink went out).
+    fn arm(&mut self, shards: impl IntoIterator<Item = usize>) {
+        self.pending = shards.into_iter().collect();
+        self.covered.clear();
+        self.frames.clear();
+    }
+
+    fn disarm(&mut self) {
+        self.pending.clear();
+        self.covered.clear();
+        self.frames.clear();
+    }
+
+    /// Adopted shards answer the catch-up's live frame too.
+    fn extend(&mut self, shards: &[usize]) {
+        self.pending.extend(shards.iter().copied());
+    }
+
+    /// Record one child uplink frame claiming `shards`.
+    fn absorb(&mut self, shards: &[usize], frame: &[u8]) -> Result<()> {
+        for &s in shards {
+            ensure!(
+                self.pending.contains(&s),
+                "relay: unexpected uplink for shard {s} (not owed this round)"
+            );
+            ensure!(
+                !self.covered.contains(&s),
+                "relay: duplicate uplink for shard {s}"
+            );
+            self.covered.insert(s);
+        }
+        self.frames.push(frame.to_vec());
+        Ok(())
+    }
+
+    fn complete(&self) -> bool {
+        !self.pending.is_empty() && self.covered == self.pending
+    }
+}
+
+fn relay_session(listener: &TcpListener, upstream: &str, opts: &RelayOpts) -> Result<()> {
+    let mut up = Tcp::connect_retry(upstream, 60, Duration::from_millis(250))
+        .with_context(|| format!("connecting to {upstream}"))?;
+    let mut body = Vec::new();
+    up.recv(&mut body).context("waiting for hello")?;
+    // mirror the server's frame-integrity mode on both faces
+    let crc = up.crc_seen();
+    up.set_crc(crc);
+    if codec::frame_tag(&body)? == codec::TAG_STOP {
+        crate::info!("wire", "server finished without needing this relay");
+        release_waiting_children(listener);
+        return Ok(());
+    }
+    let hello = codec::get_hello(&body)?;
+    ensure!(!hello.shards.is_empty(), "server assigned the relay no shards");
+    let group = hello.shards.clone();
+    let fanout = opts.downstream.min(group.len());
+    crate::info!(
+        "wire",
+        "relay assigned {} shard(s); fanning out to {fanout} downstream connection(s)",
+        group.len()
+    );
+
+    // accept the children and hand each its slice of the group (ascending
+    // round-robin, the same deterministic rule the server uses)
+    let mut children = accept_children(listener, &hello, &group, fanout, crc)?;
+    for ch in children.iter_mut() {
+        ch.tcp.recv(&mut body).context("relay child ack recv")?;
+        ensure!(
+            codec::frame_tag(&body)? == codec::TAG_HELLO_ACK,
+            "relay: child {} answered the hello with tag {} instead of an ack",
+            ch.peer,
+            codec::frame_tag(&body)?
+        );
+    }
+    up.send(&[codec::TAG_HELLO_ACK]).context("relay upstream send")?;
+
+    // event loop: everything nonblocking under one poller
+    let mut poller = Poller::new().context("relay poller")?;
+    up.set_nonblocking(true).context("relay upstream socket")?;
+    poller
+        .register(fd_of_tcp(&up), UPSTREAM_TOKEN)
+        .context("relay poller")?;
+    for (k, ch) in children.iter_mut().enumerate() {
+        ch.tcp.set_nonblocking(true).context("relay child socket")?;
+        poller
+            .register(fd_of_tcp(&ch.tcp), k as u64)
+            .context("relay poller")?;
+    }
+
+    let mut gather = Gather::default();
+    let mut parts = Vec::new();
+    let mut merged = Vec::new();
+    let mut ready = Vec::new();
+    let mut rounds_seen: u64 = 0;
+    let mut last_up_send = Instant::now();
+    loop {
+        poller.wait(WAIT_SLICE, &mut ready).context("relay poller")?;
+
+        // upstream frames: broadcasts to fan out, catch-up streams to route
+        loop {
+            match up.try_recv(&mut body).context("relay upstream recv")? {
+                false => break,
+                true => {}
+            }
+            match codec::frame_tag(&body)? {
+                codec::TAG_DOWNLINK => {
+                    rounds_seen += 1;
+                    let planned_kill = opts
+                        .fault
+                        .as_ref()
+                        .is_some_and(|p| p.kill_relay_after(rounds_seen));
+                    if opts.die_after == Some(rounds_seen) || planned_kill {
+                        // injected fault: vanish without forwarding — the
+                        // sockets closing is a SIGKILL as far as both the
+                        // server and the children can observe
+                        return Ok(());
+                    }
+                    for ch in children.iter_mut() {
+                        ch.tcp.send(&body).context("relay child send")?;
+                    }
+                    gather.arm(children.iter().flat_map(|c| c.shards.iter().copied()));
+                }
+                codec::TAG_STOP => {
+                    for ch in children.iter_mut() {
+                        ch.tcp.send(&body).context("relay child send")?;
+                    }
+                    crate::info!("wire", "relay done after {rounds_seen} round(s)");
+                    return Ok(());
+                }
+                codec::TAG_SNAP_REQ => {
+                    for ch in children.iter_mut() {
+                        ch.tcp.send(&body).context("relay child send")?;
+                    }
+                }
+                codec::TAG_REPLAY => {
+                    // rejoin catch-up: every child restores its own slice
+                    // and replays the same journaled stream; only the
+                    // final (live) frame is answered with uplinks
+                    let (count, restore) = codec::get_replay(&body)?;
+                    for ch in children.iter_mut() {
+                        ch.tcp.send(&body).context("relay child send")?;
+                    }
+                    if restore {
+                        forward_restore_split(&mut up, &mut children, &mut body)?;
+                    }
+                    gather.arm(children.iter().flat_map(|c| c.shards.iter().copied()));
+                    forward_replay_stream(
+                        &mut up,
+                        &mut children,
+                        &mut body,
+                        count,
+                        None,
+                        &mut gather,
+                        &mut parts,
+                    )?;
+                    last_up_send = Instant::now();
+                }
+                codec::TAG_ADOPT => {
+                    // another connection's orphans were reassigned to us:
+                    // home them on the least-loaded child (every worker
+                    // keeps reserve runners for the full shard universe)
+                    let (shards, count, restore) = codec::get_adopt(&body)?;
+                    let k = (0..children.len())
+                        .min_by_key(|&k| (children[k].shards.len(), k))
+                        .expect("relay has children");
+                    crate::info!(
+                        "wire",
+                        "relay adopting {} orphaned shard(s) via child {}",
+                        shards.len(),
+                        children[k].peer
+                    );
+                    children[k].tcp.send(&body).context("relay child send")?;
+                    if restore {
+                        // adopt restores name exactly the adopted shards,
+                        // so the frame forwards verbatim
+                        up.recv(&mut body).context("restore recv")?;
+                        ensure!(
+                            codec::frame_tag(&body)? == codec::TAG_RESTORE,
+                            "relay: adopt restore interrupted by tag {}",
+                            codec::frame_tag(&body)?
+                        );
+                        children[k].tcp.send(&body).context("relay child send")?;
+                    }
+                    children[k].shards.extend(shards.iter().copied());
+                    gather.extend(&shards);
+                    forward_replay_stream(
+                        &mut up,
+                        &mut children,
+                        &mut body,
+                        count,
+                        Some(k),
+                        &mut gather,
+                        &mut parts,
+                    )?;
+                    last_up_send = Instant::now();
+                }
+                other => bail!("relay: unexpected upstream frame tag {other}"),
+            }
+        }
+
+        // child frames: uplinks to merge, liveness + snapshots to forward
+        for ch in children.iter_mut() {
+            while ch
+                .tcp
+                .try_recv(&mut body)
+                .with_context(|| format!("relay child recv ({})", ch.peer))?
+            {
+                child_frame(&mut up, ch, &body, &mut gather, &mut parts, &mut last_up_send)?;
+            }
+        }
+
+        if gather.complete() {
+            let frames: Vec<&[u8]> = gather.frames.iter().map(|f| f.as_slice()).collect();
+            codec::merge_uplinks(&mut merged, &frames)
+                .map_err(|e| anyhow::anyhow!("relay merge: {e}"))?;
+            up.send(&merged).context("relay upstream send")?;
+            last_up_send = Instant::now();
+            gather.disarm();
+        }
+
+        if last_up_send.elapsed() >= IDLE_HEARTBEAT {
+            up.send(&[codec::TAG_HEARTBEAT]).context("relay upstream send")?;
+            last_up_send = Instant::now();
+        }
+    }
+}
+
+/// Handle one frame from a child: heartbeats and snapshot blobs pump
+/// upstream; uplinks (plain or already-aggregated by a deeper tier) are
+/// collected for the merge. Shared by the main loop and the replay
+/// forwarder so no child frame is ever dropped on the floor.
+fn child_frame(
+    up: &mut Tcp,
+    ch: &mut Child,
+    body: &[u8],
+    gather: &mut Gather,
+    parts: &mut Vec<(usize, usize, usize)>,
+    last_up_send: &mut Instant,
+) -> Result<()> {
+    match codec::frame_tag(body)? {
+        codec::TAG_HEARTBEAT | codec::TAG_SNAP_STATE => {
+            up.send(body).context("relay upstream send")?;
+            *last_up_send = Instant::now();
+        }
+        codec::TAG_UPLINK => {
+            let shard = codec::peek_uplink_shard(body)?;
+            ensure!(
+                ch.shards.contains(&shard),
+                "relay: child {} sent an uplink for shard {shard} it does not own",
+                ch.peer
+            );
+            gather.absorb(&[shard], body)?;
+        }
+        codec::TAG_AGG_UPLINK => {
+            // a deeper tier already merged: flattens on re-merge
+            codec::get_agg_uplink(body, parts)?;
+            let shards: Vec<usize> = parts.iter().map(|p| p.0).collect();
+            ensure!(
+                shards.iter().all(|s| ch.shards.contains(s)),
+                "relay: child {} aggregated shards it does not own",
+                ch.peer
+            );
+            gather.absorb(&shards, body)?;
+        }
+        other => bail!("relay: unexpected child frame tag {other}"),
+    }
+    Ok(())
+}
+
+/// Accept `fanout` downstream connections and send each a re-encoded
+/// hello covering its ascending round-robin slice of `group`.
+fn accept_children(
+    listener: &TcpListener,
+    hello: &Hello,
+    group: &[usize],
+    fanout: usize,
+    crc: bool,
+) -> Result<Vec<Child>> {
+    let mut body = Vec::new();
+    let mut children = Vec::with_capacity(fanout);
+    for k in 0..fanout {
+        let (stream, addr) = listener.accept().context("relay accept")?;
+        let mut tcp = Tcp::new(stream).context("relay accept")?;
+        tcp.set_crc(crc);
+        let shards: Vec<usize> = group.iter().copied().skip(k).step_by(fanout).collect();
+        let mut child_hello = hello.clone();
+        child_hello.shards = shards.clone();
+        body.clear();
+        codec::put_hello(&mut body, &child_hello);
+        tcp.send(&body).context("relay child send")?;
+        children.push(Child {
+            tcp,
+            shards: shards.into_iter().collect(),
+            peer: addr.to_string(),
+        });
+    }
+    Ok(children)
+}
+
+/// Forward the [`TAG_RESTORE`] frame that follows a restore-flagged
+/// replay announcement, splitting its blobs per child: each worker's
+/// restore must name exactly the shards that worker hosts.
+fn forward_restore_split(
+    up: &mut Tcp,
+    children: &mut [Child],
+    body: &mut Vec<u8>,
+) -> Result<()> {
+    up.recv(body).context("restore recv")?;
+    ensure!(
+        codec::frame_tag(body)? == codec::TAG_RESTORE,
+        "relay: replay restore interrupted by tag {}",
+        codec::frame_tag(body)?
+    );
+    let (round, blobs) = codec::get_restore(body)?;
+    let mut out = Vec::new();
+    for ch in children.iter_mut() {
+        let slice: Vec<(usize, &[u8])> = blobs
+            .iter()
+            .filter(|(s, _)| ch.shards.contains(s))
+            .map(|(s, b)| (*s, b.as_slice()))
+            .collect();
+        ensure!(
+            slice.len() == ch.shards.len(),
+            "relay: restore covers {} of child {}'s {} shard(s)",
+            slice.len(),
+            ch.peer,
+            ch.shards.len()
+        );
+        out.clear();
+        codec::put_restore(&mut out, round, &slice);
+        ch.tcp.send(&out).context("relay child send")?;
+    }
+    Ok(())
+}
+
+/// Forward `count` journaled downlink frames from upstream — to every
+/// child (`target = None`, a rejoin replay) or to one adopter. Child
+/// traffic (replay heartbeats, and uplinks once the live last frame
+/// lands) is pumped through [`child_frame`] between frames so neither
+/// side's socket backs up and nothing is dropped.
+#[allow(clippy::too_many_arguments)]
+fn forward_replay_stream(
+    up: &mut Tcp,
+    children: &mut [Child],
+    body: &mut Vec<u8>,
+    count: usize,
+    target: Option<usize>,
+    gather: &mut Gather,
+    parts: &mut Vec<(usize, usize, usize)>,
+) -> Result<()> {
+    let mut child_body = Vec::new();
+    let mut last_up_send = Instant::now();
+    for _ in 0..count {
+        up.recv(body).context("replay recv")?;
+        ensure!(
+            codec::frame_tag(body)? == codec::TAG_DOWNLINK,
+            "relay: replay stream interrupted by a non-downlink frame"
+        );
+        match target {
+            Some(k) => children[k].tcp.send(body).context("relay child send")?,
+            None => {
+                for ch in children.iter_mut() {
+                    ch.tcp.send(body).context("relay child send")?;
+                }
+            }
+        }
+        for ch in children.iter_mut() {
+            while ch
+                .tcp
+                .try_recv(&mut child_body)
+                .with_context(|| format!("relay child recv ({})", ch.peer))?
+            {
+                child_frame(up, ch, &child_body, gather, parts, &mut last_up_send)?;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Standby release: the server stopped before needing this relay. Pass
+/// the release on to any child already parked on our listener.
+fn release_waiting_children(listener: &TcpListener) {
+    if listener.set_nonblocking(true).is_err() {
+        return;
+    }
+    while let Ok((stream, _)) = listener.accept() {
+        if let Ok(mut t) = Tcp::new(stream) {
+            let _ = t.send(&[codec::TAG_STOP]);
+        }
+    }
+}

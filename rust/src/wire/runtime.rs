@@ -951,7 +951,7 @@ struct ResumeState {
     records: Vec<RoundRecord>,
 }
 
-fn fd_of_tcp(t: &Tcp) -> i32 {
+pub(crate) fn fd_of_tcp(t: &Tcp) -> i32 {
     #[cfg(unix)]
     {
         t.raw_fd()
@@ -1435,6 +1435,56 @@ impl ElasticServer {
                     self.st.up_bytes[shard] =
                         (codec::FRAME_PREFIX + self.body.len()) as u64;
                 }
+                codec::TAG_AGG_UPLINK => {
+                    // a relay merged its shard group's uplinks into one
+                    // frame; the constituents are the workers' bodies
+                    // verbatim, so each decodes into its per-shard slot
+                    // exactly as if it had arrived on its own connection
+                    ensure!(gathering, "uplink before the first round started");
+                    let frame_bytes = (codec::FRAME_PREFIX + self.body.len()) as u64;
+                    let mut parts = Vec::new();
+                    codec::get_agg_uplink(&self.body, &mut parts)?;
+                    {
+                        let conn = self.conns[tok].as_mut().expect("live conn");
+                        conn.last_seen = now;
+                        for &(shard, _, _) in &parts {
+                            ensure!(
+                                shard < self.n_shards,
+                                "aggregated uplink for shard {shard}, but n = {}",
+                                self.n_shards
+                            );
+                            ensure!(
+                                conn.shards.contains(&shard),
+                                "relay {} aggregated an uplink for shard {shard} \
+                                 it does not own",
+                                conn.peer
+                            );
+                            ensure!(
+                                !self.st.seen[shard],
+                                "duplicate uplink for shard {shard} from relay {}",
+                                conn.peer
+                            );
+                        }
+                    }
+                    let mut constituent_bytes = 0u64;
+                    for &(shard, start, end) in &parts {
+                        codec::get_uplink(
+                            &self.body[start..end],
+                            self.dim,
+                            &mut self.st.ups[shard],
+                        )?;
+                        self.st.seen[shard] = true;
+                        self.st.up_bytes[shard] = (end - start) as u64;
+                        constituent_bytes += (end - start) as u64;
+                    }
+                    // the shared envelope (prefix, bitmap, lengths) lands
+                    // on the group's first shard so the per-round total
+                    // matches what the wire actually carried
+                    self.st.up_bytes[parts[0].0] += frame_bytes - constituent_bytes;
+                    self.registry.relay_merged_frames.inc();
+                    self.registry.relay_fan_in.add(parts.len() as u64);
+                    self.registry.relay_forwarded_bytes.add(frame_bytes);
+                }
                 other => bail!("server: unexpected frame tag {other}"),
             }
         }
@@ -1884,7 +1934,12 @@ pub(crate) fn serve_observed(
          would accumulate unboundedly)"
     );
     let n = prep.shards.len();
-    let procs = cfg.wire.effective_procs(n);
+    // direct peers: worker processes in the flat topology, or the first
+    // relay tier when --relay is set (each relay fans the rest of the
+    // tree out and merges its subtree's uplinks into TAG_AGG_UPLINK
+    // frames — the server decodes each constituent exactly as if it had
+    // arrived alone, so the topology cannot perturb the trajectory)
+    let procs = cfg.wire.direct_peers(n)?;
     let mut method = build(spec, &prep.sm)?;
     // server half only; the workers live in their own processes
     method.workers.clear();
@@ -1894,11 +1949,15 @@ pub(crate) fn serve_observed(
 
     crate::info!(
         "wire",
-        "serving {} on {} — {} worker process(es), {} shards, payload {}, \
+        "serving {} on {} — {} direct peer(s){}, {} shards, payload {}, \
          worker-timeout {:?}, checkpoint-every {}",
         method_name,
         cfg.wire.listen,
         procs,
+        match cfg.wire.relays.as_deref() {
+            Some(t) => format!(" (relay topology {t})"),
+            None => String::new(),
+        },
         n,
         payload.name(),
         fault.worker_timeout,
@@ -2130,6 +2189,7 @@ pub fn serve_on(listener: TcpListener, cfg: &ExperimentConfig, check_sim: bool) 
             transport: DistTransport::Tcp {
                 listen: cfg.wire.listen.clone(),
                 workers: cfg.wire.workers,
+                relays: cfg.wire.relays.clone(),
             },
         })
         .tcp_listener(listener);
@@ -2236,8 +2296,8 @@ pub fn worker_connect_with(addr: &str, opts: WorkerOpts) -> Result<()> {
 /// socket IO). Anything else — protocol violations, shape mismatches,
 /// the `--expect-restore` assertion — is deterministic and must NOT be
 /// swallowed by a retry.
-fn is_connection_error(msg: &str) -> bool {
-    const MARKERS: [&str; 8] = [
+pub(crate) fn is_connection_error(msg: &str) -> bool {
+    const MARKERS: [&str; 11] = [
         "connecting to",
         "waiting for hello",
         "worker recv",
@@ -2246,6 +2306,9 @@ fn is_connection_error(msg: &str) -> bool {
         "worker snapshot send",
         "replay recv",
         "restore recv",
+        "relay upstream",
+        "relay child",
+        "relay accept",
     ];
     MARKERS.iter().any(|m| msg.contains(m))
 }
@@ -2254,7 +2317,7 @@ fn is_connection_error(msg: &str) -> bool {
 /// capped at 10 s, plus sub-`base` jitter (seeded by pid ⊕ attempt so a
 /// worker fleet killed together does not reconnect in lockstep, yet each
 /// process backs off reproducibly).
-fn retry_backoff(base_ms: u64, attempt: usize) -> Duration {
+pub(crate) fn retry_backoff(base_ms: u64, attempt: usize) -> Duration {
     let exp = base_ms.saturating_mul(1u64 << attempt.min(5));
     let jitter =
         SplitMix64::new(std::process::id() as u64 ^ attempt as u64).next_u64() % base_ms.max(1);

@@ -29,12 +29,21 @@
 //! adiana+ (accelerated server state) — the three methods with the most
 //! server/worker state to lose.
 //!
+//! * **Scripted relay kill** — `kill@rN:relay` makes an aggregation-tier
+//!   relay (`wire::relay`) vanish on the round-N downlink, taking its
+//!   whole subtree's connectivity with it; a replacement relay on the
+//!   same address rejoins and is caught up via journal replay while the
+//!   orphaned workers reconnect through their own backoff loops.
+//!
 //! Every run is constructed through the `serve_on` front door, exactly
 //! like `smx serve`.
 
 use smx::config::ExperimentConfig;
 use smx::sampling::SamplingKind;
-use smx::wire::{serve_on, worker_connect, worker_connect_with, FaultPlan, WorkerOpts, KILLED_MARKER};
+use smx::wire::{
+    relay_on, serve_on, worker_connect, worker_connect_with, FaultPlan, RelayOpts, WorkerOpts,
+    KILLED_MARKER,
+};
 use std::net::TcpListener;
 use std::path::Path;
 use std::time::Duration;
@@ -218,6 +227,90 @@ fn scripted_worker_kill_and_delay_with_standby_rejoin() {
         w.join().unwrap().expect("scripted worker (clean injected exit)");
     }
     replacement.join().unwrap().expect("replacement worker");
+    fresh_dir(&cfg.out_dir);
+}
+
+#[test]
+fn scripted_relay_kill_recovers_through_replacement_and_replay() {
+    // kill@r6:relay — the relay vanishes on receipt of the round-6
+    // downlink without forwarding it, so the server loses the whole
+    // shard group at once (the worst single failure the topology can
+    // produce). The relay-addressed event is invisible to the workers
+    // sharing the plan string: worker_event() filters `:relay` events,
+    // exactly like the server ignores worker-addressed ones. A
+    // replacement relay rebinds the vacated address, rejoins, and the
+    // journal replay + live round erase the gap; check_sim proves it.
+    let mut cfg = chaos_cfg("diana+", SamplingKind::ImportanceDiana, "relaykill");
+    cfg.wire.relays = Some("2".into());
+    cfg.wire.worker_timeout = 20.0;
+    let plan = FaultPlan::parse("kill@r6:relay", 0).unwrap();
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let server_addr = listener.local_addr().unwrap().to_string();
+
+    let doomed_listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let doomed_addr = doomed_listener.local_addr().unwrap().to_string();
+    let doomed = {
+        let up = server_addr.clone();
+        let fault = plan.clone();
+        std::thread::spawn(move || {
+            relay_on(
+                doomed_listener,
+                &up,
+                RelayOpts {
+                    downstream: 2,
+                    fault: Some(fault),
+                    ..Default::default()
+                },
+            )
+        })
+    };
+    let replacement = {
+        let up = server_addr.clone();
+        let addr = doomed_addr.clone();
+        std::thread::spawn(move || {
+            let listener = bind_retry(&addr);
+            relay_on(
+                listener,
+                &up,
+                RelayOpts {
+                    downstream: 2,
+                    ..Default::default()
+                },
+            )
+        })
+    };
+    let healthy_listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let healthy_addr = healthy_listener.local_addr().unwrap().to_string();
+    let healthy = {
+        let up = server_addr.clone();
+        std::thread::spawn(move || {
+            relay_on(
+                healthy_listener,
+                &up,
+                RelayOpts {
+                    downstream: 2,
+                    ..Default::default()
+                },
+            )
+        })
+    };
+
+    let workers: Vec<_> = [&doomed_addr, &healthy_addr, &doomed_addr, &healthy_addr]
+        .into_iter()
+        .map(|a| {
+            let addr = a.clone();
+            std::thread::spawn(move || worker_connect_with(&addr, resilient()))
+        })
+        .collect();
+
+    serve_on(listener, &cfg, true).expect("serve_on --check-sim under a scripted relay kill");
+    doomed.join().unwrap().expect("doomed relay (clean injected exit)");
+    replacement.join().unwrap().expect("replacement relay");
+    healthy.join().unwrap().expect("healthy relay");
+    for w in workers {
+        w.join().unwrap().expect("worker must survive the relay kill via backoff");
+    }
     fresh_dir(&cfg.out_dir);
 }
 

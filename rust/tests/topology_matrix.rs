@@ -1,0 +1,314 @@
+//! Topology matrix: hierarchical relay trees × methods × compressors,
+//! every cell asserting **bitwise identity** to the sim driver.
+//!
+//! The relay tier (`smx relay`, `wire::relay`) merges its children's
+//! uplink frames *structurally* — constituent bodies travel verbatim
+//! inside one `TAG_AGG_UPLINK` envelope, never summed or re-encoded —
+//! so the server decodes exactly the bytes each worker produced, in its
+//! usual per-shard slots. That is the whole topology-invariance claim:
+//! flat, 2-level and 3-level trees must produce bit-for-bit identical
+//! trajectories. Each cell here runs `serve_on(.., check_sim = true)`,
+//! which replays the identical configuration under `Driver::Sim` and
+//! fails unless final iterates AND coords_up match bitwise; since every
+//! topology is held to the same sim reference, identity across depths
+//! follows transitively.
+//!
+//! Matrix columns:
+//! * **matrix-aware (`Default` compressor)** on the paper's `+` methods
+//!   `dcgd+` / `diana+` / `adiana+` — the smoothness-matrix sketches;
+//! * **`sa-quant`** on their baselines `dcgd` / `diana` / `adiana` (the
+//!   whitened-quantization family only composes with the baselines —
+//!   `check_compressor` rejects it on the `+` methods), which pushes
+//!   *quantized* message content through the merge path.
+//!
+//! The relay-death cell kills one relay mid-run (`die_after`) with a
+//! checkpoint cadence armed, so the replacement relay's rejoin exercises
+//! the full catch-up stack through a relay: snapshot restore split per
+//! child + journal replay + live-round uplink merge.
+
+use smx::compress::CompressorKind;
+use smx::config::ExperimentConfig;
+use smx::sampling::SamplingKind;
+use smx::wire::{relay_on, serve_on, worker_connect_with, RelayOpts, WorkerOpts};
+use std::net::TcpListener;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+fn topo_cfg(
+    method: &str,
+    compressor: CompressorKind,
+    sampling: SamplingKind,
+    scenario: &str,
+) -> ExperimentConfig {
+    let slug = format!("smx_topo_{scenario}_{}", method.replace('+', "p"));
+    ExperimentConfig {
+        dataset: "tiny".into(),
+        methods: vec![method.into()],
+        sampling,
+        compressor,
+        tau: 2.0,
+        workers: 4,
+        max_rounds: 40,
+        target_residual: 0.0,
+        record_every: 1,
+        seed: 77,
+        out_dir: std::env::temp_dir().join(slug),
+        ..Default::default()
+    }
+}
+
+/// Generous retry budget so workers ride out a relay death + replacement
+/// cycle; small base so the tests stay fast.
+fn resilient() -> WorkerOpts {
+    WorkerOpts {
+        max_retries: 20,
+        retry_base_ms: 25,
+        ..Default::default()
+    }
+}
+
+/// Bind an ephemeral listener for a relay and run it on its own thread.
+/// Returns the address workers (or deeper relays) should connect to.
+fn spawn_relay(upstream: String, opts: RelayOpts) -> (String, JoinHandle<anyhow::Result<()>>) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let h = std::thread::spawn(move || relay_on(listener, &upstream, opts));
+    (addr, h)
+}
+
+fn spawn_worker(addr: String) -> JoinHandle<anyhow::Result<()>> {
+    std::thread::spawn(move || worker_connect_with(&addr, resilient()))
+}
+
+/// Rebind an address the previous listener just vacated (the killed
+/// relay's thread must return and drop it first).
+fn bind_retry(addr: &str) -> TcpListener {
+    for _ in 0..400 {
+        match TcpListener::bind(addr) {
+            Ok(l) => return l,
+            Err(_) => std::thread::sleep(Duration::from_millis(25)),
+        }
+    }
+    panic!("could not rebind {addr} for the replacement relay");
+}
+
+fn fresh_dir(path: &std::path::Path) {
+    std::fs::remove_dir_all(path).ok();
+}
+
+/// server → `relays` relays → 2 workers each.
+fn run_two_level(cfg: &ExperimentConfig, relays: usize) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let server_addr = listener.local_addr().unwrap().to_string();
+    let mut relay_handles = Vec::new();
+    let mut worker_handles = Vec::new();
+    for _ in 0..relays {
+        let (addr, h) = spawn_relay(
+            server_addr.clone(),
+            RelayOpts {
+                downstream: 2,
+                ..Default::default()
+            },
+        );
+        relay_handles.push(h);
+        for _ in 0..2 {
+            worker_handles.push(spawn_worker(addr.clone()));
+        }
+    }
+    serve_on(listener, cfg, true).unwrap_or_else(|e| {
+        panic!("{}: 2-level serve_on --check-sim failed: {e:#}", cfg.methods[0])
+    });
+    for h in relay_handles {
+        h.join().unwrap().expect("relay must exit cleanly at stop");
+    }
+    for w in worker_handles {
+        w.join().unwrap().expect("worker must exit cleanly at stop");
+    }
+}
+
+#[test]
+fn two_level_tree_matches_sim_across_methods_and_compressors() {
+    // {matrix-aware on the + methods} ∪ {sa-quant on the baselines}:
+    // both exact sketches and quantized messages must survive the merge
+    // verbatim. 2 relays × 2 workers × 1 shard (4 shards total).
+    for (method, compressor, sampling) in [
+        ("dcgd+", CompressorKind::Default, SamplingKind::Uniform),
+        ("diana+", CompressorKind::Default, SamplingKind::ImportanceDiana),
+        ("adiana+", CompressorKind::Default, SamplingKind::Uniform),
+        ("dcgd", CompressorKind::SaQuant, SamplingKind::Uniform),
+        ("diana", CompressorKind::SaQuant, SamplingKind::Uniform),
+        ("adiana", CompressorKind::SaQuant, SamplingKind::Uniform),
+    ] {
+        let mut cfg = topo_cfg(method, compressor, sampling, "two_level");
+        cfg.wire.relays = Some("2".into());
+        cfg.wire.worker_timeout = 20.0;
+        run_two_level(&cfg, 2);
+        fresh_dir(&cfg.out_dir);
+    }
+}
+
+#[test]
+fn flat_two_level_and_three_level_trees_are_bitwise_identical() {
+    // All three depths are asserted against the same sim reference, so
+    // flat ≡ 2-level ≡ 3-level transitively. diana+ carries worker-side
+    // shift state, making any topology-induced divergence compounding
+    // (and thus loudly visible) rather than transient.
+
+    // flat: 2 worker processes, 2 shards each
+    let mut cfg = topo_cfg(
+        "diana+",
+        CompressorKind::Default,
+        SamplingKind::ImportanceDiana,
+        "flat",
+    );
+    cfg.wire.workers = 2;
+    cfg.wire.worker_timeout = 20.0;
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let workers: Vec<_> = (0..2).map(|_| spawn_worker(addr.clone())).collect();
+    serve_on(listener, &cfg, true).expect("flat serve_on --check-sim");
+    for w in workers {
+        w.join().unwrap().expect("flat worker");
+    }
+    fresh_dir(&cfg.out_dir);
+
+    // 2-level: server → 2 relays → 2 workers each
+    let mut cfg = topo_cfg(
+        "diana+",
+        CompressorKind::Default,
+        SamplingKind::ImportanceDiana,
+        "depth2",
+    );
+    cfg.wire.relays = Some("2".into());
+    cfg.wire.worker_timeout = 20.0;
+    run_two_level(&cfg, 2);
+    fresh_dir(&cfg.out_dir);
+
+    // 3-level: server → 2 relays → 2 relays each → 1 worker each; the
+    // inner tier emits TAG_AGG_UPLINK frames that the outer tier must
+    // flatten into its own merge (nested-aggregate path).
+    let mut cfg = topo_cfg(
+        "diana+",
+        CompressorKind::Default,
+        SamplingKind::ImportanceDiana,
+        "depth3",
+    );
+    cfg.wire.relays = Some("2,2".into());
+    cfg.wire.worker_timeout = 20.0;
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let server_addr = listener.local_addr().unwrap().to_string();
+    let mut relay_handles = Vec::new();
+    let mut worker_handles = Vec::new();
+    for _ in 0..2 {
+        let (mid_addr, h) = spawn_relay(
+            server_addr.clone(),
+            RelayOpts {
+                downstream: 2,
+                ..Default::default()
+            },
+        );
+        relay_handles.push(h);
+        for _ in 0..2 {
+            let (leaf_addr, h) = spawn_relay(
+                mid_addr.clone(),
+                RelayOpts {
+                    downstream: 1,
+                    ..Default::default()
+                },
+            );
+            relay_handles.push(h);
+            worker_handles.push(spawn_worker(leaf_addr));
+        }
+    }
+    serve_on(listener, &cfg, true).expect("3-level serve_on --check-sim");
+    for h in relay_handles {
+        h.join().unwrap().expect("relay must exit cleanly at stop");
+    }
+    for w in worker_handles {
+        w.join().unwrap().expect("worker must exit cleanly at stop");
+    }
+    fresh_dir(&cfg.out_dir);
+}
+
+#[test]
+fn relay_death_mid_run_recovers_bitwise_via_journal_replay() {
+    // One relay vanishes on the round-6 downlink without forwarding it —
+    // its workers see EOF mid-round, the server orphans the whole shard
+    // group into the grace window. A replacement relay stands up on the
+    // same address (exactly how an operator would recover a SIGKILLed
+    // `smx relay`), rejoins, and is caught up through the snapshot
+    // (checkpoint cadence 4 → restore split per child) + journal replay
+    // + live round 6, while the orphaned workers reconnect to it through
+    // their own backoff loops. check_sim then proves the death never
+    // happened as far as the trajectory is concerned.
+    let mut cfg = topo_cfg(
+        "diana+",
+        CompressorKind::Default,
+        SamplingKind::ImportanceDiana,
+        "death",
+    );
+    cfg.wire.relays = Some("2".into());
+    cfg.wire.worker_timeout = 20.0;
+    cfg.checkpoint_every = 4;
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let server_addr = listener.local_addr().unwrap().to_string();
+
+    // the doomed relay: bound up front so its address is known to its
+    // workers and to the replacement
+    let doomed_listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let doomed_addr = doomed_listener.local_addr().unwrap().to_string();
+    let doomed = {
+        let up = server_addr.clone();
+        std::thread::spawn(move || {
+            relay_on(
+                doomed_listener,
+                &up,
+                RelayOpts {
+                    downstream: 2,
+                    die_after: Some(6),
+                    ..Default::default()
+                },
+            )
+        })
+    };
+    let replacement = {
+        let up = server_addr.clone();
+        let addr = doomed_addr.clone();
+        std::thread::spawn(move || {
+            // the address frees only when the doomed relay's thread
+            // returns at round 6 and drops its listener
+            let listener = bind_retry(&addr);
+            relay_on(
+                listener,
+                &up,
+                RelayOpts {
+                    downstream: 2,
+                    ..Default::default()
+                },
+            )
+        })
+    };
+    let (healthy_addr, healthy) = spawn_relay(
+        server_addr.clone(),
+        RelayOpts {
+            downstream: 2,
+            ..Default::default()
+        },
+    );
+
+    let mut workers = Vec::new();
+    for _ in 0..2 {
+        workers.push(spawn_worker(doomed_addr.clone()));
+        workers.push(spawn_worker(healthy_addr.clone()));
+    }
+
+    serve_on(listener, &cfg, true).expect("serve_on --check-sim across a relay death");
+    doomed.join().unwrap().expect("doomed relay (clean injected exit)");
+    replacement.join().unwrap().expect("replacement relay");
+    healthy.join().unwrap().expect("healthy relay");
+    for w in workers {
+        w.join().unwrap().expect("worker must survive the relay death via backoff");
+    }
+    fresh_dir(&cfg.out_dir);
+}

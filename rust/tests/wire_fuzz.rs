@@ -448,6 +448,146 @@ fn fuzz_non_finite_values_per_payload_contract() {
     );
 }
 
+// ---- merged (relay) frames ---------------------------------------------
+
+/// The relay tier's `TAG_AGG_UPLINK` envelope carries sibling uplink
+/// bodies **verbatim** (that is the whole topology-invariance argument),
+/// so the fuzz contract is structural: the merge round-trips each
+/// constituent byte-for-byte in canonical shard order, re-merging an
+/// aggregate flattens to the same bytes as merging flat, siblings that
+/// disagree on payload encoding are refused with a clear error, and no
+/// truncation or bit flip of the envelope ever panics the parser.
+#[test]
+fn fuzz_merged_uplink_frames_roundtrip_truncate_and_flip() {
+    forall(
+        PropConfig::cases(96, fuzz_seed() ^ 0xA66),
+        "TAG_AGG_UPLINK: verbatim roundtrip, Err on truncation, no panic on flips",
+        |rng| {
+            let dim = 1 + rng.below(128);
+            let payload = random_payload(rng);
+            let nsib = 1 + rng.below(6);
+            let shards = rng.sample_indices(200, nsib);
+            let mut frames: Vec<Vec<u8>> = Vec::with_capacity(nsib);
+            let mut origs: Vec<Uplink> = Vec::with_capacity(nsib);
+            for &shard in &shards {
+                let up = Uplink {
+                    delta: random_msg(rng, dim, payload),
+                    delta2: rng.bernoulli(0.3).then(|| random_msg(rng, dim, payload)),
+                };
+                let mut body = Vec::new();
+                codec::put_uplink(&mut body, &up, shard, payload)
+                    .map_err(|e| format!("{}: encode failed: {e}", payload.name()))?;
+                frames.push(body);
+                origs.push(up);
+            }
+            // merge in a scrambled order — the envelope is canonical
+            // (ascending by shard) regardless of arrival order
+            let mut order: Vec<usize> = (0..nsib).collect();
+            for i in (1..nsib).rev() {
+                order.swap(i, rng.below(i + 1));
+            }
+            let scrambled: Vec<&[u8]> = order.iter().map(|&i| frames[i].as_slice()).collect();
+            let mut merged = Vec::new();
+            codec::merge_uplinks(&mut merged, &scrambled)
+                .map_err(|e| format!("merge failed: {e}"))?;
+
+            // structural roundtrip: canonical order, bodies verbatim
+            let mut parts = Vec::new();
+            let got = codec::get_agg_uplink(&merged, &mut parts)
+                .map_err(|e| format!("agg decode failed: {e}"))?;
+            if got != payload {
+                return Err(format!("payload {} != {}", got.name(), payload.name()));
+            }
+            if parts.len() != nsib {
+                return Err(format!("{} constituents != {nsib}", parts.len()));
+            }
+            for (k, &(shard, start, end)) in parts.iter().enumerate() {
+                if shard != shards[k] {
+                    return Err(format!("constituent {k}: shard {shard} != {}", shards[k]));
+                }
+                if &merged[start..end] != frames[k].as_slice() {
+                    return Err(format!("constituent {k}: body not carried verbatim"));
+                }
+                let mut dec = dirty_uplink(rng);
+                let got_shard = codec::get_uplink(&merged[start..end], dim, &mut dec)
+                    .map_err(|e| format!("constituent {k} decode: {e}"))?;
+                if got_shard != shard {
+                    return Err(format!("constituent {k}: shard {got_shard} != {shard}"));
+                }
+                check_block(&origs[k].delta, &dec.delta, payload)?;
+            }
+
+            // nested flatten: merging {agg(first half), rest} must emit
+            // the exact bytes of the flat merge (deeper trees re-merge
+            // into the same canonical envelope)
+            if nsib >= 2 {
+                let mid = 1 + rng.below(nsib - 1);
+                let first: Vec<&[u8]> = frames[..mid].iter().map(|f| f.as_slice()).collect();
+                let mut inner = Vec::new();
+                codec::merge_uplinks(&mut inner, &first)
+                    .map_err(|e| format!("inner merge failed: {e}"))?;
+                let mut nested: Vec<&[u8]> = vec![inner.as_slice()];
+                nested.extend(frames[mid..].iter().map(|f| f.as_slice()));
+                let mut remerged = Vec::new();
+                codec::merge_uplinks(&mut remerged, &nested)
+                    .map_err(|e| format!("nested merge failed: {e}"))?;
+                if remerged != merged {
+                    return Err("nested merge did not flatten to the flat bytes".into());
+                }
+
+                // siblings that disagree on payload encoding are refused
+                let other = Payload::ALL[(Payload::ALL
+                    .iter()
+                    .position(|&p| p == payload)
+                    .unwrap()
+                    + 1)
+                    % Payload::ALL.len()];
+                let mut alien = Vec::new();
+                if codec::put_uplink(&mut alien, &origs[0], shards[0], other).is_ok() {
+                    let mixed: Vec<&[u8]> = std::iter::once(alien.as_slice())
+                        .chain(frames[1..].iter().map(|f| f.as_slice()))
+                        .collect();
+                    let mut out = Vec::new();
+                    match codec::merge_uplinks(&mut out, &mixed) {
+                        Ok(()) => return Err("mixed-payload merge accepted".into()),
+                        Err(e) => {
+                            if !e.to_string().contains("payload") {
+                                return Err(format!("mixed-payload: wrong error: {e}"));
+                            }
+                        }
+                    }
+                }
+            }
+
+            // every truncation is an error, never a panic or an accept
+            for cut in cut_points(rng, merged.len(), 32) {
+                let mut parts = Vec::new();
+                if codec::get_agg_uplink(&merged[..cut], &mut parts).is_ok() {
+                    return Err(format!("agg truncated at {cut}/{} decoded Ok", merged.len()));
+                }
+            }
+
+            // random byte corruption: parse may fail, but must not panic,
+            // and any surviving constituent must itself decode sanely
+            for _ in 0..8 {
+                let mut bad = merged.clone();
+                for _ in 0..1 + rng.below(4) {
+                    let pos = rng.below(bad.len());
+                    bad[pos] ^= (1 + rng.below(255)) as u8;
+                }
+                let mut parts = Vec::new();
+                if codec::get_agg_uplink(&bad, &mut parts).is_ok() {
+                    for &(_, start, end) in &parts {
+                        let mut dec = dirty_uplink(rng);
+                        let _ = codec::get_uplink(&bad[start..end], dim, &mut dec);
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
 // ---- CRC frame layer ---------------------------------------------------
 
 #[test]

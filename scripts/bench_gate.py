@@ -7,9 +7,9 @@ Usage:
     bench_gate.py CURRENT BASELINE --seed
 
 Policy (CI):
-  * rows whose name starts with ``round e2e`` are **gated**: a median
-    wall-clock regression beyond the threshold (default +25%) fails the
-    job;
+  * rows whose name starts with ``round e2e`` or ``relay merge`` are
+    **gated**: a median wall-clock regression beyond the threshold
+    (default +25%) fails the job;
   * every other row present in both files only **warns** beyond the
     threshold (micro-kernel rows are noisy on shared runners);
   * an unseeded baseline (missing file, or ``{"seeded": false}``) makes
@@ -25,7 +25,9 @@ import json
 import sys
 
 
-GATED_PREFIX = "round e2e"
+# end-to-end rows plus the relay tier's frame-merge hot path; tuple so
+# str.startswith matches any of them
+GATED_PREFIX = ("round e2e", "relay merge")
 
 
 def load_rows(path):

@@ -1,5 +1,5 @@
 #!/usr/bin/env bash
-# Multi-process smoke test for the wire subsystem, seven legs:
+# Multi-process smoke test for the wire subsystem, eight legs:
 #
 #  1. steady state — one `smx serve` coordinator and two `smx worker`
 #     processes on the synthetic tiny dataset (8 shards, 4 per worker
@@ -33,7 +33,15 @@
 #     scrape `GET /metrics` and `GET /healthz` off the live server (the
 #     endpoint shares the serve loop's poller), assert known series are
 #     present, then walk the finished artifact store with `smx runs
-#     list`/`show`.
+#     list`/`show`;
+#  8. relay — the hierarchical topology: serve with `--relay 1` talks to
+#     ONE direct peer, an `smx relay` process that fans out to the two
+#     real workers and merges their uplink frames verbatim into single
+#     aggregate envelopes. A scripted fault plan (`kill@r6:relay`,
+#     observably a SIGKILL at that instant) drops the relay on the
+#     round-6 downlink; a replacement relay takes over the same address,
+#     is caught up via snapshot restore + journal replay, and the
+#     workers ride out the gap on their own backoff.
 #
 # The serve legs pass `--check-sim`, which makes the server re-run the
 # identical configuration through the in-process sim driver and exit
@@ -260,12 +268,66 @@ metrics_leg() {
   echo "distributed smoke OK (metrics leg: live scrape + runs list/show)"
 }
 
+# Leg 8: the relay topology (header comment 8). --check-sim asserts the
+# whole story — merged uplink frames, the relay death, the replacement's
+# snapshot-restore + journal-replay catch-up — bitwise against the sim
+# driver via the server's exit code.
+relay_leg() {
+  local addr=$1
+  local raddr=$2
+  timeout "${SMOKE_TIMEOUT:-300}" "$BIN" serve --dataset tiny --workers 8 --methods diana+ \
+    --sampling importance-diana --tau 2 --max-rounds 30 \
+    --listen "$addr" --wire-workers 2 --relay 1 --out-dir "$OUT" --check-sim \
+    --worker-timeout 60 --checkpoint-every 4 &
+  local serve_pid=$!
+
+  # doomed relay: the scripted plan drops it on the round-6 downlink
+  # without forwarding (its workers see EOF mid-round); the process
+  # itself exits 0 — the kill is planned, not an error
+  "$BIN" relay --connect "$addr" --listen "$raddr" --downstream 2 \
+    --fault-plan kill@r6:relay &
+  local doomed_pid=$!
+  "$BIN" worker --connect "$raddr" --max-retries 20 --retry-base-ms 100 &
+  local w1=$!
+  "$BIN" worker --connect "$raddr" --max-retries 20 --retry-base-ms 100 &
+  local w2=$!
+
+  # replacement: waits for the doomed relay to vanish, then takes over
+  # its listen address (the short retry covers the instant between the
+  # old process exiting and the kernel releasing its listener)
+  (
+    while kill -0 "$doomed_pid" 2>/dev/null; do sleep 0.1; done
+    for _ in 1 2 3; do
+      "$BIN" relay --connect "$addr" --listen "$raddr" --downstream 2 && exit 0
+      sleep 0.5
+    done
+    exit 1
+  ) &
+  local replacement_pid=$!
+
+  local rc=0
+  wait "$serve_pid" || rc=1
+  wait "$doomed_pid" || { echo "[relay] doomed relay exited nonzero" >&2; rc=1; }
+  wait "$replacement_pid" || { echo "[relay] replacement relay failed" >&2; rc=1; }
+  local i=1
+  for pid in "$w1" "$w2"; do
+    wait "$pid" || { echo "[relay] worker $i failed" >&2; rc=1; }
+    i=$((i + 1))
+  done
+  if [ "$rc" -ne 0 ]; then
+    echo "distributed smoke FAILED (relay leg)" >&2
+    exit 1
+  fi
+  echo "distributed smoke OK (relay leg: relay killed at round 6, replaced, bitwise identical to run_sim)"
+}
+
 run_leg steady "127.0.0.1:$PORT"
 run_leg chaos "127.0.0.1:$((PORT + 1))" --worker-timeout 60
 run_leg snapshot "127.0.0.1:$((PORT + 2))" --worker-timeout 60 --checkpoint-every 3
 restart_leg "127.0.0.1:$((PORT + 3))"
 metrics_leg "127.0.0.1:$((PORT + 4))" "127.0.0.1:$((PORT + 5))"
 sa_quant_leg "127.0.0.1:$((PORT + 6))"
+relay_leg "127.0.0.1:$((PORT + 7))" "127.0.0.1:$((PORT + 8))"
 
 # --driver distributed: the Session front door from the plain train CLI.
 # The wire protocol runs over loopback inside one process; its residual
