@@ -408,6 +408,44 @@ fn main() -> anyhow::Result<()> {
         }));
     }
 
+    // partial-participation round: the buffer-reusing diana+ round under
+    // `--participation tau=n/2` — per round: a cohort draw (partial
+    // Fisher–Yates over the membership RNG stream), sampled-out uplink
+    // clears, the n/τ unbiasedness reweight, then the server apply. The
+    // margin against "round e2e diana+ (buffer-reusing, n=8)" is the
+    // sampler's bookkeeping minus the skipped worker computes.
+    {
+        use smx::coordinator::membership::{self, Participation};
+        let mspec = MethodSpec::new("diana+", 4.0, SamplingKind::Uniform, 1e-3, vec![0.0; sm.dim]);
+        let mut method = build(&mspec, &sm)?;
+        let mut engines: Vec<Box<dyn GradEngine>> = shards
+            .iter()
+            .map(|s| Box::new(NativeEngine::from_shard(s, 1e-3)) as Box<dyn GradEngine>)
+            .collect();
+        let base = Rng::new(1);
+        let mut server_rng = base.derive(u64::MAX);
+        let mut worker_rngs: Vec<Rng> = (0..shards.len()).map(|i| base.derive(i as u64)).collect();
+        let mut bufs = RoundBuffers::new(shards.len());
+        let mut participation = Participation::new(1, shards.len(), shards.len() / 2)?;
+        let weight = participation.weight();
+        let mut round = 0u64;
+        rows.push(bench("round e2e diana+ (tau=n/2, n=8)", 400, || {
+            round += 1;
+            let RoundBuffers { down, ups } = &mut bufs;
+            method.server.downlink_into(down);
+            let mask = participation.draw(round);
+            for (i, up) in ups.iter_mut().enumerate() {
+                if mask[i] {
+                    method.workers[i].round_into(down, engines[i].as_mut(), &mut worker_rngs[i], up);
+                    membership::reweight_uplink(up, weight);
+                } else {
+                    membership::clear_uplink(up);
+                }
+            }
+            method.server.apply(ups, &mut server_rng);
+        }));
+    }
+
     // observability cost: the identical buffer-reusing diana+ round with
     // the full per-round metrics hot path attached — rounds counter,
     // duration histogram, and the seqlock round-block write the

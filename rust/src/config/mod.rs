@@ -105,6 +105,24 @@ pub struct WireConfig {
     /// cannot affect the trajectory, and this field is excluded from
     /// [`ExperimentConfig::canonical_identity`]. None ⇒ flat topology.
     pub relays: Option<String>,
+    /// partial-participation spec (`--participation tau=K`): every round
+    /// the coordinator samples an unbiased cohort of K shards and only
+    /// they compute/uplink, reweighted by n/K before aggregation (see
+    /// [`crate::coordinator::membership`]). The cohort sequence is a
+    /// pure function of the run seed, so all three drivers stay bitwise
+    /// identical; `tau=n` (or None) is exactly full participation. A
+    /// **trajectory** field — included in
+    /// [`ExperimentConfig::canonical_identity`].
+    pub participation: Option<String>,
+    /// member floor for `smx serve` (`--min-clients`): start rounds once
+    /// this many worker processes are live instead of waiting for the
+    /// full complement; stragglers late-join mid-run through the
+    /// snapshot/replay handshake. 0 ⇒ wait for everyone (today's
+    /// behavior). Operational — excluded from
+    /// [`ExperimentConfig::canonical_identity`] (the trajectory is
+    /// membership-invariant: a gather simply waits on shards whose host
+    /// has not arrived yet).
+    pub min_clients: usize,
 }
 
 impl Default for WireConfig {
@@ -120,6 +138,8 @@ impl Default for WireConfig {
             fault_plan: None,
             metrics_addr: None,
             relays: None,
+            participation: None,
+            min_clients: 0,
         }
     }
 }
@@ -165,6 +185,30 @@ impl WireConfig {
         Ok(Some(tiers))
     }
 
+    /// Parsed participation spec: the per-round cohort size τ, or None
+    /// for full participation. Accepts `tau=K` (K ≥ 1) or the explicit
+    /// sentinel `full`.
+    pub fn participation_tau(&self) -> Result<Option<usize>> {
+        let Some(spec) = &self.participation else {
+            return Ok(None);
+        };
+        let s = spec.trim();
+        if s.eq_ignore_ascii_case("full") {
+            return Ok(None);
+        }
+        let tau = s
+            .strip_prefix("tau=")
+            .and_then(|v| v.trim().parse::<usize>().ok())
+            .filter(|&k| k > 0)
+            .with_context(|| {
+                format!(
+                    "bad participation spec '{spec}': expected 'tau=K' with K >= 1 \
+                     (or 'full')"
+                )
+            })?;
+        Ok(Some(tau))
+    }
+
     /// Direct connections `smx serve` should accept: the first relay
     /// tier's width when a relay topology is set, else one per worker
     /// process.
@@ -202,6 +246,10 @@ impl WireConfig {
                     w.metrics_addr = Some(v.as_str().context("wire.metrics_addr")?.to_string())
                 }
                 "relays" => w.relays = Some(v.as_str().context("wire.relays")?.to_string()),
+                "participation" => {
+                    w.participation = Some(v.as_str().context("wire.participation")?.to_string())
+                }
+                "min_clients" => w.min_clients = v.as_usize().context("wire.min_clients")?,
                 other => bail!("unknown wire config key '{other}'"),
             }
         }
@@ -230,6 +278,12 @@ impl WireConfig {
         }
         if let Some(r) = &self.relays {
             fields.push(("relays", Json::Str(r.clone())));
+        }
+        if let Some(p) = &self.participation {
+            fields.push(("participation", Json::Str(p.clone())));
+        }
+        if self.min_clients != 0 {
+            fields.push(("min_clients", Json::Num(self.min_clients as f64)));
         }
         Json::obj(fields)
     }
@@ -528,6 +582,12 @@ impl ExperimentConfig {
         if let Some(r) = args.get("relay") {
             self.wire.relays = Some(r.to_string());
         }
+        if let Some(p) = args.get("participation") {
+            self.wire.participation = Some(p.to_string());
+        }
+        if args.has("min-clients") {
+            self.wire.min_clients = args.usize_or("min-clients", self.wire.min_clients);
+        }
         self.validate()
     }
 
@@ -576,6 +636,22 @@ impl ExperimentConfig {
             }
         }
         self.wire.relay_tiers()?;
+        if let Some(tau) = self.wire.participation_tau()? {
+            let n = self.effective_workers();
+            if tau > n {
+                bail!(
+                    "participation tau={tau} exceeds the worker count {n}; \
+                     use tau<={n} (tau={n} is full participation)"
+                );
+            }
+            if self.methods.iter().any(|m| m == "diana++") {
+                bail!(
+                    "diana++ is incompatible with partial participation: its \
+                     incremental sparse downlinks require every worker to apply \
+                     every round (sampled-out replicas would diverge)"
+                );
+            }
+        }
         Ok(())
     }
 
@@ -591,7 +667,8 @@ impl ExperimentConfig {
         format!(
             "dataset={};shards={};mu={:e};tau={:e};methods={};sampling={};max_rounds={};\
              target_residual={:e};record_every={};seed={};engine={};payload={};float_bits={};\
-             start_near_opt={};practical_adiana={};compressor={};sa_levels={};sa_weighting={}",
+             start_near_opt={};practical_adiana={};compressor={};sa_levels={};sa_weighting={};\
+             participation={}",
             self.dataset,
             self.effective_workers(),
             self.mu,
@@ -610,6 +687,12 @@ impl ExperimentConfig {
             self.compressor.name(),
             self.sa_levels,
             self.sa_weighting.name(),
+            // participation changes which workers speak each round — a
+            // trajectory field (validate() already proved the spec parses)
+            match self.wire.participation_tau().ok().flatten() {
+                Some(tau) => tau.to_string(),
+                None => "full".to_string(),
+            },
         )
     }
 
@@ -813,6 +896,55 @@ mod tests {
     }
 
     #[test]
+    fn participation_keys_parse_roundtrip_and_reject_bad_values() {
+        let c = ExperimentConfig::from_json(
+            &Json::parse(r#"{"wire": {"participation": "tau=3", "min_clients": 2}}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(c.wire.participation.as_deref(), Some("tau=3"));
+        assert_eq!(c.wire.participation_tau().unwrap(), Some(3));
+        assert_eq!(c.wire.min_clients, 2);
+        // JSON roundtrip keeps both
+        let c2 = ExperimentConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2.wire.participation, c.wire.participation);
+        assert_eq!(c2.wire.min_clients, 2);
+        // CLI overrides
+        let mut c3 = ExperimentConfig::default();
+        let args = Args::parse(
+            "--participation tau=2 --min-clients 1"
+                .split_whitespace()
+                .map(String::from),
+            false,
+        );
+        c3.apply_args(&args).unwrap();
+        assert_eq!(c3.wire.participation_tau().unwrap(), Some(2));
+        assert_eq!(c3.wire.min_clients, 1);
+        // defaults: full participation, wait for everyone
+        let d = ExperimentConfig::default();
+        assert_eq!(d.wire.participation_tau().unwrap(), None);
+        assert_eq!(d.wire.min_clients, 0);
+        // the explicit sentinel means full participation
+        let mut f = ExperimentConfig::default();
+        f.wire.participation = Some("full".into());
+        assert_eq!(f.wire.participation_tau().unwrap(), None);
+        // malformed specs are rejected at validation
+        for bad in ["tau=0", "tau=", "3", "tau=x", ""] {
+            let j =
+                Json::parse(&format!(r#"{{"wire": {{"participation": "{bad}"}}}}"#)).unwrap();
+            assert!(ExperimentConfig::from_json(&j).is_err(), "accepted '{bad}'");
+        }
+        // tau beyond the worker count is rejected
+        let j = Json::parse(r#"{"workers": 4, "wire": {"participation": "tau=9"}}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&j).is_err());
+        // diana++'s incremental downlinks cannot skip rounds
+        let j = Json::parse(
+            r#"{"methods": ["diana++"], "wire": {"participation": "tau=1"}}"#,
+        )
+        .unwrap();
+        assert!(ExperimentConfig::from_json(&j).is_err());
+    }
+
+    #[test]
     fn canonical_identity_pins_the_trajectory_not_the_plumbing() {
         let a = ExperimentConfig::default();
         let mut b = ExperimentConfig::default();
@@ -827,10 +959,16 @@ mod tests {
         b.watch = true;
         // the relay tier is exact partial aggregation — pure plumbing
         b.wire.relays = Some("2,2".into());
+        // the member floor only delays who hosts which shard — plumbing too
+        b.wire.min_clients = 2;
         assert_eq!(a.canonical_identity(), b.canonical_identity());
         // trajectory-determining fields do not
         b.seed = 43;
         assert_ne!(a.canonical_identity(), b.canonical_identity());
+        // which workers speak each round is the trajectory
+        let mut p = ExperimentConfig::default();
+        p.wire.participation = Some("tau=2".into());
+        assert_ne!(a.canonical_identity(), p.canonical_identity());
         let mut c = ExperimentConfig::default();
         c.wire.payload = Payload::Q8;
         assert_ne!(a.canonical_identity(), c.canonical_identity());

@@ -1,0 +1,531 @@
+//! Membership: the coordinator's epoch state machine and the per-round
+//! client-sampling (partial participation) policy.
+//!
+//! Two cooperating pieces live here:
+//!
+//! * [`Participation`] — the **sampler** every driver shares. With
+//!   `--participation tau=K` (`wire.participation`) each round draws an
+//!   unbiased cohort S ⊆ [n] of exactly τ shards; only cohort members
+//!   compute and uplink, and the server reweights their messages by
+//!   n/τ before applying so the aggregate stays an unbiased estimator
+//!   of the full-participation gradient (the DIANA line's
+//!   partial-participation analysis, Mishchenko et al. 1901.09269).
+//!   The cohort for round `r` is a **pure function** of
+//!   `(seed, n, τ, r)` — no sequential sampler state — so the sim,
+//!   threaded and distributed drivers draw identical cohorts with zero
+//!   coordination, and a rejoining or late-joining worker can recompute
+//!   any historical cohort locally during journal replay. At τ = n the
+//!   sampler is a strict no-op: no RNG stream is consumed, no uplink is
+//!   scaled, and the trajectory is bitwise identical to a build without
+//!   this module.
+//!
+//! * [`Membership`] — the **state machine** the elastic server drives
+//!   (`WaitingForMembers → Warmup → RoundActive → Cooldown`), replacing
+//!   the serve loop's ad-hoc accept/rejoin flags with explicit,
+//!   validated transitions that emit [`MembershipEvent`]s. The serve
+//!   loop *consumes* those events (registry gauges, `RL_MEMBERSHIP`
+//!   run-log records) instead of computing them inline; illegal
+//!   transitions are rejected with an error rather than silently
+//!   absorbed (table-driven tests in `tests/membership.rs`).
+//!
+//! Epochs number membership *generations*: the epoch rolls when the
+//! run activates and whenever composition changes (late join, evict).
+//! The cohort draw deliberately does **not** depend on the epoch —
+//! that is what keeps a late joiner from perturbing the trajectory.
+
+use crate::methods::Uplink;
+use crate::util::rng::Rng;
+use anyhow::{bail, ensure, Result};
+use std::collections::BTreeMap;
+
+/// RNG-stream label for the cohort sampler, disjoint from the worker
+/// streams (`derive(i)`, i < n) and the server stream
+/// (`derive(u64::MAX)`).
+pub const MEMBERSHIP_STREAM: u64 = u64::MAX - 1;
+
+/// Draw round `round`'s cohort into `mask` (`mask[s]` ⇔ shard `s` is
+/// sampled in). Pure in `(seed, n, tau, round)`: a partial Fisher–Yates
+/// shuffle over `[0, n)` under `Rng::new(seed).derive(MEMBERSHIP_STREAM)
+/// .derive(round)`, keeping the first `tau` picks. `scratch` is reused
+/// across calls to keep the per-round draw allocation-free.
+pub fn cohort_mask(
+    seed: u64,
+    n: usize,
+    tau: usize,
+    round: u64,
+    scratch: &mut Vec<usize>,
+    mask: &mut Vec<bool>,
+) {
+    debug_assert!(tau <= n);
+    mask.clear();
+    mask.resize(n, false);
+    if tau >= n {
+        mask.iter_mut().for_each(|m| *m = true);
+        return;
+    }
+    scratch.clear();
+    scratch.extend(0..n);
+    let mut rng = Rng::new(seed).derive(MEMBERSHIP_STREAM).derive(round);
+    for k in 0..tau {
+        let j = k + rng.below(n - k);
+        scratch.swap(k, j);
+        mask[scratch[k]] = true;
+    }
+}
+
+/// The per-round client-sampling policy shared by every driver.
+/// Construct with [`Participation::from_run`]; `None` means full
+/// participation (today's behavior, untouched).
+#[derive(Clone, Debug)]
+pub struct Participation {
+    seed: u64,
+    n: usize,
+    tau: usize,
+    mask: Vec<bool>,
+    scratch: Vec<usize>,
+}
+
+impl Participation {
+    /// Policy for an n-shard run with cohort size `tau`. `tau ≥ n` is
+    /// clamped to full participation (a strict no-op); `tau = 0` is
+    /// rejected.
+    pub fn new(seed: u64, n: usize, tau: usize) -> Result<Participation> {
+        ensure!(n > 0, "participation needs at least one shard");
+        ensure!(tau > 0, "participation tau must be >= 1 (got 0)");
+        Ok(Participation {
+            seed,
+            n,
+            tau: tau.min(n),
+            mask: vec![false; n],
+            scratch: Vec::new(),
+        })
+    }
+
+    /// Policy from a resolved run config, or `None` when participation
+    /// is off (the common case; keeps every call site a one-liner).
+    pub fn from_run(participation: Option<usize>, seed: u64, n: usize) -> Result<Option<Self>> {
+        match participation {
+            Some(tau) => Ok(Some(Participation::new(seed, n, tau)?)),
+            None => Ok(None),
+        }
+    }
+
+    /// τ = n: sampling, reweighting and the epoch wire frames all
+    /// short-circuit, reducing exactly to full participation.
+    pub fn is_full(&self) -> bool {
+        self.tau == self.n
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Cohort size τ.
+    pub fn tau(&self) -> usize {
+        self.tau
+    }
+
+    /// Unbiasedness weight n/τ applied to every cohort uplink.
+    pub fn weight(&self) -> f64 {
+        self.n as f64 / self.tau as f64
+    }
+
+    /// Draw round `round`'s cohort and return the membership mask.
+    pub fn draw(&mut self, round: u64) -> &[bool] {
+        let (seed, n, tau) = (self.seed, self.n, self.tau);
+        cohort_mask(seed, n, tau, round, &mut self.scratch, &mut self.mask);
+        &self.mask
+    }
+
+    /// The mask of the most recent [`Participation::draw`].
+    pub fn mask(&self) -> &[bool] {
+        &self.mask
+    }
+}
+
+/// Scale a cohort member's uplink by the unbiasedness weight n/τ —
+/// called identically by every driver *after* communication accounting
+/// (the wire carried the unscaled values) and *before* `server.apply`.
+pub fn reweight_uplink(up: &mut Uplink, w: f64) {
+    for v in &mut up.delta.val {
+        *v *= w;
+    }
+    if let Some(d2) = &mut up.delta2 {
+        for v in &mut d2.val {
+            *v *= w;
+        }
+    }
+}
+
+/// Clear a sampled-out shard's uplink slot so stale data from its last
+/// participating round cannot leak into `server.apply` (slot tables are
+/// reused across rounds in every driver).
+pub fn clear_uplink(up: &mut Uplink) {
+    up.delta.clear();
+    up.delta2 = None;
+}
+
+// ---- the epoch state machine -------------------------------------------
+
+/// Coordinator-side run phase.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum MembershipState {
+    /// Accepting connections until `min_clients` have joined.
+    WaitingForMembers { min_clients: usize },
+    /// Enough members; handshakes (dataset/state rebuilds) in flight.
+    Warmup,
+    /// Rounds are running under epoch `epoch`.
+    RoundActive { epoch: u64 },
+    /// The run loop has ended; members are being released.
+    Cooldown,
+}
+
+/// One member's lifecycle state.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MemberState {
+    /// Handshake sent; state rebuild in flight.
+    Joined,
+    /// Live and in the sampling pool.
+    Active,
+    /// Live, but outside the current round's cohort (idle; heartbeats
+    /// alone keep it here — no uplink is owed).
+    SampledOut,
+    /// Silent past the grace window; shards orphaned, awaiting a
+    /// replacement or reassignment.
+    Suspected,
+    /// Removed from the pool (connection gone for good).
+    Evicted,
+}
+
+impl MemberState {
+    pub fn name(self) -> &'static str {
+        match self {
+            MemberState::Joined => "joined",
+            MemberState::Active => "active",
+            MemberState::SampledOut => "sampled_out",
+            MemberState::Suspected => "suspected",
+            MemberState::Evicted => "evicted",
+        }
+    }
+}
+
+/// Events the serve loop (and the run log / registry) consume. Emitted
+/// by the transition methods; drained with [`Membership::drain_events`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum MembershipEvent {
+    Joined { member: u64 },
+    /// A member that arrived after rounds started (first-class late
+    /// join: it catches up over the snapshot/replay path and enters the
+    /// sampling pool in the next epoch).
+    LateJoined { member: u64 },
+    SampledIn { member: u64 },
+    SampledOut { member: u64 },
+    Suspected { member: u64 },
+    Evicted { member: u64 },
+    EpochRolled { epoch: u64 },
+}
+
+impl MembershipEvent {
+    /// Stable wire/run-log encoding (see `wire::runlog::RL_MEMBERSHIP`).
+    pub fn kind_code(&self) -> u8 {
+        match self {
+            MembershipEvent::Joined { .. } => 1,
+            MembershipEvent::LateJoined { .. } => 2,
+            MembershipEvent::SampledIn { .. } => 3,
+            MembershipEvent::SampledOut { .. } => 4,
+            MembershipEvent::Suspected { .. } => 5,
+            MembershipEvent::Evicted { .. } => 6,
+            MembershipEvent::EpochRolled { .. } => 7,
+        }
+    }
+
+    pub fn kind_name(code: u8) -> &'static str {
+        match code {
+            1 => "joined",
+            2 => "late-joined",
+            3 => "sampled-in",
+            4 => "sampled-out",
+            5 => "suspected",
+            6 => "evicted",
+            7 => "epoch-rolled",
+            _ => "unknown",
+        }
+    }
+
+    pub fn member(&self) -> u64 {
+        match self {
+            MembershipEvent::Joined { member }
+            | MembershipEvent::LateJoined { member }
+            | MembershipEvent::SampledIn { member }
+            | MembershipEvent::SampledOut { member }
+            | MembershipEvent::Suspected { member }
+            | MembershipEvent::Evicted { member } => *member,
+            MembershipEvent::EpochRolled { epoch } => *epoch,
+        }
+    }
+}
+
+/// The explicit epoch/membership state machine. Every transition either
+/// succeeds (possibly emitting events) or is rejected with an error —
+/// the serve loop never mutates member state directly.
+#[derive(Clone, Debug)]
+pub struct Membership {
+    state: MembershipState,
+    epoch: u64,
+    members: BTreeMap<u64, MemberState>,
+    events: Vec<MembershipEvent>,
+}
+
+impl Membership {
+    /// A machine waiting for `min_clients` members before warmup may
+    /// begin. `min_clients = 0` is normalized to 1 (a run with no
+    /// members cannot round).
+    pub fn new(min_clients: usize) -> Membership {
+        Membership {
+            state: MembershipState::WaitingForMembers {
+                min_clients: min_clients.max(1),
+            },
+            epoch: 0,
+            members: BTreeMap::new(),
+            events: Vec::new(),
+        }
+    }
+
+    pub fn state(&self) -> &MembershipState {
+        &self.state
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    pub fn member_state(&self, id: u64) -> Option<MemberState> {
+        self.members.get(&id).copied()
+    }
+
+    /// Members currently in a given state (registry gauge fodder).
+    pub fn count(&self, s: MemberState) -> usize {
+        self.members.values().filter(|&&m| m == s).count()
+    }
+
+    /// Drain the events emitted since the last drain, in order.
+    pub fn drain_events(&mut self) -> Vec<MembershipEvent> {
+        std::mem::take(&mut self.events)
+    }
+
+    fn roll_epoch(&mut self) {
+        self.epoch += 1;
+        let epoch = self.epoch;
+        self.events.push(MembershipEvent::EpochRolled { epoch });
+    }
+
+    /// A member joins (handshake sent). Before rounds start this is a
+    /// plain join; during `RoundActive` it is a **late join**: the
+    /// member enters the sampling pool with the next epoch, which rolls
+    /// now. Rejoining after an eviction takes the same path. A
+    /// duplicate join of a live member is illegal.
+    pub fn join(&mut self, id: u64) -> Result<()> {
+        match self.members.get(&id) {
+            Some(MemberState::Evicted) | None => {}
+            Some(s) => bail!("member {id} cannot join twice (currently {})", s.name()),
+        }
+        match self.state {
+            MembershipState::Cooldown => bail!("member {id} cannot join during cooldown"),
+            MembershipState::RoundActive { .. } => {
+                self.members.insert(id, MemberState::Joined);
+                self.events.push(MembershipEvent::LateJoined { member: id });
+                self.roll_epoch();
+            }
+            _ => {
+                self.members.insert(id, MemberState::Joined);
+                self.events.push(MembershipEvent::Joined { member: id });
+            }
+        }
+        Ok(())
+    }
+
+    /// `WaitingForMembers → Warmup`: legal only once the member floor is
+    /// met.
+    pub fn warmup(&mut self) -> Result<()> {
+        let MembershipState::WaitingForMembers { min_clients } = self.state else {
+            bail!("warmup is only legal from WaitingForMembers (in {:?})", self.state);
+        };
+        ensure!(
+            self.members.len() >= min_clients,
+            "warmup needs {min_clients} member(s), have {}",
+            self.members.len()
+        );
+        self.state = MembershipState::Warmup;
+        Ok(())
+    }
+
+    /// A joined member finished its handshake/rebuild and is live.
+    pub fn activate_member(&mut self, id: u64) -> Result<()> {
+        match self.members.get(&id) {
+            Some(MemberState::Joined) => {
+                self.members.insert(id, MemberState::Active);
+                Ok(())
+            }
+            Some(s) => bail!("member {id} cannot activate from {}", s.name()),
+            None => bail!("member {id} cannot activate before joining"),
+        }
+    }
+
+    /// `Warmup → RoundActive`: rounds may start. Rolls the first epoch.
+    pub fn activate(&mut self) -> Result<()> {
+        ensure!(
+            self.state == MembershipState::Warmup,
+            "activate is only legal from Warmup (in {:?})",
+            self.state
+        );
+        ensure!(
+            self.members.values().any(|&m| m == MemberState::Active),
+            "activate needs at least one active member"
+        );
+        self.roll_epoch();
+        self.state = MembershipState::RoundActive { epoch: self.epoch };
+        Ok(())
+    }
+
+    /// Per-round sampling verdicts: members move `Active ↔ SampledOut`,
+    /// emitting events only on change. Legal only while rounds run.
+    /// `sampled_in` decides per member id; members in other states
+    /// (Joined mid-catchup, Suspected, Evicted) are left alone.
+    pub fn begin_round(&mut self, sampled_in: impl Fn(u64) -> bool) -> Result<()> {
+        ensure!(
+            matches!(self.state, MembershipState::RoundActive { .. }),
+            "begin_round is only legal while RoundActive (in {:?})",
+            self.state
+        );
+        let ids: Vec<u64> = self.members.keys().copied().collect();
+        for id in ids {
+            let cur = self.members[&id];
+            let next = match (cur, sampled_in(id)) {
+                (MemberState::Active, false) => MemberState::SampledOut,
+                (MemberState::SampledOut, true) => MemberState::Active,
+                _ => continue,
+            };
+            self.members.insert(id, next);
+            self.events.push(match next {
+                MemberState::Active => MembershipEvent::SampledIn { member: id },
+                _ => MembershipEvent::SampledOut { member: id },
+            });
+        }
+        Ok(())
+    }
+
+    /// A live member went silent past the grace window (or its socket
+    /// died): its shards are orphaned pending a replacement.
+    pub fn suspect(&mut self, id: u64) -> Result<()> {
+        match self.members.get(&id) {
+            Some(MemberState::Active) | Some(MemberState::SampledOut)
+            | Some(MemberState::Joined) => {
+                self.members.insert(id, MemberState::Suspected);
+                self.events.push(MembershipEvent::Suspected { member: id });
+                Ok(())
+            }
+            Some(s) => bail!("member {id} cannot be suspected from {}", s.name()),
+            None => bail!("cannot suspect unknown member {id}"),
+        }
+    }
+
+    /// A suspected member is removed for good. Rolls the epoch: the
+    /// sampling pool's composition changed.
+    pub fn evict(&mut self, id: u64) -> Result<()> {
+        match self.members.get(&id) {
+            Some(MemberState::Suspected) => {
+                self.members.insert(id, MemberState::Evicted);
+                self.events.push(MembershipEvent::Evicted { member: id });
+                self.roll_epoch();
+                Ok(())
+            }
+            Some(s) => bail!("member {id} can only be evicted while suspected (is {})", s.name()),
+            None => bail!("cannot evict unknown member {id}"),
+        }
+    }
+
+    /// `RoundActive → Cooldown`: the run loop ended.
+    pub fn cooldown(&mut self) -> Result<()> {
+        ensure!(
+            matches!(self.state, MembershipState::RoundActive { .. }),
+            "cooldown is only legal from RoundActive (in {:?})",
+            self.state
+        );
+        self.state = MembershipState::Cooldown;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cohort_is_pure_and_exact_size() {
+        let mut s1 = Vec::new();
+        let mut m1 = Vec::new();
+        let mut s2 = Vec::new();
+        let mut m2 = Vec::new();
+        for round in [1u64, 2, 3, 100, 1_000_000] {
+            cohort_mask(42, 8, 3, round, &mut s1, &mut m1);
+            cohort_mask(42, 8, 3, round, &mut s2, &mut m2);
+            assert_eq!(m1, m2, "round {round}: draw is not pure");
+            assert_eq!(m1.iter().filter(|&&b| b).count(), 3);
+        }
+        // different rounds really vary (astronomically unlikely to match
+        // on every one of 50 draws otherwise)
+        let mut distinct = std::collections::BTreeSet::new();
+        for round in 1..=50u64 {
+            cohort_mask(42, 8, 3, round, &mut s1, &mut m1);
+            distinct.insert(m1.clone());
+        }
+        assert!(distinct.len() > 1, "cohorts never vary across rounds");
+    }
+
+    #[test]
+    fn tau_n_is_a_strict_noop() {
+        let mut p = Participation::new(7, 4, 4).unwrap();
+        assert!(p.is_full());
+        assert_eq!(p.weight(), 1.0);
+        assert!(p.draw(9).iter().all(|&b| b));
+        // tau > n clamps to full
+        assert!(Participation::new(7, 4, 9).unwrap().is_full());
+        assert!(Participation::new(7, 4, 0).is_err());
+    }
+
+    #[test]
+    fn sampling_is_unbiased_enough() {
+        // each shard should be sampled ~ tau/n of the time
+        let mut p = Participation::new(1234, 6, 2).unwrap();
+        let mut hits = [0usize; 6];
+        let rounds = 3000u64;
+        for r in 1..=rounds {
+            for (s, &b) in p.draw(r).iter().enumerate() {
+                if b {
+                    hits[s] += 1;
+                }
+            }
+        }
+        let expect = rounds as f64 * 2.0 / 6.0;
+        for (s, &h) in hits.iter().enumerate() {
+            let dev = (h as f64 - expect).abs() / expect;
+            assert!(dev < 0.15, "shard {s}: {h} hits vs {expect} expected");
+        }
+    }
+
+    #[test]
+    fn reweight_scales_both_messages() {
+        let mut up = Uplink::default();
+        up.delta.push(0, 1.5);
+        up.delta.push(3, -2.0);
+        let mut d2 = crate::compress::SparseMsg::new();
+        d2.push(1, 4.0);
+        up.delta2 = Some(d2);
+        reweight_uplink(&mut up, 2.0);
+        assert_eq!(up.delta.val, vec![3.0, -4.0]);
+        assert_eq!(up.delta2.as_ref().unwrap().val, vec![8.0]);
+        clear_uplink(&mut up);
+        assert_eq!(up.coords(), 0);
+        assert!(up.delta2.is_none());
+    }
+}

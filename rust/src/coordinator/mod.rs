@@ -49,9 +49,13 @@
 //! `wire::run_distributed*`) have been removed — construct a [`Session`]
 //! instead.
 
+pub mod membership;
 pub mod metrics;
 pub mod session;
 
+pub use membership::{
+    Membership, MembershipEvent, MembershipState, MemberState, Participation,
+};
 pub use metrics::{RoundRecord, RoundTotals, RunOutcome, RunResult};
 pub use session::{
     load_checkpoint, write_checkpoint, CheckpointObserver, CollectObserver, CsvObserver,
@@ -97,6 +101,13 @@ pub struct RunConfig {
     /// truncates its replay journal on this cadence (see
     /// [`crate::wire::runtime`]).
     pub checkpoint_every: usize,
+    /// partial participation: per-round cohort size τ (None ⇒ all n
+    /// workers speak every round). Cohorts are a pure function of
+    /// `(seed, n, τ, round)` ([`membership::cohort_mask`]) and uplinks
+    /// are reweighted by n/τ before aggregation, identically on every
+    /// driver; τ = n short-circuits to exactly the full-participation
+    /// path.
+    pub participation: Option<usize>,
 }
 
 impl Default for RunConfig {
@@ -110,6 +121,7 @@ impl Default for RunConfig {
             payload: Payload::F64,
             pin: false,
             checkpoint_every: 0,
+            participation: None,
         }
     }
 }
@@ -172,17 +184,35 @@ pub fn run_sim_observed(
     let mut reached = false;
     let mut rounds_run = 0;
     let mut bufs = RoundBuffers::new(n);
+    // partial participation: τ = n (or None) is a strict no-op — no RNG
+    // stream is consumed and no uplink is touched (config validation
+    // already proved τ ≥ 1)
+    let mut participation = Participation::from_run(cfg.participation, cfg.seed, n)
+        .expect("participation validated at config time")
+        .filter(|p| !p.is_full());
+    let weight = participation.as_ref().map_or(1.0, Participation::weight);
 
     if !stopped {
         for round in 1..=cfg.max_rounds {
             rounds_run = round;
             let RoundBuffers { down, ups } = &mut bufs;
             phases.time("server_downlink", || method.server.downlink_into(&mut *down));
-            acc.coords_down += (down.coords() * n) as u64;
-            acc.bytes_down += (codec::downlink_frame_len(&*down, cfg.payload) * n) as u64;
+            let cohort = participation.as_mut().map(|p| p.draw(round as u64));
+            let tau = cohort.as_ref().map_or(n, |m| m.iter().filter(|&&b| b).count());
+            acc.coords_down += (down.coords() * tau) as u64;
+            acc.bytes_down += (codec::downlink_frame_len(&*down, cfg.payload) * tau) as u64;
 
             for i in 0..n {
                 let up = &mut ups[i];
+                if let Some(mask) = &cohort {
+                    if !mask[i] {
+                        // sampled out: the worker computes nothing, its
+                        // state does not advance, and its slot must not
+                        // leak last round's message into apply
+                        membership::clear_uplink(up);
+                        continue;
+                    }
+                }
                 phases.time("worker_round", || {
                     method.workers[i].round_into(
                         &*down,
@@ -194,6 +224,17 @@ pub fn run_sim_observed(
                 acc.coords_up += up.coords() as u64;
                 acc.bits_up += bits_of(up, dim, cfg.float_bits);
                 acc.bytes_up += codec::uplink_frame_len(&*up, i, cfg.payload) as u64;
+            }
+
+            // reweight by n/τ after accounting (the wire carries the
+            // unscaled values) and before aggregation — the unbiasedness
+            // correction, applied identically by every driver
+            if let Some(mask) = &cohort {
+                for (i, up) in ups.iter_mut().enumerate() {
+                    if mask[i] {
+                        membership::reweight_uplink(up, weight);
+                    }
+                }
             }
 
             phases.time("server_apply", || {
@@ -323,6 +364,14 @@ pub fn run_threaded_observed(
     // done with it), `Arc::get_mut` succeeds and the buffer is rewritten
     // in place — no per-round Arc or payload allocation in steady state.
     let mut down: Arc<Downlink> = Arc::new(Downlink::Init { x: Vec::new() });
+    // partial participation: sampled-out workers receive neither a Round
+    // nor a Recycle and simply block on their ring until sampled back in
+    // — exactly the cheap idling the distributed driver gets from
+    // epoch-frame heartbeats
+    let mut participation = Participation::from_run(cfg.participation, cfg.seed, n)
+        .expect("participation validated at config time")
+        .filter(|p| !p.is_full());
+    let weight = participation.as_ref().map_or(1.0, Participation::weight);
 
     if !stopped {
         for round in 1..=cfg.max_rounds {
@@ -339,11 +388,15 @@ pub fn run_threaded_observed(
                     down = Arc::new(fresh);
                 }
             });
-            acc.coords_down += (down.coords() * n) as u64;
-            acc.bytes_down += (codec::downlink_frame_len(&down, cfg.payload) * n) as u64;
+            let cohort = participation.as_mut().map(|p| p.draw(round as u64));
+            let tau = cohort.as_ref().map_or(n, |m| m.iter().filter(|&&b| b).count());
+            acc.coords_down += (down.coords() * tau) as u64;
+            acc.bytes_down += (codec::downlink_frame_len(&down, cfg.payload) * tau) as u64;
             phases.time("scatter", || {
                 for (i, tx) in to_workers.iter().enumerate() {
-                    if tx.send(ToWorker::Round(down.clone())).is_err() {
+                    if cohort.as_ref().map_or(true, |m| m[i])
+                        && tx.send(ToWorker::Round(down.clone())).is_err()
+                    {
                         panic!("worker {i} died");
                     }
                 }
@@ -353,6 +406,10 @@ pub fn run_threaded_observed(
                 // ring blocks exactly until its round is done — the barrier is
                 // complete after the loop, same as the shared-channel gather
                 for (i, up_rx) in from_workers.iter().enumerate() {
+                    if !cohort.as_ref().map_or(true, |m| m[i]) {
+                        membership::clear_uplink(&mut ups[i]);
+                        continue;
+                    }
                     let up = up_rx.recv().expect("worker channel closed");
                     acc.coords_up += up.coords() as u64;
                     acc.bits_up += bits_of(&up, dim, cfg.float_bits);
@@ -360,12 +417,24 @@ pub fn run_threaded_observed(
                     ups[i] = up;
                 }
             });
+            // unbiasedness reweight by n/τ, after accounting, before apply
+            if let Some(mask) = &cohort {
+                for (i, up) in ups.iter_mut().enumerate() {
+                    if mask[i] {
+                        membership::reweight_uplink(up, weight);
+                    }
+                }
+            }
             phases.time("server_apply", || {
                 method.server.apply(&ups, &mut server_rng)
             });
             // hand the consumed uplink buffers back to their workers
+            // (sampled-out workers sent nothing and get nothing back —
+            // recycling into an idle worker would grow its spare stack)
             for (i, tx) in to_workers.iter().enumerate() {
-                let _ = tx.send(ToWorker::Recycle(std::mem::take(&mut ups[i])));
+                if cohort.as_ref().map_or(true, |m| m[i]) {
+                    let _ = tx.send(ToWorker::Recycle(std::mem::take(&mut ups[i])));
+                }
             }
 
             let res = residual(method.server.iterate(), x_star, denom);

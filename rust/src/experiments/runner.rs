@@ -152,6 +152,8 @@ pub fn run_config(cfg: &ExperimentConfig) -> RunConfig {
         payload: cfg.wire.payload,
         pin: cfg.pin,
         checkpoint_every: cfg.checkpoint_every,
+        // validate() already proved the spec parses and τ ≤ n
+        participation: cfg.wire.participation_tau().ok().flatten(),
     }
 }
 

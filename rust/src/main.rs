@@ -38,6 +38,7 @@ const USAGE: &str = "usage: smx <train|figures|tables|solve|info|serve|worker|re
   smx info    --dataset duke
   smx serve   --dataset a1a --methods diana+ --listen 127.0.0.1:4950 \\
               --wire-workers 2 --payload f32 [--check-sim] [--worker-timeout S]
+              [--participation tau=K] [--min-clients M]
               [--run-dir DIR] [--fault-plan PLAN] [--no-crc]
               [--metrics-addr HOST:PORT] [--watch]
   smx worker  --connect 127.0.0.1:4950 [--pin-core N] [--die-after K]
@@ -70,6 +71,14 @@ flags: --workers N --mu F --max-rounds N --target-residual F --seed N
 wire:  --payload f64|f32|q16|q8|q4 --listen HOST:PORT --wire-workers N
        (0 = one process per shard) --float-bits N (modeled-bit override)
        --worker-timeout SECS (fault-tolerance grace window; 0 = fail fast)
+       --participation tau=K (partial participation: each round an
+       unbiased cohort of K of the n workers uplinks, reweighted by n/K;
+       tau=n or full = every round is full participation — a strict
+       no-op. Deterministic in the seed, so sim/threaded/distributed
+       stay bitwise identical; diana++ is unsupported)
+       --min-clients M (serve: start rounds once M worker processes are
+       live; the rest join late over the snapshot + journal catch-up
+       path without perturbing the trajectory; needs --worker-timeout)
        --pin-core N (pin this worker process) --die-after K (chaos: drop
        the connection after the K-th downlink, like a SIGKILL)
        --expect-restore (chaos: worker fails unless it was resumed from a
@@ -83,8 +92,10 @@ wire:  --payload f64|f32|q16|q8|q4 --listen HOST:PORT --wire-workers N
        --watch (live terminal dashboard on stderr: round rate, residual
        sparkline, measured-vs-modeled bytes, per-worker liveness)
        --fault-plan 'kill-server@r12;drop-uplink@r5:w1;corrupt-downlink@r9;
-       delay@r7:50ms;kill@r6:relay' (scripted faults; server events on
-       serve, worker events on worker, :relay kills on relay)
+       delay@r7:50ms;pause@r4:w0;kill@r6:relay' (scripted faults; server
+       events on serve, worker events on worker, :relay kills on relay;
+       pause = the worker stops heartbeating for good but still answers
+       its downlinks)
        --max-retries N --retry-base-ms MS (worker/relay reconnect backoff
        after a connection loss)
        --relay TIERS (serve: expect a relay topology instead of direct

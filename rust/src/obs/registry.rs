@@ -191,6 +191,10 @@ impl RoundBlock {
     }
 }
 
+/// Label values of the `smx_members{state=...}` gauge family, in slot
+/// order. They mirror `coordinator::membership::MemberState::name`.
+pub const MEMBER_STATES: [&str; 5] = ["joined", "active", "sampled_out", "suspected", "evicted"];
+
 /// The process-wide metrics registry. All fields are preallocated at
 /// construction — producers never allocate. Share it as an
 /// `Arc<Registry>` between the driving loop, the HTTP endpoint and any
@@ -231,6 +235,13 @@ pub struct Registry {
     pub journal_rounds: Gauge,
     /// bytes currently held by the in-memory replay journal
     pub journal_bytes: Gauge,
+    /// current membership epoch (0 until the membership machine
+    /// activates; the whole membership family renders only once it has)
+    pub epoch: Gauge,
+    /// cohort size τ of the latest round (n when every member is in)
+    pub cohort_size: Gauge,
+    /// member counts per membership state, indexed like [`MEMBER_STATES`]
+    members: [Gauge; MEMBER_STATES.len()],
     /// latest recorded round (seqlock-guarded multi-field block)
     pub round: RoundBlock,
     /// wall-clock duration of each completed round
@@ -260,6 +271,9 @@ impl Registry {
             scrapes: Counter::default(),
             journal_rounds: Gauge::default(),
             journal_bytes: Gauge::default(),
+            epoch: Gauge::default(),
+            cohort_size: Gauge::default(),
+            members: std::array::from_fn(|_| Gauge::default()),
             round: RoundBlock::default(),
             round_duration: Histogram::default(),
             live: (0..n_shards).map(|_| AtomicU64::new(0)).collect(),
@@ -296,6 +310,14 @@ impl Registry {
     /// Publish `rec` as the latest round block. Alloc-free.
     pub fn observe_record(&self, rec: &RoundRecord) {
         self.round.write(rec);
+    }
+
+    /// Set the member count for `state` (a [`MEMBER_STATES`] label
+    /// value; unknown states are ignored, like out-of-range shards).
+    pub fn set_members(&self, state: &str, count: u64) {
+        if let Some(i) = MEMBER_STATES.iter().position(|s| *s == state) {
+            self.members[i].set(count);
+        }
     }
 
     /// Render the whole registry in Prometheus text exposition format
@@ -403,6 +425,26 @@ impl Registry {
             "Bytes held by the in-memory replay journal.",
             &self.journal_bytes.get(),
         );
+
+        if self.epoch.get() > 0 {
+            gauge(
+                &mut out,
+                "smx_epoch",
+                "Current membership epoch.",
+                &self.epoch.get(),
+            );
+            gauge(
+                &mut out,
+                "smx_cohort_size",
+                "Cohort size (tau) of the latest round.",
+                &self.cohort_size.get(),
+            );
+            let _ = writeln!(out, "# HELP smx_members Members per membership state.");
+            let _ = writeln!(out, "# TYPE smx_members gauge");
+            for (name, slot) in MEMBER_STATES.iter().zip(self.members.iter()) {
+                let _ = writeln!(out, "smx_members{{state=\"{name}\"}} {}", slot.get());
+            }
+        }
 
         if let Some(rec) = self.round.snapshot() {
             gauge(
@@ -622,7 +664,19 @@ mod tests {
         reg.relay_forwarded_bytes.add(512);
         reg.observe_record(&rec(30));
         reg.round_duration.observe(0.002);
+        // the membership family renders only once the machine activated
+        assert!(!reg.render().contains("smx_members"));
+        reg.epoch.set(2);
+        reg.cohort_size.set(3);
+        reg.set_members("active", 3);
+        reg.set_members("sampled_out", 1);
+        reg.set_members("no-such-state", 9); // ignored, like bad shards
         let text = reg.render();
+        assert!(text.contains("smx_epoch 2"));
+        assert!(text.contains("smx_cohort_size 3"));
+        assert!(text.contains("smx_members{state=\"active\"} 3"));
+        assert!(text.contains("smx_members{state=\"sampled_out\"} 1"));
+        assert!(text.contains("smx_members{state=\"evicted\"} 0"));
         assert!(text.contains("smx_rounds_total 30"));
         assert!(text.contains("smx_worker_connects_total 1"));
         assert!(text.contains("smx_relay_merged_frames_total 1"));

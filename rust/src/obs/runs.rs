@@ -213,6 +213,18 @@ pub fn cmd(args: &Args) -> Result<Option<ExperimentConfig>> {
                 "journal: {} buffered downlink round(s) past the snapshot",
                 s.journal_rounds
             );
+            if !loaded.membership.is_empty() {
+                println!("membership: {} event(s)", loaded.membership.len());
+                for m in &loaded.membership {
+                    println!(
+                        "  round {:>6}  epoch {:>4}  {:<12} member {}",
+                        m.round,
+                        m.epoch,
+                        crate::coordinator::membership::MembershipEvent::kind_name(m.kind),
+                        m.member
+                    );
+                }
+            }
             match &loaded.config_json {
                 Some(raw) if !raw.is_empty() => match Json::parse(raw) {
                     Ok(j) => print!("config:\n{}", j.to_string_pretty()),

@@ -1,0 +1,126 @@
+//! Epoch/cohort announcement frames for partial participation.
+//!
+//! Under `--participation tau=K` the server prefixes every round with a
+//! tiny `TAG_EPOCH` frame broadcast to **all** live connections — cohort
+//! members and sampled-out idlers alike. The frame names the round, the
+//! membership epoch, and the cohort as a shard bitmap; the downlink that
+//! follows on the same connection is sent only to connections hosting at
+//! least one cohort shard. Sampled-out workers therefore still see one
+//! frame per round, answer it with a heartbeat, and stay inside the
+//! `--worker-timeout` grace window while owing no uplink. Relays forward
+//! the frame verbatim to every child (pass-through, like downlinks).
+//!
+//! Like all membership state, the cohort itself is a pure function of
+//! `(seed, n, τ, round)` (see `coordinator::membership`), so this frame
+//! is an announcement, not a negotiation — workers could recompute it,
+//! and do exactly that when replaying journaled rounds after a rejoin.
+
+use super::codec::{frame_tag, get_varint, put_varint, WireError};
+
+/// Epoch/cohort announcement (body tag). Keep clear of codec's tags
+/// (1..=12).
+pub const TAG_EPOCH: u8 = 13;
+
+type Result<T> = std::result::Result<T, WireError>;
+
+/// Serialize an epoch announcement: round, membership epoch, and the
+/// cohort bitmap over `n = mask.len()` shards (LSB-first within each
+/// byte).
+pub fn put_epoch(out: &mut Vec<u8>, round: usize, epoch: u64, mask: &[bool]) {
+    out.clear();
+    out.push(TAG_EPOCH);
+    put_varint(out, round as u64);
+    put_varint(out, epoch);
+    put_varint(out, mask.len() as u64);
+    let mut byte = 0u8;
+    for (i, &m) in mask.iter().enumerate() {
+        if m {
+            byte |= 1 << (i % 8);
+        }
+        if i % 8 == 7 {
+            out.push(byte);
+            byte = 0;
+        }
+    }
+    if mask.len() % 8 != 0 {
+        out.push(byte);
+    }
+}
+
+/// Decode an epoch announcement into `mask` (resized to the frame's n)
+/// → `(round, epoch)`.
+pub fn get_epoch(body: &[u8], mask: &mut Vec<bool>) -> Result<(usize, u64)> {
+    let mut pos = 0usize;
+    if frame_tag(body)? != TAG_EPOCH {
+        return Err(WireError::new("expected epoch frame"));
+    }
+    pos += 1;
+    let round = get_varint(body, &mut pos)? as usize;
+    let epoch = get_varint(body, &mut pos)?;
+    let n = get_varint(body, &mut pos)? as usize;
+    let bytes = (n + 7) / 8; // div_ceil needs Rust 1.73; MSRV is 1.70
+    if body.len() - pos != bytes {
+        return Err(WireError::new(format!(
+            "epoch bitmap length mismatch: {} shards need {} byte(s), frame has {}",
+            n,
+            bytes,
+            body.len() - pos
+        )));
+    }
+    mask.clear();
+    mask.reserve(n);
+    for i in 0..n {
+        let b = body[pos + i / 8];
+        mask.push(b & (1 << (i % 8)) != 0);
+    }
+    // bits past n must be zero: a decode/re-encode must be byte-identical
+    if n % 8 != 0 && body[pos + bytes - 1] >> (n % 8) != 0 {
+        return Err(WireError::new("epoch bitmap has bits set past n"));
+    }
+    Ok((round, epoch))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(round: usize, epoch: u64, mask: &[bool]) {
+        let mut buf = Vec::new();
+        put_epoch(&mut buf, round, epoch, mask);
+        assert_eq!(frame_tag(&buf).unwrap(), TAG_EPOCH);
+        let mut got = Vec::new();
+        let (r, e) = get_epoch(&buf, &mut got).unwrap();
+        assert_eq!((r, e, got.as_slice()), (round, epoch, mask));
+    }
+
+    #[test]
+    fn epoch_frame_roundtrips() {
+        roundtrip(0, 1, &[true]);
+        roundtrip(7, 3, &[true, false, true, false, false, true, true, false]);
+        roundtrip(1_000_000, 42, &(0..19).map(|i| i % 3 == 0).collect::<Vec<_>>());
+        roundtrip(5, 2, &vec![true; 64]);
+        roundtrip(5, 2, &vec![false; 9]);
+    }
+
+    #[test]
+    fn epoch_frame_rejects_garbage() {
+        let mut buf = Vec::new();
+        put_epoch(&mut buf, 3, 1, &[true, false, true]);
+        let mut mask = Vec::new();
+        // wrong tag
+        let mut bad = buf.clone();
+        bad[0] = 99;
+        assert!(get_epoch(&bad, &mut mask).is_err());
+        // truncated bitmap
+        let bad = &buf[..buf.len() - 1];
+        assert!(get_epoch(bad, &mut mask).is_err());
+        // trailing bytes
+        let mut bad = buf.clone();
+        bad.push(0);
+        assert!(get_epoch(&bad, &mut mask).is_err());
+        // stray high bits past n
+        let mut bad = buf.clone();
+        *bad.last_mut().unwrap() |= 0x80;
+        assert!(get_epoch(&bad, &mut mask).is_err());
+    }
+}

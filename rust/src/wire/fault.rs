@@ -11,7 +11,7 @@
 //! plan    := event (';' event)*
 //! event   := action '@r' ROUND suffix*
 //! suffix  := ':w' SHARD | ':' MILLIS 'ms' | ':relay'
-//! action  := 'kill' | 'drop-uplink' | 'delay' | 'kill-server'
+//! action  := 'kill' | 'drop-uplink' | 'delay' | 'pause' | 'kill-server'
 //!          | 'corrupt-downlink'
 //! ```
 //!
@@ -22,10 +22,12 @@
 //!
 //! Who executes what:
 //!
-//! * **Worker side** (`kill`, `drop-uplink`, `delay`): passed via
-//!   `WorkerOpts::fault`. A `:wK` suffix restricts the event to the
+//! * **Worker side** (`kill`, `drop-uplink`, `delay`, `pause`): passed
+//!   via `WorkerOpts::fault`. A `:wK` suffix restricts the event to the
 //!   worker hosting shard *K*; unqualified events apply to every
-//!   worker (useful single-worker, chaotic multi-worker).
+//!   worker (useful single-worker, chaotic multi-worker). `pause` is
+//!   sticky: from its round on the worker never heartbeats again (it
+//!   still answers the downlinks addressed to it).
 //! * **Server side** (`kill-server`, `corrupt-downlink`): passed via
 //!   the config's `wire.fault_plan`. `corrupt-downlink` flips one bit —
 //!   chosen by a [`SplitMix64`] stream over `(seed, round)` so every
@@ -64,6 +66,12 @@ pub enum FaultAction {
     DropUplink,
     /// worker: sleep this long before stepping the round
     Delay(u64),
+    /// worker: from this round on, stop sending heartbeats while staying
+    /// connected and still answering cohort downlinks — models a client
+    /// whose keepalive path wedges. Used with partial participation to
+    /// prove a sampled-out idler is not declared dead inside the grace
+    /// window (the server must only police shards it is gathering).
+    Pause,
     /// server: abort the run loop after the round, skipping the clean
     /// shutdown (workers see EOF, as under SIGKILL)
     KillServer,
@@ -150,6 +158,12 @@ impl FaultPlan {
             .is_some()
     }
 
+    /// worker: latch heartbeat silence starting at this round?
+    pub fn pause_at(&self, round: u64, shards: &[usize]) -> bool {
+        self.worker_event(round, shards, |a| a == FaultAction::Pause)
+            .is_some()
+    }
+
     /// worker: sleep before stepping this round?
     pub fn delay_at(&self, round: u64, shards: &[usize]) -> Option<Duration> {
         self.worker_event(round, shards, |a| matches!(a, FaultAction::Delay(_)))
@@ -231,10 +245,11 @@ fn parse_event(tok: &str) -> Result<FaultEvent> {
             );
             FaultAction::KillServer
         }
+        "pause" => FaultAction::Pause,
         "corrupt-downlink" => FaultAction::CorruptDownlink,
         other => bail!(
             "fault event `{tok}`: unknown action `{other}` (want kill, drop-uplink, \
-             delay, kill-server or corrupt-downlink)"
+             delay, pause, kill-server or corrupt-downlink)"
         ),
     };
     ensure!(
@@ -260,11 +275,11 @@ mod tests {
     fn parses_the_full_grammar() {
         let p = FaultPlan::parse(
             "kill-server@r12; drop-uplink@r5:w1 ;corrupt-downlink@r9;delay@r7:50ms;\
-             kill@r3:w2;kill@r6:relay",
+             kill@r3:w2;kill@r6:relay;pause@r4:w0",
             99,
         )
         .unwrap();
-        assert_eq!(p.events.len(), 6);
+        assert_eq!(p.events.len(), 7);
         assert_eq!(
             p.events[0],
             FaultEvent { round: 12, shard: None, relay: false, action: FaultAction::KillServer }
@@ -293,6 +308,9 @@ mod tests {
         assert!(p.drop_uplink_at(5, &[1]) && !p.drop_uplink_at(5, &[0]));
         assert_eq!(p.delay_at(7, &[0]), Some(Duration::from_millis(50)));
         assert_eq!(p.delay_at(8, &[0]), None);
+        assert!(p.pause_at(4, &[0, 3]));
+        assert!(!p.pause_at(4, &[1]), ":w0 must not pause other workers");
+        assert!(!p.pause_at(5, &[0]), "pause fires at its own round only");
 
         let empty = FaultPlan::parse("  ", 0).unwrap();
         assert!(empty.events.is_empty() && !empty.has_server_events());
@@ -327,6 +345,8 @@ mod tests {
             "kill@r3:relay:relay",     // duplicate relay
             "kill@r3:w1:relay",        // relay is not per-shard
             "delay@r3:50ms:relay",     // only kill targets the relay
+            "pause@r3:50ms",           // ms on a non-delay action
+            "pause@r3:relay",          // only kill targets the relay
         ] {
             assert!(FaultPlan::parse(bad, 0).is_err(), "`{bad}` must not parse");
         }

@@ -1,0 +1,209 @@
+//! The in-memory replay journal, keyed per member.
+//!
+//! PR 6 bounded the journal window (`MAX_JOURNAL_BYTES`, truncation at
+//! snapshot commits) but kept it a flat `Vec<Vec<u8>>`: every catchup
+//! cloned nothing but *conceptually* owed the whole window, and there
+//! was no notion of which member had already been delivered what. This
+//! module is the per-client sharding groundwork flagged in ROADMAP
+//! §Scale-out: entries are stored **once** behind `Arc`, and a
+//! low-water `mark` per member id records the last round that member
+//! has durably applied. Catch-up for member `m` streams only
+//! `tail_for(m)` — the suffix past its own mark — so an idle
+//! (sampled-out or late-joining) connection no longer implies
+//! re-streaming the full window, and [`JournalWindow::floor`] exposes
+//! the round below which *no* live member needs entries (the future
+//! per-member truncation point; today truncation still happens only at
+//! snapshot commits, which is always ≤ safe).
+//!
+//! With partial participation each entry carries the round's epoch
+//! announcement next to its downlink body, so a replayed member sees
+//! exactly the frame sequence a live one did and can skip the rounds
+//! its shards sat out.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::Arc;
+
+/// One journaled round: the optional epoch/cohort announcement (present
+/// iff partial participation is active) and the encoded downlink body.
+#[derive(Debug)]
+pub struct RoundEntry {
+    pub round: usize,
+    pub epoch: Option<Vec<u8>>,
+    pub down: Vec<u8>,
+}
+
+impl RoundEntry {
+    pub fn bytes(&self) -> usize {
+        self.down.len() + self.epoch.as_ref().map(Vec::len).unwrap_or(0)
+    }
+}
+
+/// Bounded window of recent rounds plus per-member delivery marks.
+#[derive(Debug, Default)]
+pub struct JournalWindow {
+    /// rounds ≤ `base` are truncated (the committed snapshot's round)
+    base: usize,
+    /// entries for rounds `base+1 ..= base+entries.len()`, in order
+    entries: VecDeque<Arc<RoundEntry>>,
+    bytes: usize,
+    /// member id → last round delivered to (and applied by) that member
+    marks: BTreeMap<u64, usize>,
+}
+
+impl JournalWindow {
+    pub fn new() -> JournalWindow {
+        JournalWindow::default()
+    }
+
+    /// The committed-snapshot round the window starts after.
+    pub fn base(&self) -> usize {
+        self.base
+    }
+
+    /// Retained rounds.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Bytes held by retained entries (each counted once, however many
+    /// members still reference it).
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+
+    /// Append round `round`'s frames. Rounds must arrive in order,
+    /// contiguously after the window's end.
+    pub fn push(&mut self, round: usize, epoch: Option<Vec<u8>>, down: Vec<u8>) {
+        debug_assert_eq!(round, self.base + self.entries.len() + 1);
+        let entry = Arc::new(RoundEntry { round, epoch, down });
+        self.bytes += entry.bytes();
+        self.entries.push_back(entry);
+    }
+
+    /// Record that `member` has applied everything through `round`.
+    /// Marks never move backward.
+    pub fn mark(&mut self, member: u64, round: usize) {
+        let m = self.marks.entry(member).or_insert(round);
+        *m = (*m).max(round);
+    }
+
+    pub fn mark_of(&self, member: u64) -> Option<usize> {
+        self.marks.get(&member).copied()
+    }
+
+    /// Forget a member (evicted): its mark must not pin the floor.
+    pub fn release(&mut self, member: u64) {
+        self.marks.remove(&member);
+    }
+
+    /// The round below which no retained mark needs entries: the
+    /// per-member truncation point a future PR can drop the window to.
+    /// With no members it is the window's end (everything droppable).
+    pub fn floor(&self) -> usize {
+        self.marks
+            .values()
+            .copied()
+            .min()
+            .unwrap_or(self.base + self.entries.len())
+    }
+
+    /// Entries `member` still needs: everything past its mark (or the
+    /// whole window for an unknown/late-joining member, which restores
+    /// from the snapshot at `base` first). Returns `(needs_restore,
+    /// entries)`; `needs_restore` is true when the member's mark lies at
+    /// or before `base`, i.e. part of its gap was truncated into the
+    /// snapshot.
+    pub fn tail_for(&self, member: u64) -> (bool, Vec<Arc<RoundEntry>>) {
+        let from = self.mark_of(member).unwrap_or(0).max(self.base);
+        let needs_restore = self.mark_of(member).map(|m| m <= self.base).unwrap_or(true);
+        let tail = self
+            .entries
+            .iter()
+            .filter(|e| e.round > from)
+            .cloned()
+            .collect();
+        (needs_restore, tail)
+    }
+
+    /// All retained entries, oldest first (full-window catch-up).
+    pub fn entries(&self) -> impl Iterator<Item = &Arc<RoundEntry>> {
+        self.entries.iter()
+    }
+
+    /// Truncate through `round` (a committed snapshot): drop entries
+    /// the snapshot supersedes.
+    pub fn truncate_to(&mut self, round: usize) {
+        debug_assert!(round >= self.base);
+        while let Some(front) = self.entries.front() {
+            if front.round > round {
+                break;
+            }
+            self.bytes -= front.bytes();
+            self.entries.pop_front();
+        }
+        self.base = round;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn window_with(rounds: std::ops::RangeInclusive<usize>) -> JournalWindow {
+        let mut w = JournalWindow::new();
+        for r in rounds {
+            w.push(r, None, vec![r as u8; 4]);
+        }
+        w
+    }
+
+    #[test]
+    fn push_truncate_and_bytes() {
+        let mut w = window_with(1..=5);
+        assert_eq!((w.base(), w.len(), w.bytes()), (0, 5, 20));
+        w.truncate_to(3);
+        assert_eq!((w.base(), w.len(), w.bytes()), (3, 2, 8));
+        let rounds: Vec<usize> = w.entries().map(|e| e.round).collect();
+        assert_eq!(rounds, vec![4, 5]);
+        w.truncate_to(5);
+        assert!(w.is_empty());
+        w.push(6, Some(vec![0; 3]), vec![0; 4]);
+        assert_eq!(w.bytes(), 7);
+    }
+
+    #[test]
+    fn marks_key_the_window_per_member() {
+        let mut w = window_with(1..=6);
+        w.mark(10, 4);
+        w.mark(11, 2);
+        // member 10 only needs rounds 5..=6, no restore
+        let (restore, tail) = w.tail_for(10);
+        assert!(!restore);
+        assert_eq!(tail.iter().map(|e| e.round).collect::<Vec<_>>(), vec![5, 6]);
+        // unknown member needs a restore plus the whole window
+        let (restore, tail) = w.tail_for(99);
+        assert!(restore);
+        assert_eq!(tail.len(), 6);
+        // floor is the laggiest mark; releasing it advances the floor
+        assert_eq!(w.floor(), 2);
+        w.release(11);
+        assert_eq!(w.floor(), 4);
+        // marks never regress
+        w.mark(10, 1);
+        assert_eq!(w.mark_of(10), Some(4));
+    }
+
+    #[test]
+    fn truncation_past_a_mark_forces_restore() {
+        let mut w = window_with(1..=6);
+        w.mark(7, 2);
+        w.truncate_to(4); // snapshot at round 4 supersedes member 7's mark
+        let (restore, tail) = w.tail_for(7);
+        assert!(restore);
+        assert_eq!(tail.iter().map(|e| e.round).collect::<Vec<_>>(), vec![5, 6]);
+    }
+}

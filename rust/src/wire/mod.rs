@@ -117,7 +117,9 @@
 //! CRC trailers are integrity overhead and are not.
 
 pub mod codec;
+pub mod epoch;
 pub mod fault;
+pub mod journal;
 pub mod poll;
 pub mod relay;
 pub mod runlog;
@@ -127,7 +129,7 @@ pub mod transport;
 pub use codec::{Payload, WireError};
 pub use fault::{FaultAction, FaultPlan, KILLED_MARKER};
 pub use relay::{relay_connect, relay_on, RelayOpts};
-pub use runlog::{config_hash, LoadedRun, RunLog, Snapshot};
+pub use runlog::{config_hash, LoadedRun, MembershipRecord, RunLog, Snapshot};
 pub use runtime::{
     run_distributed_loopback_observed, run_distributed_observed, serve, serve_on, worker_connect,
     worker_connect_with, FaultConfig, WorkerHost, WorkerOpts,

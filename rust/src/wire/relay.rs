@@ -34,6 +34,7 @@
 //! `smx relay` on the same address.
 
 use crate::wire::codec::{self, Hello};
+use crate::wire::epoch;
 use crate::wire::fault::FaultPlan;
 use crate::wire::poll::Poller;
 use crate::wire::runtime::{fd_of_tcp, is_connection_error, retry_backoff};
@@ -229,6 +230,9 @@ fn relay_session(listener: &TcpListener, upstream: &str, opts: &RelayOpts) -> Re
     let mut ready = Vec::new();
     let mut rounds_seen: u64 = 0;
     let mut last_up_send = Instant::now();
+    // current round's cohort mask from the upstream `TAG_EPOCH` stream;
+    // empty = full participation (no epoch frames seen)
+    let mut cohort: Vec<bool> = Vec::new();
     loop {
         poller.wait(WAIT_SLICE, &mut ready).context("relay poller")?;
 
@@ -239,6 +243,16 @@ fn relay_session(listener: &TcpListener, upstream: &str, opts: &RelayOpts) -> Re
                 true => {}
             }
             match codec::frame_tag(&body)? {
+                epoch::TAG_EPOCH => {
+                    // partial participation: learn this round's cohort and
+                    // pass the announcement to every child (sampled-out
+                    // workers must hear they are idle; their heartbeat
+                    // replies pump upstream and keep the grace clock warm)
+                    epoch::get_epoch(&body, &mut cohort)?;
+                    for ch in children.iter_mut() {
+                        ch.tcp.send(&body).context("relay child send")?;
+                    }
+                }
                 codec::TAG_DOWNLINK => {
                     rounds_seen += 1;
                     let planned_kill = opts
@@ -251,10 +265,21 @@ fn relay_session(listener: &TcpListener, upstream: &str, opts: &RelayOpts) -> Re
                         // server and the children can observe
                         return Ok(());
                     }
+                    // only children with a sampled-in shard take part in
+                    // this round; the rest already idled on the epoch frame
+                    let in_cohort =
+                        |s: usize| cohort.is_empty() || cohort.get(s).copied().unwrap_or(false);
                     for ch in children.iter_mut() {
-                        ch.tcp.send(&body).context("relay child send")?;
+                        if ch.shards.iter().any(|&s| in_cohort(s)) {
+                            ch.tcp.send(&body).context("relay child send")?;
+                        }
                     }
-                    gather.arm(children.iter().flat_map(|c| c.shards.iter().copied()));
+                    gather.arm(
+                        children
+                            .iter()
+                            .flat_map(|c| c.shards.iter().copied())
+                            .filter(|&s| in_cohort(s)),
+                    );
                 }
                 codec::TAG_STOP => {
                     for ch in children.iter_mut() {
@@ -279,15 +304,16 @@ fn relay_session(listener: &TcpListener, upstream: &str, opts: &RelayOpts) -> Re
                     if restore {
                         forward_restore_split(&mut up, &mut children, &mut body)?;
                     }
-                    gather.arm(children.iter().flat_map(|c| c.shards.iter().copied()));
                     forward_replay_stream(
                         &mut up,
                         &mut children,
                         &mut body,
                         count,
                         None,
+                        LiveArm::Rejoin,
                         &mut gather,
                         &mut parts,
+                        &mut cohort,
                     )?;
                     last_up_send = Instant::now();
                 }
@@ -318,15 +344,16 @@ fn relay_session(listener: &TcpListener, upstream: &str, opts: &RelayOpts) -> Re
                         children[k].tcp.send(&body).context("relay child send")?;
                     }
                     children[k].shards.extend(shards.iter().copied());
-                    gather.extend(&shards);
                     forward_replay_stream(
                         &mut up,
                         &mut children,
                         &mut body,
                         count,
                         Some(k),
+                        LiveArm::Adopt(&shards),
                         &mut gather,
                         &mut parts,
+                        &mut cohort,
                     )?;
                     last_up_send = Instant::now();
                 }
@@ -469,11 +496,28 @@ fn forward_restore_split(
     Ok(())
 }
 
+/// How the gather gets (re)armed at a replay stream's final — live —
+/// frame. Arming must happen *there*, not before the stream: under
+/// partial participation the live round's cohort is announced by the
+/// last interleaved epoch frame, and arming early would gate the gather
+/// on a stale mask.
+#[derive(Clone, Copy)]
+enum LiveArm<'a> {
+    /// A rejoin replay: every child re-answers the live round, so the
+    /// gather restarts over all (sampled-in) shards.
+    Rejoin,
+    /// An adoption: the adopted shards join the in-flight gather.
+    Adopt(&'a [usize]),
+}
+
 /// Forward `count` journaled downlink frames from upstream — to every
-/// child (`target = None`, a rejoin replay) or to one adopter. Child
-/// traffic (replay heartbeats, and uplinks once the live last frame
-/// lands) is pumped through [`child_frame`] between frames so neither
-/// side's socket backs up and nothing is dropped.
+/// child (`target = None`, a rejoin replay) or to one adopter. Each
+/// downlink may be preceded by a `TAG_EPOCH` announcement (partial
+/// participation), forwarded on the same route so a replaying worker
+/// re-applies the historical per-round cohort gating. Child traffic
+/// (replay heartbeats, and uplinks once the live last frame lands) is
+/// pumped through [`child_frame`] between frames so neither side's
+/// socket backs up and nothing is dropped.
 #[allow(clippy::too_many_arguments)]
 fn forward_replay_stream(
     up: &mut Tcp,
@@ -481,17 +525,49 @@ fn forward_replay_stream(
     body: &mut Vec<u8>,
     count: usize,
     target: Option<usize>,
+    arm: LiveArm<'_>,
     gather: &mut Gather,
     parts: &mut Vec<(usize, usize, usize)>,
+    cohort: &mut Vec<bool>,
 ) -> Result<()> {
     let mut child_body = Vec::new();
     let mut last_up_send = Instant::now();
-    for _ in 0..count {
+    for i in 0..count {
         up.recv(body).context("replay recv")?;
+        if codec::frame_tag(body)? == epoch::TAG_EPOCH {
+            epoch::get_epoch(body, cohort)?;
+            match target {
+                Some(k) => children[k].tcp.send(body).context("relay child send")?,
+                None => {
+                    for ch in children.iter_mut() {
+                        ch.tcp.send(body).context("relay child send")?;
+                    }
+                }
+            }
+            up.recv(body).context("replay recv")?;
+        }
         ensure!(
             codec::frame_tag(body)? == codec::TAG_DOWNLINK,
             "relay: replay stream interrupted by a non-downlink frame"
         );
+        if i + 1 == count {
+            // the live frame: arm under the cohort it was drawn with
+            let in_cohort =
+                |s: usize| cohort.is_empty() || cohort.get(s).copied().unwrap_or(false);
+            match arm {
+                LiveArm::Rejoin => gather.arm(
+                    children
+                        .iter()
+                        .flat_map(|c| c.shards.iter().copied())
+                        .filter(|&s| in_cohort(s)),
+                ),
+                LiveArm::Adopt(shards) => {
+                    let add: Vec<usize> =
+                        shards.iter().copied().filter(|&s| in_cohort(s)).collect();
+                    gather.extend(&add);
+                }
+            }
+        }
         match target {
             Some(k) => children[k].tcp.send(body).context("relay child send")?,
             None => {

@@ -69,6 +69,9 @@ const RL_DOWNLINK: u8 = 4;
 const RL_CONFIG: u8 = 5;
 /// Marker frame: the run completed cleanly (records are exhaustive).
 const RL_FINISHED: u8 = 6;
+/// One membership transition (join, late join, suspicion, eviction,
+/// epoch roll) as seen by the coordinator's membership state machine.
+const RL_MEMBERSHIP: u8 = 7;
 
 /// FNV-1a over the canonical config JSON: cheap, dependency-free, and
 /// stable across platforms — enough to refuse resuming under a changed
@@ -99,6 +102,20 @@ pub struct Snapshot {
     pub shard_blobs: Vec<Vec<u8>>,
 }
 
+/// One logged membership transition. `kind` is
+/// [`MembershipEvent::kind_code`](crate::coordinator::MembershipEvent::kind_code);
+/// decode the name with `MembershipEvent::kind_name`. Only *structural*
+/// events are logged (joins, suspicions, evictions, epoch rolls) — the
+/// per-round cohort itself is a pure function of `(seed, n, τ, round)`
+/// and regenerates, so logging it would only bloat the base.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct MembershipRecord {
+    pub round: u64,
+    pub epoch: u64,
+    pub kind: u8,
+    pub member: u64,
+}
+
 /// Everything [`RunLog::load`] recovers from disk.
 #[derive(Debug, Default)]
 pub struct LoadedRun {
@@ -119,6 +136,9 @@ pub struct LoadedRun {
     /// journal suffix: `(round, downlink body)` for rounds after the
     /// snapshot, in round order
     pub journal: Vec<(u64, Vec<u8>)>,
+    /// membership transitions through the snapshot round (full history
+    /// when `finished`), in emission order
+    pub membership: Vec<MembershipRecord>,
 }
 
 /// Open handle on a run directory; owns the journal append stream and
@@ -129,6 +149,7 @@ pub struct RunLog {
     seed: u64,
     config_json: String,
     records: Vec<RoundRecord>,
+    membership: Vec<MembershipRecord>,
     /// last committed snapshot, kept so [`RunLog::finish`] can rotate a
     /// base that still carries it
     last_snap: Option<Snapshot>,
@@ -212,6 +233,7 @@ impl RunLog {
             seed,
             config_json: config_json.to_string(),
             records: Vec::new(),
+            membership: Vec::new(),
             last_snap: None,
             journal: File::create(dir.join(JOURNAL_FILE))?,
         };
@@ -231,6 +253,7 @@ impl RunLog {
             seed: loaded.seed,
             config_json: loaded.config_json.clone().unwrap_or_default(),
             records: loaded.records.clone(),
+            membership: loaded.membership.clone(),
             last_snap: loaded.snapshot.clone(),
             journal: File::create(dir.join(JOURNAL_FILE))?,
         })
@@ -241,6 +264,15 @@ impl RunLog {
     /// past the last snapshot re-run.
     pub fn record(&mut self, rec: &RoundRecord) {
         self.records.push(rec.clone());
+    }
+
+    /// Remember a membership transition. Durability follows the same
+    /// rotation rule as records: a crash loses the tail past the last
+    /// snapshot, and the resumed run logs its own (possibly different)
+    /// membership history for the re-run rounds — which is exactly what
+    /// happened in the resumed trajectory.
+    pub fn membership(&mut self, rec: MembershipRecord) {
+        self.membership.push(rec);
     }
 
     /// Append one broadcast downlink body to the journal suffix. No
@@ -323,6 +355,15 @@ impl RunLog {
                 put_record(&mut body, rec);
                 out.extend_from_slice(&encode_frame(&body, true));
             }
+            for m in self.membership.iter().filter(|m| m.round <= cutoff) {
+                body.clear();
+                body.push(RL_MEMBERSHIP);
+                put_u64(&mut body, m.round);
+                put_u64(&mut body, m.epoch);
+                body.push(m.kind);
+                put_u64(&mut body, m.member);
+                out.extend_from_slice(&encode_frame(&body, true));
+            }
         }
         if finished {
             out.extend_from_slice(&encode_frame(&[RL_FINISHED], true));
@@ -388,6 +429,14 @@ impl RunLog {
                     loaded.snapshot = Some(s);
                 }
                 Some(&RL_RECORD) => loaded.records.push(get_record(&body, &mut p)?),
+                Some(&RL_MEMBERSHIP) => {
+                    let round = get_u64(&body, &mut p)?;
+                    let epoch = get_u64(&body, &mut p)?;
+                    let kind = *body.get(p).ok_or_else(|| corrupt("truncated membership"))?;
+                    p += 1;
+                    let member = get_u64(&body, &mut p)?;
+                    loaded.membership.push(MembershipRecord { round, epoch, kind, member });
+                }
                 Some(&RL_CONFIG) => {
                     let json = std::str::from_utf8(&body[1..])
                         .map_err(|_| corrupt("non-UTF8 config in base.bin"))?;
@@ -644,6 +693,34 @@ mod tests {
         let s = l.snapshot.expect("last committed snapshot survives finish");
         assert_eq!(s.round, 2);
         assert!(l.journal.is_empty(), "finish truncates the journal");
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn membership_records_follow_the_rotation_rule() {
+        let dir = tmp_dir("membership");
+        let mut log = RunLog::create(&dir, 0xBEEF, 3, "").unwrap();
+        let ev = |round, epoch, kind, member| MembershipRecord { round, epoch, kind, member };
+        log.membership(ev(0, 1, 1, 10)); // two joins at activation
+        log.membership(ev(0, 1, 1, 11));
+        log.record(&rec(0));
+        log.record(&rec(1));
+        log.commit(&snap(1)).unwrap();
+        // events past the snapshot round stay in memory only...
+        log.membership(ev(2, 2, 2, 12)); // late join rolls the epoch
+        log.membership(ev(2, 2, 7, 12));
+        let mid = RunLog::load(&dir).unwrap().unwrap();
+        assert_eq!(mid.membership, vec![ev(0, 1, 1, 10), ev(0, 1, 1, 11)]);
+        // ...reopen carries the loaded history forward...
+        let mut log = RunLog::reopen(&dir, &mid).unwrap();
+        log.membership(ev(2, 2, 2, 12));
+        // ...and finish persists everything
+        log.finish().unwrap();
+        let l = RunLog::load(&dir).unwrap().unwrap();
+        assert_eq!(
+            l.membership,
+            vec![ev(0, 1, 1, 10), ev(0, 1, 1, 11), ev(2, 2, 2, 12)]
+        );
         fs::remove_dir_all(&dir).ok();
     }
 

@@ -157,6 +157,7 @@
 
 use crate::config::ExperimentConfig;
 use crate::coordinator::session::{Tick, Ticker};
+use crate::coordinator::membership::{self, Membership, MembershipEvent, Participation};
 use crate::coordinator::{
     DistTransport, Driver, EngineFactory, RoundObserver, RoundRecord, RunConfig, RunOutcome,
     RunResult, Session,
@@ -171,9 +172,11 @@ use crate::runtime::{EngineKind, GradEngine};
 use crate::util::rng::{Rng, SplitMix64};
 use crate::util::timer::PhaseTimer;
 use crate::wire::codec::{self, Hello, Payload};
+use crate::wire::epoch::{self, TAG_EPOCH};
 use crate::wire::fault::{FaultPlan, KILLED_MARKER};
+use crate::wire::journal::JournalWindow;
 use crate::wire::poll::Poller;
-use crate::wire::runlog::{self, RunLog};
+use crate::wire::runlog::{self, MembershipRecord, RunLog};
 use crate::wire::transport::{loopback_pair, Tcp, Transport};
 use anyhow::{bail, ensure, Context, Result};
 use std::collections::VecDeque;
@@ -205,6 +208,8 @@ pub struct ServerRoundState {
     down_buf: Vec<u8>,
     up_buf: Vec<u8>,
     seen: Vec<bool>,
+    /// encoded `TAG_EPOCH` announcement, reused across sampled rounds
+    epoch_buf: Vec<u8>,
 }
 
 impl ServerRoundState {
@@ -215,6 +220,7 @@ impl ServerRoundState {
             down_buf: Vec::new(),
             up_buf: Vec::new(),
             seen: vec![false; n_shards],
+            epoch_buf: Vec::new(),
         }
     }
 }
@@ -232,6 +238,30 @@ pub fn server_round(
     payload: Payload,
     float_bits: u32,
 ) -> Result<RoundTotals> {
+    server_round_sampled(server, hosts, st, server_rng, payload, float_bits, None, 0)
+}
+
+/// [`server_round`] with optional partial participation: when
+/// `participation` is set, the round opens with a `TAG_EPOCH` frame to
+/// *every* host naming the cohort (epoch is the constant 1 — this
+/// fixed-membership driver never rolls it), the downlink goes only to
+/// hosts owning at least one cohort shard, exactly one uplink per cohort
+/// shard is gathered, and cohort uplinks are reweighted by n/τ before
+/// `apply` so the aggregate stays unbiased. Sampled-out shards' slots are
+/// cleared. Epoch frames are control plane — excluded from `bytes_down`,
+/// like heartbeats. `round` seeds the cohort draw and is otherwise
+/// unused; pass 0 under full participation.
+#[allow(clippy::too_many_arguments)]
+pub fn server_round_sampled(
+    server: &mut dyn ServerAlgo,
+    hosts: &mut [WorkerHost],
+    st: &mut ServerRoundState,
+    server_rng: &mut Rng,
+    payload: Payload,
+    float_bits: u32,
+    participation: Option<&mut Participation>,
+    round: usize,
+) -> Result<RoundTotals> {
     let n = st.ups.len();
     let dim = server.dim();
     let mut t = RoundTotals::default();
@@ -239,17 +269,46 @@ pub fn server_round(
     server.downlink_into(&mut st.down);
     st.down_buf.clear();
     codec::put_downlink(&mut st.down_buf, &st.down, payload)?;
-    t.coords_down = (st.down.coords() * n) as u64;
-    t.bytes_down = ((codec::FRAME_PREFIX + st.down_buf.len()) * hosts.len()) as u64;
+
+    let (tau, weight) = match participation.as_deref() {
+        Some(p) => (p.tau(), p.weight()),
+        None => (n, 1.0),
+    };
+    let mask: Option<&[bool]> = match participation {
+        Some(p) => Some(p.draw(round as u64)),
+        None => None,
+    };
+    let in_cohort = |s: usize| mask.map_or(true, |m| m[s]);
+
+    if let Some(m) = mask {
+        epoch::put_epoch(&mut st.epoch_buf, round, 1, m);
+        for h in hosts.iter_mut() {
+            h.transport.send(&st.epoch_buf).context("sending epoch frame")?;
+        }
+    }
+
+    t.coords_down = (st.down.coords() * tau) as u64;
     for h in hosts.iter_mut() {
-        h.transport.send(&st.down_buf).context("sending downlink")?;
+        if h.shards.iter().any(|&s| in_cohort(s)) {
+            h.transport.send(&st.down_buf).context("sending downlink")?;
+            t.bytes_down += (codec::FRAME_PREFIX + st.down_buf.len()) as u64;
+        }
     }
 
     st.seen.fill(false);
-    let mut pending: usize = hosts.iter().map(|h| h.shards.len()).sum();
+    for s in 0..n {
+        // a sampled-out shard owes no uplink: mark it seen and clear its
+        // slot so a stale previous-round delta can never reach `apply`
+        if !in_cohort(s) {
+            st.seen[s] = true;
+            membership::clear_uplink(&mut st.ups[s]);
+        }
+    }
+    let mut pending = tau;
     for h in hosts.iter_mut() {
+        let expect = h.shards.iter().filter(|&&s| in_cohort(s)).count();
         let mut got = 0;
-        while got < h.shards.len() {
+        while got < expect {
             h.transport.recv(&mut st.up_buf).context("receiving uplink")?;
             // workers may interleave heartbeats with uplinks
             if codec::frame_tag(&st.up_buf)? == codec::TAG_HEARTBEAT {
@@ -270,6 +329,15 @@ pub fn server_round(
     }
     debug_assert_eq!(pending, 0);
 
+    if let Some(m) = mask {
+        // unbiased estimator: scale the τ cohort uplinks by n/τ, after
+        // accounting (counts are what was sent) and before apply
+        for s in 0..n {
+            if m[s] {
+                membership::reweight_uplink(&mut st.ups[s], weight);
+            }
+        }
+    }
     server.apply(&st.ups, server_rng);
     Ok(t)
 }
@@ -292,6 +360,13 @@ pub fn run_distributed_observed(
 ) -> Result<RunOutcome> {
     let n: usize = hosts.iter().map(|h| h.shards.len()).sum();
     ensure!(n > 0, "no shards hosted");
+    let mut participation =
+        Participation::from_run(cfg.participation, cfg.seed, n)?.filter(|p| !p.is_full());
+    ensure!(
+        !(participation.is_some() && name.contains("diana++")),
+        "diana++ keeps per-worker model replicas stepped by every downlink; \
+         partial participation would let them diverge — use diana+ or tau=n"
+    );
     let mut server_rng = Rng::new(cfg.seed).derive(u64::MAX);
     let denom = vector::dist2(server.iterate(), x_star).max(1e-300);
     let mut st = ServerRoundState::new(n);
@@ -307,13 +382,15 @@ pub fn run_distributed_observed(
         for round in 1..=cfg.max_rounds {
             rounds_run = round;
             let totals = phases.time("dist_round", || {
-                server_round(
+                server_round_sampled(
                     server,
                     hosts,
                     &mut st,
                     &mut server_rng,
                     cfg.payload,
                     cfg.float_bits,
+                    participation.as_mut(),
+                    round,
                 )
             });
             let totals = match totals {
@@ -496,6 +573,16 @@ pub struct WorkerState {
     /// [`WorkerOpts::expect_restore`])
     expect_restore: bool,
     restored: bool,
+    /// latest cohort mask from a `TAG_EPOCH` frame (`None` until one
+    /// arrives, i.e. under full participation): runners whose shard is
+    /// outside it skip the round entirely — no `round_into`, no RNG
+    /// draw, no uplink — keeping them bitwise aligned with the sim
+    /// driver's sampled-out workers
+    cohort: Option<Vec<bool>>,
+    /// scripted `pause` fault latched: never heartbeat again (cohort
+    /// uplinks still flow), proving the server's grace window tolerates
+    /// a silent idler
+    paused: bool,
 }
 
 impl WorkerState {
@@ -515,6 +602,8 @@ impl WorkerState {
             rounds_seen: 0,
             expect_restore: false,
             restored: false,
+            cohort: None,
+            paused: false,
         }
     }
 }
@@ -560,6 +649,9 @@ pub fn worker_loop(state: &mut WorkerState, transport: &mut dyn Transport) -> Re
                     if let Some(d) = plan.delay_at(round, &shards) {
                         std::thread::sleep(d);
                     }
+                    if plan.pause_at(round, &shards) {
+                        state.paused = true;
+                    }
                     if plan.drop_uplink_at(round, &shards) {
                         // compute the round but sever before the uplink: the
                         // server re-homes the shards and the replacement
@@ -567,14 +659,41 @@ pub fn worker_loop(state: &mut WorkerState, transport: &mut dyn Transport) -> Re
                         live = false;
                     }
                 }
-                send_heartbeat(transport)?;
+                if !state.paused {
+                    send_heartbeat(transport)?;
+                }
                 codec::get_downlink(&body, dim, &mut down)?;
-                for r in state.active.iter_mut() {
-                    r.step(&down, live, payload, &mut out, transport)?;
+                for k in 0..state.active.len() {
+                    let s = state.active[k].shard;
+                    if state.cohort.as_ref().map_or(false, |m| !m.get(s).copied().unwrap_or(false)) {
+                        continue; // sampled out: skip the round entirely
+                    }
+                    state.active[k].step(&down, live, payload, &mut out, transport)?;
                 }
                 if !live {
                     return Ok(());
                 }
+            }
+            TAG_EPOCH => {
+                // partial participation: the cohort announcement reaches
+                // every worker each round; the downlink follows only when
+                // one of our shards is in the cohort. Answering it with a
+                // heartbeat is what keeps a sampled-out idler alive.
+                let mut mask = state.cohort.take().unwrap_or_default();
+                let (eround, _epoch) = epoch::get_epoch(&body, &mut mask)?;
+                if let Some(plan) = &state.fault {
+                    let shards: Vec<usize> = state.active.iter().map(|r| r.shard).collect();
+                    // pause keys on the server's round (the epoch frame
+                    // carries it), so chaos plans can target the exact
+                    // round a shard sits out
+                    if plan.pause_at(eround as u64, &shards) {
+                        state.paused = true;
+                    }
+                }
+                if !state.paused {
+                    send_heartbeat(transport)?;
+                }
+                state.cohort = Some(mask);
             }
             codec::TAG_SNAP_REQ => {
                 // checkpoint: ship every hosted shard's evolving state;
@@ -683,8 +802,12 @@ fn adopt_shards(state: &mut WorkerState, shards: &[usize]) -> Result<Vec<usize>>
     Ok(fresh)
 }
 
-/// Consume `count` journaled downlink frames: advance the runners at
-/// `targets` through all of them, answering only the last (live) frame.
+/// Consume `count` journaled rounds: advance the runners at `targets`
+/// through all of them, answering only the last (live) frame. Under
+/// partial participation each journaled round opens with its `TAG_EPOCH`
+/// announcement; replayed runners honor it exactly like live ones —
+/// sampled-out rounds are skipped, so the replayed trajectory (RNG
+/// stream included) is bitwise the one a survivor walked.
 fn replay_rounds(
     state: &mut WorkerState,
     transport: &mut dyn Transport,
@@ -702,9 +825,17 @@ fn replay_rounds(
         "replaying {count} journaled round(s) over {} shard(s)",
         targets.len()
     );
-    send_heartbeat(transport)?;
+    if !state.paused {
+        send_heartbeat(transport)?;
+    }
     for f in 0..count {
         transport.recv(body).context("replay recv")?;
+        if codec::frame_tag(body)? == TAG_EPOCH {
+            let mut mask = state.cohort.take().unwrap_or_default();
+            epoch::get_epoch(body, &mut mask)?;
+            state.cohort = Some(mask);
+            transport.recv(body).context("replay recv")?;
+        }
         ensure!(
             codec::frame_tag(body)? == codec::TAG_DOWNLINK,
             "replay stream interrupted by a non-downlink frame"
@@ -713,9 +844,13 @@ fn replay_rounds(
         let live = f + 1 == count;
         let payload = state.payload;
         for &k in targets {
+            let s = state.active[k].shard;
+            if state.cohort.as_ref().map_or(false, |m| !m.get(s).copied().unwrap_or(false)) {
+                continue;
+            }
             state.active[k].step(down, live, payload, out, transport)?;
         }
-        if (f + 1) % REPLAY_HEARTBEAT_EVERY == 0 && !live {
+        if (f + 1) % REPLAY_HEARTBEAT_EVERY == 0 && !live && !state.paused {
             send_heartbeat(transport)?;
         }
     }
@@ -845,6 +980,10 @@ struct Conn {
     phase: Phase,
     last_seen: Instant,
     peer: String,
+    /// stable member id keying the [`Membership`] machine and the
+    /// journal's per-member delivery marks; monotonic for the run's
+    /// lifetime, so a reconnecting process re-enters as a *new* member
+    member: u64,
 }
 
 /// Per-round gather scratch (server side).
@@ -855,6 +994,14 @@ struct Scratch {
     seen: Vec<bool>,
     /// length-prefixed size of the uplink frame finally applied per shard
     up_bytes: Vec<u64>,
+    /// partial participation was active for the last drawn round
+    sampled: bool,
+    /// last drawn cohort mask, one flag per shard (meaningful only while
+    /// `sampled`)
+    cohort: Vec<bool>,
+    /// encoded `TAG_EPOCH` announcement for the current round, reused
+    /// across rounds and cloned into the journal
+    epoch_buf: Vec<u8>,
 }
 
 struct ElasticServer {
@@ -870,13 +1017,11 @@ struct ElasticServer {
     payload: Payload,
     n_shards: usize,
     dim: usize,
-    /// encoded downlink bodies of rounds `journal_base+1 ..= journal_base
-    /// + journal.len()` — the suffix of the run since the last committed
-    /// snapshot (`journal_base = 0` before the first commit)
-    journal: Vec<Vec<u8>>,
-    /// rounds truncated off the journal's front: the committed snapshot's
-    /// round
-    journal_base: usize,
+    /// replay journal: one entry per round since the last committed
+    /// snapshot (optional epoch announcement + downlink body), stored
+    /// once behind `Arc` with per-member delivery marks so catch-up
+    /// retransmits can be sized per member
+    journal: JournalWindow,
     /// last committed checkpoint: `(round, per-shard state blobs)`;
     /// rejoiners and adopters restore from it instead of replaying from
     /// round 0
@@ -917,9 +1062,20 @@ struct ElasticServer {
     /// queue: each regenerated downlink must byte-equal its persisted
     /// counterpart or the resume aborts loudly
     resume_check: VecDeque<(u64, Vec<u8>)>,
-    /// bytes held by the in-memory journal (bounded; see
-    /// [`MAX_JOURNAL_BYTES`])
-    journal_bytes: usize,
+    /// per-round client sampling (`--participation tau=K`); `None` or a
+    /// full draw means every shard uplinks every round
+    participation: Option<Participation>,
+    /// the explicit epoch/membership state machine; every join, ack,
+    /// sampling verdict, suspicion and eviction below flows through it
+    membership: Membership,
+    /// `--min-clients M`: start rounds once `M` processes are live and
+    /// let the remaining assignments join late (0 = wait for all)
+    min_clients: usize,
+    /// the round loop has begun — connections arriving from here on are
+    /// late joiners and take the rejoin/catch-up path
+    started: bool,
+    /// monotonic member-id source for [`Conn::member`]
+    next_member: u64,
     /// lock-free metrics fed by every loop below; shared with the
     /// `/metrics` endpoint and any `--watch` dashboard. Always present
     /// (a zero-shard placeholder when observability is off) so the hot
@@ -1001,13 +1157,13 @@ impl ElasticServer {
             payload,
             n_shards,
             dim,
-            journal: Vec::new(),
-            journal_base: 0,
+            journal: JournalWindow::new(),
             snapshot: None,
             pending_snap: None,
             checkpoint_every,
             orphans: Vec::new(),
             orphan_deadline: None,
+            membership: Membership::new(assignments.len()),
             pending_assignments: assignments,
             fatal: None,
             st: Scratch {
@@ -1016,6 +1172,9 @@ impl ElasticServer {
                 ups: (0..n_shards).map(|_| Uplink::default()).collect(),
                 seen: vec![false; n_shards],
                 up_bytes: vec![0; n_shards],
+                sampled: false,
+                cohort: vec![false; n_shards],
+                epoch_buf: Vec::new(),
             },
             body: Vec::new(),
             events: Vec::new(),
@@ -1025,7 +1184,10 @@ impl ElasticServer {
             staged_snap: None,
             resume_mode: false,
             resume_check: VecDeque::new(),
-            journal_bytes: 0,
+            participation: None,
+            min_clients: 0,
+            started: false,
+            next_member: 0,
             registry: Arc::new(crate::obs::Registry::new(0)),
             metrics_http: None,
         })
@@ -1063,8 +1225,10 @@ impl ElasticServer {
         if let Some(shards) = self.pending_assignments.pop() {
             // on a run-log resume the "initial" assignments are really
             // rejoins: the worker must restore from the snapshot and
-            // replay the journal suffix to land mid-run
-            let rejoin = self.resume_mode;
+            // replay the journal suffix to land mid-run. Likewise once
+            // the round loop has started, a pending assignment handed
+            // out now is a *late join* and must catch up the same way.
+            let rejoin = self.resume_mode || self.started;
             self.install(tcp, shards, rejoin)?;
         } else if !self.orphans.is_empty() {
             let shards = std::mem::take(&mut self.orphans);
@@ -1135,6 +1299,8 @@ impl ElasticServer {
         } else {
             None
         };
+        let member = self.next_member;
+        self.next_member += 1;
         self.conns[tok] = Some(Conn {
             tcp,
             shards,
@@ -1144,7 +1310,11 @@ impl ElasticServer {
             },
             last_seen: Instant::now(),
             peer,
+            member,
         });
+        self.membership
+            .join(member)
+            .context("membership: joining new connection")?;
         Ok(())
     }
 
@@ -1186,7 +1356,19 @@ impl ElasticServer {
             ));
             return;
         }
+        // the machine tolerates deaths in any phase: a member that never
+        // acked is still Joined, which suspect() accepts
+        if self.membership.suspect(conn.member).is_ok() {
+            let _ = self.membership.evict(conn.member);
+        }
+        self.journal.release(conn.member);
         for &s in &conn.shards {
+            // a sampled-out shard was pre-marked seen with a cleared
+            // uplink slot; resetting it would stall the gather forever,
+            // because a replacement's replay only answers cohort shards
+            if self.st.sampled && !self.st.cohort[s] {
+                continue;
+            }
             self.st.seen[s] = false;
             self.st.up_bytes[s] = 0;
         }
@@ -1210,9 +1392,19 @@ impl ElasticServer {
     /// retained journal (which starts right after the snapshot round).
     /// Marks the connection dead on any send failure.
     fn send_catchup(&mut self, tok: usize, adopt: Option<&[usize]>) {
-        let count = self.journal.len();
+        let member = self.conns[tok].as_ref().expect("catchup to live conn").member;
+        // adopters splice fresh shards into an already-current process, so
+        // they always take the full retained window; a rejoiner's tail is
+        // sized by the journal's per-member delivery mark (today a rejoin
+        // is always a fresh member, so the tail is the full window too —
+        // the mark machinery is the groundwork for per-client sharding)
+        let (needs_restore, entries) = match adopt {
+            Some(_) => (true, self.journal.entries().cloned().collect::<Vec<_>>()),
+            None => self.journal.tail_for(member),
+        };
+        let count = entries.len();
         let mut announce = Vec::new();
-        let restore = self.snapshot.is_some();
+        let restore = needs_restore && self.snapshot.is_some();
         if adopt.is_none() {
             self.registry.worker_rejoins.inc();
         }
@@ -1225,7 +1417,8 @@ impl ElasticServer {
             None => codec::put_replay(&mut announce, count, restore),
         }
         let mut restore_frame = Vec::new();
-        if let Some((round, blobs)) = &self.snapshot {
+        if restore {
+            let (round, blobs) = self.snapshot.as_ref().expect("restore implies snapshot");
             let targets: &[usize] = match adopt {
                 Some(shards) => shards,
                 None => &self.conns[tok].as_ref().expect("catchup to live conn").shards,
@@ -1240,8 +1433,11 @@ impl ElasticServer {
             if !restore_frame.is_empty() {
                 conn.tcp.send(&restore_frame)?;
             }
-            for frame in &self.journal {
-                conn.tcp.send(frame)?;
+            for entry in &entries {
+                if let Some(epoch) = &entry.epoch {
+                    conn.tcp.send(epoch)?;
+                }
+                conn.tcp.send(&entry.down)?;
             }
             Ok(())
         })();
@@ -1261,11 +1457,8 @@ impl ElasticServer {
             .into_iter()
             .map(|s| s.expect("commit only on a complete slot table"))
             .collect();
-        debug_assert!(round >= self.journal_base);
-        let drop_n = (round - self.journal_base).min(self.journal.len());
-        self.journal.drain(..drop_n);
-        self.journal_base = round;
-        self.journal_bytes = self.journal.iter().map(Vec::len).sum();
+        debug_assert!(round >= self.journal.base());
+        self.journal.truncate_to(round);
         // durable commit: marry the worker blobs to the server-side cut
         // staged when the cadence round finished, and rotate the on-disk
         // base. An IO failure here is fatal — a run log that silently
@@ -1282,7 +1475,7 @@ impl ElasticServer {
         self.snapshot = Some((round, blobs));
         self.registry.snapshots_committed.inc();
         self.registry.journal_rounds.set(self.journal.len() as u64);
-        self.registry.journal_bytes.set(self.journal_bytes as u64);
+        self.registry.journal_bytes.set(self.journal.bytes() as u64);
         crate::info!(
             "wire",
             "snapshot committed at round {round}; journal truncated to {} frame(s)",
@@ -1370,10 +1563,14 @@ impl ElasticServer {
                         Phase::Live => bail!("worker {} acked twice", conn.peer),
                     };
                     conn.phase = Phase::Live;
+                    let member = conn.member;
                     for &s in &conn.shards {
                         self.registry.set_live(s, true);
                     }
                     crate::info!("wire", "worker {} is live", conn.peer);
+                    self.membership
+                        .activate_member(member)
+                        .context("membership: acking worker")?;
                     if replay && (!self.journal.is_empty() || self.snapshot.is_some()) {
                         self.send_catchup(tok, None);
                     }
@@ -1576,23 +1773,49 @@ impl ElasticServer {
         // Completion is *shard coverage*, not a fixed connection count:
         // a startup-phase death whose shards get reassigned to survivors
         // can make the run viable with fewer than `want` processes, and
-        // waiting on the count would hang forever.
-        while !(self.pending_assignments.is_empty()
-            && self.orphans.is_empty()
-            && self.conns.iter().flatten().count() > 0
-            && self
+        // waiting on the count would hang forever. With `--min-clients M`
+        // the floor relaxes further: rounds may start once M processes
+        // are live — the remaining assignments stay queued for late
+        // joiners, whose cohort shards simply block the gather until
+        // they arrive and catch up.
+        let need = if self.min_clients > 0 {
+            self.min_clients.min(want)
+        } else {
+            want
+        };
+        loop {
+            let total = self.conns.iter().flatten().count();
+            let all_live = self
                 .conns
                 .iter()
                 .flatten()
-                .all(|c| matches!(c.phase, Phase::Live)))
-        {
+                .all(|c| matches!(c.phase, Phase::Live));
+            let done = if self.min_clients > 0 {
+                self.orphans.is_empty() && total >= need && all_live
+            } else {
+                self.pending_assignments.is_empty()
+                    && self.orphans.is_empty()
+                    && total > 0
+                    && all_live
+            };
+            if done {
+                break;
+            }
             self.pump(false)?;
         }
         crate::info!(
             "wire",
-            "all shards hosted across {} live worker process(es)",
-            self.live_tokens().len()
+            "{} live worker process(es); {} assignment(s) left for late joiners",
+            self.live_tokens().len(),
+            self.pending_assignments.len()
         );
+        self.membership
+            .warmup()
+            .context("membership: entering warmup")?;
+        self.membership
+            .activate()
+            .context("membership: activating round loop")?;
+        self.flush_membership(0);
         Ok(())
     }
 
@@ -1631,26 +1854,63 @@ impl ElasticServer {
             );
         }
 
+        // draw this round's cohort (deterministic in seed + round, so sim,
+        // threaded and distributed agree bitwise) and move the membership
+        // machine's sampling verdicts before anything hits the wire
+        let sampled = self.participation.is_some();
+        self.st.sampled = sampled;
+        if let Some(p) = &mut self.participation {
+            let mask = p.draw(round as u64);
+            self.st.cohort.clear();
+            self.st.cohort.extend_from_slice(mask);
+        }
+        if sampled {
+            let mut in_cohort: Vec<u64> = Vec::new();
+            for conn in self.conns.iter().flatten() {
+                if conn.shards.iter().any(|&s| self.st.cohort[s]) {
+                    in_cohort.push(conn.member);
+                }
+            }
+            self.membership
+                .begin_round(|m| in_cohort.contains(&m))
+                .context("membership: beginning round")?;
+            epoch::put_epoch(
+                &mut self.st.epoch_buf,
+                round,
+                self.membership.epoch(),
+                &self.st.cohort,
+            );
+        }
+
         if self.fault.enabled() {
             // the journal only exists to feed rejoin/adoption replays;
             // fail-fast mode can never consume it, so don't grow it
-            self.journal_bytes += self.st.down_buf.len();
+            let entry_epoch = if sampled {
+                Some(self.st.epoch_buf.clone())
+            } else {
+                None
+            };
+            self.journal.push(round, entry_epoch, self.st.down_buf.clone());
             ensure!(
-                self.journal_bytes <= MAX_JOURNAL_BYTES,
+                self.journal.bytes() <= MAX_JOURNAL_BYTES,
                 "replay journal exceeds {} MiB with no committed snapshot \
                  to truncate it; set --checkpoint-every to bound recovery \
                  memory",
                 MAX_JOURNAL_BYTES / (1024 * 1024)
             );
-            self.journal.push(self.st.down_buf.clone());
             self.registry.journal_rounds.set(self.journal.len() as u64);
-            self.registry.journal_bytes.set(self.journal_bytes as u64);
+            self.registry.journal_bytes.set(self.journal.bytes() as u64);
         }
         if let Some(rl) = &mut self.runlog {
             rl.append_downlink(round as u64, &self.st.down_buf)
                 .context("run log: persisting downlink")?;
         }
-        t.coords_down = (self.st.down.coords() * self.n_shards) as u64;
+        let tau = self
+            .participation
+            .as_ref()
+            .map(|p| p.tau())
+            .unwrap_or(self.n_shards);
+        t.coords_down = (self.st.down.coords() * tau) as u64;
         let frame_len = (codec::FRAME_PREFIX + self.st.down_buf.len()) as u64;
 
         // scripted corruption: flip one seeded bit in the frame sent to
@@ -1674,7 +1934,48 @@ impl ElasticServer {
 
         self.st.seen.fill(false);
         self.st.up_bytes.fill(0);
+        if sampled {
+            // sampled-out shards owe nothing this round: pre-mark them
+            // seen with cleared uplink slots so the gather (and police's
+            // silence check) never waits on an idle worker, and skip
+            // their downlink entirely — that is the bandwidth the paper's
+            // partial participation buys
+            for s in 0..self.n_shards {
+                if !self.st.cohort[s] {
+                    self.st.seen[s] = true;
+                    membership::clear_uplink(&mut self.st.ups[s]);
+                }
+            }
+            // the epoch announcement goes to *every* live connection
+            // (sampled-out workers must learn they are idle); it is
+            // protocol overhead, excluded from bytes_down
+            for tok in self.live_tokens() {
+                let res = {
+                    let conn = self.conns[tok].as_mut().expect("live conn");
+                    let r = conn.tcp.send(&self.st.epoch_buf);
+                    // grace-window fix: a fully sampled-out worker owes
+                    // nothing this round — restart its silence clock so K
+                    // consecutive idle rounds cannot masquerade as K
+                    // rounds of deadly silence the moment it re-enters
+                    // the cohort
+                    if r.is_ok() && !conn.shards.iter().any(|&s| self.st.cohort[s]) {
+                        conn.last_seen = Instant::now();
+                    }
+                    r
+                };
+                if let Err(e) = res {
+                    self.mark_dead(tok, &format!("epoch broadcast failed: {e}"));
+                }
+            }
+        }
         for tok in self.live_tokens() {
+            let owes = {
+                let conn = self.conns[tok].as_ref().expect("live conn");
+                !sampled || conn.shards.iter().any(|&s| self.st.cohort[s])
+            };
+            if !owes {
+                continue;
+            }
             let res = {
                 let conn = self.conns[tok].as_mut().expect("live conn");
                 if corrupt_tok == Some(Some(tok)) {
@@ -1707,9 +2008,30 @@ impl ElasticServer {
             t.bits_up += crate::coordinator::bits_of(&self.st.ups[i], self.dim, float_bits);
             t.bytes_up += self.st.up_bytes[i];
         }
+        // reweight cohort uplinks by n/τ *after* accounting (the wire
+        // carried the unweighted values) and *before* apply, exactly as
+        // the sim and threaded drivers do — keeping the estimator
+        // unbiased and the trajectories bitwise aligned
+        if let Some(p) = &self.participation {
+            let w = p.weight();
+            for s in 0..self.n_shards {
+                if self.st.cohort[s] {
+                    membership::reweight_uplink(&mut self.st.ups[s], w);
+                }
+            }
+        }
         let t_apply = Instant::now();
         server.apply(&self.st.ups, server_rng);
         phases.add("server_apply", t_apply.elapsed());
+        if self.fault.enabled() {
+            // every connection live at apply time has consumed (or been
+            // excused from) everything through this round
+            for conn in self.conns.iter().flatten() {
+                if matches!(conn.phase, Phase::Live) {
+                    self.journal.mark(conn.member, round);
+                }
+            }
+        }
 
         // checkpoint cadence: ask every live worker for its shards' state
         // as of the end of this round. Workers answer before touching the
@@ -1734,7 +2056,55 @@ impl ElasticServer {
                 }
             }
         }
+        self.flush_membership(round);
         Ok(t)
+    }
+
+    /// Drain the membership machine's events into the run log (structural
+    /// events only — per-round sampling verdicts would bloat it), the
+    /// registry gauges and the info log.
+    fn flush_membership(&mut self, round: usize) {
+        let events = self.membership.drain_events();
+        for ev in &events {
+            let code = ev.kind_code();
+            crate::info!(
+                "wire",
+                "membership: {} {} (epoch {})",
+                MembershipEvent::kind_name(code),
+                ev.member(),
+                self.membership.epoch()
+            );
+            // SampledIn/SampledOut (codes 3, 4) recur every round; the
+            // run log keeps only the structural history
+            if code != 3 && code != 4 {
+                if let Some(rl) = &mut self.runlog {
+                    rl.membership(MembershipRecord {
+                        round: round as u64,
+                        epoch: self.membership.epoch(),
+                        kind: code,
+                        member: ev.member(),
+                    });
+                }
+            }
+        }
+        self.registry.epoch.set(self.membership.epoch());
+        let tau = self
+            .participation
+            .as_ref()
+            .map(|p| p.tau())
+            .unwrap_or(self.n_shards);
+        self.registry.cohort_size.set(tau as u64);
+        use crate::coordinator::membership::MemberState as MS;
+        for s in [
+            MS::Joined,
+            MS::Active,
+            MS::SampledOut,
+            MS::Suspected,
+            MS::Evicted,
+        ] {
+            self.registry
+                .set_members(s.name(), self.membership.count(s) as u64);
+        }
     }
 
     /// Full run: same stopping/recording policy as every other driver,
@@ -1780,6 +2150,8 @@ impl ElasticServer {
         };
         let mut rounds_run = start_round;
         let mut failure = None;
+        // from here on, a freshly placed assignment is a late join
+        self.started = true;
 
         if !stopped {
             for round in (start_round + 1)..=cfg.max_rounds {
@@ -1863,6 +2235,11 @@ impl ElasticServer {
             }
         }
 
+        // the machine's terminal transition; tolerated on failure paths
+        // where the state may be mid-transition
+        if self.membership.cooldown().is_ok() {
+            self.flush_membership(rounds_run);
+        }
         self.shutdown();
         if let Some(e) = failure {
             return Err(e);
@@ -1946,6 +2323,23 @@ pub(crate) fn serve_observed(
     let fault = FaultConfig {
         worker_timeout: Duration::from_secs_f64(cfg.wire.worker_timeout.max(0.0)),
     };
+    let participation =
+        Participation::from_run(run_cfg.participation, cfg.seed, n)?.filter(|p| !p.is_full());
+    ensure!(
+        !(participation.is_some() && method_name == "diana++"),
+        "diana++ keeps per-worker model replicas stepped by every downlink; \
+         partial participation would let them diverge — use diana+ or tau=n"
+    );
+    let min_clients = cfg.wire.min_clients;
+    ensure!(
+        min_clients <= procs,
+        "--min-clients {min_clients} exceeds the worker process count {procs}"
+    );
+    ensure!(
+        min_clients == 0 || fault.enabled(),
+        "--min-clients needs fault handling for late joiners; set \
+         --worker-timeout > 0"
+    );
 
     crate::info!(
         "wire",
@@ -2112,6 +2506,13 @@ pub(crate) fn serve_observed(
     es.fault_plan = fault_plan;
     es.runlog = runlog_handle;
     es.resume_check = resume_check;
+    es.participation = participation;
+    es.min_clients = min_clients;
+    if min_clients > 0 {
+        // the machine's member floor is the relaxed one; the remaining
+        // assignments are handed to late joiners mid-run
+        es.membership = Membership::new(min_clients);
+    }
     // observability: adopt the Session's registry (sized per shard) or
     // make one if only --metrics-addr asked for it, then multiplex the
     // HTTP listener onto the server's poller
@@ -2130,7 +2531,7 @@ pub(crate) fn serve_observed(
         // initial assignments become rejoins: every connecting worker is
         // restored to the snapshot round over the existing catch-up path
         es.resume_mode = true;
-        es.journal_base = round;
+        es.journal.truncate_to(round);
         es.snapshot = Some((round, blobs));
     }
     // the residual normalizer is ‖x0 − x*‖², NOT distance-from-current-
@@ -2420,6 +2821,8 @@ fn worker_session(addr: &str, opts: &WorkerOpts) -> Result<()> {
         rounds_seen: 0,
         expect_restore: opts.expect_restore,
         restored: false,
+        cohort: None,
+        paused: false,
     };
 
     t.send(&[codec::TAG_HELLO_ACK])?;

@@ -39,6 +39,7 @@
 //! like `smx serve`.
 
 use smx::config::ExperimentConfig;
+use smx::coordinator::membership::cohort_mask;
 use smx::sampling::SamplingKind;
 use smx::wire::{
     relay_on, serve_on, worker_connect, worker_connect_with, FaultPlan, RelayOpts, WorkerOpts,
@@ -310,6 +311,114 @@ fn scripted_relay_kill_recovers_through_replacement_and_replay() {
     healthy.join().unwrap().expect("healthy relay");
     for w in workers {
         w.join().unwrap().expect("worker must survive the relay kill via backoff");
+    }
+    fresh_dir(&cfg.out_dir);
+}
+
+#[test]
+fn paused_sampled_out_worker_survives_the_grace_window() {
+    // The partial-participation grace-window regression: a worker whose
+    // heartbeat path wedges (`pause@r2:w0` — sticky, it still answers
+    // its downlinks) while its shard sits out several consecutive
+    // cohorts sends *nothing* for the whole stretch. The server must
+    // not declare it dead on re-entry: the per-round epoch broadcast
+    // doubles as a liveness probe (a successful send to a fully
+    // sampled-out connection refreshes its grace window), and the
+    // silence check only polices shards actually being gathered. Before
+    // that fix the worker was killed the instant its shard re-entered
+    // the cohort, with the stale `last_seen` from its last uplink; with
+    // `max_retries: 0` below, such a false death fails the join.
+    //
+    // The schedule is computed, not guessed: cohorts are a pure
+    // function of (seed, n, τ, round) via `cohort_mask`, so the test
+    // scans for a seed whose draw has STRETCH consecutive shard-0-free
+    // cohorts followed by a re-entry, then plants `delay@` events on
+    // exactly the cohort workers of those rounds. The silent window is
+    // stretched past the timeout (STRETCH × 1000 ms vs 3 s) while any
+    // single round stays well inside it (≤ 2 × 1000 ms), so the test
+    // discriminates the fix from the bug with a second of margin on
+    // both sides.
+    const N: usize = 3;
+    const TAU: usize = 1;
+    const ROUNDS: usize = 24;
+    const STRETCH: usize = 4;
+    const DELAY_MS: u64 = 1000;
+
+    let mut scratch = Vec::new();
+    let mut mask = Vec::new();
+    let mut found = None;
+    'seeds: for seed in 1..2000u64 {
+        // masks[i] is round i+1's cohort (rounds are 1-based)
+        let masks: Vec<Vec<bool>> = (1..=ROUNDS as u64)
+            .map(|r| {
+                cohort_mask(seed, N, TAU, r, &mut scratch, &mut mask);
+                mask.clone()
+            })
+            .collect();
+        // a run of STRETCH consecutive rounds a..=b with shard 0
+        // sampled out, a re-entry at b+1, and room for the round-2
+        // pause to land first
+        for b in (STRETCH + 2)..ROUNDS {
+            let a = b + 1 - STRETCH;
+            if (a..=b).all(|r| !masks[r - 1][0]) && masks[b][0] {
+                found = Some((seed, a, b, masks));
+                break 'seeds;
+            }
+        }
+    }
+    let (seed, a, b, masks) =
+        found.expect("no seed < 2000 with a long enough sampled-out stretch for shard 0");
+
+    // Delay exactly the cohort worker of each stretch round. Worker-side
+    // rounds are counted in live downlinks seen, so the shard-s worker's
+    // D-th downlink (D = s's cohort count through round r) lands on
+    // server round r. Unqualified delays also fire on the other workers
+    // at *their* D-th downlinks — harmless strays, each bounded by the
+    // single-round analysis above.
+    let mut delays = std::collections::BTreeSet::new();
+    for r in a..=b {
+        let s = masks[r - 1].iter().position(|&x| x).expect("τ=1 cohort");
+        delays.insert((1..=r).filter(|&q| masks[q - 1][s]).count());
+    }
+    let mut plan_str = String::from("pause@r2:w0");
+    for d in &delays {
+        plan_str.push_str(&format!(";delay@r{d}:{DELAY_MS}ms"));
+    }
+    let plan = FaultPlan::parse(&plan_str, 0).unwrap();
+
+    let mut cfg = chaos_cfg("diana+", SamplingKind::ImportanceDiana, "pause");
+    cfg.workers = N;
+    cfg.max_rounds = ROUNDS;
+    cfg.seed = seed;
+    cfg.wire.workers = N; // one shard per process: `:w0` is one worker
+    cfg.wire.worker_timeout = 3.0;
+    cfg.wire.participation = Some(format!("tau={TAU}"));
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let workers: Vec<_> = (0..N)
+        .map(|_| {
+            let addr = addr.clone();
+            let fault = plan.clone();
+            std::thread::spawn(move || {
+                worker_connect_with(
+                    &addr,
+                    WorkerOpts {
+                        fault: Some(fault),
+                        max_retries: 0,
+                        ..Default::default()
+                    },
+                )
+            })
+        })
+        .collect();
+
+    serve_on(listener, &cfg, true)
+        .expect("serve_on --check-sim under pause + partial participation");
+    for w in workers {
+        w.join()
+            .unwrap()
+            .expect("paused, sampled-out worker was falsely declared dead inside the grace window");
     }
     fresh_dir(&cfg.out_dir);
 }

@@ -269,6 +269,122 @@ fn sa_quant_drivers_bitwise_identical() {
 }
 
 #[test]
+fn partial_participation_drivers_bitwise_identical() {
+    // The participation column: with `participation: Some(τ)` each round
+    // samples an unbiased cohort of exactly τ shards (a pure function of
+    // (seed, n, τ, round) — see `coordinator::membership::cohort_mask`),
+    // clears the sampled-out uplink slots, and reweights cohort uplinks
+    // by n/τ after accounting. All of that is driver-independent state,
+    // so sim ≡ threaded ≡ distributed(f64 loopback) must stay **bitwise
+    // identical** under τ < n, exactly like the full-participation grid.
+    let cell = Cell::new(4);
+    for method in ["dcgd+", "diana+", "adiana+"] {
+        let cellname = format!("{method}/tau=2/n=4");
+        let spec = MethodSpec::new(
+            method,
+            2.0,
+            SamplingKind::ImportanceDiana,
+            cell.mu,
+            vec![0.0; cell.sm.dim],
+        );
+        let cfg_tau = RunConfig {
+            participation: Some(2),
+            ..cell.cfg.clone()
+        };
+
+        let r_sim = cell.run(&spec, Driver::Sim, &cfg_tau);
+        let sim_last = r_sim.records.last().unwrap().clone();
+
+        let r_thr = cell.run(&spec, Driver::Threaded, &cfg_tau);
+        assert_eq!(
+            bits(&r_sim.final_x),
+            bits(&r_thr.final_x),
+            "{cellname}: threaded diverged from sim"
+        );
+        let thr_last = r_thr.records.last().unwrap();
+        assert_eq!(sim_last.coords_up, thr_last.coords_up, "{cellname}: coords_up (threaded)");
+        assert_eq!(sim_last.bits_up, thr_last.bits_up, "{cellname}: bits_up (threaded)");
+
+        for procs in [4usize, 2] {
+            let r_dist = cell.run(
+                &spec,
+                Driver::Distributed {
+                    transport: DistTransport::Loopback { procs },
+                },
+                &cfg_tau,
+            );
+            assert_eq!(
+                bits(&r_sim.final_x),
+                bits(&r_dist.final_x),
+                "{cellname}: distributed(procs={procs}) diverged from sim"
+            );
+            let dist_last = r_dist.records.last().unwrap();
+            assert_eq!(
+                sim_last.coords_up, dist_last.coords_up,
+                "{cellname}: coords_up (distributed, procs={procs})"
+            );
+            assert_eq!(
+                sim_last.bits_up, dist_last.bits_up,
+                "{cellname}: bits_up (distributed, procs={procs})"
+            );
+        }
+
+        // sampling must actually bite: τ < n perturbs the trajectory
+        // relative to full participation (else the cohort gate is dead
+        // code and this test proves nothing)
+        let r_full = cell.run(&spec, Driver::Sim, &cell.cfg);
+        assert_ne!(
+            bits(&r_sim.final_x),
+            bits(&r_full.final_x),
+            "{cellname}: τ<n trajectory identical to full participation — sampling not wired in"
+        );
+    }
+}
+
+#[test]
+fn tau_equals_n_is_bitwise_todays_trajectory() {
+    // τ = n clamps to full participation as a *strict no-op*: no RNG
+    // stream is consumed, no uplink is scaled, no epoch frame is framed —
+    // `participation: Some(n)` must be indistinguishable from
+    // `participation: None` down to the last bit, on every driver.
+    let cell = Cell::new(4);
+    let spec = MethodSpec::new(
+        "diana+",
+        2.0,
+        SamplingKind::ImportanceDiana,
+        cell.mu,
+        vec![0.0; cell.sm.dim],
+    );
+    let cfg_n = RunConfig {
+        participation: Some(4),
+        ..cell.cfg.clone()
+    };
+    let drivers = [
+        Driver::Sim,
+        Driver::Threaded,
+        Driver::Distributed {
+            transport: DistTransport::Loopback { procs: 2 },
+        },
+    ];
+    for driver in drivers {
+        let plain = cell.run(&spec, driver.clone(), &cell.cfg);
+        let tau_n = cell.run(&spec, driver.clone(), &cfg_n);
+        assert_eq!(
+            bits(&plain.final_x),
+            bits(&tau_n.final_x),
+            "τ=n diverged from participation-off ({driver:?})"
+        );
+        assert_eq!(plain.records.len(), tau_n.records.len());
+        let (p, t) = (plain.records.last().unwrap(), tau_n.records.last().unwrap());
+        assert_eq!(p.coords_up, t.coords_up, "coords_up ({driver:?})");
+        assert_eq!(p.bits_up, t.bits_up, "bits_up ({driver:?})");
+        assert_eq!(p.bytes_up, t.bytes_up, "bytes_up ({driver:?})");
+        assert_eq!(p.bytes_down, t.bytes_down, "bytes_down ({driver:?})");
+        assert_eq!(p.coords_down, t.coords_down, "coords_down ({driver:?})");
+    }
+}
+
+#[test]
 fn streaming_observers_do_not_perturb_the_trajectory() {
     // Observers receive shared references after the server applies each
     // round; attaching a JSONL streaming sink (plus a counting observer)

@@ -1,0 +1,455 @@
+//! Table-driven transition tests for the membership subsystem
+//! (`coordinator::membership`): every legal edge of the epoch state
+//! machine `WaitingForMembers → Warmup → RoundActive → Cooldown`, the
+//! member lifecycle `Joined → Active ↔ SampledOut → Suspected →
+//! Evicted`, and — just as important — the illegal transitions the
+//! machine must *reject* instead of silently absorbing. Each case is a
+//! script of operations against a fresh machine plus the expected
+//! verdict of the final op and assertions on the resulting state,
+//! epoch, and drained event stream.
+
+use anyhow::Result;
+use smx::coordinator::membership::{
+    Membership, MemberState, MembershipEvent, MembershipState,
+};
+
+/// One scripted operation against the machine. `BeginRound` carries the
+/// member ids sampled into the round's cohort.
+#[derive(Clone, Debug)]
+enum Op {
+    Join(u64),
+    Warmup,
+    ActivateMember(u64),
+    Activate,
+    BeginRound(Vec<u64>),
+    Suspect(u64),
+    Evict(u64),
+    Cooldown,
+}
+
+fn apply(m: &mut Membership, op: &Op) -> Result<()> {
+    match op {
+        Op::Join(id) => m.join(*id),
+        Op::Warmup => m.warmup(),
+        Op::ActivateMember(id) => m.activate_member(*id),
+        Op::Activate => m.activate(),
+        Op::BeginRound(cohort) => m.begin_round(|id| cohort.contains(&id)),
+        Op::Suspect(id) => m.suspect(*id),
+        Op::Evict(id) => m.evict(*id),
+        Op::Cooldown => m.cooldown(),
+    }
+}
+
+/// Drive `setup` (every op must succeed), then apply `last` and return
+/// the machine plus the final op's verdict.
+fn run_script(min_clients: usize, setup: &[Op], last: &Op) -> (Membership, Result<()>) {
+    let mut m = Membership::new(min_clients);
+    for (i, op) in setup.iter().enumerate() {
+        apply(&mut m, op).unwrap_or_else(|e| panic!("setup op {i} ({op:?}) failed: {e:#}"));
+    }
+    let verdict = apply(&mut m, last);
+    (m, verdict)
+}
+
+/// Standard prefix: two members joined, warmed up, activated, rounds
+/// running under epoch 1.
+fn live_pair() -> Vec<Op> {
+    vec![
+        Op::Join(0),
+        Op::Join(1),
+        Op::Warmup,
+        Op::ActivateMember(0),
+        Op::ActivateMember(1),
+        Op::Activate,
+    ]
+}
+
+#[test]
+fn legal_transitions_drive_the_full_lifecycle() {
+    struct Case {
+        name: &'static str,
+        min_clients: usize,
+        setup: Vec<Op>,
+        last: Op,
+        // (state, epoch, member, member_state) expectations after `last`
+        state: MembershipState,
+        epoch: u64,
+        member: Option<(u64, MemberState)>,
+    }
+    let cases = [
+        Case {
+            name: "join before rounds is a plain join",
+            min_clients: 2,
+            setup: vec![],
+            last: Op::Join(0),
+            state: MembershipState::WaitingForMembers { min_clients: 2 },
+            epoch: 0,
+            member: Some((0, MemberState::Joined)),
+        },
+        Case {
+            name: "warmup once the floor is met",
+            min_clients: 2,
+            setup: vec![Op::Join(0), Op::Join(1)],
+            last: Op::Warmup,
+            state: MembershipState::Warmup,
+            epoch: 0,
+            member: Some((0, MemberState::Joined)),
+        },
+        Case {
+            name: "activate rolls the first epoch",
+            min_clients: 2,
+            setup: vec![Op::Join(0), Op::Join(1), Op::Warmup, Op::ActivateMember(0)],
+            last: Op::Activate,
+            state: MembershipState::RoundActive { epoch: 1 },
+            epoch: 1,
+            member: Some((0, MemberState::Active)),
+        },
+        Case {
+            name: "begin_round samples a member out",
+            min_clients: 2,
+            setup: live_pair(),
+            last: Op::BeginRound(vec![0]),
+            state: MembershipState::RoundActive { epoch: 1 },
+            epoch: 1,
+            member: Some((1, MemberState::SampledOut)),
+        },
+        Case {
+            name: "begin_round samples a member back in",
+            min_clients: 2,
+            setup: {
+                let mut s = live_pair();
+                s.push(Op::BeginRound(vec![0]));
+                s
+            },
+            last: Op::BeginRound(vec![1]),
+            state: MembershipState::RoundActive { epoch: 1 },
+            epoch: 1,
+            member: Some((1, MemberState::Active)),
+        },
+        Case {
+            name: "late join during rounds rolls the epoch",
+            min_clients: 2,
+            setup: live_pair(),
+            last: Op::Join(7),
+            state: MembershipState::RoundActive { epoch: 1 },
+            epoch: 2,
+            member: Some((7, MemberState::Joined)),
+        },
+        Case {
+            name: "suspect orphans a live member",
+            min_clients: 2,
+            setup: live_pair(),
+            last: Op::Suspect(1),
+            state: MembershipState::RoundActive { epoch: 1 },
+            epoch: 1,
+            member: Some((1, MemberState::Suspected)),
+        },
+        Case {
+            name: "suspect works on a sampled-out member",
+            min_clients: 2,
+            setup: {
+                let mut s = live_pair();
+                s.push(Op::BeginRound(vec![0]));
+                s
+            },
+            last: Op::Suspect(1),
+            state: MembershipState::RoundActive { epoch: 1 },
+            epoch: 1,
+            member: Some((1, MemberState::Suspected)),
+        },
+        Case {
+            name: "evict removes a suspect and rolls the epoch",
+            min_clients: 2,
+            setup: {
+                let mut s = live_pair();
+                s.push(Op::Suspect(1));
+                s
+            },
+            last: Op::Evict(1),
+            state: MembershipState::RoundActive { epoch: 1 },
+            epoch: 2,
+            member: Some((1, MemberState::Evicted)),
+        },
+        Case {
+            name: "an evicted member may rejoin (as a late join)",
+            min_clients: 2,
+            setup: {
+                let mut s = live_pair();
+                s.push(Op::Suspect(1));
+                s.push(Op::Evict(1));
+                s
+            },
+            last: Op::Join(1),
+            state: MembershipState::RoundActive { epoch: 1 },
+            epoch: 3,
+            member: Some((1, MemberState::Joined)),
+        },
+        Case {
+            name: "cooldown ends the run loop",
+            min_clients: 2,
+            setup: live_pair(),
+            last: Op::Cooldown,
+            state: MembershipState::Cooldown,
+            epoch: 1,
+            member: None,
+        },
+    ];
+    for c in cases {
+        let (m, verdict) = run_script(c.min_clients, &c.setup, &c.last);
+        verdict.unwrap_or_else(|e| panic!("{}: expected success, got: {e:#}", c.name));
+        assert_eq!(*m.state(), c.state, "{}: final machine state", c.name);
+        assert_eq!(m.epoch(), c.epoch, "{}: epoch", c.name);
+        if let Some((id, want)) = c.member {
+            assert_eq!(
+                m.member_state(id),
+                Some(want),
+                "{}: member {id} state",
+                c.name
+            );
+        }
+    }
+}
+
+#[test]
+fn illegal_transitions_are_rejected() {
+    struct Case {
+        name: &'static str,
+        min_clients: usize,
+        setup: Vec<Op>,
+        last: Op,
+    }
+    let cases = [
+        Case {
+            name: "warmup below the member floor",
+            min_clients: 2,
+            setup: vec![Op::Join(0)],
+            last: Op::Warmup,
+        },
+        Case {
+            name: "warmup twice",
+            min_clients: 1,
+            setup: vec![Op::Join(0), Op::Warmup],
+            last: Op::Warmup,
+        },
+        Case {
+            name: "activate without warmup",
+            min_clients: 1,
+            setup: vec![Op::Join(0)],
+            last: Op::Activate,
+        },
+        Case {
+            name: "activate with no active member",
+            min_clients: 1,
+            setup: vec![Op::Join(0), Op::Warmup],
+            last: Op::Activate,
+        },
+        Case {
+            name: "duplicate join of a live member",
+            min_clients: 2,
+            setup: vec![Op::Join(0)],
+            last: Op::Join(0),
+        },
+        Case {
+            name: "join during cooldown",
+            min_clients: 2,
+            setup: {
+                let mut s = live_pair();
+                s.push(Op::Cooldown);
+                s
+            },
+            last: Op::Join(9),
+        },
+        Case {
+            name: "begin_round before rounds start",
+            min_clients: 2,
+            setup: vec![Op::Join(0), Op::Join(1), Op::Warmup],
+            last: Op::BeginRound(vec![0]),
+        },
+        Case {
+            name: "begin_round after cooldown",
+            min_clients: 2,
+            setup: {
+                let mut s = live_pair();
+                s.push(Op::Cooldown);
+                s
+            },
+            last: Op::BeginRound(vec![0]),
+        },
+        Case {
+            name: "activate_member before joining",
+            min_clients: 1,
+            setup: vec![Op::Join(0), Op::Warmup],
+            last: Op::ActivateMember(5),
+        },
+        Case {
+            name: "activate_member twice",
+            min_clients: 1,
+            setup: vec![Op::Join(0), Op::Warmup, Op::ActivateMember(0)],
+            last: Op::ActivateMember(0),
+        },
+        Case {
+            name: "suspect an unknown member",
+            min_clients: 2,
+            setup: live_pair(),
+            last: Op::Suspect(42),
+        },
+        Case {
+            name: "suspect an evicted member",
+            min_clients: 2,
+            setup: {
+                let mut s = live_pair();
+                s.push(Op::Suspect(1));
+                s.push(Op::Evict(1));
+                s
+            },
+            last: Op::Suspect(1),
+        },
+        Case {
+            name: "evict without a prior suspect",
+            min_clients: 2,
+            setup: live_pair(),
+            last: Op::Evict(1),
+        },
+        Case {
+            name: "evict an unknown member",
+            min_clients: 2,
+            setup: live_pair(),
+            last: Op::Evict(42),
+        },
+        Case {
+            name: "cooldown before rounds start",
+            min_clients: 2,
+            setup: vec![Op::Join(0), Op::Join(1), Op::Warmup],
+            last: Op::Cooldown,
+        },
+        Case {
+            name: "cooldown twice",
+            min_clients: 2,
+            setup: {
+                let mut s = live_pair();
+                s.push(Op::Cooldown);
+                s
+            },
+            last: Op::Cooldown,
+        },
+    ];
+    for c in cases {
+        let before = {
+            let mut m = Membership::new(c.min_clients);
+            for (i, op) in c.setup.iter().enumerate() {
+                apply(&mut m, op)
+                    .unwrap_or_else(|e| panic!("{}: setup op {i} ({op:?}) failed: {e:#}", c.name));
+            }
+            m.drain_events();
+            m
+        };
+        let mut m = before.clone();
+        let verdict = apply(&mut m, &c.last);
+        assert!(verdict.is_err(), "{}: expected rejection, got success", c.name);
+        // a rejected transition must leave the machine untouched: same
+        // phase, same epoch, same member table, and no stray events
+        assert_eq!(m.state(), before.state(), "{}: state changed on rejection", c.name);
+        assert_eq!(m.epoch(), before.epoch(), "{}: epoch rolled on rejection", c.name);
+        for id in 0..10u64 {
+            assert_eq!(
+                m.member_state(id),
+                before.member_state(id),
+                "{}: member {id} moved on rejection",
+                c.name
+            );
+        }
+        assert!(
+            m.drain_events().is_empty(),
+            "{}: rejected transition emitted events",
+            c.name
+        );
+    }
+}
+
+#[test]
+fn event_stream_narrates_the_lifecycle_in_order() {
+    let mut m = Membership::new(2);
+    m.join(0).unwrap();
+    m.join(1).unwrap();
+    m.warmup().unwrap();
+    m.activate_member(0).unwrap();
+    m.activate_member(1).unwrap();
+    m.activate().unwrap();
+    m.begin_round(|id| id == 0).unwrap(); // member 1 sampled out
+    m.begin_round(|id| id == 1).unwrap(); // and back in; 0 out
+    m.begin_round(|id| id == 1).unwrap(); // no change: no events
+    m.suspect(0).unwrap();
+    m.evict(0).unwrap();
+    m.join(2).unwrap(); // late join
+    m.cooldown().unwrap();
+
+    let events = m.drain_events();
+    use MembershipEvent as E;
+    assert_eq!(
+        events,
+        vec![
+            E::Joined { member: 0 },
+            E::Joined { member: 1 },
+            E::EpochRolled { epoch: 1 },
+            E::SampledOut { member: 1 },
+            E::SampledIn { member: 1 },
+            E::SampledOut { member: 0 },
+            E::Suspected { member: 0 },
+            E::Evicted { member: 0 },
+            E::EpochRolled { epoch: 2 },
+            E::LateJoined { member: 2 },
+            E::EpochRolled { epoch: 3 },
+        ]
+    );
+    // the drain is a take: a second drain is empty
+    assert!(m.drain_events().is_empty());
+    // kind codes are a total, stable mapping (run-log encoding)
+    for ev in [
+        E::Joined { member: 0 },
+        E::LateJoined { member: 0 },
+        E::SampledIn { member: 0 },
+        E::SampledOut { member: 0 },
+        E::Suspected { member: 0 },
+        E::Evicted { member: 0 },
+        E::EpochRolled { epoch: 1 },
+    ] {
+        let code = ev.kind_code();
+        assert!((1..=7).contains(&code), "{ev:?}: code {code} out of range");
+        assert_ne!(E::kind_name(code), "unknown", "{ev:?}: unnamed code");
+    }
+}
+
+#[test]
+fn min_clients_zero_normalizes_to_one() {
+    let mut m = Membership::new(0);
+    assert_eq!(
+        *m.state(),
+        MembershipState::WaitingForMembers { min_clients: 1 }
+    );
+    assert!(m.warmup().is_err(), "warmup with zero members must fail");
+    m.join(0).unwrap();
+    m.warmup().unwrap();
+}
+
+#[test]
+fn counts_track_member_states() {
+    let mut m = Membership::new(2);
+    m.join(0).unwrap();
+    m.join(1).unwrap();
+    m.join(2).unwrap();
+    m.warmup().unwrap();
+    m.activate_member(0).unwrap();
+    m.activate_member(1).unwrap();
+    assert_eq!(m.count(MemberState::Joined), 1);
+    assert_eq!(m.count(MemberState::Active), 2);
+    m.activate().unwrap();
+    m.begin_round(|id| id == 0).unwrap();
+    assert_eq!(m.count(MemberState::Active), 1);
+    assert_eq!(m.count(MemberState::SampledOut), 1);
+    // Joined (mid-catchup) members are untouched by sampling verdicts
+    assert_eq!(m.count(MemberState::Joined), 1);
+    m.suspect(1).unwrap();
+    m.evict(1).unwrap();
+    assert_eq!(m.count(MemberState::Suspected), 0);
+    assert_eq!(m.count(MemberState::Evicted), 1);
+}

@@ -1,5 +1,5 @@
 #!/usr/bin/env bash
-# Multi-process smoke test for the wire subsystem, eight legs:
+# Multi-process smoke test for the wire subsystem, nine legs:
 #
 #  1. steady state — one `smx serve` coordinator and two `smx worker`
 #     processes on the synthetic tiny dataset (8 shards, 4 per worker
@@ -41,7 +41,12 @@
 #     observably a SIGKILL at that instant) drops the relay on the
 #     round-6 downlink; a replacement relay takes over the same address,
 #     is caught up via snapshot restore + journal replay, and the
-#     workers ride out the gap on their own backoff.
+#     workers ride out the gap on their own backoff;
+#  9. participation — `--participation tau=2` over three single-shard
+#     worker processes with `--min-clients 2`: rounds start with two
+#     workers, each round gathers only the sampled 2-shard cohort
+#     (reweighted n/τ), and the third worker late-joins mid-run through
+#     the snapshot/journal handshake without perturbing the trajectory.
 #
 # The serve legs pass `--check-sim`, which makes the server re-run the
 # identical configuration through the in-process sim driver and exit
@@ -321,6 +326,44 @@ relay_leg() {
   echo "distributed smoke OK (relay leg: relay killed at round 6, replaced, bitwise identical to run_sim)"
 }
 
+# Leg 9: partial participation + first-class late join. Three shards on
+# three worker processes with `--participation tau=2`: every round the
+# server samples an unbiased 2-shard cohort (announced by the epoch
+# frame), gathers only those uplinks, and reweights them by n/τ = 3/2.
+# `--min-clients 2` lets rounds start with just the two on-time workers;
+# the third connects a second late, is caught up through the snapshot/
+# journal handshake, and its shard is gathered from its first cohort
+# round onward. --check-sim asserts the whole story — cohort draws,
+# reweighting, the late join — bitwise against the sim driver.
+participation_leg() {
+  local addr=$1
+  timeout "${SMOKE_TIMEOUT:-300}" "$BIN" serve --dataset tiny --workers 3 --methods diana+ \
+    --sampling importance-diana --tau 2 --max-rounds 30 \
+    --listen "$addr" --wire-workers 3 --out-dir "$OUT" --check-sim \
+    --participation tau=2 --min-clients 2 --worker-timeout 60 --checkpoint-every 3 &
+  local serve_pid=$!
+  "$BIN" worker --connect "$addr" &
+  local w1=$!
+  "$BIN" worker --connect "$addr" &
+  local w2=$!
+  # the late joiner: rounds are already running when it arrives
+  (sleep 1 && "$BIN" worker --connect "$addr") &
+  local w3=$!
+
+  local rc=0
+  wait "$serve_pid" || rc=1
+  local i=1
+  for pid in "$w1" "$w2" "$w3"; do
+    wait "$pid" || { echo "[participation] worker $i failed" >&2; rc=1; }
+    i=$((i + 1))
+  done
+  if [ "$rc" -ne 0 ]; then
+    echo "distributed smoke FAILED (participation leg)" >&2
+    exit 1
+  fi
+  echo "distributed smoke OK (participation leg: tau=2 of 3 + late join, bitwise identical to run_sim)"
+}
+
 run_leg steady "127.0.0.1:$PORT"
 run_leg chaos "127.0.0.1:$((PORT + 1))" --worker-timeout 60
 run_leg snapshot "127.0.0.1:$((PORT + 2))" --worker-timeout 60 --checkpoint-every 3
@@ -328,6 +371,7 @@ restart_leg "127.0.0.1:$((PORT + 3))"
 metrics_leg "127.0.0.1:$((PORT + 4))" "127.0.0.1:$((PORT + 5))"
 sa_quant_leg "127.0.0.1:$((PORT + 6))"
 relay_leg "127.0.0.1:$((PORT + 7))" "127.0.0.1:$((PORT + 8))"
+participation_leg "127.0.0.1:$((PORT + 9))"
 
 # --driver distributed: the Session front door from the plain train CLI.
 # The wire protocol runs over loopback inside one process; its residual
